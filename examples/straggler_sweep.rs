@@ -1,0 +1,95 @@
+//! Straggler sweep: reproduce the *shape* of the paper's Figs. 4-5 on
+//! one environment interactively — mean training time per iteration for
+//! every coding scheme as the straggler count k and delay t_s vary.
+//!
+//!     cargo run --release --example straggler_sweep
+//!     CODED_MARL_SWEEP_BACKEND=pjrt cargo run --release --example straggler_sweep
+//!
+//! Defaults to the mock backend (compute time calibrated to the paper's
+//! regime) so the sweep finishes in seconds; set the env var above to
+//! run the real PJRT learner step instead. One learner pool is reused
+//! across all (scheme, k) cells — the assignment row travels with each
+//! task, so reconfiguring the code is free.
+
+use std::time::Duration;
+
+use coded_marl::coding::Scheme;
+use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
+use coded_marl::coordinator::{backend_factory, spawn_local, Controller, RunSpec};
+use coded_marl::env::EnvKind;
+use coded_marl::metrics::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let backend = match std::env::var("CODED_MARL_SWEEP_BACKEND").as_deref() {
+        Ok("pjrt") => Backend::Pjrt,
+        _ => Backend::Mock,
+    };
+    let artifacts = std::env::var("CODED_MARL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // Paper §V-C, cooperative navigation: M = 8, N = 15, k ∈ {0, 1, 2},
+    // t_s = 0.25 s. Delays are scaled 1/10 (25 ms) so the sweep is
+    // interactive; the bench binaries report the scale factor too.
+    let m = 8;
+    let n = 15;
+    let ks = [0usize, 1, 2, 4, 7];
+    let t_s = Duration::from_millis(25);
+
+    let mut cfg = TrainConfig::new("coop_nav_m8");
+    cfg.n_learners = n;
+    cfg.backend = backend;
+    cfg.iterations = 10;
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 25;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = Duration::from_millis(2);
+    cfg.seed = 3;
+
+    let spec = RunSpec::synthetic(EnvKind::CoopNav, m, 0, 64, 32);
+    println!(
+        "straggler sweep: coop_nav M={m} N={n} t_s={t_s:?} backend={} ({} iters/cell)",
+        cfg.backend.name(),
+        cfg.iterations
+    );
+
+    let mut table = Table::new(&[
+        "scheme", "k=0", "k=1", "k=2", "k=4", "k=7", "redundancy", "tolerance",
+    ]);
+    for scheme in Scheme::ALL {
+        let mut cells = vec![scheme.name().to_string()];
+        let mut code_info: Option<(f64, usize)> = None;
+        for &k in &ks {
+            let mut c = cfg.clone();
+            c.scheme = scheme;
+            c.straggler = StragglerConfig::fixed(k, t_s);
+            let factory = backend_factory(&c, &artifacts, &spec);
+            let pool = spawn_local(c.n_learners, factory)?;
+            let mut ctrl = Controller::new(c, spec.clone(), pool)?;
+            ctrl.train()?;
+            if code_info.is_none() {
+                code_info = Some((ctrl.code().redundancy(), ctrl.code().worst_case_tolerance()));
+            }
+            // skip warmup iterations when averaging (no learner round)
+            let times: Vec<f64> = ctrl
+                .log
+                .records
+                .iter()
+                .filter(|r| r.decode_method != "warmup")
+                .map(|r| r.timing.total.as_secs_f64() * 1e3)
+                .collect();
+            let mean = times.iter().sum::<f64>() / times.len() as f64;
+            cells.push(format!("{mean:.1}ms"));
+            ctrl.shutdown();
+        }
+        let (red, tol) = code_info.unwrap();
+        cells.push(format!("{red:.1}x"));
+        cells.push(tol.to_string());
+        table.row(&cells);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nExpected shape (paper Figs. 4-5): uncoded fastest at k=0 but +t_s for any k>0;\n\
+         MDS/random-sparse flat until k > N-M = {}; replication/LDPC cheap but fragile at high k.",
+        n - m
+    );
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT lowering: JAX (L2, calling Pallas L1) -> HLO text artifacts.
+
+Emits, for every preset in presets.default_presets():
+
+    artifacts/<name>/learner_step.hlo.txt
+    artifacts/<name>/actor_fwd.hlo.txt
+
+plus a single artifacts/manifest.json describing dimensions, parameter
+layouts, baked hyperparameters and relative artifact paths. The Rust
+runtime (rust/src/runtime/) consumes the manifest and loads the HLO via
+`HloModuleProto::from_text_file` on the PJRT CPU client.
+
+HLO *text* is the interchange format, NOT `.serialize()`: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--presets quickstart_m3,coop_nav_m8] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, presets
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _input_fingerprint() -> str:
+    """Hash of the python compile sources — lets `make artifacts` no-op
+    when nothing changed (recorded in the manifest)."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def lower_preset(p: presets.Preset, out_dir: str) -> dict:
+    os.makedirs(os.path.join(out_dir, p.name), exist_ok=True)
+    entry = p.manifest_entry()
+    t0 = time.time()
+
+    step = model.make_learner_step(p)
+    lowered = jax.jit(step).lower(*model.learner_step_arg_specs(p))
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, entry["artifacts"]["learner_step"]), "w") as f:
+        f.write(text)
+    ls_bytes = len(text)
+
+    fwd = model.make_actor_fwd(p)
+    lowered = jax.jit(fwd).lower(*model.actor_fwd_arg_specs(p))
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, entry["artifacts"]["actor_fwd"]), "w") as f:
+        f.write(text)
+
+    entry["hlo_bytes"] = {"learner_step": ls_bytes, "actor_fwd": len(text)}
+    entry["lower_seconds"] = round(time.time() - t0, 2)
+    print(f"  {p.name}: learner_step {ls_bytes/1e6:.2f} MB, "
+          f"actor_fwd {len(text)/1e3:.0f} KB, {entry['lower_seconds']}s",
+          flush=True)
+    return entry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="",
+                    help="comma-separated preset names (default: all)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the manifest fingerprint matches")
+    args = ap.parse_args()
+
+    want = [s for s in args.presets.split(",") if s]
+    plist = presets.default_presets()
+    if want:
+        plist = [p for p in plist if p.name in want]
+        missing = set(want) - {p.name for p in plist}
+        if missing:
+            print(f"unknown presets: {sorted(missing)}", file=sys.stderr)
+            return 2
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fp = _input_fingerprint()
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        have = {e["name"] for e in old.get("presets", [])}
+        if old.get("fingerprint") == fp and {p.name for p in plist} <= have:
+            print(f"artifacts up to date (fingerprint {fp[:12]}), nothing to do")
+            return 0
+
+    print(f"lowering {len(plist)} preset(s) -> {args.out_dir}")
+    entries = [lower_preset(p, args.out_dir) for p in plist]
+
+    # Merge with any presets already present but not re-lowered this run.
+    if os.path.exists(manifest_path) and want:
+        with open(manifest_path) as f:
+            old = json.load(f)
+        names = {e["name"] for e in entries}
+        entries += [e for e in old.get("presets", []) if e["name"] not in names]
+
+    manifest = {
+        "format_version": 1,
+        "fingerprint": fp,
+        "jax_version": jax.__version__,
+        "interchange": "hlo_text",
+        "presets": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

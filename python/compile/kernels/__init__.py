@@ -1,0 +1,8 @@
+"""Pallas kernels (L1) + pure-jnp reference oracle.
+
+Import surface used by model.py:
+    from .kernels import linear, ref
+    linear.linear_act(x, w, b, act="tanh")
+"""
+
+from . import linear, ref  # noqa: F401

@@ -1,0 +1,240 @@
+"""L1 — Pallas fused linear-layer kernels.
+
+The compute hot spot of MADDPG training is the dense GEMM inside every
+actor/critic MLP layer, on both the forward and backward pass. This
+module implements it as a Pallas kernel family:
+
+* ``linear_act(x, w, b, act)``     — fused ``act(x @ w + b)`` forward
+* backward kernels for dx / dw (+db fused into dw's epilogue)
+
+and wires them together with ``jax.custom_vjp`` so the L2 model code can
+simply call :func:`linear_act` and get Pallas on both passes.
+
+TPU mapping (see DESIGN.md §3): the GEMM is tiled with ``BlockSpec`` so
+each grid step streams an (bm × K)·(K × bn) panel pair through VMEM and
+the MXU, and the bias add + activation are fused into the epilogue so
+the accumulator never round-trips to HBM between GEMM and activation.
+On this image the kernels always run ``interpret=True`` — the CPU PJRT
+plugin cannot execute Mosaic custom-calls — so block shapes matter for
+the *lowered structure* (documented VMEM/MXU estimates), not CPU speed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default MXU-aligned tile sizes. 128 matches the TPU systolic array; the
+# wrapper pads ragged dims up to the block size (blocks are clamped to the
+# padded problem size so tiny layers don't blow up 128x).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(dim: int, default: int) -> int:
+    """Clamp the default block size to the (padded) problem dimension."""
+    return min(default, _round_up(dim, 8))
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: y = act(x @ w + b)
+# ---------------------------------------------------------------------------
+
+
+def _linear_act_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """One (bm, bn) output tile: full-K GEMM panel + fused epilogue.
+
+    x_ref: [bm, K] VMEM block, w_ref: [K, bn], b_ref: [1, bn].
+    Accumulation is forced to f32 via preferred_element_type so bf16
+    inputs still hit the MXU's f32 accumulator.
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)
+    o_ref[...] = ref.activate(acc, act).astype(o_ref.dtype)
+
+
+def _linear_act_fwd_impl(x, w, b, act: str, bm: int, bn: int):
+    B, K = x.shape
+    _, O = w.shape
+    bm = _pick_block(B, bm)
+    bn = _pick_block(O, bn)
+    Bp, Op = _round_up(B, bm), _round_up(O, bn)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0))) if Bp != B else x
+    wp = jnp.pad(w, ((0, 0), (0, Op - O))) if Op != O else w
+    bp = (jnp.pad(b, (0, Op - O)) if Op != O else b).reshape(1, Op)
+
+    out = pl.pallas_call(
+        functools.partial(_linear_act_kernel, act=act),
+        grid=(Bp // bm, Op // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Op), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, bp)
+    return out[:B, :O]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels.
+#
+# gz = g * act'(y) is computed inside each kernel from the saved output y
+# (cheaper than stashing pre-activations: tanh' = 1-y^2, relu' = 1[y>0]).
+# dx = gz @ w^T   — tiled over (B, I)
+# dw = x^T @ gz   — tiled over (I, O); db = sum_B gz fused as an extra row
+# ---------------------------------------------------------------------------
+
+
+def _dx_kernel(g_ref, y_ref, w_ref, o_ref, *, act: str):
+    gz = g_ref[...].astype(jnp.float32) * ref.activate_grad(
+        y_ref[...].astype(jnp.float32), act
+    )
+    o_ref[...] = jnp.dot(
+        gz, w_ref[...].T, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _dwdb_kernel(x_ref, g_ref, y_ref, o_ref, *, act: str):
+    gz = g_ref[...].astype(jnp.float32) * ref.activate_grad(
+        y_ref[...].astype(jnp.float32), act
+    )
+    dw = jnp.dot(x_ref[...].T, gz, preferred_element_type=jnp.float32)
+    db = jnp.sum(gz, axis=0, keepdims=True)
+    # Row 0..I-1: dw block; row I: db block (fused epilogue, one output).
+    o_ref[...] = jnp.concatenate([dw, db], axis=0).astype(o_ref.dtype)
+
+
+def _linear_act_bwd_impl(x, w, y, g, act: str, bm: int, bn: int):
+    B, K = x.shape
+    _, O = w.shape
+
+    # dx: grid over (B, I) tiles, full-O contraction per tile.
+    bmx = _pick_block(B, bm)
+    bkx = _pick_block(K, bn)
+    Bp, Kp = _round_up(B, bmx), _round_up(K, bkx)
+    gp = jnp.pad(g, ((0, Bp - B), (0, 0))) if Bp != B else g
+    yp = jnp.pad(y, ((0, Bp - B), (0, 0))) if Bp != B else y
+    wp = jnp.pad(w, ((0, Kp - K), (0, 0))) if Kp != K else w
+    dx = pl.pallas_call(
+        functools.partial(_dx_kernel, act=act),
+        grid=(Bp // bmx, Kp // bkx),
+        in_specs=[
+            pl.BlockSpec((bmx, O), lambda i, j: (i, 0)),
+            pl.BlockSpec((bmx, O), lambda i, j: (i, 0)),
+            pl.BlockSpec((bkx, O), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bmx, bkx), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Kp), x.dtype),
+        interpret=True,
+    )(gp, yp, wp)[:B, :K]
+
+    # dw (+db): grid over (I, O) tiles, full-B contraction per tile. The
+    # output carries one extra row per I-tile holding the partial db; only
+    # the first I-tile's extra row is the real db (others see padded x=0
+    # contributions... no: db = sum over B of gz, independent of I). We
+    # compute db in every j-tile redundantly and read it from i=0.
+    bki = _pick_block(K, bm)
+    bnj = _pick_block(O, bn)
+    Kp2, Op2 = _round_up(K, bki), _round_up(O, bnj)
+    xp = jnp.pad(x, ((0, 0), (0, Kp2 - K))) if Kp2 != K else x
+    gp2 = jnp.pad(g, ((0, 0), (0, Op2 - O))) if Op2 != O else g
+    yp2 = jnp.pad(y, ((0, 0), (0, Op2 - O))) if Op2 != O else y
+    dwdb = pl.pallas_call(
+        functools.partial(_dwdb_kernel, act=act),
+        grid=(Kp2 // bki, Op2 // bnj),
+        in_specs=[
+            pl.BlockSpec((B, bki), lambda i, j: (0, i)),
+            pl.BlockSpec((B, bnj), lambda i, j: (0, j)),
+            pl.BlockSpec((B, bnj), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bki + 1, bnj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Kp2 + Kp2 // bki, Op2), w.dtype),
+        interpret=True,
+    )(xp, gp2, yp2)
+    # Un-interleave: each i-tile contributed bki rows of dw + 1 row of db.
+    dwdb = dwdb.reshape(Kp2 // bki, bki + 1, Op2)
+    dw = dwdb[:, :bki, :].reshape(Kp2, Op2)[:K, :O]
+    db = dwdb[0, bki, :O]
+    return dx, dw, db
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper — the public entry point used by model.py
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def linear_act(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    act: str = "none",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Fused linear layer ``act(x @ w + b)`` backed by Pallas kernels.
+
+    Differentiable (custom VJP; the backward pass is also Pallas).
+    x: [B, I] float32/bfloat16, w: [I, O], b: [O].
+    """
+    return _linear_act_fwd_impl(x, w, b, act, bm, bn)
+
+
+def _vjp_fwd(x, w, b, act, bm, bn):
+    y = _linear_act_fwd_impl(x, w, b, act, bm, bn)
+    return y, (x, w, y)
+
+
+def _vjp_bwd(act, bm, bn, res, g):
+    x, w, y = res
+    dx, dw, db = _linear_act_bwd_impl(x, w, y, g, act, bm, bn)
+    return dx, dw, db
+
+
+linear_act.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_footprint_bytes(
+    B: int, I: int, O: int, dtype_bytes: int = 4,
+    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+) -> int:
+    """Estimated VMEM working set of one forward grid step.
+
+    x panel (bm, I) + w panel (I, bn) + bias (1, bn) + f32 accumulator
+    (bm, bn). Used by DESIGN/EXPERIMENTS to document the TPU mapping
+    (interpret=True gives no real device telemetry).
+    """
+    bm = _pick_block(B, bm)
+    bn = _pick_block(O, bn)
+    return (bm * I + I * bn + bn) * dtype_bytes + bm * bn * 4
+
+
+def mxu_utilization_estimate(
+    B: int, I: int, O: int, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN
+) -> float:
+    """Fraction of MXU lanes doing useful work (ignores pipeline ramp).
+
+    The 128x128 systolic array is fully fed only when the tile dims reach
+    128; smaller problems waste lanes proportionally.
+    """
+    bm = _pick_block(B, bm)
+    bn = _pick_block(O, bn)
+    eff_m = min(B, bm) / max(bm, 128) * min(bm, 128) / 128
+    eff_n = min(O, bn) / max(bn, 128) * min(bn, 128) / 128
+    # Guard: effective fraction of a 128-lane dim actually occupied.
+    eff_m = min(1.0, min(B, 128) / 128)
+    eff_n = min(1.0, min(O, 128) / 128)
+    return eff_m * eff_n

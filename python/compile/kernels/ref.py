@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has a line-for-line mathematical
+twin here. The pytest suite (python/tests/test_kernels.py) sweeps
+shapes/dtypes with hypothesis and asserts allclose between the two.
+These references are also reused by model.py's `*_ref` functions so the
+whole L2 learner step can be checked end-to-end against plain jnp.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Activation tags shared with the Pallas kernels. Kept as plain strings
+#: (not an enum) so they can be embedded in artifact manifests verbatim.
+ACTIVATIONS = ("none", "tanh", "relu")
+
+
+def activate(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Apply the activation named ``act`` (one of ACTIVATIONS)."""
+    if act == "none":
+        return x
+    if act == "tanh":
+        return jnp.tanh(x)
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def activate_grad(y: jnp.ndarray, act: str) -> jnp.ndarray:
+    """d act(z) / d z expressed in terms of the *output* y = act(z).
+
+    Using the output (rather than the pre-activation) lets the backward
+    kernels avoid stashing z: tanh' = 1 - y**2, relu' = 1[y > 0].
+    """
+    if act == "none":
+        return jnp.ones_like(y)
+    if act == "tanh":
+        return 1.0 - y * y
+    if act == "relu":
+        return (y > 0).astype(y.dtype)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def linear_act(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str = "none") -> jnp.ndarray:
+    """Reference fused linear layer: ``act(x @ w + b)``.
+
+    x: [B, I], w: [I, O], b: [O] -> [B, O]. Accumulates in f32.
+    """
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return activate(y, act).astype(x.dtype)
+
+
+def linear_act_bwd(x, w, y, g, act: str):
+    """Reference backward pass for linear_act.
+
+    Given y = act(x@w + b) and upstream cotangent g, returns
+    (dx, dw, db) — the same quantities the Pallas backward kernels
+    produce.
+    """
+    gz = (g.astype(jnp.float32) * activate_grad(y.astype(jnp.float32), act))
+    dx = jnp.dot(gz, w.astype(jnp.float32).T).astype(x.dtype)
+    dw = jnp.dot(x.astype(jnp.float32).T, gz).astype(w.dtype)
+    db = jnp.sum(gz, axis=0).astype(w.dtype)
+    return dx, dw, db

@@ -1,0 +1,264 @@
+"""L2 — MADDPG model: actor/critic forward + the per-agent learner step.
+
+This is the compute graph that each *learner* executes for each agent
+assigned to it (paper Alg. 1, lines 21-24):
+
+  1. critic update   — minimize the TD error, Eq. (3)
+  2. policy update   — deterministic policy gradient ascent, Eq. (4)
+  3. target updates  — Polyak averaging, Eq. (5)
+
+Everything is a pure function of (parameters, minibatch) so that the
+coded recovery of Eq. (2) is exact: the controller can linearly combine
+learner outputs because each learner computes exactly the same
+theta_i' = f(theta, batch) for its assigned agents.
+
+All dense layers go through the Pallas kernel
+(:func:`compile.kernels.linear.linear_act`) on both the forward and
+backward pass; `*_ref` twins use plain jnp for the pytest oracle.
+
+Parameter layout (flat f32 vectors; mirrored by rust/src/marl/params.rs):
+
+  actor  theta_p = [W1(Do*H) | b1(H) | W2(H*H) | b2(H) | W3(H*Da) | b3(Da)]
+  critic theta_q = [W1(Dc*H) | b1(H) | W2(H*H) | b2(H) | W3(H*1) | b3(1)]
+
+with matrices stored row-major and Dc = M*(Do+Da).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear, ref
+from .presets import Preset
+
+
+# ---------------------------------------------------------------------------
+# Parameter packing
+# ---------------------------------------------------------------------------
+
+
+def mlp_shapes(in_dim: int, hidden: int, out_dim: int) -> List[Tuple[int, ...]]:
+    """Shapes of the 3-layer MLP parameter blocks, in flat-layout order."""
+    return [
+        (in_dim, hidden), (hidden,),
+        (hidden, hidden), (hidden,),
+        (hidden, out_dim), (out_dim,),
+    ]
+
+
+def param_dim(shapes: List[Tuple[int, ...]]) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for s in shapes)
+
+
+def unpack(flat: jnp.ndarray, shapes: List[Tuple[int, ...]]) -> List[jnp.ndarray]:
+    """Split a flat parameter vector into the per-block arrays."""
+    out, off = [], 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(flat[off:off + n].reshape(s))
+        off += n
+    assert off == flat.shape[0], (off, flat.shape)
+    return out
+
+
+def pack(blocks: List[jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate([b.reshape(-1) for b in blocks])
+
+
+def init_mlp(key: jax.Array, shapes: List[Tuple[int, ...]]) -> jnp.ndarray:
+    """Glorot-uniform weights, zero biases, packed flat.
+
+    Mirrored bit-for-bit is not required on the Rust side (Rust owns
+    initialization via its own RNG); this initializer exists for python
+    tests and the pure-python training sanity check.
+    """
+    blocks = []
+    for s in shapes:
+        if len(s) == 2:
+            key, sub = jax.random.split(key)
+            limit = (6.0 / (s[0] + s[1])) ** 0.5
+            blocks.append(jax.random.uniform(sub, s, jnp.float32, -limit, limit))
+        else:
+            blocks.append(jnp.zeros(s, jnp.float32))
+    return pack(blocks)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (Pallas-backed and reference)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_forward(
+    flat: jnp.ndarray,
+    x: jnp.ndarray,
+    shapes: List[Tuple[int, ...]],
+    acts: Tuple[str, str, str],
+    layer: Callable = linear.linear_act,
+) -> jnp.ndarray:
+    w1, b1, w2, b2, w3, b3 = unpack(flat, shapes)
+    h = layer(x, w1, b1, acts[0])
+    h = layer(h, w2, b2, acts[1])
+    return layer(h, w3, b3, acts[2])
+
+
+def actor_forward(p: Preset, theta_p: jnp.ndarray, obs: jnp.ndarray,
+                  layer: Callable = linear.linear_act) -> jnp.ndarray:
+    """Deterministic policy pi_i(s_i): obs [B, Do] -> action [B, Da] in [-1,1]."""
+    shapes = mlp_shapes(p.obs_dim, p.hidden, p.act_dim)
+    return _mlp_forward(theta_p, obs, shapes, ("tanh", "tanh", "tanh"), layer)
+
+
+def critic_forward(p: Preset, theta_q: jnp.ndarray, obs_joint: jnp.ndarray,
+                   act_joint: jnp.ndarray,
+                   layer: Callable = linear.linear_act) -> jnp.ndarray:
+    """Centralized Q_i(s, a): [B, M*Do], [B, M*Da] -> [B]."""
+    shapes = mlp_shapes(p.critic_in_dim, p.hidden, 1)
+    x = jnp.concatenate([obs_joint, act_joint], axis=1)
+    return _mlp_forward(theta_q, x, shapes, ("tanh", "tanh", "none"), layer)[:, 0]
+
+
+def actor_forward_ref(p, theta_p, obs):
+    return actor_forward(p, theta_p, obs, layer=ref.linear_act)
+
+
+def critic_forward_ref(p, theta_q, obs_joint, act_joint):
+    return critic_forward(p, theta_q, obs_joint, act_joint, layer=ref.linear_act)
+
+
+# ---------------------------------------------------------------------------
+# Learner step (the artifact Rust executes per assigned agent)
+# ---------------------------------------------------------------------------
+
+
+def make_learner_step(p: Preset, layer: Callable = linear.linear_act):
+    """Build learner_step(theta_p_i, theta_q_i, tpol_all, theta_q_hat_i,
+    obs, act, rew, obs2, done, agent_idx) for preset ``p``.
+
+    Shapes:
+      theta_p_i    [Pp]          current policy of agent i
+      theta_q_i    [Pq]          current critic of agent i
+      tpol_all     [M, Pp]       target policies of ALL agents
+      theta_q_hat  [Pq]          target critic of agent i
+      obs, obs2    [B, M, Do]    joint observations (s, s')
+      act          [B, M, Da]    joint actions from the replay buffer
+      rew, done    [B]           agent-i reward, terminal mask
+      agent_idx    i32 scalar    which agent this invocation updates
+
+    Returns (theta_p', theta_q', theta_p_hat', theta_q_hat',
+             critic_loss, pg_objective).
+    """
+    B, M = p.batch, p.m
+
+    def learner_step(theta_p, theta_q, tpol_all, theta_q_hat,
+                     obs, act, rew, obs2, done, agent_idx):
+        obs_joint = obs.reshape(B, -1)
+        act_joint = act.reshape(B, -1)
+        obs2_joint = obs2.reshape(B, -1)
+
+        # --- critic target: a' = (pi_hat_1(s'_1), ..., pi_hat_M(s'_M)).
+        # Static python loop over agents: M is compile-time, and looping
+        # avoids vmap-of-pallas corner cases in the lowered HLO.
+        a2 = [actor_forward(p, tpol_all[j], obs2[:, j, :], layer) for j in range(M)]
+        a2_joint = jnp.concatenate(a2, axis=1)
+        q_next = critic_forward(p, theta_q_hat, obs2_joint, a2_joint, layer)
+        target = rew + p.gamma * (1.0 - done) * q_next
+        target = jax.lax.stop_gradient(target)
+
+        # --- critic update: minimize TD error, Eq. (3).
+        def critic_loss_fn(tq):
+            q = critic_forward(p, tq, obs_joint, act_joint, layer)
+            return jnp.mean((target - q) ** 2)
+
+        critic_loss, g_q = jax.value_and_grad(critic_loss_fn)(theta_q)
+        theta_q_new = theta_q - p.lr_critic * g_q
+
+        # --- policy update: deterministic policy gradient, Eq. (4).
+        # Replace agent i's replayed action with pi_i(s_i; theta_p); other
+        # agents' actions stay as sampled (MADDPG surrogate).
+        obs_i = jnp.take(obs, agent_idx, axis=1)  # [B, Do]
+
+        def pg_objective_fn(tp):
+            a_i = actor_forward(p, tp, obs_i, layer)  # [B, Da]
+            a_joint = jax.lax.dynamic_update_slice(
+                act, a_i[:, None, :], (0, agent_idx, 0)
+            ).reshape(B, -1)
+            return jnp.mean(critic_forward(p, theta_q, obs_joint, a_joint, layer))
+
+        pg_obj, g_p = jax.value_and_grad(pg_objective_fn)(theta_p)
+        theta_p_new = theta_p + p.lr_actor * g_p
+
+        # --- target updates: Polyak averaging, Eq. (5) (paper's form:
+        # theta_hat <- tau*theta_hat + (1-tau)*theta, tau close to 1).
+        theta_p_hat = jnp.take(tpol_all, agent_idx, axis=0)
+        theta_p_hat_new = p.tau * theta_p_hat + (1.0 - p.tau) * theta_p_new
+        theta_q_hat_new = p.tau * theta_q_hat + (1.0 - p.tau) * theta_q_new
+
+        return (theta_p_new, theta_q_new, theta_p_hat_new, theta_q_hat_new,
+                critic_loss, pg_obj)
+
+    return learner_step
+
+
+def make_learner_step_ref(p: Preset):
+    """Pure-jnp twin of make_learner_step (pytest oracle)."""
+    return make_learner_step(p, layer=ref.linear_act)
+
+
+# ---------------------------------------------------------------------------
+# Stacked actor forward (rollout-path artifact)
+# ---------------------------------------------------------------------------
+
+
+def make_actor_fwd(p: Preset, layer: Callable = linear.linear_act):
+    """actor_fwd(theta_p_all [M,Pp], obs_all [M,Do]) -> actions [M,Da].
+
+    One PJRT dispatch computes all M agents' actions for a single joint
+    observation (used by the controller when collecting episodes; the
+    Rust rollout path also has a native MLP forward verified against
+    this artifact).
+    """
+    M = p.m
+
+    def actor_fwd(theta_p_all, obs_all):
+        outs = [actor_forward(p, theta_p_all[j], obs_all[j:j + 1, :], layer)
+                for j in range(M)]
+        return jnp.concatenate(outs, axis=0)
+
+    return actor_fwd
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (shared by aot.py and the tests)
+# ---------------------------------------------------------------------------
+
+
+def learner_step_arg_specs(p: Preset):
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    B, M = p.batch, p.m
+    return (
+        S((p.actor_param_dim,), f32),
+        S((p.critic_param_dim,), f32),
+        S((M, p.actor_param_dim), f32),
+        S((p.critic_param_dim,), f32),
+        S((B, M, p.obs_dim), f32),
+        S((B, M, p.act_dim), f32),
+        S((B,), f32),
+        S((B, M, p.obs_dim), f32),
+        S((B,), f32),
+        S((), i32),
+    )
+
+
+def actor_fwd_arg_specs(p: Preset):
+    S, f32 = jax.ShapeDtypeStruct, jnp.float32
+    return (
+        S((p.m, p.actor_param_dim), f32),
+        S((p.m, p.obs_dim), f32),
+    )

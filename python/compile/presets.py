@@ -1,0 +1,127 @@
+"""Experiment presets — the single source of truth for model dimensions.
+
+Every artifact set (one per preset) is described here; aot.py lowers each
+preset to HLO and records the exact numbers in artifacts/manifest.json,
+which the Rust side (rust/src/runtime/manifest.rs) parses. The Rust
+environments must emit observations of exactly `obs_dim(env, M)` floats
+per agent — the formulas here and in rust/src/env/mod.rs must agree
+(python/tests/test_presets.py pins them).
+
+Observation layouts (2-D world, all vectors relative to self unless
+noted):
+
+* coop_nav:        [self_vel(2), self_pos(2), landmarks(2M), others(2(M-1))]
+* predator_prey:   [self_vel(2), self_pos(2), obstacles(2*2),
+                    others_pos(2(M-1)), others_vel(2(M-1))]
+* deception:       [self_vel(2), self_pos(2), landmarks(2*2),
+                    others(2(M-1)), target(2; zeroed for adversaries)]
+* keep_away:       same layout as deception
+
+Actions are continuous 2-D forces in [-1, 1]^2 (tanh policy head).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List
+
+HIDDEN = 64
+ACT_DIM = 2
+N_OBSTACLES = 2  # predator_prey
+N_LANDMARKS_DECEPTION = 2  # deception / keep_away
+
+ENVS = ("coop_nav", "predator_prey", "deception", "keep_away")
+
+
+def obs_dim(env: str, m: int) -> int:
+    """Per-agent observation dimension (uniform across agents)."""
+    if env == "coop_nav":
+        return 4 + 2 * m + 2 * (m - 1)
+    if env == "predator_prey":
+        return 4 + 2 * N_OBSTACLES + 4 * (m - 1)
+    if env in ("deception", "keep_away"):
+        return 4 + 2 * N_LANDMARKS_DECEPTION + 2 * (m - 1) + 2
+    raise ValueError(f"unknown env {env!r}")
+
+
+@dataclass(frozen=True)
+class Preset:
+    """One lowered artifact configuration.
+
+    All hyperparameters that are baked into the HLO as constants live
+    here (gamma/tau/lrs); anything runtime-tunable (N learners, coding
+    scheme, straggler model) lives on the Rust side.
+    """
+
+    name: str
+    env: str
+    m: int                      # number of agents M
+    n_adversaries: int          # K (0 for cooperative envs)
+    batch: int = 32             # minibatch size B
+    hidden: int = HIDDEN
+    act_dim: int = ACT_DIM
+    gamma: float = 0.95
+    tau: float = 0.99           # Polyak per paper Eq. (5): th^ <- tau*th^ + (1-tau)*th
+    lr_actor: float = 1e-3
+    lr_critic: float = 1e-2
+
+    @property
+    def obs_dim(self) -> int:
+        return obs_dim(self.env, self.m)
+
+    @property
+    def critic_in_dim(self) -> int:
+        return self.m * (self.obs_dim + self.act_dim)
+
+    @property
+    def actor_param_dim(self) -> int:
+        d, h, a = self.obs_dim, self.hidden, self.act_dim
+        return (d * h + h) + (h * h + h) + (h * a + a)
+
+    @property
+    def critic_param_dim(self) -> int:
+        c, h = self.critic_in_dim, self.hidden
+        return (c * h + h) + (h * h + h) + (h * 1 + 1)
+
+    @property
+    def agent_param_dim(self) -> int:
+        """theta_i = [theta_p, theta_q, theta_p_hat, theta_q_hat]."""
+        return 2 * (self.actor_param_dim + self.critic_param_dim)
+
+    def manifest_entry(self) -> Dict:
+        d = asdict(self)
+        d.update(
+            obs_dim=self.obs_dim,
+            critic_in_dim=self.critic_in_dim,
+            actor_param_dim=self.actor_param_dim,
+            critic_param_dim=self.critic_param_dim,
+            agent_param_dim=self.agent_param_dim,
+            artifacts={
+                "learner_step": f"{self.name}/learner_step.hlo.txt",
+                "actor_fwd": f"{self.name}/actor_fwd.hlo.txt",
+            },
+        )
+        return d
+
+
+def default_presets() -> List[Preset]:
+    """The artifact sets the experiments need.
+
+    * quickstart: tiny coop_nav for examples/tests (fast lowering+exec)
+    * one preset per (env, M in {8, 10}) for Figs. 3-5; K=4 adversaries
+      in the competitive envs per paper SsV-B.
+    """
+    out = [Preset(name="quickstart_m3", env="coop_nav", m=3, n_adversaries=0)]
+    for m in (8, 10):
+        out.append(Preset(name=f"coop_nav_m{m}", env="coop_nav", m=m, n_adversaries=0))
+        out.append(Preset(name=f"predator_prey_m{m}", env="predator_prey", m=m, n_adversaries=4))
+        out.append(Preset(name=f"deception_m{m}", env="deception", m=m, n_adversaries=4))
+        out.append(Preset(name=f"keep_away_m{m}", env="keep_away", m=m, n_adversaries=4))
+    return out
+
+
+def preset_by_name(name: str) -> Preset:
+    for p in default_presets():
+        if p.name == name:
+            return p
+    raise KeyError(name)

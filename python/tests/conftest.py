@@ -1,0 +1,7 @@
+"""Shared fixtures: make `compile` importable when pytest runs from
+python/ or from the repo root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas kernels vs pure-jnp reference.
+
+Hypothesis sweeps shapes/dtypes/activations; every case asserts
+allclose between compile.kernels.linear (Pallas, interpret=True) and
+compile.kernels.ref (plain jnp), forward and backward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linear, ref
+
+ACTS = ref.ACTIVATIONS
+
+
+def _mk(rng, B, I, O, dtype):
+    x = jnp.asarray(rng.normal(size=(B, I)), dtype)
+    w = jnp.asarray(rng.normal(size=(I, O)) / np.sqrt(I), dtype)
+    b = jnp.asarray(rng.normal(size=(O,)), dtype)
+    return x, w, b
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    B=st.integers(1, 96),
+    I=st.integers(1, 96),
+    O=st.integers(1, 96),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_act_forward_matches_ref(B, I, O, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _mk(rng, B, I, O, jnp.float32)
+    got = linear.linear_act(x, w, b, act)
+    want = ref.linear_act(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    B=st.integers(1, 48),
+    I=st.integers(1, 48),
+    O=st.integers(1, 48),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_act_grads_match_ref(B, I, O, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _mk(rng, B, I, O, jnp.float32)
+
+    def f(layer):
+        return lambda x, w, b: jnp.sum(jnp.cos(layer(x, w, b, act)))
+
+    g = jax.grad(f(linear.linear_act), argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f(ref.linear_act), argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ACTS)
+def test_dtypes(dtype, act):
+    rng = np.random.default_rng(7)
+    x, w, b = _mk(rng, 33, 17, 29, dtype)
+    got = linear.linear_act(x, w, b, act)
+    want = ref.linear_act(x, w, b, act)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (128, 128, 128), (256, 130, 3), (5, 440, 64)])
+def test_block_boundaries(shape):
+    """Exact multiples of the tile size and heavily ragged shapes."""
+    B, I, O = shape
+    rng = np.random.default_rng(B * 1000 + I * 10 + O)
+    x, w, b = _mk(rng, B, I, O, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(linear.linear_act(x, w, b, "tanh")),
+        np.asarray(ref.linear_act(x, w, b, "tanh")),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_custom_block_sizes():
+    rng = np.random.default_rng(3)
+    x, w, b = _mk(rng, 64, 32, 48, jnp.float32)
+    for bm, bn in [(8, 8), (16, 64), (128, 128)]:
+        got = linear.linear_act(x, w, b, "relu", bm, bn)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.linear_act(x, w, b, "relu")),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_backward_kernel_direct():
+    """The raw backward kernels (not just through custom_vjp)."""
+    rng = np.random.default_rng(11)
+    for act in ACTS:
+        x, w, b = _mk(rng, 21, 13, 9, jnp.float32)
+        y = ref.linear_act(x, w, b, act)
+        g = jnp.asarray(rng.normal(size=y.shape), jnp.float32)
+        dx, dw, db = linear._linear_act_bwd_impl(x, w, y, g, act, 128, 128)
+        rdx, rdw, rdb = ref.linear_act_bwd(x, w, y, g, act)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(rdx), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(rdw), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(db), np.asarray(rdb), rtol=1e-5, atol=1e-5)
+
+
+def test_grad_against_finite_differences():
+    rng = np.random.default_rng(23)
+    x, w, b = _mk(rng, 6, 5, 4, jnp.float32)
+    f = lambda w: jnp.sum(linear.linear_act(x, w, b, "tanh"))
+    g = np.asarray(jax.grad(f)(w))
+    eps = 1e-3
+    for (i, j) in [(0, 0), (2, 3), (4, 1)]:
+        wp = np.asarray(w).copy(); wp[i, j] += eps
+        wm = np.asarray(w).copy(); wm[i, j] -= eps
+        fd = (float(f(jnp.asarray(wp))) - float(f(jnp.asarray(wm)))) / (2 * eps)
+        np.testing.assert_allclose(g[i, j], fd, rtol=2e-2, atol=2e-3)
+
+
+def test_vmem_and_mxu_estimates_monotone():
+    """Doc-level invariants of the TPU mapping estimators."""
+    small = linear.vmem_footprint_bytes(8, 8, 8)
+    big = linear.vmem_footprint_bytes(128, 512, 128)
+    assert small < big
+    assert 0.0 < linear.mxu_utilization_estimate(8, 64, 8) < 1.0
+    assert linear.mxu_utilization_estimate(128, 64, 128) == 1.0

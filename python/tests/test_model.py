@@ -1,0 +1,208 @@
+"""L2 correctness: MADDPG learner step and forwards, Pallas vs reference,
+plus the algebraic identities the coded recovery relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, presets
+
+P = presets.preset_by_name("quickstart_m3")
+
+
+def make_params(p, seed=0):
+    tp = model.init_mlp(jax.random.PRNGKey(seed),
+                        model.mlp_shapes(p.obs_dim, p.hidden, p.act_dim))
+    tq = model.init_mlp(jax.random.PRNGKey(seed + 1),
+                        model.mlp_shapes(p.critic_in_dim, p.hidden, 1))
+    tpa = jnp.stack([
+        model.init_mlp(jax.random.PRNGKey(seed + 10 + j),
+                       model.mlp_shapes(p.obs_dim, p.hidden, p.act_dim))
+        for j in range(p.m)
+    ])
+    return tp, tq, tpa, tq * 0.5
+
+
+def make_batch(p, seed=0):
+    rng = np.random.default_rng(seed)
+    B, M = p.batch, p.m
+    return (
+        jnp.asarray(rng.normal(size=(B, M, p.obs_dim)), jnp.float32),
+        jnp.asarray(rng.uniform(-1, 1, size=(B, M, p.act_dim)), jnp.float32),
+        jnp.asarray(rng.normal(size=(B,)), jnp.float32),
+        jnp.asarray(rng.normal(size=(B, M, p.obs_dim)), jnp.float32),
+        jnp.asarray((rng.random(B) < 0.1).astype(np.float32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip():
+    shapes = model.mlp_shapes(7, 5, 3)
+    rng = np.random.default_rng(0)
+    blocks = [jnp.asarray(rng.normal(size=s), jnp.float32) for s in shapes]
+    flat = model.pack(blocks)
+    back = model.unpack(flat, shapes)
+    for a, b in zip(blocks, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_dims_match_presets():
+    for p in presets.default_presets():
+        assert model.init_mlp(
+            jax.random.PRNGKey(0), model.mlp_shapes(p.obs_dim, p.hidden, p.act_dim)
+        ).shape == (p.actor_param_dim,)
+        assert model.init_mlp(
+            jax.random.PRNGKey(0), model.mlp_shapes(p.critic_in_dim, p.hidden, 1)
+        ).shape == (p.critic_param_dim,)
+
+
+# ---------------------------------------------------------------------------
+# Forwards
+# ---------------------------------------------------------------------------
+
+
+def test_actor_forward_matches_ref_and_bounded():
+    tp, _, _, _ = make_params(P)
+    obs = make_batch(P)[0][:, 0, :]
+    a = model.actor_forward(P, tp, obs)
+    ar = model.actor_forward_ref(P, tp, obs)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ar), rtol=1e-5, atol=1e-6)
+    assert np.all(np.abs(np.asarray(a)) <= 1.0)
+
+
+def test_critic_forward_matches_ref():
+    _, tq, _, _ = make_params(P)
+    obs, act, *_ = make_batch(P)
+    q = model.critic_forward(P, tq, obs.reshape(P.batch, -1), act.reshape(P.batch, -1))
+    qr = model.critic_forward_ref(P, tq, obs.reshape(P.batch, -1), act.reshape(P.batch, -1))
+    assert q.shape == (P.batch,)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Learner step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("agent_idx", [0, 1, P.m - 1])
+def test_learner_step_matches_ref(agent_idx):
+    params = make_params(P)
+    batch = make_batch(P)
+    step = jax.jit(model.make_learner_step(P))
+    stepr = model.make_learner_step_ref(P)
+    out = step(*params, *batch, jnp.int32(agent_idx))
+    outr = stepr(*params, *batch, jnp.int32(agent_idx))
+    for a, b in zip(out, outr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4, atol=3e-5)
+
+
+def test_learner_step_is_deterministic():
+    params, batch = make_params(P), make_batch(P)
+    step = jax.jit(model.make_learner_step(P))
+    o1 = step(*params, *batch, jnp.int32(0))
+    o2 = step(*params, *batch, jnp.int32(0))
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_polyak_identity():
+    """theta_hat' must be exactly tau*theta_hat + (1-tau)*theta' (Eq. 5)."""
+    params, batch = make_params(P), make_batch(P)
+    tp, tq, tpa, tqh = params
+    out = model.make_learner_step_ref(P)(*params, *batch, jnp.int32(1))
+    tp_new, tq_new, tph_new, tqh_new = out[:4]
+    np.testing.assert_allclose(
+        np.asarray(tph_new),
+        P.tau * np.asarray(tpa[1]) + (1 - P.tau) * np.asarray(tp_new),
+        rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(tqh_new),
+        P.tau * np.asarray(tqh) + (1 - P.tau) * np.asarray(tq_new),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_critic_update_is_gradient_descent_direction():
+    """One SGD step must not increase the TD loss (small lr)."""
+    params, batch = make_params(P), make_batch(P)
+    tp, tq, tpa, tqh = params
+    obs, act, rew, obs2, done = batch
+    out = model.make_learner_step_ref(P)(*params, *batch, jnp.int32(0))
+    tq_new = out[1]
+
+    def td_loss(tq_):
+        a2 = [model.actor_forward_ref(P, tpa[j], obs2[:, j, :]) for j in range(P.m)]
+        qn = model.critic_forward_ref(P, tqh, obs2.reshape(P.batch, -1),
+                                      jnp.concatenate(a2, axis=1))
+        tgt = rew + P.gamma * (1 - done) * qn
+        q = model.critic_forward_ref(P, tq_, obs.reshape(P.batch, -1),
+                                     act.reshape(P.batch, -1))
+        return float(jnp.mean((tgt - q) ** 2))
+
+    assert td_loss(tq_new) <= td_loss(tq) + 1e-6
+
+
+def test_policy_update_increases_objective():
+    params, batch = make_params(P), make_batch(P)
+    tp, tq, tpa, tqh = params
+    obs, act, rew, obs2, done = batch
+    i = 2
+    out = model.make_learner_step_ref(P)(*params, *batch, jnp.int32(i))
+    tp_new = out[0]
+
+    def obj(tp_):
+        a_i = model.actor_forward_ref(P, tp_, obs[:, i, :])
+        aj = act.at[:, i, :].set(a_i).reshape(P.batch, -1)
+        return float(jnp.mean(model.critic_forward_ref(
+            P, tq, obs.reshape(P.batch, -1), aj)))
+
+    assert obj(tp_new) >= obj(tp) - 1e-6
+
+
+def test_learner_step_linear_in_code_coefficients():
+    """The coded recovery premise: every learner computes the SAME
+    theta_i'; a coded result sum c_i * theta_i' is therefore exactly
+    decodable. Here: two independent evaluations of the step agree
+    bitwise, so linear combinations commute with computation."""
+    params, batch = make_params(P), make_batch(P)
+    step = jax.jit(model.make_learner_step(P))
+    thetas = [np.concatenate([np.asarray(x).ravel() for x in step(*params, *batch, jnp.int32(i))[:4]])
+              for i in range(P.m)]
+    c = np.array([0.3, -1.2, 2.0])
+    coded = sum(ci * th for ci, th in zip(c, thetas))
+    coded2 = sum(ci * th for ci, th in zip(
+        c, [np.concatenate([np.asarray(x).ravel() for x in step(*params, *batch, jnp.int32(i))[:4]])
+            for i in range(P.m)]))
+    np.testing.assert_array_equal(coded, coded2)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_learner_step_outputs_finite(seed):
+    params, batch = make_params(P, seed), make_batch(P, seed)
+    out = model.make_learner_step_ref(P)(*params, *batch, jnp.int32(seed % P.m))
+    for x in out:
+        assert np.all(np.isfinite(np.asarray(x)))
+
+
+# ---------------------------------------------------------------------------
+# Stacked actor
+# ---------------------------------------------------------------------------
+
+
+def test_actor_fwd_stacked_matches_per_agent():
+    _, _, tpa, _ = make_params(P)
+    rng = np.random.default_rng(5)
+    obs_all = jnp.asarray(rng.normal(size=(P.m, P.obs_dim)), jnp.float32)
+    fwd = jax.jit(model.make_actor_fwd(P))
+    acts = fwd(tpa, obs_all)
+    assert acts.shape == (P.m, P.act_dim)
+    for j in range(P.m):
+        single = model.actor_forward(P, tpa[j], obs_all[j:j + 1, :])
+        np.testing.assert_allclose(np.asarray(acts[j]), np.asarray(single[0]),
+                                   rtol=1e-5, atol=1e-6)

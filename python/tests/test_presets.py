@@ -1,0 +1,73 @@
+"""Pins the python<->rust dimension contract (see presets.py docstring).
+
+If any of these change, rust/src/env/ and rust/src/marl/params.rs must
+change in lockstep — the manifest is the carrier, these tests are the
+tripwire.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import presets
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_obs_dim_formulas_pinned():
+    assert presets.obs_dim("coop_nav", 8) == 34
+    assert presets.obs_dim("coop_nav", 10) == 42
+    assert presets.obs_dim("coop_nav", 3) == 14
+    assert presets.obs_dim("predator_prey", 8) == 36
+    assert presets.obs_dim("predator_prey", 10) == 44
+    assert presets.obs_dim("deception", 8) == 24
+    assert presets.obs_dim("keep_away", 10) == 28
+
+
+def test_unknown_env_raises():
+    with pytest.raises(ValueError):
+        presets.obs_dim("nope", 4)
+
+
+def test_param_dims_consistent():
+    for p in presets.default_presets():
+        d, h, a = p.obs_dim, p.hidden, p.act_dim
+        assert p.actor_param_dim == d * h + h + h * h + h + h * a + a
+        c = p.m * (d + a)
+        assert p.critic_in_dim == c
+        assert p.critic_param_dim == c * h + h + h * h + h + h + 1
+        assert p.agent_param_dim == 2 * (p.actor_param_dim + p.critic_param_dim)
+
+
+def test_default_presets_cover_paper_experiments():
+    names = {p.name for p in presets.default_presets()}
+    for env in presets.ENVS:
+        for m in (8, 10):
+            assert f"{env}_m{m}" in names
+    assert "quickstart_m3" in names
+
+
+def test_competitive_envs_have_k4():
+    for p in presets.default_presets():
+        if p.env in ("predator_prey", "deception", "keep_away") and p.m >= 8:
+            assert p.n_adversaries == 4  # paper SsV-B
+        if p.env == "coop_nav":
+            assert p.n_adversaries == 0
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_presets():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["interchange"] == "hlo_text"
+    by_name = {e["name"]: e for e in man["presets"]}
+    for p in presets.default_presets():
+        e = by_name[p.name]
+        assert e["obs_dim"] == p.obs_dim
+        assert e["actor_param_dim"] == p.actor_param_dim
+        assert e["critic_param_dim"] == p.critic_param_dim
+        assert e["m"] == p.m and e["batch"] == p.batch
+        for rel in e["artifacts"].values():
+            assert os.path.exists(os.path.join(ART, rel)), rel

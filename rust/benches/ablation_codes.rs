@@ -1,0 +1,267 @@
+//! Ablations over the coding-layer design choices DESIGN.md calls out:
+//!
+//! 1. **Decode-probability profile** — P(recoverable) vs k for every
+//!    scheme (the structural content behind Figs. 4-5's crossovers).
+//! 2. **Random-sparse density p_m** — the paper fixes p_m = 0.8; sweep
+//!    it to expose the sparsity ↔ robustness trade-off.
+//! 3. **Decode method** — the paper decodes with normal equations
+//!    (Eq. (2)); compare against QR and peeling for accuracy and time.
+//! 4. **Straggler model** — the paper's fixed-delay model vs the
+//!    exponential heavy-tail extension.
+//!
+//!     cargo bench --bench ablation_codes
+
+mod common;
+
+use std::time::Duration;
+
+use coded_marl::coding::decoder::{DecodeMethod, Decoder};
+use coded_marl::coding::{random_set_decode_probability, Code, CodeParams, Scheme};
+use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
+use coded_marl::coordinator::{backend_factory, spawn_local, Controller, RunSpec};
+use coded_marl::env::EnvKind;
+use coded_marl::metrics::table::Table;
+use coded_marl::rng::Pcg32;
+
+fn main() {
+    ablation_decode_probability();
+    ablation_pm_sweep();
+    ablation_decode_methods();
+    ablation_straggler_model();
+    ablation_adaptive_selection();
+}
+
+/// Ablation 5: live scheme adaptation under a straggler-regime change.
+/// The cluster starts quiet, then turns stormy mid-run (k jumps from 0
+/// to 4 with a large t_s). Fixed schemes pay either the redundancy
+/// (MDS throughout) or the stalls (uncoded after the change); the
+/// `--adaptive` controller measures and switches.
+fn ablation_adaptive_selection() {
+    println!("=== ablation 5: adaptive scheme selection across a regime change ===");
+    let iters = common::bench_iters() * 3;
+    let half = iters / 2;
+    println!(
+        "(coop_nav M=8 N=15, mock 2ms/update; iters 0..{half} quiet, {half}..{iters} k=4 @ 100ms)"
+    );
+    let spec = RunSpec::synthetic(EnvKind::CoopNav, 8, 0, 64, 32);
+    let run = |scheme: Scheme, adaptive: bool| -> (f64, String) {
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        // two phases driven by reconfiguring the injector between
+        // controller runs; the adaptive run carries its telemetry across
+        // the boundary because the controller object persists.
+        let mut cfg = TrainConfig::new("coop_nav_m8");
+        cfg.backend = Backend::Mock;
+        cfg.scheme = scheme;
+        cfg.adaptive = adaptive;
+        cfg.n_learners = 15;
+        cfg.iterations = iters;
+        cfg.episodes_per_iter = 1;
+        cfg.episode_len = 25;
+        cfg.warmup_iters = 1;
+        cfg.mock_compute = Duration::from_millis(2);
+        cfg.seed = 29;
+        // phase 1: quiet
+        let factory = backend_factory(&cfg, common::artifacts_dir(), &spec);
+        let pool = spawn_local(cfg.n_learners, factory).unwrap();
+        let mut quiet_cfg = cfg.clone();
+        quiet_cfg.iterations = half;
+        let mut ctrl = Controller::new(quiet_cfg, spec.clone(), pool).unwrap();
+        ctrl.train().unwrap();
+        for r in ctrl.log.records.iter().filter(|r| r.decode_method != "warmup") {
+            total += r.timing.total.as_secs_f64();
+            n += 1;
+        }
+        let mid_scheme = ctrl.current_scheme();
+        ctrl.shutdown();
+        // phase 2: stormy — new controller resumes the adapted scheme
+        let mut stormy_cfg = cfg.clone();
+        stormy_cfg.scheme = mid_scheme;
+        stormy_cfg.iterations = iters - half;
+        stormy_cfg.straggler = StragglerConfig::fixed(4, Duration::from_millis(100));
+        let factory = backend_factory(&stormy_cfg, common::artifacts_dir(), &spec);
+        let pool = spawn_local(stormy_cfg.n_learners, factory).unwrap();
+        let mut ctrl = Controller::new(stormy_cfg, spec.clone(), pool).unwrap();
+        ctrl.train().unwrap();
+        for r in ctrl.log.records.iter().filter(|r| r.decode_method != "warmup") {
+            total += r.timing.total.as_secs_f64();
+            n += 1;
+        }
+        let end_scheme = ctrl.current_scheme();
+        ctrl.shutdown();
+        (total / n as f64 * 1e3, format!("{mid_scheme} → {end_scheme}"))
+    };
+    let mut table = Table::new(&["policy", "mean iter", "scheme trajectory"]);
+    for (label, scheme, adaptive) in [
+        ("fixed uncoded", Scheme::Uncoded, false),
+        ("fixed mds", Scheme::Mds, false),
+        ("adaptive (start mds)", Scheme::Mds, true),
+    ] {
+        let (mean_ms, traj) = run(scheme, adaptive);
+        table.row(&[label.to_string(), format!("{mean_ms:.1}ms"), traj]);
+    }
+    print!("{}", table.render());
+    println!(
+        "-> read the trajectory column: the adaptive controller sheds MDS's redundancy\n\
+           while the pool is quiet and moves to a robust scheme once the storm is\n\
+           observed. The re-arming lag (stalled iterations right after the change)\n\
+           is the price of adaptation — longer phases amortize it; the fixed policies\n\
+           instead pay their weakness for an entire phase."
+    );
+}
+
+fn ablation_decode_probability() {
+    println!("=== ablation 1: P(decodable) vs straggler count (N=15) ===");
+    let mut rng = Pcg32::seeded(11);
+    for m in [8usize, 10] {
+        println!("\nM = {m}:");
+        let mut table = Table::new(&[
+            "scheme", "k=0", "k=1", "k=2", "k=3", "k=4", "k=5", "k=6", "k=7", "worst-case tol",
+        ]);
+        for scheme in Scheme::ALL {
+            let code = Code::build(&CodeParams { scheme, n: 15, m, p_m: 0.8, seed: 2 });
+            let mut cells = vec![scheme.name().to_string()];
+            for k in 0..=7 {
+                let p = random_set_decode_probability(&code, k, 400, &mut rng);
+                cells.push(format!("{p:.2}"));
+            }
+            cells.push(code.worst_case_tolerance().to_string());
+            table.row(&cells);
+        }
+        print!("{}", table.render());
+    }
+    println!();
+}
+
+fn ablation_pm_sweep() {
+    println!("=== ablation 2: random-sparse density p_m (N=15, M=8) ===");
+    let mut table = Table::new(&[
+        "p_m", "redundancy", "P(dec) k=3", "P(dec) k=5", "P(dec) k=7", "rank=M?",
+    ]);
+    let mut rng = Pcg32::seeded(5);
+    for pm in [0.2, 0.4, 0.6, 0.8, 1.0] {
+        let code = Code::build(&CodeParams {
+            scheme: Scheme::RandomSparse,
+            n: 15,
+            m: 8,
+            p_m: pm,
+            seed: 6,
+        });
+        table.row(&[
+            format!("{pm:.1}"),
+            format!("{:.1}x", code.redundancy()),
+            format!("{:.2}", random_set_decode_probability(&code, 3, 400, &mut rng)),
+            format!("{:.2}", random_set_decode_probability(&code, 5, 400, &mut rng)),
+            format!("{:.2}", random_set_decode_probability(&code, 7, 400, &mut rng)),
+            (code.c.rank(coded_marl::coding::RANK_TOL) == 8).to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("-> the paper's p_m=0.8 buys near-MDS robustness at ~80% of MDS's compute.\n");
+}
+
+fn ablation_decode_methods() {
+    println!("=== ablation 3: decode method accuracy/time (N=15, M=8, P=58502) ===");
+    let p = 58_502;
+    let mut rng = Pcg32::seeded(9);
+    let mut table = Table::new(&["scheme", "method", "time", "max err"]);
+    for scheme in Scheme::ALL {
+        let code = Code::build(&CodeParams { scheme, n: 15, m: 8, p_m: 0.8, seed: 1 });
+        let decoder = Decoder::new(code.clone());
+        let theta: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec_f32(p, 1.0)).collect();
+        let drop = code.worst_case_tolerance();
+        let received: Vec<usize> = (drop..15).collect();
+        let results: Vec<Vec<f32>> = received
+            .iter()
+            .map(|&j| {
+                let mut y = vec![0.0f32; p];
+                for (i, c) in code.assignments(j) {
+                    for (acc, &t) in y.iter_mut().zip(&theta[i]) {
+                        *acc += c as f32 * t;
+                    }
+                }
+                y
+            })
+            .collect();
+        for method in [DecodeMethod::Peeling, DecodeMethod::Qr, DecodeMethod::NormalEquations] {
+            let t0 = std::time::Instant::now();
+            match decoder.decode(&received, &results, method) {
+                Ok(out) => {
+                    let dt = t0.elapsed();
+                    let mut err = 0.0f32;
+                    for i in 0..8 {
+                        for k in 0..p {
+                            err = err.max((out.theta[i][k] - theta[i][k]).abs());
+                        }
+                    }
+                    table.row(&[
+                        scheme.name().to_string(),
+                        method.name().to_string(),
+                        coded_marl::metrics::table::fmt_duration(dt),
+                        format!("{err:.1e}"),
+                    ]);
+                }
+                Err(_) => {
+                    table.row(&[
+                        scheme.name().to_string(),
+                        method.name().to_string(),
+                        "n/a".into(),
+                        "n/a".into(),
+                    ]);
+                }
+            }
+        }
+    }
+    print!("{}", table.render());
+    println!(
+        "-> the paper's normal-equations decode (Eq. 2) is accurate here but squares the\n\
+           condition number; QR is the safe default and peeling wins where it applies.\n"
+    );
+}
+
+fn ablation_straggler_model() {
+    println!("=== ablation 4: fixed vs exponential straggler delays ===");
+    println!("(coop_nav M=8 N=15, k=2, mean t_s=25ms, mock compute 2ms, {} iters)", common::bench_iters());
+    let spec = RunSpec::synthetic(EnvKind::CoopNav, 8, 0, 64, 32);
+    let mut table = Table::new(&["scheme", "fixed t_s", "exp(t_s)"]);
+    for scheme in [Scheme::Uncoded, Scheme::Mds, Scheme::Ldpc] {
+        let mut cells = vec![scheme.name().to_string()];
+        for exponential in [false, true] {
+            let mut cfg = TrainConfig::new("coop_nav_m8");
+            cfg.backend = Backend::Mock;
+            cfg.scheme = scheme;
+            cfg.n_learners = 15;
+            cfg.iterations = common::bench_iters() + 1;
+            cfg.episodes_per_iter = 1;
+            cfg.episode_len = 25;
+            cfg.warmup_iters = 1;
+            cfg.mock_compute = Duration::from_millis(2);
+            cfg.straggler = StragglerConfig {
+                k: 2,
+                delay: Duration::from_millis(25),
+                exponential,
+            };
+            cfg.seed = 17;
+            let factory = backend_factory(&cfg, common::artifacts_dir(), &spec);
+            let pool = spawn_local(cfg.n_learners, factory).unwrap();
+            let mut ctrl = Controller::new(cfg, spec.clone(), pool).unwrap();
+            ctrl.train().unwrap();
+            let times: Vec<f64> = ctrl
+                .log
+                .records
+                .iter()
+                .filter(|r| r.decode_method != "warmup")
+                .map(|r| r.timing.total.as_secs_f64() * 1e3)
+                .collect();
+            ctrl.shutdown();
+            cells.push(format!("{:.1}ms", times.iter().sum::<f64>() / times.len() as f64));
+        }
+        table.row(&cells);
+    }
+    print!("{}", table.render());
+    println!(
+        "-> under heavy-tail delays the uncoded baseline inherits the tail (its iteration\n\
+           time is the max over straggler draws) while MDS keeps masking them — the coded\n\
+           framework's advantage grows beyond the paper's fixed-delay model."
+    );
+}

@@ -1,0 +1,155 @@
+#![allow(dead_code)]
+
+//! Shared support for the paper-figure benches (fig3/fig4/fig5).
+//!
+//! The timing benches reproduce the paper's experimental protocol
+//! (§V-C) at 1/10 time scale: the same N = 15 learners, the same
+//! straggler counts per environment, and t_s scaled from seconds to
+//! hundreds of milliseconds so a full figure regenerates in minutes.
+//! Learner compute is emulated by the deterministic mock backend with a
+//! per-update duration **calibrated against the real PJRT learner step**
+//! for the same preset (measured at bench startup when artifacts are
+//! present) — the coordination layer under test is identical to the
+//! production path; only the XLA arithmetic inside each learner is
+//! replaced by an equal-duration sleep, which is what a dedicated
+//! remote learner machine looks like from the controller's side
+//! (DESIGN.md §2).
+
+use std::time::Duration;
+
+use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
+use coded_marl::coordinator::{
+    backend_factory, spawn_local, Controller, PjrtBackend, RunSpec,
+};
+use coded_marl::env::EnvKind;
+use coded_marl::marl::buffer::{ReplayBuffer, Transition};
+use coded_marl::marl::AgentParams;
+use coded_marl::rng::Pcg32;
+
+/// Time-scale factor vs the paper (paper seconds → bench centiseconds).
+pub const TIME_SCALE: f64 = 0.1;
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Iterations per (scheme, k) cell; override with CODED_MARL_BENCH_ITERS.
+pub fn bench_iters() -> usize {
+    std::env::var("CODED_MARL_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8)
+}
+
+/// The paper's per-environment straggler settings (§V-C), k values and
+/// t_s — t_s is returned already scaled by [`TIME_SCALE`].
+pub fn paper_straggler_settings(env: EnvKind) -> (Vec<usize>, Duration) {
+    let (ks, ts_s) = match env {
+        EnvKind::CoopNav => (vec![0, 1, 2], 0.25),
+        EnvKind::PredatorPrey => (vec![0, 2, 4], 1.0),
+        EnvKind::Deception => (vec![0, 5, 8], 1.0),
+        EnvKind::KeepAway => (vec![0, 5, 8], 1.5),
+    };
+    (ks, Duration::from_secs_f64(ts_s * TIME_SCALE))
+}
+
+/// Preset name for (env, m) as lowered by python/compile/presets.py.
+pub fn preset_name(env: EnvKind, m: usize) -> String {
+    format!("{}_m{}", env.name(), m)
+}
+
+/// Measure the real PJRT per-agent update duration for a preset: median
+/// of several learner_step executions on a synthetic minibatch. Falls
+/// back to 5 ms when artifacts are missing.
+pub fn calibrate_compute(env: EnvKind, m: usize) -> Duration {
+    if !have_artifacts() {
+        eprintln!("  (no artifacts; assuming 5ms/update)");
+        return Duration::from_millis(5);
+    }
+    let preset = preset_name(env, m);
+    let backend = match PjrtBackend::load(artifacts_dir(), &preset) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("  (calibration failed for {preset}: {e:#}; assuming 5ms)");
+            return Duration::from_millis(5);
+        }
+    };
+    let dims = {
+        use coded_marl::coordinator::LearnerBackend;
+        backend.dims()
+    };
+    let mut rng = Pcg32::seeded(0);
+    let agents: Vec<Vec<f32>> =
+        (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng).to_flat()).collect();
+    let mut buffer = ReplayBuffer::new(64);
+    for _ in 0..8 {
+        buffer.push(Transition {
+            obs: (0..dims.m).map(|_| rng.normal_vec_f32(dims.obs_dim, 1.0)).collect(),
+            act: (0..dims.m).map(|_| rng.normal_vec_f32(dims.act_dim, 0.5)).collect(),
+            rew: rng.normal_vec_f32(dims.m, 1.0),
+            next_obs: (0..dims.m).map(|_| rng.normal_vec_f32(dims.obs_dim, 1.0)).collect(),
+            done: false,
+        });
+    }
+    let mb = buffer.sample(dims.batch, &mut rng);
+    let mut backend = backend;
+    let mut times = Vec::new();
+    for i in 0..5 {
+        use coded_marl::coordinator::LearnerBackend;
+        let t0 = std::time::Instant::now();
+        backend.update_agent(i % dims.m, &agents, &mb).expect("calibration step");
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    times[times.len() / 2]
+}
+
+/// Run one (scheme, k) cell: short training, return the mean wall time
+/// of the non-warmup iterations.
+pub fn run_cell(
+    env: EnvKind,
+    m: usize,
+    k_adv: usize,
+    scheme: coded_marl::coding::Scheme,
+    k_stragglers: usize,
+    t_s: Duration,
+    compute: Duration,
+    seed: u64,
+) -> Duration {
+    let mut cfg = TrainConfig::new(preset_name(env, m));
+    cfg.backend = Backend::Mock;
+    cfg.scheme = scheme;
+    cfg.n_learners = 15;
+    cfg.iterations = bench_iters() + 1; // +1 warmup
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 25;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = compute;
+    cfg.straggler = StragglerConfig::fixed(k_stragglers, t_s);
+    cfg.seed = seed;
+    let spec = RunSpec::synthetic(env, m, k_adv, 64, 32);
+    let factory = backend_factory(&cfg, artifacts_dir(), &spec);
+    let pool = spawn_local(cfg.n_learners, factory).expect("pool");
+    let mut ctrl = Controller::new(cfg, spec, pool).expect("controller");
+    ctrl.train().expect("train");
+    let times: Vec<Duration> = ctrl
+        .log
+        .records
+        .iter()
+        .filter(|r| r.decode_method != "warmup")
+        .map(|r| r.timing.total)
+        .collect();
+    ctrl.shutdown();
+    let sum: Duration = times.iter().sum();
+    sum / times.len().max(1) as u32
+}
+
+/// Adversary count per env in the paper's Figs. 4-5 setup (K = 4 in the
+/// competitive environments, §V-B).
+pub fn k_adversaries(env: EnvKind) -> usize {
+    if env == EnvKind::CoopNav { 0 } else { 4 }
+}

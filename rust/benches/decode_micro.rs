@@ -1,0 +1,123 @@
+//! Decode microbenchmark — the controller-side hot path of the coded
+//! framework (Eq. (2)) and the paper's §III-C4 complexity claim: the
+//! LDPC/replication peeling decoder is O(M·d̄) per parameter while the
+//! least-squares paths are O(M³ + M²).
+//!
+//! Sweeps scheme × decode method × parameter length P and prints
+//! ns/parameter so the crossover structure is visible. Also times the
+//! learner-side encode (y_j accumulation).
+//!
+//!     cargo bench --bench decode_micro
+
+use std::time::{Duration, Instant};
+
+use coded_marl::coding::decoder::{DecodeMethod, Decoder};
+use coded_marl::coding::{Code, CodeParams, Scheme};
+use coded_marl::metrics::table::{fmt_duration, Table};
+use coded_marl::rng::Pcg32;
+
+fn encode(code: &Code, theta: &[Vec<f32>], rows: &[usize]) -> Vec<Vec<f32>> {
+    rows.iter()
+        .map(|&j| {
+            let mut y = vec![0.0f32; theta[0].len()];
+            for (i, c) in code.assignments(j) {
+                for (acc, &t) in y.iter_mut().zip(theta[i].iter()) {
+                    *acc += c as f32 * t;
+                }
+            }
+            y
+        })
+        .collect()
+}
+
+/// Median-of-k timing.
+fn time_median<F: FnMut()>(mut f: F, reps: usize) -> Duration {
+    let mut times: Vec<Duration> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort();
+    times[times.len() / 2]
+}
+
+fn main() {
+    let n = 15;
+    println!("=== decode microbench: N={n}, erasures = worst-case tolerance ===");
+    // P values spanning quickstart (≈23k) to coop_nav_m10 (≈86k)
+    let ps = [1_000usize, 10_000, 58_502, 100_000];
+    for m in [8usize, 10] {
+        println!("\n--- M = {m} ---");
+        let mut table = Table::new(&[
+            "scheme", "method", "P", "decode", "ns/param", "erasures",
+        ]);
+        for scheme in Scheme::ALL {
+            let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: 1 });
+            let decoder = Decoder::new(code.clone());
+            let drop = code.worst_case_tolerance();
+            let received: Vec<usize> = (drop..n).collect();
+            for &p in &ps {
+                let mut rng = Pcg32::seeded(7);
+                let theta: Vec<Vec<f32>> = (0..m).map(|_| rng.normal_vec_f32(p, 1.0)).collect();
+                let results = encode(&code, &theta, &received);
+                for method in [DecodeMethod::Auto, DecodeMethod::Qr] {
+                    // skip redundant rows: Auto == Qr for dense schemes
+                    if method == DecodeMethod::Qr
+                        && matches!(scheme, Scheme::Mds | Scheme::RandomSparse)
+                    {
+                        continue;
+                    }
+                    let dt = time_median(
+                        || {
+                            let out = decoder.decode(&received, &results, method).unwrap();
+                            std::hint::black_box(&out.theta);
+                        },
+                        5,
+                    );
+                    let label = decoder.decode(&received, &results, method).unwrap().method;
+                    table.row(&[
+                        scheme.name().to_string(),
+                        label.to_string(),
+                        p.to_string(),
+                        fmt_duration(dt),
+                        format!("{:.1}", dt.as_nanos() as f64 / (p as f64 * m as f64)),
+                        drop.to_string(),
+                    ]);
+                }
+            }
+        }
+        print!("{}", table.render());
+    }
+
+    println!("\n=== encode microbench (learner-side y_j accumulation) ===");
+    let mut table = Table::new(&["scheme", "P", "encode one row", "rows/learner"]);
+    for scheme in Scheme::ALL {
+        let code = Code::build(&CodeParams { scheme, n, m: 8, p_m: 0.8, seed: 1 });
+        let p = 58_502; // coop_nav_m8 agent vector
+        let mut rng = Pcg32::seeded(3);
+        let theta: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec_f32(p, 1.0)).collect();
+        // densest row = worst case
+        let j_dense = (0..n).max_by_key(|&j| code.workload(j)).unwrap();
+        let dt = time_median(
+            || {
+                let y = encode(&code, &theta, &[j_dense]);
+                std::hint::black_box(&y);
+            },
+            5,
+        );
+        table.row(&[
+            scheme.name().to_string(),
+            p.to_string(),
+            fmt_duration(dt),
+            code.workload(j_dense).to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nExpected: peeling is ~M× cheaper than QR per parameter and its gap widens with M;\n\
+         QR cost per parameter is flat in P (back-substitution dominates) while peeling's\n\
+         ns/param approaches a pure memcpy."
+    );
+}

@@ -1,0 +1,169 @@
+//! Minimal command-line parsing.
+//!
+//! Substrate module (`clap` is unavailable offline): supports the
+//! `subcommand --flag value --switch` shape the binary, examples and
+//! benches need, with typed lookups and unknown-flag detection left to
+//! the caller via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed `--key value` options and bare `--switch` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments (anything not starting with `--`).
+    pub positional: Vec<String>,
+    /// Keys the caller has looked up (for unknown-flag reporting).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+/// Flags that take no value. Needed to disambiguate `--verbose --seed 3`
+/// (is `--verbose`'s value `--seed`?): any flag listed here is parsed as
+/// a switch; everything else expects a value.
+const SWITCHES: &[&str] =
+    &["verbose", "straggler-exponential", "adaptive", "help", "quick", "json"];
+
+impl Args {
+    /// Parse an argv iterator (not including the program name).
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let argv: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                // `--key=value` form
+                if let Some((k, v)) = key.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                    i += 1;
+                    continue;
+                }
+                if SWITCHES.contains(&key) {
+                    args.flags.push(key.to_string());
+                    i += 1;
+                    continue;
+                }
+                let Some(value) = argv.get(i + 1) else {
+                    bail!("flag --{key} expects a value");
+                };
+                if value.starts_with("--") {
+                    bail!("flag --{key} expects a value, got '{value}'");
+                }
+                args.opts.insert(key.to_string(), value.clone());
+                i += 2;
+            } else {
+                args.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments after the subcommand.
+    pub fn from_env(skip: usize) -> Result<Args> {
+        Self::parse(std::env::args().skip(skip))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn required(&self, key: &str) -> Result<String> {
+        match self.opt(key) {
+            Some(v) => Ok(v.to_string()),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Typed option with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}: cannot parse '{v}': {e}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Error if any provided flag was never looked up — catches typos
+    /// like `--scheem mds` that would otherwise be ignored silently.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn opts_flags_positional() {
+        let a = parse(&["train", "--preset", "coop_nav_m8", "--verbose", "--seed", "3"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.opt("preset"), Some("coop_nav_m8"));
+        assert_eq!(a.opt("seed"), Some("3"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quick"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--preset=x", "--seed=42"]);
+        assert_eq!(a.opt("preset"), Some("x"));
+        assert_eq!(a.get_or("seed", 0u64).unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(["--seed"].iter().map(|s| s.to_string())).is_err());
+        assert!(Args::parse(["--seed", "--verbose"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn required_and_typed() {
+        let a = parse(&["--n", "7"]);
+        assert_eq!(a.required("n").unwrap(), "7");
+        assert!(a.required("m").is_err());
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 7);
+        assert_eq!(a.get_or("absent", 5usize).unwrap(), 5);
+        let bad = parse(&["--n", "x"]);
+        assert!(bad.get_or("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn finish_catches_typos() {
+        let a = parse(&["--scheem", "mds"]);
+        let _ = a.opt("scheme");
+        assert!(a.finish().is_err());
+    }
+}

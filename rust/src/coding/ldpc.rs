@@ -1,0 +1,243 @@
+//! Regular LDPC assignment matrices (paper §III-C4).
+//!
+//! Construction pipeline:
+//!  1. `A` — w×w cyclic permutation matrix, `w` prime with `w | N`
+//!     (paper's condition). When no such prime exists we fall back to a
+//!     column-regular random parity matrix (documented deviation,
+//!     DESIGN.md §7.3).
+//!  2. `H_base` — array-LDPC parity-check built from blocks
+//!     `A^{r·c}` (block-row r, block-col c); the paper's displayed `H`
+//!     is this matrix up to its typos.
+//!  3. Take the first `N − M` rows, systematize over GF(2) into
+//!     `[P | I_{N−M}]` with a column permutation.
+//!  4. The assignment matrix is the systematic generator
+//!     `G = [I_M ; P]` mapped back through the permutation, so
+//!     `H · C = 0` over F2 and `rank_R(C) = M`.
+//!
+//! Decoding: the systematic rows give `θ_i` directly; each parity row
+//! is a plain (real-valued) sum of its support, so erasures peel off in
+//! O(M · davg) — the paper's O(M) claim. See [`super::decoder`].
+
+use crate::linalg::gf2::Gf2Mat;
+use crate::linalg::Mat;
+use crate::rng::Pcg32;
+
+/// Largest prime `w` with `1 < w < n` and `n % w == 0`, if any.
+pub fn pick_w(n: usize) -> Option<usize> {
+    fn is_prime(x: usize) -> bool {
+        if x < 2 {
+            return false;
+        }
+        let mut d = 2;
+        while d * d <= x {
+            if x % d == 0 {
+                return false;
+            }
+            d += 1;
+        }
+        true
+    }
+    (2..n).rev().find(|&w| n % w == 0 && is_prime(w))
+}
+
+/// The paper's array-LDPC parity-check base matrix: block grid of
+/// `A^{r·c}` with enough block-rows to cover `rows_needed` rows.
+pub fn array_parity_base(n: usize, w: usize, rows_needed: usize) -> Gf2Mat {
+    assert_eq!(n % w, 0);
+    let block_cols = n / w;
+    let block_rows = rows_needed.div_ceil(w).max(1);
+    let a = Gf2Mat::cyclic_permutation(w);
+    let mut rows: Vec<Gf2Mat> = Vec::with_capacity(block_rows);
+    for r in 0..block_rows {
+        let blocks: Vec<Gf2Mat> = (0..block_cols).map(|c| a.pow((r * c) % w)).collect();
+        let refs: Vec<&Gf2Mat> = blocks.iter().collect();
+        rows.push(Gf2Mat::hstack(&refs));
+    }
+    let refs: Vec<&Gf2Mat> = rows.iter().collect();
+    Gf2Mat::vstack(&refs)
+}
+
+/// Fallback parity matrix: column-regular (degree 3) random GF(2)
+/// matrix with full row rank. Used when `n` has no prime divisor `< n`
+/// (e.g. `n` prime) or when systematization of the array matrix fails.
+fn random_regular_parity(rows: usize, n: usize, rng: &mut Pcg32) -> Gf2Mat {
+    let max_degree = 3.min(rows);
+    for _ in 0..200 {
+        let mut h = Gf2Mat::zeros(rows, n);
+        for col in 0..n {
+            // Column weight varies in 1..=max_degree: with a constant
+            // weight and very few rows all columns coincide and the
+            // matrix can never reach full row rank.
+            let degree = 1 + rng.below(max_degree as u32) as usize;
+            for r in rng.choose_k(rows, degree) {
+                h.set(r, col, 1);
+            }
+        }
+        if h.rank() == rows {
+            return h;
+        }
+    }
+    panic!("random_regular_parity: no full-rank draw in 200 attempts ({rows}x{n})");
+}
+
+/// Build the N×M LDPC assignment matrix.
+pub fn ldpc_assignment(n: usize, m: usize, rng: &mut Pcg32) -> Mat {
+    assert!(n >= m);
+    let r = n - m; // parity rows
+    if r == 0 {
+        // No redundancy possible: degenerate to identity.
+        return Mat::identity(m);
+    }
+    // Try the paper's array construction first, fall back to random
+    // regular parity.
+    let sys = pick_w(n)
+        .map(|w| array_parity_base(n, w, r).take_rows(r))
+        .and_then(|h| h.systematize())
+        .unwrap_or_else(|| {
+            random_regular_parity(r, n, rng)
+                .systematize()
+                .expect("random parity systematization")
+        });
+    let (h_sys, perm) = sys;
+    // h_sys = [P | I_r] in permuted coordinates; codewords x satisfy
+    // P x_sys + x_par = 0  →  x_par = P x_sys (over F2).
+    // Generator (permuted coords): G = [I_m ; P]  (n × m).
+    let mut g = Gf2Mat::zeros(n, m);
+    for i in 0..m {
+        g.set(i, i, 1);
+    }
+    for row in 0..r {
+        for i in 0..m {
+            g.set(m + row, i, h_sys.get(row, i));
+        }
+    }
+    // Map back through the column permutation: position pos in the
+    // permuted codeword is learner perm[pos].
+    let mut c = Mat::zeros(n, m);
+    for pos in 0..n {
+        let learner = perm[pos];
+        for i in 0..m {
+            c[(learner, i)] = g.get(pos, i) as f64;
+        }
+    }
+    // Systematization can leave a parity row with an all-zero P part
+    // (a check touching only parity positions). The paper's framework
+    // requires ≥1 nonzero per row (§III-B) — give such learners a
+    // round-robin replica instead of idling them. Rank is unaffected
+    // (the systematic rows already span R^M).
+    for j in 0..n {
+        if c.row(j).iter().all(|&v| v == 0.0) {
+            c[(j, j % m)] = 1.0;
+        }
+    }
+    c
+}
+
+/// The systematic structure the peeling decoder needs, reconstructed
+/// from any binary assignment matrix: which learners carry a single
+/// agent (systematic) and each row's support.
+#[derive(Clone, Debug)]
+pub struct BinaryStructure {
+    /// For each learner row: the agent indices with coefficient 1.
+    pub support: Vec<Vec<usize>>,
+}
+
+impl BinaryStructure {
+    /// Extract from a 0/1 matrix. Returns None if any entry is not 0/1
+    /// (peeling then falls back to least squares).
+    pub fn from_matrix(c: &Mat) -> Option<BinaryStructure> {
+        let mut support = Vec::with_capacity(c.rows);
+        for j in 0..c.rows {
+            let mut s = Vec::new();
+            for i in 0..c.cols {
+                let v = c[(j, i)];
+                if v == 1.0 {
+                    s.push(i);
+                } else if v != 0.0 {
+                    return None;
+                }
+            }
+            support.push(s);
+        }
+        Some(BinaryStructure { support })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::RANK_TOL;
+
+    #[test]
+    fn pick_w_matches_paper_config() {
+        assert_eq!(pick_w(15), Some(5));
+        assert_eq!(pick_w(10), Some(5));
+        assert_eq!(pick_w(6), Some(3));
+        assert_eq!(pick_w(13), None); // prime N -> no proper prime divisor
+        assert_eq!(pick_w(4), Some(2));
+    }
+
+    #[test]
+    fn array_parity_shapes_and_regularity() {
+        let h = array_parity_base(15, 5, 7);
+        assert_eq!(h.cols, 15);
+        assert_eq!(h.rows, 10); // ceil(7/5)=2 block rows × w=5
+        // block-row 0 is [I I I] -> each column has exactly one 1 per block row
+        for col in 0..15 {
+            let ones: usize = (0..h.rows).map(|r| h.get(r, col) as usize).sum();
+            assert_eq!(ones, 2, "col {col} should have one 1 per block-row");
+        }
+    }
+
+    #[test]
+    fn assignment_has_rank_m_and_parity_consistency() {
+        let mut rng = Pcg32::seeded(0);
+        for (n, m) in [(15, 8), (15, 10), (10, 6), (12, 7), (13, 9)] {
+            let c = ldpc_assignment(n, m, &mut rng);
+            assert_eq!((c.rows, c.cols), (n, m));
+            assert_eq!(c.rank(RANK_TOL), m, "n={n} m={m}");
+            // binary entries only
+            assert!(c.data.iter().all(|&v| v == 0.0 || v == 1.0));
+            // every row nonzero (each learner does some work)
+            for j in 0..n {
+                assert!(c.row(j).iter().any(|&v| v != 0.0), "row {j} empty");
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_contains_systematic_rows() {
+        let mut rng = Pcg32::seeded(1);
+        let c = ldpc_assignment(15, 8, &mut rng);
+        // every agent must appear as a singleton row somewhere (the
+        // systematic part, possibly permuted)
+        for agent in 0..8 {
+            let found = (0..15).any(|j| {
+                let row = c.row(j);
+                row[agent] == 1.0 && row.iter().filter(|&&v| v != 0.0).count() == 1
+            });
+            assert!(found, "agent {agent} has no systematic learner");
+        }
+    }
+
+    #[test]
+    fn n_equals_m_degenerates_to_identity() {
+        let mut rng = Pcg32::seeded(2);
+        let c = ldpc_assignment(8, 8, &mut rng);
+        assert!(c.max_abs_diff(&Mat::identity(8)) < 1e-15);
+    }
+
+    #[test]
+    fn binary_structure_extraction() {
+        let mut rng = Pcg32::seeded(3);
+        let c = ldpc_assignment(15, 8, &mut rng);
+        let s = BinaryStructure::from_matrix(&c).expect("binary");
+        assert_eq!(s.support.len(), 15);
+        for (j, sup) in s.support.iter().enumerate() {
+            assert_eq!(sup.len(), c.row(j).iter().filter(|&&v| v != 0.0).count());
+        }
+        // non-binary matrix is rejected
+        let mds = crate::coding::schemes::mds_vandermonde(5, 3);
+        assert!(BinaryStructure::from_matrix(&mds).is_none());
+    }
+}

@@ -1,0 +1,372 @@
+//! Coded agent-to-learner assignment (paper §III).
+//!
+//! The central object is the assignment matrix `C ∈ R^{N×M}` (N
+//! learners, M agents): learner `j` updates agent `i` iff `c_{j,i} ≠ 0`
+//! and returns the coded result `y_j = Σ_i c_{j,i} θ'_i`. The
+//! controller recovers all `θ'_i` from any received subset `I` with
+//! `rank(C_I) = M` via least squares (Eq. (2)).
+//!
+//! Five schemes (paper §III-C):
+//! * [`Scheme::Uncoded`]      — identity; no redundancy, baseline
+//! * [`Scheme::Replication`]  — round-robin replication
+//! * [`Scheme::Mds`]          — Vandermonde MDS: any M rows decode
+//! * [`Scheme::RandomSparse`] — Bernoulli(p_m) × N(0,1) entries
+//! * [`Scheme::Ldpc`]         — regular array-LDPC, O(M) peeling decode
+//!
+//! Submodules: [`schemes`] (constructions), [`ldpc`] (parity-check
+//! machinery), [`decoder`] (recovery paths: QR, normal equations,
+//! peeling).
+
+pub mod decoder;
+pub mod ldpc;
+pub mod schemes;
+
+use crate::linalg::Mat;
+use crate::rng::Pcg32;
+
+/// Rank tolerance used for decodability tests on `C_I`.
+pub const RANK_TOL: f64 = 1e-9;
+
+/// Which coding scheme constructs the assignment matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Identity assignment: learner `i` ← agent `i`, learners `M..N`
+    /// idle. The paper's uncoded baseline.
+    Uncoded,
+    /// Round-robin replication: agent `j mod M` ← learner `j`.
+    Replication,
+    /// Vandermonde MDS over distinct positive nodes; tolerates any
+    /// `N − M` stragglers.
+    Mds,
+    /// Random sparse code with inclusion probability `p_m` (paper uses
+    /// `p_m = 0.8`).
+    RandomSparse,
+    /// Regular LDPC (array construction) systematized over GF(2);
+    /// decodes in O(M) by iterative peeling.
+    Ldpc,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 5] = [
+        Scheme::Uncoded,
+        Scheme::Replication,
+        Scheme::Mds,
+        Scheme::RandomSparse,
+        Scheme::Ldpc,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Uncoded => "uncoded",
+            Scheme::Replication => "replication",
+            Scheme::Mds => "mds",
+            Scheme::RandomSparse => "random_sparse",
+            Scheme::Ldpc => "ldpc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        Self::ALL.iter().copied().find(|x| x.name() == s)
+    }
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A constructed code: the assignment matrix plus scheme metadata.
+#[derive(Clone, Debug)]
+pub struct Code {
+    pub scheme: Scheme,
+    /// N learners (rows).
+    pub n: usize,
+    /// M agents (columns).
+    pub m: usize,
+    /// The assignment matrix `C` (N×M).
+    pub c: Mat,
+    /// `p_m` used (random sparse only; recorded for reporting).
+    pub p_m: Option<f64>,
+}
+
+/// Construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CodeParams {
+    pub scheme: Scheme,
+    pub n: usize,
+    pub m: usize,
+    /// Inclusion probability for [`Scheme::RandomSparse`] (paper: 0.8).
+    pub p_m: f64,
+    /// Seed for randomized constructions.
+    pub seed: u64,
+}
+
+impl CodeParams {
+    pub fn new(scheme: Scheme, n: usize, m: usize) -> Self {
+        CodeParams { scheme, n, m, p_m: 0.8, seed: 0 }
+    }
+}
+
+impl Code {
+    /// Build the assignment matrix for the given parameters.
+    ///
+    /// Panics if `n < m` (the framework requires at least as many
+    /// learners as agents, paper §III-A).
+    pub fn build(params: &CodeParams) -> Code {
+        assert!(params.n >= params.m, "need N >= M (got N={}, M={})", params.n, params.m);
+        assert!(params.m >= 1);
+        let mut rng = Pcg32::new(params.seed, 0xC0DE);
+        let c = match params.scheme {
+            Scheme::Uncoded => schemes::uncoded(params.n, params.m),
+            Scheme::Replication => schemes::replication(params.n, params.m),
+            Scheme::Mds => schemes::mds_dense_gaussian(params.n, params.m, &mut rng),
+            Scheme::RandomSparse => schemes::random_sparse(params.n, params.m, params.p_m, &mut rng),
+            Scheme::Ldpc => ldpc::ldpc_assignment(params.n, params.m, &mut rng),
+        };
+        debug_assert_eq!((c.rows, c.cols), (params.n, params.m));
+        Code {
+            scheme: params.scheme,
+            n: params.n,
+            m: params.m,
+            c,
+            p_m: (params.scheme == Scheme::RandomSparse).then_some(params.p_m),
+        }
+    }
+
+    /// Agents assigned to learner `j`: `(agent, coefficient)` pairs for
+    /// every nonzero entry in row `j`.
+    pub fn assignments(&self, j: usize) -> Vec<(usize, f64)> {
+        self.c
+            .row(j)
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i, v))
+            .collect()
+    }
+
+    /// Number of agent updates learner `j` must compute (its workload).
+    pub fn workload(&self, j: usize) -> usize {
+        self.c.row(j).iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Total computational redundancy: sum of all workloads / M
+    /// (1.0 = centralized-equivalent work, MDS = N).
+    pub fn redundancy(&self) -> f64 {
+        let total: usize = (0..self.n).map(|j| self.workload(j)).sum();
+        total as f64 / self.m as f64
+    }
+
+    /// Can `θ'` be recovered from results of exactly these learners?
+    pub fn decodable(&self, received: &[usize]) -> bool {
+        if received.len() < self.m {
+            return false;
+        }
+        // Rank check even for MDS: the property is almost-sure for the
+        // Gaussian construction and the matrices are tiny (≤ N×M).
+        self.c.select_rows(received).rank(RANK_TOL) == self.m
+    }
+
+    /// Largest `k` such that ANY `k` stragglers leave the code
+    /// decodable. Brute force over straggler subsets — fine for the
+    /// paper's N = 15 scale; intended for tests/benches, not the hot
+    /// path.
+    pub fn worst_case_tolerance(&self) -> usize {
+        let mut best = 0;
+        for k in 1..=(self.n - self.m) {
+            let mut all_ok = true;
+            for_each_combination(self.n, k, &mut |stragglers| {
+                if all_ok {
+                    let received: Vec<usize> =
+                        (0..self.n).filter(|j| !stragglers.contains(j)).collect();
+                    all_ok &= self.decodable(&received);
+                }
+            });
+            if all_ok {
+                best = k;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+}
+
+/// Visit every k-subset of 0..n (lexicographic order).
+pub fn for_each_combination(n: usize, k: usize, f: &mut impl FnMut(&[usize])) {
+    fn rec(start: usize, n: usize, k: usize, cur: &mut Vec<usize>, f: &mut impl FnMut(&[usize])) {
+        if cur.len() == k {
+            f(cur);
+            return;
+        }
+        // prune: not enough remaining elements
+        let need = k - cur.len();
+        for i in start..=(n - need) {
+            cur.push(i);
+            rec(i + 1, n, k, cur, f);
+            cur.pop();
+        }
+    }
+    if k == 0 {
+        f(&[]);
+        return;
+    }
+    if k > n {
+        return;
+    }
+    rec(0, n, k, &mut Vec::with_capacity(k), f);
+}
+
+/// Straggler tolerance if stragglers were chosen adversarially vs the
+/// average over uniformly random straggler sets of size k — used by the
+/// ablation bench to characterize each scheme's robustness profile.
+pub fn random_set_decode_probability(code: &Code, k: usize, trials: usize, rng: &mut Pcg32) -> f64 {
+    if k > code.n {
+        return 0.0;
+    }
+    let mut ok = 0usize;
+    for _ in 0..trials {
+        let stragglers = rng.choose_k(code.n, k);
+        let received: Vec<usize> =
+            (0..code.n).filter(|j| !stragglers.contains(j)).collect();
+        if code.decodable(&received) {
+            ok += 1;
+        }
+    }
+    ok as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build(scheme: Scheme, n: usize, m: usize) -> Code {
+        Code::build(&CodeParams::new(scheme, n, m))
+    }
+
+    #[test]
+    fn all_schemes_have_rank_m() {
+        for scheme in Scheme::ALL {
+            for (n, m) in [(15, 8), (15, 10), (5, 3), (8, 8)] {
+                let code = build(scheme, n, m);
+                assert_eq!(
+                    code.c.rank(RANK_TOL),
+                    m,
+                    "scheme={scheme} n={n} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_rows_nonzero_except_uncoded() {
+        for scheme in [Scheme::Replication, Scheme::Mds, Scheme::Ldpc] {
+            let code = build(scheme, 15, 8);
+            for j in 0..15 {
+                assert!(code.workload(j) > 0, "scheme={scheme} row {j} empty");
+            }
+        }
+    }
+
+    #[test]
+    fn uncoded_uses_exactly_m_learners() {
+        let code = build(Scheme::Uncoded, 15, 8);
+        let active = (0..15).filter(|&j| code.workload(j) > 0).count();
+        assert_eq!(active, 8);
+        assert_eq!(code.redundancy(), 1.0);
+        assert_eq!(code.worst_case_tolerance(), 0);
+    }
+
+    #[test]
+    fn mds_tolerates_any_n_minus_m() {
+        let code = build(Scheme::Mds, 12, 8);
+        assert_eq!(code.worst_case_tolerance(), 4);
+        assert!((code.redundancy() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replication_tolerance_matches_min_replicas() {
+        let code = build(Scheme::Replication, 15, 8);
+        // agents 0..7 get learners j with j mod 8 == agent; N=15 →
+        // agent 0..6 twice, agent 7 once → tolerance = 0 (losing the
+        // single learner of agent 7 kills it).
+        assert_eq!(code.worst_case_tolerance(), 0);
+        let code = build(Scheme::Replication, 16, 8);
+        assert_eq!(code.worst_case_tolerance(), 1);
+    }
+
+    #[test]
+    fn decodable_requires_m_results() {
+        let code = build(Scheme::Mds, 15, 8);
+        assert!(!code.decodable(&[0, 1, 2]));
+        assert!(code.decodable(&(0..8).collect::<Vec<_>>()));
+        assert!(code.decodable(&(7..15).collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn tolerance_known_values() {
+        // MDS: any N−M stragglers; uncoded: none.
+        assert_eq!(build(Scheme::Mds, 10, 6).worst_case_tolerance(), 4);
+        assert_eq!(build(Scheme::Uncoded, 10, 6).worst_case_tolerance(), 0);
+        // N == M leaves no redundancy for any scheme.
+        for scheme in Scheme::ALL {
+            assert_eq!(build(scheme, 6, 6).worst_case_tolerance(), 0, "{scheme}");
+        }
+    }
+
+    #[test]
+    fn random_decode_probability_monotone_in_k() {
+        let code = build(Scheme::Ldpc, 15, 8);
+        let mut rng = Pcg32::seeded(0);
+        let p1 = random_set_decode_probability(&code, 1, 200, &mut rng);
+        let p5 = random_set_decode_probability(&code, 5, 200, &mut rng);
+        let p7 = random_set_decode_probability(&code, 7, 200, &mut rng);
+        assert!(p1 >= p5 && p5 >= p7, "p1={p1} p5={p5} p7={p7}");
+        assert!(p1 > 0.5);
+    }
+
+    #[test]
+    fn for_each_combination_counts() {
+        let mut count = 0usize;
+        for_each_combination(15, 8, &mut |_| count += 1);
+        assert_eq!(count, 6435);
+        let mut seen = Vec::new();
+        for_each_combination(4, 2, &mut |c| seen.push(c.to_vec()));
+        assert_eq!(seen, vec![
+            vec![0, 1], vec![0, 2], vec![0, 3],
+            vec![1, 2], vec![1, 3], vec![2, 3],
+        ]);
+        let mut empty_called = false;
+        for_each_combination(3, 0, &mut |c| {
+            assert!(c.is_empty());
+            empty_called = true;
+        });
+        assert!(empty_called);
+    }
+
+    #[test]
+    fn assignments_match_matrix() {
+        let code = build(Scheme::Replication, 15, 8);
+        for j in 0..15 {
+            for (i, v) in code.assignments(j) {
+                assert_eq!(code.c[(j, i)], v);
+                assert!(v != 0.0);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "need N >= M")]
+    fn n_less_than_m_panics() {
+        build(Scheme::Mds, 4, 8);
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::parse("nope"), None);
+    }
+}

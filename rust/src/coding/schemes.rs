@@ -1,0 +1,295 @@
+//! Assignment-matrix constructions (paper §III-C, schemes 1–3).
+//!
+//! The LDPC construction lives in [`super::ldpc`].
+
+use crate::linalg::Mat;
+use crate::rng::Pcg32;
+
+/// §III-A: uncoded baseline. Learner `j < M` updates agent `j`;
+/// learners `M..N` are idle (zero rows). Only M of the N learners do
+/// work, and every one of those M is a single point of failure.
+pub fn uncoded(n: usize, m: usize) -> Mat {
+    Mat::from_fn(n, m, |j, i| if j == i { 1.0 } else { 0.0 })
+}
+
+/// §III-C1: replication-based code. Agents are assigned round-robin:
+/// learner `j` updates agent `j mod M` (the paper states this with
+/// 1-indexed arithmetic; this is the same map 0-indexed). Every agent
+/// is covered by at least ⌊N/M⌋ learners.
+pub fn replication(n: usize, m: usize) -> Mat {
+    Mat::from_fn(n, m, |j, i| if j % m == i { 1.0 } else { 0.0 })
+}
+
+/// Vandermonde evaluation nodes for the (ablation-only) Vandermonde
+/// MDS construction.
+///
+/// The paper allows "any non-zero real number"; numerically that is
+/// far too permissive. Two constraints drive the choice:
+///
+/// 1. *Any-M-rows full rank* for the rectangular Vandermonde
+///    `V[j,i] = α_i^j, j = 0..N-1` requires the submatrix for an
+///    arbitrary row subset (a *generalized* Vandermonde) to be
+///    nonsingular — guaranteed when the nodes are **distinct and
+///    positive** (total positivity / Schur-polynomial positivity).
+///    Symmetric ±nodes break this: rows {0, 2} over nodes {−a, a} are
+///    linearly dependent.
+/// 2. *Conditioning*: the paper's α_i = 1..M gives entries up to
+///    M^(N−1) (≈ 1e14 for M=10, N=15) and a numerically singular
+///    `C_I`. Clustering the nodes around 1 keeps all powers O(1) —
+///    but clustered nodes make the *columns* nearly dependent instead;
+///    real Vandermonde conditioning is exponential in M either way,
+///    which is exactly why `Scheme::Mds` uses the Gaussian form.
+///
+/// We use M distinct nodes evenly spaced in [0.8, 1.25].
+pub fn mds_nodes(m: usize) -> Vec<f64> {
+    if m == 1 {
+        return vec![1.0];
+    }
+    (0..m)
+        .map(|i| 0.8 + 0.45 * (i as f64) / ((m - 1) as f64))
+        .collect()
+}
+
+/// §III-C2: MDS code. Every entry is nonzero, so every learner
+/// computes updates for **all** M agents — maximal redundancy, maximal
+/// straggler tolerance (any N−M).
+///
+/// We use a **dense Gaussian** matrix rather than the paper's
+/// suggested Vandermonde ("by using, *e.g.*, a Vandermonde matrix"):
+/// iid N(0,1) entries give any-M-rows full rank almost surely with
+/// *moderate* condition numbers, whereas every real Vandermonde is
+/// exponentially ill-conditioned in M — at the paper's N=15, M=10 the
+/// decode error from f32 learner outputs exceeds the parameters
+/// themselves (demonstrated by `vandermonde_mds_is_numerically_unusable`
+/// below and the `ablation_codes` bench; DESIGN.md §7.2). Zero entries
+/// (probability 0) are redrawn so the density claim of §V holds
+/// exactly; rank M is verified at construction.
+pub fn mds_dense_gaussian(n: usize, m: usize, rng: &mut Pcg32) -> Mat {
+    for _attempt in 0..100 {
+        let c = Mat::from_fn(n, m, |_, _| loop {
+            let v = rng.normal();
+            if v != 0.0 {
+                break v;
+            }
+        });
+        if c.rank(super::RANK_TOL) == m {
+            return c;
+        }
+    }
+    unreachable!("dense Gaussian matrix rank-deficient 100 times in a row");
+}
+
+/// The paper's literal Vandermonde MDS construction — kept for the
+/// conditioning ablation (see [`mds_dense_gaussian`]), NOT used by
+/// [`crate::coding::Scheme::Mds`].
+pub fn mds_vandermonde(n: usize, m: usize) -> Mat {
+    let nodes = mds_nodes(m);
+    let mut c = Mat::zeros(n, m);
+    for i in 0..m {
+        let mut p = 1.0;
+        for j in 0..n {
+            c[(j, i)] = p;
+            p *= nodes[i];
+        }
+    }
+    c
+}
+
+/// §III-C3: random sparse code. Entry `(j,i)` is N(0,1) with
+/// probability `p_m`, else 0. The paper's only stated requirement on
+/// `C` is `rank(C) = M` with no all-zero rows *implied* by "one or more
+/// non-zero entries in each row" (§III-B); we therefore redraw until
+/// the realized matrix satisfies both. With p_m = 0.8 a redraw is rare.
+pub fn random_sparse(n: usize, m: usize, p_m: f64, rng: &mut Pcg32) -> Mat {
+    assert!((0.0..=1.0).contains(&p_m), "p_m must be in [0,1]");
+    assert!(p_m > 0.0, "p_m = 0 yields a zero matrix");
+    for _attempt in 0..1000 {
+        let c = Mat::from_fn(n, m, |_, _| {
+            if rng.bernoulli(p_m) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let rows_ok = (0..n).all(|j| c.row(j).iter().any(|&v| v != 0.0));
+        if rows_ok && c.rank(super::RANK_TOL) == m {
+            return c;
+        }
+    }
+    panic!("random_sparse: failed to draw a rank-{m} matrix in 1000 attempts (p_m={p_m})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::RANK_TOL;
+    use crate::testkit::forall;
+
+    #[test]
+    fn uncoded_is_padded_identity() {
+        let c = uncoded(6, 4);
+        for j in 0..6 {
+            for i in 0..4 {
+                assert_eq!(c[(j, i)], if j == i { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn replication_round_robin_counts() {
+        let c = replication(15, 8);
+        // agents 0..6 appear twice (j and j+8), agent 7 once
+        for i in 0..8 {
+            let count = (0..15).filter(|&j| c[(j, i)] == 1.0).count();
+            assert_eq!(count, if i < 7 { 2 } else { 1 }, "agent {i}");
+        }
+        // each learner handles exactly one agent
+        for j in 0..15 {
+            assert_eq!(c.row(j).iter().filter(|&&v| v != 0.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn mds_nodes_distinct_positive() {
+        for m in 1..=16 {
+            let nodes = mds_nodes(m);
+            assert_eq!(nodes.len(), m);
+            assert!(nodes.iter().all(|&a| a > 0.0));
+            for i in 0..m {
+                for j in (i + 1)..m {
+                    assert!((nodes[i] - nodes[j]).abs() > 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mds_every_entry_nonzero() {
+        let mut rng = Pcg32::seeded(0);
+        let c = mds_dense_gaussian(15, 10, &mut rng);
+        assert!(c.data.iter().all(|&v| v != 0.0));
+    }
+
+    /// The MDS property itself: EVERY M-subset of rows is full rank.
+    /// Exhaustive for the paper's exact configuration (N=15, M=8 →
+    /// 6435 subsets).
+    #[test]
+    fn mds_any_m_rows_full_rank_exhaustive_m8() {
+        let (n, m) = (15usize, 8usize);
+        let mut rng = Pcg32::seeded(1);
+        let c = mds_dense_gaussian(n, m, &mut rng);
+        let mut idx: Vec<usize> = (0..m).collect();
+        let mut checked = 0usize;
+        loop {
+            assert_eq!(
+                c.select_rows(&idx).rank(RANK_TOL),
+                m,
+                "singular subset {idx:?}"
+            );
+            checked += 1;
+            // next combination
+            let mut i = m;
+            let mut done = true;
+            while i > 0 {
+                i -= 1;
+                if idx[i] != i + n - m {
+                    idx[i] += 1;
+                    for j in (i + 1)..m {
+                        idx[j] = idx[j - 1] + 1;
+                    }
+                    done = false;
+                    break;
+                }
+            }
+            if done {
+                break;
+            }
+        }
+        assert_eq!(checked, 6435); // C(15,8)
+    }
+
+    #[test]
+    fn mds_random_subsets_full_rank_m10() {
+        let mut rng = Pcg32::seeded(2);
+        let c = mds_dense_gaussian(15, 10, &mut rng);
+        forall("mds m10 subsets", 300, |g| {
+            let subset = g.subset(15, 10);
+            assert_eq!(c.select_rows(&subset).rank(RANK_TOL), 10);
+        });
+    }
+
+    /// The finding that motivates the Gaussian substitution: recovering
+    /// f32-precision data through a Vandermonde C_I loses all accuracy
+    /// at the paper's own scale, while the Gaussian code stays tight.
+    #[test]
+    fn vandermonde_mds_is_numerically_unusable() {
+        use crate::linalg::qr_least_squares;
+        let (n, m) = (15usize, 10usize);
+        let subset: Vec<usize> = (5..15).collect(); // worst-ish: high powers
+        let truth = Mat::from_fn(m, 1, |i, _| ((i as f64) - 4.5) / 3.0);
+
+        let err = |c: &Mat| -> f64 {
+            let ci = c.select_rows(&subset);
+            // simulate f32 learner outputs
+            let mut y = ci.matmul(&truth);
+            for v in y.data.iter_mut() {
+                *v = *v as f32 as f64;
+            }
+            qr_least_squares(&ci, &y).max_abs_diff(&truth)
+        };
+
+        let vand = err(&mds_vandermonde(n, m));
+        let gauss = err(&mds_dense_gaussian(n, m, &mut Pcg32::seeded(3)));
+        assert!(gauss < 1e-3, "gaussian decode err {gauss}");
+        assert!(
+            vand > 100.0 * gauss,
+            "expected Vandermonde ({vand:e}) >> Gaussian ({gauss:e})"
+        );
+    }
+
+    /// Negative control: symmetric ± nodes DO violate the MDS property
+    /// (this is why mds_nodes is positive-only).
+    #[test]
+    fn symmetric_nodes_break_mds() {
+        let nodes = [-0.9, 0.9];
+        let mut c = Mat::zeros(4, 2);
+        for (i, &a) in nodes.iter().enumerate() {
+            let mut p = 1.0;
+            for j in 0..4 {
+                c[(j, i)] = p;
+                p *= a;
+            }
+        }
+        // rows {0, 2}: [1,1] and [0.81, 0.81] — dependent
+        assert!(c.select_rows(&[0, 2]).rank(RANK_TOL) < 2);
+    }
+
+    #[test]
+    fn random_sparse_density_tracks_pm() {
+        let mut rng = Pcg32::seeded(0);
+        let c = random_sparse(60, 20, 0.8, &mut rng);
+        let nnz = c.data.iter().filter(|&&v| v != 0.0).count();
+        let density = nnz as f64 / (60.0 * 20.0);
+        assert!((density - 0.8).abs() < 0.06, "density={density}");
+    }
+
+    #[test]
+    fn random_sparse_always_rank_m() {
+        forall("random sparse rank", 40, |g| {
+            let m = g.usize_in(2, 10);
+            let n = m + g.usize_in(0, 6);
+            let p = g.f64_in(0.3, 1.0);
+            let c = random_sparse(n, m, p, g.rng());
+            assert_eq!(c.rank(RANK_TOL), m);
+            for j in 0..n {
+                assert!(c.row(j).iter().any(|&v| v != 0.0));
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn random_sparse_pm_zero_panics() {
+        random_sparse(4, 2, 0.0, &mut Pcg32::seeded(0));
+    }
+}

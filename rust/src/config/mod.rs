@@ -1,0 +1,388 @@
+//! Experiment configuration — everything runtime-tunable on the Rust
+//! side (the build-time constants live in python/compile/presets.py and
+//! arrive via artifacts/manifest.json).
+//!
+//! A [`TrainConfig`] fully determines a run: preset (env + M + model
+//! dims), learner pool size N, coding scheme, decode method, straggler
+//! model, rollout/training schedule, and seed. `TrainConfig::from_args`
+//! parses the CLI surface shared by `coded-marl train`, the examples
+//! and the benches.
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::coding::decoder::DecodeMethod;
+use crate::coding::Scheme;
+
+/// How learner compute is implemented.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Real MADDPG update: each learner thread compiles and executes
+    /// the AOT artifacts through PJRT (the production path).
+    Pjrt,
+    /// Deterministic synthetic update with configurable compute time —
+    /// used by coordination tests/benches that isolate timing behaviour
+    /// from XLA compute (DESIGN.md §2).
+    Mock,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Mock => "mock",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "pjrt" => Some(Backend::Pjrt),
+            "mock" => Some(Backend::Mock),
+            _ => None,
+        }
+    }
+}
+
+/// Which transport connects controller and learners.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Learner threads in the controller process (default).
+    Local,
+    /// Separate `coded-marl worker` processes over localhost TCP.
+    Tcp,
+}
+
+impl Transport {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Local => "local",
+            Transport::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "local" => Some(Transport::Local),
+            "tcp" => Some(Transport::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// Straggler injection model (paper §V-C): each iteration, `k` learners
+/// chosen uniformly at random delay their reply by `delay`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerConfig {
+    /// Number of stragglers per iteration.
+    pub k: usize,
+    /// The injected delay t_s.
+    pub delay: std::time::Duration,
+    /// Extension beyond the paper's fixed-delay model: when set, each
+    /// straggler's delay is drawn as `delay * Exp(1)` instead of the
+    /// deterministic `delay` (heavy-tail slowdowns; ablation bench).
+    pub exponential: bool,
+}
+
+impl StragglerConfig {
+    pub fn none() -> StragglerConfig {
+        StragglerConfig { k: 0, delay: std::time::Duration::ZERO, exponential: false }
+    }
+
+    pub fn fixed(k: usize, delay: std::time::Duration) -> StragglerConfig {
+        StragglerConfig { k, delay, exponential: false }
+    }
+}
+
+/// Full specification of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Preset name in artifacts/manifest.json (defines env, M, dims).
+    pub preset: String,
+    /// Number of learners N (paper: 15).
+    pub n_learners: usize,
+    pub scheme: Scheme,
+    pub decode: DecodeMethod,
+    /// `p_m` for the random sparse code (paper: 0.8).
+    pub p_m: f64,
+    pub straggler: StragglerConfig,
+    /// Training iterations (paper Alg. 1 outer loop).
+    pub iterations: usize,
+    /// Episodes executed per iteration (Alg. 1 line 3).
+    pub episodes_per_iter: usize,
+    /// Max steps per episode (Alg. 1 line 4).
+    pub episode_len: usize,
+    /// Replay buffer capacity.
+    pub buffer_capacity: usize,
+    /// Iterations of pure exploration before learner updates start
+    /// (fills the replay buffer).
+    pub warmup_iters: usize,
+    /// Exploration noise σ at iteration 0 (Gaussian on actions).
+    pub noise_sigma: f64,
+    /// Iterations over which σ decays to 10% of its start value.
+    pub noise_decay_iters: usize,
+    pub backend: Backend,
+    /// Mock backend only: synthetic per-agent-update compute time.
+    pub mock_compute: std::time::Duration,
+    pub transport: Transport,
+    pub seed: u64,
+    /// Write per-iteration CSV under this directory (None = don't).
+    pub out_dir: Option<std::path::PathBuf>,
+    /// Save agent parameters to `<out_dir>/checkpoint.bin` every this
+    /// many iterations (0 = never). Requires `out_dir`.
+    pub checkpoint_every: usize,
+    /// Resume initial parameters from this checkpoint file.
+    pub resume: Option<std::path::PathBuf>,
+    /// Live scheme adaptation: measure straggler statistics and switch
+    /// the coding scheme at runtime when another one's expected
+    /// iteration time is clearly lower (extension beyond the paper;
+    /// see coordinator::adaptive).
+    pub adaptive: bool,
+    /// Give up on an iteration when no decodable subset arrives within
+    /// this window — covers crashed learners / dead workers. In a
+    /// healthy run all N results arrive and rank(C) = M guarantees
+    /// decodability.
+    pub collect_timeout: std::time::Duration,
+    /// Print per-iteration progress lines.
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    /// Defaults mirroring the paper's setup (§V-C): N = 15 learners,
+    /// p_m = 0.8, 50 iterations.
+    pub fn new(preset: impl Into<String>) -> TrainConfig {
+        TrainConfig {
+            preset: preset.into(),
+            n_learners: 15,
+            scheme: Scheme::Mds,
+            decode: DecodeMethod::Auto,
+            p_m: 0.8,
+            straggler: StragglerConfig::none(),
+            iterations: 50,
+            episodes_per_iter: 2,
+            episode_len: 25,
+            buffer_capacity: 100_000,
+            warmup_iters: 2,
+            noise_sigma: 0.3,
+            noise_decay_iters: 200,
+            backend: Backend::Pjrt,
+            mock_compute: std::time::Duration::from_millis(2),
+            transport: Transport::Local,
+            seed: 0,
+            out_dir: None,
+            checkpoint_every: 0,
+            resume: None,
+            adaptive: false,
+            collect_timeout: std::time::Duration::from_secs(120),
+            verbose: false,
+        }
+    }
+
+    /// Parse the shared CLI surface. Unknown flags error; every flag is
+    /// optional except `--preset`.
+    pub fn from_args(args: &Args) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::new(args.required("preset")?);
+        if let Some(v) = args.opt("learners") {
+            cfg.n_learners = v.parse()?;
+        }
+        if let Some(v) = args.opt("scheme") {
+            cfg.scheme = Scheme::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown scheme '{v}' (want one of: uncoded, replication, mds, random_sparse, ldpc)"))?;
+        }
+        if let Some(v) = args.opt("decode") {
+            cfg.decode = DecodeMethod::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown decode method '{v}'"))?;
+        }
+        if let Some(v) = args.opt("p-m") {
+            cfg.p_m = v.parse()?;
+            if !(0.0..=1.0).contains(&cfg.p_m) {
+                bail!("--p-m must be in [0, 1]");
+            }
+        }
+        if let Some(v) = args.opt("stragglers") {
+            cfg.straggler.k = v.parse()?;
+        }
+        if let Some(v) = args.opt("straggler-delay-ms") {
+            cfg.straggler.delay = std::time::Duration::from_millis(v.parse()?);
+        }
+        if args.flag("straggler-exponential") {
+            cfg.straggler.exponential = true;
+        }
+        if let Some(v) = args.opt("iterations") {
+            cfg.iterations = v.parse()?;
+        }
+        if let Some(v) = args.opt("episodes") {
+            cfg.episodes_per_iter = v.parse()?;
+        }
+        if let Some(v) = args.opt("episode-len") {
+            cfg.episode_len = v.parse()?;
+        }
+        if let Some(v) = args.opt("buffer") {
+            cfg.buffer_capacity = v.parse()?;
+        }
+        if let Some(v) = args.opt("warmup") {
+            cfg.warmup_iters = v.parse()?;
+        }
+        if let Some(v) = args.opt("noise") {
+            cfg.noise_sigma = v.parse()?;
+        }
+        if let Some(v) = args.opt("noise-decay") {
+            cfg.noise_decay_iters = v.parse()?;
+        }
+        if let Some(v) = args.opt("backend") {
+            cfg.backend = Backend::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{v}' (pjrt|mock)"))?;
+        }
+        if let Some(v) = args.opt("mock-compute-us") {
+            cfg.mock_compute = std::time::Duration::from_micros(v.parse()?);
+        }
+        if let Some(v) = args.opt("transport") {
+            cfg.transport = Transport::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown transport '{v}' (local|tcp)"))?;
+        }
+        if let Some(v) = args.opt("seed") {
+            cfg.seed = v.parse()?;
+        }
+        if let Some(v) = args.opt("out-dir") {
+            cfg.out_dir = Some(v.into());
+        }
+        if let Some(v) = args.opt("checkpoint-every") {
+            cfg.checkpoint_every = v.parse()?;
+        }
+        if let Some(v) = args.opt("resume") {
+            cfg.resume = Some(v.into());
+        }
+        if let Some(v) = args.opt("collect-timeout-ms") {
+            cfg.collect_timeout = std::time::Duration::from_millis(v.parse()?);
+        }
+        if args.flag("adaptive") {
+            cfg.adaptive = true;
+        }
+        if args.flag("verbose") {
+            cfg.verbose = true;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_learners == 0 {
+            bail!("need at least one learner");
+        }
+        if self.straggler.k > self.n_learners {
+            bail!(
+                "stragglers k={} exceeds learner count N={}",
+                self.straggler.k, self.n_learners
+            );
+        }
+        if self.iterations == 0 {
+            bail!("iterations must be > 0");
+        }
+        if self.episode_len == 0 || self.episodes_per_iter == 0 {
+            bail!("episode schedule must be > 0");
+        }
+        if self.checkpoint_every > 0 && self.out_dir.is_none() {
+            bail!("--checkpoint-every requires --out-dir");
+        }
+        if self.collect_timeout.is_zero() {
+            bail!("collect timeout must be > 0");
+        }
+        Ok(())
+    }
+
+    /// One-line human summary for run headers.
+    pub fn summary(&self) -> String {
+        format!(
+            "preset={} N={} scheme={} decode={} stragglers(k={}, t_s={:?}{}) iters={} backend={} transport={} seed={}",
+            self.preset,
+            self.n_learners,
+            self.scheme,
+            self.decode.name(),
+            self.straggler.k,
+            self.straggler.delay,
+            if self.straggler.exponential { ", exp" } else { "" },
+            self.iterations,
+            self.backend.name(),
+            self.transport.name(),
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Result<TrainConfig> {
+        let args = Args::parse(argv.iter().map(|s| s.to_string()))?;
+        TrainConfig::from_args(&args)
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let cfg = parse(&["--preset", "coop_nav_m8"]).unwrap();
+        assert_eq!(cfg.n_learners, 15);
+        assert_eq!(cfg.p_m, 0.8);
+        assert_eq!(cfg.scheme, Scheme::Mds);
+        assert_eq!(cfg.straggler.k, 0);
+    }
+
+    #[test]
+    fn full_flag_surface() {
+        let cfg = parse(&[
+            "--preset", "keep_away_m10",
+            "--learners", "15",
+            "--scheme", "ldpc",
+            "--decode", "peeling",
+            "--stragglers", "5",
+            "--straggler-delay-ms", "150",
+            "--straggler-exponential",
+            "--iterations", "10",
+            "--episodes", "3",
+            "--episode-len", "30",
+            "--backend", "mock",
+            "--mock-compute-us", "500",
+            "--transport", "tcp",
+            "--seed", "9",
+            "--verbose",
+        ])
+        .unwrap();
+        assert_eq!(cfg.scheme, Scheme::Ldpc);
+        assert_eq!(cfg.decode, DecodeMethod::Peeling);
+        assert_eq!(cfg.straggler.k, 5);
+        assert_eq!(cfg.straggler.delay, std::time::Duration::from_millis(150));
+        assert!(cfg.straggler.exponential);
+        assert_eq!(cfg.backend, Backend::Mock);
+        assert_eq!(cfg.mock_compute, std::time::Duration::from_micros(500));
+        assert_eq!(cfg.transport, Transport::Tcp);
+        assert!(cfg.verbose);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse(&[]).is_err(), "preset is required");
+        assert!(parse(&["--preset", "x", "--scheme", "nope"]).is_err());
+        assert!(parse(&["--preset", "x", "--learners", "0"]).is_err());
+        assert!(parse(&["--preset", "x", "--stragglers", "99"]).is_err());
+        assert!(parse(&["--preset", "x", "--p-m", "1.5"]).is_err());
+        assert!(parse(&["--preset", "x", "--iterations", "0"]).is_err());
+    }
+
+    #[test]
+    fn backend_transport_parse() {
+        assert_eq!(Backend::parse("pjrt"), Some(Backend::Pjrt));
+        assert_eq!(Backend::parse("mock"), Some(Backend::Mock));
+        assert_eq!(Backend::parse(""), None);
+        assert_eq!(Transport::parse("local"), Some(Transport::Local));
+        assert_eq!(Transport::parse("tcp"), Some(Transport::Tcp));
+        assert_eq!(Transport::parse("x"), None);
+    }
+
+    #[test]
+    fn summary_mentions_key_fields() {
+        let cfg = TrainConfig::new("coop_nav_m8");
+        let s = cfg.summary();
+        assert!(s.contains("coop_nav_m8"));
+        assert!(s.contains("N=15"));
+        assert!(s.contains("mds"));
+    }
+}

@@ -1,0 +1,280 @@
+//! Adaptive coding-scheme selection — an extension beyond the paper.
+//!
+//! The paper's conclusion observes a trade-off: dense codes (MDS,
+//! random sparse) tolerate many stragglers but cost redundant compute;
+//! sparse codes (replication, LDPC) are cheap but fragile. Which scheme
+//! wins depends on the *deployment's* straggler statistics — something
+//! a running controller can measure. This module closes that loop:
+//!
+//! 1. [`StragglerStats`] — an online estimator of the per-iteration
+//!    straggler count distribution and delay magnitude, fed from the
+//!    controller's wait-phase telemetry.
+//! 2. [`expected_iteration_time`] — a cost model for one scheme:
+//!    E[T] = compute·workload + P(not decodable among fast learners)·t̄_s
+//!    using the code's empirical decode-probability profile.
+//! 3. [`AdaptiveSelector`] — scores all schemes under the current
+//!    estimate and recommends the argmin, with hysteresis so the
+//!    recommendation does not thrash.
+//!
+//! The selector is advisory: the controller applies it between
+//! iterations (a scheme switch is just a new assignment matrix — the
+//! learners are stateless w.r.t. the code, see transport::msg).
+
+use std::time::Duration;
+
+use crate::coding::{random_set_decode_probability, Code, CodeParams, Scheme};
+use crate::rng::Pcg32;
+
+/// Online straggler statistics from wait-phase telemetry.
+#[derive(Clone, Debug)]
+pub struct StragglerStats {
+    /// EWMA of the observed straggler count per iteration.
+    k_ewma: f64,
+    /// EWMA of the observed straggler delay (seconds).
+    delay_ewma: f64,
+    /// EWMA smoothing factor.
+    alpha: f64,
+    observations: usize,
+}
+
+impl StragglerStats {
+    pub fn new(alpha: f64) -> StragglerStats {
+        assert!((0.0..=1.0).contains(&alpha));
+        StragglerStats { k_ewma: 0.0, delay_ewma: 0.0, alpha, observations: 0 }
+    }
+
+    /// Record one iteration: how many learners were still missing when
+    /// the iteration's results sufficed, and how long the slowest
+    /// needed result lagged the median.
+    pub fn observe(&mut self, stragglers_seen: usize, extra_delay: Duration) {
+        let k = stragglers_seen as f64;
+        let d = extra_delay.as_secs_f64();
+        if self.observations == 0 {
+            self.k_ewma = k;
+            self.delay_ewma = d;
+        } else {
+            self.k_ewma += self.alpha * (k - self.k_ewma);
+            self.delay_ewma += self.alpha * (d - self.delay_ewma);
+        }
+        self.observations += 1;
+    }
+
+    pub fn expected_stragglers(&self) -> f64 {
+        self.k_ewma
+    }
+
+    pub fn expected_delay(&self) -> Duration {
+        Duration::from_secs_f64(self.delay_ewma.max(0.0))
+    }
+
+    pub fn observations(&self) -> usize {
+        self.observations
+    }
+}
+
+/// Expected iteration time for `code` under `(k, t_s)` straggler
+/// statistics and a per-agent-update compute cost.
+///
+/// Model: every learner computes its row's workload sequentially
+/// (`compute · max workload` sets the fastest possible finish), and
+/// with probability `1 − P(decodable | k random stragglers)` the
+/// controller must additionally wait out the injected delay `t_s`.
+pub fn expected_iteration_time(
+    code: &Code,
+    k: f64,
+    t_s: Duration,
+    compute: Duration,
+    rng: &mut Pcg32,
+) -> Duration {
+    let k_floor = k.floor() as usize;
+    let k_ceil = k.ceil() as usize;
+    let frac = k - k_floor as f64;
+    let trials = 200;
+    let p_floor = random_set_decode_probability(code, k_floor.min(code.n), trials, rng);
+    let p_ceil = if k_ceil == k_floor {
+        p_floor
+    } else {
+        random_set_decode_probability(code, k_ceil.min(code.n), trials, rng)
+    };
+    let p_decodable = p_floor * (1.0 - frac) + p_ceil * frac;
+    let max_workload = (0..code.n).map(|j| code.workload(j)).max().unwrap_or(0);
+    let base = compute.as_secs_f64() * max_workload as f64;
+    let stall = (1.0 - p_decodable) * t_s.as_secs_f64();
+    Duration::from_secs_f64(base + stall)
+}
+
+/// A scored scheme recommendation.
+#[derive(Clone, Debug)]
+pub struct Recommendation {
+    pub scheme: Scheme,
+    pub expected_time: Duration,
+    /// All candidates with their scores (sorted ascending by time).
+    pub scores: Vec<(Scheme, Duration)>,
+}
+
+/// Picks the scheme with the lowest expected iteration time, with
+/// hysteresis: a switch is recommended only when the challenger beats
+/// the incumbent by more than `hysteresis` (relative).
+pub struct AdaptiveSelector {
+    n: usize,
+    m: usize,
+    p_m: f64,
+    seed: u64,
+    /// Relative improvement required to displace the incumbent.
+    pub hysteresis: f64,
+    /// Minimum observations before recommending anything.
+    pub min_observations: usize,
+    codes: Vec<(Scheme, Code)>,
+    rng: Pcg32,
+}
+
+impl AdaptiveSelector {
+    pub fn new(n: usize, m: usize, p_m: f64, seed: u64) -> AdaptiveSelector {
+        let codes = Scheme::ALL
+            .iter()
+            .map(|&scheme| (scheme, Code::build(&CodeParams { scheme, n, m, p_m, seed })))
+            .collect();
+        AdaptiveSelector {
+            n,
+            m,
+            p_m,
+            seed,
+            hysteresis: 0.1,
+            min_observations: 5,
+            codes,
+            rng: Pcg32::new(seed, 0xADA9),
+        }
+    }
+
+    /// Score every scheme under the measured statistics; `incumbent` is
+    /// the currently-running scheme. Returns None until enough
+    /// observations have accumulated.
+    pub fn recommend(
+        &mut self,
+        stats: &StragglerStats,
+        compute: Duration,
+        incumbent: Scheme,
+    ) -> Option<Recommendation> {
+        if stats.observations() < self.min_observations {
+            return None;
+        }
+        let k = stats.expected_stragglers();
+        let t_s = stats.expected_delay();
+        let mut scores: Vec<(Scheme, Duration)> = self
+            .codes
+            .iter()
+            .map(|(scheme, code)| {
+                (*scheme, expected_iteration_time(code, k, t_s, compute, &mut self.rng))
+            })
+            .collect();
+        scores.sort_by_key(|&(_, t)| t);
+        let best = scores[0];
+        let incumbent_time = scores
+            .iter()
+            .find(|(s, _)| *s == incumbent)
+            .map(|&(_, t)| t)
+            .unwrap_or(best.1);
+        // hysteresis: keep the incumbent unless clearly beaten
+        let winner = if best.0 != incumbent
+            && best.1.as_secs_f64() < incumbent_time.as_secs_f64() * (1.0 - self.hysteresis)
+        {
+            best.0
+        } else {
+            incumbent
+        };
+        let expected_time = scores
+            .iter()
+            .find(|(s, _)| *s == winner)
+            .map(|&(_, t)| t)
+            .unwrap();
+        Some(Recommendation { scheme: winner, expected_time, scores })
+    }
+
+    pub fn dims(&self) -> (usize, usize, f64, u64) {
+        (self.n, self.m, self.p_m, self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ewma_tracks_and_warms_up() {
+        let mut s = StragglerStats::new(0.5);
+        assert_eq!(s.observations(), 0);
+        s.observe(4, Duration::from_millis(100));
+        assert_eq!(s.expected_stragglers(), 4.0);
+        assert_eq!(s.expected_delay(), Duration::from_millis(100));
+        for _ in 0..20 {
+            s.observe(0, Duration::ZERO);
+        }
+        assert!(s.expected_stragglers() < 0.01);
+        assert!(s.expected_delay() < Duration::from_millis(1));
+    }
+
+    #[test]
+    fn cost_model_orders_schemes_sensibly() {
+        let mut rng = Pcg32::seeded(0);
+        let compute = Duration::from_millis(2);
+        let build = |s| Code::build(&CodeParams { scheme: s, n: 15, m: 8, p_m: 0.8, seed: 1 });
+        // no stragglers: uncoded (workload 1, always decodable) beats MDS
+        let t_unc = expected_iteration_time(&build(Scheme::Uncoded), 0.0, Duration::ZERO, compute, &mut rng);
+        let t_mds = expected_iteration_time(&build(Scheme::Mds), 0.0, Duration::ZERO, compute, &mut rng);
+        assert!(t_unc < t_mds, "{t_unc:?} vs {t_mds:?}");
+        // heavy stragglers with big delay: MDS beats uncoded
+        let t_s = Duration::from_millis(500);
+        let t_unc = expected_iteration_time(&build(Scheme::Uncoded), 4.0, t_s, compute, &mut rng);
+        let t_mds = expected_iteration_time(&build(Scheme::Mds), 4.0, t_s, compute, &mut rng);
+        assert!(t_mds < t_unc, "{t_mds:?} vs {t_unc:?}");
+    }
+
+    #[test]
+    fn fractional_k_interpolates() {
+        let mut rng = Pcg32::seeded(1);
+        let code = Code::build(&CodeParams { scheme: Scheme::Uncoded, n: 15, m: 8, p_m: 0.8, seed: 1 });
+        let t_s = Duration::from_millis(100);
+        let t0 = expected_iteration_time(&code, 0.0, t_s, Duration::ZERO, &mut rng);
+        let t_half = expected_iteration_time(&code, 0.5, t_s, Duration::ZERO, &mut rng);
+        let t1 = expected_iteration_time(&code, 1.0, t_s, Duration::ZERO, &mut rng);
+        assert!(t0 <= t_half && t_half <= t1, "{t0:?} {t_half:?} {t1:?}");
+    }
+
+    #[test]
+    fn selector_warms_up_then_recommends() {
+        let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0);
+        let mut stats = StragglerStats::new(0.3);
+        let compute = Duration::from_millis(2);
+        assert!(sel.recommend(&stats, compute, Scheme::Mds).is_none());
+        // quiet cluster: no stragglers → should prefer a cheap scheme
+        for _ in 0..10 {
+            stats.observe(0, Duration::ZERO);
+        }
+        let rec = sel.recommend(&stats, compute, Scheme::Mds).unwrap();
+        assert_ne!(rec.scheme, Scheme::Mds, "quiet cluster should drop MDS");
+        assert_eq!(rec.scores.len(), Scheme::ALL.len());
+        // noisy cluster with long delays → a dense scheme
+        let mut stats = StragglerStats::new(0.3);
+        for _ in 0..10 {
+            stats.observe(5, Duration::from_millis(500));
+        }
+        let rec = sel.recommend(&stats, compute, Scheme::Uncoded).unwrap();
+        assert!(
+            matches!(rec.scheme, Scheme::Mds | Scheme::RandomSparse),
+            "noisy cluster should pick a dense code, got {}",
+            rec.scheme
+        );
+    }
+
+    #[test]
+    fn hysteresis_prevents_thrashing() {
+        let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0);
+        sel.hysteresis = 10.0; // absurd: nothing can beat the incumbent
+        let mut stats = StragglerStats::new(0.3);
+        for _ in 0..10 {
+            stats.observe(5, Duration::from_millis(500));
+        }
+        let rec = sel.recommend(&stats, Duration::from_millis(2), Scheme::Uncoded).unwrap();
+        assert_eq!(rec.scheme, Scheme::Uncoded, "hysteresis must hold the incumbent");
+    }
+}

@@ -1,0 +1,292 @@
+//! Learner compute backends.
+//!
+//! A [`LearnerBackend`] performs the per-agent MADDPG update (paper
+//! Alg. 1 lines 21-24) as a *pure function* of (agent index, all agent
+//! parameters, minibatch) — purity is what makes the coded recovery of
+//! Eq. (2) exact: every learner assigned agent `i` computes the **same**
+//! `θ'_i`, so linear combinations of results decode to the true update.
+//!
+//! Two implementations:
+//! * [`PjrtBackend`] — the production path: executes the AOT-lowered
+//!   JAX/Pallas `learner_step` artifact through PJRT.
+//! * [`MockBackend`] — deterministic synthetic update with configurable
+//!   compute time; lets coordination tests/benches run without
+//!   artifacts and isolates timing behaviour from XLA compute.
+
+use anyhow::{bail, Result};
+
+use crate::marl::buffer::Minibatch;
+use crate::marl::{AgentParams, ModelDims};
+use crate::runtime::{Manifest, Session};
+
+/// Per-agent parameter update, used by learners and by the centralized
+/// baseline trainer.
+pub trait LearnerBackend {
+    /// Model dimensions this backend was built for.
+    fn dims(&self) -> ModelDims;
+
+    /// Compute `θ'_i` from the broadcast state. `agent_params[i]` is
+    /// agent i's flat vector `[θ_p|θ_q|θ̂_p|θ̂_q]`; the return value has
+    /// the same layout.
+    fn update_agent(
+        &mut self,
+        agent_idx: usize,
+        agent_params: &[Vec<f32>],
+        mb: &Minibatch,
+    ) -> Result<Vec<f32>>;
+
+    /// Critic TD loss of the most recent `update_agent` call, if the
+    /// backend reports one (PJRT does; mock returns None).
+    fn last_critic_loss(&self) -> Option<f32> {
+        None
+    }
+}
+
+/// Factory invoked **inside** each learner thread: `PjRtClient` is
+/// `Rc`-based (not `Send`), so sessions must be constructed on the
+/// thread that uses them.
+pub type BackendFactory = dyn Fn(u32) -> Result<Box<dyn LearnerBackend>> + Send + Sync;
+
+// ---------------------------------------------------------------- PJRT
+
+/// Real MADDPG update through the compiled HLO artifact.
+pub struct PjrtBackend {
+    session: Session,
+    dims: ModelDims,
+    last_loss: Option<f32>,
+    /// Scratch for the stacked `[M, Pp]` target-policy matrix.
+    tpol_scratch: Vec<f32>,
+}
+
+impl PjrtBackend {
+    pub fn new(session: Session) -> PjrtBackend {
+        let dims = session.spec.dims();
+        PjrtBackend { session, dims, last_loss: None, tpol_scratch: Vec::new() }
+    }
+
+    /// Load artifacts and compile for `preset` (once per thread).
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>, preset: &str) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(PjrtBackend::new(Session::load(&manifest, preset)?))
+    }
+
+    pub fn spec(&self) -> &crate::runtime::PresetSpec {
+        &self.session.spec
+    }
+}
+
+impl LearnerBackend for PjrtBackend {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn update_agent(
+        &mut self,
+        agent_idx: usize,
+        agent_params: &[Vec<f32>],
+        mb: &Minibatch,
+    ) -> Result<Vec<f32>> {
+        if agent_params.len() != self.dims.m {
+            bail!("expected {} agent vectors, got {}", self.dims.m, agent_params.len());
+        }
+        // Stack every agent's θ̂_p block (the critic target needs all
+        // target policies); reuse the scratch across calls.
+        let (tp_off, tp_len) = self.dims.blocks()[2];
+        self.tpol_scratch.clear();
+        for p in agent_params {
+            if p.len() != self.dims.agent_param_dim() {
+                bail!("agent vector length {} != {}", p.len(), self.dims.agent_param_dim());
+            }
+            self.tpol_scratch.extend_from_slice(&p[tp_off..tp_off + tp_len]);
+        }
+        let agent = AgentParams::from_flat(&self.dims, &agent_params[agent_idx]);
+        let out = self.session.learner_step(agent_idx, &agent, &self.tpol_scratch, mb)?;
+        self.last_loss = Some(out.critic_loss);
+        Ok(out.into_agent_params().to_flat())
+    }
+
+    fn last_critic_loss(&self) -> Option<f32> {
+        self.last_loss
+    }
+}
+
+// ---------------------------------------------------------------- Mock
+
+/// Deterministic synthetic update.
+///
+/// The map is a contraction toward a target that mixes a per-coordinate
+/// pseudo-random offset with a *continuous* minibatch statistic:
+///
+/// ```text
+/// θ'_k = θ_k + λ (clamp(½θ_k + b(i,k) + s(B)) − θ_k)
+/// ```
+///
+/// where `b(i,k)` hashes only integer indices and `s(B)` is a smooth
+/// moment of the minibatch. Properties the tests rely on: (a) pure —
+/// identical on every learner, (b) sensitive to every input (agent
+/// index, parameters, minibatch), (c) **continuous** in θ and B, like a
+/// real gradient step — decode round-off must perturb later updates
+/// proportionally, not chaotically, or the coded-vs-centralized
+/// equivalence the paper claims would be unobservable, (d) numerically
+/// tame over thousands of iterations.
+pub struct MockBackend {
+    dims: ModelDims,
+    /// Emulated compute duration per agent update. Implemented as a
+    /// sleep, not a busy-wait: each of the paper's learners is a
+    /// dedicated EC2 instance whose compute runs in parallel wall-time
+    /// with every other learner, and sleeping reproduces that on a host
+    /// with fewer cores than learners (DESIGN.md §2).
+    pub compute: std::time::Duration,
+    lambda: f32,
+}
+
+impl MockBackend {
+    pub fn new(dims: ModelDims, compute: std::time::Duration) -> MockBackend {
+        MockBackend { dims, compute, lambda: 0.05 }
+    }
+
+    /// Smooth scalar statistic of the minibatch: a weighted mean of the
+    /// payload arrays. Continuous in every entry, so tiny numerical
+    /// perturbations produce tiny update perturbations.
+    fn mb_signature(mb: &Minibatch) -> f32 {
+        fn mean(xs: &[f32]) -> f64 {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+            }
+        }
+        (mean(&mb.obs) + 2.0 * mean(&mb.act) + 3.0 * mean(&mb.rew)
+            + 0.5 * mean(&mb.next_obs)
+            + 0.25 * mean(&mb.done)) as f32
+    }
+}
+
+impl LearnerBackend for MockBackend {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn update_agent(
+        &mut self,
+        agent_idx: usize,
+        agent_params: &[Vec<f32>],
+        mb: &Minibatch,
+    ) -> Result<Vec<f32>> {
+        if agent_idx >= agent_params.len() {
+            bail!("agent_idx {} out of range", agent_idx);
+        }
+        let s = Self::mb_signature(mb);
+        let seed = (agent_idx as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let theta = &agent_params[agent_idx];
+        let mut out = Vec::with_capacity(theta.len());
+        for (k, &t) in theta.iter().enumerate() {
+            // b(i,k): per-coordinate pseudo-random offset in [-1, 1]
+            // from *integer* indices only (a hash of float bits would
+            // be discontinuous — see the type-level docs).
+            let z = seed.wrapping_add((k as u64).wrapping_mul(0xD1B54A32D192ED03));
+            let b = 2.0 * ((z >> 40) as f32) / (1u64 << 24) as f32 - 1.0;
+            let target = (0.5 * t + b + 0.1 * s).clamp(-1.0, 1.0);
+            out.push(t + self.lambda * (target - t));
+        }
+        // Emulate the remote learner's compute time (see field docs).
+        if !self.compute.is_zero() {
+            std::thread::sleep(self.compute);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn dims() -> ModelDims {
+        ModelDims { m: 3, obs_dim: 4, act_dim: 2, hidden: 8, batch: 4 }
+    }
+
+    fn mb(rng: &mut Pcg32, d: &ModelDims) -> Minibatch {
+        Minibatch {
+            batch: d.batch,
+            m: d.m,
+            obs_dim: d.obs_dim,
+            act_dim: d.act_dim,
+            obs: rng.normal_vec_f32(d.batch * d.m * d.obs_dim, 1.0),
+            act: rng.normal_vec_f32(d.batch * d.m * d.act_dim, 1.0),
+            rew: rng.normal_vec_f32(d.m * d.batch, 1.0),
+            next_obs: rng.normal_vec_f32(d.batch * d.m * d.obs_dim, 1.0),
+            done: vec![0.0; d.batch],
+        }
+    }
+
+    fn params(rng: &mut Pcg32, d: &ModelDims) -> Vec<Vec<f32>> {
+        (0..d.m).map(|_| AgentParams::init(d, rng).to_flat()).collect()
+    }
+
+    #[test]
+    fn mock_is_pure_and_identical_across_instances() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(0);
+        let ps = params(&mut rng, &d);
+        let batch = mb(&mut rng, &d);
+        let mut b1 = MockBackend::new(d, std::time::Duration::ZERO);
+        let mut b2 = MockBackend::new(d, std::time::Duration::ZERO);
+        let u1 = b1.update_agent(1, &ps, &batch).unwrap();
+        let u2 = b2.update_agent(1, &ps, &batch).unwrap();
+        assert_eq!(u1, u2, "mock update must be identical on every learner");
+    }
+
+    #[test]
+    fn mock_distinguishes_agents_and_batches() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(1);
+        let ps = params(&mut rng, &d);
+        let b1 = mb(&mut rng, &d);
+        let b2 = mb(&mut rng, &d);
+        let mut be = MockBackend::new(d, std::time::Duration::ZERO);
+        let u_a0 = be.update_agent(0, &ps, &b1).unwrap();
+        let u_a1 = be.update_agent(1, &ps, &b1).unwrap();
+        assert_ne!(u_a0, u_a1);
+        let u_b2 = be.update_agent(0, &ps, &b2).unwrap();
+        assert_ne!(u_a0, u_b2);
+        // and the update actually moves the parameters
+        assert_ne!(u_a0, ps[0]);
+    }
+
+    #[test]
+    fn mock_is_numerically_stable_over_many_steps() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(2);
+        let mut ps = params(&mut rng, &d);
+        let batch = mb(&mut rng, &d);
+        let mut be = MockBackend::new(d, std::time::Duration::ZERO);
+        for _ in 0..2000 {
+            ps[0] = be.update_agent(0, &ps, &batch).unwrap();
+        }
+        assert!(ps[0].iter().all(|v| v.is_finite() && v.abs() < 10.0));
+    }
+
+    #[test]
+    fn mock_honors_compute_budget() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(3);
+        let ps = params(&mut rng, &d);
+        let batch = mb(&mut rng, &d);
+        let budget = std::time::Duration::from_millis(5);
+        let mut be = MockBackend::new(d, budget);
+        let t0 = std::time::Instant::now();
+        be.update_agent(0, &ps, &batch).unwrap();
+        assert!(t0.elapsed() >= budget);
+    }
+
+    #[test]
+    fn mock_rejects_bad_agent_idx() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(4);
+        let ps = params(&mut rng, &d);
+        let batch = mb(&mut rng, &d);
+        let mut be = MockBackend::new(d, std::time::Duration::ZERO);
+        assert!(be.update_agent(3, &ps, &batch).is_err());
+    }
+}

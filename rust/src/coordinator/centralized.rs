@@ -1,0 +1,161 @@
+//! Centralized MADDPG baseline — the paper's accuracy reference
+//! (Fig. 3 compares coded distributed MADDPG against it).
+//!
+//! Runs the identical training schedule in a single process: same
+//! rollout, same minibatch sampling, and the same per-agent update
+//! applied sequentially for all M agents. Because the coded framework
+//! recovers the *exact* synchronous update (Eq. (2) is lossless up to
+//! floating-point), coded training with any scheme must track this
+//! baseline parameter-for-parameter — `rust/tests/coordinator_integration.rs`
+//! pins that equivalence.
+
+use anyhow::Result;
+
+use super::backend::LearnerBackend;
+use super::controller::Streams;
+use super::rollout;
+use super::RunSpec;
+use crate::config::TrainConfig;
+use crate::env::make_env;
+use crate::marl::buffer::ReplayBuffer;
+use crate::marl::noise::DecaySchedule;
+use crate::marl::AgentParams;
+use crate::metrics::{IterRecord, IterTiming, RunLog, Timer};
+
+/// Single-process synchronous MADDPG trainer.
+pub struct Centralized {
+    cfg: TrainConfig,
+    spec: RunSpec,
+    backend: Box<dyn LearnerBackend>,
+    env: Box<dyn crate::env::Env>,
+    buffer: ReplayBuffer,
+    agents: Vec<AgentParams>,
+    streams: Streams,
+    noise_schedule: DecaySchedule,
+    pub log: RunLog,
+}
+
+impl Centralized {
+    pub fn new(
+        cfg: TrainConfig,
+        spec: RunSpec,
+        backend: Box<dyn LearnerBackend>,
+    ) -> Result<Centralized> {
+        cfg.validate()?;
+        let env = make_env(spec.env, spec.m, spec.k_adversaries);
+        let mut streams = Streams::new(cfg.seed);
+        let agents: Vec<AgentParams> =
+            (0..spec.m).map(|_| AgentParams::init(&spec.dims, &mut streams.init)).collect();
+        let noise_schedule = DecaySchedule {
+            start: cfg.noise_sigma,
+            end: 0.1 * cfg.noise_sigma,
+            decay_iters: cfg.noise_decay_iters,
+        };
+        Ok(Centralized {
+            buffer: ReplayBuffer::new(cfg.buffer_capacity),
+            cfg,
+            spec,
+            backend,
+            env,
+            agents,
+            streams,
+            noise_schedule,
+            log: RunLog::new(),
+        })
+    }
+
+    pub fn agents(&self) -> &[AgentParams] {
+        &self.agents
+    }
+
+    pub fn train(&mut self) -> Result<&RunLog> {
+        for iter in 0..self.cfg.iterations as u64 {
+            let rec = self.run_iteration(iter)?;
+            if self.cfg.verbose {
+                eprintln!(
+                    "central iter {:>4}  reward {:>10.3}  critic_loss {:>9.4}  total {:>8.1}ms",
+                    rec.iter,
+                    rec.reward,
+                    rec.critic_loss,
+                    rec.timing.total.as_secs_f64() * 1e3,
+                );
+            }
+            self.log.push(rec);
+        }
+        if let Some(dir) = self.cfg.out_dir.clone() {
+            let path = dir.join(format!("{}_centralized.csv", self.cfg.preset));
+            self.log.write_csv(&path)?;
+        }
+        Ok(&self.log)
+    }
+
+    pub fn run_iteration(&mut self, iter: u64) -> Result<IterRecord> {
+        let total_t = Timer::start();
+        let mut timing = IterTiming::default();
+
+        let t = Timer::start();
+        let sigma = self.noise_schedule.scale_at(iter as usize);
+        let mut reward_sum = 0.0;
+        for _ in 0..self.cfg.episodes_per_iter {
+            reward_sum += rollout::run_episode(
+                self.env.as_mut(),
+                &self.agents,
+                &self.spec.dims,
+                self.cfg.episode_len,
+                sigma,
+                &mut self.streams.env,
+                &mut self.streams.noise,
+                &mut self.buffer,
+            )
+            .total_reward;
+        }
+        let reward = reward_sum / self.cfg.episodes_per_iter as f64;
+        timing.rollout = t.elapsed();
+
+        if (iter as usize) < self.cfg.warmup_iters || self.buffer.len() < self.spec.dims.batch {
+            timing.total = total_t.elapsed();
+            return Ok(IterRecord {
+                iter,
+                timing,
+                reward,
+                critic_loss: f64::NAN,
+                results_used: 0,
+                decode_method: "warmup",
+                stragglers: Vec::new(),
+            });
+        }
+
+        let t = Timer::start();
+        let mb = self.buffer.sample(self.spec.dims.batch, &mut self.streams.sample);
+        timing.sample = t.elapsed();
+
+        // Synchronous update: every θ'_i is a function of the *same*
+        // broadcast θ (not updated in place), exactly like the learners.
+        let t = Timer::start();
+        let agent_params: Vec<Vec<f32>> = self.agents.iter().map(|a| a.to_flat()).collect();
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut updated = Vec::with_capacity(self.spec.m);
+        for i in 0..self.spec.m {
+            let theta = self.backend.update_agent(i, &agent_params, &mb)?;
+            if let Some(l) = self.backend.last_critic_loss() {
+                loss_sum += l as f64;
+                loss_n += 1;
+            }
+            updated.push(AgentParams::from_flat(&self.spec.dims, &theta));
+        }
+        self.agents = updated;
+        timing.wait = t.elapsed(); // "wait" = compute time in the centralized case
+
+        timing.total = total_t.elapsed();
+        Ok(IterRecord {
+            iter,
+            timing,
+            reward,
+            critic_loss: if loss_n > 0 { loss_sum / loss_n as f64 } else { f64::NAN },
+            results_used: self.spec.m,
+            decode_method: "centralized",
+            stragglers: Vec::new(),
+        })
+    }
+}

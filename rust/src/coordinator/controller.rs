@@ -1,0 +1,449 @@
+//! The central controller — paper Alg. 1 lines 1-15.
+//!
+//! Per training iteration: execute episodes with the current joint
+//! policy (rollout), sample a minibatch, broadcast `(θ, B)` plus each
+//! learner's assignment row, collect coded results until the erasure
+//! pattern is decodable, acknowledge, and recover `θ'` via Eq. (2).
+//!
+//! The controller never waits for *specific* learners — only for *any*
+//! decodable subset. That is the paper's entire point: with a coded
+//! assignment matrix, up to `N − M` stragglers (MDS) add zero latency.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::adaptive::{AdaptiveSelector, StragglerStats};
+use super::rollout;
+use super::straggler::StragglerInjector;
+use super::RunSpec;
+use crate::coding::decoder::Decoder;
+use crate::coding::{Code, CodeParams};
+use crate::config::TrainConfig;
+use crate::env::make_env;
+use crate::marl::buffer::ReplayBuffer;
+use crate::marl::noise::DecaySchedule;
+use crate::marl::AgentParams;
+use crate::metrics::{IterRecord, IterTiming, RunLog, Timer};
+use crate::rng::Pcg32;
+use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
+
+/// The RNG streams that drive *training* randomness. Forked in a fixed
+/// order so the coded controller and the centralized baseline consume
+/// identical streams — the basis of the exact-equivalence tests.
+pub struct Streams {
+    pub init: Pcg32,
+    pub env: Pcg32,
+    pub noise: Pcg32,
+    pub sample: Pcg32,
+}
+
+impl Streams {
+    pub fn new(seed: u64) -> Streams {
+        let mut root = Pcg32::new(seed, 0xA11CE);
+        Streams {
+            init: root.fork(1),
+            env: root.fork(2),
+            noise: root.fork(3),
+            sample: root.fork(4),
+        }
+    }
+}
+
+/// Central controller bound to a learner transport.
+pub struct Controller<T: ControllerTransport> {
+    cfg: TrainConfig,
+    spec: RunSpec,
+    transport: T,
+    decoder: Decoder,
+    injector: StragglerInjector,
+    env: Box<dyn crate::env::Env>,
+    buffer: ReplayBuffer,
+    agents: Vec<AgentParams>,
+    streams: Streams,
+    noise_schedule: DecaySchedule,
+    /// Live scheme adaptation (config `adaptive`): straggler telemetry
+    /// feeds the selector; a switch replaces the decoder in place —
+    /// learners are stateless w.r.t. the code so nothing else changes.
+    adaptive: Option<(AdaptiveSelector, StragglerStats)>,
+    /// EWMA of the per-agent-update compute time reported by learners.
+    compute_ewma: f64,
+    pub log: RunLog,
+    shut_down: bool,
+}
+
+/// Per-iteration collection telemetry used by the adaptive selector.
+struct CollectOutcome {
+    received: Vec<usize>,
+    results: Vec<Vec<f32>>,
+    /// Wall time from the M-th arrival until the pattern became
+    /// decodable — the stall a better code would have avoided.
+    stall: Duration,
+    /// Mean per-agent-update compute reported by this iteration's
+    /// learners (None when no workload telemetry was usable).
+    compute_per_update: Option<Duration>,
+}
+
+impl<T: ControllerTransport> Controller<T> {
+    /// Build the controller: constructs the assignment matrix for
+    /// `cfg.scheme`, the environment, the replay buffer, and the initial
+    /// agent parameters (Alg. 1 line 1).
+    pub fn new(cfg: TrainConfig, spec: RunSpec, transport: T) -> Result<Controller<T>> {
+        cfg.validate()?;
+        if transport.n_learners() != cfg.n_learners {
+            bail!(
+                "transport has {} learners but config says N={}",
+                transport.n_learners(),
+                cfg.n_learners
+            );
+        }
+        let code = Code::build(&CodeParams {
+            scheme: cfg.scheme,
+            n: cfg.n_learners,
+            m: spec.m,
+            p_m: cfg.p_m,
+            seed: cfg.seed,
+        });
+        let decoder = Decoder::new(code);
+        let injector = StragglerInjector::new(cfg.straggler, Pcg32::new(cfg.seed, 0x57A6));
+        let env = make_env(spec.env, spec.m, spec.k_adversaries);
+        let mut streams = Streams::new(cfg.seed);
+        let agents: Vec<AgentParams> =
+            (0..spec.m).map(|_| AgentParams::init(&spec.dims, &mut streams.init)).collect();
+        let noise_schedule = DecaySchedule {
+            start: cfg.noise_sigma,
+            end: 0.1 * cfg.noise_sigma,
+            decay_iters: cfg.noise_decay_iters,
+        };
+        let adaptive = cfg.adaptive.then(|| {
+            (
+                AdaptiveSelector::new(cfg.n_learners, spec.m, cfg.p_m, cfg.seed),
+                StragglerStats::new(0.3),
+            )
+        });
+        Ok(Controller {
+            buffer: ReplayBuffer::new(cfg.buffer_capacity),
+            cfg,
+            spec,
+            transport,
+            decoder,
+            injector,
+            env,
+            agents,
+            streams,
+            noise_schedule,
+            adaptive,
+            compute_ewma: 0.0,
+            log: RunLog::new(),
+            shut_down: false,
+        })
+    }
+
+    pub fn code(&self) -> &Code {
+        self.decoder.code()
+    }
+
+    pub fn agents(&self) -> &[AgentParams] {
+        &self.agents
+    }
+
+    /// Replace the current parameters (resume from a checkpoint).
+    pub fn set_agents(&mut self, agents: Vec<AgentParams>) -> Result<()> {
+        if agents.len() != self.spec.m {
+            bail!("set_agents: {} vectors for M={}", agents.len(), self.spec.m);
+        }
+        let want = self.spec.dims.agent_param_dim();
+        for a in &agents {
+            if a.to_flat().len() != want {
+                bail!("set_agents: parameter layout mismatch");
+            }
+        }
+        self.agents = agents;
+        Ok(())
+    }
+
+    /// Load parameters from a checkpoint file (see [`crate::marl::checkpoint`]).
+    pub fn resume_from(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let agents = crate::marl::checkpoint::load(path, &self.spec.dims)?;
+        self.set_agents(agents)
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Run the full training schedule (Alg. 1 outer loop); returns the
+    /// per-iteration log.
+    pub fn train(&mut self) -> Result<&RunLog> {
+        for iter in 0..self.cfg.iterations as u64 {
+            let rec = self.run_iteration(iter)?;
+            if self.cfg.verbose {
+                eprintln!(
+                    "iter {:>4}  reward {:>10.3}  total {:>8.1}ms  (wait {:>7.1}ms, decode {:>6.2}ms, via {}, stragglers {:?})",
+                    rec.iter,
+                    rec.reward,
+                    rec.timing.total.as_secs_f64() * 1e3,
+                    rec.timing.wait.as_secs_f64() * 1e3,
+                    rec.timing.decode.as_secs_f64() * 1e3,
+                    rec.decode_method,
+                    rec.stragglers,
+                );
+            }
+            self.log.push(rec);
+            if self.cfg.checkpoint_every > 0
+                && (iter + 1) % self.cfg.checkpoint_every as u64 == 0
+            {
+                self.checkpoint()?;
+            }
+        }
+        if let Some(dir) = self.cfg.out_dir.clone() {
+            let path = dir.join(format!(
+                "{}_{}_k{}.csv",
+                self.cfg.preset, self.cfg.scheme, self.cfg.straggler.k
+            ));
+            self.log.write_csv(&path).with_context(|| format!("writing {}", path.display()))?;
+        }
+        if self.cfg.checkpoint_every > 0 {
+            self.checkpoint()?;
+        }
+        Ok(&self.log)
+    }
+
+    /// Write `<out_dir>/<preset>_checkpoint.bin`.
+    pub fn checkpoint(&self) -> Result<std::path::PathBuf> {
+        let Some(dir) = &self.cfg.out_dir else {
+            bail!("checkpointing requires out_dir");
+        };
+        let path = dir.join(format!("{}_checkpoint.bin", self.cfg.preset));
+        crate::marl::checkpoint::save(&path, &self.spec.dims, &self.agents)?;
+        Ok(path)
+    }
+
+    /// One full training iteration (Alg. 1 lines 3-15).
+    pub fn run_iteration(&mut self, iter: u64) -> Result<IterRecord> {
+        let total_t = Timer::start();
+        let mut timing = IterTiming::default();
+
+        // --- Rollout (lines 3-7) ---------------------------------------
+        let t = Timer::start();
+        let sigma = self.noise_schedule.scale_at(iter as usize);
+        let mut reward_sum = 0.0;
+        for _ in 0..self.cfg.episodes_per_iter {
+            let stats = rollout::run_episode(
+                self.env.as_mut(),
+                &self.agents,
+                &self.spec.dims,
+                self.cfg.episode_len,
+                sigma,
+                &mut self.streams.env,
+                &mut self.streams.noise,
+                &mut self.buffer,
+            );
+            reward_sum += stats.total_reward;
+        }
+        let reward = reward_sum / self.cfg.episodes_per_iter as f64;
+        timing.rollout = t.elapsed();
+
+        // Warmup: fill the buffer before the first learner round.
+        if (iter as usize) < self.cfg.warmup_iters
+            || self.buffer.len() < self.spec.dims.batch
+        {
+            timing.total = total_t.elapsed();
+            return Ok(IterRecord {
+                iter,
+                timing,
+                reward,
+                critic_loss: f64::NAN,
+                results_used: 0,
+                decode_method: "warmup",
+                stragglers: Vec::new(),
+            });
+        }
+
+        // --- Sample (line 8) --------------------------------------------
+        let t = Timer::start();
+        let mb = self.buffer.sample(self.spec.dims.batch, &mut self.streams.sample);
+        timing.sample = t.elapsed();
+
+        // --- Broadcast (line 9) -----------------------------------------
+        let t = Timer::start();
+        let plan = self.injector.plan(self.cfg.n_learners);
+        // Arc-shared payload: one flatten, N refcount bumps (not N
+        // multi-megabyte clones — EXPERIMENTS.md §Perf).
+        let agent_params =
+            std::sync::Arc::new(self.agents.iter().map(|a| a.to_flat()).collect::<Vec<_>>());
+        let mb = std::sync::Arc::new(mb);
+        for j in 0..self.cfg.n_learners {
+            let row: Vec<f32> =
+                self.code().c.row(j).iter().map(|&v| v as f32).collect();
+            // A dead learner (crashed thread / worker) is just a
+            // permanent erasure: coding exists to mask exactly this, so
+            // a failed send must not abort the iteration.
+            if let Err(e) = self.transport.send_to(
+                j,
+                CtrlMsg::Task {
+                    iter,
+                    row,
+                    agent_params: std::sync::Arc::clone(&agent_params),
+                    minibatch: std::sync::Arc::clone(&mb),
+                    straggler_delay_ns: plan.delay_ns[j],
+                },
+            ) {
+                if self.cfg.verbose {
+                    eprintln!("iter {iter}: learner {j} unreachable ({e:#}); treating as erasure");
+                }
+            }
+        }
+        timing.broadcast = t.elapsed();
+
+        // --- Collect until decodable (lines 10-13) ----------------------
+        let t = Timer::start();
+        let outcome = self.collect(iter)?;
+        timing.wait = t.elapsed();
+        let CollectOutcome { received, results, stall, compute_per_update } = outcome;
+
+        // --- Ack (line 14) ----------------------------------------------
+        // Per-learner ack failures are likewise non-fatal.
+        for j in 0..self.cfg.n_learners {
+            let _ = self.transport.send_to(j, CtrlMsg::Ack { iter });
+        }
+
+        // --- Recover θ' (line 15) ---------------------------------------
+        let t = Timer::start();
+        let out = self.decoder.decode(&received, &results, self.cfg.decode)?;
+        timing.decode = t.elapsed();
+        for (agent, theta) in self.agents.iter_mut().zip(out.theta.iter()) {
+            *agent = AgentParams::from_flat(&self.spec.dims, theta);
+        }
+
+        // --- Adaptive scheme selection (extension; DESIGN.md §9) --------
+        if let Some(c) = compute_per_update {
+            let alpha = 0.3;
+            self.compute_ewma += alpha * (c.as_secs_f64() - self.compute_ewma);
+        }
+        let mut switched = None;
+        if let Some((selector, stats)) = self.adaptive.as_mut() {
+            // effective stragglers = learners whose results never made
+            // it into this round (biased high: includes healthy-but-
+            // late learners; hysteresis absorbs the bias).
+            stats.observe(self.cfg.n_learners - received.len(), stall);
+            let compute = Duration::from_secs_f64(self.compute_ewma.max(1e-6));
+            if let Some(rec) = selector.recommend(stats, compute, self.cfg.scheme) {
+                if rec.scheme != self.cfg.scheme {
+                    switched = Some((self.cfg.scheme, rec.scheme));
+                    self.cfg.scheme = rec.scheme;
+                }
+            }
+        }
+        if let Some((from, to)) = switched {
+            self.decoder = Decoder::new(Code::build(&CodeParams {
+                scheme: to,
+                n: self.cfg.n_learners,
+                m: self.spec.m,
+                p_m: self.cfg.p_m,
+                seed: self.cfg.seed,
+            }));
+            if self.cfg.verbose {
+                eprintln!("iter {iter}: adaptive switch {from} -> {to}");
+            }
+        }
+
+        timing.total = total_t.elapsed();
+        Ok(IterRecord {
+            iter,
+            timing,
+            reward,
+            critic_loss: f64::NAN, // coded results mix agents; see Centralized
+            results_used: received.len(),
+            decode_method: out.method,
+            stragglers: plan.stragglers,
+        })
+    }
+
+    /// The scheme currently in use (may differ from the initial config
+    /// under `adaptive`).
+    pub fn current_scheme(&self) -> crate::coding::Scheme {
+        self.cfg.scheme
+    }
+
+    /// Listen to the channel until the received subset is decodable
+    /// (Alg. 1 lines 10-13), gathering the telemetry the adaptive
+    /// selector consumes.
+    fn collect(&mut self, iter: u64) -> Result<CollectOutcome> {
+        let m = self.spec.m;
+        let n = self.cfg.n_learners;
+        let mut received: Vec<usize> = Vec::with_capacity(n);
+        let mut results: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut got = vec![false; n];
+        let mut mth_arrival: Option<Instant> = None;
+        let mut compute_sum = 0.0f64;
+        let mut compute_n = 0usize;
+        let timeout = self.cfg.collect_timeout;
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "iteration {iter}: no decodable subset after {timeout:?} \
+                     ({} of {} results; scheme {})",
+                    received.len(),
+                    n,
+                    self.cfg.scheme
+                );
+            }
+            let Some(msg) = self.transport.recv_timeout(deadline - now)? else {
+                continue;
+            };
+            match msg {
+                LearnerMsg::Result { iter: ri, learner_id, y, compute_ns } => {
+                    let j = learner_id as usize;
+                    if ri != iter || j >= n || got[j] {
+                        continue; // stale or duplicate
+                    }
+                    got[j] = true;
+                    received.push(j);
+                    results.push(y);
+                    let workload = self.code().workload(j);
+                    if workload > 0 {
+                        compute_sum += compute_ns as f64 / 1e9 / workload as f64;
+                        compute_n += 1;
+                    }
+                    if received.len() == m {
+                        mth_arrival = Some(Instant::now());
+                    }
+                    if received.len() >= m && self.code().decodable(&received) {
+                        let stall = mth_arrival.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+                        let compute_per_update = (compute_n > 0).then(|| {
+                            Duration::from_secs_f64(compute_sum / compute_n as f64)
+                        });
+                        return Ok(CollectOutcome { received, results, stall, compute_per_update });
+                    }
+                    if received.len() == n {
+                        // All results in but still not decodable: the
+                        // assignment matrix itself is rank-deficient.
+                        bail!(
+                            "iteration {iter}: all {n} results received but rank(C) < M — \
+                             invalid code construction"
+                        );
+                    }
+                }
+                LearnerMsg::Hello { .. } => {}
+            }
+        }
+    }
+
+    /// Broadcast Shutdown and release the transport. Idempotent; also
+    /// invoked on drop.
+    pub fn shutdown(&mut self) {
+        if !self.shut_down {
+            self.transport.shutdown();
+            self.shut_down = true;
+        }
+    }
+}
+
+impl<T: ControllerTransport> Drop for Controller<T> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,306 @@
+//! The learner loop — paper Alg. 1 lines 16-26.
+//!
+//! Each learner waits for a [`CtrlMsg::Task`], updates the parameters
+//! of every agent with a nonzero coefficient in its assignment row,
+//! accumulates the coded result `y_j = Σ_i c_{j,i} θ'_i`, applies any
+//! injected straggler delay, and replies with a [`LearnerMsg::Result`].
+//! Between per-agent updates it polls for the controller's
+//! acknowledgement (line 20) and abandons the iteration's remaining
+//! work as soon as one arrives — that early-abort is what keeps coded
+//! redundancy from wasting compute once θ' is already recoverable.
+
+use anyhow::Result;
+
+use super::backend::LearnerBackend;
+use crate::transport::{CtrlMsg, LearnerEndpoint, LearnerMsg};
+
+/// Outcome of polling the control channel mid-task.
+enum Poll {
+    Continue,
+    AbortIteration,
+    Shutdown,
+}
+
+/// Drain pending control messages; decide whether to keep working on
+/// `iter`.
+fn poll_ctrl(ep: &mut impl LearnerEndpoint, iter: u64) -> Result<Poll> {
+    while let Some(msg) = ep.try_recv()? {
+        match msg {
+            CtrlMsg::Ack { iter: acked } if acked >= iter => return Ok(Poll::AbortIteration),
+            CtrlMsg::Ack { .. } => {} // stale ack for an older iteration
+            CtrlMsg::Shutdown => return Ok(Poll::Shutdown),
+            // A new Task while we're mid-iteration means the controller
+            // has moved on (it only advances after recovery) — drop the
+            // current work. The new task itself is lost, which is safe:
+            // this learner is simply a straggler for that iteration.
+            CtrlMsg::Task { .. } => return Ok(Poll::AbortIteration),
+            CtrlMsg::Welcome { .. } => {}
+        }
+    }
+    Ok(Poll::Continue)
+}
+
+/// Run the learner protocol until Shutdown (or channel close). Generic
+/// over the endpoint so the same loop serves local threads and TCP
+/// worker processes.
+pub fn learner_loop(
+    mut ep: impl LearnerEndpoint,
+    learner_id: u32,
+    mut backend: Box<dyn LearnerBackend>,
+) -> Result<()> {
+    loop {
+        let msg = match ep.recv() {
+            Ok(m) => m,
+            Err(_) => return Ok(()), // controller gone: clean exit
+        };
+        let CtrlMsg::Task { iter, row, agent_params, minibatch, straggler_delay_ns } = msg else {
+            match msg {
+                CtrlMsg::Shutdown => return Ok(()),
+                _ => continue, // stale Ack / Welcome
+            }
+        };
+        let t0 = std::time::Instant::now();
+        let p = agent_params.first().map(|v| v.len()).unwrap_or(0);
+        let mut y = vec![0.0f32; p];
+        let mut aborted = false;
+        for (i, &c) in row.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            match poll_ctrl(&mut ep, iter)? {
+                Poll::Continue => {}
+                Poll::AbortIteration => {
+                    aborted = true;
+                    break;
+                }
+                Poll::Shutdown => return Ok(()),
+            }
+            let theta_i = backend.update_agent(i, &agent_params, &minibatch)?;
+            for (acc, &v) in y.iter_mut().zip(theta_i.iter()) {
+                *acc += c * v;
+            }
+        }
+        if aborted {
+            continue;
+        }
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        // Injected straggler delay (paper §V-C): the result exists but
+        // its return is held back by t_s. The sleep is chunked so the
+        // controller's ack cancels the *remainder* — the paper's
+        // stragglers are transiently slow per iteration, they do not
+        // stay busy into the next one.
+        let mut aborted = false;
+        if straggler_delay_ns > 0 {
+            let wake = std::time::Instant::now()
+                + std::time::Duration::from_nanos(straggler_delay_ns);
+            loop {
+                match poll_ctrl(&mut ep, iter)? {
+                    Poll::Continue => {}
+                    Poll::AbortIteration => {
+                        aborted = true;
+                        break;
+                    }
+                    Poll::Shutdown => return Ok(()),
+                }
+                let now = std::time::Instant::now();
+                if now >= wake {
+                    break;
+                }
+                std::thread::sleep((wake - now).min(std::time::Duration::from_millis(1)));
+            }
+        }
+        if aborted {
+            continue;
+        }
+        // One last poll: if the controller already recovered θ' there
+        // is no point shipping a large stale vector.
+        match poll_ctrl(&mut ep, iter)? {
+            Poll::Continue => {}
+            Poll::AbortIteration => continue,
+            Poll::Shutdown => return Ok(()),
+        }
+        if ep.send(LearnerMsg::Result { iter, learner_id, y, compute_ns }).is_err() {
+            return Ok(()); // controller gone mid-send
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use crate::marl::buffer::Minibatch;
+    use crate::marl::{AgentParams, ModelDims};
+    use crate::rng::Pcg32;
+    use crate::transport::local::local_pair;
+    use crate::transport::ControllerTransport;
+    use std::time::Duration;
+
+    fn dims() -> ModelDims {
+        ModelDims { m: 3, obs_dim: 4, act_dim: 2, hidden: 8, batch: 4 }
+    }
+
+    fn task(iter: u64, row: Vec<f32>, rng: &mut Pcg32) -> (CtrlMsg, Vec<Vec<f32>>, Minibatch) {
+        let d = dims();
+        let params: Vec<Vec<f32>> =
+            (0..d.m).map(|_| AgentParams::init(&d, rng).to_flat()).collect();
+        let mb = Minibatch {
+            batch: d.batch,
+            m: d.m,
+            obs_dim: d.obs_dim,
+            act_dim: d.act_dim,
+            obs: rng.normal_vec_f32(d.batch * d.m * d.obs_dim, 1.0),
+            act: rng.normal_vec_f32(d.batch * d.m * d.act_dim, 1.0),
+            rew: rng.normal_vec_f32(d.m * d.batch, 1.0),
+            next_obs: rng.normal_vec_f32(d.batch * d.m * d.obs_dim, 1.0),
+            done: vec![0.0; d.batch],
+        };
+        (
+            CtrlMsg::Task {
+                iter,
+                row,
+                agent_params: std::sync::Arc::new(params.clone()),
+                minibatch: std::sync::Arc::new(mb.clone()),
+                straggler_delay_ns: 0,
+            },
+            params,
+            mb,
+        )
+    }
+
+    fn spawn_learner(n: usize) -> (crate::transport::local::LocalController, Vec<std::thread::JoinHandle<()>>) {
+        let (ctrl, learners) = local_pair(n);
+        let handles: Vec<_> = learners
+            .into_iter()
+            .enumerate()
+            .map(|(id, ep)| {
+                std::thread::spawn(move || {
+                    let backend = Box::new(MockBackend::new(dims(), Duration::ZERO));
+                    learner_loop(ep, id as u32, backend).unwrap();
+                })
+            })
+            .collect();
+        (ctrl, handles)
+    }
+
+    #[test]
+    fn computes_coded_combination() {
+        let (mut ctrl, handles) = spawn_learner(1);
+        let mut rng = Pcg32::seeded(0);
+        let row = vec![2.0, 0.0, -1.0];
+        let (msg, params, mb) = task(1, row.clone(), &mut rng);
+        ctrl.send_to(0, msg).unwrap();
+        let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { iter, y, .. } = got else { panic!("want Result") };
+        assert_eq!(iter, 1);
+        // reference: same mock backend run locally
+        let mut be = MockBackend::new(dims(), Duration::ZERO);
+        let t0 = be.update_agent(0, &params, &mb).unwrap();
+        let t2 = be.update_agent(2, &params, &mb).unwrap();
+        for k in 0..y.len() {
+            let want = 2.0 * t0[k] - t2[k];
+            assert!((y[k] - want).abs() < 1e-5, "k={k}: {} vs {want}", y[k]);
+        }
+        ctrl.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn ack_aborts_remaining_work() {
+        // Learner with substantial per-agent compute; ack lands between
+        // agent updates, so no result should come back for that iter.
+        let (ctrl, learners) = local_pair(1);
+        let mut ctrl = ctrl;
+        let handles: Vec<_> = learners
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    let backend =
+                        Box::new(MockBackend::new(dims(), Duration::from_millis(50)));
+                    learner_loop(ep, 0, backend).unwrap();
+                })
+            })
+            .collect();
+        let mut rng = Pcg32::seeded(1);
+        let (msg, _, _) = task(7, vec![1.0, 1.0, 1.0], &mut rng);
+        ctrl.send_to(0, msg).unwrap();
+        std::thread::sleep(Duration::from_millis(10)); // inside agent 0's update
+        ctrl.send_to(0, CtrlMsg::Ack { iter: 7 }).unwrap();
+        // No result for iter 7 (abort), and the learner stays healthy
+        // for the next iteration.
+        let quiet = ctrl.recv_timeout(Duration::from_millis(250)).unwrap();
+        assert!(quiet.is_none(), "expected no result after ack, got {quiet:?}");
+        let (msg2, _, _) = task(8, vec![1.0, 0.0, 0.0], &mut rng);
+        ctrl.send_to(0, msg2).unwrap();
+        let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { iter, .. } = got else { panic!("want Result") };
+        assert_eq!(iter, 8);
+        ctrl.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn straggler_delay_holds_back_result() {
+        let (mut ctrl, handles) = spawn_learner(1);
+        let mut rng = Pcg32::seeded(2);
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], &mut rng);
+        let CtrlMsg::Task { iter, row, agent_params, minibatch, .. } = msg else { unreachable!() };
+        let t0 = std::time::Instant::now();
+        ctrl.send_to(
+            0,
+            CtrlMsg::Task {
+                iter,
+                row,
+                agent_params,
+                minibatch,
+                straggler_delay_ns: 80_000_000,
+            },
+        )
+        .unwrap();
+        let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(80));
+        let LearnerMsg::Result { compute_ns, .. } = got else { panic!() };
+        // telemetry excludes the injected delay
+        assert!(compute_ns < 80_000_000);
+        ctrl.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stale_ack_is_ignored() {
+        let (mut ctrl, handles) = spawn_learner(1);
+        let mut rng = Pcg32::seeded(3);
+        ctrl.send_to(0, CtrlMsg::Ack { iter: 0 }).unwrap(); // stale, before any task
+        let (msg, _, _) = task(5, vec![0.0, 1.0, 0.0], &mut rng);
+        ctrl.send_to(0, msg).unwrap();
+        let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { iter, .. } = got else { panic!() };
+        assert_eq!(iter, 5);
+        ctrl.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_row_returns_zero_vector_immediately() {
+        let (mut ctrl, handles) = spawn_learner(1);
+        let mut rng = Pcg32::seeded(4);
+        let (msg, params, _) = task(1, vec![0.0, 0.0, 0.0], &mut rng);
+        ctrl.send_to(0, msg).unwrap();
+        let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { y, .. } = got else { panic!() };
+        assert_eq!(y.len(), params[0].len());
+        assert!(y.iter().all(|&v| v == 0.0));
+        ctrl.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

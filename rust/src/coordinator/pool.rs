@@ -1,0 +1,151 @@
+//! Learner pool construction: spawn N learners as in-process threads
+//! (local transport) or as `coded-marl worker` child processes (TCP
+//! transport), and hand the controller a unified transport handle.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::backend::BackendFactory;
+use super::learner::learner_loop;
+use crate::transport::local::{local_pair, LocalController};
+use crate::transport::tcp::{TcpController, TcpListenerHandle};
+use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
+
+/// A running learner pool. Implements [`ControllerTransport`] by
+/// delegation; `shutdown` additionally reaps worker processes.
+pub enum Pool {
+    Local(LocalController),
+    Tcp { ctrl: TcpController, children: Vec<std::process::Child> },
+}
+
+impl ControllerTransport for Pool {
+    fn n_learners(&self) -> usize {
+        match self {
+            Pool::Local(c) => c.n_learners(),
+            Pool::Tcp { ctrl, .. } => ctrl.n_learners(),
+        }
+    }
+
+    fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
+        match self {
+            Pool::Local(c) => c.send_to(learner, msg),
+            Pool::Tcp { ctrl, .. } => ctrl.send_to(learner, msg),
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: std::time::Duration) -> Result<Option<LearnerMsg>> {
+        match self {
+            Pool::Local(c) => c.recv_timeout(timeout),
+            Pool::Tcp { ctrl, .. } => ctrl.recv_timeout(timeout),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        match self {
+            Pool::Local(c) => c.shutdown(),
+            Pool::Tcp { ctrl, children } => {
+                ctrl.shutdown();
+                for c in children.iter_mut() {
+                    // Workers exit on Shutdown; wait briefly, then kill.
+                    match c.try_wait() {
+                        Ok(Some(_)) => {}
+                        _ => {
+                            std::thread::sleep(std::time::Duration::from_millis(200));
+                            if matches!(c.try_wait(), Ok(None)) {
+                                let _ = c.kill();
+                            }
+                            let _ = c.wait();
+                        }
+                    }
+                }
+                children.clear();
+            }
+        }
+    }
+}
+
+/// Spawn N learner threads in-process. The factory runs **inside** each
+/// thread (PJRT clients are not `Send`); a factory error aborts that
+/// learner with a message on stderr — the controller will see the
+/// missing results and time out rather than deadlock.
+pub fn spawn_local(n: usize, factory: Arc<BackendFactory>) -> Result<Pool> {
+    let (mut ctrl, endpoints) = local_pair(n);
+    let mut handles = Vec::with_capacity(n);
+    for (id, ep) in endpoints.into_iter().enumerate() {
+        let factory = Arc::clone(&factory);
+        let h = std::thread::Builder::new()
+            .name(format!("learner-{id}"))
+            .spawn(move || {
+                let backend = match factory(id as u32) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("learner {id}: backend construction failed: {e:#}");
+                        return;
+                    }
+                };
+                if let Err(e) = learner_loop(ep, id as u32, backend) {
+                    eprintln!("learner {id}: loop error: {e:#}");
+                }
+            })
+            .with_context(|| format!("spawning learner thread {id}"))?;
+        handles.push(h);
+    }
+    ctrl.set_handles(handles);
+    Ok(Pool::Local(ctrl))
+}
+
+/// Worker process launch description for the TCP pool.
+#[derive(Clone, Debug)]
+pub struct WorkerCmd {
+    /// Path to the `coded-marl` binary (defaults to the current exe).
+    pub program: std::path::PathBuf,
+    pub preset: String,
+    pub artifacts_dir: std::path::PathBuf,
+    pub backend: crate::config::Backend,
+    pub mock_compute: std::time::Duration,
+}
+
+impl WorkerCmd {
+    pub fn current_exe(
+        preset: &str,
+        artifacts_dir: impl Into<std::path::PathBuf>,
+        backend: crate::config::Backend,
+        mock_compute: std::time::Duration,
+    ) -> Result<WorkerCmd> {
+        Ok(WorkerCmd {
+            program: std::env::current_exe().context("resolving current exe")?,
+            preset: preset.to_string(),
+            artifacts_dir: artifacts_dir.into(),
+            backend,
+            mock_compute,
+        })
+    }
+}
+
+/// Bind a localhost listener, launch N worker processes pointed at it,
+/// and accept them all.
+pub fn spawn_tcp(n: usize, cmd: &WorkerCmd) -> Result<Pool> {
+    let listener = TcpListenerHandle::bind("127.0.0.1:0")?;
+    let addr = listener.addr.to_string();
+    let mut children = Vec::with_capacity(n);
+    for i in 0..n {
+        let child = std::process::Command::new(&cmd.program)
+            .arg("worker")
+            .arg("--connect")
+            .arg(&addr)
+            .arg("--preset")
+            .arg(&cmd.preset)
+            .arg("--artifacts")
+            .arg(&cmd.artifacts_dir)
+            .arg("--backend")
+            .arg(cmd.backend.name())
+            .arg("--mock-compute-us")
+            .arg(cmd.mock_compute.as_micros().to_string())
+            .spawn()
+            .with_context(|| format!("spawning worker {i} ({})", cmd.program.display()))?;
+        children.push(child);
+    }
+    let ctrl = listener.accept_workers(n)?;
+    Ok(Pool::Tcp { ctrl, children })
+}

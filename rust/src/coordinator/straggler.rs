@@ -1,0 +1,132 @@
+//! Straggler injection (paper §V-C): each training iteration, `k`
+//! learners chosen uniformly at random delay their reply by `t_s`.
+//!
+//! The delay is carried in the Task message and applied learner-side
+//! (after compute, before send) so both transports exhibit identical
+//! timing behaviour. An exponential-delay extension models heavy-tail
+//! slowdowns for the ablation bench.
+
+use crate::config::StragglerConfig;
+use crate::rng::Pcg32;
+
+/// Per-iteration straggler selector.
+pub struct StragglerInjector {
+    cfg: StragglerConfig,
+    rng: Pcg32,
+}
+
+/// The injection plan for one iteration.
+#[derive(Clone, Debug)]
+pub struct InjectionPlan {
+    /// Learner ids selected as stragglers (sorted).
+    pub stragglers: Vec<usize>,
+    /// Delay (ns) per learner; 0 for healthy learners.
+    pub delay_ns: Vec<u64>,
+}
+
+impl StragglerInjector {
+    pub fn new(cfg: StragglerConfig, rng: Pcg32) -> StragglerInjector {
+        StragglerInjector { cfg, rng }
+    }
+
+    pub fn config(&self) -> &StragglerConfig {
+        &self.cfg
+    }
+
+    /// Draw this iteration's stragglers among `n` learners.
+    pub fn plan(&mut self, n: usize) -> InjectionPlan {
+        let k = self.cfg.k.min(n);
+        let mut stragglers = self.rng.choose_k(n, k);
+        stragglers.sort_unstable();
+        let mut delay_ns = vec![0u64; n];
+        for &j in &stragglers {
+            let base = self.cfg.delay.as_nanos() as f64;
+            let d = if self.cfg.exponential {
+                // Exp(1)-scaled delay: mean t_s, occasionally much worse.
+                let u: f64 = loop {
+                    let u = self.rng.uniform();
+                    if u > 0.0 {
+                        break u;
+                    }
+                };
+                base * (-u.ln())
+            } else {
+                base
+            };
+            delay_ns[j] = d as u64;
+        }
+        InjectionPlan { stragglers, delay_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn plan_selects_exactly_k_distinct() {
+        let cfg = StragglerConfig::fixed(4, Duration::from_millis(100));
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(0));
+        for _ in 0..50 {
+            let plan = inj.plan(15);
+            assert_eq!(plan.stragglers.len(), 4);
+            let mut s = plan.stragglers.clone();
+            s.dedup();
+            assert_eq!(s.len(), 4);
+            assert_eq!(plan.delay_ns.iter().filter(|&&d| d > 0).count(), 4);
+            for &j in &plan.stragglers {
+                assert_eq!(plan.delay_ns[j], 100_000_000);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_k_injects_nothing() {
+        let mut inj = StragglerInjector::new(StragglerConfig::none(), Pcg32::seeded(1));
+        let plan = inj.plan(15);
+        assert!(plan.stragglers.is_empty());
+        assert!(plan.delay_ns.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let cfg = StragglerConfig::fixed(20, Duration::from_millis(1));
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(2));
+        let plan = inj.plan(5);
+        assert_eq!(plan.stragglers.len(), 5);
+    }
+
+    #[test]
+    fn selection_varies_across_iterations() {
+        let cfg = StragglerConfig::fixed(3, Duration::from_millis(1));
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(3));
+        let a = inj.plan(15).stragglers;
+        let mut differs = false;
+        for _ in 0..10 {
+            if inj.plan(15).stragglers != a {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "straggler selection should vary across iterations");
+    }
+
+    #[test]
+    fn exponential_delays_have_mean_near_ts() {
+        let cfg = StragglerConfig {
+            k: 1,
+            delay: Duration::from_millis(100),
+            exponential: true,
+        };
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(4));
+        let mut sum = 0.0;
+        let trials = 4000;
+        for _ in 0..trials {
+            let plan = inj.plan(4);
+            sum += plan.delay_ns[plan.stragglers[0]] as f64;
+        }
+        let mean_ms = sum / trials as f64 / 1e6;
+        assert!((mean_ms - 100.0).abs() < 8.0, "mean={mean_ms}ms");
+    }
+}

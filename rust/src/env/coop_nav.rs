@@ -1,0 +1,166 @@
+//! Cooperative navigation (paper §V-A, Fig. 2a; MPE `simple_spread`).
+//!
+//! M agents must cover M landmarks. All agents share a global reward:
+//! the negative sum over landmarks of the distance to the closest
+//! agent, minus 1 per colliding agent pair.
+//!
+//! Observation (dim 4M+2):
+//! `[self_vel(2), self_pos(2), landmark_rel(2M), others_rel(2(M−1))]`
+
+use super::world::{is_collision, Body, World};
+use super::{base_obs, random_pos, Env, EnvKind, StepResult};
+use crate::rng::Pcg32;
+
+pub struct CoopNav {
+    m: usize,
+    world: World,
+}
+
+impl CoopNav {
+    pub fn new(m: usize) -> CoopNav {
+        assert!(m >= 1);
+        let agents = (0..m).map(|_| Body::agent(0.15, 1.0, 3.0)).collect();
+        let landmarks = (0..m).map(|_| Body::landmark(0.05, false)).collect();
+        CoopNav { m, world: World::new(agents, landmarks) }
+    }
+
+    fn observations(&self) -> Vec<Vec<f32>> {
+        let lm_pos: Vec<[f64; 2]> = self.world.landmarks.iter().map(|l| l.pos).collect();
+        (0..self.m).map(|i| base_obs(&self.world, i, &lm_pos, false)).collect()
+    }
+
+    fn global_reward(&self) -> f32 {
+        let mut r = 0.0f64;
+        // coverage: distance of the closest agent to each landmark
+        for lm in &self.world.landmarks {
+            let dmin = self
+                .world
+                .agents
+                .iter()
+                .map(|a| super::world::dist(a, lm))
+                .fold(f64::INFINITY, f64::min);
+            r -= dmin;
+        }
+        // collision penalty per colliding pair (both agents penalized →
+        // −1 per agent per collision, MPE semantics → −2 per pair on the
+        // shared reward)
+        for i in 0..self.m {
+            for j in (i + 1)..self.m {
+                if is_collision(&self.world.agents[i], &self.world.agents[j]) {
+                    r -= 2.0;
+                }
+            }
+        }
+        r as f32
+    }
+}
+
+impl Env for CoopNav {
+    fn kind(&self) -> EnvKind {
+        EnvKind::CoopNav
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn k_adversaries(&self) -> usize {
+        0
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<Vec<f32>> {
+        for a in &mut self.world.agents {
+            a.pos = random_pos(rng);
+            a.vel = [0.0, 0.0];
+        }
+        for l in &mut self.world.landmarks {
+            l.pos = random_pos(rng);
+        }
+        self.observations()
+    }
+
+    fn step(&mut self, actions: &[[f32; 2]]) -> StepResult {
+        assert_eq!(actions.len(), self.m);
+        let forces: Vec<[f64; 2]> =
+            actions.iter().map(|a| [a[0] as f64, a[1] as f64]).collect();
+        self.world.step(&forces);
+        let r = self.global_reward();
+        StepResult { obs: self.observations(), rewards: vec![r; self.m] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_reward_identical_across_agents() {
+        let mut env = CoopNav::new(4);
+        let mut rng = Pcg32::seeded(0);
+        env.reset(&mut rng);
+        let r = env.step(&[[0.1, 0.0]; 4]);
+        assert!(r.rewards.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn reward_is_negative_when_uncovered() {
+        let mut env = CoopNav::new(3);
+        let mut rng = Pcg32::seeded(1);
+        env.reset(&mut rng);
+        let r = env.step(&[[0.0, 0.0]; 3]);
+        assert!(r.rewards[0] < 0.0);
+    }
+
+    #[test]
+    fn perfect_coverage_is_near_zero_reward() {
+        let mut env = CoopNav::new(3);
+        let mut rng = Pcg32::seeded(2);
+        env.reset(&mut rng);
+        // teleport agents onto spread-out landmarks (avoid collisions)
+        for (i, lm) in [[0.0, 0.0], [0.9, 0.9], [-0.9, 0.9]].iter().enumerate() {
+            env.world.landmarks[i].pos = *lm;
+            env.world.agents[i].pos = *lm;
+            env.world.agents[i].vel = [0.0, 0.0];
+        }
+        let r = env.step(&[[0.0, 0.0]; 3]);
+        // one physics step of drift at zero velocity: distances stay ~0
+        assert!(r.rewards[0] > -0.1, "reward {}", r.rewards[0]);
+    }
+
+    #[test]
+    fn moving_toward_landmark_improves_reward() {
+        let mut env = CoopNav::new(1);
+        env.world.landmarks[0].pos = [0.5, 0.0];
+        env.world.agents[0].pos = [-0.5, 0.0];
+        env.world.agents[0].vel = [0.0, 0.0];
+        let r_still = {
+            let mut e2 = CoopNav::new(1);
+            e2.world.landmarks[0].pos = [0.5, 0.0];
+            e2.world.agents[0].pos = [-0.5, 0.0];
+            e2.step(&[[0.0, 0.0]]).rewards[0]
+        };
+        let r_toward = env.step(&[[1.0, 0.0]]).rewards[0];
+        assert!(r_toward > r_still);
+    }
+
+    #[test]
+    fn collisions_penalized() {
+        let mut env = CoopNav::new(2);
+        env.world.landmarks[0].pos = [10.0, 10.0];
+        env.world.landmarks[1].pos = [-10.0, -10.0];
+        // overlapping agents
+        env.world.agents[0].pos = [0.0, 0.0];
+        env.world.agents[1].pos = [0.05, 0.0];
+        let r_collide = env.step(&[[0.0, 0.0]; 2]).rewards[0];
+        let mut env2 = CoopNav::new(2);
+        env2.world.landmarks[0].pos = [10.0, 10.0];
+        env2.world.landmarks[1].pos = [-10.0, -10.0];
+        env2.world.agents[0].pos = [0.0, 0.0];
+        env2.world.agents[1].pos = [0.05, 0.0];
+        // compute same-but-separated baseline
+        env2.world.agents[1].pos = [1.0, 0.0];
+        let r_apart = env2.step(&[[0.0, 0.0]; 2]).rewards[0];
+        // collision case loses ~2 even accounting for distance deltas
+        assert!(r_collide < r_apart);
+    }
+}

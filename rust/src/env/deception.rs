@@ -1,0 +1,201 @@
+//! Physical deception (paper §V-A, Fig. 2c; MPE `simple_adversary`
+//! generalized to K adversaries).
+//!
+//! M−K good agents know which of the `N_LANDMARKS_DECEPTION` landmarks
+//! is the target and try to (a) reach it and (b) spread over all
+//! landmarks so the K adversaries — who do *not* know the target —
+//! cannot infer it. Good agents share the reward
+//! `−min_good d(good, target) + min_adv d(adv, target)`; each adversary
+//! gets `−d(adv, target)`.
+//!
+//! Agent order: indices `0..K` are adversaries.
+//!
+//! Observation (dim 2M+8):
+//! `[self_vel(2), self_pos(2), landmark_rel(4), others_rel(2(M−1)),
+//!   target_rel(2)]` — the trailing target block is **zeroed for
+//! adversaries** (uniform width, semantic masking; DESIGN.md §2).
+
+use super::world::{dist, Body, World};
+use super::{base_obs, random_pos, Env, EnvKind, StepResult, N_LANDMARKS_DECEPTION};
+use crate::rng::Pcg32;
+
+pub struct Deception {
+    m: usize,
+    k: usize,
+    world: World,
+    target: usize,
+}
+
+impl Deception {
+    pub fn new(m: usize, k_adversaries: usize) -> Deception {
+        assert!(m >= 2 && k_adversaries >= 1 && k_adversaries < m,
+            "deception needs 1 <= K < M");
+        let agents = (0..m).map(|_| Body::agent(0.05, 1.0, 3.0)).collect();
+        let landmarks = (0..N_LANDMARKS_DECEPTION)
+            .map(|_| Body::landmark(0.08, false))
+            .collect();
+        Deception { m, k: k_adversaries, world: World::new(agents, landmarks), target: 0 }
+    }
+
+    pub(crate) fn observations(&self) -> Vec<Vec<f32>> {
+        let lm_pos: Vec<[f64; 2]> = self.world.landmarks.iter().map(|l| l.pos).collect();
+        (0..self.m)
+            .map(|i| {
+                let mut o = base_obs(&self.world, i, &lm_pos, false);
+                if i < self.k {
+                    // adversary: target unknown
+                    o.push(0.0);
+                    o.push(0.0);
+                } else {
+                    let me = &self.world.agents[i];
+                    let t = &self.world.landmarks[self.target];
+                    o.push((t.pos[0] - me.pos[0]) as f32);
+                    o.push((t.pos[1] - me.pos[1]) as f32);
+                }
+                o
+            })
+            .collect()
+    }
+
+    pub(crate) fn rewards(&self) -> Vec<f32> {
+        let t = &self.world.landmarks[self.target];
+        let good_min = (self.k..self.m)
+            .map(|g| dist(&self.world.agents[g], t))
+            .fold(f64::INFINITY, f64::min);
+        let adv_min = (0..self.k)
+            .map(|a| dist(&self.world.agents[a], t))
+            .fold(f64::INFINITY, f64::min);
+        let good_r = (-good_min + adv_min) as f32;
+        (0..self.m)
+            .map(|i| {
+                if i < self.k {
+                    -(dist(&self.world.agents[i], t) as f32)
+                } else {
+                    good_r
+                }
+            })
+            .collect()
+    }
+
+    pub(crate) fn reset_world(&mut self, rng: &mut Pcg32) {
+        for a in &mut self.world.agents {
+            a.pos = random_pos(rng);
+            a.vel = [0.0, 0.0];
+        }
+        for l in &mut self.world.landmarks {
+            l.pos = [rng.uniform_range(-0.9, 0.9), rng.uniform_range(-0.9, 0.9)];
+        }
+        self.target = rng.below(N_LANDMARKS_DECEPTION as u32) as usize;
+    }
+
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub(crate) fn world_mut(&mut self) -> &mut World {
+        &mut self.world
+    }
+
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub(crate) fn target_idx(&self) -> usize {
+        self.target
+    }
+}
+
+impl Env for Deception {
+    fn kind(&self) -> EnvKind {
+        EnvKind::Deception
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn k_adversaries(&self) -> usize {
+        self.k
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<Vec<f32>> {
+        self.reset_world(rng);
+        self.observations()
+    }
+
+    fn step(&mut self, actions: &[[f32; 2]]) -> StepResult {
+        assert_eq!(actions.len(), self.m);
+        let forces: Vec<[f64; 2]> =
+            actions.iter().map(|a| [a[0] as f64, a[1] as f64]).collect();
+        self.world.step(&forces);
+        StepResult { obs: self.observations(), rewards: self.rewards() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(seed: u64) -> Deception {
+        let mut env = Deception::new(4, 2);
+        let mut rng = Pcg32::seeded(seed);
+        env.reset(&mut rng);
+        env
+    }
+
+    #[test]
+    fn adversary_obs_hides_target() {
+        let env = fresh(0);
+        let obs = env.observations();
+        let d = env.obs_dim();
+        for a in 0..2 {
+            assert_eq!(obs[a][d - 2], 0.0);
+            assert_eq!(obs[a][d - 1], 0.0);
+        }
+        // good agents see a (generally) nonzero target vector
+        let good_sees: f32 = obs[2][d - 2].abs() + obs[2][d - 1].abs();
+        assert!(good_sees > 0.0);
+    }
+
+    #[test]
+    fn good_reward_improves_when_closer_to_target() {
+        let mut env = fresh(1);
+        let t = env.target_idx();
+        let tpos = env.world_mut().landmarks[t].pos;
+        env.world_mut().agents[2].pos = tpos; // good agent on target
+        env.world_mut().agents[3].pos = tpos;
+        env.world_mut().agents[0].pos = [tpos[0] + 2.0, tpos[1]]; // adversaries far
+        env.world_mut().agents[1].pos = [tpos[0], tpos[1] + 2.0];
+        let r_good_near = env.rewards()[2];
+        env.world_mut().agents[2].pos = [tpos[0] + 3.0, tpos[1]];
+        env.world_mut().agents[3].pos = [tpos[0] + 3.0, tpos[1]];
+        let r_good_far = env.rewards()[2];
+        assert!(r_good_near > r_good_far);
+    }
+
+    #[test]
+    fn adversary_reward_is_negative_distance() {
+        let mut env = fresh(2);
+        let t = env.target_idx();
+        let tpos = env.world_mut().landmarks[t].pos;
+        env.world_mut().agents[0].pos = [tpos[0] + 1.0, tpos[1]];
+        let r = env.rewards();
+        assert!((r[0] + 1.0).abs() < 1e-5, "r_adv={}", r[0]);
+    }
+
+    #[test]
+    fn adversary_proximity_penalizes_good_team() {
+        let mut env = fresh(3);
+        let t = env.target_idx();
+        let tpos = env.world_mut().landmarks[t].pos;
+        env.world_mut().agents[2].pos = [tpos[0] + 0.5, tpos[1]];
+        env.world_mut().agents[3].pos = [tpos[0] + 0.5, tpos[1]];
+        env.world_mut().agents[0].pos = [tpos[0] + 2.0, tpos[1]];
+        env.world_mut().agents[1].pos = [tpos[0] + 2.0, tpos[1]];
+        let r_adv_far = env.rewards()[2];
+        env.world_mut().agents[0].pos = tpos;
+        let r_adv_on_target = env.rewards()[2];
+        assert!(r_adv_far > r_adv_on_target);
+    }
+
+    #[test]
+    fn target_varies_with_seed() {
+        let targets: Vec<usize> = (0..32).map(|s| fresh(s).target_idx()).collect();
+        assert!(targets.iter().any(|&t| t == 0));
+        assert!(targets.iter().any(|&t| t == 1));
+    }
+}

@@ -1,0 +1,196 @@
+//! Keep-away (paper §V-A, Fig. 2d; MPE `simple_push`-like, described by
+//! the paper as "similar to physical deception" but with adversaries
+//! that physically block).
+//!
+//! M−K good agents try to reach the target landmark; K adversaries do
+//! not know the target but are rewarded for proximity to it and can
+//! body-block the good agents (all agents collide here, unlike
+//! deception). Rewards: good agents share `−min_good d(good, target)`;
+//! adversary i gets `−d(adv_i, target) + min_good d(good, target)` (it
+//! wants to sit on the target and keep the good agents away).
+//!
+//! Agent order: indices `0..K` are adversaries.
+//!
+//! Observation (dim 2M+8): same layout as deception —
+//! `[self_vel(2), self_pos(2), landmark_rel(4), others_rel(2(M−1)),
+//!   target_rel(2, zeroed for adversaries)]`
+
+use super::world::{dist, Body, World};
+use super::{base_obs, random_pos, Env, EnvKind, StepResult, N_LANDMARKS_DECEPTION};
+use crate::rng::Pcg32;
+
+pub struct KeepAway {
+    m: usize,
+    k: usize,
+    world: World,
+    target: usize,
+}
+
+impl KeepAway {
+    pub fn new(m: usize, k_adversaries: usize) -> KeepAway {
+        assert!(m >= 2 && k_adversaries >= 1 && k_adversaries < m,
+            "keep_away needs 1 <= K < M");
+        let mut agents: Vec<Body> = Vec::with_capacity(m);
+        for i in 0..m {
+            if i < k_adversaries {
+                // blockers: bigger and a bit slower
+                agents.push(Body::agent(0.1, 1.0, 3.0));
+            } else {
+                agents.push(Body::agent(0.05, 1.2, 3.5));
+            }
+        }
+        let landmarks = (0..N_LANDMARKS_DECEPTION)
+            .map(|_| Body::landmark(0.08, false))
+            .collect();
+        KeepAway { m, k: k_adversaries, world: World::new(agents, landmarks), target: 0 }
+    }
+
+    fn observations(&self) -> Vec<Vec<f32>> {
+        let lm_pos: Vec<[f64; 2]> = self.world.landmarks.iter().map(|l| l.pos).collect();
+        (0..self.m)
+            .map(|i| {
+                let mut o = base_obs(&self.world, i, &lm_pos, false);
+                if i < self.k {
+                    o.push(0.0);
+                    o.push(0.0);
+                } else {
+                    let me = &self.world.agents[i];
+                    let t = &self.world.landmarks[self.target];
+                    o.push((t.pos[0] - me.pos[0]) as f32);
+                    o.push((t.pos[1] - me.pos[1]) as f32);
+                }
+                o
+            })
+            .collect()
+    }
+
+    fn rewards(&self) -> Vec<f32> {
+        let t = &self.world.landmarks[self.target];
+        let good_min = (self.k..self.m)
+            .map(|g| dist(&self.world.agents[g], t))
+            .fold(f64::INFINITY, f64::min);
+        (0..self.m)
+            .map(|i| {
+                if i < self.k {
+                    (-dist(&self.world.agents[i], t) + good_min) as f32
+                } else {
+                    (-good_min) as f32
+                }
+            })
+            .collect()
+    }
+
+    #[cfg(test)]
+    fn world_mut(&mut self) -> &mut World {
+        &mut self.world
+    }
+
+    #[cfg(test)]
+    fn target_idx(&self) -> usize {
+        self.target
+    }
+}
+
+impl Env for KeepAway {
+    fn kind(&self) -> EnvKind {
+        EnvKind::KeepAway
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn k_adversaries(&self) -> usize {
+        self.k
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<Vec<f32>> {
+        for a in &mut self.world.agents {
+            a.pos = random_pos(rng);
+            a.vel = [0.0, 0.0];
+        }
+        for l in &mut self.world.landmarks {
+            l.pos = [rng.uniform_range(-0.9, 0.9), rng.uniform_range(-0.9, 0.9)];
+        }
+        self.target = rng.below(N_LANDMARKS_DECEPTION as u32) as usize;
+        self.observations()
+    }
+
+    fn step(&mut self, actions: &[[f32; 2]]) -> StepResult {
+        assert_eq!(actions.len(), self.m);
+        let forces: Vec<[f64; 2]> =
+            actions.iter().map(|a| [a[0] as f64, a[1] as f64]).collect();
+        self.world.step(&forces);
+        StepResult { obs: self.observations(), rewards: self.rewards() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(seed: u64) -> KeepAway {
+        let mut env = KeepAway::new(4, 2);
+        let mut rng = Pcg32::seeded(seed);
+        env.reset(&mut rng);
+        env
+    }
+
+    #[test]
+    fn good_reward_is_negative_min_distance() {
+        let mut env = fresh(0);
+        let t = env.target_idx();
+        let tpos = env.world_mut().landmarks[t].pos;
+        env.world_mut().agents[2].pos = [tpos[0] + 0.5, tpos[1]];
+        env.world_mut().agents[3].pos = [tpos[0] + 2.0, tpos[1]];
+        let r = env.rewards();
+        assert!((r[2] + 0.5).abs() < 1e-5, "r_good={}", r[2]);
+        assert_eq!(r[2], r[3], "good reward shared");
+    }
+
+    #[test]
+    fn adversary_wants_target_and_distance_for_good() {
+        let mut env = fresh(1);
+        let t = env.target_idx();
+        let tpos = env.world_mut().landmarks[t].pos;
+        env.world_mut().agents[2].pos = [tpos[0] + 1.0, tpos[1]];
+        env.world_mut().agents[3].pos = [tpos[0] + 1.0, tpos[1]];
+        env.world_mut().agents[0].pos = tpos;
+        env.world_mut().agents[1].pos = [tpos[0] + 3.0, tpos[1]];
+        let r_on = env.rewards()[0];
+        env.world_mut().agents[0].pos = [tpos[0] - 1.0, tpos[1]];
+        let r_off = env.rewards()[0];
+        assert!(r_on > r_off);
+    }
+
+    #[test]
+    fn adversaries_block_physically() {
+        // an adversary parked between a good agent and its straight-line
+        // path exerts contact force once they overlap
+        let mut env = fresh(2);
+        env.world_mut().agents[0].pos = [0.0, 0.0]; // blocker (size .1)
+        env.world_mut().agents[2].pos = [0.1, 0.0]; // overlapping good
+        let before = env.world_mut().agents[2].pos[0];
+        env.step(&[[0.0, 0.0]; 4]);
+        // pushed away from blocker (positive x)
+        assert!(env.world_mut().agents[2].pos[0] > before);
+    }
+
+    #[test]
+    fn zero_sum_flavor_between_roles() {
+        // good getting closer to target strictly helps good and hurts
+        // the adversary's blocking term
+        let mut env = fresh(3);
+        let t = env.target_idx();
+        let tpos = env.world_mut().landmarks[t].pos;
+        env.world_mut().agents[0].pos = [tpos[0] + 1.0, tpos[1] + 1.0];
+        env.world_mut().agents[1].pos = [tpos[0] - 1.0, tpos[1] - 1.0];
+        env.world_mut().agents[3].pos = [tpos[0] + 2.0, tpos[1]];
+        env.world_mut().agents[2].pos = [tpos[0] + 1.5, tpos[1]];
+        let r1 = env.rewards();
+        env.world_mut().agents[2].pos = [tpos[0] + 0.2, tpos[1]];
+        let r2 = env.rewards();
+        assert!(r2[2] > r1[2], "good improves");
+        assert!(r2[0] < r1[0], "adversary blocking term worsens");
+    }
+}

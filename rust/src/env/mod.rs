@@ -1,0 +1,228 @@
+//! Multi-agent environments (paper §V-A): cooperative navigation,
+//! predator–prey, physical deception and keep-away, built on the
+//! MPE-like point-mass physics in [`world`].
+//!
+//! Conventions shared with the Python side (python/compile/presets.py —
+//! the dimension formulas here and there are pinned against each other
+//! by tests on both sides):
+//!
+//! * continuous 2-D force actions in [-1, 1]^2
+//! * per-agent observation layouts documented on each env type
+//! * in competitive envs the **first K agents are the adversaries**
+//! * observations are uniform-width across agents (semantic masking —
+//!   e.g. the deception target is zeroed for adversaries — instead of
+//!   heterogeneous widths, which the paper's stacked-θ recovery
+//!   implicitly requires; DESIGN.md §2)
+
+pub mod coop_nav;
+pub mod deception;
+pub mod keep_away;
+pub mod predator_prey;
+pub mod world;
+
+use crate::rng::Pcg32;
+
+/// Environment kinds, mirroring `presets.ENVS` on the Python side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EnvKind {
+    CoopNav,
+    PredatorPrey,
+    Deception,
+    KeepAway,
+}
+
+impl EnvKind {
+    pub const ALL: [EnvKind; 4] =
+        [EnvKind::CoopNav, EnvKind::PredatorPrey, EnvKind::Deception, EnvKind::KeepAway];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnvKind::CoopNav => "coop_nav",
+            EnvKind::PredatorPrey => "predator_prey",
+            EnvKind::Deception => "deception",
+            EnvKind::KeepAway => "keep_away",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EnvKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Per-agent observation dimension — MUST equal
+    /// `presets.obs_dim(env, m)` on the Python side.
+    pub fn obs_dim(&self, m: usize) -> usize {
+        match self {
+            EnvKind::CoopNav => 4 + 2 * m + 2 * (m - 1),
+            EnvKind::PredatorPrey => 4 + 2 * N_OBSTACLES + 4 * (m - 1),
+            EnvKind::Deception | EnvKind::KeepAway => {
+                4 + 2 * N_LANDMARKS_DECEPTION + 2 * (m - 1) + 2
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for EnvKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Number of static obstacles in predator–prey.
+pub const N_OBSTACLES: usize = 2;
+/// Number of candidate landmarks in deception / keep-away.
+pub const N_LANDMARKS_DECEPTION: usize = 2;
+/// Action dimension (2-D force).
+pub const ACT_DIM: usize = 2;
+
+/// Result of one environment step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    /// Per-agent observations, each of length `obs_dim`.
+    pub obs: Vec<Vec<f32>>,
+    /// Per-agent rewards.
+    pub rewards: Vec<f32>,
+}
+
+/// A multi-agent environment. Implementations are deterministic given
+/// the RNG passed to `reset`.
+pub trait Env: Send {
+    fn kind(&self) -> EnvKind;
+    /// Total number of agents M.
+    fn m(&self) -> usize;
+    /// Number of adversaries K (first K agents).
+    fn k_adversaries(&self) -> usize;
+    fn obs_dim(&self) -> usize {
+        self.kind().obs_dim(self.m())
+    }
+    /// Reset to a fresh episode; returns initial observations.
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<Vec<f32>>;
+    /// Apply joint actions (each agent's `[f32; 2]` force).
+    fn step(&mut self, actions: &[[f32; 2]]) -> StepResult;
+}
+
+/// Construct an environment by kind.
+pub fn make_env(kind: EnvKind, m: usize, k_adversaries: usize) -> Box<dyn Env> {
+    match kind {
+        EnvKind::CoopNav => {
+            assert_eq!(k_adversaries, 0, "coop_nav is fully cooperative");
+            Box::new(coop_nav::CoopNav::new(m))
+        }
+        EnvKind::PredatorPrey => Box::new(predator_prey::PredatorPrey::new(m, k_adversaries)),
+        EnvKind::Deception => Box::new(deception::Deception::new(m, k_adversaries)),
+        EnvKind::KeepAway => Box::new(keep_away::KeepAway::new(m, k_adversaries)),
+    }
+}
+
+/// Shared observation-building helper: `[self_vel, self_pos, entity
+/// rel-positions..., other-agent rel-positions...]` (+ optional extras
+/// appended by each env).
+pub(crate) fn base_obs(
+    w: &world::World,
+    agent: usize,
+    entity_positions: &[[f64; 2]],
+    include_other_vels: bool,
+) -> Vec<f32> {
+    let me = &w.agents[agent];
+    let mut o: Vec<f32> = Vec::new();
+    o.push(me.vel[0] as f32);
+    o.push(me.vel[1] as f32);
+    o.push(me.pos[0] as f32);
+    o.push(me.pos[1] as f32);
+    for e in entity_positions {
+        o.push((e[0] - me.pos[0]) as f32);
+        o.push((e[1] - me.pos[1]) as f32);
+    }
+    for (j, other) in w.agents.iter().enumerate() {
+        if j == agent {
+            continue;
+        }
+        o.push((other.pos[0] - me.pos[0]) as f32);
+        o.push((other.pos[1] - me.pos[1]) as f32);
+    }
+    if include_other_vels {
+        for (j, other) in w.agents.iter().enumerate() {
+            if j == agent {
+                continue;
+            }
+            o.push(other.vel[0] as f32);
+            o.push(other.vel[1] as f32);
+        }
+    }
+    o
+}
+
+/// Uniform random position in the arena [-1, 1]^2.
+pub(crate) fn random_pos(rng: &mut Pcg32) -> [f64; 2] {
+    [rng.uniform_range(-1.0, 1.0), rng.uniform_range(-1.0, 1.0)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin the dimension contract to the same constants as
+    /// python/tests/test_presets.py.
+    #[test]
+    fn obs_dims_match_python_presets() {
+        assert_eq!(EnvKind::CoopNav.obs_dim(8), 34);
+        assert_eq!(EnvKind::CoopNav.obs_dim(10), 42);
+        assert_eq!(EnvKind::CoopNav.obs_dim(3), 14);
+        assert_eq!(EnvKind::PredatorPrey.obs_dim(8), 36);
+        assert_eq!(EnvKind::PredatorPrey.obs_dim(10), 44);
+        assert_eq!(EnvKind::Deception.obs_dim(8), 24);
+        assert_eq!(EnvKind::KeepAway.obs_dim(10), 28);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in EnvKind::ALL {
+            assert_eq!(EnvKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EnvKind::parse("bogus"), None);
+    }
+
+    /// Every env obeys the Env contract: obs dims, reward lengths,
+    /// determinism under a fixed seed.
+    #[test]
+    fn env_contract_all_kinds() {
+        for kind in EnvKind::ALL {
+            let (m, k) = if kind == EnvKind::CoopNav { (4, 0) } else { (4, 2) };
+            let run = |seed: u64| {
+                let mut env = make_env(kind, m, k);
+                let mut rng = Pcg32::seeded(seed);
+                let obs0 = env.reset(&mut rng);
+                assert_eq!(obs0.len(), m);
+                for o in &obs0 {
+                    assert_eq!(o.len(), kind.obs_dim(m), "{kind}");
+                }
+                let mut trace = Vec::new();
+                for t in 0..20 {
+                    let acts: Vec<[f32; 2]> = (0..m)
+                        .map(|i| {
+                            let s = ((t + i) as f32 * 0.3).sin();
+                            [s, -s]
+                        })
+                        .collect();
+                    let r = env.step(&acts);
+                    assert_eq!(r.obs.len(), m);
+                    assert_eq!(r.rewards.len(), m);
+                    for o in &r.obs {
+                        assert_eq!(o.len(), kind.obs_dim(m));
+                        assert!(o.iter().all(|v| v.is_finite()));
+                    }
+                    assert!(r.rewards.iter().all(|v| v.is_finite()));
+                    trace.push(r.rewards.clone());
+                }
+                trace
+            };
+            assert_eq!(run(7), run(7), "{kind} must be deterministic");
+            assert_ne!(run(7), run(8), "{kind} must vary with seed");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fully cooperative")]
+    fn coop_nav_rejects_adversaries() {
+        make_env(EnvKind::CoopNav, 4, 1);
+    }
+}

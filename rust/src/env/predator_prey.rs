@@ -1,0 +1,190 @@
+//! Predator–prey (paper §V-A, Fig. 2b; MPE `simple_tag` with the
+//! paper's role description).
+//!
+//! M−K slow "good" agents cooperatively chase K faster adversary
+//! agents around `N_OBSTACLES` static obstacles. A good/adversary
+//! collision rewards all good agents (+10) and penalizes the hit
+//! adversary (−10). Shaped terms keep gradients informative: good
+//! agents are penalized by 0.1× the distance to the nearest adversary;
+//! adversaries are rewarded by 0.1× the distance to the nearest good
+//! agent and penalized for leaving the arena (bound penalty).
+//!
+//! Agent order: indices `0..K` are adversaries (fast), `K..M` good.
+//!
+//! Observation (dim 4M+4):
+//! `[self_vel(2), self_pos(2), obstacle_rel(4), others_rel(2(M−1)),
+//!   others_vel(2(M−1))]`
+
+use super::world::{bound_penalty, dist, is_collision, Body, World};
+use super::{base_obs, random_pos, Env, EnvKind, StepResult, N_OBSTACLES};
+use crate::rng::Pcg32;
+
+pub struct PredatorPrey {
+    m: usize,
+    k: usize,
+    world: World,
+}
+
+impl PredatorPrey {
+    pub fn new(m: usize, k_adversaries: usize) -> PredatorPrey {
+        assert!(m >= 2 && k_adversaries >= 1 && k_adversaries < m,
+            "predator_prey needs 1 <= K < M");
+        let mut agents = Vec::with_capacity(m);
+        for i in 0..m {
+            if i < k_adversaries {
+                // adversaries: faster, smaller (the chased)
+                agents.push(Body::agent(0.05, 1.3, 4.0));
+            } else {
+                // good agents: slower, larger (the chasers)
+                agents.push(Body::agent(0.075, 1.0, 3.0));
+            }
+        }
+        let landmarks = (0..N_OBSTACLES).map(|_| Body::landmark(0.2, true)).collect();
+        PredatorPrey { m, k: k_adversaries, world: World::new(agents, landmarks) }
+    }
+
+    fn observations(&self) -> Vec<Vec<f32>> {
+        let ob_pos: Vec<[f64; 2]> = self.world.landmarks.iter().map(|l| l.pos).collect();
+        (0..self.m).map(|i| base_obs(&self.world, i, &ob_pos, true)).collect()
+    }
+
+    fn rewards(&self) -> Vec<f32> {
+        let mut r = vec![0.0f64; self.m];
+        let adversaries = 0..self.k;
+        let good = self.k..self.m;
+
+        // collisions: good hits adversary
+        let mut collisions_with: Vec<usize> = vec![0; self.m];
+        for g in good.clone() {
+            for a in adversaries.clone() {
+                if is_collision(&self.world.agents[g], &self.world.agents[a]) {
+                    collisions_with[a] += 1;
+                    collisions_with[g] += 1;
+                }
+            }
+        }
+        let total_catches: usize = (0..self.k).map(|a| collisions_with[a]).sum();
+        for g in good.clone() {
+            r[g] += 10.0 * total_catches as f64; // team reward
+            // shaped: approach the nearest adversary
+            let dmin = adversaries
+                .clone()
+                .map(|a| dist(&self.world.agents[g], &self.world.agents[a]))
+                .fold(f64::INFINITY, f64::min);
+            r[g] -= 0.1 * dmin;
+        }
+        for a in adversaries.clone() {
+            r[a] -= 10.0 * collisions_with[a] as f64;
+            // shaped: flee the nearest good agent
+            let dmin = good
+                .clone()
+                .map(|g| dist(&self.world.agents[a], &self.world.agents[g]))
+                .fold(f64::INFINITY, f64::min);
+            r[a] += 0.1 * dmin;
+            r[a] -= bound_penalty(&self.world.agents[a].pos);
+        }
+        r.into_iter().map(|x| x as f32).collect()
+    }
+}
+
+impl Env for PredatorPrey {
+    fn kind(&self) -> EnvKind {
+        EnvKind::PredatorPrey
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn k_adversaries(&self) -> usize {
+        self.k
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<Vec<f32>> {
+        for a in &mut self.world.agents {
+            a.pos = random_pos(rng);
+            a.vel = [0.0, 0.0];
+        }
+        for l in &mut self.world.landmarks {
+            l.pos = [rng.uniform_range(-0.9, 0.9), rng.uniform_range(-0.9, 0.9)];
+        }
+        self.observations()
+    }
+
+    fn step(&mut self, actions: &[[f32; 2]]) -> StepResult {
+        assert_eq!(actions.len(), self.m);
+        let forces: Vec<[f64; 2]> =
+            actions.iter().map(|a| [a[0] as f64, a[1] as f64]).collect();
+        self.world.step(&forces);
+        StepResult { obs: self.observations(), rewards: self.rewards() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(m: usize, k: usize, seed: u64) -> PredatorPrey {
+        let mut env = PredatorPrey::new(m, k);
+        let mut rng = Pcg32::seeded(seed);
+        env.reset(&mut rng);
+        env
+    }
+
+    #[test]
+    fn adversaries_are_faster() {
+        let env = PredatorPrey::new(4, 2);
+        assert!(env.world.agents[0].max_speed.unwrap() > env.world.agents[3].max_speed.unwrap());
+    }
+
+    #[test]
+    fn catch_rewards_good_and_penalizes_adversary() {
+        // rewards() is evaluated at the placed (overlapping) state —
+        // stepping first would let contact forces separate the bodies.
+        let mut env = fresh(4, 2, 0);
+        // place good agent 2 on top of adversary 0, others far away
+        env.world.agents[0].pos = [0.0, 0.0];
+        env.world.agents[2].pos = [0.05, 0.0];
+        env.world.agents[1].pos = [0.8, 0.8]; // inside bounds: no bound penalty
+        env.world.agents[3].pos = [-0.8, -0.8];
+        let r = env.rewards();
+        assert!(r[2] > 5.0, "good catcher r={}", r[2]);
+        assert!(r[3] > 5.0, "good teammate shares team reward r={}", r[3]);
+        assert!(r[0] < -5.0, "caught adversary r={}", r[0]);
+        assert!(r[1] > -5.0, "uncaught adversary not penalized by catch r={}", r[1]);
+    }
+
+    #[test]
+    fn shaped_rewards_have_right_sign() {
+        // keep all positions inside |x| < 0.9 so the bound penalty is 0
+        let mut env = fresh(2, 1, 1);
+        env.world.agents[0].pos = [0.8, 0.0]; // adversary
+        env.world.agents[1].pos = [-0.8, 0.0]; // good
+        let r_far = env.rewards();
+        env.world.agents[0].pos = [0.3, 0.0];
+        env.world.agents[1].pos = [-0.3, 0.0];
+        let r_near = env.rewards();
+        // good agent prefers being near; adversary prefers far
+        assert!(r_near[1] > r_far[1]);
+        assert!(r_far[0] > r_near[0]);
+    }
+
+    #[test]
+    fn adversary_pays_bound_penalty() {
+        let mut env = fresh(2, 1, 2);
+        env.world.agents[0].pos = [3.0, 3.0]; // far outside
+        env.world.agents[1].pos = [2.0, 2.0]; // same distance to adv
+        let r_out = env.step(&[[0.0, 0.0]; 2]).rewards[0];
+        let mut env2 = fresh(2, 1, 2);
+        env2.world.agents[0].pos = [0.0, 0.0];
+        env2.world.agents[1].pos = [-1.0, -1.0]; // roughly same separation
+        let r_in = env2.step(&[[0.0, 0.0]; 2]).rewards[0];
+        assert!(r_out < r_in, "outside ({r_out}) should be worse than inside ({r_in})");
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= K < M")]
+    fn rejects_all_adversaries() {
+        PredatorPrey::new(4, 4);
+    }
+}

@@ -1,0 +1,314 @@
+//! 2-D point-mass physics — the multiagent-particle-environment (MPE)
+//! substrate the paper's four tasks run on.
+//!
+//! Dynamics per step (MPE semantics):
+//!   v ← v·(1 − damping) + (F/m)·dt,  clamped to max_speed
+//!   p ← p + v·dt
+//! where `F` is the agent's control force (its 2-D action, scaled by
+//! its acceleration gain) plus soft contact forces between overlapping
+//! entities.
+
+/// A physical body: agents are movable, landmarks/obstacles are not.
+#[derive(Clone, Debug)]
+pub struct Body {
+    pub pos: [f64; 2],
+    pub vel: [f64; 2],
+    /// Collision radius.
+    pub size: f64,
+    /// None = unbounded speed.
+    pub max_speed: Option<f64>,
+    pub movable: bool,
+    pub mass: f64,
+    /// Force gain applied to the (unit-scale) control action.
+    pub accel: f64,
+    /// Participates in contact forces.
+    pub collides: bool,
+}
+
+impl Body {
+    pub fn agent(size: f64, max_speed: f64, accel: f64) -> Body {
+        Body {
+            pos: [0.0; 2],
+            vel: [0.0; 2],
+            size,
+            max_speed: Some(max_speed),
+            movable: true,
+            mass: 1.0,
+            accel,
+            collides: true,
+        }
+    }
+
+    pub fn landmark(size: f64, collides: bool) -> Body {
+        Body {
+            pos: [0.0; 2],
+            vel: [0.0; 2],
+            size,
+            max_speed: None,
+            movable: false,
+            mass: 1.0,
+            accel: 0.0,
+            collides,
+        }
+    }
+}
+
+/// Simulation parameters (MPE defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct PhysicsParams {
+    pub dt: f64,
+    pub damping: f64,
+    pub contact_force: f64,
+    pub contact_margin: f64,
+}
+
+impl Default for PhysicsParams {
+    fn default() -> Self {
+        PhysicsParams { dt: 0.1, damping: 0.25, contact_force: 100.0, contact_margin: 1e-3 }
+    }
+}
+
+/// The world: a set of agent bodies plus static landmark bodies.
+#[derive(Clone, Debug)]
+pub struct World {
+    pub agents: Vec<Body>,
+    pub landmarks: Vec<Body>,
+    pub params: PhysicsParams,
+}
+
+impl World {
+    pub fn new(agents: Vec<Body>, landmarks: Vec<Body>) -> World {
+        World { agents, landmarks, params: PhysicsParams::default() }
+    }
+
+    /// Soft contact force between two bodies (MPE's log-barrier
+    /// approximation): zero when separated, grows smoothly with
+    /// penetration depth.
+    fn contact_force(&self, a: &Body, b: &Body) -> [f64; 2] {
+        let dx = a.pos[0] - b.pos[0];
+        let dy = a.pos[1] - b.pos[1];
+        let dist = (dx * dx + dy * dy).sqrt().max(1e-8);
+        let dmin = a.size + b.size;
+        let k = self.params.contact_margin;
+        // softmax penetration: k * log(1 + exp((dmin - dist)/k))
+        let pen = k * (1.0 + ((dmin - dist) / k).exp()).ln();
+        let f = self.params.contact_force * pen / dist;
+        [f * dx, f * dy]
+    }
+
+    /// Advance one step given per-agent 2-D control actions in
+    /// [-1, 1]^2 (scaled internally by each body's accel gain).
+    pub fn step(&mut self, actions: &[[f64; 2]]) {
+        assert_eq!(actions.len(), self.agents.len());
+        let na = self.agents.len();
+        let mut forces = vec![[0.0f64; 2]; na];
+        // control forces
+        for (f, (a, body)) in forces.iter_mut().zip(actions.iter().zip(&self.agents)) {
+            f[0] = a[0].clamp(-1.0, 1.0) * body.accel;
+            f[1] = a[1].clamp(-1.0, 1.0) * body.accel;
+        }
+        // agent-agent contacts
+        for i in 0..na {
+            for j in (i + 1)..na {
+                if !(self.agents[i].collides && self.agents[j].collides) {
+                    continue;
+                }
+                let cf = self.contact_force(&self.agents[i], &self.agents[j]);
+                forces[i][0] += cf[0];
+                forces[i][1] += cf[1];
+                forces[j][0] -= cf[0];
+                forces[j][1] -= cf[1];
+            }
+        }
+        // agent-landmark contacts (obstacles)
+        for i in 0..na {
+            for lm in &self.landmarks {
+                if !(self.agents[i].collides && lm.collides) {
+                    continue;
+                }
+                let cf = self.contact_force(&self.agents[i], lm);
+                forces[i][0] += cf[0];
+                forces[i][1] += cf[1];
+            }
+        }
+        // integrate
+        let dt = self.params.dt;
+        let damp = 1.0 - self.params.damping;
+        for (body, f) in self.agents.iter_mut().zip(&forces) {
+            if !body.movable {
+                continue;
+            }
+            body.vel[0] = body.vel[0] * damp + f[0] / body.mass * dt;
+            body.vel[1] = body.vel[1] * damp + f[1] / body.mass * dt;
+            if let Some(ms) = body.max_speed {
+                let sp = (body.vel[0] * body.vel[0] + body.vel[1] * body.vel[1]).sqrt();
+                if sp > ms {
+                    body.vel[0] *= ms / sp;
+                    body.vel[1] *= ms / sp;
+                }
+            }
+            body.pos[0] += body.vel[0] * dt;
+            body.pos[1] += body.vel[1] * dt;
+        }
+    }
+}
+
+/// Euclidean distance between two bodies.
+pub fn dist(a: &Body, b: &Body) -> f64 {
+    let dx = a.pos[0] - b.pos[0];
+    let dy = a.pos[1] - b.pos[1];
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// Hard-contact test (used by reward functions to count collisions).
+pub fn is_collision(a: &Body, b: &Body) -> bool {
+    dist(a, b) < a.size + b.size
+}
+
+/// MPE's boundary penalty: zero inside |x| < 0.9, growing towards and
+/// beyond the arena edge — keeps fast agents from fleeing to infinity.
+pub fn bound_penalty(pos: &[f64; 2]) -> f64 {
+    let mut p = 0.0;
+    for &x in pos {
+        let a = x.abs();
+        p += if a < 0.9 {
+            0.0
+        } else if a < 1.0 {
+            (a - 0.9) * 10.0
+        } else {
+            ((2.0 * (a - 1.0)).exp()).min(10.0)
+        };
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn single_agent_world() -> World {
+        World::new(vec![Body::agent(0.05, 10.0, 1.0)], vec![])
+    }
+
+    #[test]
+    fn force_accelerates_agent() {
+        let mut w = single_agent_world();
+        w.step(&[[1.0, 0.0]]);
+        assert!(w.agents[0].vel[0] > 0.0);
+        assert_eq!(w.agents[0].vel[1], 0.0);
+        assert!(w.agents[0].pos[0] > 0.0);
+    }
+
+    #[test]
+    fn damping_decays_velocity() {
+        let mut w = single_agent_world();
+        w.agents[0].vel = [1.0, 0.0];
+        let v0 = w.agents[0].vel[0];
+        w.step(&[[0.0, 0.0]]);
+        assert!(w.agents[0].vel[0] < v0);
+        assert!(w.agents[0].vel[0] > 0.0);
+    }
+
+    #[test]
+    fn max_speed_clamped() {
+        let mut w = World::new(vec![Body::agent(0.05, 0.5, 100.0)], vec![]);
+        for _ in 0..50 {
+            w.step(&[[1.0, 1.0]]);
+        }
+        let sp = (w.agents[0].vel[0].powi(2) + w.agents[0].vel[1].powi(2)).sqrt();
+        assert!(sp <= 0.5 + 1e-9, "speed {sp}");
+    }
+
+    #[test]
+    fn action_clamped_to_unit_box() {
+        let mut w1 = single_agent_world();
+        let mut w2 = single_agent_world();
+        w1.step(&[[5.0, 0.0]]);
+        w2.step(&[[1.0, 0.0]]);
+        assert_eq!(w1.agents[0].pos, w2.agents[0].pos);
+    }
+
+    #[test]
+    fn overlapping_agents_repel() {
+        let mut a = Body::agent(0.1, 10.0, 1.0);
+        let mut b = Body::agent(0.1, 10.0, 1.0);
+        a.pos = [-0.05, 0.0];
+        b.pos = [0.05, 0.0];
+        let mut w = World::new(vec![a, b], vec![]);
+        w.step(&[[0.0, 0.0], [0.0, 0.0]]);
+        assert!(w.agents[0].vel[0] < 0.0, "left agent pushed left");
+        assert!(w.agents[1].vel[0] > 0.0, "right agent pushed right");
+    }
+
+    #[test]
+    fn distant_agents_unaffected() {
+        let mut a = Body::agent(0.05, 10.0, 1.0);
+        let mut b = Body::agent(0.05, 10.0, 1.0);
+        a.pos = [-1.0, 0.0];
+        b.pos = [1.0, 0.0];
+        let mut w = World::new(vec![a, b], vec![]);
+        w.step(&[[0.0, 0.0], [0.0, 0.0]]);
+        assert!(w.agents[0].vel[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn landmarks_never_move_but_obstacles_push() {
+        let mut ag = Body::agent(0.1, 10.0, 1.0);
+        ag.pos = [0.05, 0.0];
+        let mut ob = Body::landmark(0.1, true);
+        ob.pos = [0.0, 0.0];
+        let mut w = World::new(vec![ag], vec![ob]);
+        w.step(&[[0.0, 0.0]]);
+        assert_eq!(w.landmarks[0].pos, [0.0, 0.0]);
+        assert!(w.agents[0].vel[0] > 0.0, "agent pushed off obstacle");
+    }
+
+    #[test]
+    fn non_colliding_landmark_is_passthrough() {
+        let mut ag = Body::agent(0.1, 10.0, 1.0);
+        ag.pos = [0.05, 0.0];
+        let mut lm = Body::landmark(0.1, false);
+        lm.pos = [0.0, 0.0];
+        let mut w = World::new(vec![ag], vec![lm]);
+        w.step(&[[0.0, 0.0]]);
+        assert!(w.agents[0].vel[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn collision_predicate() {
+        let mut a = Body::agent(0.1, 1.0, 1.0);
+        let mut b = Body::agent(0.1, 1.0, 1.0);
+        a.pos = [0.0, 0.0];
+        b.pos = [0.15, 0.0];
+        assert!(is_collision(&a, &b));
+        b.pos = [0.25, 0.0];
+        assert!(!is_collision(&a, &b));
+    }
+
+    #[test]
+    fn bound_penalty_shape() {
+        assert_eq!(bound_penalty(&[0.0, 0.0]), 0.0);
+        assert_eq!(bound_penalty(&[0.5, -0.5]), 0.0);
+        assert!(bound_penalty(&[0.95, 0.0]) > 0.0);
+        assert!(bound_penalty(&[1.5, 0.0]) > bound_penalty(&[0.95, 0.0]));
+        assert!(bound_penalty(&[3.0, 3.0]) <= 20.0);
+    }
+
+    #[test]
+    fn physics_is_deterministic() {
+        let run = || {
+            let mut w = World::new(
+                vec![Body::agent(0.05, 1.0, 3.0), Body::agent(0.05, 1.3, 4.0)],
+                vec![Body::landmark(0.2, true)],
+            );
+            w.agents[0].pos = [0.3, 0.1];
+            w.agents[1].pos = [-0.2, 0.4];
+            for t in 0..100 {
+                let s = (t as f64 * 0.1).sin();
+                w.step(&[[s, -s], [-s, s]]);
+            }
+            (w.agents[0].pos, w.agents[1].pos)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,38 @@
+//! # coded-marl
+//!
+//! A coded distributed learning framework for multi-agent reinforcement
+//! learning (MARL), reproducing *"Coding for Distributed Multi-Agent
+//! Reinforcement Learning"* (Wang, Xie, Atanasov, 2021).
+//!
+//! The library mitigates straggler effects in synchronous distributed MARL
+//! training by encoding the agent-to-learner assignment with an erasure
+//! code: each learner updates a (coded) combination of agent parameter
+//! vectors, and the central controller recovers the exact synchronous
+//! update from any decodable subset of learner results.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordination contribution: central
+//!   controller, learners, coding schemes ([`coding`]), straggler
+//!   injection, transports, environments, replay buffer, metrics.
+//! * **L2 (python/compile/model.py)** — MADDPG actor/critic forward +
+//!   backward written in JAX, AOT-lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the dense
+//!   compute hot spot (fused linear layers), lowered inside the L2 graph.
+//!
+//! Python never runs on the training path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API ([`runtime`]) and drives
+//! everything else natively.
+
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod linalg;
+pub mod marl;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+pub mod transport;

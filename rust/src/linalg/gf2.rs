@@ -1,0 +1,322 @@
+//! GF(2) (binary field) matrices — substrate for the regular-LDPC code
+//! construction (paper §III-C4).
+//!
+//! The paper builds the parity-check matrix `H` from powers of a cyclic
+//! permutation block and then extracts the systematic part
+//! `H = [Pᵀ, I_{N-M}]` (over F2, −P = P). Real constructions rarely
+//! arrive in systematic form, so [`Gf2Mat::systematize`] performs
+//! Gauss–Jordan elimination with column pivoting to put the identity on
+//! the right, tracking the column permutation.
+
+/// Dense GF(2) matrix, one byte per entry (sizes here are tiny: ≤ N×N
+/// with N ≈ 15; bit-packing would be over-engineering).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Gf2Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl Gf2Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Gf2Mat { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1);
+        }
+        m
+    }
+
+    /// Cyclic shift permutation matrix A (1s on the superdiagonal and at
+    /// the bottom-left corner) — the paper's building block.
+    pub fn cyclic_permutation(w: usize) -> Self {
+        let mut m = Self::zeros(w, w);
+        for i in 0..w {
+            m.set(i, (i + 1) % w, 1);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> u8 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: u8) {
+        self.data[i * self.cols + j] = v & 1;
+    }
+
+    /// GF(2) matrix product.
+    pub fn matmul(&self, other: &Gf2Mat) -> Gf2Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Gf2Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                if self.get(i, k) == 1 {
+                    for j in 0..other.cols {
+                        let v = out.get(i, j) ^ other.get(k, j);
+                        out.set(i, j, v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix power (exponent ≥ 0).
+    pub fn pow(&self, e: usize) -> Gf2Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut acc = Gf2Mat::identity(self.rows);
+        for _ in 0..e {
+            acc = acc.matmul(self);
+        }
+        acc
+    }
+
+    /// Horizontal block concatenation.
+    pub fn hstack(blocks: &[&Gf2Mat]) -> Gf2Mat {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        assert!(blocks.iter().all(|b| b.rows == rows));
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Gf2Mat::zeros(rows, cols);
+        let mut off = 0;
+        for b in blocks {
+            for i in 0..rows {
+                for j in 0..b.cols {
+                    out.set(i, off + j, b.get(i, j));
+                }
+            }
+            off += b.cols;
+        }
+        out
+    }
+
+    /// Vertical block concatenation.
+    pub fn vstack(blocks: &[&Gf2Mat]) -> Gf2Mat {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols));
+        let rows: usize = blocks.iter().map(|b| b.rows).sum();
+        let mut out = Gf2Mat::zeros(rows, cols);
+        let mut off = 0;
+        for b in blocks {
+            for i in 0..b.rows {
+                for j in 0..cols {
+                    out.set(off + i, j, b.get(i, j));
+                }
+            }
+            off += b.rows;
+        }
+        out
+    }
+
+    /// Take the first `n` rows.
+    pub fn take_rows(&self, n: usize) -> Gf2Mat {
+        assert!(n <= self.rows);
+        Gf2Mat { rows: n, cols: self.cols, data: self.data[..n * self.cols].to_vec() }
+    }
+
+    /// Rank over GF(2).
+    pub fn rank(&self) -> usize {
+        let mut a = self.clone();
+        let mut rank = 0;
+        let mut row = 0;
+        for col in 0..a.cols {
+            if let Some(p) = (row..a.rows).find(|&r| a.get(r, col) == 1) {
+                a.swap_rows(row, p);
+                for r in 0..a.rows {
+                    if r != row && a.get(r, col) == 1 {
+                        for c in 0..a.cols {
+                            let v = a.get(r, c) ^ a.get(row, c);
+                            a.set(r, c, v);
+                        }
+                    }
+                }
+                rank += 1;
+                row += 1;
+                if row == a.rows {
+                    break;
+                }
+            }
+        }
+        rank
+    }
+
+    fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        for c in 0..self.cols {
+            let (x, y) = (self.get(a, c), self.get(b, c));
+            self.set(a, c, y);
+            self.set(b, c, x);
+        }
+    }
+
+    /// Gauss–Jordan systematization: find a column permutation `perm`
+    /// and row operations turning `self` into `[P | I_r]` (identity on
+    /// the *last* r = rank rows/columns). Returns `(reduced, perm)`
+    /// where `reduced` has full row rank r = self.rows, or `None` if the
+    /// matrix is row-rank-deficient.
+    ///
+    /// `perm[j]` is the original column index now sitting at position j.
+    pub fn systematize(&self) -> Option<(Gf2Mat, Vec<usize>)> {
+        let r = self.rows;
+        let mut a = self.clone();
+        let mut perm: Vec<usize> = (0..self.cols).collect();
+        // We want identity in the last r columns; equivalently pivot
+        // column for row i is cols - r + i.
+        for i in 0..r {
+            let target = self.cols - r + i;
+            // find a pivot: any row >= i with a 1 in some column <= target
+            // strategy: search columns from target leftwards for a usable pivot
+            let mut found = false;
+            'outer: for cand in (0..=target).rev() {
+                for row in i..r {
+                    if a.get(row, cand) == 1 {
+                        a.swap_rows(i, row);
+                        a.swap_cols(cand, target, &mut perm);
+                        found = true;
+                        break 'outer;
+                    }
+                }
+            }
+            if !found {
+                return None;
+            }
+            // eliminate the pivot column everywhere else
+            for row in 0..r {
+                if row != i && a.get(row, target) == 1 {
+                    for c in 0..a.cols {
+                        let v = a.get(row, c) ^ a.get(i, c);
+                        a.set(row, c, v);
+                    }
+                }
+            }
+        }
+        Some((a, perm))
+    }
+
+    fn swap_cols(&mut self, a: usize, b: usize, perm: &mut [usize]) {
+        if a == b {
+            return;
+        }
+        for r in 0..self.rows {
+            let (x, y) = (self.get(r, a), self.get(r, b));
+            self.set(r, a, y);
+            self.set(r, b, x);
+        }
+        perm.swap(a, b);
+    }
+
+    /// Convert to a real-valued matrix (entries 0.0/1.0).
+    pub fn to_real(&self) -> crate::linalg::Mat {
+        crate::linalg::Mat::from_fn(self.rows, self.cols, |i, j| self.get(i, j) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_permutation_has_order_w() {
+        for w in [2usize, 3, 5, 7] {
+            let a = Gf2Mat::cyclic_permutation(w);
+            assert_eq!(a.pow(w), Gf2Mat::identity(w));
+            assert_ne!(a.pow(1), Gf2Mat::identity(w));
+        }
+    }
+
+    #[test]
+    fn matmul_with_identity() {
+        let a = Gf2Mat::cyclic_permutation(5);
+        let i = Gf2Mat::identity(5);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn rank_of_identity_and_singular() {
+        assert_eq!(Gf2Mat::identity(6).rank(), 6);
+        let mut m = Gf2Mat::identity(4);
+        // make row 3 = row 0
+        for c in 0..4 {
+            m.set(3, c, m.get(0, c));
+        }
+        assert_eq!(m.rank(), 3);
+        assert_eq!(Gf2Mat::zeros(3, 5).rank(), 0);
+    }
+
+    #[test]
+    fn hstack_vstack_shapes() {
+        let a = Gf2Mat::identity(3);
+        let b = Gf2Mat::zeros(3, 2);
+        let h = Gf2Mat::hstack(&[&a, &b]);
+        assert_eq!((h.rows, h.cols), (3, 5));
+        assert_eq!(h.get(1, 1), 1);
+        assert_eq!(h.get(1, 4), 0);
+        let v = Gf2Mat::vstack(&[&a, &a]);
+        assert_eq!((v.rows, v.cols), (6, 3));
+        assert_eq!(v.get(4, 1), 1);
+    }
+
+    #[test]
+    fn systematize_produces_identity_block() {
+        // A full-row-rank 3x7 matrix.
+        let mut h = Gf2Mat::zeros(3, 7);
+        for (i, row) in [
+            [1u8, 1, 0, 1, 1, 0, 0],
+            [0, 1, 1, 1, 0, 1, 0],
+            [1, 0, 1, 0, 0, 0, 1],
+        ]
+        .iter()
+        .enumerate()
+        {
+            for (j, &v) in row.iter().enumerate() {
+                h.set(i, j, v);
+            }
+        }
+        let (sys, perm) = h.systematize().expect("full rank");
+        // last 3 columns are identity
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(sys.get(i, 4 + j), (i == j) as u8);
+            }
+        }
+        // permutation is a permutation
+        let mut p = perm.clone();
+        p.sort_unstable();
+        assert_eq!(p, (0..7).collect::<Vec<_>>());
+        // row space preserved: rank of stacked original+systematized-unpermuted
+        // equals rank of original (both 3)
+        assert_eq!(sys.rank(), 3);
+    }
+
+    #[test]
+    fn systematize_rejects_rank_deficient() {
+        let mut h = Gf2Mat::zeros(3, 5);
+        for j in 0..5 {
+            h.set(0, j, 1);
+            h.set(1, j, 1); // duplicate row
+        }
+        h.set(2, 0, 1);
+        assert!(h.systematize().is_none());
+    }
+
+    #[test]
+    fn to_real_roundtrip_values() {
+        let a = Gf2Mat::cyclic_permutation(4);
+        let r = a.to_real();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(r[(i, j)], a.get(i, j) as f64);
+            }
+        }
+    }
+}

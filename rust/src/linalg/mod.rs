@@ -1,0 +1,566 @@
+//! Dense linear algebra substrate.
+//!
+//! The coded recovery of Eq. (2) needs least-squares solves, rank
+//! checks and (for the paper-faithful path) normal equations; the LDPC
+//! construction needs GF(2) matrix manipulation. No BLAS/LAPACK crates
+//! are available offline, so this module implements the required
+//! pieces from scratch in f64:
+//!
+//! * [`Mat`] — row-major dense matrix with the usual ops
+//! * [`qr_least_squares`] — Householder QR solve (the accurate decode path)
+//! * [`cholesky_solve`] / [`normal_equations_solve`] — the paper's
+//!   `(CᵀC)⁻¹Cᵀ` form, kept for fidelity + benchmarking
+//! * [`Mat::rank`] — pivoted Gaussian elimination rank (decodability test)
+//! * [`gf2`] — GF(2) matrices for the LDPC code construction
+
+pub mod gf2;
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Build from a closure f(i, j).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Select a subset of rows (the `C_I` submatrix of the paper).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            m.data[r * self.cols..(r + 1) * self.cols].copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix product, cache-friendly ikj loop order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (d, &o) in dst.iter_mut().zip(orow) {
+                    *d += a * o;
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A x
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Numerical rank via Gaussian elimination with partial pivoting.
+    ///
+    /// `tol` is relative to the largest absolute entry; the decoder uses
+    /// this to decide whether a received subset of coded rows spans the
+    /// agent space (paper: `rank(C_I) = M`).
+    pub fn rank(&self, tol: f64) -> usize {
+        let mut a = self.clone();
+        let maxabs = a.data.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        if maxabs == 0.0 {
+            return 0;
+        }
+        let eps = tol * maxabs;
+        let mut rank = 0;
+        let mut row = 0;
+        for col in 0..a.cols {
+            // find pivot
+            let (mut piv, mut pval) = (row, 0.0f64);
+            for r in row..a.rows {
+                let v = a[(r, col)].abs();
+                if v > pval {
+                    piv = r;
+                    pval = v;
+                }
+            }
+            if pval <= eps {
+                continue;
+            }
+            a.swap_rows(row, piv);
+            let p = a[(row, col)];
+            for r in (row + 1)..a.rows {
+                let f = a[(r, col)] / p;
+                if f != 0.0 {
+                    for c in col..a.cols {
+                        let v = a[(row, c)];
+                        a[(r, c)] -= f * v;
+                    }
+                }
+            }
+            rank += 1;
+            row += 1;
+            if row == a.rows {
+                break;
+            }
+        }
+        rank
+    }
+
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let (lo, hi) = (a.min(b), a.max(b));
+        let (top, bot) = self.data.split_at_mut(hi * self.cols);
+        top[lo * self.cols..(lo + 1) * self.cols].swap_with_slice(&mut bot[..self.cols]);
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Householder QR factorization of an m×n matrix (m ≥ n), in place.
+///
+/// Returns (qr, betas) in compact form: R in the upper triangle, the
+/// Householder vectors below the diagonal.
+fn householder_qr(a: &Mat) -> (Mat, Vec<f64>) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "QR requires m >= n");
+    let mut qr = a.clone();
+    let mut betas = vec![0.0; n];
+    for k in 0..n {
+        // norm of column k below the diagonal
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += qr[(i, k)] * qr[(i, k)];
+        }
+        let norm = norm.sqrt();
+        if norm == 0.0 {
+            betas[k] = 0.0;
+            continue;
+        }
+        let alpha = if qr[(k, k)] >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1, stored in place with v[0] implicit below
+        let v0 = qr[(k, k)] - alpha;
+        let mut vnorm2 = v0 * v0;
+        for i in (k + 1)..m {
+            vnorm2 += qr[(i, k)] * qr[(i, k)];
+        }
+        if vnorm2 == 0.0 {
+            betas[k] = 0.0;
+            qr[(k, k)] = alpha;
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        // apply H = I - beta v v^T to the trailing submatrix
+        for j in (k + 1)..n {
+            let mut dot = v0 * qr[(k, j)];
+            for i in (k + 1)..m {
+                dot += qr[(i, k)] * qr[(i, j)];
+            }
+            let s = beta * dot;
+            qr[(k, j)] -= s * v0;
+            for i in (k + 1)..m {
+                let vik = qr[(i, k)];
+                qr[(i, j)] -= s * vik;
+            }
+        }
+        qr[(k, k)] = alpha;
+        // store v (normalized so v0 stays explicit)
+        betas[k] = beta;
+        // stash v0 in a side channel: we renormalize v so that the stored
+        // sub-diagonal entries are v_i and v0 is carried via betas? Simpler:
+        // scale stored vector by 1/v0 so v0 == 1 implicitly.
+        if v0 != 0.0 {
+            for i in (k + 1)..m {
+                qr[(i, k)] /= v0;
+            }
+            betas[k] = beta * v0 * v0;
+        }
+    }
+    (qr, betas)
+}
+
+/// Apply Qᵀ (from compact QR) to a dense RHS matrix in place.
+fn apply_qt(qr: &Mat, betas: &[f64], b: &mut Mat) {
+    let (m, n) = (qr.rows, qr.cols);
+    assert_eq!(b.rows, m);
+    for k in 0..n {
+        let beta = betas[k];
+        if beta == 0.0 {
+            continue;
+        }
+        for j in 0..b.cols {
+            // v = [1, qr[k+1..m, k]]
+            let mut dot = b[(k, j)];
+            for i in (k + 1)..m {
+                dot += qr[(i, k)] * b[(i, j)];
+            }
+            let s = beta * dot;
+            b[(k, j)] -= s;
+            for i in (k + 1)..m {
+                let v = qr[(i, k)];
+                b[(i, j)] -= s * v;
+            }
+        }
+    }
+}
+
+/// Solve R x = y by back substitution for each RHS column.
+fn back_substitute(qr: &Mat, b: &Mat) -> Mat {
+    let n = qr.cols;
+    let mut x = Mat::zeros(n, b.cols);
+    for j in 0..b.cols {
+        for i in (0..n).rev() {
+            let mut s = b[(i, j)];
+            for k in (i + 1)..n {
+                s -= qr[(i, k)] * x[(k, j)];
+            }
+            let d = qr[(i, i)];
+            x[(i, j)] = if d.abs() < 1e-300 { 0.0 } else { s / d };
+        }
+    }
+    x
+}
+
+/// Reusable QR factorization for repeated solves against the same C_I.
+///
+/// The decoder factors the (small) |I|×M code submatrix once, then
+/// applies it to the (large) |I|×P result matrix.
+pub struct QrFactor {
+    qr: Mat,
+    betas: Vec<f64>,
+}
+
+impl QrFactor {
+    pub fn new(a: &Mat) -> Self {
+        let (qr, betas) = householder_qr(a);
+        QrFactor { qr, betas }
+    }
+
+    /// Least-squares solve min ||A x - b||_F for a matrix RHS.
+    pub fn solve(&self, b: &Mat) -> Mat {
+        let mut qtb = b.clone();
+        apply_qt(&self.qr, &self.betas, &mut qtb);
+        back_substitute(&self.qr, &qtb)
+    }
+
+    /// |R_kk| min/max — a cheap conditioning proxy used by diagnostics.
+    pub fn r_diag_range(&self) -> (f64, f64) {
+        let n = self.qr.cols;
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for k in 0..n {
+            let d = self.qr[(k, k)].abs();
+            lo = lo.min(d);
+            hi = hi.max(d);
+        }
+        (lo, hi)
+    }
+}
+
+/// One-shot least squares: argmin_x ||A x - B||_F via Householder QR.
+pub fn qr_least_squares(a: &Mat, b: &Mat) -> Mat {
+    QrFactor::new(a).solve(b)
+}
+
+/// Cholesky factorization (lower) of an SPD matrix. Returns None if the
+/// matrix is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A X = B for SPD A via Cholesky. None if not SPD.
+pub fn cholesky_solve(a: &Mat, b: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // forward: L y = b
+    let mut y = b.clone();
+    for j in 0..b.cols {
+        for i in 0..n {
+            let mut s = y[(i, j)];
+            for k in 0..i {
+                s -= l[(i, k)] * y[(k, j)];
+            }
+            y[(i, j)] = s / l[(i, i)];
+        }
+    }
+    // backward: L^T x = y
+    let mut x = y;
+    for j in 0..b.cols {
+        for i in (0..n).rev() {
+            let mut s = x[(i, j)];
+            for k in (i + 1)..n {
+                s -= l[(k, i)] * x[(k, j)];
+            }
+            x[(i, j)] = s / l[(i, i)];
+        }
+    }
+    Some(x)
+}
+
+/// The paper's Eq. (2) literally: x = (AᵀA)⁻¹ Aᵀ B via Cholesky on the
+/// normal equations. Less accurate than QR for ill-conditioned A (see
+/// DESIGN.md §7.2) but kept for fidelity and benchmarked against QR.
+pub fn normal_equations_solve(a: &Mat, b: &Mat) -> Option<Mat> {
+    let at = a.transpose();
+    let ata = at.matmul(a);
+    let atb = at.matmul(b);
+    cholesky_solve(&ata, &atb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn random_mat(r: &mut Pcg32, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| r.normal())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Pcg32::seeded(1);
+        let a = random_mat(&mut r, 5, 7);
+        let i5 = Mat::identity(5);
+        let i7 = Mat::identity(7);
+        assert!(i5.matmul(&a).max_abs_diff(&a) < 1e-12);
+        assert!(a.matmul(&i7).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Pcg32::seeded(2);
+        let a = random_mat(&mut r, 4, 9);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn rank_full_and_deficient() {
+        let mut r = Pcg32::seeded(3);
+        let a = random_mat(&mut r, 8, 5);
+        assert_eq!(a.rank(1e-10), 5);
+        // duplicate a column -> rank 4 matrix embedded in 8x5
+        let mut b = a.clone();
+        for i in 0..8 {
+            b[(i, 4)] = b[(i, 0)] * 2.0;
+        }
+        assert_eq!(b.rank(1e-10), 4);
+        assert_eq!(Mat::zeros(3, 3).rank(1e-10), 0);
+    }
+
+    #[test]
+    fn qr_solves_square_system() {
+        let mut r = Pcg32::seeded(4);
+        let a = random_mat(&mut r, 6, 6);
+        let x_true = random_mat(&mut r, 6, 3);
+        let b = a.matmul(&x_true);
+        let x = qr_least_squares(&a, &b);
+        assert!(x.max_abs_diff(&x_true) < 1e-9, "err={}", x.max_abs_diff(&x_true));
+    }
+
+    #[test]
+    fn qr_least_squares_overdetermined_exact_when_consistent() {
+        let mut r = Pcg32::seeded(5);
+        let a = random_mat(&mut r, 12, 5);
+        let x_true = random_mat(&mut r, 5, 2);
+        let b = a.matmul(&x_true);
+        let x = qr_least_squares(&a, &b);
+        assert!(x.max_abs_diff(&x_true) < 1e-9);
+    }
+
+    #[test]
+    fn qr_least_squares_minimizes_residual() {
+        let mut r = Pcg32::seeded(6);
+        let a = random_mat(&mut r, 10, 4);
+        let b = random_mat(&mut r, 10, 1);
+        let x = qr_least_squares(&a, &b);
+        // residual must be orthogonal to the column space: Aᵀ(Ax - b) = 0
+        let res = {
+            let ax = a.matmul(&x);
+            Mat::from_fn(10, 1, |i, j| ax[(i, j)] - b[(i, j)])
+        };
+        let atr = a.transpose().matmul(&res);
+        assert!(atr.fro_norm() < 1e-9, "Aᵀr = {}", atr.fro_norm());
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut r = Pcg32::seeded(7);
+        let g = random_mat(&mut r, 6, 6);
+        let spd = g.transpose().matmul(&g); // SPD (a.s.)
+        let l = cholesky(&spd).expect("SPD");
+        let llt = l.matmul(&l.transpose());
+        assert!(llt.max_abs_diff(&spd) < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn normal_equations_match_qr_for_well_conditioned() {
+        let mut r = Pcg32::seeded(8);
+        let a = random_mat(&mut r, 15, 8);
+        let x_true = random_mat(&mut r, 8, 4);
+        let b = a.matmul(&x_true);
+        let x1 = qr_least_squares(&a, &b);
+        let x2 = normal_equations_solve(&a, &b).unwrap();
+        assert!(x1.max_abs_diff(&x2) < 1e-7);
+    }
+
+    #[test]
+    fn qr_beats_normal_equations_on_vandermonde() {
+        // The paper's 1..M Vandermonde nodes: cond(AᵀA) ~ 1e16 already at
+        // N=15, M=8 — this is why the decoder defaults to QR.
+        let (n, m) = (15usize, 8usize);
+        let a = Mat::from_fn(n, m, |i, j| ((j + 1) as f64).powi(i as i32));
+        let x_true = Mat::from_fn(m, 1, |i, _| (i as f64) - 3.0);
+        let b = a.matmul(&x_true);
+        let xq = qr_least_squares(&a, &b);
+        let err_qr = xq.max_abs_diff(&x_true);
+        // cond(A) ~ 1e12 here: even QR only retains ~4 digits. That IS
+        // the point — see schemes::vandermonde_mds_is_numerically_unusable.
+        assert!(err_qr < 1e-2, "QR err {err_qr}");
+        if let Some(xn) = normal_equations_solve(&a, &b) {
+            let err_ne = xn.max_abs_diff(&x_true);
+            assert!(err_qr <= err_ne * 10.0 + 1e-12,
+                "QR ({err_qr}) should not be much worse than NE ({err_ne})");
+        }
+    }
+
+    #[test]
+    fn qr_factor_reuse_matches_one_shot() {
+        let mut r = Pcg32::seeded(9);
+        let a = random_mat(&mut r, 9, 4);
+        let f = QrFactor::new(&a);
+        let b1 = random_mat(&mut r, 9, 2);
+        let b2 = random_mat(&mut r, 9, 5);
+        assert!(f.solve(&b1).max_abs_diff(&qr_least_squares(&a, &b1)) < 1e-12);
+        assert!(f.solve(&b2).max_abs_diff(&qr_least_squares(&a, &b2)) < 1e-12);
+    }
+
+    #[test]
+    fn select_rows_picks_expected() {
+        let a = Mat::from_fn(5, 3, |i, j| (i * 10 + j) as f64);
+        let s = a.select_rows(&[4, 0, 2]);
+        assert_eq!(s.row(0), &[40.0, 41.0, 42.0]);
+        assert_eq!(s.row(1), &[0.0, 1.0, 2.0]);
+        assert_eq!(s.row(2), &[20.0, 21.0, 22.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut r = Pcg32::seeded(10);
+        let a = random_mat(&mut r, 6, 4);
+        let x: Vec<f64> = (0..4).map(|i| i as f64 + 0.5).collect();
+        let xm = Mat::from_rows(4, 1, &x);
+        let y = a.matvec(&x);
+        let ym = a.matmul(&xm);
+        for i in 0..6 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! `coded-marl` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//! * `train`   — run coded distributed MADDPG training (Alg. 1)
+//! * `central` — run the centralized MADDPG baseline (Fig. 3 reference)
+//! * `worker`  — TCP learner process (launched by the controller when
+//!   `--transport tcp`; can also be started by hand)
+//! * `code`    — inspect a coding scheme's assignment matrix, workload,
+//!   redundancy and straggler tolerance
+//! * `presets` — list the AOT-lowered presets in the artifacts manifest
+
+use anyhow::{Context, Result};
+
+use coded_marl::cli::Args;
+use coded_marl::coding::{Code, CodeParams, Scheme};
+use coded_marl::config::{Backend, TrainConfig};
+use coded_marl::coordinator::{
+    self, learner::learner_loop, LearnerBackend, MockBackend, PjrtBackend, RunSpec,
+};
+use coded_marl::metrics::table::{fmt_duration, Table};
+use coded_marl::runtime::Manifest;
+use coded_marl::transport::tcp::TcpLearner;
+use coded_marl::transport::LearnerMsg;
+
+const USAGE: &str = "\
+coded-marl — coded distributed learning for multi-agent RL
+
+USAGE:
+    coded-marl <subcommand> [flags]
+
+SUBCOMMANDS:
+    train     run coded distributed MADDPG training
+    central   run the centralized MADDPG baseline
+    worker    TCP learner process (used with --transport tcp)
+    code      inspect a coding scheme's assignment matrix
+    presets   list AOT-lowered presets
+
+COMMON TRAIN FLAGS:
+    --preset NAME              preset from artifacts/manifest.json (required)
+    --artifacts DIR            artifacts directory       [artifacts]
+    --learners N               number of learners        [15]
+    --scheme S                 uncoded|replication|mds|random_sparse|ldpc [mds]
+    --decode D                 auto|qr|normal_equations|peeling [auto]
+    --stragglers K             stragglers per iteration  [0]
+    --straggler-delay-ms MS    injected delay t_s        [0]
+    --straggler-exponential    exponential instead of fixed delay
+    --iterations I             training iterations       [50]
+    --episodes E               episodes per iteration    [2]
+    --episode-len L            steps per episode         [25]
+    --backend B                pjrt|mock                 [pjrt]
+    --transport T              local|tcp                 [local]
+    --seed S                   experiment seed           [0]
+    --out-dir DIR              write per-iteration CSV here
+    --checkpoint-every I       save params every I iterations (needs --out-dir)
+    --resume PATH              start from a saved checkpoint
+    --adaptive                 measure stragglers, switch scheme at runtime
+    --collect-timeout-ms MS    dead-learner timeout      [120000]
+    --verbose                  per-iteration progress lines
+
+EXAMPLES:
+    coded-marl train --preset coop_nav_m8 --scheme mds \\
+        --stragglers 2 --straggler-delay-ms 250 --verbose
+    coded-marl code --scheme ldpc --n 15 --m 8
+";
+
+fn main() {
+    let sub = std::env::args().nth(1).unwrap_or_default();
+    let result = match sub.as_str() {
+        "train" => cmd_train(),
+        "central" => cmd_central(),
+        "worker" => cmd_worker(),
+        "code" => cmd_code(),
+        "presets" => cmd_presets(),
+        "help" | "--help" | "-h" | "" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("{USAGE}");
+            Err(anyhow::anyhow!("unknown subcommand '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train() -> Result<()> {
+    let args = Args::from_env(2)?;
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+    let cfg = TrainConfig::from_args(&args)?;
+    args.finish()?;
+    eprintln!("train: {}", cfg.summary());
+    let t0 = std::time::Instant::now();
+    let log = coordinator::run_training(&cfg, &artifacts)?;
+    report_run(&log, t0.elapsed());
+    Ok(())
+}
+
+fn cmd_central() -> Result<()> {
+    let args = Args::from_env(2)?;
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+    let cfg = TrainConfig::from_args(&args)?;
+    args.finish()?;
+    eprintln!("central: preset={} iters={} seed={}", cfg.preset, cfg.iterations, cfg.seed);
+    let manifest = Manifest::load(&artifacts)?;
+    let spec = RunSpec::from_preset(manifest.preset(&cfg.preset)?)?;
+    let backend: Box<dyn LearnerBackend> = match cfg.backend {
+        Backend::Pjrt => Box::new(PjrtBackend::load(&artifacts, &cfg.preset)?),
+        Backend::Mock => Box::new(MockBackend::new(spec.dims, cfg.mock_compute)),
+    };
+    let t0 = std::time::Instant::now();
+    let log = coordinator::run_centralized_with(&cfg, spec, backend)?;
+    report_run(&log, t0.elapsed());
+    Ok(())
+}
+
+fn report_run(log: &coded_marl::metrics::RunLog, wall: std::time::Duration) {
+    let n = log.len();
+    let tail = log.smoothed_rewards(50.min(n.max(1))).last().copied().unwrap_or(f64::NAN);
+    println!("iterations:        {n}");
+    println!("wall time:         {}", fmt_duration(wall));
+    println!("mean iter time:    {}", fmt_duration(log.mean_iter_time()));
+    println!("final reward (smoothed): {tail:.3}");
+    for phase in coded_marl::metrics::Phase::ALL {
+        let s = log.phase_stats(phase);
+        println!(
+            "  {:<10} mean {:>10} max {:>10}",
+            phase.name(),
+            fmt_duration(std::time::Duration::from_secs_f64(s.mean().max(0.0))),
+            fmt_duration(std::time::Duration::from_secs_f64(s.max().max(0.0))),
+        );
+    }
+}
+
+/// TCP learner process: connect to the controller, build the backend,
+/// serve Tasks until Shutdown.
+fn cmd_worker() -> Result<()> {
+    let args = Args::from_env(2)?;
+    let addr = args.required("connect")?;
+    let preset = args.required("preset")?;
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+    let backend_kind = match args.opt("backend") {
+        Some(v) => Backend::parse(v).context("unknown --backend")?,
+        None => Backend::Pjrt,
+    };
+    let mock_compute =
+        std::time::Duration::from_micros(args.get_or("mock-compute-us", 2000u64)?);
+    args.finish()?;
+    let mut ep = TcpLearner::connect(&addr)?;
+    let id = ep.learner_id;
+    let backend: Box<dyn LearnerBackend> = match backend_kind {
+        Backend::Pjrt => Box::new(PjrtBackend::load(&artifacts, &preset)?),
+        Backend::Mock => {
+            let manifest = Manifest::load(&artifacts)?;
+            let spec = RunSpec::from_preset(manifest.preset(&preset)?)?;
+            Box::new(MockBackend::new(spec.dims, mock_compute))
+        }
+    };
+    use coded_marl::transport::LearnerEndpoint;
+    ep.send(LearnerMsg::Hello { learner_id: id })?;
+    learner_loop(ep, id, backend)
+}
+
+/// Pretty-print a scheme's assignment matrix and derived properties.
+fn cmd_code() -> Result<()> {
+    let args = Args::from_env(2)?;
+    let scheme = Scheme::parse(&args.required("scheme")?)
+        .context("unknown --scheme (uncoded|replication|mds|random_sparse|ldpc)")?;
+    let n = args.get_or("n", 15usize)?;
+    let m = args.get_or("m", 8usize)?;
+    let p_m = args.get_or("p-m", 0.8f64)?;
+    let seed = args.get_or("seed", 0u64)?;
+    args.finish()?;
+    let code = Code::build(&CodeParams { scheme, n, m, p_m, seed });
+    println!("scheme: {scheme}   N={n} learners, M={m} agents");
+    println!("assignment matrix C (rows = learners, cols = agents):");
+    for j in 0..n {
+        let row: Vec<String> =
+            code.c.row(j).iter().map(|&v| format!("{v:>7.3}")).collect();
+        println!("  L{j:<3} [{}]  workload {}", row.join(" "), code.workload(j));
+    }
+    println!("redundancy (total agent-updates / M): {:.2}", code.redundancy());
+    println!("worst-case straggler tolerance:       {}", code.worst_case_tolerance());
+    let mut rng = coded_marl::rng::Pcg32::seeded(1);
+    let mut t = Table::new(&["k stragglers", "P(decodable)"]);
+    for k in 0..=(n - m).min(n) {
+        let p = coded_marl::coding::random_set_decode_probability(&code, k, 500, &mut rng);
+        t.row(&[k.to_string(), format!("{p:.3}")]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_presets() -> Result<()> {
+    let args = Args::from_env(2)?;
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+    args.finish()?;
+    let manifest = Manifest::load(&artifacts)?;
+    let mut t = Table::new(&["name", "env", "M", "K", "obs", "act", "batch", "θ dim/agent"]);
+    for p in &manifest.presets {
+        t.row(&[
+            p.name.clone(),
+            p.env.clone(),
+            p.m.to_string(),
+            p.n_adversaries.to_string(),
+            p.obs_dim.to_string(),
+            p.act_dim.to_string(),
+            p.batch.to_string(),
+            p.agent_param_dim.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("fingerprint: {}", manifest.fingerprint);
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Replay buffer `D` (paper Alg. 1 line 7) and minibatch sampling
+//! (line 8).
+//!
+//! Stores joint transitions `(s, a, r, s', done)` in a fixed-capacity
+//! ring; `sample` produces the flattened row-major arrays the HLO
+//! learner step expects: obs `[B, M, Do]`, act `[B, M, Da]`, rewards
+//! `[M, B]` (per-agent rows, because each learner invocation consumes
+//! one agent's reward vector), next-obs and done.
+
+use crate::rng::Pcg32;
+
+/// One joint environment transition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    /// Per-agent observations at `s` (M × Do).
+    pub obs: Vec<Vec<f32>>,
+    /// Per-agent actions (M × Da).
+    pub act: Vec<Vec<f32>>,
+    /// Per-agent rewards (M).
+    pub rew: Vec<f32>,
+    /// Per-agent observations at `s'` (M × Do).
+    pub next_obs: Vec<Vec<f32>>,
+    /// Episode-terminal flag (applies jointly).
+    pub done: bool,
+}
+
+/// A sampled minibatch in HLO-ready layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Minibatch {
+    pub batch: usize,
+    pub m: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// [B, M, Do] row-major.
+    pub obs: Vec<f32>,
+    /// [B, M, Da] row-major.
+    pub act: Vec<f32>,
+    /// [M, B]: `rew[i*B..(i+1)*B]` is agent i's reward column.
+    pub rew: Vec<f32>,
+    /// [B, M, Do] row-major.
+    pub next_obs: Vec<f32>,
+    /// [B].
+    pub done: Vec<f32>,
+}
+
+impl Minibatch {
+    /// Agent i's reward slice (length B).
+    pub fn rewards_of(&self, agent: usize) -> &[f32] {
+        &self.rew[agent * self.batch..(agent + 1) * self.batch]
+    }
+}
+
+/// Fixed-capacity ring buffer of transitions.
+pub struct ReplayBuffer {
+    capacity: usize,
+    data: Vec<Transition>,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> ReplayBuffer {
+        assert!(capacity > 0);
+        ReplayBuffer { capacity, data: Vec::with_capacity(capacity.min(1 << 20)), next: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append, overwriting the oldest transition when full.
+    pub fn push(&mut self, t: Transition) {
+        if self.data.len() < self.capacity {
+            self.data.push(t);
+        } else {
+            self.data[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.capacity;
+    }
+
+    /// Sample `batch` transitions (with replacement, standard MADDPG
+    /// practice) into the HLO layout. Panics if the buffer is empty.
+    pub fn sample(&self, batch: usize, rng: &mut Pcg32) -> Minibatch {
+        assert!(!self.data.is_empty(), "sampling from empty replay buffer");
+        let first = &self.data[0];
+        let m = first.obs.len();
+        let obs_dim = first.obs[0].len();
+        let act_dim = first.act[0].len();
+        let mut mb = Minibatch {
+            batch,
+            m,
+            obs_dim,
+            act_dim,
+            obs: Vec::with_capacity(batch * m * obs_dim),
+            act: Vec::with_capacity(batch * m * act_dim),
+            rew: vec![0.0; m * batch],
+            next_obs: Vec::with_capacity(batch * m * obs_dim),
+            done: Vec::with_capacity(batch),
+        };
+        for b in 0..batch {
+            let t = &self.data[rng.below(self.data.len() as u32) as usize];
+            for i in 0..m {
+                mb.obs.extend_from_slice(&t.obs[i]);
+                mb.act.extend_from_slice(&t.act[i]);
+                mb.next_obs.extend_from_slice(&t.next_obs[i]);
+                mb.rew[i * batch + b] = t.rew[i];
+            }
+            mb.done.push(if t.done { 1.0 } else { 0.0 });
+        }
+        mb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_transition(tag: f32, m: usize) -> Transition {
+        Transition {
+            obs: (0..m).map(|i| vec![tag + i as f32; 4]).collect(),
+            act: (0..m).map(|i| vec![tag * 10.0 + i as f32; 2]).collect(),
+            rew: (0..m).map(|i| tag + 100.0 * i as f32).collect(),
+            next_obs: (0..m).map(|i| vec![-tag - i as f32; 4]).collect(),
+            done: tag as usize % 2 == 0,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut buf = ReplayBuffer::new(3);
+        for t in 0..5 {
+            buf.push(mk_transition(t as f32, 2));
+        }
+        assert_eq!(buf.len(), 3);
+        // contents are {2, 3, 4} in some ring order
+        let tags: Vec<f32> = buf.data.iter().map(|t| t.obs[0][0]).collect();
+        let mut sorted = tags.clone();
+        sorted.sort_by(f32::total_cmp);
+        assert_eq!(sorted, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sample_layout_is_row_major() {
+        let mut buf = ReplayBuffer::new(8);
+        buf.push(mk_transition(7.0, 3));
+        let mut rng = Pcg32::seeded(0);
+        let mb = buf.sample(4, &mut rng);
+        assert_eq!(mb.batch, 4);
+        assert_eq!(mb.m, 3);
+        assert_eq!(mb.obs.len(), 4 * 3 * 4);
+        assert_eq!(mb.act.len(), 4 * 3 * 2);
+        assert_eq!(mb.done.len(), 4);
+        // single transition in buffer → every row identical
+        // obs[b, i, :] = 7 + i
+        for b in 0..4 {
+            for i in 0..3 {
+                let off = (b * 3 + i) * 4;
+                assert_eq!(mb.obs[off], 7.0 + i as f32);
+            }
+        }
+        // rewards_of(agent) has the per-agent values
+        for i in 0..3 {
+            assert!(mb.rewards_of(i).iter().all(|&r| r == 7.0 + 100.0 * i as f32));
+        }
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let mut buf = ReplayBuffer::new(100);
+        for t in 0..50 {
+            buf.push(mk_transition(t as f32, 2));
+        }
+        let a = buf.sample(16, &mut Pcg32::seeded(3));
+        let b = buf.sample(16, &mut Pcg32::seeded(3));
+        assert_eq!(a.obs, b.obs);
+        assert_eq!(a.rew, b.rew);
+        let c = buf.sample(16, &mut Pcg32::seeded(4));
+        assert_ne!(a.obs, c.obs);
+    }
+
+    #[test]
+    fn done_flag_encoded_as_float() {
+        let mut buf = ReplayBuffer::new(4);
+        let mut t = mk_transition(1.0, 2);
+        t.done = true;
+        buf.push(t);
+        let mb = buf.sample(3, &mut Pcg32::seeded(0));
+        assert!(mb.done.iter().all(|&d| d == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay buffer")]
+    fn empty_sample_panics() {
+        ReplayBuffer::new(4).sample(2, &mut Pcg32::seeded(0));
+    }
+}

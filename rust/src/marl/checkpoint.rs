@@ -1,0 +1,218 @@
+//! Checkpointing: persist and restore the M agents' parameter vectors.
+//!
+//! Substrate module (no `serde`/`bincode` offline): a small versioned
+//! binary format —
+//!
+//! ```text
+//! magic "CMRL" | version u32 | m u32 | dims{m,obs,act,hidden,batch} u32×5
+//! | per agent: 4 × (len u32, f32 data)  for [θ_p, θ_q, θ̂_p, θ̂_q]
+//! | crc32-like checksum u64 over the payload
+//! ```
+//!
+//! Used by the controller (`checkpoint_every`) and the `train --resume`
+//! path; the format embeds the model dims so loading against the wrong
+//! preset fails loudly instead of silently misinterpreting offsets.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{AgentParams, ModelDims};
+
+const MAGIC: &[u8; 4] = b"CMRL";
+const VERSION: u32 = 1;
+
+/// Order-sensitive FNV-1a over the raw parameter bytes.
+fn checksum(agents: &[AgentParams]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut fold = |xs: &[f32]| {
+        for &x in xs {
+            h = (h ^ x.to_bits() as u64).wrapping_mul(0x100000001b3);
+        }
+    };
+    for a in agents {
+        fold(&a.policy);
+        fold(&a.critic);
+        fold(&a.target_policy);
+        fold(&a.target_critic);
+    }
+    h
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn write_vec(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    write_u32(w, xs.len() as u32)?;
+    // safety: f32 slice viewed as bytes, little-endian hosts only (the
+    // wire format makes the same assumption)
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+    w.write_all(bytes)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_vec(r: &mut impl Read, expect: usize) -> Result<Vec<f32>> {
+    let len = read_u32(r)? as usize;
+    if len != expect {
+        bail!("checkpoint: vector length {len}, expected {expect} (wrong preset?)");
+    }
+    let mut bytes = vec![0u8; len * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save all agents to `path` (parent directories created).
+pub fn save(path: impl AsRef<Path>, dims: &ModelDims, agents: &[AgentParams]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u32(&mut w, agents.len() as u32)?;
+    for v in [dims.m, dims.obs_dim, dims.act_dim, dims.hidden, dims.batch] {
+        write_u32(&mut w, v as u32)?;
+    }
+    for a in agents {
+        write_vec(&mut w, &a.policy)?;
+        write_vec(&mut w, &a.critic)?;
+        write_vec(&mut w, &a.target_policy)?;
+        write_vec(&mut w, &a.target_critic)?;
+    }
+    w.write_all(&checksum(agents).to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load agents from `path`, validating dims and checksum.
+pub fn load(path: impl AsRef<Path>, dims: &ModelDims) -> Result<Vec<AgentParams>> {
+    let path = path.as_ref();
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("checkpoint: bad magic (not a coded-marl checkpoint)");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("checkpoint: unsupported version {version}");
+    }
+    let m = read_u32(&mut r)? as usize;
+    let stored = [
+        read_u32(&mut r)? as usize,
+        read_u32(&mut r)? as usize,
+        read_u32(&mut r)? as usize,
+        read_u32(&mut r)? as usize,
+        read_u32(&mut r)? as usize,
+    ];
+    let want = [dims.m, dims.obs_dim, dims.act_dim, dims.hidden, dims.batch];
+    if stored != want {
+        bail!(
+            "checkpoint: dims mismatch (file {:?}, preset {:?}) — wrong preset?",
+            stored, want
+        );
+    }
+    if m != dims.m {
+        bail!("checkpoint: agent count {m} != M={}", dims.m);
+    }
+    let (pp, pq) = (dims.actor_param_dim(), dims.critic_param_dim());
+    let mut agents = Vec::with_capacity(m);
+    for _ in 0..m {
+        agents.push(AgentParams {
+            policy: read_vec(&mut r, pp)?,
+            critic: read_vec(&mut r, pq)?,
+            target_policy: read_vec(&mut r, pp)?,
+            target_critic: read_vec(&mut r, pq)?,
+        });
+    }
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum).context("checkpoint: missing checksum")?;
+    if u64::from_le_bytes(sum) != checksum(&agents) {
+        bail!("checkpoint: checksum mismatch (corrupt file)");
+    }
+    Ok(agents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn dims() -> ModelDims {
+        ModelDims { m: 3, obs_dim: 6, act_dim: 2, hidden: 8, batch: 4 }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("coded_marl_ckpt_tests").join(name)
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_exact() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(0);
+        let agents: Vec<AgentParams> = (0..d.m).map(|_| AgentParams::init(&d, &mut rng)).collect();
+        let path = tmp("roundtrip.bin");
+        save(&path, &d, &agents).unwrap();
+        let loaded = load(&path, &d).unwrap();
+        assert_eq!(agents, loaded);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_dims_rejected() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(1);
+        let agents: Vec<AgentParams> = (0..d.m).map(|_| AgentParams::init(&d, &mut rng)).collect();
+        let path = tmp("wrong_dims.bin");
+        save(&path, &d, &agents).unwrap();
+        let mut other = d;
+        other.hidden = 16;
+        let err = load(&path, &other).unwrap_err();
+        assert!(err.to_string().contains("dims mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(2);
+        let agents: Vec<AgentParams> = (0..d.m).map(|_| AgentParams::init(&d, &mut rng)).collect();
+        let path = tmp("corrupt.bin");
+        save(&path, &d, &agents).unwrap();
+        // flip a payload byte mid-file
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path, &d).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_and_bad_magic_rejected() {
+        let d = dims();
+        let path = tmp("garbage.bin");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(load(&path, &d).is_err());
+        std::fs::write(&path, b"CM").unwrap();
+        assert!(load(&path, &d).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,164 @@
+//! Native MLP forward pass over the shared flat parameter layout.
+//!
+//! Used on the rollout path (one action per env step per agent) where a
+//! PJRT dispatch per step would dominate; mirrors model.py's
+//! `actor_forward` / `critic_forward` exactly (same layer order, same
+//! activations) and is pinned against the HLO `actor_fwd` artifact by
+//! `rust/tests/runtime_integration.rs`.
+
+use super::params::mlp_layers;
+
+/// y = tanh/relu/id(x W + b) for a single row vector x.
+fn layer_into(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], act: Act) {
+    let in_dim = x.len();
+    let out_dim = b.len();
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    debug_assert_eq!(out.len(), out_dim);
+    out.copy_from_slice(b);
+    // w is row-major [in_dim, out_dim]: accumulate x[i] * w[i, :]
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xi * wv;
+        }
+    }
+    match act {
+        Act::None => {}
+        Act::Tanh => out.iter_mut().for_each(|v| *v = v.tanh()),
+        Act::Relu => out.iter_mut().for_each(|v| *v = v.max(0.0)),
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Tanh,
+    Relu,
+}
+
+/// Scratch buffers reused across forward calls (rollouts run this every
+/// env step — keep it allocation-free after warmup).
+#[derive(Default, Clone)]
+pub struct MlpScratch {
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+}
+
+/// Actor forward π(s): obs (len Do) → action (len Da) in [-1, 1]
+/// (tanh, tanh, tanh — same as model.py's actor_forward).
+pub fn actor_forward(
+    theta_p: &[f32],
+    obs: &[f32],
+    hidden: usize,
+    act_dim: usize,
+    scratch: &mut MlpScratch,
+) -> Vec<f32> {
+    let obs_dim = obs.len();
+    let [(w1, b1), (w2, b2), (w3, b3)] = mlp_layers(theta_p, obs_dim, hidden, act_dim);
+    scratch.h1.resize(hidden, 0.0);
+    scratch.h2.resize(hidden, 0.0);
+    let mut out = vec![0.0f32; act_dim];
+    layer_into(obs, w1, b1, &mut scratch.h1, Act::Tanh);
+    layer_into(&scratch.h1, w2, b2, &mut scratch.h2, Act::Tanh);
+    layer_into(&scratch.h2, w3, b3, &mut out, Act::Tanh);
+    out
+}
+
+/// Critic forward Q(s, a): joint obs ++ joint act (len Dc) → scalar
+/// (tanh, tanh, none — same as model.py's critic_forward).
+pub fn critic_forward(
+    theta_q: &[f32],
+    joint_input: &[f32],
+    hidden: usize,
+    scratch: &mut MlpScratch,
+) -> f32 {
+    let in_dim = joint_input.len();
+    let [(w1, b1), (w2, b2), (w3, b3)] = mlp_layers(theta_q, in_dim, hidden, 1);
+    scratch.h1.resize(hidden, 0.0);
+    scratch.h2.resize(hidden, 0.0);
+    let mut out = [0.0f32];
+    layer_into(joint_input, w1, b1, &mut scratch.h1, Act::Tanh);
+    layer_into(&scratch.h1, w2, b2, &mut scratch.h2, Act::Tanh);
+    layer_into(&scratch.h2, w3, b3, &mut out, Act::None);
+    out[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marl::params::init_mlp;
+    use crate::rng::Pcg32;
+    use crate::testkit::forall;
+
+    #[test]
+    fn actor_output_bounded_and_deterministic() {
+        let mut rng = Pcg32::seeded(0);
+        let theta = init_mlp(14, 64, 2, &mut rng);
+        let obs: Vec<f32> = rng.normal_vec_f32(14, 1.0);
+        let mut s = MlpScratch::default();
+        let a1 = actor_forward(&theta, &obs, 64, 2, &mut s);
+        let a2 = actor_forward(&theta, &obs, 64, 2, &mut s);
+        assert_eq!(a1, a2);
+        assert!(a1.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn zero_params_give_zero_action() {
+        let theta = vec![0.0f32; 14 * 64 + 64 + 64 * 64 + 64 + 64 * 2 + 2];
+        let mut s = MlpScratch::default();
+        let a = actor_forward(&theta, &[1.0; 14], 64, 2, &mut s);
+        assert_eq!(a, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn hand_computed_tiny_network() {
+        // 1-in, 1-hidden, 1-out actor: y = tanh(w3*tanh(w2*tanh(w1*x+b1)+b2)+b3)
+        let theta = vec![0.5f32, 0.1, 2.0, -0.2, 1.5, 0.3];
+        let mut s = MlpScratch::default();
+        let x = 0.7f32;
+        let h1 = (0.5 * x + 0.1).tanh();
+        let h2 = (2.0 * h1 - 0.2).tanh();
+        let want = (1.5 * h2 + 0.3).tanh();
+        let got = actor_forward(&theta, &[x], 1, 1, &mut s)[0];
+        assert!((got - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn critic_is_scalar_and_linear_head() {
+        let mut rng = Pcg32::seeded(1);
+        let theta = init_mlp(20, 32, 1, &mut rng);
+        let x = rng.normal_vec_f32(20, 1.0);
+        let mut s = MlpScratch::default();
+        let q = critic_forward(&theta, &x, 32, &mut s);
+        assert!(q.is_finite());
+        // critic head has no activation: scaling the last-layer weights
+        // scales the output affinely
+        let mut theta2 = theta.clone();
+        let n = theta2.len();
+        // bias b3 is the last element; W3 the 32 before it
+        for v in &mut theta2[n - 33..n - 1] {
+            *v *= 2.0;
+        }
+        let q2 = critic_forward(&theta2, &x, 32, &mut s);
+        let b3 = theta[n - 1];
+        assert!(((q2 - b3) - 2.0 * (q - b3)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn property_finite_outputs() {
+        forall("mlp finite", 30, |g| {
+            let obs_dim = g.usize_in(1, 24);
+            let hidden = g.usize_in(1, 32);
+            let act_dim = g.usize_in(1, 4);
+            let theta = init_mlp(obs_dim, hidden, act_dim, g.rng());
+            let obs = g.f32_vec(obs_dim, 3.0);
+            let mut s = MlpScratch::default();
+            let a = actor_forward(&theta, &obs, hidden, act_dim, &mut s);
+            assert_eq!(a.len(), act_dim);
+            assert!(a.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! MARL state management: parameter layouts (mirroring
+//! python/compile/model.py), the replay buffer, exploration noise and a
+//! native MLP forward pass for the rollout path.
+//!
+//! The division of labor with [`crate::runtime`]:
+//! * the *training* computation (learner step: critic TD update, policy
+//!   gradient, Polyak) always runs through the AOT-compiled HLO
+//!   artifacts — JAX+Pallas numerics, Python never at runtime;
+//! * the *rollout* action selection uses [`mlp`]'s native forward pass
+//!   (same layout, same math) to avoid a PJRT dispatch per environment
+//!   step; equivalence with the HLO `actor_fwd` artifact is pinned by
+//!   an integration test.
+
+pub mod buffer;
+pub mod checkpoint;
+pub mod mlp;
+pub mod noise;
+pub mod params;
+
+pub use buffer::{ReplayBuffer, Transition};
+pub use params::{AgentParams, ModelDims};

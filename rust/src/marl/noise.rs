@@ -1,0 +1,126 @@
+//! Exploration noise for deterministic policies.
+//!
+//! MADDPG explores by perturbing the deterministic action. We provide
+//! the two standard processes: iid Gaussian and Ornstein–Uhlenbeck
+//! (temporally correlated, the original DDPG choice), plus a linear
+//! decay schedule.
+
+use crate::rng::Pcg32;
+
+/// Noise process over a fixed-dimension action.
+pub trait Noise: Send {
+    /// Sample the next noise vector (stateful for OU).
+    fn sample(&mut self, rng: &mut Pcg32) -> Vec<f32>;
+    /// Reset state at episode boundaries.
+    fn reset(&mut self);
+}
+
+/// iid N(0, σ²) per component.
+pub struct GaussianNoise {
+    pub dim: usize,
+    pub sigma: f64,
+}
+
+impl Noise for GaussianNoise {
+    fn sample(&mut self, rng: &mut Pcg32) -> Vec<f32> {
+        (0..self.dim).map(|_| (rng.normal() * self.sigma) as f32).collect()
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Ornstein–Uhlenbeck process: dx = θ(μ − x)dt + σ dW.
+pub struct OuNoise {
+    pub dim: usize,
+    pub theta: f64,
+    pub sigma: f64,
+    pub dt: f64,
+    state: Vec<f64>,
+}
+
+impl OuNoise {
+    pub fn new(dim: usize, theta: f64, sigma: f64, dt: f64) -> OuNoise {
+        OuNoise { dim, theta, sigma, dt, state: vec![0.0; dim] }
+    }
+}
+
+impl Noise for OuNoise {
+    fn sample(&mut self, rng: &mut Pcg32) -> Vec<f32> {
+        let sq = self.dt.sqrt();
+        for x in &mut self.state {
+            *x += self.theta * (0.0 - *x) * self.dt + self.sigma * sq * rng.normal();
+        }
+        self.state.iter().map(|&x| x as f32).collect()
+    }
+
+    fn reset(&mut self) {
+        self.state.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Multiplies an inner process by a linearly decaying scale
+/// (exploration annealing over training iterations).
+pub struct DecaySchedule {
+    pub start: f64,
+    pub end: f64,
+    pub decay_iters: usize,
+}
+
+impl DecaySchedule {
+    pub fn scale_at(&self, iter: usize) -> f64 {
+        if self.decay_iters == 0 || iter >= self.decay_iters {
+            return self.end;
+        }
+        let f = iter as f64 / self.decay_iters as f64;
+        self.start + (self.end - self.start) * f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_moments() {
+        let mut n = GaussianNoise { dim: 2, sigma: 0.5 };
+        let mut rng = Pcg32::seeded(0);
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        let cnt = 20_000;
+        for _ in 0..cnt {
+            let v = n.sample(&mut rng);
+            sum += v[0] as f64;
+            sum2 += (v[0] as f64) * (v[0] as f64);
+        }
+        let mean = sum / cnt as f64;
+        let var = sum2 / cnt as f64 - mean * mean;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 0.25).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn ou_is_temporally_correlated_and_resets() {
+        let mut n = OuNoise::new(1, 0.15, 0.2, 1.0);
+        let mut rng = Pcg32::seeded(1);
+        let xs: Vec<f32> = (0..2000).map(|_| n.sample(&mut rng)[0]).collect();
+        // lag-1 autocorrelation should be clearly positive (≈ 1-θ)
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>();
+        let cov: f32 = xs.windows(2).map(|w| (w[0] - mean) * (w[1] - mean)).sum::<f32>();
+        let rho = cov / var;
+        assert!(rho > 0.5, "rho={rho}");
+        n.reset();
+        assert_eq!(n.state, vec![0.0]);
+    }
+
+    #[test]
+    fn decay_schedule_endpoints() {
+        let d = DecaySchedule { start: 1.0, end: 0.1, decay_iters: 100 };
+        assert_eq!(d.scale_at(0), 1.0);
+        assert!((d.scale_at(50) - 0.55).abs() < 1e-12);
+        assert_eq!(d.scale_at(100), 0.1);
+        assert_eq!(d.scale_at(1000), 0.1);
+        let zero = DecaySchedule { start: 1.0, end: 0.3, decay_iters: 0 };
+        assert_eq!(zero.scale_at(0), 0.3);
+    }
+}

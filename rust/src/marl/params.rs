@@ -1,0 +1,220 @@
+//! Flat parameter vectors and their layout — the Rust mirror of
+//! python/compile/model.py's packing:
+//!
+//! ```text
+//! actor  θ_p = [W1(Do·H) | b1(H) | W2(H·H) | b2(H) | W3(H·Da) | b3(Da)]
+//! critic θ_q = [W1(Dc·H) | b1(H) | W2(H·H) | b2(H) | W3(H·1)  | b3(1)]
+//! agent  θ   = [θ_p | θ_q | θ̂_p | θ̂_q]
+//! ```
+//!
+//! Matrices are row-major. The coded learner results `y_j = Σ c_{j,i} θ'_i`
+//! are linear combinations of whole agent vectors, so the concatenated
+//! layout is what travels over the wire and through the decoder.
+
+use crate::rng::Pcg32;
+
+/// Model dimensions for one experiment preset (a subset of the fields
+/// in artifacts/manifest.json; see [`crate::runtime::manifest`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub m: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    pub batch: usize,
+}
+
+impl ModelDims {
+    pub fn critic_in_dim(&self) -> usize {
+        self.m * (self.obs_dim + self.act_dim)
+    }
+
+    pub fn actor_param_dim(&self) -> usize {
+        let (d, h, a) = (self.obs_dim, self.hidden, self.act_dim);
+        d * h + h + h * h + h + h * a + a
+    }
+
+    pub fn critic_param_dim(&self) -> usize {
+        let (c, h) = (self.critic_in_dim(), self.hidden);
+        c * h + h + h * h + h + h + 1
+    }
+
+    /// Length of the full per-agent vector [θ_p | θ_q | θ̂_p | θ̂_q].
+    pub fn agent_param_dim(&self) -> usize {
+        2 * (self.actor_param_dim() + self.critic_param_dim())
+    }
+
+    /// (offset, len) of each of the four blocks in the agent vector.
+    pub fn blocks(&self) -> [(usize, usize); 4] {
+        let (pp, pq) = (self.actor_param_dim(), self.critic_param_dim());
+        [(0, pp), (pp, pq), (pp + pq, pp), (pp + pq + pp, pq)]
+    }
+}
+
+/// One agent's four networks, as flat vectors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AgentParams {
+    pub policy: Vec<f32>,
+    pub critic: Vec<f32>,
+    pub target_policy: Vec<f32>,
+    pub target_critic: Vec<f32>,
+}
+
+impl AgentParams {
+    /// Glorot-uniform weights / zero biases, targets initialized equal
+    /// to the live networks (standard DDPG initialization).
+    pub fn init(dims: &ModelDims, rng: &mut Pcg32) -> AgentParams {
+        let policy = init_mlp(dims.obs_dim, dims.hidden, dims.act_dim, rng);
+        let critic = init_mlp(dims.critic_in_dim(), dims.hidden, 1, rng);
+        AgentParams {
+            target_policy: policy.clone(),
+            target_critic: critic.clone(),
+            policy,
+            critic,
+        }
+    }
+
+    /// Concatenate into the wire/decode layout [θ_p | θ_q | θ̂_p | θ̂_q].
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(
+            self.policy.len() + self.critic.len()
+                + self.target_policy.len() + self.target_critic.len(),
+        );
+        v.extend_from_slice(&self.policy);
+        v.extend_from_slice(&self.critic);
+        v.extend_from_slice(&self.target_policy);
+        v.extend_from_slice(&self.target_critic);
+        v
+    }
+
+    /// Inverse of [`AgentParams::to_flat`].
+    pub fn from_flat(dims: &ModelDims, flat: &[f32]) -> AgentParams {
+        assert_eq!(flat.len(), dims.agent_param_dim(), "flat length mismatch");
+        let [(o0, l0), (o1, l1), (o2, l2), (o3, l3)] = dims.blocks();
+        AgentParams {
+            policy: flat[o0..o0 + l0].to_vec(),
+            critic: flat[o1..o1 + l1].to_vec(),
+            target_policy: flat[o2..o2 + l2].to_vec(),
+            target_critic: flat[o3..o3 + l3].to_vec(),
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &AgentParams) -> f32 {
+        fn d(a: &[f32], b: &[f32]) -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+        }
+        d(&self.policy, &other.policy)
+            .max(d(&self.critic, &other.critic))
+            .max(d(&self.target_policy, &other.target_policy))
+            .max(d(&self.target_critic, &other.target_critic))
+    }
+}
+
+/// Glorot-uniform init for the 3-layer MLP, packed flat in the shared
+/// layout. (Initialization happens Rust-side; python's init_mlp exists
+/// only for python-local tests.)
+pub fn init_mlp(in_dim: usize, hidden: usize, out_dim: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let mut v = Vec::new();
+    for (fan_in, fan_out) in [(in_dim, hidden), (hidden, hidden), (hidden, out_dim)] {
+        let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+        for _ in 0..fan_in * fan_out {
+            v.push(rng.uniform_range(-limit, limit) as f32);
+        }
+        for _ in 0..fan_out {
+            v.push(0.0f32);
+        }
+    }
+    v
+}
+
+/// View the three (W, b) layer blocks of a flat MLP vector.
+pub fn mlp_layers<'a>(
+    flat: &'a [f32],
+    in_dim: usize,
+    hidden: usize,
+    out_dim: usize,
+) -> [(&'a [f32], &'a [f32]); 3] {
+    let mut off = 0;
+    let mut take = |n: usize| {
+        let s = &flat[off..off + n];
+        off += n;
+        s
+    };
+    let w1 = take(in_dim * hidden);
+    let b1 = take(hidden);
+    let w2 = take(hidden * hidden);
+    let b2 = take(hidden);
+    let w3 = take(hidden * out_dim);
+    let b3 = take(out_dim);
+    assert_eq!(off, flat.len(), "layer view does not cover the vector");
+    [(w1, b1), (w2, b2), (w3, b3)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { m: 3, obs_dim: 14, act_dim: 2, hidden: 64, batch: 32 }
+    }
+
+    /// Pin against python/tests/test_presets.py's quickstart_m3 values.
+    #[test]
+    fn dims_match_python_quickstart() {
+        let d = dims();
+        assert_eq!(d.critic_in_dim(), 3 * 16);
+        assert_eq!(d.actor_param_dim(), 14 * 64 + 64 + 64 * 64 + 64 + 64 * 2 + 2);
+        assert_eq!(d.critic_param_dim(), 48 * 64 + 64 + 64 * 64 + 64 + 64 + 1);
+        assert_eq!(d.agent_param_dim(), 2 * (d.actor_param_dim() + d.critic_param_dim()));
+    }
+
+    #[test]
+    fn init_lengths() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(0);
+        let p = AgentParams::init(&d, &mut rng);
+        assert_eq!(p.policy.len(), d.actor_param_dim());
+        assert_eq!(p.critic.len(), d.critic_param_dim());
+        assert_eq!(p.policy, p.target_policy);
+        assert_eq!(p.critic, p.target_critic);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(1);
+        let p = AgentParams::init(&d, &mut rng);
+        let flat = p.to_flat();
+        assert_eq!(flat.len(), d.agent_param_dim());
+        let q = AgentParams::from_flat(&d, &flat);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn blocks_partition_the_vector() {
+        let d = dims();
+        let blocks = d.blocks();
+        let mut expect = 0;
+        for (off, len) in blocks {
+            assert_eq!(off, expect);
+            expect += len;
+        }
+        assert_eq!(expect, d.agent_param_dim());
+    }
+
+    #[test]
+    fn glorot_bounds_and_zero_biases() {
+        let mut rng = Pcg32::seeded(2);
+        let v = init_mlp(10, 8, 4, &mut rng);
+        let [(w1, b1), (_, b2), (_, b3)] = mlp_layers(&v, 10, 8, 4);
+        let limit = (6.0f64 / 18.0).sqrt() as f32;
+        assert!(w1.iter().all(|&x| x.abs() <= limit));
+        assert!(b1.iter().chain(b2).chain(b3).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "flat length mismatch")]
+    fn from_flat_checks_length() {
+        AgentParams::from_flat(&dims(), &[0.0; 10]);
+    }
+}

@@ -1,0 +1,376 @@
+//! Metrics: running statistics, per-iteration timing breakdowns, and
+//! CSV/JSON run logging.
+//!
+//! Substrate module (no `serde`/`csv`/`prometheus` offline): a small
+//! hand-rolled recorder that covers what the experiments need — the
+//! paper reports *average training time per iteration* (Figs. 4-5) and
+//! *average cumulative reward per iteration* (Fig. 3), and the perf
+//! pass needs a phase-level breakdown (rollout / broadcast / wait /
+//! decode) of the controller hot loop.
+
+pub mod table;
+
+use std::io::Write;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator into this one (parallel Welford).
+    pub fn merge(&mut self, other: &Stats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Phases of one controller iteration (paper Alg. 1 lines 3-15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Episode execution + replay-buffer writes (lines 3-7).
+    Rollout,
+    /// Minibatch sampling (line 8).
+    Sample,
+    /// Task encode + send to all learners (line 9).
+    Broadcast,
+    /// Listening for learner results until decodable (lines 10-13).
+    Wait,
+    /// Recovery of θ' via Eq. (2) (line 15).
+    Decode,
+    /// Whole iteration wall time.
+    Total,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Rollout,
+        Phase::Sample,
+        Phase::Broadcast,
+        Phase::Wait,
+        Phase::Decode,
+        Phase::Total,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Rollout => "rollout",
+            Phase::Sample => "sample",
+            Phase::Broadcast => "broadcast",
+            Phase::Wait => "wait",
+            Phase::Decode => "decode",
+            Phase::Total => "total",
+        }
+    }
+}
+
+/// Timing record of one training iteration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterTiming {
+    pub rollout: Duration,
+    pub sample: Duration,
+    pub broadcast: Duration,
+    pub wait: Duration,
+    pub decode: Duration,
+    pub total: Duration,
+}
+
+impl IterTiming {
+    pub fn get(&self, phase: Phase) -> Duration {
+        match phase {
+            Phase::Rollout => self.rollout,
+            Phase::Sample => self.sample,
+            Phase::Broadcast => self.broadcast,
+            Phase::Wait => self.wait,
+            Phase::Decode => self.decode,
+            Phase::Total => self.total,
+        }
+    }
+}
+
+/// One iteration's full record: timing, reward, learner telemetry.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: u64,
+    pub timing: IterTiming,
+    /// Sum over agents of per-episode cumulative reward, averaged over
+    /// the iteration's episodes (Fig. 3's y-axis).
+    pub reward: f64,
+    /// Mean critic TD loss over the decoded agents (NaN if the backend
+    /// does not report losses, e.g. coded rows mix agents).
+    pub critic_loss: f64,
+    /// How many learner results were used for recovery.
+    pub results_used: usize,
+    /// Which decode path ran ("peeling" / "qr" / "normal_equations").
+    pub decode_method: &'static str,
+    /// Stragglers injected this iteration.
+    pub stragglers: Vec<usize>,
+}
+
+/// Collects per-iteration records for a whole run and writes them out.
+#[derive(Debug, Default)]
+pub struct RunLog {
+    pub records: Vec<IterRecord>,
+}
+
+impl RunLog {
+    pub fn new() -> RunLog {
+        RunLog { records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Mean wall time per iteration — the y-axis of Figs. 4-5.
+    pub fn mean_iter_time(&self) -> Duration {
+        if self.records.is_empty() {
+            return Duration::ZERO;
+        }
+        let total: Duration = self.records.iter().map(|r| r.timing.total).sum();
+        total / self.records.len() as u32
+    }
+
+    /// Phase statistics across iterations (seconds).
+    pub fn phase_stats(&self, phase: Phase) -> Stats {
+        let mut s = Stats::new();
+        for r in &self.records {
+            s.push(r.timing.get(phase).as_secs_f64());
+        }
+        s
+    }
+
+    /// Rewards averaged over a trailing window, per iteration — Fig. 3
+    /// plots a 250-iteration running average.
+    pub fn smoothed_rewards(&self, window: usize) -> Vec<f64> {
+        assert!(window > 0);
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut sum = 0.0;
+        for (i, r) in self.records.iter().enumerate() {
+            sum += r.reward;
+            if i >= window {
+                sum -= self.records[i - window].reward;
+            }
+            out.push(sum / (i + 1).min(window) as f64);
+        }
+        out
+    }
+
+    /// Write one CSV row per iteration.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "iter,total_s,rollout_s,sample_s,broadcast_s,wait_s,decode_s,\
+             reward,critic_loss,results_used,decode_method,stragglers"
+        )?;
+        for r in &self.records {
+            let t = &r.timing;
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.4},{:.6},{},{},{}",
+                r.iter,
+                t.total.as_secs_f64(),
+                t.rollout.as_secs_f64(),
+                t.sample.as_secs_f64(),
+                t.broadcast.as_secs_f64(),
+                t.wait.as_secs_f64(),
+                t.decode.as_secs_f64(),
+                r.reward,
+                r.critic_loss,
+                r.results_used,
+                r.decode_method,
+                r.stragglers.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("|"),
+            )?;
+        }
+        f.flush()
+    }
+}
+
+/// Scoped stopwatch: `let t = Timer::start(); ... t.elapsed()`.
+#[derive(Clone, Copy, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_var() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // sample variance of that set is 32/7
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn stats_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin() * 10.0).collect();
+        let mut whole = Stats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Stats::new();
+        let mut b = Stats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = Stats::new();
+        assert!(s.mean().is_nan());
+        assert_eq!(s.variance(), 0.0);
+        let mut a = Stats::new();
+        a.push(1.0);
+        let before = a.mean();
+        a.merge(&Stats::new());
+        assert_eq!(a.mean(), before);
+    }
+
+    fn rec(iter: u64, total_ms: u64, reward: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            timing: IterTiming {
+                total: Duration::from_millis(total_ms),
+                rollout: Duration::from_millis(total_ms / 4),
+                ..Default::default()
+            },
+            reward,
+            critic_loss: 0.5,
+            results_used: 8,
+            decode_method: "qr",
+            stragglers: vec![1, 3],
+        }
+    }
+
+    #[test]
+    fn runlog_means() {
+        let mut log = RunLog::new();
+        log.push(rec(0, 100, -10.0));
+        log.push(rec(1, 300, -6.0));
+        assert_eq!(log.mean_iter_time(), Duration::from_millis(200));
+        let s = log.phase_stats(Phase::Total);
+        assert!((s.mean() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smoothed_rewards_windows() {
+        let mut log = RunLog::new();
+        for (i, r) in [1.0, 3.0, 5.0, 7.0].iter().enumerate() {
+            log.push(rec(i as u64, 1, *r));
+        }
+        let sm = log.smoothed_rewards(2);
+        assert_eq!(sm, vec![1.0, 2.0, 4.0, 6.0]);
+        let sm1 = log.smoothed_rewards(1);
+        assert_eq!(sm1, vec![1.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn csv_writes_and_has_rows() {
+        let mut log = RunLog::new();
+        log.push(rec(0, 10, 1.0));
+        log.push(rec(1, 20, 2.0));
+        let dir = std::env::temp_dir().join("coded_marl_metrics_test");
+        let path = dir.join("run.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.lines().next().unwrap().starts_with("iter,total_s"));
+        assert!(text.contains("1|3"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

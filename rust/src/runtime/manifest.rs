@@ -1,0 +1,213 @@
+//! artifacts/manifest.json — the contract between `python -m
+//! compile.aot` (which writes it) and the Rust runtime (which loads the
+//! HLO artifacts it describes).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+use crate::marl::ModelDims;
+
+/// One lowered preset (mirror of presets.Preset.manifest_entry()).
+#[derive(Clone, Debug)]
+pub struct PresetSpec {
+    pub name: String,
+    pub env: String,
+    pub m: usize,
+    pub n_adversaries: usize,
+    pub batch: usize,
+    pub hidden: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub actor_param_dim: usize,
+    pub critic_param_dim: usize,
+    pub agent_param_dim: usize,
+    pub gamma: f64,
+    pub tau: f64,
+    pub lr_actor: f64,
+    pub lr_critic: f64,
+    /// Paths relative to the artifacts dir.
+    pub learner_step_hlo: String,
+    pub actor_fwd_hlo: String,
+}
+
+impl PresetSpec {
+    pub fn dims(&self) -> ModelDims {
+        ModelDims {
+            m: self.m,
+            obs_dim: self.obs_dim,
+            act_dim: self.act_dim,
+            hidden: self.hidden,
+            batch: self.batch,
+        }
+    }
+
+    /// Cross-check the manifest numbers against the Rust-side formulas
+    /// (defense against layout drift between python and rust).
+    pub fn validate(&self) -> Result<()> {
+        let d = self.dims();
+        if d.actor_param_dim() != self.actor_param_dim {
+            bail!(
+                "{}: actor_param_dim mismatch (manifest {}, computed {})",
+                self.name, self.actor_param_dim, d.actor_param_dim()
+            );
+        }
+        if d.critic_param_dim() != self.critic_param_dim {
+            bail!(
+                "{}: critic_param_dim mismatch (manifest {}, computed {})",
+                self.name, self.critic_param_dim, d.critic_param_dim()
+            );
+        }
+        if d.agent_param_dim() != self.agent_param_dim {
+            bail!("{}: agent_param_dim mismatch", self.name);
+        }
+        if let Some(kind) = crate::env::EnvKind::parse(&self.env) {
+            if kind.obs_dim(self.m) != self.obs_dim {
+                bail!(
+                    "{}: obs_dim mismatch (manifest {}, env formula {})",
+                    self.name, self.obs_dim, kind.obs_dim(self.m)
+                );
+            }
+        } else {
+            bail!("{}: unknown env '{}'", self.name, self.env);
+        }
+        Ok(())
+    }
+}
+
+/// Parsed manifest plus the artifacts directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub presets: Vec<PresetSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        if v.get("interchange")?.as_str()? != "hlo_text" {
+            bail!("manifest interchange format is not hlo_text");
+        }
+        let mut presets = Vec::new();
+        for e in v.get("presets")?.as_arr()? {
+            let arts = e.get("artifacts")?;
+            let spec = PresetSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                env: e.get("env")?.as_str()?.to_string(),
+                m: e.get("m")?.as_usize()?,
+                n_adversaries: e.get("n_adversaries")?.as_usize()?,
+                batch: e.get("batch")?.as_usize()?,
+                hidden: e.get("hidden")?.as_usize()?,
+                obs_dim: e.get("obs_dim")?.as_usize()?,
+                act_dim: e.get("act_dim")?.as_usize()?,
+                actor_param_dim: e.get("actor_param_dim")?.as_usize()?,
+                critic_param_dim: e.get("critic_param_dim")?.as_usize()?,
+                agent_param_dim: e.get("agent_param_dim")?.as_usize()?,
+                gamma: e.get("gamma")?.as_f64()?,
+                tau: e.get("tau")?.as_f64()?,
+                lr_actor: e.get("lr_actor")?.as_f64()?,
+                lr_critic: e.get("lr_critic")?.as_f64()?,
+                learner_step_hlo: arts.get("learner_step")?.as_str()?.to_string(),
+                actor_fwd_hlo: arts.get("actor_fwd")?.as_str()?.to_string(),
+            };
+            spec.validate()?;
+            presets.push(spec);
+        }
+        Ok(Manifest {
+            dir,
+            fingerprint: v.get("fingerprint")?.as_str()?.to_string(),
+            presets,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetSpec> {
+        self.presets
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| {
+                let known: Vec<&str> = self.presets.iter().map(|p| p.name.as_str()).collect();
+                format!("preset '{name}' not in manifest (known: {known:?})")
+            })
+    }
+
+    /// The preset for (env, m), if lowered.
+    pub fn preset_for(&self, env: &str, m: usize) -> Result<&PresetSpec> {
+        self.presets
+            .iter()
+            .find(|p| p.env == env && p.m == m)
+            .with_context(|| format!("no preset lowered for env={env} m={m}"))
+    }
+
+    pub fn hlo_path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).expect("load");
+        assert!(m.presets.len() >= 9, "expected all presets lowered");
+        let q = m.preset("quickstart_m3").unwrap();
+        assert_eq!(q.m, 3);
+        assert_eq!(q.obs_dim, 14);
+        assert!(m.hlo_path(&q.learner_step_hlo).exists());
+        assert!(m.hlo_path(&q.actor_fwd_hlo).exists());
+        assert!(m.preset_for("coop_nav", 8).is_ok());
+        assert!(m.preset_for("coop_nav", 99).is_err());
+        assert!(m.preset("nope").is_err());
+    }
+
+    #[test]
+    fn validate_catches_drift() {
+        let mut spec = PresetSpec {
+            name: "x".into(),
+            env: "coop_nav".into(),
+            m: 3,
+            n_adversaries: 0,
+            batch: 32,
+            hidden: 64,
+            obs_dim: 14,
+            act_dim: 2,
+            actor_param_dim: 0, // wrong
+            critic_param_dim: 0,
+            agent_param_dim: 0,
+            gamma: 0.95,
+            tau: 0.99,
+            lr_actor: 1e-3,
+            lr_critic: 1e-2,
+            learner_step_hlo: "x".into(),
+            actor_fwd_hlo: "y".into(),
+        };
+        assert!(spec.validate().is_err());
+        let d = spec.dims();
+        spec.actor_param_dim = d.actor_param_dim();
+        spec.critic_param_dim = d.critic_param_dim();
+        spec.agent_param_dim = d.agent_param_dim();
+        assert!(spec.validate().is_ok());
+        spec.env = "unknown_env".into();
+        assert!(spec.validate().is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Mini property-based testing framework.
+//!
+//! Substrate: `proptest` is not available offline, so this module
+//! provides the subset the test suite needs — seeded generators,
+//! configurable case counts, and failure reporting that prints the
+//! first failing case's seed so it can be replayed deterministically.
+//!
+//! ```no_run
+//! use coded_marl::testkit::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.f64_in(-10.0, 10.0);
+//!     let b = g.f64_in(-10.0, 10.0);
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use crate::rng::Pcg32;
+
+/// A seeded case generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg32,
+    /// The seed for this case — printed on failure for replay.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen { rng: Pcg32::seeded(case_seed), case_seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.normal_vec(n)
+    }
+
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.normal_vec_f32(n, scale)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    /// A random subset of 0..n of size k.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.choose_k(n, k)
+    }
+}
+
+/// Base seed; override with env var `CODED_MARL_PROP_SEED` to reproduce
+/// a CI failure locally.
+fn base_seed() -> u64 {
+    std::env::var("CODED_MARL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0DED_3A51)
+}
+
+/// Run `prop` for `cases` seeded cases. Panics (with the case seed) on
+/// the first failure. Catch-unwind is used so the failing seed is
+/// always reported even when the property itself panics via assert!.
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = base_seed();
+    for i in 0..cases {
+        let case_seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} \
+                 (replay with CODED_MARL_PROP_SEED... case_seed={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failures() {
+        forall("always-fails", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(99);
+        let mut b = Gen::new(99);
+        for _ in 0..10 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+
+    #[test]
+    fn subset_has_right_size() {
+        forall("subset size", 30, |g| {
+            let n = g.usize_in(1, 20);
+            let k = g.usize_in(0, n);
+            assert_eq!(g.subset(n, k).len(), k);
+        });
+    }
+}

@@ -1,0 +1,151 @@
+//! In-process transport: learners are threads, channels are
+//! `std::sync::mpsc`. Message *values* are moved, but semantics match
+//! the TCP transport (same enums, same ordering guarantees per pair).
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::{ControllerTransport, CtrlMsg, LearnerEndpoint, LearnerMsg};
+
+/// Controller side: one sender per learner, one shared return channel.
+pub struct LocalController {
+    to_learners: Vec<Sender<CtrlMsg>>,
+    from_learners: Receiver<LearnerMsg>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Learner side handed to each spawned thread.
+pub struct LocalLearner {
+    rx: Receiver<CtrlMsg>,
+    tx: Sender<LearnerMsg>,
+}
+
+/// Build an N-learner local transport. Returns the controller half and
+/// the N learner endpoints; the caller spawns the learner threads and
+/// registers their join handles via [`LocalController::set_handles`].
+pub fn local_pair(n: usize) -> (LocalController, Vec<LocalLearner>) {
+    let (result_tx, result_rx) = channel();
+    let mut to_learners = Vec::with_capacity(n);
+    let mut endpoints = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (task_tx, task_rx) = channel();
+        to_learners.push(task_tx);
+        endpoints.push(LocalLearner { rx: task_rx, tx: result_tx.clone() });
+    }
+    (
+        LocalController { to_learners, from_learners: result_rx, handles: Vec::new() },
+        endpoints,
+    )
+}
+
+impl LocalController {
+    /// Register learner thread handles so shutdown can join them.
+    pub fn set_handles(&mut self, handles: Vec<std::thread::JoinHandle<()>>) {
+        self.handles = handles;
+    }
+}
+
+impl ControllerTransport for LocalController {
+    fn n_learners(&self) -> usize {
+        self.to_learners.len()
+    }
+
+    fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
+        self.to_learners[learner]
+            .send(msg)
+            .map_err(|_| anyhow!("learner {learner} channel closed"))
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<LearnerMsg>> {
+        match self.from_learners.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("all learner channels closed"))
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        for tx in &self.to_learners {
+            let _ = tx.send(CtrlMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.to_learners.clear();
+    }
+}
+
+impl LearnerEndpoint for LocalLearner {
+    fn recv(&mut self) -> Result<CtrlMsg> {
+        self.rx.recv().map_err(|_| anyhow!("controller channel closed"))
+    }
+
+    fn try_recv(&mut self) -> Result<Option<CtrlMsg>> {
+        match self.rx.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow!("controller channel closed")),
+        }
+    }
+
+    fn send(&mut self, msg: LearnerMsg) -> Result<()> {
+        self.tx.send(msg).map_err(|_| anyhow!("controller result channel closed"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_threads() {
+        let (mut ctrl, mut learners) = local_pair(3);
+        let handles: Vec<_> = learners
+            .drain(..)
+            .enumerate()
+            .map(|(id, mut ep)| {
+                std::thread::spawn(move || loop {
+                    match ep.recv().unwrap() {
+                        CtrlMsg::Ack { iter } => {
+                            ep.send(LearnerMsg::Result {
+                                iter,
+                                learner_id: id as u32,
+                                y: vec![id as f32],
+                                compute_ns: 0,
+                            })
+                            .unwrap();
+                        }
+                        CtrlMsg::Shutdown => return,
+                        _ => {}
+                    }
+                })
+            })
+            .collect();
+        ctrl.set_handles(handles);
+        ctrl.broadcast(&CtrlMsg::Ack { iter: 5 }).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            match ctrl.recv_timeout(Duration::from_secs(5)).unwrap().unwrap() {
+                LearnerMsg::Result { iter, learner_id, .. } => {
+                    assert_eq!(iter, 5);
+                    got.push(learner_id);
+                }
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert!(ctrl.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        ctrl.shutdown();
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking() {
+        let (_ctrl, mut learners) = local_pair(1);
+        assert!(learners[0].try_recv().unwrap().is_none());
+    }
+}

@@ -1,0 +1,62 @@
+//! Controller ⇄ learner transports.
+//!
+//! Two implementations with identical semantics (DESIGN.md §2):
+//!
+//! * [`local`] — learners are threads in the controller process,
+//!   connected by `std::sync::mpsc` channels. Default for tests and
+//!   benches (timing is dominated by the same compute + injected
+//!   delays the paper measures, without EC2).
+//! * [`tcp`] — learners are separate worker processes (`coded-marl
+//!   worker`) on localhost/TCP using the length-prefixed [`wire`]
+//!   format; exercises real sockets and serialization.
+//!
+//! The controller drives N learners through [`ControllerTransport`];
+//! each learner loop talks through a [`LearnerEndpoint`].
+
+pub mod local;
+pub mod msg;
+pub mod tcp;
+pub mod wire;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+pub use msg::{CtrlMsg, LearnerMsg};
+
+/// Controller-side view of the learner pool.
+pub trait ControllerTransport {
+    fn n_learners(&self) -> usize;
+
+    /// Send to a single learner.
+    fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()>;
+
+    /// Broadcast to every learner (Alg. 1 line 9).
+    fn broadcast(&mut self, msg: &CtrlMsg) -> Result<()> {
+        for j in 0..self.n_learners() {
+            self.send_to(j, msg.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Receive the next learner message, waiting up to `timeout`.
+    /// Returns Ok(None) on timeout.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<LearnerMsg>>;
+
+    /// Broadcast Shutdown and release resources (joins threads /
+    /// closes sockets).
+    fn shutdown(&mut self);
+}
+
+/// Learner-side endpoint.
+pub trait LearnerEndpoint {
+    /// Blocking receive of the next controller message.
+    fn recv(&mut self) -> Result<CtrlMsg>;
+
+    /// Non-blocking poll (used to notice Acks mid-computation,
+    /// Alg. 1 line 20).
+    fn try_recv(&mut self) -> Result<Option<CtrlMsg>>;
+
+    /// Send a message to the controller.
+    fn send(&mut self, msg: LearnerMsg) -> Result<()>;
+}

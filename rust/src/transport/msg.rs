@@ -1,0 +1,282 @@
+//! Controller ⇄ learner protocol messages (paper Alg. 1) and their
+//! wire encoding.
+//!
+//! The Task payload (all agent parameters + the minibatch, ~2 MB at
+//! paper scale) is `Arc`-shared: the controller broadcasts one message
+//! to N learners, and with the local transport the clone per learner
+//! is a refcount bump instead of a multi-megabyte copy (EXPERIMENTS.md
+//! §Perf). The TCP transport serializes through the same Arc.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::wire::{WireReader, WireWriter};
+use crate::marl::buffer::Minibatch;
+
+/// Controller → learner.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CtrlMsg {
+    /// One training iteration's work: the broadcast parameters `θ` for
+    /// all M agents (wire layout: [θ_p|θ_q|θ̂_p|θ̂_q] per agent) and the
+    /// sampled minibatch `B` (Alg. 1 line 9).
+    Task {
+        iter: u64,
+        /// This learner's row of the assignment matrix `C` (length M;
+        /// entry i is `c_{j,i}`). Shipping the row with the task keeps
+        /// learners stateless w.r.t. the coding scheme, so one pool can
+        /// serve every scheme/straggler configuration in a sweep.
+        row: Vec<f32>,
+        /// M flat agent vectors (shared across the broadcast).
+        agent_params: Arc<Vec<Vec<f32>>>,
+        minibatch: Arc<Minibatch>,
+        /// Injected straggler delay in nanoseconds (0 = healthy). The
+        /// controller selects the k stragglers per iteration (§V-C).
+        straggler_delay_ns: u64,
+    },
+    /// θ' recovered; stop working on `iter` (Alg. 1 line 14).
+    Ack { iter: u64 },
+    /// Terminate the learner loop.
+    Shutdown,
+    /// First frame on a TCP connection: assigns the worker its learner
+    /// id (local learners know theirs at spawn and never see this).
+    Welcome { learner_id: u32 },
+}
+
+/// Learner → controller.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LearnerMsg {
+    /// Ready signal carrying the learner's id (TCP workers learn their
+    /// id from the Welcome frame; local learners know it at spawn).
+    Hello { learner_id: u32 },
+    /// Coded result `y_j = Σ_i c_{j,i} θ'_i` for iteration `iter`
+    /// (Alg. 1 line 26) plus timing telemetry.
+    Result {
+        iter: u64,
+        learner_id: u32,
+        y: Vec<f32>,
+        /// Pure compute time (excludes the injected straggler delay).
+        compute_ns: u64,
+    },
+}
+
+const TAG_TASK: u8 = 1;
+const TAG_ACK: u8 = 2;
+const TAG_SHUTDOWN: u8 = 3;
+const TAG_WELCOME: u8 = 4;
+const TAG_HELLO: u8 = 16;
+const TAG_RESULT: u8 = 17;
+
+fn write_minibatch(w: &mut WireWriter, mb: &Minibatch) {
+    w.u32(mb.batch as u32);
+    w.u32(mb.m as u32);
+    w.u32(mb.obs_dim as u32);
+    w.u32(mb.act_dim as u32);
+    w.f32_slice(&mb.obs);
+    w.f32_slice(&mb.act);
+    w.f32_slice(&mb.rew);
+    w.f32_slice(&mb.next_obs);
+    w.f32_slice(&mb.done);
+}
+
+fn read_minibatch(r: &mut WireReader) -> Result<Minibatch> {
+    let batch = r.u32()? as usize;
+    let m = r.u32()? as usize;
+    let obs_dim = r.u32()? as usize;
+    let act_dim = r.u32()? as usize;
+    let mb = Minibatch {
+        batch,
+        m,
+        obs_dim,
+        act_dim,
+        obs: r.f32_vec()?,
+        act: r.f32_vec()?,
+        rew: r.f32_vec()?,
+        next_obs: r.f32_vec()?,
+        done: r.f32_vec()?,
+    };
+    if mb.obs.len() != batch * m * obs_dim
+        || mb.act.len() != batch * m * act_dim
+        || mb.rew.len() != m * batch
+        || mb.next_obs.len() != batch * m * obs_dim
+        || mb.done.len() != batch
+    {
+        bail!("wire: inconsistent minibatch dimensions");
+    }
+    Ok(mb)
+}
+
+impl CtrlMsg {
+    pub fn encode(&self) -> WireWriter {
+        let mut w = WireWriter::new();
+        match self {
+            CtrlMsg::Task { iter, row, agent_params, minibatch, straggler_delay_ns } => {
+                w.u8(TAG_TASK);
+                w.u64(*iter);
+                w.u64(*straggler_delay_ns);
+                w.f32_slice(row);
+                w.u32(agent_params.len() as u32);
+                for p in agent_params.iter() {
+                    w.f32_slice(p);
+                }
+                write_minibatch(&mut w, minibatch);
+            }
+            CtrlMsg::Ack { iter } => {
+                w.u8(TAG_ACK);
+                w.u64(*iter);
+            }
+            CtrlMsg::Shutdown => w.u8(TAG_SHUTDOWN),
+            CtrlMsg::Welcome { learner_id } => {
+                w.u8(TAG_WELCOME);
+                w.u32(*learner_id);
+            }
+        }
+        w
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<CtrlMsg> {
+        let mut r = WireReader::new(payload);
+        let msg = match r.u8()? {
+            TAG_TASK => {
+                let iter = r.u64()?;
+                let straggler_delay_ns = r.u64()?;
+                let row = r.f32_vec()?;
+                let m = r.u32()? as usize;
+                let mut agent_params = Vec::with_capacity(m);
+                for _ in 0..m {
+                    agent_params.push(r.f32_vec()?);
+                }
+                let minibatch = read_minibatch(&mut r)?;
+                if row.len() != agent_params.len() {
+                    bail!("wire: assignment row length != M");
+                }
+                CtrlMsg::Task {
+                    iter,
+                    row,
+                    agent_params: Arc::new(agent_params),
+                    minibatch: Arc::new(minibatch),
+                    straggler_delay_ns,
+                }
+            }
+            TAG_ACK => CtrlMsg::Ack { iter: r.u64()? },
+            TAG_SHUTDOWN => CtrlMsg::Shutdown,
+            TAG_WELCOME => CtrlMsg::Welcome { learner_id: r.u32()? },
+            t => bail!("wire: unknown CtrlMsg tag {t}"),
+        };
+        if !r.finished() {
+            bail!("wire: trailing bytes in CtrlMsg");
+        }
+        Ok(msg)
+    }
+}
+
+impl LearnerMsg {
+    pub fn encode(&self) -> WireWriter {
+        let mut w = WireWriter::new();
+        match self {
+            LearnerMsg::Hello { learner_id } => {
+                w.u8(TAG_HELLO);
+                w.u32(*learner_id);
+            }
+            LearnerMsg::Result { iter, learner_id, y, compute_ns } => {
+                w.u8(TAG_RESULT);
+                w.u64(*iter);
+                w.u32(*learner_id);
+                w.u64(*compute_ns);
+                w.f32_slice(y);
+            }
+        }
+        w
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<LearnerMsg> {
+        let mut r = WireReader::new(payload);
+        let msg = match r.u8()? {
+            TAG_HELLO => LearnerMsg::Hello { learner_id: r.u32()? },
+            TAG_RESULT => LearnerMsg::Result {
+                iter: r.u64()?,
+                learner_id: r.u32()?,
+                compute_ns: r.u64()?,
+                y: r.f32_vec()?,
+            },
+            t => bail!("wire: unknown LearnerMsg tag {t}"),
+        };
+        if !r.finished() {
+            bail!("wire: trailing bytes in LearnerMsg");
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mb() -> Minibatch {
+        Minibatch {
+            batch: 2,
+            m: 3,
+            obs_dim: 4,
+            act_dim: 2,
+            obs: (0..24).map(|i| i as f32).collect(),
+            act: (0..12).map(|i| i as f32 * 0.5).collect(),
+            rew: (0..6).map(|i| -(i as f32)).collect(),
+            next_obs: (0..24).map(|i| i as f32 + 100.0).collect(),
+            done: vec![0.0, 1.0],
+        }
+    }
+
+    #[test]
+    fn task_roundtrip() {
+        let msg = CtrlMsg::Task {
+            iter: 42,
+            row: vec![1.0, 0.0, -0.5],
+            agent_params: Arc::new(vec![vec![1.0; 7], vec![2.0; 7], vec![3.0; 7]]),
+            minibatch: Arc::new(mb()),
+            straggler_delay_ns: 250_000_000,
+        };
+        assert_eq!(CtrlMsg::decode(&msg.encode().buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn ack_shutdown_roundtrip() {
+        for msg in [CtrlMsg::Ack { iter: 7 }, CtrlMsg::Shutdown, CtrlMsg::Welcome { learner_id: 2 }] {
+            assert_eq!(CtrlMsg::decode(&msg.encode().buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn learner_msgs_roundtrip() {
+        for msg in [
+            LearnerMsg::Hello { learner_id: 5 },
+            LearnerMsg::Result { iter: 9, learner_id: 3, y: vec![0.25; 100], compute_ns: 12345 },
+        ] {
+            assert_eq!(LearnerMsg::decode(&msg.encode().buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected() {
+        assert!(CtrlMsg::decode(&[99]).is_err());
+        assert!(LearnerMsg::decode(&[]).is_err());
+        let mut buf = CtrlMsg::Ack { iter: 1 }.encode().buf;
+        buf.push(0); // trailing byte
+        assert!(CtrlMsg::decode(&buf).is_err());
+        // inconsistent minibatch dims
+        let msg = CtrlMsg::Task {
+            iter: 1,
+            row: vec![],
+            agent_params: Arc::new(vec![]),
+            minibatch: Arc::new(Minibatch {
+                batch: 2, m: 2, obs_dim: 2, act_dim: 1,
+                obs: vec![0.0; 3], // wrong: should be 8
+                act: vec![0.0; 4],
+                rew: vec![0.0; 4],
+                next_obs: vec![0.0; 8],
+                done: vec![0.0; 2],
+            }),
+            straggler_delay_ns: 0,
+        };
+        assert!(CtrlMsg::decode(&msg.encode().buf).is_err());
+    }
+}

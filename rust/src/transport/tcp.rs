@@ -1,0 +1,252 @@
+//! TCP transport: the controller binds a listener; each learner is a
+//! separate `coded-marl worker` process that connects, receives a
+//! [`CtrlMsg::Welcome`] assigning its id, and then speaks the framed
+//! [`super::wire`] protocol.
+//!
+//! Reading is done by a dedicated reader thread per connection (on both
+//! sides) feeding an mpsc channel, so `recv_timeout` / `try_recv`
+//! semantics exactly match the local transport.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::wire::read_frame;
+use super::{ControllerTransport, CtrlMsg, LearnerEndpoint, LearnerMsg};
+
+/// Controller side: accepts `n` workers.
+pub struct TcpController {
+    streams: Vec<TcpStream>,
+    from_learners: Receiver<LearnerMsg>,
+    reader_handles: Vec<std::thread::JoinHandle<()>>,
+    _keep_tx: Sender<LearnerMsg>,
+}
+
+/// Bound-but-not-yet-accepting listener: exposes the address so the
+/// launcher can spawn / inform workers before accepting them.
+pub struct TcpListenerHandle {
+    listener: TcpListener,
+    pub addr: std::net::SocketAddr,
+}
+
+impl TcpListenerHandle {
+    pub fn bind(addr: &str) -> Result<TcpListenerHandle> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        Ok(TcpListenerHandle { listener, addr })
+    }
+
+    /// Accept exactly `n` workers (blocking), assigning learner ids in
+    /// connection order.
+    pub fn accept_workers(self, n: usize) -> Result<TcpController> {
+        TcpController::with_listener(self.listener, n)
+    }
+}
+
+impl TcpController {
+    fn with_listener(listener: TcpListener, n: usize) -> Result<TcpController> {
+        let mut this = TcpController {
+            streams: Vec::with_capacity(n),
+            from_learners: channel().1,
+            reader_handles: Vec::new(),
+            _keep_tx: channel().0,
+        };
+        let (tx, rx) = channel::<LearnerMsg>();
+        for id in 0..n {
+            let (stream, peer) = listener.accept().context("accepting worker")?;
+            stream.set_nodelay(true)?;
+            let mut w = stream.try_clone()?;
+            CtrlMsg::Welcome { learner_id: id as u32 }.encode().write_frame(&mut w)?;
+            let reader = stream.try_clone()?;
+            let tx2 = tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("tcp-reader-{id}"))
+                .spawn(move || {
+                    let mut r = reader;
+                    loop {
+                        match read_frame(&mut r) {
+                            Ok(payload) => match LearnerMsg::decode(&payload) {
+                                Ok(msg) => {
+                                    if tx2.send(msg).is_err() {
+                                        return;
+                                    }
+                                }
+                                Err(e) => {
+                                    eprintln!("tcp: bad frame from {peer}: {e}");
+                                    return;
+                                }
+                            },
+                            Err(_) => return, // disconnect
+                        }
+                    }
+                })?;
+            this.reader_handles.push(h);
+            this.streams.push(stream);
+        }
+        this.from_learners = rx;
+        this._keep_tx = tx;
+        Ok(this)
+    }
+}
+
+impl ControllerTransport for TcpController {
+    fn n_learners(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
+        msg.encode()
+            .write_frame(&mut self.streams[learner])
+            .with_context(|| format!("sending to worker {learner}"))
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<LearnerMsg>> {
+        match self.from_learners.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("all worker connections closed"))
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        for s in &mut self.streams {
+            let _ = CtrlMsg::Shutdown.encode().write_frame(s);
+            let _ = s.flush();
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        self.streams.clear();
+        for h in self.reader_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker side: connect and receive the Welcome.
+pub struct TcpLearner {
+    stream: TcpStream,
+    rx: Receiver<CtrlMsg>,
+    pub learner_id: u32,
+    _reader: std::thread::JoinHandle<()>,
+}
+
+impl TcpLearner {
+    pub fn connect(addr: &str) -> Result<TcpLearner> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true)?;
+        let mut reader_stream = stream.try_clone()?;
+        // First frame must be the Welcome.
+        let payload = read_frame(&mut reader_stream)?;
+        let CtrlMsg::Welcome { learner_id } = CtrlMsg::decode(&payload)? else {
+            return Err(anyhow!("expected Welcome as the first frame"));
+        };
+        let (tx, rx) = channel::<CtrlMsg>();
+        let reader = std::thread::Builder::new()
+            .name(format!("tcp-worker-reader-{learner_id}"))
+            .spawn(move || {
+                let mut r = reader_stream;
+                loop {
+                    match read_frame(&mut r) {
+                        Ok(p) => match CtrlMsg::decode(&p) {
+                            Ok(msg) => {
+                                let end = matches!(msg, CtrlMsg::Shutdown);
+                                if tx.send(msg).is_err() || end {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("tcp worker: bad frame: {e}");
+                                return;
+                            }
+                        },
+                        Err(_) => return,
+                    }
+                }
+            })?;
+        Ok(TcpLearner { stream, rx, learner_id, _reader: reader })
+    }
+}
+
+impl LearnerEndpoint for TcpLearner {
+    fn recv(&mut self) -> Result<CtrlMsg> {
+        self.rx.recv().map_err(|_| anyhow!("controller disconnected"))
+    }
+
+    fn try_recv(&mut self) -> Result<Option<CtrlMsg>> {
+        match self.rx.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow!("controller disconnected")),
+        }
+    }
+
+    fn send(&mut self, msg: LearnerMsg) -> Result<()> {
+        msg.encode().write_frame(&mut self.stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-process sanity check of the socket plumbing (the real
+    /// multi-process path is exercised by tests/transport_integration).
+    /// Rendezvous: bind the listener first so worker threads know the
+    /// port before `with_listener` starts accepting.
+    #[test]
+    fn welcome_task_result_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut lp = TcpLearner::connect(&addr.to_string()).unwrap();
+                    let msg = lp.recv().unwrap();
+                    match msg {
+                        CtrlMsg::Ack { iter } => {
+                            lp.send(LearnerMsg::Result {
+                                iter,
+                                learner_id: lp.learner_id,
+                                y: vec![lp.learner_id as f32; 8],
+                                compute_ns: 1,
+                            })
+                            .unwrap();
+                        }
+                        m => panic!("unexpected {m:?}"),
+                    }
+                    // wait for shutdown
+                    loop {
+                        match lp.recv() {
+                            Ok(CtrlMsg::Shutdown) | Err(_) => return,
+                            Ok(_) => {}
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut ctrl = TcpController::with_listener(listener, 2).unwrap();
+        
+        ctrl.broadcast(&CtrlMsg::Ack { iter: 3 }).unwrap();
+        let mut ids = Vec::new();
+        for _ in 0..2 {
+            match ctrl.recv_timeout(Duration::from_secs(5)).unwrap().unwrap() {
+                LearnerMsg::Result { iter, learner_id, y, .. } => {
+                    assert_eq!(iter, 3);
+                    assert_eq!(y, vec![learner_id as f32; 8]);
+                    ids.push(learner_id);
+                }
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+        ctrl.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+}

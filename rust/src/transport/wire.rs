@@ -1,0 +1,228 @@
+//! Hand-rolled binary wire format (substrate: serde/bincode are
+//! unavailable offline).
+//!
+//! Little-endian, length-prefixed frames:
+//!
+//! ```text
+//! frame   := u32 payload_len | payload
+//! payload := u8 tag | fields...
+//! ```
+//!
+//! Primitives: u8/u32/u64/f32/f64 little-endian; `bytes`/`str` are
+//! u32-length-prefixed; `Vec<f32>` is u32 count + raw f32 data.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Encoder writing into a growable byte buffer.
+#[derive(Default)]
+pub struct WireWriter {
+    pub buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        // raw copy — the hot path moves multi-MB parameter vectors
+        let bytes =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Write the frame (length prefix + payload) to a stream.
+    pub fn write_frame(&self, w: &mut impl Write) -> Result<()> {
+        let len = self.buf.len() as u32;
+        w.write_all(&len.to_le_bytes())?;
+        w.write_all(&self.buf)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+/// Decoder over a received payload.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("wire: truncated payload (need {n} at {}, have {})", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        let mut v = vec![0.0f32; n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr() as *mut u8, n * 4);
+        }
+        Ok(v)
+    }
+
+    pub fn finished(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Read one length-prefixed frame from a stream.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("wire: reading frame length")?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    // 256 MB sanity cap — a corrupt stream must not trigger an OOM.
+    if len > 256 << 20 {
+        bail!("wire: frame length {len} exceeds sanity cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("wire: reading frame payload")?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut w = WireWriter::new();
+        w.u8(7);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-1.5);
+        w.f64(std::f64::consts::PI);
+        w.bool(true);
+        w.str("héllo");
+        w.f32_slice(&[1.0, 2.5, -3.25]);
+        let mut r = WireReader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.f32_vec().unwrap(), vec![1.0, 2.5, -3.25]);
+        assert!(r.finished());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = WireWriter::new();
+        w.u64(1);
+        let mut r = WireReader::new(&w.buf[..5]);
+        assert!(r.u64().is_err());
+        let mut r2 = WireReader::new(&w.buf);
+        r2.u32().unwrap();
+        assert!(r2.u64().is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_pipe() {
+        let mut w = WireWriter::new();
+        w.str("frame-1");
+        w.f32_slice(&vec![0.5f32; 1000]);
+        let mut stream: Vec<u8> = Vec::new();
+        w.write_frame(&mut stream).unwrap();
+        let mut w2 = WireWriter::new();
+        w2.str("frame-2");
+        w2.write_frame(&mut stream).unwrap();
+
+        let mut cursor = std::io::Cursor::new(stream);
+        let p1 = read_frame(&mut cursor).unwrap();
+        let mut r = WireReader::new(&p1);
+        assert_eq!(r.str().unwrap(), "frame-1");
+        assert_eq!(r.f32_vec().unwrap().len(), 1000);
+        let p2 = read_frame(&mut cursor).unwrap();
+        let mut r2 = WireReader::new(&p2);
+        assert_eq!(r2.str().unwrap(), "frame-2");
+        assert!(read_frame(&mut cursor).is_err()); // EOF
+    }
+
+    #[test]
+    fn oversize_frame_rejected() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(300u32 << 20).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn empty_f32_vec() {
+        let mut w = WireWriter::new();
+        w.f32_slice(&[]);
+        let mut r = WireReader::new(&w.buf);
+        assert_eq!(r.f32_vec().unwrap(), Vec::<f32>::new());
+    }
+}

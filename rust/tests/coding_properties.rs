@@ -1,0 +1,214 @@
+//! Property-based tests over the coding layer as a whole: every scheme,
+//! every decode path, random erasure patterns — the invariants that
+//! make Eq. (2) recovery sound.
+
+use coded_marl::coding::decoder::{DecodeMethod, Decoder};
+use coded_marl::coding::{
+    for_each_combination, random_set_decode_probability, Code, CodeParams, Scheme, RANK_TOL,
+};
+use coded_marl::rng::Pcg32;
+use coded_marl::testkit::forall;
+
+fn encode(code: &Code, theta: &[Vec<f32>], rows: &[usize]) -> Vec<Vec<f32>> {
+    rows.iter()
+        .map(|&j| {
+            let mut y = vec![0.0f32; theta[0].len()];
+            for (i, c) in code.assignments(j) {
+                for (acc, &t) in y.iter_mut().zip(theta[i].iter()) {
+                    *acc += c as f32 * t;
+                }
+            }
+            y
+        })
+        .collect()
+}
+
+/// Invariant: `worst_case_tolerance` is exact — every straggler subset
+/// of size ≤ tol is decodable, and some subset of size tol+1 is not.
+#[test]
+fn worst_case_tolerance_is_tight() {
+    for scheme in Scheme::ALL {
+        for (n, m) in [(8, 4), (10, 6), (15, 8)] {
+            let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: 3 });
+            let tol = code.worst_case_tolerance();
+            // all subsets of size tol survive
+            if tol > 0 {
+                let mut all_ok = true;
+                for_each_combination(n, tol, &mut |stragglers| {
+                    let received: Vec<usize> =
+                        (0..n).filter(|j| !stragglers.contains(j)).collect();
+                    all_ok &= code.decodable(&received);
+                });
+                assert!(all_ok, "scheme={scheme} n={n} m={m} tol={tol} not achieved");
+            }
+            // some subset of size tol+1 kills it (unless tol is the max)
+            if tol < n - m {
+                let mut any_bad = false;
+                for_each_combination(n, tol + 1, &mut |stragglers| {
+                    if !any_bad {
+                        let received: Vec<usize> =
+                            (0..n).filter(|j| !stragglers.contains(j)).collect();
+                        any_bad |= !code.decodable(&received);
+                    }
+                });
+                assert!(any_bad, "scheme={scheme} tol={tol} should be tight");
+            }
+        }
+    }
+}
+
+/// Invariant: the paper's Eq. (2) — decode(encode(θ)) == θ for every
+/// decodable erasure pattern, any scheme, any decode method that
+/// accepts the pattern.
+#[test]
+fn property_decode_inverts_encode() {
+    forall("decode ∘ encode = id", 80, |g| {
+        let scheme = *g.choice(&Scheme::ALL);
+        let m = g.usize_in(2, 10);
+        let n = m + g.usize_in(0, 6);
+        let p = g.usize_in(1, 64);
+        let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: g.case_seed });
+        let decoder = Decoder::new(code.clone());
+        let theta: Vec<Vec<f32>> = (0..m).map(|_| g.f32_vec(p, 1.0)).collect();
+        let sz = g.usize_in(m, n);
+        let received = g.subset(n, sz);
+        let results = encode(&code, &theta, &received);
+        let decodable = code.decodable(&received);
+        match decoder.decode(&received, &results, DecodeMethod::Auto) {
+            Ok(out) => {
+                assert!(decodable, "decode succeeded on undecodable pattern");
+                assert_eq!(out.theta.len(), m);
+                for i in 0..m {
+                    for k in 0..p {
+                        let err = (out.theta[i][k] - theta[i][k]).abs();
+                        assert!(err < 5e-4, "scheme={scheme} agent={i} err={err}");
+                    }
+                }
+            }
+            Err(_) => assert!(!decodable, "decode failed on decodable pattern"),
+        }
+    });
+}
+
+/// All decode methods agree wherever they all apply.
+#[test]
+fn property_decode_methods_agree() {
+    forall("qr == ne == peeling", 40, |g| {
+        let scheme = *g.choice(&[Scheme::Replication, Scheme::Ldpc, Scheme::Uncoded]);
+        let m = g.usize_in(2, 8);
+        let n = m + g.usize_in(1, 6);
+        let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: g.case_seed });
+        let decoder = Decoder::new(code.clone());
+        let theta: Vec<Vec<f32>> = (0..m).map(|_| g.f32_vec(17, 1.0)).collect();
+        let received: Vec<usize> = (0..n).collect(); // full reception
+        let results = encode(&code, &theta, &received);
+        let qr = decoder.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        let ne = decoder.decode(&received, &results, DecodeMethod::NormalEquations).unwrap();
+        for i in 0..m {
+            for k in 0..17 {
+                assert!((qr.theta[i][k] - ne.theta[i][k]).abs() < 1e-3);
+            }
+        }
+        if let Ok(peel) = decoder.decode(&received, &results, DecodeMethod::Peeling) {
+            for i in 0..m {
+                for k in 0..17 {
+                    assert!((qr.theta[i][k] - peel.theta[i][k]).abs() < 1e-3);
+                }
+            }
+        }
+    });
+}
+
+/// Scheme-specific redundancy formulas (paper §III-C).
+#[test]
+fn redundancy_formulas() {
+    for (n, m) in [(15, 8), (15, 10), (12, 6)] {
+        let uncoded = Code::build(&CodeParams::new(Scheme::Uncoded, n, m));
+        assert_eq!(uncoded.redundancy(), 1.0);
+        // replication: every learner has exactly one agent
+        let rep = Code::build(&CodeParams::new(Scheme::Replication, n, m));
+        assert!((rep.redundancy() - n as f64 / m as f64).abs() < 1e-12);
+        // MDS: dense, every learner updates every agent
+        let mds = Code::build(&CodeParams::new(Scheme::Mds, n, m));
+        assert_eq!(mds.redundancy(), n as f64);
+        // random sparse: expected density p_m, loose statistical bound
+        let rs = Code::build(&CodeParams { scheme: Scheme::RandomSparse, n, m, p_m: 0.8, seed: 0 });
+        let r = rs.redundancy();
+        assert!(r > 0.5 * n as f64 && r <= n as f64, "random sparse redundancy {r}");
+    }
+}
+
+/// MDS tolerates any N−M erasures; decode probability is monotone
+/// non-increasing in k for every scheme.
+#[test]
+fn decode_probability_profile() {
+    let mut rng = Pcg32::seeded(9);
+    for scheme in Scheme::ALL {
+        let code = Code::build(&CodeParams { scheme, n: 15, m: 8, p_m: 0.8, seed: 2 });
+        let mut prev = 1.1f64;
+        for k in 0..=7 {
+            let p = random_set_decode_probability(&code, k, 300, &mut rng);
+            assert!(
+                p <= prev + 0.08,
+                "scheme={scheme}: P(dec) should not increase with k ({prev} -> {p} at k={k})"
+            );
+            prev = p;
+        }
+        if scheme == Scheme::Mds {
+            assert_eq!(random_set_decode_probability(&code, 7, 100, &mut rng), 1.0);
+            assert_eq!(random_set_decode_probability(&code, 8, 100, &mut rng), 0.0);
+        }
+    }
+}
+
+/// Rank never exceeds M and equals M for the full matrix — the
+/// construction requirement of §III-B.
+#[test]
+fn property_full_matrix_rank_is_m() {
+    forall("rank(C) = M", 60, |g| {
+        let scheme = *g.choice(&Scheme::ALL);
+        let m = g.usize_in(1, 12);
+        let n = m + g.usize_in(0, 8);
+        let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: g.case_seed });
+        assert_eq!(code.c.rank(RANK_TOL), m, "scheme={scheme} n={n} m={m}");
+        // and every row of the deterministic coded schemes is useful
+        if matches!(scheme, Scheme::Replication | Scheme::Mds | Scheme::Ldpc) {
+            for j in 0..n {
+                assert!(code.workload(j) > 0, "scheme={scheme} row {j} empty");
+            }
+        }
+    });
+}
+
+/// Peeling decode must handle duplicated agents inside one row
+/// correctly even at scale (stress the O(M) path).
+#[test]
+fn peeling_scales_to_large_m() {
+    let code = Code::build(&CodeParams::new(Scheme::Replication, 64, 32));
+    let decoder = Decoder::new(code.clone());
+    let mut rng = Pcg32::seeded(4);
+    let theta: Vec<Vec<f32>> = (0..32).map(|_| rng.normal_vec_f32(101, 1.0)).collect();
+    let received: Vec<usize> = (0..64).collect();
+    let results = encode(&code, &theta, &received);
+    let out = decoder.decode(&received, &results, DecodeMethod::Peeling).unwrap();
+    for i in 0..32 {
+        for k in 0..101 {
+            assert!((out.theta[i][k] - theta[i][k]).abs() < 1e-4);
+        }
+    }
+}
+
+/// The random-sparse density knob works: lower p_m → sparser matrix.
+#[test]
+fn random_sparse_density_tracks_p_m() {
+    let density = |p_m: f64| {
+        let code =
+            Code::build(&CodeParams { scheme: Scheme::RandomSparse, n: 30, m: 12, p_m, seed: 5 });
+        let nnz: usize = (0..30).map(|j| code.workload(j)).sum();
+        nnz as f64 / (30.0 * 12.0)
+    };
+    let d3 = density(0.3);
+    let d8 = density(0.8);
+    assert!(d3 < d8, "density(0.3)={d3} should be < density(0.8)={d8}");
+    assert!((d8 - 0.8).abs() < 0.1, "density at p_m=0.8: {d8}");
+}

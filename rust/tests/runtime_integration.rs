@@ -1,0 +1,174 @@
+//! Integration tests over the real AOT artifacts: the rust runtime
+//! loads the JAX/Pallas-lowered HLO and must agree with the native
+//! parameter layout and the algebraic structure of the MADDPG update.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a note) otherwise so `cargo test` works on a fresh clone.
+
+use coded_marl::marl::buffer::{ReplayBuffer, Transition};
+use coded_marl::marl::mlp::{actor_forward, MlpScratch};
+use coded_marl::marl::{AgentParams, ModelDims};
+use coded_marl::rng::Pcg32;
+use coded_marl::runtime::{Manifest, Session};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn try_session(preset: &str) -> Option<(Manifest, Session)> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let m = Manifest::load(artifacts_dir()).expect("manifest");
+    let s = Session::load(&m, preset).expect("session");
+    Some((m, s))
+}
+
+fn random_minibatch(dims: &ModelDims, rng: &mut Pcg32) -> coded_marl::marl::buffer::Minibatch {
+    let mut buf = ReplayBuffer::new(64);
+    for _ in 0..8 {
+        buf.push(Transition {
+            obs: (0..dims.m).map(|_| rng.normal_vec_f32(dims.obs_dim, 1.0)).collect(),
+            act: (0..dims.m)
+                .map(|_| (0..dims.act_dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+                .collect(),
+            rew: rng.normal_vec_f32(dims.m, 1.0),
+            next_obs: (0..dims.m).map(|_| rng.normal_vec_f32(dims.obs_dim, 1.0)).collect(),
+            done: false,
+        });
+    }
+    buf.sample(dims.batch, rng)
+}
+
+fn stacked_target_policies(agents: &[AgentParams]) -> Vec<f32> {
+    let mut v = Vec::new();
+    for a in agents {
+        v.extend_from_slice(&a.target_policy);
+    }
+    v
+}
+
+#[test]
+fn actor_fwd_hlo_matches_native_mlp() {
+    let Some((_, session)) = try_session("quickstart_m3") else { return };
+    let spec = &session.spec;
+    let dims = spec.dims();
+    let mut rng = Pcg32::seeded(42);
+    let agents: Vec<AgentParams> = (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng)).collect();
+    let obs_all: Vec<f32> = rng.normal_vec_f32(dims.m * dims.obs_dim, 1.0);
+
+    let mut policies = Vec::new();
+    for a in &agents {
+        policies.extend_from_slice(&a.policy);
+    }
+    let hlo_actions = session.actor_fwd(&policies, &obs_all).expect("actor_fwd");
+    assert_eq!(hlo_actions.len(), dims.m * dims.act_dim);
+
+    let mut scratch = MlpScratch::default();
+    for i in 0..dims.m {
+        let obs = &obs_all[i * dims.obs_dim..(i + 1) * dims.obs_dim];
+        let native = actor_forward(&agents[i].policy, obs, dims.hidden, dims.act_dim, &mut scratch);
+        for d in 0..dims.act_dim {
+            let h = hlo_actions[i * dims.act_dim + d];
+            let n = native[d];
+            assert!(
+                (h - n).abs() < 1e-5,
+                "agent {i} dim {d}: hlo={h} native={n} — python/rust layout drift!"
+            );
+        }
+    }
+}
+
+#[test]
+fn learner_step_executes_and_satisfies_polyak_identity() {
+    let Some((_, session)) = try_session("quickstart_m3") else { return };
+    let spec = session.spec.clone();
+    let dims = spec.dims();
+    let mut rng = Pcg32::seeded(7);
+    let agents: Vec<AgentParams> = (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng)).collect();
+    let tpol = stacked_target_policies(&agents);
+    let mb = random_minibatch(&dims, &mut rng);
+
+    for agent_idx in 0..dims.m {
+        let out = session
+            .learner_step(agent_idx, &agents[agent_idx], &tpol, &mb)
+            .expect("learner_step");
+        assert!(out.critic_loss.is_finite() && out.critic_loss >= 0.0);
+        assert!(out.pg_objective.is_finite());
+        assert!(out.policy.iter().all(|v| v.is_finite()));
+        // Polyak identity (paper Eq. 5): th^' = tau*th^ + (1-tau)*th'
+        let tau = spec.tau as f32;
+        for k in (0..out.target_policy.len()).step_by(97) {
+            let want = tau * agents[agent_idx].target_policy[k] + (1.0 - tau) * out.policy[k];
+            assert!(
+                (out.target_policy[k] - want).abs() < 1e-5,
+                "polyak mismatch at {k}: {} vs {}",
+                out.target_policy[k],
+                want
+            );
+        }
+        for k in (0..out.target_critic.len()).step_by(131) {
+            let want = tau * agents[agent_idx].target_critic[k] + (1.0 - tau) * out.critic[k];
+            assert!((out.target_critic[k] - want).abs() < 1e-5);
+        }
+        // parameters must actually move
+        let dp: f32 = out
+            .policy
+            .iter()
+            .zip(&agents[agent_idx].policy)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(dp > 0.0, "policy did not change");
+    }
+}
+
+#[test]
+fn learner_step_is_deterministic_pure_function() {
+    let Some((_, session)) = try_session("quickstart_m3") else { return };
+    let dims = session.spec.dims();
+    let mut rng = Pcg32::seeded(3);
+    let agents: Vec<AgentParams> = (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng)).collect();
+    let tpol = stacked_target_policies(&agents);
+    let mb = random_minibatch(&dims, &mut rng);
+    let a = session.learner_step(1, &agents[1], &tpol, &mb).unwrap();
+    let b = session.learner_step(1, &agents[1], &tpol, &mb).unwrap();
+    assert_eq!(a.policy, b.policy);
+    assert_eq!(a.critic, b.critic);
+    assert_eq!(a.critic_loss, b.critic_loss);
+}
+
+#[test]
+fn repeated_critic_updates_reduce_td_loss_on_fixed_batch() {
+    let Some((_, session)) = try_session("quickstart_m3") else { return };
+    let dims = session.spec.dims();
+    let mut rng = Pcg32::seeded(11);
+    let mut agents: Vec<AgentParams> =
+        (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng)).collect();
+    let mb = random_minibatch(&dims, &mut rng);
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        let tpol = stacked_target_policies(&agents);
+        let out = session.learner_step(0, &agents[0], &tpol, &mb).unwrap();
+        losses.push(out.critic_loss);
+        agents[0] = out.into_agent_params();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "TD loss should fall on a fixed batch: {losses:?}"
+    );
+}
+
+#[test]
+fn learner_step_rejects_bad_shapes() {
+    let Some((_, session)) = try_session("quickstart_m3") else { return };
+    let dims = session.spec.dims();
+    let mut rng = Pcg32::seeded(5);
+    let agents: Vec<AgentParams> = (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng)).collect();
+    let tpol = stacked_target_policies(&agents);
+    let mb = random_minibatch(&dims, &mut rng);
+    // agent index out of range
+    assert!(session.learner_step(dims.m, &agents[0], &tpol, &mb).is_err());
+    // truncated target-policy stack
+    assert!(session.learner_step(0, &agents[0], &tpol[1..], &mb).is_err());
+}

@@ -1,0 +1,205 @@
+//! Multi-process transport integration: the controller spawns real
+//! `coded-marl worker` processes over localhost TCP and trains through
+//! them — the closest this testbed gets to the paper's EC2 deployment.
+//!
+//! Requires artifacts (workers read model dims from the manifest even
+//! with the mock backend); tests skip with a note otherwise.
+
+use std::time::Duration;
+
+use coded_marl::coding::Scheme;
+use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
+use coded_marl::coordinator::{spawn_tcp, Controller, Pool, RunSpec, WorkerCmd};
+use coded_marl::runtime::Manifest;
+use coded_marl::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn worker_cmd(backend: Backend) -> WorkerCmd {
+    WorkerCmd {
+        program: std::path::PathBuf::from(env!("CARGO_BIN_EXE_coded-marl")),
+        preset: "quickstart_m3".into(),
+        artifacts_dir: artifacts_dir(),
+        backend,
+        mock_compute: Duration::from_micros(200),
+    }
+}
+
+/// Spawn real worker processes, drive one hand-rolled task round, and
+/// check the coded results arrive with correct ids.
+#[test]
+fn tcp_workers_answer_tasks() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let n = 3;
+    let mut pool = spawn_tcp(n, &worker_cmd(Backend::Mock)).expect("spawn workers");
+    assert_eq!(pool.n_learners(), n);
+
+    // Workers send Hello on startup; drain them (ids 0..n in some order).
+    let mut hellos = Vec::new();
+    while hellos.len() < n {
+        match pool.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Some(LearnerMsg::Hello { learner_id }) => hellos.push(learner_id),
+            Some(other) => panic!("unexpected {other:?}"),
+            None => panic!("workers did not say hello"),
+        }
+    }
+    hellos.sort_unstable();
+    assert_eq!(hellos, vec![0, 1, 2]);
+
+    // A tiny task (M=3 agents, P=5 params) with distinct rows.
+    let mb = coded_marl::marl::buffer::Minibatch {
+        batch: 2,
+        m: 3,
+        obs_dim: 14,
+        act_dim: 2,
+        obs: vec![0.5; 2 * 3 * 14],
+        act: vec![0.1; 2 * 3 * 2],
+        rew: vec![1.0; 3 * 2],
+        next_obs: vec![0.25; 2 * 3 * 14],
+        done: vec![0.0, 1.0],
+    };
+    // NOTE: mock workers read dims from the manifest, so give the full
+    // agent vector length the quickstart preset expects.
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let p = manifest.preset("quickstart_m3").unwrap().agent_param_dim;
+    let params: Vec<Vec<f32>> = (0..3).map(|i| vec![0.01 * (i + 1) as f32; p]).collect();
+    for j in 0..n {
+        let mut row = vec![0.0f32; 3];
+        row[j] = 1.0;
+        pool.send_to(
+            j,
+            CtrlMsg::Task {
+                iter: 1,
+                row,
+                agent_params: std::sync::Arc::new(params.clone()),
+                minibatch: std::sync::Arc::new(mb.clone()),
+                straggler_delay_ns: 0,
+            },
+        )
+        .unwrap();
+    }
+    let mut seen = vec![false; n];
+    for _ in 0..n {
+        match pool.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Some(LearnerMsg::Result { iter, learner_id, y, .. }) => {
+                assert_eq!(iter, 1);
+                assert_eq!(y.len(), p);
+                assert!(y.iter().all(|v| v.is_finite()));
+                seen[learner_id as usize] = true;
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(seen.iter().all(|&s| s));
+    pool.shutdown();
+}
+
+/// Full training over TCP must produce the *identical* parameters as
+/// the same config over the local transport — transports are
+/// semantically equivalent, only timing differs.
+#[test]
+fn tcp_training_matches_local_training() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let spec = RunSpec::from_preset(manifest.preset("quickstart_m3").unwrap()).unwrap();
+    let mut cfg = TrainConfig::new("quickstart_m3");
+    cfg.backend = Backend::Mock;
+    cfg.scheme = Scheme::Ldpc;
+    cfg.n_learners = 5;
+    cfg.iterations = 4;
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 8;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = Duration::from_micros(200);
+    cfg.straggler = StragglerConfig::fixed(1, Duration::from_millis(10));
+    cfg.seed = 13;
+
+    // TCP run
+    let pool = spawn_tcp(cfg.n_learners, &worker_cmd(Backend::Mock)).unwrap();
+    let mut ctrl = Controller::new(cfg.clone(), spec.clone(), pool).unwrap();
+    ctrl.train().unwrap();
+    let tcp_agents = ctrl.agents().to_vec();
+    ctrl.shutdown();
+
+    // Local run
+    let factory = coded_marl::coordinator::backend_factory(&cfg, artifacts_dir(), &spec);
+    let pool = coded_marl::coordinator::spawn_local(cfg.n_learners, factory).unwrap();
+    let mut ctrl = Controller::new(cfg.clone(), spec, pool).unwrap();
+    ctrl.train().unwrap();
+    let local_agents = ctrl.agents().to_vec();
+    ctrl.shutdown();
+
+    let diff = tcp_agents
+        .iter()
+        .zip(&local_agents)
+        .map(|(a, b)| a.max_abs_diff(b))
+        .fold(0.0f32, f32::max);
+    assert!(diff < 1e-5, "tcp vs local transports diverged: {diff}");
+}
+
+/// The full paper deployment shape: separate worker *processes* over
+/// TCP, each running the real PJRT learner step — controller broadcasts
+/// θ+B, workers compute coded MADDPG updates through XLA, controller
+/// recovers θ'. Two iterations with a straggler; must train and stay
+/// finite.
+#[test]
+fn tcp_pjrt_full_stack_trains() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let spec = RunSpec::from_preset(manifest.preset("quickstart_m3").unwrap()).unwrap();
+    let mut cfg = TrainConfig::new("quickstart_m3");
+    cfg.backend = Backend::Pjrt;
+    cfg.scheme = Scheme::Mds;
+    cfg.n_learners = 4;
+    cfg.iterations = 3;
+    cfg.episodes_per_iter = 2;
+    cfg.episode_len = 20;
+    cfg.warmup_iters = 1;
+    cfg.straggler = StragglerConfig::fixed(1, Duration::from_millis(15));
+    cfg.seed = 3;
+    let pool = spawn_tcp(cfg.n_learners, &worker_cmd(Backend::Pjrt)).unwrap();
+    let mut ctrl = Controller::new(cfg, spec, pool).unwrap();
+    ctrl.train().expect("full TCP+PJRT training");
+    let last = ctrl.log.records.last().unwrap();
+    assert_ne!(last.decode_method, "warmup", "updates must have run");
+    assert!(last.results_used >= 3);
+    for a in ctrl.agents() {
+        assert!(a.policy.iter().all(|v| v.is_finite()));
+    }
+    ctrl.shutdown();
+}
+
+/// Worker processes exit cleanly on Shutdown (no zombies, no kill).
+#[test]
+fn workers_shut_down_cleanly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut pool = spawn_tcp(2, &worker_cmd(Backend::Mock)).unwrap();
+    // drain hellos
+    for _ in 0..2 {
+        let _ = pool.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    pool.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(10));
+    if let Pool::Tcp { children, .. } = &pool {
+        assert!(children.is_empty(), "children must be reaped");
+    }
+}
