@@ -1,93 +1,94 @@
 //! Straggler sweep: reproduce the *shape* of the paper's Figs. 4-5 on
-//! one environment interactively — mean training time per iteration for
-//! every coding scheme as the straggler count k and delay t_s vary.
+//! one environment — mean training time per iteration for every coding
+//! scheme as the straggler count k varies.
 //!
 //!     cargo run --release --example straggler_sweep
-//!     CODED_MARL_SWEEP_BACKEND=pjrt cargo run --release --example straggler_sweep
+//!     cargo run --release --example straggler_sweep -- --time-mode real
+//!     cargo run --release --example straggler_sweep -- --time-mode real --ts-ms 25
 //!
-//! Defaults to the mock backend (compute time calibrated to the paper's
-//! regime) so the sweep finishes in seconds; set the env var above to
-//! run the real PJRT learner step instead. One learner pool is reused
-//! across all (scheme, k) cells — the assignment row travels with each
-//! task, so reconfiguring the code is free.
+//! Default is **virtual time** (`sim::SimTransport` + `VirtualClock`):
+//! the paper's full t_s = 250 ms is injected per straggler, but delays
+//! and emulated compute advance a virtual clock instead of sleeping,
+//! so the whole grid prints in well under a second while reporting the
+//! same per-iteration means a real-time run measures (within noise).
+//! `--time-mode real` runs the identical protocol on learner threads
+//! with real sleeps — expect the uncoded column alone to cost
+//! ~t_s × iterations of wall-clock per k > 0 cell.
 
 use std::time::Duration;
 
-use coded_marl::coding::Scheme;
-use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
-use coded_marl::coordinator::{backend_factory, spawn_local, Controller, RunSpec};
+use coded_marl::cli::Args;
+use coded_marl::config::{Backend, TimeMode};
+use coded_marl::coordinator::RunSpec;
 use coded_marl::env::EnvKind;
-use coded_marl::metrics::table::Table;
+use coded_marl::metrics::table::fmt_duration;
+use coded_marl::sim::sweep::{render_table, run_sweep, simulated_total, sweep_base, SweepConfig};
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(1)?;
+    // CODED_MARL_SWEEP_BACKEND=pjrt runs the real XLA learner step
+    // (needs artifacts; CODED_MARL_ARTIFACTS points elsewhere than
+    // ./artifacts). PJRT compute is real work, so it implies real time
+    // unless --time-mode says otherwise.
     let backend = match std::env::var("CODED_MARL_SWEEP_BACKEND").as_deref() {
         Ok("pjrt") => Backend::Pjrt,
         _ => Backend::Mock,
     };
-    let artifacts = std::env::var("CODED_MARL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let time_mode = match args.opt("time-mode") {
+        None if backend == Backend::Pjrt => TimeMode::Real,
+        None => TimeMode::Virtual,
+        Some(v) => TimeMode::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown --time-mode '{v}' (real|virtual)"))?,
+    };
+    // Paper §V-C, cooperative navigation: M = 8, N = 15, t_s = 0.25 s.
+    // Virtual time makes the full delay free; in real mode pass
+    // `--ts-ms 25` for the old interactive 1/10 scale.
+    let t_s = Duration::from_millis(args.get_or("ts-ms", 250u64)?);
+    let iterations = args.get_or("iterations", 10usize)?;
+    args.finish()?;
 
-    // Paper §V-C, cooperative navigation: M = 8, N = 15, k ∈ {0, 1, 2},
-    // t_s = 0.25 s. Delays are scaled 1/10 (25 ms) so the sweep is
-    // interactive; the bench binaries report the scale factor too.
     let m = 8;
     let n = 15;
-    let ks = [0usize, 1, 2, 4, 7];
-    let t_s = Duration::from_millis(25);
+    let ks = vec![0usize, 1, 2, 4, 7];
 
-    let mut cfg = TrainConfig::new("coop_nav_m8");
-    cfg.n_learners = n;
+    // Calibrated to the paper's regime: with an 8-agent MDS workload
+    // 10 ms/update puts compute at ~80 ms/iteration, so overhead noise
+    // in the real-mode reference stays ≪ 1% of the mean.
+    let mut cfg = sweep_base("coop_nav_m8", n, iterations, Duration::from_millis(10), 3);
+    cfg.time_mode = time_mode;
     cfg.backend = backend;
-    cfg.iterations = 10;
-    cfg.episodes_per_iter = 1;
-    cfg.episode_len = 25;
-    cfg.warmup_iters = 1;
-    cfg.mock_compute = Duration::from_millis(2);
-    cfg.seed = 3;
 
-    let spec = RunSpec::synthetic(EnvKind::CoopNav, m, 0, 64, 32);
+    // Small synthetic model dims: the mock's *reported* time is the
+    // modeled mock_compute, not its actual arithmetic, so lean dims
+    // only cut the sweep's wall cost (they change no timing result).
+    let spec = RunSpec::synthetic(EnvKind::CoopNav, m, 0, 32, 32);
     println!(
-        "straggler sweep: coop_nav M={m} N={n} t_s={t_s:?} backend={} ({} iters/cell)",
-        cfg.backend.name(),
-        cfg.iterations
+        "straggler sweep: coop_nav M={m} N={n} t_s={t_s:?} time={} ({iterations} iters/cell)",
+        time_mode.name(),
     );
 
-    let mut table = Table::new(&[
-        "scheme", "k=0", "k=1", "k=2", "k=4", "k=7", "redundancy", "tolerance",
-    ]);
-    for scheme in Scheme::ALL {
-        let mut cells = vec![scheme.name().to_string()];
-        let mut code_info: Option<(f64, usize)> = None;
-        for &k in &ks {
-            let mut c = cfg.clone();
-            c.scheme = scheme;
-            c.straggler = StragglerConfig::fixed(k, t_s);
-            let factory = backend_factory(&c, &artifacts, &spec);
-            let pool = spawn_local(c.n_learners, factory)?;
-            let mut ctrl = Controller::new(c, spec.clone(), pool)?;
-            ctrl.train()?;
-            if code_info.is_none() {
-                code_info = Some((ctrl.code().redundancy(), ctrl.code().worst_case_tolerance()));
-            }
-            // skip warmup iterations when averaging (no learner round)
-            let times: Vec<f64> = ctrl
-                .log
-                .records
-                .iter()
-                .filter(|r| r.decode_method != "warmup")
-                .map(|r| r.timing.total.as_secs_f64() * 1e3)
-                .collect();
-            let mean = times.iter().sum::<f64>() / times.len() as f64;
-            cells.push(format!("{mean:.1}ms"));
-            ctrl.shutdown();
-        }
-        let (red, tol) = code_info.unwrap();
-        cells.push(format!("{red:.1}x"));
-        cells.push(tol.to_string());
-        table.row(&cells);
-    }
-    print!("{}", table.render());
+    let t0 = std::time::Instant::now();
+    let cells = run_sweep(&SweepConfig {
+        base: cfg,
+        spec,
+        schemes: coded_marl::coding::Scheme::ALL.to_vec(),
+        ks: ks.clone(),
+        delay: t_s,
+        artifacts_dir: std::env::var("CODED_MARL_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".into())
+            .into(),
+    })?;
+    let wall = t0.elapsed();
+    print!("{}", render_table(&cells, &ks));
+    let simulated = simulated_total(&cells);
     println!(
-        "\nExpected shape (paper Figs. 4-5): uncoded fastest at k=0 but +t_s for any k>0;\n\
+        "\n{} of training time in {} wall-clock ({})",
+        fmt_duration(simulated),
+        fmt_duration(wall),
+        time_mode.name(),
+    );
+    println!(
+        "Expected shape (paper Figs. 4-5): uncoded fastest at k=0 but +t_s for any k>0;\n\
          MDS/random-sparse flat until k > N-M = {}; replication/LDPC cheap but fragile at high k.",
         n - m
     );

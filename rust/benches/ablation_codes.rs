@@ -10,6 +10,7 @@
 //!    exponential heavy-tail extension.
 //!
 //!     cargo bench --bench ablation_codes
+//!     CODED_MARL_TIME=virtual cargo bench --bench ablation_codes   # sim fast path
 
 mod common;
 
@@ -18,7 +19,7 @@ use std::time::Duration;
 use coded_marl::coding::decoder::{DecodeMethod, Decoder};
 use coded_marl::coding::{random_set_decode_probability, Code, CodeParams, Scheme};
 use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
-use coded_marl::coordinator::{backend_factory, spawn_local, Controller, RunSpec};
+use coded_marl::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
 use coded_marl::env::EnvKind;
 use coded_marl::metrics::table::Table;
 use coded_marl::rng::Pcg32;
@@ -52,6 +53,7 @@ fn ablation_adaptive_selection() {
         // the boundary because the controller object persists.
         let mut cfg = TrainConfig::new("coop_nav_m8");
         cfg.backend = Backend::Mock;
+        cfg.time_mode = common::time_mode();
         cfg.scheme = scheme;
         cfg.adaptive = adaptive;
         cfg.n_learners = 15;
@@ -62,10 +64,10 @@ fn ablation_adaptive_selection() {
         cfg.mock_compute = Duration::from_millis(2);
         cfg.seed = 29;
         // phase 1: quiet
-        let factory = backend_factory(&cfg, common::artifacts_dir(), &spec);
-        let pool = spawn_local(cfg.n_learners, factory).unwrap();
         let mut quiet_cfg = cfg.clone();
         quiet_cfg.iterations = half;
+        let factory = backend_factory(&quiet_cfg, common::artifacts_dir(), &spec);
+        let pool = spawn_pool(&quiet_cfg, factory).unwrap();
         let mut ctrl = Controller::new(quiet_cfg, spec.clone(), pool).unwrap();
         ctrl.train().unwrap();
         for r in ctrl.log.records.iter().filter(|r| r.decode_method != "warmup") {
@@ -80,7 +82,7 @@ fn ablation_adaptive_selection() {
         stormy_cfg.iterations = iters - half;
         stormy_cfg.straggler = StragglerConfig::fixed(4, Duration::from_millis(100));
         let factory = backend_factory(&stormy_cfg, common::artifacts_dir(), &spec);
-        let pool = spawn_local(stormy_cfg.n_learners, factory).unwrap();
+        let pool = spawn_pool(&stormy_cfg, factory).unwrap();
         let mut ctrl = Controller::new(stormy_cfg, spec.clone(), pool).unwrap();
         ctrl.train().unwrap();
         for r in ctrl.log.records.iter().filter(|r| r.decode_method != "warmup") {
@@ -229,6 +231,7 @@ fn ablation_straggler_model() {
         for exponential in [false, true] {
             let mut cfg = TrainConfig::new("coop_nav_m8");
             cfg.backend = Backend::Mock;
+            cfg.time_mode = common::time_mode();
             cfg.scheme = scheme;
             cfg.n_learners = 15;
             cfg.iterations = common::bench_iters() + 1;
@@ -243,7 +246,7 @@ fn ablation_straggler_model() {
             };
             cfg.seed = 17;
             let factory = backend_factory(&cfg, common::artifacts_dir(), &spec);
-            let pool = spawn_local(cfg.n_learners, factory).unwrap();
+            let pool = spawn_pool(&cfg, factory).unwrap();
             let mut ctrl = Controller::new(cfg, spec.clone(), pool).unwrap();
             ctrl.train().unwrap();
             let times: Vec<f64> = ctrl

@@ -17,9 +17,9 @@
 
 use std::time::Duration;
 
-use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
+use coded_marl::config::{Backend, StragglerConfig, TimeMode, TrainConfig};
 use coded_marl::coordinator::{
-    backend_factory, spawn_local, Controller, PjrtBackend, RunSpec,
+    backend_factory, spawn_pool, Controller, PjrtBackend, RunSpec,
 };
 use coded_marl::env::EnvKind;
 use coded_marl::marl::buffer::{ReplayBuffer, Transition};
@@ -43,6 +43,20 @@ pub fn bench_iters() -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(8)
+}
+
+/// Virtual-time fast path: `CODED_MARL_TIME=virtual` runs the timing
+/// benches on the discrete-event sim (full injected delays, ~zero
+/// wall-clock). Default stays real so bench numbers remain measured,
+/// not modeled, unless explicitly requested.
+pub fn time_mode() -> TimeMode {
+    match std::env::var("CODED_MARL_TIME").as_deref() {
+        Ok(v) => TimeMode::parse(v).unwrap_or_else(|| {
+            eprintln!("CODED_MARL_TIME='{v}' not recognized (real|virtual); using real");
+            TimeMode::Real
+        }),
+        Err(_) => TimeMode::Real,
+    }
 }
 
 /// The paper's per-environment straggler settings (§V-C), k values and
@@ -122,6 +136,7 @@ pub fn run_cell(
 ) -> Duration {
     let mut cfg = TrainConfig::new(preset_name(env, m));
     cfg.backend = Backend::Mock;
+    cfg.time_mode = time_mode();
     cfg.scheme = scheme;
     cfg.n_learners = 15;
     cfg.iterations = bench_iters() + 1; // +1 warmup
@@ -133,7 +148,7 @@ pub fn run_cell(
     cfg.seed = seed;
     let spec = RunSpec::synthetic(env, m, k_adv, 64, 32);
     let factory = backend_factory(&cfg, artifacts_dir(), &spec);
-    let pool = spawn_local(cfg.n_learners, factory).expect("pool");
+    let pool = spawn_pool(&cfg, factory).expect("pool");
     let mut ctrl = Controller::new(cfg, spec, pool).expect("controller");
     ctrl.train().expect("train");
     let times: Vec<Duration> = ctrl

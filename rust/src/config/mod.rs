@@ -69,6 +69,38 @@ impl Transport {
     }
 }
 
+/// Whether time is spent or simulated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeMode {
+    /// Wall-clock execution: learner threads really compute and really
+    /// sleep through injected delays (the paper's protocol).
+    Real,
+    /// Discrete-event execution on a [`crate::sim::VirtualClock`]:
+    /// learner numerics run unchanged, but compute time and injected
+    /// delays advance a virtual nanosecond counter instead of
+    /// sleeping, so straggler sweeps run at hardware speed. Requires
+    /// the local transport and the mock backend (compute is modeled
+    /// from `mock_compute`, not executed through PJRT).
+    Virtual,
+}
+
+impl TimeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimeMode::Real => "real",
+            TimeMode::Virtual => "virtual",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TimeMode> {
+        match s {
+            "real" => Some(TimeMode::Real),
+            "virtual" => Some(TimeMode::Virtual),
+            _ => None,
+        }
+    }
+}
+
 /// Straggler injection model (paper §V-C): each iteration, `k` learners
 /// chosen uniformly at random delay their reply by `delay`.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -121,9 +153,13 @@ pub struct TrainConfig {
     /// Iterations over which σ decays to 10% of its start value.
     pub noise_decay_iters: usize,
     pub backend: Backend,
-    /// Mock backend only: synthetic per-agent-update compute time.
+    /// Mock backend only: synthetic per-agent-update compute time. In
+    /// `TimeMode::Virtual` this is the *modeled* virtual cost per
+    /// update.
     pub mock_compute: std::time::Duration,
     pub transport: Transport,
+    /// Real wall-clock execution or virtual-time simulation.
+    pub time_mode: TimeMode,
     pub seed: u64,
     /// Write per-iteration CSV under this directory (None = don't).
     pub out_dir: Option<std::path::PathBuf>,
@@ -167,6 +203,7 @@ impl TrainConfig {
             backend: Backend::Pjrt,
             mock_compute: std::time::Duration::from_millis(2),
             transport: Transport::Local,
+            time_mode: TimeMode::Real,
             seed: 0,
             out_dir: None,
             checkpoint_every: 0,
@@ -239,6 +276,10 @@ impl TrainConfig {
             cfg.transport = Transport::parse(v)
                 .ok_or_else(|| anyhow::anyhow!("unknown transport '{v}' (local|tcp)"))?;
         }
+        if let Some(v) = args.opt("time-mode") {
+            cfg.time_mode = TimeMode::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown time mode '{v}' (real|virtual)"))?;
+        }
         if let Some(v) = args.opt("seed") {
             cfg.seed = v.parse()?;
         }
@@ -286,13 +327,27 @@ impl TrainConfig {
         if self.collect_timeout.is_zero() {
             bail!("collect timeout must be > 0");
         }
+        if self.time_mode == TimeMode::Virtual {
+            if self.transport != Transport::Local {
+                bail!(
+                    "--time-mode virtual requires --transport local \
+                     (simulated learners live in the controller process)"
+                );
+            }
+            if self.backend != Backend::Mock {
+                bail!(
+                    "--time-mode virtual requires --backend mock (learner compute \
+                     is modeled via --mock-compute-us, not executed through PJRT)"
+                );
+            }
+        }
         Ok(())
     }
 
     /// One-line human summary for run headers.
     pub fn summary(&self) -> String {
         format!(
-            "preset={} N={} scheme={} decode={} stragglers(k={}, t_s={:?}{}) iters={} backend={} transport={} seed={}",
+            "preset={} N={} scheme={} decode={} stragglers(k={}, t_s={:?}{}) iters={} backend={} transport={} time={} seed={}",
             self.preset,
             self.n_learners,
             self.scheme,
@@ -303,6 +358,7 @@ impl TrainConfig {
             self.iterations,
             self.backend.name(),
             self.transport.name(),
+            self.time_mode.name(),
             self.seed
         )
     }
@@ -365,6 +421,32 @@ mod tests {
         assert!(parse(&["--preset", "x", "--stragglers", "99"]).is_err());
         assert!(parse(&["--preset", "x", "--p-m", "1.5"]).is_err());
         assert!(parse(&["--preset", "x", "--iterations", "0"]).is_err());
+    }
+
+    #[test]
+    fn time_mode_parses_and_is_validated() {
+        let cfg = parse(&["--preset", "x", "--time-mode", "virtual", "--backend", "mock"]).unwrap();
+        assert_eq!(cfg.time_mode, TimeMode::Virtual);
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert_eq!(cfg.time_mode, TimeMode::Real);
+        // virtual time models compute: PJRT and TCP are rejected
+        assert!(parse(&["--preset", "x", "--time-mode", "virtual"]).is_err());
+        assert!(parse(&[
+            "--preset", "x", "--time-mode", "virtual", "--backend", "mock", "--transport", "tcp",
+        ])
+        .is_err());
+        assert!(parse(&["--preset", "x", "--time-mode", "warp"]).is_err());
+        assert_eq!(TimeMode::parse("real"), Some(TimeMode::Real));
+        assert_eq!(TimeMode::parse("virtual"), Some(TimeMode::Virtual));
+        assert_eq!(TimeMode::parse(""), None);
+    }
+
+    #[test]
+    fn summary_mentions_time_mode() {
+        let mut cfg = TrainConfig::new("x");
+        cfg.backend = Backend::Mock;
+        cfg.time_mode = TimeMode::Virtual;
+        assert!(cfg.summary().contains("time=virtual"));
     }
 
     #[test]

@@ -18,6 +18,7 @@ use anyhow::{bail, Result};
 use crate::marl::buffer::Minibatch;
 use crate::marl::{AgentParams, ModelDims};
 use crate::runtime::{Manifest, Session};
+use crate::sim::{real_clock, ClockRef};
 
 /// Per-agent parameter update, used by learners and by the centralized
 /// baseline trainer.
@@ -40,6 +41,11 @@ pub trait LearnerBackend {
     fn last_critic_loss(&self) -> Option<f32> {
         None
     }
+
+    /// Move the backend's *emulated* time spending onto `clock`
+    /// (virtual in sim runs). Backends whose compute is real work
+    /// rather than an emulated wait (PJRT) ignore this.
+    fn set_clock(&mut self, _clock: ClockRef) {}
 }
 
 /// Factory invoked **inside** each learner thread: `PjRtClient` is
@@ -132,17 +138,21 @@ impl LearnerBackend for PjrtBackend {
 pub struct MockBackend {
     dims: ModelDims,
     /// Emulated compute duration per agent update. Implemented as a
-    /// sleep, not a busy-wait: each of the paper's learners is a
-    /// dedicated EC2 instance whose compute runs in parallel wall-time
-    /// with every other learner, and sleeping reproduces that on a host
-    /// with fewer cores than learners (DESIGN.md §2).
+    /// clock-mediated sleep, not a busy-wait: each of the paper's
+    /// learners is a dedicated EC2 instance whose compute runs in
+    /// parallel wall-time with every other learner, and sleeping
+    /// reproduces that on a host with fewer cores than learners
+    /// (DESIGN.md §2). On a virtual clock the sleep is an
+    /// instantaneous advance (the centralized baseline in
+    /// `TimeMode::Virtual` uses this).
     pub compute: std::time::Duration,
     lambda: f32,
+    clock: ClockRef,
 }
 
 impl MockBackend {
     pub fn new(dims: ModelDims, compute: std::time::Duration) -> MockBackend {
-        MockBackend { dims, compute, lambda: 0.05 }
+        MockBackend { dims, compute, lambda: 0.05, clock: real_clock() }
     }
 
     /// Smooth scalar statistic of the minibatch: a weighted mean of the
@@ -191,9 +201,13 @@ impl LearnerBackend for MockBackend {
         }
         // Emulate the remote learner's compute time (see field docs).
         if !self.compute.is_zero() {
-            std::thread::sleep(self.compute);
+            self.clock.sleep(self.compute);
         }
         Ok(out)
+    }
+
+    fn set_clock(&mut self, clock: ClockRef) {
+        self.clock = clock;
     }
 }
 

@@ -19,8 +19,10 @@ use crate::config::TrainConfig;
 use crate::env::make_env;
 use crate::marl::buffer::ReplayBuffer;
 use crate::marl::noise::DecaySchedule;
+use crate::config::TimeMode;
 use crate::marl::AgentParams;
 use crate::metrics::{IterRecord, IterTiming, RunLog, Timer};
+use crate::sim::{real_clock, ClockRef, VirtualClock};
 
 /// Single-process synchronous MADDPG trainer.
 pub struct Centralized {
@@ -32,14 +34,40 @@ pub struct Centralized {
     agents: Vec<AgentParams>,
     streams: Streams,
     noise_schedule: DecaySchedule,
+    /// Time domain of the phase timers. In virtual mode the backend
+    /// must share this clock (see [`LearnerBackend::set_clock`]) so its
+    /// modeled compute advances what the timers measure.
+    clock: ClockRef,
     pub log: RunLog,
 }
 
 impl Centralized {
+    /// Build the trainer on the clock `cfg.time_mode` implies: the
+    /// shared wall clock, or — in virtual mode — a fresh
+    /// [`VirtualClock`] shared with the backend, so its modeled
+    /// compute advances virtually instead of sleeping.
     pub fn new(
         cfg: TrainConfig,
         spec: RunSpec,
+        mut backend: Box<dyn LearnerBackend>,
+    ) -> Result<Centralized> {
+        let clock: ClockRef = match cfg.time_mode {
+            TimeMode::Real => real_clock(),
+            TimeMode::Virtual => std::sync::Arc::new(VirtualClock::new()),
+        };
+        backend.set_clock(clock.clone());
+        Centralized::new_with_clock(cfg, spec, backend, clock)
+    }
+
+    /// Build the trainer on an explicit caller-supplied clock. The
+    /// backend must already share it (see
+    /// [`LearnerBackend::set_clock`]); [`Centralized::new`] does both
+    /// from `cfg.time_mode` and is the constructor to prefer.
+    pub fn new_with_clock(
+        cfg: TrainConfig,
+        spec: RunSpec,
         backend: Box<dyn LearnerBackend>,
+        clock: ClockRef,
     ) -> Result<Centralized> {
         cfg.validate()?;
         let env = make_env(spec.env, spec.m, spec.k_adversaries);
@@ -60,6 +88,7 @@ impl Centralized {
             agents,
             streams,
             noise_schedule,
+            clock,
             log: RunLog::new(),
         })
     }
@@ -90,10 +119,10 @@ impl Centralized {
     }
 
     pub fn run_iteration(&mut self, iter: u64) -> Result<IterRecord> {
-        let total_t = Timer::start();
+        let total_t = Timer::with_clock(&self.clock);
         let mut timing = IterTiming::default();
 
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let sigma = self.noise_schedule.scale_at(iter as usize);
         let mut reward_sum = 0.0;
         for _ in 0..self.cfg.episodes_per_iter {
@@ -125,13 +154,13 @@ impl Centralized {
             });
         }
 
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let mb = self.buffer.sample(self.spec.dims.batch, &mut self.streams.sample);
         timing.sample = t.elapsed();
 
         // Synchronous update: every θ'_i is a function of the *same*
         // broadcast θ (not updated in place), exactly like the learners.
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let agent_params: Vec<Vec<f32>> = self.agents.iter().map(|a| a.to_flat()).collect();
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;

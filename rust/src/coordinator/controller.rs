@@ -8,8 +8,14 @@
 //! The controller never waits for *specific* learners — only for *any*
 //! decodable subset. That is the paper's entire point: with a coded
 //! assignment matrix, up to `N − M` stragglers (MDS) add zero latency.
+//!
+//! All timing (phase timers, the collect deadline, stall telemetry)
+//! runs on the clock of the transport's time domain
+//! ([`ControllerTransport::clock`]): wall time for thread/TCP pools,
+//! virtual time for [`crate::sim::SimTransport`] — the controller code
+//! itself is identical in both modes.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -26,6 +32,7 @@ use crate::marl::noise::DecaySchedule;
 use crate::marl::AgentParams;
 use crate::metrics::{IterRecord, IterTiming, RunLog, Timer};
 use crate::rng::Pcg32;
+use crate::sim::ClockRef;
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
 
 /// The RNG streams that drive *training* randomness. Forked in a fixed
@@ -68,6 +75,8 @@ pub struct Controller<T: ControllerTransport> {
     adaptive: Option<(AdaptiveSelector, StragglerStats)>,
     /// EWMA of the per-agent-update compute time reported by learners.
     compute_ewma: f64,
+    /// The transport's time domain (real or virtual).
+    clock: ClockRef,
     pub log: RunLog,
     shut_down: bool,
 }
@@ -121,6 +130,7 @@ impl<T: ControllerTransport> Controller<T> {
                 StragglerStats::new(0.3),
             )
         });
+        let clock = transport.clock();
         Ok(Controller {
             buffer: ReplayBuffer::new(cfg.buffer_capacity),
             cfg,
@@ -134,6 +144,7 @@ impl<T: ControllerTransport> Controller<T> {
             noise_schedule,
             adaptive,
             compute_ewma: 0.0,
+            clock,
             log: RunLog::new(),
             shut_down: false,
         })
@@ -221,11 +232,11 @@ impl<T: ControllerTransport> Controller<T> {
 
     /// One full training iteration (Alg. 1 lines 3-15).
     pub fn run_iteration(&mut self, iter: u64) -> Result<IterRecord> {
-        let total_t = Timer::start();
+        let total_t = Timer::with_clock(&self.clock);
         let mut timing = IterTiming::default();
 
         // --- Rollout (lines 3-7) ---------------------------------------
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let sigma = self.noise_schedule.scale_at(iter as usize);
         let mut reward_sum = 0.0;
         for _ in 0..self.cfg.episodes_per_iter {
@@ -261,12 +272,12 @@ impl<T: ControllerTransport> Controller<T> {
         }
 
         // --- Sample (line 8) --------------------------------------------
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let mb = self.buffer.sample(self.spec.dims.batch, &mut self.streams.sample);
         timing.sample = t.elapsed();
 
         // --- Broadcast (line 9) -----------------------------------------
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let plan = self.injector.plan(self.cfg.n_learners);
         // Arc-shared payload: one flatten, N refcount bumps (not N
         // multi-megabyte clones — EXPERIMENTS.md §Perf).
@@ -297,7 +308,7 @@ impl<T: ControllerTransport> Controller<T> {
         timing.broadcast = t.elapsed();
 
         // --- Collect until decodable (lines 10-13) ----------------------
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let outcome = self.collect(iter)?;
         timing.wait = t.elapsed();
         let CollectOutcome { received, results, stall, compute_per_update } = outcome;
@@ -309,7 +320,7 @@ impl<T: ControllerTransport> Controller<T> {
         }
 
         // --- Recover θ' (line 15) ---------------------------------------
-        let t = Timer::start();
+        let t = Timer::with_clock(&self.clock);
         let out = self.decoder.decode(&received, &results, self.cfg.decode)?;
         timing.decode = t.elapsed();
         for (agent, theta) in self.agents.iter_mut().zip(out.theta.iter()) {
@@ -375,13 +386,13 @@ impl<T: ControllerTransport> Controller<T> {
         let mut received: Vec<usize> = Vec::with_capacity(n);
         let mut results: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut got = vec![false; n];
-        let mut mth_arrival: Option<Instant> = None;
+        let mut mth_arrival: Option<Duration> = None;
         let mut compute_sum = 0.0f64;
         let mut compute_n = 0usize;
         let timeout = self.cfg.collect_timeout;
-        let deadline = Instant::now() + timeout;
+        let deadline = self.clock.now() + timeout;
         loop {
-            let now = Instant::now();
+            let now = self.clock.now();
             if now >= deadline {
                 bail!(
                     "iteration {iter}: no decodable subset after {timeout:?} \
@@ -409,10 +420,12 @@ impl<T: ControllerTransport> Controller<T> {
                         compute_n += 1;
                     }
                     if received.len() == m {
-                        mth_arrival = Some(Instant::now());
+                        mth_arrival = Some(self.clock.now());
                     }
                     if received.len() >= m && self.code().decodable(&received) {
-                        let stall = mth_arrival.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+                        let stall = mth_arrival
+                            .map(|t| self.clock.now().saturating_sub(t))
+                            .unwrap_or(Duration::ZERO);
                         let compute_per_update = (compute_n > 0).then(|| {
                             Duration::from_secs_f64(compute_sum / compute_n as f64)
                         });

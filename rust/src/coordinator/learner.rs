@@ -8,10 +8,19 @@
 //! acknowledgement (line 20) and abandons the iteration's remaining
 //! work as soon as one arrives — that early-abort is what keeps coded
 //! redundancy from wasting compute once θ' is already recoverable.
+//!
+//! All timing goes through a [`ClockRef`]: thread/worker learners run
+//! on the shared real clock, and the injected delay is served as a
+//! **single** interruptible [`LearnerEndpoint::recv_timeout`] wait
+//! (the controller's ack cancels the remainder) instead of the old
+//! 1 ms chunked-sleep poll loop that burned a core per straggler.
+
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::backend::LearnerBackend;
+use crate::sim::ClockRef;
 use crate::transport::{CtrlMsg, LearnerEndpoint, LearnerMsg};
 
 /// Outcome of polling the control channel mid-task.
@@ -25,19 +34,55 @@ enum Poll {
 /// `iter`.
 fn poll_ctrl(ep: &mut impl LearnerEndpoint, iter: u64) -> Result<Poll> {
     while let Some(msg) = ep.try_recv()? {
-        match msg {
-            CtrlMsg::Ack { iter: acked } if acked >= iter => return Ok(Poll::AbortIteration),
-            CtrlMsg::Ack { .. } => {} // stale ack for an older iteration
-            CtrlMsg::Shutdown => return Ok(Poll::Shutdown),
-            // A new Task while we're mid-iteration means the controller
-            // has moved on (it only advances after recovery) — drop the
-            // current work. The new task itself is lost, which is safe:
-            // this learner is simply a straggler for that iteration.
-            CtrlMsg::Task { .. } => return Ok(Poll::AbortIteration),
-            CtrlMsg::Welcome { .. } => {}
+        match classify(msg, iter) {
+            Poll::Continue => {}
+            other => return Ok(other),
         }
     }
     Ok(Poll::Continue)
+}
+
+/// How a control message affects work on iteration `iter`.
+fn classify(msg: CtrlMsg, iter: u64) -> Poll {
+    match msg {
+        CtrlMsg::Ack { iter: acked } if acked >= iter => Poll::AbortIteration,
+        CtrlMsg::Ack { .. } => Poll::Continue, // stale ack for an older iteration
+        CtrlMsg::Shutdown => Poll::Shutdown,
+        // A new Task while we're mid-iteration means the controller
+        // has moved on (it only advances after recovery) — drop the
+        // current work. The new task itself is lost, which is safe:
+        // this learner is simply a straggler for that iteration.
+        CtrlMsg::Task { .. } => Poll::AbortIteration,
+        CtrlMsg::Welcome { .. } => Poll::Continue,
+    }
+}
+
+/// Serve the injected straggler delay (paper §V-C): the result exists
+/// but its return is held back by t_s. One blocking wait on the
+/// control channel per incoming message — a timeout means the delay
+/// fully elapsed; an ack (or a newer task) cancels the remainder, so
+/// the paper's transiently-slow straggler never stays busy into the
+/// next iteration.
+fn serve_delay(
+    ep: &mut impl LearnerEndpoint,
+    clock: &ClockRef,
+    iter: u64,
+    delay: Duration,
+) -> Result<Poll> {
+    let wake = clock.now() + delay;
+    loop {
+        let now = clock.now();
+        if now >= wake {
+            return Ok(Poll::Continue);
+        }
+        match ep.recv_timeout(wake - now)? {
+            None => return Ok(Poll::Continue), // delay fully served
+            Some(msg) => match classify(msg, iter) {
+                Poll::Continue => {}
+                other => return Ok(other),
+            },
+        }
+    }
 }
 
 /// Run the learner protocol until Shutdown (or channel close). Generic
@@ -47,6 +92,7 @@ pub fn learner_loop(
     mut ep: impl LearnerEndpoint,
     learner_id: u32,
     mut backend: Box<dyn LearnerBackend>,
+    clock: ClockRef,
 ) -> Result<()> {
     loop {
         let msg = match ep.recv() {
@@ -59,7 +105,7 @@ pub fn learner_loop(
                 _ => continue, // stale Ack / Welcome
             }
         };
-        let t0 = std::time::Instant::now();
+        let t0 = clock.now();
         let p = agent_params.first().map(|v| v.len()).unwrap_or(0);
         let mut y = vec![0.0f32; p];
         let mut aborted = false;
@@ -83,34 +129,13 @@ pub fn learner_loop(
         if aborted {
             continue;
         }
-        let compute_ns = t0.elapsed().as_nanos() as u64;
-        // Injected straggler delay (paper §V-C): the result exists but
-        // its return is held back by t_s. The sleep is chunked so the
-        // controller's ack cancels the *remainder* — the paper's
-        // stragglers are transiently slow per iteration, they do not
-        // stay busy into the next one.
-        let mut aborted = false;
+        let compute_ns = clock.now().saturating_sub(t0).as_nanos() as u64;
         if straggler_delay_ns > 0 {
-            let wake = std::time::Instant::now()
-                + std::time::Duration::from_nanos(straggler_delay_ns);
-            loop {
-                match poll_ctrl(&mut ep, iter)? {
-                    Poll::Continue => {}
-                    Poll::AbortIteration => {
-                        aborted = true;
-                        break;
-                    }
-                    Poll::Shutdown => return Ok(()),
-                }
-                let now = std::time::Instant::now();
-                if now >= wake {
-                    break;
-                }
-                std::thread::sleep((wake - now).min(std::time::Duration::from_millis(1)));
+            match serve_delay(&mut ep, &clock, iter, Duration::from_nanos(straggler_delay_ns))? {
+                Poll::Continue => {}
+                Poll::AbortIteration => continue,
+                Poll::Shutdown => return Ok(()),
             }
-        }
-        if aborted {
-            continue;
         }
         // One last poll: if the controller already recovered θ' there
         // is no point shipping a large stale vector.
@@ -132,6 +157,7 @@ mod tests {
     use crate::marl::buffer::Minibatch;
     use crate::marl::{AgentParams, ModelDims};
     use crate::rng::Pcg32;
+    use crate::sim::real_clock;
     use crate::transport::local::local_pair;
     use crate::transport::ControllerTransport;
     use std::time::Duration;
@@ -176,7 +202,7 @@ mod tests {
             .map(|(id, ep)| {
                 std::thread::spawn(move || {
                     let backend = Box::new(MockBackend::new(dims(), Duration::ZERO));
-                    learner_loop(ep, id as u32, backend).unwrap();
+                    learner_loop(ep, id as u32, backend, real_clock()).unwrap();
                 })
             })
             .collect();
@@ -219,7 +245,7 @@ mod tests {
                 std::thread::spawn(move || {
                     let backend =
                         Box::new(MockBackend::new(dims(), Duration::from_millis(50)));
-                    learner_loop(ep, 0, backend).unwrap();
+                    learner_loop(ep, 0, backend, real_clock()).unwrap();
                 })
             })
             .collect();
@@ -266,6 +292,45 @@ mod tests {
         let LearnerMsg::Result { compute_ns, .. } = got else { panic!() };
         // telemetry excludes the injected delay
         assert!(compute_ns < 80_000_000);
+        ctrl.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn ack_during_delay_cancels_the_remainder() {
+        let (mut ctrl, handles) = spawn_learner(1);
+        let mut rng = Pcg32::seeded(5);
+        let (msg, _, _) = task(3, vec![1.0, 0.0, 0.0], &mut rng);
+        let CtrlMsg::Task { iter, row, agent_params, minibatch, .. } = msg else { unreachable!() };
+        ctrl.send_to(
+            0,
+            CtrlMsg::Task {
+                iter,
+                row,
+                agent_params,
+                minibatch,
+                straggler_delay_ns: 5_000_000_000, // 5 s — must NOT be waited out
+            },
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // let compute finish, delay start
+        let t0 = std::time::Instant::now();
+        ctrl.send_to(0, CtrlMsg::Ack { iter: 3 }).unwrap();
+        // The ack lands inside the 5 s delay wait: no result arrives,
+        // and the learner is free for the next task almost immediately.
+        let quiet = ctrl.recv_timeout(Duration::from_millis(200)).unwrap();
+        assert!(quiet.is_none(), "acked delay must not deliver a result: {quiet:?}");
+        let (msg2, _, _) = task(4, vec![0.0, 1.0, 0.0], &mut rng);
+        ctrl.send_to(0, msg2).unwrap();
+        let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "learner stayed stuck in the injected delay"
+        );
+        let LearnerMsg::Result { iter, .. } = got else { panic!() };
+        assert_eq!(iter, 4);
         ctrl.shutdown();
         for h in handles {
             h.join().unwrap();

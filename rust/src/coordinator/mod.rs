@@ -12,6 +12,19 @@
 //! * [`centralized`] — the single-process baseline (Fig. 3 reference)
 //! * [`rollout`] — episode execution via the native MLP
 //!
+//! ## Time domains (the `sim` clock threading)
+//!
+//! Nothing in this layer touches `std::time::Instant` or
+//! `std::thread::sleep` directly; every timer, deadline, injected
+//! delay and emulated compute goes through a [`crate::sim::Clock`].
+//! The transport owns the time domain
+//! ([`crate::transport::ControllerTransport::clock`]): thread/TCP
+//! pools hand the controller the shared wall clock, while
+//! `TimeMode::Virtual` (see [`spawn_pool`]) swaps in a
+//! [`crate::sim::SimTransport`] whose [`crate::sim::VirtualClock`]
+//! advances event-by-event — identical controller code, identical
+//! numerics, wall-clock cost ≈ zero per injected straggler second.
+//!
 //! ```no_run
 //! use coded_marl::config::TrainConfig;
 //! use coded_marl::coding::Scheme;
@@ -43,11 +56,12 @@ pub use centralized::Centralized;
 pub use controller::{Controller, Streams};
 pub use pool::{spawn_local, spawn_tcp, Pool, WorkerCmd};
 
-use crate::config::{Backend, TrainConfig, Transport};
+use crate::config::{Backend, TimeMode, TrainConfig, Transport};
 use crate::env::EnvKind;
 use crate::marl::ModelDims;
 use crate::metrics::RunLog;
 use crate::runtime::{Manifest, PresetSpec};
+use crate::sim::SimTransport;
 
 /// Everything the controller needs to know about the experiment that is
 /// independent of the learner backend: environment, agent count, and
@@ -106,6 +120,24 @@ pub fn backend_factory(
     }
 }
 
+/// Spawn the local-process pool implied by `cfg.time_mode`: learner
+/// threads in real time, or the discrete-event sim pool in virtual
+/// time. Both honor the same factory contract (a factory error is a
+/// permanent erasure, not a crash); in virtual mode each backend's
+/// emulated compute is made instantaneous and `cfg.mock_compute` is
+/// charged in virtual nanoseconds per update instead
+/// (`TrainConfig::validate` enforces `Backend::Mock`).
+pub fn spawn_pool(cfg: &TrainConfig, factory: Arc<BackendFactory>) -> Result<Pool> {
+    match cfg.time_mode {
+        TimeMode::Real => spawn_local(cfg.n_learners, factory),
+        TimeMode::Virtual => Ok(Pool::Sim(SimTransport::from_factory(
+            cfg.n_learners,
+            &factory,
+            cfg.mock_compute,
+        ))),
+    }
+}
+
 /// Construct the pool implied by the config.
 pub fn build_pool(
     cfg: &TrainConfig,
@@ -115,7 +147,7 @@ pub fn build_pool(
     match cfg.transport {
         Transport::Local => {
             let factory = backend_factory(cfg, artifacts_dir.as_ref().to_path_buf(), spec);
-            spawn_local(cfg.n_learners, factory)
+            spawn_pool(cfg, factory)
         }
         Transport::Tcp => {
             let cmd = WorkerCmd::current_exe(
@@ -156,7 +188,7 @@ pub fn run_training_with(
     if cfg.transport != Transport::Local {
         bail!("run_training_with supports the local transport only");
     }
-    let pool = spawn_local(cfg.n_learners, factory)?;
+    let pool = spawn_pool(cfg, factory)?;
     let mut controller = Controller::new(cfg.clone(), spec, pool)?;
     if let Some(ckpt) = &cfg.resume {
         controller.resume_from(ckpt)?;
@@ -167,6 +199,9 @@ pub fn run_training_with(
 }
 
 /// Centralized-baseline convenience mirroring [`run_training_with`].
+/// In `TimeMode::Virtual` the backend and the phase timers share a
+/// fresh virtual clock (wired by [`Centralized::new`]), so the
+/// baseline's sequential M-update cost is modeled instead of slept.
 pub fn run_centralized_with(
     cfg: &TrainConfig,
     spec: RunSpec,

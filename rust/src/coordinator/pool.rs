@@ -1,6 +1,8 @@
 //! Learner pool construction: spawn N learners as in-process threads
-//! (local transport) or as `coded-marl worker` child processes (TCP
-//! transport), and hand the controller a unified transport handle.
+//! (local transport), as `coded-marl worker` child processes (TCP
+//! transport), or as discrete-event models on a virtual clock
+//! ([`crate::sim::SimTransport`], `TimeMode::Virtual`), and hand the
+//! controller a unified transport handle.
 
 use std::sync::Arc;
 
@@ -8,6 +10,7 @@ use anyhow::{Context, Result};
 
 use super::backend::BackendFactory;
 use super::learner::learner_loop;
+use crate::sim::{real_clock, ClockRef, SimTransport};
 use crate::transport::local::{local_pair, LocalController};
 use crate::transport::tcp::{TcpController, TcpListenerHandle};
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
@@ -17,6 +20,8 @@ use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
 pub enum Pool {
     Local(LocalController),
     Tcp { ctrl: TcpController, children: Vec<std::process::Child> },
+    /// Virtual-time discrete-event pool (no threads, no processes).
+    Sim(SimTransport),
 }
 
 impl ControllerTransport for Pool {
@@ -24,6 +29,7 @@ impl ControllerTransport for Pool {
         match self {
             Pool::Local(c) => c.n_learners(),
             Pool::Tcp { ctrl, .. } => ctrl.n_learners(),
+            Pool::Sim(s) => s.n_learners(),
         }
     }
 
@@ -31,6 +37,7 @@ impl ControllerTransport for Pool {
         match self {
             Pool::Local(c) => c.send_to(learner, msg),
             Pool::Tcp { ctrl, .. } => ctrl.send_to(learner, msg),
+            Pool::Sim(s) => s.send_to(learner, msg),
         }
     }
 
@@ -38,12 +45,22 @@ impl ControllerTransport for Pool {
         match self {
             Pool::Local(c) => c.recv_timeout(timeout),
             Pool::Tcp { ctrl, .. } => ctrl.recv_timeout(timeout),
+            Pool::Sim(s) => s.recv_timeout(timeout),
+        }
+    }
+
+    fn clock(&self) -> ClockRef {
+        match self {
+            Pool::Local(c) => c.clock(),
+            Pool::Tcp { ctrl, .. } => ctrl.clock(),
+            Pool::Sim(s) => s.clock(),
         }
     }
 
     fn shutdown(&mut self) {
         match self {
             Pool::Local(c) => c.shutdown(),
+            Pool::Sim(s) => s.shutdown(),
             Pool::Tcp { ctrl, children } => {
                 ctrl.shutdown();
                 for c in children.iter_mut() {
@@ -84,7 +101,7 @@ pub fn spawn_local(n: usize, factory: Arc<BackendFactory>) -> Result<Pool> {
                         return;
                     }
                 };
-                if let Err(e) = learner_loop(ep, id as u32, backend) {
+                if let Err(e) = learner_loop(ep, id as u32, backend, real_clock()) {
                     eprintln!("learner {id}: loop error: {e:#}");
                 }
             })

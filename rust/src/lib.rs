@@ -34,5 +34,6 @@ pub mod marl;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod sim;
 pub mod testkit;
 pub mod transport;

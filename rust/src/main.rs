@@ -8,6 +8,8 @@
 //! * `code`    — inspect a coding scheme's assignment matrix, workload,
 //!   redundancy and straggler tolerance
 //! * `presets` — list the AOT-lowered presets in the artifacts manifest
+//! * `sim-sweep` — straggler sweep over schemes × k in **virtual time**
+//!   (discrete-event simulation; paper-scale delays at hardware speed)
 
 use anyhow::{Context, Result};
 
@@ -29,11 +31,12 @@ USAGE:
     coded-marl <subcommand> [flags]
 
 SUBCOMMANDS:
-    train     run coded distributed MADDPG training
-    central   run the centralized MADDPG baseline
-    worker    TCP learner process (used with --transport tcp)
-    code      inspect a coding scheme's assignment matrix
-    presets   list AOT-lowered presets
+    train      run coded distributed MADDPG training
+    central    run the centralized MADDPG baseline
+    worker     TCP learner process (used with --transport tcp)
+    code       inspect a coding scheme's assignment matrix
+    presets    list AOT-lowered presets
+    sim-sweep  straggler sweep over schemes x k in virtual time
 
 COMMON TRAIN FLAGS:
     --preset NAME              preset from artifacts/manifest.json (required)
@@ -49,6 +52,7 @@ COMMON TRAIN FLAGS:
     --episode-len L            steps per episode         [25]
     --backend B                pjrt|mock                 [pjrt]
     --transport T              local|tcp                 [local]
+    --time-mode M              real|virtual              [real]
     --seed S                   experiment seed           [0]
     --out-dir DIR              write per-iteration CSV here
     --checkpoint-every I       save params every I iterations (needs --out-dir)
@@ -57,10 +61,26 @@ COMMON TRAIN FLAGS:
     --collect-timeout-ms MS    dead-learner timeout      [120000]
     --verbose                  per-iteration progress lines
 
+SIM-SWEEP FLAGS (all optional; runs without artifacts):
+    --artifacts DIR            artifacts directory       [artifacts]
+    --env E                    coop_nav|predator_prey|deception|keep_away [coop_nav]
+    --m M                      agents                    [8]
+    --adversaries K            adversary count           [0]
+    --learners N               learners                  [15]
+    --schemes S1,S2            schemes to sweep          [all five]
+    --stragglers-list K1,K2    straggler counts          [0,1,2,4,7]
+    --straggler-delay-ms MS    injected delay t_s        [250]
+    --straggler-exponential    heavy-tail Exp(1)-scaled delays
+    --iterations I             iterations per cell       [10]
+    --mock-compute-us US       modeled per-update compute [2000]
+    --seed S                   experiment seed           [0]
+    --out-dir DIR              also write sim_sweep.csv here
+
 EXAMPLES:
     coded-marl train --preset coop_nav_m8 --scheme mds \\
         --stragglers 2 --straggler-delay-ms 250 --verbose
     coded-marl code --scheme ldpc --n 15 --m 8
+    coded-marl sim-sweep --m 8 --straggler-delay-ms 250
 ";
 
 fn main() {
@@ -71,6 +91,7 @@ fn main() {
         "worker" => cmd_worker(),
         "code" => cmd_code(),
         "presets" => cmd_presets(),
+        "sim-sweep" => cmd_sim_sweep(),
         "help" | "--help" | "-h" | "" => {
             print!("{USAGE}");
             Ok(())
@@ -160,7 +181,90 @@ fn cmd_worker() -> Result<()> {
     };
     use coded_marl::transport::LearnerEndpoint;
     ep.send(LearnerMsg::Hello { learner_id: id })?;
-    learner_loop(ep, id, backend)
+    learner_loop(ep, id, backend, coded_marl::sim::real_clock())
+}
+
+/// Straggler sweep over schemes × k in virtual time: the full
+/// discrete-event path (sim::SimTransport + VirtualClock), synthetic
+/// model dims, no artifacts needed. Paper-scale delays cost virtual
+/// nanoseconds instead of wall seconds, so the whole grid prints in
+/// well under a second.
+fn cmd_sim_sweep() -> Result<()> {
+    use coded_marl::sim::sweep::{
+        render_table, run_sweep, simulated_total, sweep_base, write_csv, SweepConfig,
+    };
+
+    let args = Args::from_env(2)?;
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+    let env_name = args.opt("env").unwrap_or("coop_nav").to_string();
+    let env = coded_marl::env::EnvKind::parse(&env_name)
+        .with_context(|| format!("unknown --env '{env_name}'"))?;
+    let m = args.get_or("m", 8usize)?;
+    let adversaries = args.get_or("adversaries", 0usize)?;
+    let n = args.get_or("learners", 15usize)?;
+    let schemes = match args.opt("schemes") {
+        None => Scheme::ALL.to_vec(),
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                Scheme::parse(s.trim())
+                    .with_context(|| format!("unknown scheme '{s}' in --schemes"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let ks: Vec<usize> = match args.opt("stragglers-list") {
+        None => vec![0, 1, 2, 4, 7],
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .with_context(|| format!("bad straggler count '{s}' in --stragglers-list"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let delay = std::time::Duration::from_millis(args.get_or("straggler-delay-ms", 250u64)?);
+    let iterations = args.get_or("iterations", 10usize)?;
+    let mock_compute =
+        std::time::Duration::from_micros(args.get_or("mock-compute-us", 2000u64)?);
+    let seed = args.get_or("seed", 0u64)?;
+    let exponential = args.flag("straggler-exponential");
+    let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
+    args.finish()?;
+
+    let mut base = sweep_base(format!("{}_m{}", env.name(), m), n, iterations, mock_compute, seed);
+    base.straggler.exponential = exponential;
+    // Lean synthetic dims: reported times come from the compute model,
+    // not the mock's arithmetic, so small dims only cut wall cost.
+    let spec = RunSpec::synthetic(env, m, adversaries, 32, 32);
+
+    println!(
+        "sim-sweep: {} M={m} N={n} t_s={delay:?}{} compute={mock_compute:?}/update ({iterations} iters/cell, virtual time)",
+        env.name(),
+        if exponential { " (exponential)" } else { "" },
+    );
+    let t0 = std::time::Instant::now();
+    let cells = run_sweep(&SweepConfig {
+        base,
+        spec,
+        schemes,
+        ks: ks.clone(),
+        delay,
+        artifacts_dir: artifacts.into(),
+    })?;
+    print!("{}", render_table(&cells, &ks));
+    let virtual_total = simulated_total(&cells);
+    println!(
+        "\nsimulated {} of training time in {} wall-clock",
+        fmt_duration(virtual_total),
+        fmt_duration(t0.elapsed()),
+    );
+    if let Some(dir) = out_dir {
+        let path = dir.join("sim_sweep.csv");
+        write_csv(&cells, &path).with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
 }
 
 /// Pretty-print a scheme's assignment matrix and derived properties.

@@ -12,7 +12,9 @@ pub mod table;
 
 use std::io::Write;
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::sim::{real_clock, ClockRef};
 
 /// Streaming mean/variance/min/max (Welford).
 #[derive(Clone, Debug, Default)]
@@ -255,18 +257,29 @@ impl RunLog {
 }
 
 /// Scoped stopwatch: `let t = Timer::start(); ... t.elapsed()`.
-#[derive(Clone, Copy, Debug)]
+///
+/// Runs on a [`ClockRef`] so the same measurement code serves real
+/// runs (shared wall clock) and virtual-time sim runs — the controller
+/// uses [`Timer::with_clock`] with its transport's clock.
+#[derive(Clone, Debug)]
 pub struct Timer {
-    start: Instant,
+    clock: ClockRef,
+    start: Duration,
 }
 
 impl Timer {
+    /// Wall-clock stopwatch.
     pub fn start() -> Timer {
-        Timer { start: Instant::now() }
+        Timer::with_clock(&real_clock())
+    }
+
+    /// Stopwatch on an explicit clock (virtual in sim runs).
+    pub fn with_clock(clock: &ClockRef) -> Timer {
+        Timer { clock: clock.clone(), start: clock.now() }
     }
 
     pub fn elapsed(&self) -> Duration {
-        self.start.elapsed()
+        self.clock.now().saturating_sub(self.start)
     }
 }
 

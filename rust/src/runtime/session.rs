@@ -1,0 +1,177 @@
+//! The real PJRT session — the only module in the crate that touches
+//! the `xla` crate, compiled only with the `pjrt` feature (see
+//! [`super`] for the offline stub that replaces it otherwise).
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see aot.py and
+//! /opt/xla-example/README.md).
+//!
+//! Thread model: `PjRtClient` in the `xla` crate is `Rc`-based (not
+//! `Send`), so every learner thread constructs its **own** [`Session`]
+//! — compilation happens once per thread at startup, never on the
+//! iteration path.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{LearnerStepOutput, Manifest, PresetSpec};
+use crate::marl::buffer::Minibatch;
+use crate::marl::AgentParams;
+
+/// A compiled (learner_step, actor_fwd) pair for one preset.
+pub struct Session {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    learner_step: xla::PjRtLoadedExecutable,
+    actor_fwd: xla::PjRtLoadedExecutable,
+    pub spec: PresetSpec,
+}
+
+fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {:?} does not match data length {}", dims, data.len());
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &dims.iter().map(|&d| d as usize).collect::<Vec<_>>(),
+        bytes,
+    )?)
+}
+
+fn compile_hlo_text(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client
+        .compile(&comp)
+        .with_context(|| format!("XLA compile of {}", path.display()))?)
+}
+
+impl Session {
+    /// Create a CPU PJRT client and compile the preset's artifacts.
+    pub fn load(manifest: &Manifest, preset_name: &str) -> Result<Session> {
+        let client = xla::PjRtClient::cpu()?;
+        Self::load_with(client, manifest, preset_name)
+    }
+
+    pub fn load_with(
+        client: xla::PjRtClient,
+        manifest: &Manifest,
+        preset_name: &str,
+    ) -> Result<Session> {
+        let spec = manifest.preset(preset_name)?.clone();
+        let learner_step = compile_hlo_text(&client, &manifest.hlo_path(&spec.learner_step_hlo))?;
+        let actor_fwd = compile_hlo_text(&client, &manifest.hlo_path(&spec.actor_fwd_hlo))?;
+        Ok(Session { client, learner_step, actor_fwd, spec })
+    }
+
+    /// Run the MADDPG update for `agent_idx` (paper Alg. 1 lines
+    /// 21-24): returns the agent's four updated networks plus loss
+    /// diagnostics.
+    ///
+    /// `target_policies_all` is the stacked `[M, Pp]` matrix of ALL
+    /// agents' target-policy vectors (needed for the critic target).
+    pub fn learner_step(
+        &self,
+        agent_idx: usize,
+        agent: &AgentParams,
+        target_policies_all: &[f32],
+        mb: &Minibatch,
+    ) -> Result<LearnerStepOutput> {
+        let s = &self.spec;
+        let (m, b) = (s.m as i64, s.batch as i64);
+        if mb.batch != s.batch || mb.m != s.m || mb.obs_dim != s.obs_dim {
+            bail!(
+                "minibatch shape (B={}, M={}, Do={}) does not match preset {} (B={}, M={}, Do={})",
+                mb.batch, mb.m, mb.obs_dim, s.name, s.batch, s.m, s.obs_dim
+            );
+        }
+        if agent_idx >= s.m {
+            bail!("agent_idx {} out of range (M={})", agent_idx, s.m);
+        }
+        if target_policies_all.len() != s.m * s.actor_param_dim {
+            bail!("target_policies_all must be M*Pp");
+        }
+        let args: Vec<xla::Literal> = vec![
+            f32_literal(&agent.policy, &[s.actor_param_dim as i64])?,
+            f32_literal(&agent.critic, &[s.critic_param_dim as i64])?,
+            f32_literal(target_policies_all, &[m, s.actor_param_dim as i64])?,
+            f32_literal(&agent.target_critic, &[s.critic_param_dim as i64])?,
+            f32_literal(&mb.obs, &[b, m, s.obs_dim as i64])?,
+            f32_literal(&mb.act, &[b, m, s.act_dim as i64])?,
+            f32_literal(mb.rewards_of(agent_idx), &[b])?,
+            f32_literal(&mb.next_obs, &[b, m, s.obs_dim as i64])?,
+            f32_literal(&mb.done, &[b])?,
+            xla::Literal::scalar(agent_idx as i32),
+        ];
+        let result = self.learner_step.execute::<xla::Literal>(&args)?;
+        let mut tuple = result[0][0].to_literal_sync()?.decompose_tuple()?;
+        if tuple.len() != 6 {
+            bail!("learner_step returned {} outputs, expected 6", tuple.len());
+        }
+        let pg_objective = tuple.pop().unwrap().to_vec::<f32>()?[0];
+        let critic_loss = tuple.pop().unwrap().to_vec::<f32>()?[0];
+        let target_critic = tuple.pop().unwrap().to_vec::<f32>()?;
+        let target_policy = tuple.pop().unwrap().to_vec::<f32>()?;
+        let critic = tuple.pop().unwrap().to_vec::<f32>()?;
+        let policy = tuple.pop().unwrap().to_vec::<f32>()?;
+        if policy.len() != s.actor_param_dim || critic.len() != s.critic_param_dim {
+            bail!("learner_step output dims unexpected");
+        }
+        Ok(LearnerStepOutput {
+            policy,
+            critic,
+            target_policy,
+            target_critic,
+            critic_loss,
+            pg_objective,
+        })
+    }
+
+    /// Joint action selection: `policies_all` is `[M, Pp]` stacked live
+    /// policies, `obs_all` is `[M, Do]`; returns `[M, Da]` actions.
+    /// (The rollout path normally uses the native MLP — this artifact
+    /// is the numerical reference and the cross-check target.)
+    pub fn actor_fwd(&self, policies_all: &[f32], obs_all: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let m = s.m as i64;
+        if policies_all.len() != s.m * s.actor_param_dim {
+            bail!("policies_all must be M*Pp");
+        }
+        if obs_all.len() != s.m * s.obs_dim {
+            bail!("obs_all must be M*Do");
+        }
+        let args: Vec<xla::Literal> = vec![
+            f32_literal(policies_all, &[m, s.actor_param_dim as i64])?,
+            f32_literal(obs_all, &[m, s.obs_dim as i64])?,
+        ];
+        let result = self.actor_fwd.execute::<xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_shape_checks() {
+        assert!(f32_literal(&[1.0, 2.0], &[2]).is_ok());
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn f32_literal_roundtrips_values() {
+        let data = [1.5f32, -2.25, 0.0, 3.5e-3];
+        let lit = f32_literal(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data.to_vec());
+    }
+}

@@ -1,0 +1,164 @@
+//! Time virtualization: a [`Clock`] trait with a wall-clock
+//! implementation ([`RealClock`]) and a discrete-event counter
+//! ([`VirtualClock`]).
+//!
+//! Everything in the coordination layer that reads or spends time —
+//! [`crate::metrics::Timer`], the controller's collect deadline, the
+//! learner's straggler wait, the mock backend's emulated compute —
+//! goes through a [`ClockRef`] instead of touching
+//! `std::time::Instant` / `std::thread::sleep` directly. Under
+//! [`RealClock`] the behaviour is exactly the pre-sim behaviour; under
+//! [`VirtualClock`] a "sleep" is an instantaneous jump of the virtual
+//! counter, which is what lets straggler sweeps with multi-second
+//! injected delays run at hardware speed (see [`super::transport`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A monotonic time source plus the ability to spend time on it.
+///
+/// `now()` is relative to the clock's own epoch — only differences and
+/// ordering are meaningful, which is all the coordination layer ever
+/// uses (timers, deadlines, delays).
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// Time elapsed since the clock's epoch.
+    fn now(&self) -> Duration;
+
+    /// Spend `d` of this clock's time (really for [`RealClock`],
+    /// instantaneously for [`VirtualClock`]).
+    fn sleep(&self, d: Duration);
+}
+
+/// Shared handle to a clock; cheap to clone, safe to hand to threads.
+pub type ClockRef = Arc<dyn Clock>;
+
+/// Wall-clock time: `now` is `Instant`-based, `sleep` really sleeps.
+#[derive(Debug)]
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> RealClock {
+        RealClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> RealClock {
+        RealClock::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// The process-wide shared real clock (a single epoch, so durations
+/// from different components are comparable).
+pub fn real_clock() -> ClockRef {
+    static REAL: OnceLock<ClockRef> = OnceLock::new();
+    REAL.get_or_init(|| Arc::new(RealClock::new())).clone()
+}
+
+/// Discrete-event virtual time: a nanosecond counter that only moves
+/// when someone spends time on it. Deterministic — two runs that issue
+/// the same advances read the same timestamps, bit for bit.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now_ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Fresh shared virtual clock starting at t = 0.
+    pub fn shared() -> Arc<VirtualClock> {
+        Arc::new(VirtualClock::new())
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns.load(Ordering::SeqCst)
+    }
+
+    /// Move time forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.now_ns.fetch_add(duration_ns(d), Ordering::SeqCst);
+    }
+
+    /// Move time forward **to** `t` (no-op if `t` is in the past —
+    /// virtual time, like real time, never runs backwards).
+    pub fn advance_to(&self, t: Duration) {
+        self.now_ns.fetch_max(duration_ns(t), Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_ns())
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+fn duration_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotonic_and_sleeps() {
+        let c = RealClock::new();
+        let a = c.now();
+        c.sleep(Duration::from_millis(5));
+        let b = c.now();
+        assert!(b >= a + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn virtual_clock_advances_without_wall_time() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        let wall = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert_eq!(c.now(), Duration::from_secs(3600));
+        assert!(wall.elapsed() < Duration::from_secs(1), "virtual sleep must be instant");
+    }
+
+    #[test]
+    fn advance_to_is_monotone() {
+        let c = VirtualClock::new();
+        c.advance_to(Duration::from_millis(50));
+        assert_eq!(c.now(), Duration::from_millis(50));
+        c.advance_to(Duration::from_millis(20)); // in the past: no-op
+        assert_eq!(c.now(), Duration::from_millis(50));
+        c.advance_to(Duration::from_millis(80));
+        assert_eq!(c.now(), Duration::from_millis(80));
+    }
+
+    #[test]
+    fn shared_real_clock_is_one_epoch() {
+        let a = real_clock();
+        let b = real_clock();
+        let t1 = a.now();
+        let t2 = b.now();
+        assert!(t2 >= t1);
+        assert!(t2 - t1 < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,35 @@
+//! Virtual-time simulation: straggler sweeps at hardware speed.
+//!
+//! The paper's headline results (Figs. 4-5) are *average training time
+//! per iteration under injected straggler delays*. Executed in real
+//! time, every injected delay costs real wall-clock — a sweep over
+//! schemes × straggler counts with the paper's t_s = 0.25–1.5 s pays
+//! minutes of pure sleeping per configuration. This subsystem replays
+//! the identical coordination protocol in **virtual time**:
+//!
+//! * [`clock`] — the [`Clock`] abstraction: [`RealClock`] (wall time)
+//!   and [`VirtualClock`] (a deterministic nanosecond counter).
+//! * [`transport`] — [`SimTransport`], a discrete-event
+//!   [`crate::transport::ControllerTransport`]: simulated learners run
+//!   the *real* backend numerics immediately but schedule their
+//!   replies on a binary-heap event queue keyed in virtual
+//!   nanoseconds; compute time and injected delays advance the clock
+//!   instead of sleeping.
+//! * [`sweep`] — the shared sweep runner behind the `coded-marl
+//!   sim-sweep` subcommand, `examples/straggler_sweep.rs` and the
+//!   ablation bench.
+//!
+//! Select it with `TrainConfig::time_mode = TimeMode::Virtual` (CLI:
+//! `--time-mode virtual`); everything else — controller, coding,
+//! decode, metrics — is byte-for-byte the production path. Because
+//! event times are pure functions of (config, seed), virtual runs are
+//! **deterministic**: same seed ⇒ bit-identical parameters *and*
+//! timing telemetry (`rust/tests/sim_integration.rs`).
+
+pub mod clock;
+pub mod sweep;
+pub mod transport;
+
+pub use clock::{real_clock, Clock, ClockRef, RealClock, VirtualClock};
+pub use sweep::{run_sweep, simulated_total, sweep_base, SweepCell, SweepConfig};
+pub use transport::SimTransport;

@@ -1,0 +1,272 @@
+//! Straggler-sweep runner shared by the `coded-marl sim-sweep`
+//! subcommand, `examples/straggler_sweep.rs`, and the ablation bench:
+//! one short training run per (scheme, straggler count) cell, mean
+//! per-iteration time over the non-warmup iterations.
+//!
+//! The runner is time-mode agnostic — it builds pools through
+//! [`crate::coordinator::spawn_pool`], so `base.time_mode` decides
+//! whether a cell costs real wall-clock (threads + sleeps) or virtual
+//! nanoseconds (discrete events). Under `TimeMode::Virtual` a full
+//! 5-scheme × 5-k grid with the paper's t_s = 250 ms finishes in well
+//! under a second.
+
+use std::io::Write;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coding::Scheme;
+use crate::config::{Backend, TimeMode, TrainConfig};
+use crate::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
+use crate::metrics::table::Table;
+use crate::metrics::RunLog;
+
+/// A sweep grid: the cross product of `schemes` × `ks`, run on top of
+/// `base` (whose `scheme`/`straggler.k`/`straggler.delay` are
+/// overwritten per cell).
+pub struct SweepConfig {
+    pub base: TrainConfig,
+    pub spec: RunSpec,
+    pub schemes: Vec<Scheme>,
+    pub ks: Vec<usize>,
+    /// Injected delay t_s applied to every cell with k > 0.
+    pub delay: Duration,
+    /// AOT artifacts directory, used only when `base.backend` is PJRT
+    /// (mock sweeps never read it).
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+/// The baseline sweep cell config shared by the `sim-sweep` subcommand
+/// and `examples/straggler_sweep.rs`: mock backend in virtual time,
+/// one 25-step episode per iteration, and one warmup iteration on top
+/// of `iterations` measured ones. Callers tweak the returned config
+/// (e.g. `time_mode = Real` for a wall-clock reference run).
+pub fn sweep_base(
+    preset: impl Into<String>,
+    n_learners: usize,
+    iterations: usize,
+    mock_compute: Duration,
+    seed: u64,
+) -> TrainConfig {
+    let mut cfg = TrainConfig::new(preset);
+    cfg.backend = Backend::Mock;
+    cfg.time_mode = TimeMode::Virtual;
+    cfg.n_learners = n_learners;
+    cfg.iterations = iterations + 1; // +1 warmup
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 25;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = mock_compute;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Total simulated training time across cells (mean × measured
+/// iterations) — the "how much time did the sweep model" headline.
+pub fn simulated_total(cells: &[SweepCell]) -> Duration {
+    cells.iter().map(|c| c.mean_iter * c.measured_iters as u32).sum()
+}
+
+/// One (scheme, k) cell's outcome.
+pub struct SweepCell {
+    pub scheme: Scheme,
+    pub k: usize,
+    /// Mean per-iteration training time over non-warmup iterations —
+    /// the y-axis of the paper's Figs. 4-5.
+    pub mean_iter: Duration,
+    /// Mean of the collect/wait phase alone.
+    pub mean_wait: Duration,
+    /// Iterations averaged over (excludes warmup).
+    pub measured_iters: usize,
+    /// The scheme's compute redundancy (total agent-updates / M).
+    pub redundancy: f64,
+    /// Worst-case straggler tolerance of the assignment matrix.
+    pub tolerance: usize,
+}
+
+/// Mean (total, wait) over the non-warmup iterations of a run log.
+pub fn mean_non_warmup(log: &RunLog) -> (Duration, Duration, usize) {
+    let mut total = Duration::ZERO;
+    let mut wait = Duration::ZERO;
+    let mut n = 0usize;
+    for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
+        total += r.timing.total;
+        wait += r.timing.wait;
+        n += 1;
+    }
+    if n == 0 {
+        return (Duration::ZERO, Duration::ZERO, 0);
+    }
+    (total / n as u32, wait / n as u32, n)
+}
+
+/// Run the grid cell by cell; cells are independent short trainings
+/// (fresh pool, fresh controller) so a sweep is embarrassingly simple
+/// to reason about and deterministic per cell.
+pub fn run_sweep(sweep: &SweepConfig) -> Result<Vec<SweepCell>> {
+    let mut cells = Vec::with_capacity(sweep.schemes.len() * sweep.ks.len());
+    for &scheme in &sweep.schemes {
+        for &k in &sweep.ks {
+            let mut cfg = sweep.base.clone();
+            cfg.scheme = scheme;
+            cfg.straggler.k = k;
+            cfg.straggler.delay = sweep.delay;
+            let factory = backend_factory(&cfg, sweep.artifacts_dir.clone(), &sweep.spec);
+            let pool = spawn_pool(&cfg, factory)?;
+            let mut ctrl = Controller::new(cfg, sweep.spec.clone(), pool)
+                .with_context(|| format!("building controller for {scheme} k={k}"))?;
+            ctrl.train().with_context(|| format!("training cell {scheme} k={k}"))?;
+            let (mean_iter, mean_wait, measured_iters) = mean_non_warmup(&ctrl.log);
+            let redundancy = ctrl.code().redundancy();
+            let tolerance = ctrl.code().worst_case_tolerance();
+            ctrl.shutdown();
+            cells.push(SweepCell {
+                scheme,
+                k,
+                mean_iter,
+                mean_wait,
+                measured_iters,
+                redundancy,
+                tolerance,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the sweep as the schemes × k table the examples print
+/// (cells in ms, plus the scheme's redundancy and tolerance).
+pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
+    let mut headers: Vec<String> = vec!["scheme".into()];
+    headers.extend(ks.iter().map(|k| format!("k={k}")));
+    headers.push("redundancy".into());
+    headers.push("tolerance".into());
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    let mut schemes: Vec<Scheme> = Vec::new();
+    for c in cells {
+        if !schemes.contains(&c.scheme) {
+            schemes.push(c.scheme);
+        }
+    }
+    for scheme in schemes {
+        let mut row = vec![scheme.name().to_string()];
+        let mut info: Option<(f64, usize)> = None;
+        for &k in ks {
+            match cells.iter().find(|c| c.scheme == scheme && c.k == k) {
+                Some(c) => {
+                    row.push(format!("{:.1}ms", c.mean_iter.as_secs_f64() * 1e3));
+                    info = Some((c.redundancy, c.tolerance));
+                }
+                None => row.push("-".into()),
+            }
+        }
+        let (red, tol) = info.unwrap_or((f64::NAN, 0));
+        row.push(format!("{red:.1}x"));
+        row.push(tol.to_string());
+        table.row(&row);
+    }
+    table.render()
+}
+
+/// One CSV row per cell (`scheme,k,mean_iter_s,mean_wait_s,iters`).
+pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "scheme,k,mean_iter_s,mean_wait_s,iters,redundancy,tolerance")?;
+    for c in cells {
+        writeln!(
+            f,
+            "{},{},{:.6},{:.6},{},{:.3},{}",
+            c.scheme.name(),
+            c.k,
+            c.mean_iter.as_secs_f64(),
+            c.mean_wait.as_secs_f64(),
+            c.measured_iters,
+            c.redundancy,
+            c.tolerance,
+        )?;
+    }
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::EnvKind;
+
+    fn base() -> TrainConfig {
+        let mut cfg = sweep_base("synthetic", 7, 3, Duration::from_millis(2), 9);
+        cfg.episode_len = 5;
+        cfg
+    }
+
+    #[test]
+    fn sweep_base_sets_the_virtual_protocol() {
+        let cfg = base();
+        assert_eq!(cfg.time_mode, TimeMode::Virtual);
+        assert_eq!(cfg.backend, Backend::Mock);
+        assert_eq!(cfg.iterations, 4, "3 measured + 1 warmup");
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn sweep_covers_the_grid_and_orders_cells() {
+        let sweep = SweepConfig {
+            base: base(),
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Uncoded, Scheme::Mds],
+            // k = 3 is within MDS's worst-case tolerance (N−M = 3) but
+            // k = N hits every learner — both deterministic outcomes.
+            ks: vec![3, 7],
+            delay: Duration::from_millis(40),
+            artifacts_dir: "artifacts".into(),
+        };
+        let cells = run_sweep(&sweep).unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].scheme, Scheme::Uncoded);
+        assert_eq!(cells[0].k, 3);
+        assert_eq!(cells[3].scheme, Scheme::Mds);
+        assert_eq!(cells[3].k, 7);
+        assert!(cells.iter().all(|c| c.measured_iters == 3));
+        // k = N stalls every scheme for the full t_s…
+        let unc_all = &cells[1];
+        assert!(
+            unc_all.mean_iter >= Duration::from_millis(40),
+            "uncoded with all learners straggling must wait out t_s, got {:?}",
+            unc_all.mean_iter
+        );
+        // …while MDS masks k ≤ N−M regardless of which learners are hit
+        let mds_k3 = &cells[2];
+        assert!(
+            mds_k3.mean_iter < Duration::from_millis(40),
+            "MDS must mask 3 stragglers, got {:?}",
+            mds_k3.mean_iter
+        );
+        assert_eq!(mds_k3.tolerance, 3);
+        let txt = render_table(&cells, &sweep.ks);
+        assert!(txt.contains("uncoded") && txt.contains("mds"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let cells = vec![SweepCell {
+            scheme: Scheme::Mds,
+            k: 2,
+            mean_iter: Duration::from_millis(12),
+            mean_wait: Duration::from_millis(9),
+            measured_iters: 5,
+            redundancy: 2.5,
+            tolerance: 3,
+        }];
+        let dir = std::env::temp_dir().join("coded_marl_sweep_csv_test");
+        let path = dir.join("sweep.csv");
+        write_csv(&cells, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("mds,2,0.012"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,494 @@
+//! Discrete-event learner pool: a [`ControllerTransport`] whose
+//! learners are event-driven models instead of threads.
+//!
+//! ## How a task flows
+//!
+//! When the controller sends a [`CtrlMsg::Task`], the simulated
+//! learner's **numerics run immediately** (the same
+//! [`LearnerBackend`] update the threaded learner would run, so the
+//! recovered parameters are bit-compatible with a real run), but its
+//! **time cost is modeled**: the coded result is scheduled on a
+//! binary-heap event queue at
+//!
+//! ```text
+//! t_ready = now + workload · compute_per_update + injected_delay
+//! ```
+//!
+//! in virtual nanoseconds. `recv_timeout` pops the earliest event,
+//! advances the shared [`VirtualClock`] to its timestamp, and hands
+//! the controller the [`LearnerMsg::Result`] — so a sweep with
+//! 250 ms injected delays costs 250 virtual ms and ~zero wall ms.
+//!
+//! An [`CtrlMsg::Ack`] cancels the acknowledged iteration's still
+//! pending results (generation counters; lazy heap deletion), exactly
+//! like the threaded learner aborting its delay wait when the
+//! controller has already recovered θ'. If no event is pending,
+//! `recv_timeout` charges the full timeout window to virtual time so
+//! the controller's deadline arithmetic behaves as in real time.
+//!
+//! Determinism: with the mock backend the event times are pure
+//! functions of (config, seed) and ties break by send order, so two
+//! runs of the same config produce **bit-identical** results *and*
+//! timing telemetry — the property `rust/tests/sim_integration.rs`
+//! pins.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::clock::{Clock, ClockRef, VirtualClock};
+use crate::coordinator::backend::{LearnerBackend, MockBackend};
+use crate::marl::buffer::Minibatch;
+use crate::marl::ModelDims;
+use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
+
+/// A scheduled learner reply. Orders as a **min**-heap entry on
+/// (virtual time, send sequence) under `BinaryHeap`'s max-heap.
+struct Event {
+    at: Duration,
+    seq: u64,
+    learner: usize,
+    generation: u64,
+    msg: LearnerMsg,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Event) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Event) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Event) -> CmpOrdering {
+        // Reversed: the earliest event must pop first; equal times pop
+        // in send order (deterministic tie-break).
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One simulated learner: real numerics, modeled time.
+struct SimLearner {
+    /// `None` models a learner whose backend failed to construct — a
+    /// permanent erasure, mirroring the threaded pool's dead-learner
+    /// semantics (tasks are swallowed, no result ever arrives).
+    backend: Option<Box<dyn LearnerBackend>>,
+    /// Virtual time charged per agent update (the threaded mock's
+    /// `mock_compute` sleep, made instantaneous).
+    compute: Duration,
+    /// Bumped to invalidate this learner's scheduled event (on a new
+    /// Task or a covering Ack).
+    generation: u64,
+    /// Iteration of the scheduled-but-undelivered result, if any.
+    pending_iter: Option<u64>,
+}
+
+/// Event-driven [`ControllerTransport`] over a [`VirtualClock`].
+pub struct SimTransport {
+    clock: Arc<VirtualClock>,
+    learners: Vec<SimLearner>,
+    events: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl SimTransport {
+    /// `n` simulated learners with deterministic mock numerics and
+    /// `compute` virtual time per agent update (the virtual-mode
+    /// counterpart of `TrainConfig::mock_compute`).
+    pub fn new(n: usize, dims: ModelDims, compute: Duration) -> SimTransport {
+        let backends = (0..n)
+            .map(|_| Box::new(MockBackend::new(dims, Duration::ZERO)) as Box<dyn LearnerBackend>)
+            .collect();
+        SimTransport::with_backends(backends, compute)
+    }
+
+    /// Simulated learners over backends built by the caller's factory
+    /// — the same factory contract `spawn_local` honors, so tests with
+    /// instrumented or failing factories behave identically in virtual
+    /// time. A factory error makes that learner a permanent erasure
+    /// (logged, not fatal), exactly like a learner thread that dies at
+    /// startup.
+    pub fn from_factory(
+        n: usize,
+        factory: &crate::coordinator::backend::BackendFactory,
+        compute: Duration,
+    ) -> SimTransport {
+        let backends = (0..n)
+            .map(|id| match factory(id as u32) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    eprintln!(
+                        "sim learner {id}: backend construction failed: {e:#}; \
+                         treating as permanent erasure"
+                    );
+                    None
+                }
+            })
+            .collect();
+        SimTransport::assemble(backends, compute)
+    }
+
+    /// Custom backends. Their wall time is modeled by `compute`.
+    pub fn with_backends(
+        backends: Vec<Box<dyn LearnerBackend>>,
+        compute: Duration,
+    ) -> SimTransport {
+        SimTransport::assemble(backends.into_iter().map(Some).collect(), compute)
+    }
+
+    fn assemble(
+        mut backends: Vec<Option<Box<dyn LearnerBackend>>>,
+        compute: Duration,
+    ) -> SimTransport {
+        // Redirect every backend's *emulated* time spending onto a
+        // detached sink clock: its sleeps become instant and wall-free
+        // while the sim charges `compute` per update on the real event
+        // clock — no double counting, and no constructor can smuggle a
+        // really-sleeping backend into a "hardware-speed" sweep.
+        let sink: ClockRef = Arc::new(VirtualClock::new());
+        for backend in backends.iter_mut().flatten() {
+            backend.set_clock(sink.clone());
+        }
+        SimTransport {
+            clock: VirtualClock::shared(),
+            learners: backends
+                .into_iter()
+                .map(|backend| SimLearner {
+                    backend,
+                    compute,
+                    generation: 0,
+                    pending_iter: None,
+                })
+                .collect(),
+            events: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// The transport's virtual clock (also returned, type-erased, by
+    /// [`ControllerTransport::clock`]).
+    pub fn virtual_clock(&self) -> Arc<VirtualClock> {
+        Arc::clone(&self.clock)
+    }
+
+    /// Run the learner's coded update now, schedule its result at the
+    /// modeled completion time.
+    fn handle_task(
+        &mut self,
+        j: usize,
+        iter: u64,
+        row: &[f32],
+        agent_params: &[Vec<f32>],
+        minibatch: &Minibatch,
+        straggler_delay_ns: u64,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let learner = &mut self.learners[j];
+        learner.generation += 1; // a new task supersedes any pending result
+        let Some(backend) = learner.backend.as_mut() else {
+            return Ok(()); // permanent erasure: the task is swallowed
+        };
+        let p = agent_params.first().map(|v| v.len()).unwrap_or(0);
+        let mut y = vec![0.0f32; p];
+        let mut updates = 0u32;
+        for (i, &c) in row.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let theta_i = backend.update_agent(i, agent_params, minibatch)?;
+            for (acc, &v) in y.iter_mut().zip(theta_i.iter()) {
+                *acc += c * v;
+            }
+            updates += 1;
+        }
+        let compute = learner.compute * updates;
+        let at = now + compute + Duration::from_nanos(straggler_delay_ns);
+        learner.pending_iter = Some(iter);
+        let generation = learner.generation;
+        self.seq += 1;
+        self.events.push(Event {
+            at,
+            seq: self.seq,
+            learner: j,
+            generation,
+            msg: LearnerMsg::Result {
+                iter,
+                learner_id: j as u32,
+                y,
+                compute_ns: u64::try_from(compute.as_nanos()).unwrap_or(u64::MAX),
+            },
+        });
+        Ok(())
+    }
+
+    /// θ' for `iter` is recovered: the learner aborts, so its not yet
+    /// delivered result never materializes.
+    fn handle_ack(&mut self, j: usize, iter: u64) {
+        let learner = &mut self.learners[j];
+        if learner.pending_iter.is_some_and(|pending| pending <= iter) {
+            learner.generation += 1;
+            learner.pending_iter = None;
+        }
+    }
+}
+
+impl ControllerTransport for SimTransport {
+    fn n_learners(&self) -> usize {
+        self.learners.len()
+    }
+
+    fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
+        match msg {
+            CtrlMsg::Task { iter, row, agent_params, minibatch, straggler_delay_ns } => {
+                self.handle_task(learner, iter, &row, &agent_params, &minibatch, straggler_delay_ns)
+            }
+            CtrlMsg::Ack { iter } => {
+                self.handle_ack(learner, iter);
+                Ok(())
+            }
+            CtrlMsg::Shutdown | CtrlMsg::Welcome { .. } => Ok(()),
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<LearnerMsg>> {
+        let deadline = self.clock.now() + timeout;
+        while let Some(top) = self.events.peek() {
+            if top.generation != self.learners[top.learner].generation {
+                self.events.pop(); // cancelled (superseded task / acked iteration)
+                continue;
+            }
+            if top.at > deadline {
+                // The next reply lands beyond the caller's window: a
+                // real transport would time out first, so the sim must
+                // too (the event stays queued for a later call).
+                self.clock.advance_to(deadline);
+                return Ok(None);
+            }
+            let ev = self.events.pop().expect("peeked event");
+            self.clock.advance_to(ev.at);
+            self.learners[ev.learner].pending_iter = None;
+            return Ok(Some(ev.msg));
+        }
+        // Nothing in flight: the wait can only end by timeout, so the
+        // whole window elapses in virtual time.
+        self.clock.advance_to(deadline);
+        Ok(None)
+    }
+
+    fn shutdown(&mut self) {
+        self.events.clear();
+    }
+
+    fn clock(&self) -> ClockRef {
+        self.clock.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marl::AgentParams;
+    use crate::rng::Pcg32;
+
+    fn dims() -> ModelDims {
+        ModelDims { m: 3, obs_dim: 4, act_dim: 2, hidden: 8, batch: 4 }
+    }
+
+    fn task(
+        iter: u64,
+        row: Vec<f32>,
+        delay_ns: u64,
+        rng: &mut Pcg32,
+    ) -> (CtrlMsg, Vec<Vec<f32>>, Minibatch) {
+        let d = dims();
+        let params: Vec<Vec<f32>> =
+            (0..d.m).map(|_| AgentParams::init(&d, rng).to_flat()).collect();
+        let mb = Minibatch {
+            batch: d.batch,
+            m: d.m,
+            obs_dim: d.obs_dim,
+            act_dim: d.act_dim,
+            obs: rng.normal_vec_f32(d.batch * d.m * d.obs_dim, 1.0),
+            act: rng.normal_vec_f32(d.batch * d.m * d.act_dim, 1.0),
+            rew: rng.normal_vec_f32(d.m * d.batch, 1.0),
+            next_obs: rng.normal_vec_f32(d.batch * d.m * d.obs_dim, 1.0),
+            done: vec![0.0; d.batch],
+        };
+        (
+            CtrlMsg::Task {
+                iter,
+                row,
+                agent_params: Arc::new(params.clone()),
+                minibatch: Arc::new(mb.clone()),
+                straggler_delay_ns: delay_ns,
+            },
+            params,
+            mb,
+        )
+    }
+
+    #[test]
+    fn result_carries_the_coded_combination() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(2));
+        let mut rng = Pcg32::seeded(0);
+        let (msg, params, mb) = task(1, vec![2.0, 0.0, -1.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { iter, y, compute_ns, .. } = got else { panic!("want Result") };
+        assert_eq!(iter, 1);
+        // two nonzero coefficients → 2 modeled updates
+        assert_eq!(compute_ns, 4_000_000);
+        let mut be = MockBackend::new(dims(), Duration::ZERO);
+        let t0 = be.update_agent(0, &params, &mb).unwrap();
+        let t2 = be.update_agent(2, &params, &mb).unwrap();
+        for k in 0..y.len() {
+            let want = 2.0 * t0[k] - t2[k];
+            assert!((y[k] - want).abs() < 1e-5, "k={k}: {} vs {want}", y[k]);
+        }
+    }
+
+    #[test]
+    fn events_arrive_in_virtual_time_order() {
+        let mut sim = SimTransport::new(2, dims(), Duration::from_millis(10));
+        let mut rng = Pcg32::seeded(1);
+        // learner 0: 1 update + 100ms delay → ready at 110ms
+        // learner 1: 3 updates, no delay     → ready at  30ms
+        let (t0, _, _) = task(1, vec![1.0, 0.0, 0.0], 100_000_000, &mut rng);
+        let (t1, _, _) = task(1, vec![1.0, 1.0, 1.0], 0, &mut rng);
+        sim.send_to(0, t0).unwrap();
+        sim.send_to(1, t1).unwrap();
+        let first = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = first else { panic!() };
+        assert_eq!(learner_id, 1);
+        assert_eq!(sim.virtual_clock().now(), Duration::from_millis(30));
+        let second = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = second else { panic!() };
+        assert_eq!(learner_id, 0);
+        assert_eq!(sim.virtual_clock().now(), Duration::from_millis(110));
+    }
+
+    #[test]
+    fn ack_cancels_pending_result() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(1));
+        let mut rng = Pcg32::seeded(2);
+        let (msg, _, _) = task(7, vec![1.0, 0.0, 0.0], 50_000_000, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        sim.send_to(0, CtrlMsg::Ack { iter: 7 }).unwrap();
+        let quiet = sim.recv_timeout(Duration::from_millis(200)).unwrap();
+        assert!(quiet.is_none(), "acked result must not be delivered: {quiet:?}");
+        // the learner stays healthy for the next iteration
+        let (msg2, _, _) = task(8, vec![0.0, 1.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg2).unwrap();
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { iter, .. } = got else { panic!() };
+        assert_eq!(iter, 8);
+    }
+
+    #[test]
+    fn stale_ack_does_not_cancel_newer_task() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(1));
+        let mut rng = Pcg32::seeded(3);
+        let (msg, _, _) = task(5, vec![0.0, 1.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        sim.send_to(0, CtrlMsg::Ack { iter: 4 }).unwrap(); // older iteration
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { iter, .. } = got else { panic!() };
+        assert_eq!(iter, 5);
+    }
+
+    #[test]
+    fn empty_queue_times_out_in_virtual_time() {
+        let mut sim = SimTransport::new(1, dims(), Duration::ZERO);
+        let before = sim.virtual_clock().now();
+        let got = sim.recv_timeout(Duration::from_secs(7)).unwrap();
+        assert!(got.is_none());
+        assert_eq!(sim.virtual_clock().now(), before + Duration::from_secs(7));
+    }
+
+    #[test]
+    fn zero_row_completes_instantly_with_zero_vector() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(10));
+        let mut rng = Pcg32::seeded(4);
+        let (msg, params, _) = task(1, vec![0.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { y, compute_ns, .. } = got else { panic!() };
+        assert_eq!(compute_ns, 0);
+        assert_eq!(sim.virtual_clock().now(), Duration::ZERO);
+        assert_eq!(y.len(), params[0].len());
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn event_beyond_timeout_window_is_not_delivered_early() {
+        let mut sim = SimTransport::new(1, dims(), Duration::ZERO);
+        let mut rng = Pcg32::seeded(6);
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 500_000_000, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        // a 100 ms window cannot see a result due at 500 ms — exactly
+        // like a real transport, the call times out (and only the
+        // window elapses)
+        let got = sim.recv_timeout(Duration::from_millis(100)).unwrap();
+        assert!(got.is_none(), "result delivered before its time: {got:?}");
+        assert_eq!(sim.virtual_clock().now(), Duration::from_millis(100));
+        // a later, wide-enough window delivers it at its due time
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert!(matches!(got, Some(LearnerMsg::Result { iter: 1, .. })), "{got:?}");
+        assert_eq!(sim.virtual_clock().now(), Duration::from_millis(500));
+    }
+
+    #[test]
+    fn failing_factory_backend_is_a_permanent_erasure() {
+        use crate::coordinator::backend::BackendFactory;
+        let d = dims();
+        let factory: Arc<BackendFactory> = Arc::new(move |id| {
+            if id == 0 {
+                anyhow::bail!("injected: learner 0 crashed at startup");
+            }
+            Ok(Box::new(MockBackend::new(d, Duration::ZERO)) as Box<dyn LearnerBackend>)
+        });
+        let mut sim = SimTransport::from_factory(2, &factory, Duration::from_millis(1));
+        let mut rng = Pcg32::seeded(7);
+        for j in 0..2 {
+            let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+            sim.send_to(j, msg).unwrap();
+        }
+        // only the healthy learner replies…
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = got else { panic!() };
+        assert_eq!(learner_id, 1);
+        // …and the dead one never does
+        let quiet = sim.recv_timeout(Duration::from_millis(50)).unwrap();
+        assert!(quiet.is_none(), "dead learner produced a result: {quiet:?}");
+    }
+
+    #[test]
+    fn equal_times_pop_in_send_order() {
+        let mut sim = SimTransport::new(3, dims(), Duration::from_millis(5));
+        let mut rng = Pcg32::seeded(5);
+        for j in [2usize, 0, 1] {
+            let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+            sim.send_to(j, msg).unwrap();
+        }
+        let mut order = Vec::new();
+        for _ in 0..3 {
+            let LearnerMsg::Result { learner_id, .. } =
+                sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap()
+            else {
+                panic!()
+            };
+            order.push(learner_id);
+        }
+        assert_eq!(order, vec![2, 0, 1], "ties must break by send order");
+    }
+}

@@ -92,6 +92,16 @@ impl LearnerEndpoint for LocalLearner {
         }
     }
 
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<CtrlMsg>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("controller channel closed"))
+            }
+        }
+    }
+
     fn send(&mut self, msg: LearnerMsg) -> Result<()> {
         self.tx.send(msg).map_err(|_| anyhow!("controller result channel closed"))
     }

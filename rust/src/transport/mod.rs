@@ -1,6 +1,6 @@
 //! Controller ⇄ learner transports.
 //!
-//! Two implementations with identical semantics (DESIGN.md §2):
+//! Three implementations with identical semantics (DESIGN.md §2):
 //!
 //! * [`local`] — learners are threads in the controller process,
 //!   connected by `std::sync::mpsc` channels. Default for tests and
@@ -9,9 +9,23 @@
 //! * [`tcp`] — learners are separate worker processes (`coded-marl
 //!   worker`) on localhost/TCP using the length-prefixed [`wire`]
 //!   format; exercises real sockets and serialization.
+//! * [`crate::sim::SimTransport`] — learners are discrete-event models
+//!   driven from the controller thread; injected straggler delays and
+//!   emulated compute advance a [`crate::sim::VirtualClock`] instead of
+//!   sleeping, so sweeps run at hardware speed.
 //!
 //! The controller drives N learners through [`ControllerTransport`];
 //! each learner loop talks through a [`LearnerEndpoint`].
+//!
+//! ## Clock threading
+//!
+//! A transport owns its **time domain**: [`ControllerTransport::clock`]
+//! hands the controller the clock that its timers, deadlines and phase
+//! measurements must run on. The thread/socket transports live in real
+//! time (the default impl returns the shared [`crate::sim::RealClock`]);
+//! the sim transport returns its virtual clock, which only the event
+//! loop advances. Constructing a controller on a transport therefore
+//! picks up the right time semantics automatically.
 
 pub mod local;
 pub mod msg;
@@ -23,6 +37,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 pub use msg::{CtrlMsg, LearnerMsg};
+
+use crate::sim::{real_clock, ClockRef};
 
 /// Controller-side view of the learner pool.
 pub trait ControllerTransport {
@@ -46,6 +62,14 @@ pub trait ControllerTransport {
     /// Broadcast Shutdown and release resources (joins threads /
     /// closes sockets).
     fn shutdown(&mut self);
+
+    /// The clock this transport's timing lives on. Real transports run
+    /// on the shared wall clock; the sim transport returns its
+    /// [`crate::sim::VirtualClock`] so the controller measures virtual
+    /// time.
+    fn clock(&self) -> ClockRef {
+        real_clock()
+    }
 }
 
 /// Learner-side endpoint.
@@ -56,6 +80,13 @@ pub trait LearnerEndpoint {
     /// Non-blocking poll (used to notice Acks mid-computation,
     /// Alg. 1 line 20).
     fn try_recv(&mut self) -> Result<Option<CtrlMsg>>;
+
+    /// Blocking receive with a deadline: returns Ok(None) once
+    /// `timeout` elapses with no message. This is what lets the
+    /// learner serve an injected straggler delay as a **single**
+    /// interruptible wait on the control channel instead of a
+    /// chunked-sleep poll loop.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<CtrlMsg>>;
 
     /// Send a message to the controller.
     fn send(&mut self, msg: LearnerMsg) -> Result<()>;

@@ -184,6 +184,16 @@ impl LearnerEndpoint for TcpLearner {
         }
     }
 
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<CtrlMsg>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("controller disconnected"))
+            }
+        }
+    }
+
     fn send(&mut self, msg: LearnerMsg) -> Result<()> {
         msg.encode().write_frame(&mut self.stream)
     }

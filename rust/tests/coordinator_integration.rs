@@ -363,7 +363,13 @@ fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// The PJRT tests need both the `pjrt` feature (the stub Session fails
+/// at load otherwise) and the AOT artifacts on disk.
 fn have_artifacts() -> bool {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return false;
+    }
     artifacts_dir().join("manifest.json").exists()
 }
 

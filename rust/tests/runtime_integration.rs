@@ -16,6 +16,10 @@ fn artifacts_dir() -> std::path::PathBuf {
 }
 
 fn try_session(preset: &str) -> Option<(Manifest, Session)> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
         return None;

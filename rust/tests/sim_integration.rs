@@ -1,0 +1,240 @@
+//! Integration tests for the virtual-time simulation subsystem:
+//!
+//! 1. **Determinism** — same seed + config ⇒ bit-identical parameters
+//!    *and* bit-identical per-iteration timing telemetry across two
+//!    virtual runs (virtual time is a pure function of the config).
+//! 2. **Fidelity** — a virtual run reports the same per-iteration
+//!    training-time means a real-time run of the identical config
+//!    measures (within scheduling noise), while spending a small
+//!    fraction of the wall-clock.
+//!
+//! Together these are what make the sim trustworthy for the paper's
+//! Figs. 4-5 style sweeps at full t_s without paying t_s.
+
+use std::time::{Duration, Instant};
+
+use coded_marl::coding::Scheme;
+use coded_marl::config::{Backend, StragglerConfig, TimeMode, TrainConfig};
+use coded_marl::coordinator::{
+    backend_factory, run_centralized_with, run_training_with, spawn_pool, Controller,
+    MockBackend, RunSpec,
+};
+use coded_marl::env::EnvKind;
+use coded_marl::marl::AgentParams;
+use coded_marl::metrics::RunLog;
+
+fn spec() -> RunSpec {
+    RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4)
+}
+
+fn cfg(scheme: Scheme, time_mode: TimeMode, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("synthetic");
+    cfg.backend = Backend::Mock;
+    cfg.time_mode = time_mode;
+    cfg.scheme = scheme;
+    cfg.n_learners = 7;
+    cfg.iterations = 7;
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 8;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = Duration::from_millis(2);
+    cfg.seed = seed;
+    cfg
+}
+
+fn train(cfg: &TrainConfig) -> (Vec<AgentParams>, RunLog) {
+    let run_spec = spec();
+    let factory = backend_factory(cfg, "unused", &run_spec);
+    let pool = spawn_pool(cfg, factory).unwrap();
+    let mut ctrl = Controller::new(cfg.clone(), run_spec, pool).unwrap();
+    ctrl.train().unwrap();
+    let agents = ctrl.agents().to_vec();
+    let log = std::mem::take(&mut ctrl.log);
+    ctrl.shutdown();
+    (agents, log)
+}
+
+fn max_param_diff(a: &[AgentParams], b: &[AgentParams]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.max_abs_diff(y)).fold(0.0, f32::max)
+}
+
+/// The same statistic `sim-sweep` reports (so the fidelity test pins
+/// exactly what users read off the sweep tables).
+fn mean_non_warmup_total(log: &RunLog) -> Duration {
+    let (total, _wait, n) = coded_marl::sim::sweep::mean_non_warmup(log);
+    assert!(n > 0, "run produced no measured iterations");
+    total
+}
+
+/// Same seed ⇒ the *entire* virtual run replays bit-for-bit: recovered
+/// parameters, rewards, straggler draws, and — the part real time can
+/// never promise — the per-iteration timing telemetry itself.
+#[test]
+fn virtual_runs_are_bit_identical() {
+    let mut c = cfg(Scheme::Mds, TimeMode::Virtual, 42);
+    c.straggler = StragglerConfig::fixed(2, Duration::from_millis(100));
+    let (params_a, log_a) = train(&c);
+    let (params_b, log_b) = train(&c);
+    assert_eq!(max_param_diff(&params_a, &params_b), 0.0, "parameters must replay exactly");
+    assert_eq!(log_a.len(), log_b.len());
+    for (x, y) in log_a.records.iter().zip(log_b.records.iter()) {
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "iter {}", x.iter);
+        assert_eq!(x.timing.total, y.timing.total, "iter {}: total diverged", x.iter);
+        assert_eq!(x.timing.wait, y.timing.wait, "iter {}: wait diverged", x.iter);
+        assert_eq!(x.results_used, y.results_used, "iter {}", x.iter);
+        assert_eq!(x.stragglers, y.stragglers, "iter {}", x.iter);
+        assert_eq!(x.decode_method, y.decode_method, "iter {}", x.iter);
+    }
+    assert_eq!(log_a.mean_iter_time(), log_b.mean_iter_time());
+    // and a different seed must not replay
+    let c2 = {
+        let mut c2 = c.clone();
+        c2.seed = 43;
+        c2
+    };
+    let (params_c, _) = train(&c2);
+    assert!(max_param_diff(&params_a, &params_c) > 0.0, "different seeds must differ");
+}
+
+/// Virtual time is a *model*, so pin it against reality: with a
+/// delay-dominated config (every learner straggles by t_s each
+/// iteration, so timing is deterministic up to scheduling noise), the
+/// virtual per-iteration mean must match a real-time run within a few
+/// percent — while finishing in a fraction of its wall-clock.
+#[test]
+fn virtual_mean_iteration_time_matches_real_run() {
+    let delay = Duration::from_millis(120);
+    let mut real = cfg(Scheme::Uncoded, TimeMode::Real, 7);
+    real.n_learners = 5;
+    real.mock_compute = Duration::from_millis(1);
+    real.straggler = StragglerConfig::fixed(5, delay); // k = N: no sampling luck
+    let mut virt = real.clone();
+    virt.time_mode = TimeMode::Virtual;
+
+    let run_spec = spec();
+    let real_factory = backend_factory(&real, "unused", &run_spec);
+    let virt_factory = backend_factory(&virt, "unused", &run_spec);
+    let wall = Instant::now();
+    let real_log = run_training_with(&real, run_spec.clone(), real_factory).unwrap();
+    let real_wall = wall.elapsed();
+    let wall = Instant::now();
+    let virt_log = run_training_with(&virt, run_spec.clone(), virt_factory).unwrap();
+    let virt_wall = wall.elapsed();
+
+    let real_mean = mean_non_warmup_total(&real_log);
+    let virt_mean = mean_non_warmup_total(&virt_log);
+    // every measured iteration pays t_s + one modeled update
+    assert!(virt_mean >= delay, "virtual mean {virt_mean:?} must include t_s");
+    // Tolerance budgets for loaded CI runners: ~12 ms of mean sleep
+    // overshoot on a 121 ms iteration before this trips (a quiet
+    // machine lands well under 1%).
+    let rel = (virt_mean.as_secs_f64() - real_mean.as_secs_f64()).abs() / real_mean.as_secs_f64();
+    assert!(
+        rel < 0.10,
+        "virtual mean {virt_mean:?} vs real mean {real_mean:?}: {:.1}% apart",
+        rel * 100.0
+    );
+    // The whole point: the same measurement at a fraction of the
+    // wall-clock. Real spends ≥ 0.7 s sleeping; virtual does a handful
+    // of small mock updates — 3× is a deliberately loose floor.
+    assert!(
+        virt_wall < real_wall / 3,
+        "virtual run took {virt_wall:?}, real took {real_wall:?} — expected ≥3× compression"
+    );
+}
+
+/// The numerics are the production path, not a model: a virtual run
+/// recovers exactly the parameters the threaded real-time run does
+/// (uncoded ⇒ unique decode subset ⇒ bitwise comparison is fair).
+#[test]
+fn virtual_and_real_runs_agree_on_parameters() {
+    let c_real = cfg(Scheme::Uncoded, TimeMode::Real, 11);
+    let c_virt = cfg(Scheme::Uncoded, TimeMode::Virtual, 11);
+    let (params_real, log_real) = train(&c_real);
+    let (params_virt, log_virt) = train(&c_virt);
+    assert_eq!(
+        max_param_diff(&params_real, &params_virt),
+        0.0,
+        "virtual training must recover the exact real-run parameters"
+    );
+    for (r, v) in log_real.records.iter().zip(log_virt.records.iter()) {
+        assert_eq!(r.reward.to_bits(), v.reward.to_bits(), "iter {}: rollouts diverged", r.iter);
+    }
+}
+
+/// Coded schemes in virtual time: stragglers within tolerance are
+/// masked (the wait never includes t_s), beyond tolerance they stall
+/// for exactly t_s — the crossover structure behind Figs. 4-5, read
+/// directly off virtual timing telemetry.
+#[test]
+fn virtual_timing_reproduces_masking_and_stalls() {
+    let delay = Duration::from_millis(200);
+    // MDS over N=7, M=4 tolerates 3 stragglers
+    let mut masked = cfg(Scheme::Mds, TimeMode::Virtual, 23);
+    masked.straggler = StragglerConfig::fixed(3, delay);
+    let (_, log) = train(&masked);
+    for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
+        assert!(
+            r.timing.wait < delay,
+            "iter {}: MDS must mask 3/7 stragglers (waited {:?})",
+            r.iter,
+            r.timing.wait
+        );
+    }
+    // uncoded tolerates none: any straggler on an active learner stalls
+    let mut stalled = cfg(Scheme::Uncoded, TimeMode::Virtual, 23);
+    stalled.straggler = StragglerConfig::fixed(7, delay); // k = N
+    let (_, log) = train(&stalled);
+    for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
+        assert!(
+            r.timing.wait >= delay,
+            "iter {}: uncoded with all learners straggling must stall (waited {:?})",
+            r.iter,
+            r.timing.wait
+        );
+    }
+}
+
+/// The centralized baseline also runs in virtual time: its sequential
+/// M-agent update is charged exactly M × mock_compute per iteration on
+/// the virtual clock, at ~zero wall cost.
+#[test]
+fn centralized_baseline_runs_in_virtual_time() {
+    let mut c = cfg(Scheme::Mds, TimeMode::Virtual, 31);
+    c.mock_compute = Duration::from_millis(5);
+    let run_spec = spec();
+    let backend = Box::new(MockBackend::new(run_spec.dims, c.mock_compute));
+    let wall = Instant::now();
+    let log = run_centralized_with(&c, run_spec, backend).unwrap();
+    let wall = wall.elapsed();
+    for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
+        assert_eq!(
+            r.timing.wait,
+            Duration::from_millis(20), // M=4 agents × 5 ms, exactly
+            "iter {}: modeled compute must be charged virtually",
+            r.iter
+        );
+    }
+    assert!(
+        wall < Duration::from_secs(2),
+        "virtual centralized run must not sleep for real ({wall:?})"
+    );
+}
+
+/// Virtual warmup iterations spend no virtual time (no learner round),
+/// and measured iterations do — the RunLog carries virtual durations
+/// end to end.
+#[test]
+fn virtual_runlog_semantics() {
+    let mut c = cfg(Scheme::Mds, TimeMode::Virtual, 51);
+    c.straggler = StragglerConfig::fixed(1, Duration::from_millis(40));
+    let (_, log) = train(&c);
+    let warmup = &log.records[0];
+    assert_eq!(warmup.decode_method, "warmup");
+    assert_eq!(warmup.timing.total, Duration::ZERO, "warmup must cost zero virtual time");
+    for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
+        assert!(r.timing.total >= r.timing.wait);
+        assert!(r.timing.wait > Duration::ZERO, "iter {}: compute must be charged", r.iter);
+        assert!(r.results_used >= 4);
+    }
+}

@@ -156,6 +156,10 @@ fn tcp_training_matches_local_training() {
 /// finite.
 #[test]
 fn tcp_pjrt_full_stack_trains() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature (workers would fail to load XLA)");
+        return;
+    }
     if !have_artifacts() {
         eprintln!("skipping: run `make artifacts` first");
         return;
