@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .map(|&j| {
                 let mut y = vec![0.0f32; p];
-                for (i, c) in code.assignments(j) {
+                for &(i, c) in code.assignments(j) {
                     for (acc, &t) in y.iter_mut().zip(&theta[i]) {
                         *acc += c as f32 * t;
                     }

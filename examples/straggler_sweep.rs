@@ -45,6 +45,9 @@ fn main() -> anyhow::Result<()> {
     // `--ts-ms 25` for the old interactive 1/10 scale.
     let t_s = Duration::from_millis(args.get_or("ts-ms", 250u64)?);
     let iterations = args.get_or("iterations", 10usize)?;
+    // Virtual-time cells shard across threads (0 = all cores); real
+    // mode ignores this and runs serially.
+    let sweep_threads = args.get_or("sweep-threads", 0usize)?;
     args.finish()?;
 
     let m = 8;
@@ -57,6 +60,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = sweep_base("coop_nav_m8", n, iterations, Duration::from_millis(10), 3);
     cfg.time_mode = time_mode;
     cfg.backend = backend;
+    cfg.sweep_threads = sweep_threads;
 
     // Small synthetic model dims: the mock's *reported* time is the
     // modeled mock_compute, not its actual arithmetic, so lean dims

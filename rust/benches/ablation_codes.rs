@@ -155,7 +155,7 @@ fn ablation_pm_sweep() {
             format!("{:.2}", random_set_decode_probability(&code, 3, 400, &mut rng)),
             format!("{:.2}", random_set_decode_probability(&code, 5, 400, &mut rng)),
             format!("{:.2}", random_set_decode_probability(&code, 7, 400, &mut rng)),
-            (code.c.rank(coded_marl::coding::RANK_TOL) == 8).to_string(),
+            (code.matrix().rank(coded_marl::coding::RANK_TOL) == 8).to_string(),
         ]);
     }
     print!("{}", table.render());
@@ -177,7 +177,7 @@ fn ablation_decode_methods() {
             .iter()
             .map(|&j| {
                 let mut y = vec![0.0f32; p];
-                for (i, c) in code.assignments(j) {
+                for &(i, c) in code.assignments(j) {
                     for (acc, &t) in y.iter_mut().zip(&theta[i]) {
                         *acc += c as f32 * t;
                     }

@@ -4,11 +4,17 @@
 //! least-squares paths are O(M³ + M²).
 //!
 //! Sweeps scheme × decode method × parameter length P and prints
-//! ns/parameter so the crossover structure is visible. Also times the
-//! learner-side encode (y_j accumulation).
+//! ns/parameter so the crossover structure is visible. Decodes are
+//! timed **cold** (fresh decoder: rank check + factorization + apply)
+//! and **warm** (decode-plan cache hit: apply only) — the gap is what
+//! the plan cache buys on every repeated erasure pattern. Also times
+//! the learner-side encode (y_j accumulation), and writes the whole
+//! record to `BENCH_decode_micro.json` (in `CODED_MARL_BENCH_DIR`, or
+//! the working directory) so the perf trajectory is tracked across PRs.
 //!
 //!     cargo bench --bench decode_micro
 
+use std::io::Write;
 use std::time::{Duration, Instant};
 
 use coded_marl::coding::decoder::{DecodeMethod, Decoder};
@@ -16,11 +22,53 @@ use coded_marl::coding::{Code, CodeParams, Scheme};
 use coded_marl::metrics::table::{fmt_duration, Table};
 use coded_marl::rng::Pcg32;
 
+/// One measured decode configuration, serialized to the bench JSON.
+struct Record {
+    scheme: &'static str,
+    method: String,
+    m: usize,
+    p: usize,
+    cold: Duration,
+    warm: Duration,
+    erasures: usize,
+}
+
+fn write_bench_json(records: &[Record]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var("CODED_MARL_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join("BENCH_decode_micro.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"decode_micro\",")?;
+    writeln!(f, "  \"records\": [")?;
+    for (i, r) in records.iter().enumerate() {
+        let comma = if i + 1 == records.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"scheme\": \"{}\", \"method\": \"{}\", \"m\": {}, \"p\": {}, \
+             \"cold_s\": {:.9}, \"warm_s\": {:.9}, \"erasures\": {}}}{comma}",
+            r.scheme,
+            r.method,
+            r.m,
+            r.p,
+            r.cold.as_secs_f64(),
+            r.warm.as_secs_f64(),
+            r.erasures,
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    f.flush()?;
+    Ok(path)
+}
+
 fn encode(code: &Code, theta: &[Vec<f32>], rows: &[usize]) -> Vec<Vec<f32>> {
     rows.iter()
         .map(|&j| {
             let mut y = vec![0.0f32; theta[0].len()];
-            for (i, c) in code.assignments(j) {
+            for &(i, c) in code.assignments(j) {
                 for (acc, &t) in y.iter_mut().zip(theta[i].iter()) {
                     *acc += c as f32 * t;
                 }
@@ -46,16 +94,18 @@ fn time_median<F: FnMut()>(mut f: F, reps: usize) -> Duration {
 fn main() {
     let n = 15;
     println!("=== decode microbench: N={n}, erasures = worst-case tolerance ===");
+    println!("(cold = fresh decoder: rank check + factorization + apply;");
+    println!(" warm = decode-plan cache hit on the same erasure pattern: apply only)");
     // P values spanning quickstart (≈23k) to coop_nav_m10 (≈86k)
     let ps = [1_000usize, 10_000, 58_502, 100_000];
+    let mut records: Vec<Record> = Vec::new();
     for m in [8usize, 10] {
         println!("\n--- M = {m} ---");
         let mut table = Table::new(&[
-            "scheme", "method", "P", "decode", "ns/param", "erasures",
+            "scheme", "method", "P", "cold", "warm", "warm ns/param", "erasures",
         ]);
         for scheme in Scheme::ALL {
             let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: 1 });
-            let decoder = Decoder::new(code.clone());
             let drop = code.worst_case_tolerance();
             let received: Vec<usize> = (drop..n).collect();
             for &p in &ps {
@@ -69,22 +119,46 @@ fn main() {
                     {
                         continue;
                     }
-                    let dt = time_median(
+                    // Cold: a fresh decoder per call, so every decode
+                    // pays the full plan construction.
+                    let cold = time_median(
+                        || {
+                            let dec = Decoder::new(code.clone());
+                            let out = dec.decode(&received, &results, method).unwrap();
+                            std::hint::black_box(&out.theta);
+                        },
+                        5,
+                    );
+                    // Warm: one decoder, plan primed — repeated erasure
+                    // patterns take this path in a real run.
+                    let decoder = Decoder::new(code.clone());
+                    let out = decoder.decode(&received, &results, method).unwrap();
+                    let label = out.method;
+                    let warm = time_median(
                         || {
                             let out = decoder.decode(&received, &results, method).unwrap();
                             std::hint::black_box(&out.theta);
                         },
                         5,
                     );
-                    let label = decoder.decode(&received, &results, method).unwrap().method;
                     table.row(&[
                         scheme.name().to_string(),
                         label.to_string(),
                         p.to_string(),
-                        fmt_duration(dt),
-                        format!("{:.1}", dt.as_nanos() as f64 / (p as f64 * m as f64)),
+                        fmt_duration(cold),
+                        fmt_duration(warm),
+                        format!("{:.1}", warm.as_nanos() as f64 / (p as f64 * m as f64)),
                         drop.to_string(),
                     ]);
+                    records.push(Record {
+                        scheme: scheme.name(),
+                        method: label.to_string(),
+                        m,
+                        p,
+                        cold,
+                        warm,
+                        erasures: drop,
+                    });
                 }
             }
         }
@@ -115,9 +189,13 @@ fn main() {
         ]);
     }
     print!("{}", table.render());
+    match write_bench_json(&records) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write BENCH_decode_micro.json: {e}"),
+    }
     println!(
         "\nExpected: peeling is ~M× cheaper than QR per parameter and its gap widens with M;\n\
-         QR cost per parameter is flat in P (back-substitution dominates) while peeling's\n\
-         ns/param approaches a pure memcpy."
+         warm (plan-cached) least-squares decodes drop the factorization and rank check and\n\
+         approach the pure W·Y apply; peeling's ns/param approaches a pure memcpy."
     );
 }

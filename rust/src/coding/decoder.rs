@@ -14,12 +14,38 @@
 //!   O(M³), the paper's §III-C4 claim
 //! * [`DecodeMethod::Auto`]            — peeling when the code is
 //!   binary and the erasure pattern peels; QR otherwise
+//!
+//! ## Decode-plan caching
+//!
+//! The least-squares paths split into a *plan* (the M×|I| weight
+//! matrix `W` — QR factorization or normal equations on the small code
+//! submatrix `C_I`) and an *apply* (`Θ = W·Y`, |I|·M f32 axpys over
+//! the large results). The plan depends only on the **set** of
+//! received learners, and with a fixed straggler count that set
+//! repeats constantly — so the decoder memoizes plans in a bounded LRU
+//! keyed by the received-learner bitset. A hit skips the rank check
+//! and the factorization entirely and pays only the apply. Plans are
+//! computed on the *sorted* received set and applied through a
+//! permutation, so the recovered Θ is bit-identical regardless of
+//! arrival order and regardless of whether the plan came from the
+//! cache or a fresh factorization ([`Decoder::plan_cache_stats`]
+//! exposes the hit/miss counters the sweep telemetry reports).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use super::ldpc::BinaryStructure;
 use super::Code;
 use crate::linalg::{Mat, QrFactor};
+
+/// Decode plans kept per decoder (LRU). Each plan is an M×|I| f64
+/// matrix — ~64 KB at N = 1000, M = 8 (8·1000·8 bytes) — so a full
+/// cache tops out around 4 MB per controller at that scale, and far
+/// less at paper scale. Scale the capacity DOWN before raising M or N
+/// by orders of magnitude.
+const PLAN_CACHE_CAPACITY: usize = 64;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DecodeMethod {
@@ -59,21 +85,79 @@ pub struct DecodeOutput {
     pub method: &'static str,
 }
 
+/// Hit/miss telemetry of the decode-plan cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Decodes served from a memoized weight matrix (no factorization).
+    pub hits: u64,
+    /// Decodes that had to factorize (then populated the cache).
+    pub misses: u64,
+    /// Plans currently resident.
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    /// Fraction of least-squares decodes served from the cache (0.0
+    /// when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Cache key: which least-squares path, over which received set.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    /// 0 = QR, 1 = normal equations (their weight matrices differ).
+    path: u8,
+    /// Bitset over learner ids.
+    bits: Vec<u64>,
+}
+
+struct CachedPlan {
+    w: Arc<Mat>,
+    /// Monotone LRU stamp (refreshed on every hit).
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct PlanCache {
+    map: HashMap<PlanKey, CachedPlan>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
 /// Decoder bound to one code. Pre-extracts the binary structure so the
-/// per-iteration hot path does no re-analysis.
+/// per-iteration hot path does no re-analysis, and memoizes
+/// least-squares decode plans per erasure pattern (see module docs).
 pub struct Decoder {
     code: Code,
     binary: Option<BinaryStructure>,
+    /// Mutex (not RefCell) so a decoder can live inside structures that
+    /// cross threads — e.g. sweep cells on the shard pool. Uncontended
+    /// in practice: one controller owns one decoder.
+    plans: Mutex<PlanCache>,
 }
 
 impl Decoder {
     pub fn new(code: Code) -> Self {
         let binary = BinaryStructure::from_matrix(&code.c);
-        Decoder { code, binary }
+        Decoder { code, binary, plans: Mutex::new(PlanCache::default()) }
     }
 
     pub fn code(&self) -> &Code {
         &self.code
+    }
+
+    /// Decode-plan cache counters (hits/misses/resident plans).
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        let cache = self.plans.lock().expect("plan cache poisoned");
+        PlanCacheStats { hits: cache.hits, misses: cache.misses, entries: cache.map.len() }
     }
 
     /// Recover Θ' from results of learners `received` (parallel arrays:
@@ -137,42 +221,125 @@ impl Decoder {
     /// over ~megabytes of f64), so instead we compute the tiny M×|I|
     /// pseudo-inverse `W = R⁻¹Qᵀ` once per erasure pattern and apply
     /// `Θ = W·Y` as |I|·M sequential f32 axpys over the results —
-    /// ~5-10× faster at paper scale (EXPERIMENTS.md §Perf).
+    /// ~5-10× faster at paper scale. Repeated erasure patterns skip the
+    /// factorization entirely via the plan cache (EXPERIMENTS.md §Perf).
     fn decode_qr(&self, received: &[usize], results: &[Vec<f32>], p: usize) -> Result<DecodeOutput> {
-        self.check_decodable(received)?;
-        let ci = self.code.c.select_rows(received);
-        let factor = QrFactor::new(&ci);
-        let w = factor.solve(&Mat::identity(received.len()));
-        Ok(DecodeOutput { theta: apply_weights(&w, results, p), method: "qr" })
+        let order = sorted_order(received);
+        let w = self.weights(received, &order, 0)?;
+        Ok(DecodeOutput { theta: apply_weights(&w, results, &order, p), method: "qr" })
     }
 
     /// The paper's Eq. (2) literally — same weight-matrix reorganization
-    /// with `W = (C_IᵀC_I)⁻¹C_Iᵀ` from Cholesky.
+    /// with `W = (C_IᵀC_I)⁻¹C_Iᵀ` from Cholesky, also plan-cached.
     fn decode_ne(&self, received: &[usize], results: &[Vec<f32>], p: usize) -> Result<DecodeOutput> {
-        self.check_decodable(received)?;
-        let ci = self.code.c.select_rows(received);
-        let ct = ci.transpose();
-        let Some(w) = crate::linalg::cholesky_solve(&ct.matmul(&ci), &ct) else {
-            bail!("normal equations: CᵀC not positive definite (ill-conditioned C_I)");
-        };
-        Ok(DecodeOutput { theta: apply_weights(&w, results, p), method: "normal_equations" })
+        let order = sorted_order(received);
+        let w = self.weights(received, &order, 1)?;
+        Ok(DecodeOutput {
+            theta: apply_weights(&w, results, &order, p),
+            method: "normal_equations",
+        })
     }
+
+    /// The decode plan for `received`: memoized M×|I| weight matrix for
+    /// the requested path (0 = QR, 1 = normal equations).
+    ///
+    /// Plans are keyed by the received *set* and factored on the sorted
+    /// row order, so any arrival order of the same set shares one plan
+    /// (and one rank check). A duplicate learner id in `received`
+    /// bypasses the cache — the set key cannot represent multiplicity.
+    fn weights(&self, received: &[usize], order: &[usize], path: u8) -> Result<Arc<Mat>> {
+        let key = self.plan_key(received, path);
+        if let Some(key) = &key {
+            let mut guard = self.plans.lock().expect("plan cache poisoned");
+            let cache = &mut *guard; // split-borrow fields through the guard
+            cache.tick += 1;
+            if let Some(plan) = cache.map.get_mut(key) {
+                plan.stamp = cache.tick;
+                cache.hits += 1;
+                return Ok(Arc::clone(&plan.w));
+            }
+        }
+        // Miss (or uncacheable): factorize outside the lock. Two racing
+        // misses both compute the same deterministic W; last insert wins.
+        let sorted: Vec<usize> = order.iter().map(|&r| received[r]).collect();
+        self.check_decodable(&sorted)?;
+        let ci = self.code.c.select_rows(&sorted);
+        let w = match path {
+            0 => QrFactor::new(&ci).solve(&Mat::identity(sorted.len())),
+            _ => {
+                let ct = ci.transpose();
+                let Some(w) = crate::linalg::cholesky_solve(&ct.matmul(&ci), &ct) else {
+                    bail!("normal equations: CᵀC not positive definite (ill-conditioned C_I)");
+                };
+                w
+            }
+        };
+        let w = Arc::new(w);
+        if let Some(key) = key {
+            let mut cache = self.plans.lock().expect("plan cache poisoned");
+            cache.misses += 1;
+            cache.tick += 1;
+            if cache.map.len() >= PLAN_CACHE_CAPACITY && !cache.map.contains_key(&key) {
+                // Evict the least-recently-used plan (O(capacity) scan —
+                // capacity is small and eviction is off the common path).
+                if let Some(oldest) =
+                    cache.map.iter().min_by_key(|(_, p)| p.stamp).map(|(k, _)| k.clone())
+                {
+                    cache.map.remove(&oldest);
+                }
+            }
+            let stamp = cache.tick;
+            cache.map.insert(key, CachedPlan { w: Arc::clone(&w), stamp });
+        }
+        Ok(w)
+    }
+
+    /// Bitset key over learner ids; None when `received` contains an
+    /// out-of-range or duplicate id (duplicates fall through to a
+    /// direct, uncached solve — sets cannot carry multiplicity).
+    fn plan_key(&self, received: &[usize], path: u8) -> Option<PlanKey> {
+        let words = self.code.n.div_ceil(64);
+        let mut bits = vec![0u64; words];
+        for &j in received {
+            if j >= self.code.n {
+                return None;
+            }
+            let (w, b) = (j / 64, j % 64);
+            if (bits[w] >> b) & 1 == 1 {
+                return None; // duplicate
+            }
+            bits[w] |= 1 << b;
+        }
+        Some(PlanKey { path, bits })
+    }
+}
+
+/// The permutation that sorts `received` ascending: `order[c]` is the
+/// index into `received`/`results` of the c-th smallest learner id.
+fn sorted_order(received: &[usize]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..received.len()).collect();
+    order.sort_by_key(|&r| received[r]);
+    order
 }
 
 /// Θ = W·Y without materializing Y as an f64 matrix: per agent, an
 /// axpy over each received result vector. Sequential access, LLVM
-/// auto-vectorizes the inner loop.
-fn apply_weights(w: &Mat, results: &[Vec<f32>], p: usize) -> Vec<Vec<f32>> {
+/// auto-vectorizes the inner loop. Column `c` of `W` corresponds to
+/// the result at `order[c]` (plans are built on the sorted received
+/// set), so summation order — and therefore every output bit — is
+/// independent of arrival order.
+fn apply_weights(w: &Mat, results: &[Vec<f32>], order: &[usize], p: usize) -> Vec<Vec<f32>> {
     debug_assert_eq!(w.cols, results.len());
+    debug_assert_eq!(order.len(), results.len());
     (0..w.rows)
         .map(|i| {
             let mut acc = vec![0.0f32; p];
-            for (r, y) in results.iter().enumerate() {
-                let c = w[(i, r)] as f32;
+            for (col, &r) in order.iter().enumerate() {
+                let c = w[(i, col)] as f32;
                 if c == 0.0 {
                     continue;
                 }
-                for (a, &v) in acc.iter_mut().zip(y.iter()) {
+                for (a, &v) in acc.iter_mut().zip(results[r].iter()) {
                     *a += c * v;
                 }
             }
@@ -270,7 +437,7 @@ mod tests {
         rows.iter()
             .map(|&j| {
                 let mut y = vec![0.0f32; theta[0].len()];
-                for (i, c) in code.assignments(j) {
+                for &(i, c) in code.assignments(j) {
                     for (d, &t) in y.iter_mut().zip(theta[i].iter()) {
                         *d += (c as f32) * t;
                     }
@@ -425,6 +592,118 @@ mod tests {
                 Err(_) => assert!(!code.decodable(&received), "decodable pattern failed"),
             }
         });
+    }
+
+    fn bits_equal(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.len() == y.len()
+                    && x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
+            })
+    }
+
+    /// A cache hit must reproduce the fresh factorization bit for bit —
+    /// including after the plan has been evicted and refactored.
+    #[test]
+    fn plan_cache_is_bit_identical_and_evicts() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let dec = Decoder::new(code.clone());
+        let fresh = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(21);
+        let theta = random_theta(&mut rng, 8, P);
+        let received: Vec<usize> = (0..15).filter(|&j| j != 2 && j != 9).collect();
+        let results = encode(&code, &theta, &received);
+
+        let cold = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        let warm = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        assert!(bits_equal(&cold.theta, &warm.theta), "hit must replay the miss exactly");
+        let s = dec.plan_cache_stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+
+        // Flood the cache far past capacity with distinct patterns
+        // (3-element straggler sets; C(15,3) = 455 ≫ capacity)…
+        let mut seen = 2u64; // decodes so far
+        'flood: for a in 0..15usize {
+            for b in (a + 1)..15 {
+                for c in (b + 1)..15 {
+                    if dec.plan_cache_stats().misses
+                        >= (super::PLAN_CACHE_CAPACITY + 8) as u64
+                    {
+                        break 'flood;
+                    }
+                    let ri: Vec<usize> =
+                        (0..15).filter(|&j| j != a && j != b && j != c).collect();
+                    let ry = encode(&code, &theta, &ri);
+                    dec.decode(&ri, &ry, DecodeMethod::Qr).unwrap();
+                    seen += 1;
+                }
+            }
+        }
+        let s = dec.plan_cache_stats();
+        assert!(s.entries <= super::PLAN_CACHE_CAPACITY, "cache must stay bounded");
+        assert_eq!(s.hits + s.misses, seen, "every decode is a hit or a miss");
+
+        // …then decode the (long-evicted) original pattern again: the
+        // refactored plan must still match a never-cached decoder.
+        let again = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        let reference = fresh.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        assert!(bits_equal(&again.theta, &reference.theta), "post-eviction decode diverged");
+    }
+
+    /// Plans are keyed by the received *set*: any arrival order of the
+    /// same learners shares one plan and recovers identical bits.
+    #[test]
+    fn plan_cache_is_arrival_order_invariant() {
+        let code = Code::build(&CodeParams::new(Scheme::RandomSparse, 12, 6));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(22);
+        let theta = random_theta(&mut rng, 6, 31);
+        let fwd: Vec<usize> = (0..12).filter(|&j| j != 4).collect();
+        let rev: Vec<usize> = fwd.iter().rev().copied().collect();
+        let y_fwd = encode(&code, &theta, &fwd);
+        let y_rev = encode(&code, &theta, &rev);
+        let a = dec.decode(&fwd, &y_fwd, DecodeMethod::Qr).unwrap();
+        let b = dec.decode(&rev, &y_rev, DecodeMethod::Qr).unwrap();
+        assert!(bits_equal(&a.theta, &b.theta), "arrival order changed the output");
+        let s = dec.plan_cache_stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "both orders must share one plan");
+    }
+
+    /// The normal-equations path caches independently of QR (their
+    /// weight matrices differ numerically).
+    #[test]
+    fn plan_cache_separates_qr_from_normal_equations() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 10, 6));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(23);
+        let theta = random_theta(&mut rng, 6, 31);
+        let received: Vec<usize> = (0..10).collect();
+        let results = encode(&code, &theta, &received);
+        dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        dec.decode(&received, &results, DecodeMethod::NormalEquations).unwrap();
+        dec.decode(&received, &results, DecodeMethod::NormalEquations).unwrap();
+        let s = dec.plan_cache_stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 2));
+    }
+
+    /// Duplicate learner ids cannot be represented by the set key: the
+    /// decode still succeeds (direct solve) without polluting the cache.
+    #[test]
+    fn duplicate_received_ids_bypass_the_cache() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 5, 3));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(24);
+        let theta = random_theta(&mut rng, 3, 17);
+        let received = vec![0usize, 1, 2, 2];
+        let results = encode(&code, &theta, &received);
+        let out = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        for i in 0..3 {
+            for k in 0..17 {
+                assert!((out.theta[i][k] - theta[i][k]).abs() < 2e-4);
+            }
+        }
+        let s = dec.plan_cache_stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
     }
 
     #[test]

@@ -57,27 +57,42 @@ pub fn array_parity_base(n: usize, w: usize, rows_needed: usize) -> Gf2Mat {
     Gf2Mat::vstack(&refs)
 }
 
-/// Fallback parity matrix: column-regular (degree 3) random GF(2)
-/// matrix with full row rank. Used when `n` has no prime divisor `< n`
-/// (e.g. `n` prime) or when systematization of the array matrix fails.
-fn random_regular_parity(rows: usize, n: usize, rng: &mut Pcg32) -> Gf2Mat {
-    let max_degree = 3.min(rows);
-    for _ in 0..200 {
-        let mut h = Gf2Mat::zeros(rows, n);
-        for col in 0..n {
-            // Column weight varies in 1..=max_degree: with a constant
-            // weight and very few rows all columns coincide and the
-            // matrix can never reach full row rank.
-            let degree = 1 + rng.below(max_degree as u32) as usize;
-            for r in rng.choose_k(rows, degree) {
-                h.set(r, col, 1);
-            }
+/// Fallback parity matrix, constructed **directly in systematic form**
+/// `[P | I_r]` with identity column permutation: each parity row gets a
+/// random low-degree (≤ 3) support over the `n − r` systematic
+/// positions. Used when `n` has no prime divisor `< n` (e.g. `n`
+/// prime) or when systematization of the array matrix fails.
+///
+/// Why not draw a random H and systematize it? The array base has
+/// GF(2) rank ≤ w², so past paper scale (`n − m ≫ w²`) systematization
+/// *always* fails over to this path — and a random r×n draw with
+/// bounded column weight is essentially never full row rank once
+/// r ≫ m (some row stays untouched), so the old draw-and-retry
+/// fallback could not construct codes at N ≥ ~30. Building `[P | I_r]`
+/// outright needs no rank repair: the identity block makes every
+/// parity row nonzero and `rank_R([I_m ; P]) = m` by construction, in
+/// O(N) instead of O(N³) per attempt.
+fn random_systematic_parity(r: usize, n: usize, rng: &mut Pcg32) -> (Gf2Mat, Vec<usize>) {
+    let m = n - r;
+    let mut h = Gf2Mat::zeros(r, n);
+    for row in 0..r {
+        // Guaranteed coverage: parity row `row` always checks agent
+        // `row % m`, so once r ≥ m every agent has at least one parity
+        // cover — a purely random support leaves some column of P
+        // all-zero with non-trivial probability at small r, pinning
+        // that agent's systematic learner as a single point of failure
+        // (worst-case tolerance 0).
+        h.set(row, row % m, 1);
+        // …plus up to 2 random extra supports: row degree ≤ 3 keeps the
+        // peeling decode O(M · d̄). A collision with the base column
+        // only lowers the realized degree (set is idempotent).
+        let extras = (rng.below(3) as usize).min(m.saturating_sub(1));
+        for col in rng.choose_k(m, extras) {
+            h.set(row, col, 1);
         }
-        if h.rank() == rows {
-            return h;
-        }
+        h.set(row, m + row, 1); // the identity block
     }
-    panic!("random_regular_parity: no full-rank draw in 200 attempts ({rows}x{n})");
+    (h, (0..n).collect())
 }
 
 /// Build the N×M LDPC assignment matrix.
@@ -88,16 +103,13 @@ pub fn ldpc_assignment(n: usize, m: usize, rng: &mut Pcg32) -> Mat {
         // No redundancy possible: degenerate to identity.
         return Mat::identity(m);
     }
-    // Try the paper's array construction first, fall back to random
-    // regular parity.
+    // Try the paper's array construction first (it systematizes while
+    // n − m stays within the base matrix's rank, i.e. paper scale);
+    // fall back to the directly-systematic random parity otherwise.
     let sys = pick_w(n)
         .map(|w| array_parity_base(n, w, r).take_rows(r))
         .and_then(|h| h.systematize())
-        .unwrap_or_else(|| {
-            random_regular_parity(r, n, rng)
-                .systematize()
-                .expect("random parity systematization")
-        });
+        .unwrap_or_else(|| random_systematic_parity(r, n, rng));
     let (h_sys, perm) = sys;
     // h_sys = [P | I_r] in permuted coordinates; codewords x satisfy
     // P x_sys + x_par = 0  →  x_par = P x_sys (over F2).
@@ -217,6 +229,45 @@ mod tests {
                 row[agent] == 1.0 && row.iter().filter(|&&v| v != 0.0).count() == 1
             });
             assert!(found, "agent {agent} has no systematic learner");
+        }
+    }
+
+    /// Fallback coverage guarantee: with r ≥ m parity rows, every agent
+    /// is checked by at least one parity row (systematic + parity ≥ 2
+    /// covers), so no agent's systematic learner is a single point of
+    /// failure. (With r < m, full parity coverage is not guaranteed —
+    /// the bounded row degree caps what r rows can check.)
+    #[test]
+    fn fallback_parity_covers_every_agent_when_r_at_least_m() {
+        let mut rng = Pcg32::seeded(9);
+        // all sizes force the fallback (array base rank ≤ w² < r)
+        for (n, m) in [(16usize, 8usize), (32, 16), (64, 8)] {
+            let c = ldpc_assignment(n, m, &mut rng);
+            for agent in 0..m {
+                let covers = (0..n).filter(|&j| c[(j, agent)] != 0.0).count();
+                assert!(covers >= 2, "n={n} m={m}: agent {agent} covered {covers}x");
+            }
+        }
+    }
+
+    /// Past paper scale the array base is rank-deficient (rank ≤ w²)
+    /// and construction must fall through to the directly-systematic
+    /// parity — the path every N ≥ ~30 cluster sweep takes.
+    #[test]
+    fn assignment_scales_to_large_n() {
+        let mut rng = Pcg32::seeded(4);
+        for (n, m) in [(64usize, 8usize), (128, 4), (257, 8)] {
+            let c = ldpc_assignment(n, m, &mut rng);
+            assert_eq!((c.rows, c.cols), (n, m));
+            assert_eq!(c.rank(RANK_TOL), m, "n={n} m={m}");
+            assert!(c.data.iter().all(|&v| v == 0.0 || v == 1.0));
+            let mut max_degree = 0usize;
+            for j in 0..n {
+                let deg = c.row(j).iter().filter(|&&v| v != 0.0).count();
+                assert!(deg > 0, "n={n} row {j} empty");
+                max_degree = max_degree.max(deg);
+            }
+            assert!(max_degree <= 3, "row degree {max_degree} breaks O(M·d̄) peeling");
         }
     }
 

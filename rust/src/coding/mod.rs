@@ -77,6 +77,11 @@ impl std::fmt::Display for Scheme {
 }
 
 /// A constructed code: the assignment matrix plus scheme metadata.
+///
+/// Besides the dense matrix `C`, construction precomputes the sparse
+/// per-row views the hot paths consume every iteration (broadcast rows,
+/// nonzero lists, workloads) so the learner-task path allocates
+/// nothing per call.
 #[derive(Clone, Debug)]
 pub struct Code {
     pub scheme: Scheme,
@@ -84,10 +89,20 @@ pub struct Code {
     pub n: usize,
     /// M agents (columns).
     pub m: usize,
-    /// The assignment matrix `C` (N×M).
-    pub c: Mat,
+    /// The assignment matrix `C` (N×M). Private since the sparse row
+    /// views below are derived from it at construction — mutating it
+    /// in place would silently desynchronize them. Read via
+    /// [`Code::matrix`]; build a changed matrix with [`Code::build`].
+    c: Mat,
     /// `p_m` used (random sparse only; recorded for reporting).
     pub p_m: Option<f64>,
+    /// Per-row nonzero `(agent, coefficient)` lists (precomputed).
+    sparse: Vec<Vec<(usize, f64)>>,
+    /// Per-row f32 broadcast payloads (precomputed; the controller
+    /// ships one of these per learner per iteration).
+    rows_f32: Vec<Vec<f32>>,
+    /// Rows with at least one nonzero entry (learners that do work).
+    active_rows: usize,
 }
 
 /// Construction parameters.
@@ -125,36 +140,68 @@ impl Code {
             Scheme::Ldpc => ldpc::ldpc_assignment(params.n, params.m, &mut rng),
         };
         debug_assert_eq!((c.rows, c.cols), (params.n, params.m));
-        Code {
-            scheme: params.scheme,
-            n: params.n,
-            m: params.m,
+        Code::from_matrix(
+            params.scheme,
             c,
-            p_m: (params.scheme == Scheme::RandomSparse).then_some(params.p_m),
-        }
+            (params.scheme == Scheme::RandomSparse).then_some(params.p_m),
+        )
+    }
+
+    /// Wrap an already-constructed assignment matrix, precomputing the
+    /// sparse row views the per-iteration paths consume.
+    fn from_matrix(scheme: Scheme, c: Mat, p_m: Option<f64>) -> Code {
+        let sparse: Vec<Vec<(usize, f64)>> = (0..c.rows)
+            .map(|j| {
+                c.row(j)
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(i, &v)| (i, v))
+                    .collect()
+            })
+            .collect();
+        let rows_f32: Vec<Vec<f32>> = (0..c.rows)
+            .map(|j| c.row(j).iter().map(|&v| v as f32).collect())
+            .collect();
+        let active_rows = sparse.iter().filter(|s| !s.is_empty()).count();
+        Code { scheme, n: c.rows, m: c.cols, c, p_m, sparse, rows_f32, active_rows }
+    }
+
+    /// The dense assignment matrix `C` (N×M), read-only.
+    pub fn matrix(&self) -> &Mat {
+        &self.c
     }
 
     /// Agents assigned to learner `j`: `(agent, coefficient)` pairs for
-    /// every nonzero entry in row `j`.
-    pub fn assignments(&self, j: usize) -> Vec<(usize, f64)> {
-        self.c
-            .row(j)
-            .iter()
-            .enumerate()
-            .filter(|(_, &v)| v != 0.0)
-            .map(|(i, &v)| (i, v))
-            .collect()
+    /// every nonzero entry in row `j`. Precomputed — no allocation.
+    pub fn assignments(&self, j: usize) -> &[(usize, f64)] {
+        &self.sparse[j]
     }
 
     /// Number of agent updates learner `j` must compute (its workload).
+    /// O(1) — precomputed.
     pub fn workload(&self, j: usize) -> usize {
-        self.c.row(j).iter().filter(|&&v| v != 0.0).count()
+        self.sparse[j].len()
+    }
+
+    /// Learner `j`'s assignment row as the f32 payload the controller
+    /// broadcasts. Precomputed — callers clone the slice into the
+    /// message without re-converting from f64.
+    pub fn row_f32(&self, j: usize) -> &[f32] {
+        &self.rows_f32[j]
+    }
+
+    /// How many learners have a nonzero row (i.e. receive tasks). The
+    /// controller skips idle learners entirely — at N = 1000 an uncoded
+    /// run tasks M learners instead of N.
+    pub fn active_rows(&self) -> usize {
+        self.active_rows
     }
 
     /// Total computational redundancy: sum of all workloads / M
     /// (1.0 = centralized-equivalent work, MDS = N).
     pub fn redundancy(&self) -> f64 {
-        let total: usize = (0..self.n).map(|j| self.workload(j)).sum();
+        let total: usize = self.sparse.iter().map(|s| s.len()).sum();
         total as f64 / self.m as f64
     }
 
@@ -169,21 +216,50 @@ impl Code {
     }
 
     /// Largest `k` such that ANY `k` stragglers leave the code
-    /// decodable. Brute force over straggler subsets — fine for the
-    /// paper's N = 15 scale; intended for tests/benches, not the hot
-    /// path.
+    /// decodable.
+    ///
+    /// Scheme-analytic (O(1)) wherever the construction pins the
+    /// answer:
+    ///
+    /// * uncoded — 0 (every active learner is a single point of failure)
+    /// * replication — one less than the least-replicated agent's
+    ///   replica count, `⌊N/M⌋ − 1`
+    /// * MDS — `N − M`: the **designed** (exact-arithmetic) any-M-rows
+    ///   tolerance of the Gaussian construction, verified exhaustively
+    ///   at paper scale in the scheme tests. At cluster scale the
+    ///   numeric `decodable()` rank check (`RANK_TOL`-relative) ranges
+    ///   over astronomically many M-row submatrices, a vanishing
+    ///   fraction of which can fall below any finite tolerance — the
+    ///   reported value characterizes the code, not every
+    ///   floating-point corner case.
+    ///
+    /// For random-sparse and LDPC codes the answer depends on the
+    /// realized matrix: subsets are enumerated exactly while
+    /// `C(N, k)` stays within [`EXACT_SUBSET_BUDGET`], and beyond that
+    /// (large N) a deterministic Monte-Carlo search (capped by the
+    /// exact min-cover bound) returns a high-probability *upper bound*
+    /// — the brute force would need C(N, k) rank checks and is
+    /// intractable past N ≈ 30.
     pub fn worst_case_tolerance(&self) -> usize {
+        if self.n == self.m {
+            return 0;
+        }
+        match self.scheme {
+            Scheme::Uncoded => 0,
+            Scheme::Replication => (self.n / self.m - 1).min(self.n - self.m),
+            Scheme::Mds => self.n - self.m,
+            Scheme::RandomSparse | Scheme::Ldpc => self.searched_tolerance(),
+        }
+    }
+
+    /// The original exhaustive tolerance: brute force over every
+    /// straggler subset. Exponential — kept for tests validating the
+    /// analytic/Monte-Carlo answers at small N, and for codes whose
+    /// matrix did not come from a known construction.
+    pub fn worst_case_tolerance_exhaustive(&self) -> usize {
         let mut best = 0;
-        for k in 1..=(self.n - self.m) {
-            let mut all_ok = true;
-            for_each_combination(self.n, k, &mut |stragglers| {
-                if all_ok {
-                    let received: Vec<usize> =
-                        (0..self.n).filter(|j| !stragglers.contains(j)).collect();
-                    all_ok &= self.decodable(&received);
-                }
-            });
-            if all_ok {
+        for k in 1..=(self.n.saturating_sub(self.m)) {
+            if self.all_straggler_subsets_decodable(k) {
                 best = k;
             } else {
                 break;
@@ -191,6 +267,117 @@ impl Code {
         }
         best
     }
+
+    /// Exhaustive check: does EVERY straggler subset of size `k` leave
+    /// the code decodable?
+    fn all_straggler_subsets_decodable(&self, k: usize) -> bool {
+        let mut all_ok = true;
+        for_each_combination(self.n, k, &mut |stragglers| {
+            if all_ok {
+                let received: Vec<usize> =
+                    (0..self.n).filter(|j| !stragglers.contains(j)).collect();
+                all_ok &= self.decodable(&received);
+            }
+        });
+        all_ok
+    }
+
+    /// Exact upper bound on ANY code's tolerance: erasing every learner
+    /// that covers the least-covered agent zeroes that agent's column
+    /// of `C_I`, so no code survives `min_i |cover(i)|` adversarial
+    /// stragglers. O(nnz); caps the Monte-Carlo search, which samples
+    /// uniformly and would essentially never find this structured
+    /// adversarial subset on its own.
+    fn min_cover_bound(&self) -> usize {
+        let mut cover = vec![0usize; self.m];
+        for row in &self.sparse {
+            for &(i, _) in row {
+                cover[i] += 1;
+            }
+        }
+        cover.into_iter().min().unwrap_or(0).saturating_sub(1)
+    }
+
+    /// Exact enumeration while the subset count fits the budget, then a
+    /// Monte-Carlo bound capped by [`Code::min_cover_bound`] (see
+    /// [`Code::worst_case_tolerance`]).
+    fn searched_tolerance(&self) -> usize {
+        let max_k = (self.n - self.m).min(self.min_cover_bound());
+        let mut k = 0usize;
+        while k < max_k {
+            let next = k + 1;
+            if binomial(self.n, next) > EXACT_SUBSET_BUDGET {
+                return self.monte_carlo_tolerance(k, max_k);
+            }
+            if !self.all_straggler_subsets_decodable(next) {
+                return k;
+            }
+            k = next;
+        }
+        k
+    }
+
+    /// Monte-Carlo upper bound on the worst-case tolerance: binary
+    /// search on k over "did `MC_TOLERANCE_TRIALS` random k-subsets all
+    /// decode". The true predicate is monotone in k (more stragglers
+    /// only remove rows); sampling can only miss an adversarial subset,
+    /// so the returned value is an upper bound that holds with high
+    /// probability. Deterministic: the RNG is seeded from (N, M) so
+    /// repeated calls agree.
+    fn monte_carlo_tolerance(&self, known_good: usize, max_k: usize) -> usize {
+        let mut rng = Pcg32::new(((self.n as u64) << 32) | self.m as u64, 0x701E5A);
+        let mut sample_ok = |k: usize| -> bool {
+            for _ in 0..MC_TOLERANCE_TRIALS {
+                let stragglers = rng.choose_k(self.n, k);
+                let received: Vec<usize> =
+                    (0..self.n).filter(|j| !stragglers.contains(j)).collect();
+                if !self.decodable(&received) {
+                    return false;
+                }
+            }
+            true
+        };
+        let mut lo = known_good; // largest k believed tolerated
+        let mut hi = max_k + 1; // smallest k believed to fail
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if sample_ok(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+}
+
+/// Straggler-subset count above which [`Code::worst_case_tolerance`]
+/// stops enumerating exactly and falls back to the Monte-Carlo bound.
+/// Covers every paper-scale configuration (C(15, 7) = 6435) with room
+/// to spare.
+pub const EXACT_SUBSET_BUDGET: u128 = 120_000;
+
+/// Random subsets sampled per candidate k by the Monte-Carlo tolerance
+/// bound.
+const MC_TOLERANCE_TRIALS: usize = 128;
+
+/// C(n, k), saturating at `u128::MAX` (only compared against the
+/// enumeration budget).
+fn binomial(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        match acc.checked_mul((n - i) as u128) {
+            // Exact at every step: after multiplying by (n-i) the
+            // product is divisible by (i+1) (acc holds C(n, i+1)·i!/i!).
+            Some(v) => acc = v / (i as u128 + 1),
+            None => return u128::MAX,
+        }
+    }
+    acc
 }
 
 /// Visit every k-subset of 0..n (lexicographic order).
@@ -349,11 +536,75 @@ mod tests {
     fn assignments_match_matrix() {
         let code = build(Scheme::Replication, 15, 8);
         for j in 0..15 {
-            for (i, v) in code.assignments(j) {
+            for &(i, v) in code.assignments(j) {
                 assert_eq!(code.c[(j, i)], v);
                 assert!(v != 0.0);
             }
+            assert_eq!(code.assignments(j).len(), code.workload(j));
         }
+    }
+
+    #[test]
+    fn precomputed_rows_match_matrix() {
+        for scheme in Scheme::ALL {
+            let code = build(scheme, 15, 8);
+            for j in 0..15 {
+                let row = code.row_f32(j);
+                assert_eq!(row.len(), 8);
+                for i in 0..8 {
+                    assert_eq!(row[i], code.c[(j, i)] as f32, "scheme={scheme} ({j},{i})");
+                }
+            }
+            let active = (0..15).filter(|&j| code.workload(j) > 0).count();
+            assert_eq!(code.active_rows(), active, "scheme={scheme}");
+        }
+    }
+
+    /// The analytic / budgeted tolerance must agree with the exhaustive
+    /// brute force wherever the brute force is feasible.
+    #[test]
+    fn tolerance_matches_exhaustive_at_small_n() {
+        for scheme in Scheme::ALL {
+            for (n, m) in [(8, 4), (10, 6), (12, 8), (15, 8), (16, 8), (9, 3)] {
+                let code = build(scheme, n, m);
+                assert_eq!(
+                    code.worst_case_tolerance(),
+                    code.worst_case_tolerance_exhaustive(),
+                    "scheme={scheme} n={n} m={m}"
+                );
+            }
+        }
+    }
+
+    /// Large-N path: analytic schemes answer in O(1); sparse/LDPC fall
+    /// back to the deterministic Monte-Carlo bound without enumerating
+    /// C(N, k) subsets.
+    #[test]
+    fn tolerance_scales_past_enumeration() {
+        let mds = build(Scheme::Mds, 96, 8);
+        assert_eq!(mds.worst_case_tolerance(), 88);
+        let rep = build(Scheme::Replication, 96, 8);
+        assert_eq!(rep.worst_case_tolerance(), 11); // 96/8 replicas each
+        let unc = build(Scheme::Uncoded, 96, 8);
+        assert_eq!(unc.worst_case_tolerance(), 0);
+        for scheme in [Scheme::RandomSparse, Scheme::Ldpc] {
+            let code = build(scheme, 64, 8);
+            let tol = code.worst_case_tolerance();
+            assert!(tol <= 56, "scheme={scheme} tol={tol}");
+            // deterministic: the Monte-Carlo search replays bit-for-bit
+            assert_eq!(tol, code.worst_case_tolerance(), "scheme={scheme}");
+        }
+    }
+
+    #[test]
+    fn binomial_known_values() {
+        assert_eq!(binomial(15, 7), 6435);
+        assert_eq!(binomial(15, 8), 6435);
+        assert_eq!(binomial(4, 0), 1);
+        assert_eq!(binomial(4, 5), 0);
+        assert_eq!(binomial(1000, 3), 166_167_000);
+        // C(200, 100) ≈ 9e58 overflows u128 → saturates (still > budget)
+        assert_eq!(binomial(200, 100), u128::MAX);
     }
 
     #[test]

@@ -160,6 +160,12 @@ pub struct TrainConfig {
     pub transport: Transport,
     /// Real wall-clock execution or virtual-time simulation.
     pub time_mode: TimeMode,
+    /// Worker threads for sharded sweep execution
+    /// ([`crate::sim::sweep::run_sweep`]): independent (scheme, k)
+    /// cells run concurrently in virtual time. 0 = one per available
+    /// core. Real-time sweeps ignore it and run serially (wall-clock
+    /// cells must not contend for cores).
+    pub sweep_threads: usize,
     pub seed: u64,
     /// Write per-iteration CSV under this directory (None = don't).
     pub out_dir: Option<std::path::PathBuf>,
@@ -204,6 +210,7 @@ impl TrainConfig {
             mock_compute: std::time::Duration::from_millis(2),
             transport: Transport::Local,
             time_mode: TimeMode::Real,
+            sweep_threads: 0,
             seed: 0,
             out_dir: None,
             checkpoint_every: 0,
@@ -279,6 +286,9 @@ impl TrainConfig {
         if let Some(v) = args.opt("time-mode") {
             cfg.time_mode = TimeMode::parse(v)
                 .ok_or_else(|| anyhow::anyhow!("unknown time mode '{v}' (real|virtual)"))?;
+        }
+        if let Some(v) = args.opt("sweep-threads") {
+            cfg.sweep_threads = v.parse()?;
         }
         if let Some(v) = args.opt("seed") {
             cfg.seed = v.parse()?;
@@ -421,6 +431,15 @@ mod tests {
         assert!(parse(&["--preset", "x", "--stragglers", "99"]).is_err());
         assert!(parse(&["--preset", "x", "--p-m", "1.5"]).is_err());
         assert!(parse(&["--preset", "x", "--iterations", "0"]).is_err());
+    }
+
+    #[test]
+    fn sweep_threads_parses_with_auto_default() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert_eq!(cfg.sweep_threads, 0, "default is auto (one per core)");
+        let cfg = parse(&["--preset", "x", "--sweep-threads", "6"]).unwrap();
+        assert_eq!(cfg.sweep_threads, 6);
+        assert!(parse(&["--preset", "x", "--sweep-threads", "lots"]).is_err());
     }
 
     #[test]

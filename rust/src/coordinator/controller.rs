@@ -154,6 +154,12 @@ impl<T: ControllerTransport> Controller<T> {
         self.decoder.code()
     }
 
+    /// Decode-plan cache telemetry of the current decoder (reset when
+    /// an adaptive switch replaces the decoder mid-run).
+    pub fn decode_plan_stats(&self) -> crate::coding::decoder::PlanCacheStats {
+        self.decoder.plan_cache_stats()
+    }
+
     pub fn agents(&self) -> &[AgentParams] {
         &self.agents
     }
@@ -284,9 +290,15 @@ impl<T: ControllerTransport> Controller<T> {
         let agent_params =
             std::sync::Arc::new(self.agents.iter().map(|a| a.to_flat()).collect::<Vec<_>>());
         let mb = std::sync::Arc::new(mb);
+        // Learners with an all-zero row have nothing to compute and
+        // contribute nothing to decodability — skip them outright. At
+        // N = 1000 an uncoded iteration tasks M learners, not N.
+        let tasked = self.code().active_rows();
         for j in 0..self.cfg.n_learners {
-            let row: Vec<f32> =
-                self.code().c.row(j).iter().map(|&v| v as f32).collect();
+            if self.code().workload(j) == 0 {
+                continue;
+            }
+            let row = self.code().row_f32(j).to_vec();
             // A dead learner (crashed thread / worker) is just a
             // permanent erasure: coding exists to mask exactly this, so
             // a failed send must not abort the iteration.
@@ -309,13 +321,17 @@ impl<T: ControllerTransport> Controller<T> {
 
         // --- Collect until decodable (lines 10-13) ----------------------
         let t = Timer::with_clock(&self.clock);
-        let outcome = self.collect(iter)?;
+        let outcome = self.collect(iter, tasked)?;
         timing.wait = t.elapsed();
         let CollectOutcome { received, results, stall, compute_per_update } = outcome;
 
         // --- Ack (line 14) ----------------------------------------------
-        // Per-learner ack failures are likewise non-fatal.
+        // Per-learner ack failures are likewise non-fatal; idle
+        // learners were never tasked, so they get no ack either.
         for j in 0..self.cfg.n_learners {
+            if self.code().workload(j) == 0 {
+                continue;
+            }
             let _ = self.transport.send_to(j, CtrlMsg::Ack { iter });
         }
 
@@ -334,10 +350,11 @@ impl<T: ControllerTransport> Controller<T> {
         }
         let mut switched = None;
         if let Some((selector, stats)) = self.adaptive.as_mut() {
-            // effective stragglers = learners whose results never made
-            // it into this round (biased high: includes healthy-but-
-            // late learners; hysteresis absorbs the bias).
-            stats.observe(self.cfg.n_learners - received.len(), stall);
+            // effective stragglers = tasked learners whose results never
+            // made it into this round (biased high: includes healthy-
+            // but-late learners; hysteresis absorbs the bias). Idle
+            // learners were never tasked and must not count.
+            stats.observe(tasked.saturating_sub(received.len()), stall);
             let compute = Duration::from_secs_f64(self.compute_ewma.max(1e-6));
             if let Some(rec) = selector.recommend(stats, compute, self.cfg.scheme) {
                 if rec.scheme != self.cfg.scheme {
@@ -379,8 +396,10 @@ impl<T: ControllerTransport> Controller<T> {
 
     /// Listen to the channel until the received subset is decodable
     /// (Alg. 1 lines 10-13), gathering the telemetry the adaptive
-    /// selector consumes.
-    fn collect(&mut self, iter: u64) -> Result<CollectOutcome> {
+    /// selector consumes. `tasked` is how many learners were actually
+    /// sent a task this iteration (idle zero-row learners are skipped
+    /// at broadcast and can never reply).
+    fn collect(&mut self, iter: u64, tasked: usize) -> Result<CollectOutcome> {
         let m = self.spec.m;
         let n = self.cfg.n_learners;
         let mut received: Vec<usize> = Vec::with_capacity(n);
@@ -431,12 +450,13 @@ impl<T: ControllerTransport> Controller<T> {
                         });
                         return Ok(CollectOutcome { received, results, stall, compute_per_update });
                     }
-                    if received.len() == n {
-                        // All results in but still not decodable: the
-                        // assignment matrix itself is rank-deficient.
+                    if received.len() == tasked {
+                        // All tasked learners replied but the pattern is
+                        // still not decodable: the assignment matrix
+                        // itself is rank-deficient.
                         bail!(
-                            "iteration {iter}: all {n} results received but rank(C) < M — \
-                             invalid code construction"
+                            "iteration {iter}: all {tasked} tasked results received but \
+                             rank(C) < M — invalid code construction"
                         );
                     }
                 }

@@ -8,6 +8,9 @@
 //! acknowledgement (line 20) and abandons the iteration's remaining
 //! work as soon as one arrives — that early-abort is what keeps coded
 //! redundancy from wasting compute once θ' is already recoverable.
+//! (The controller no longer tasks learners whose assignment row is
+//! all-zero — e.g. the idle N−M learners of the uncoded scheme — but
+//! an explicitly sent zero row is still answered with a zero vector.)
 //!
 //! All timing goes through a [`ClockRef`]: thread/worker learners run
 //! on the shared real clock, and the injected delay is served as a
@@ -105,6 +108,13 @@ pub fn learner_loop(
                 _ => continue, // stale Ack / Welcome
             }
         };
+        // Drain any already-queued ack/supersession *before* paying the
+        // P-sized allocation — a stale task can be skipped for free.
+        match poll_ctrl(&mut ep, iter)? {
+            Poll::Continue => {}
+            Poll::AbortIteration => continue,
+            Poll::Shutdown => return Ok(()),
+        }
         let t0 = clock.now();
         let p = agent_params.first().map(|v| v.len()).unwrap_or(0);
         let mut y = vec![0.0f32; p];

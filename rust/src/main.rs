@@ -73,8 +73,9 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --straggler-exponential    heavy-tail Exp(1)-scaled delays
     --iterations I             iterations per cell       [10]
     --mock-compute-us US       modeled per-update compute [2000]
+    --sweep-threads T          parallel sweep shards (0 = all cores) [0]
     --seed S                   experiment seed           [0]
-    --out-dir DIR              also write sim_sweep.csv here
+    --out-dir DIR              also write sim_sweep.csv + BENCH_sweep.json here
 
 EXAMPLES:
     coded-marl train --preset coop_nav_m8 --scheme mds \\
@@ -191,7 +192,8 @@ fn cmd_worker() -> Result<()> {
 /// well under a second.
 fn cmd_sim_sweep() -> Result<()> {
     use coded_marl::sim::sweep::{
-        render_table, run_sweep, simulated_total, sweep_base, write_csv, SweepConfig,
+        render_table, run_sweep, simulated_total, sweep_base, write_bench_json, write_csv,
+        SweepConfig,
     };
 
     let args = Args::from_env(2)?;
@@ -228,12 +230,14 @@ fn cmd_sim_sweep() -> Result<()> {
     let mock_compute =
         std::time::Duration::from_micros(args.get_or("mock-compute-us", 2000u64)?);
     let seed = args.get_or("seed", 0u64)?;
+    let sweep_threads = args.get_or("sweep-threads", 0usize)?;
     let exponential = args.flag("straggler-exponential");
     let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
     args.finish()?;
 
     let mut base = sweep_base(format!("{}_m{}", env.name(), m), n, iterations, mock_compute, seed);
     base.straggler.exponential = exponential;
+    base.sweep_threads = sweep_threads;
     // Lean synthetic dims: reported times come from the compute model,
     // not the mock's arithmetic, so small dims only cut wall cost.
     let spec = RunSpec::synthetic(env, m, adversaries, 32, 32);
@@ -252,17 +256,31 @@ fn cmd_sim_sweep() -> Result<()> {
         delay,
         artifacts_dir: artifacts.into(),
     })?;
+    let wall = t0.elapsed();
     print!("{}", render_table(&cells, &ks));
     let virtual_total = simulated_total(&cells);
     println!(
         "\nsimulated {} of training time in {} wall-clock",
         fmt_duration(virtual_total),
-        fmt_duration(t0.elapsed()),
+        fmt_duration(wall),
     );
+    let hits: u64 = cells.iter().map(|c| c.decode_plan.hits).sum();
+    let misses: u64 = cells.iter().map(|c| c.decode_plan.misses).sum();
+    if hits + misses > 0 {
+        println!(
+            "decode-plan cache: {hits} hits / {misses} misses ({:.0}% hit rate — one \
+             factorization per distinct erasure pattern)",
+            100.0 * hits as f64 / (hits + misses) as f64,
+        );
+    }
     if let Some(dir) = out_dir {
         let path = dir.join("sim_sweep.csv");
         write_csv(&cells, &path).with_context(|| format!("writing {}", path.display()))?;
         println!("wrote {}", path.display());
+        let bench = dir.join("BENCH_sweep.json");
+        write_bench_json(&cells, wall, &bench)
+            .with_context(|| format!("writing {}", bench.display()))?;
+        println!("wrote {}", bench.display());
     }
     Ok(())
 }
@@ -282,7 +300,7 @@ fn cmd_code() -> Result<()> {
     println!("assignment matrix C (rows = learners, cols = agents):");
     for j in 0..n {
         let row: Vec<String> =
-            code.c.row(j).iter().map(|&v| format!("{v:>7.3}")).collect();
+            code.matrix().row(j).iter().map(|&v| format!("{v:>7.3}")).collect();
         println!("  L{j:<3} [{}]  workload {}", row.join(" "), code.workload(j));
     }
     println!("redundancy (total agent-updates / M): {:.2}", code.redundancy());

@@ -9,13 +9,31 @@
 //! nanoseconds (discrete events). Under `TimeMode::Virtual` a full
 //! 5-scheme × 5-k grid with the paper's t_s = 250 ms finishes in well
 //! under a second.
+//!
+//! ## Sharded execution
+//!
+//! Cells are independent short trainings (fresh pool, fresh controller,
+//! fresh virtual clock), so in virtual time the grid runs on a
+//! `std::thread` shard pool (`TrainConfig::sweep_threads`; 0 = one per
+//! core). Each scheme's seed is **derived** from the base seed with
+//! [`derive_scheme_seed`] — a pure function, so serial and parallel
+//! runs at any thread count produce bit-identical cells, and all k
+//! cells of one scheme share one assignment matrix (the paper's sweeps
+//! vary k against a *fixed* code, and it is what lets the per-scheme
+//! analytics be computed once instead of per cell). Results are written
+//! into pre-assigned slots, so cell order never depends on scheduling.
+//! Real-time sweeps always run serially: wall-clock cells must not
+//! contend for cores.
 
 use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coding::Scheme;
+use crate::coding::decoder::PlanCacheStats;
+use crate::coding::{Code, CodeParams, Scheme};
 use crate::config::{Backend, TimeMode, TrainConfig};
 use crate::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
 use crate::metrics::table::Table;
@@ -82,6 +100,30 @@ pub struct SweepCell {
     pub redundancy: f64,
     /// Worst-case straggler tolerance of the assignment matrix.
     pub tolerance: usize,
+    /// Decode-plan cache counters from the cell's controller: one miss
+    /// per *distinct* erasure pattern, hits for every repeat.
+    pub decode_plan: PlanCacheStats,
+    /// Wall-clock spent executing the cell (not simulated time).
+    pub wall: Duration,
+}
+
+/// Per-scheme seed derived from the experiment seed (splitmix64
+/// finalizer): schemes train on decorrelated streams, while all k
+/// cells of one scheme share a seed — and therefore one assignment
+/// matrix — so redundancy/tolerance are computed once per scheme and
+/// k comparisons run against a fixed code. Derived from the scheme's
+/// stable identity (its position in [`Scheme::ALL`]), NOT its position
+/// in the sweep's `--schemes` list, so `(seed, scheme)` names the same
+/// cell no matter which other schemes are swept alongside it.
+pub fn derive_scheme_seed(base: u64, scheme: Scheme) -> u64 {
+    let id = Scheme::ALL
+        .iter()
+        .position(|&s| s == scheme)
+        .expect("scheme listed in Scheme::ALL") as u64;
+    let mut z = base ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(id + 1);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// Mean (total, wait) over the non-warmup iterations of a run log.
@@ -100,42 +142,124 @@ pub fn mean_non_warmup(log: &RunLog) -> (Duration, Duration, usize) {
     (total / n as u32, wait / n as u32, n)
 }
 
-/// Run the grid cell by cell; cells are independent short trainings
-/// (fresh pool, fresh controller) so a sweep is embarrassingly simple
-/// to reason about and deterministic per cell.
+/// Analytics shared by every k cell of one scheme, computed once.
+struct SchemeInfo {
+    seed: u64,
+    redundancy: f64,
+    tolerance: usize,
+}
+
+/// Run one (scheme, k) cell: a fresh short training with the scheme's
+/// derived seed. Pure function of its arguments — the shard pool and
+/// the serial loop produce identical cells.
+fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) -> Result<SweepCell> {
+    let wall_t = std::time::Instant::now();
+    let mut cfg = sweep.base.clone();
+    cfg.scheme = scheme;
+    cfg.straggler.k = k;
+    cfg.straggler.delay = sweep.delay;
+    cfg.seed = info.seed;
+    let factory = backend_factory(&cfg, sweep.artifacts_dir.clone(), &sweep.spec);
+    let pool = spawn_pool(&cfg, factory)?;
+    let mut ctrl = Controller::new(cfg, sweep.spec.clone(), pool)
+        .with_context(|| format!("building controller for {scheme} k={k}"))?;
+    ctrl.train().with_context(|| format!("training cell {scheme} k={k}"))?;
+    let (mean_iter, mean_wait, measured_iters) = mean_non_warmup(&ctrl.log);
+    let decode_plan = ctrl.decode_plan_stats();
+    ctrl.shutdown();
+    Ok(SweepCell {
+        scheme,
+        k,
+        mean_iter,
+        mean_wait,
+        measured_iters,
+        redundancy: info.redundancy,
+        tolerance: info.tolerance,
+        decode_plan,
+        wall: wall_t.elapsed(),
+    })
+}
+
+/// Shard-pool width for this sweep: `base.sweep_threads` (0 = one per
+/// available core), capped by the cell count. Real-time sweeps are
+/// always serial — their cells measure wall-clock and must not contend
+/// for cores.
+fn shard_width(sweep: &SweepConfig, jobs: usize) -> usize {
+    if sweep.base.time_mode == TimeMode::Real {
+        return 1;
+    }
+    let requested = match sweep.base.sweep_threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        t => t,
+    };
+    requested.clamp(1, jobs.max(1))
+}
+
+/// Run the grid; cells are independent short trainings (fresh pool,
+/// fresh controller, fresh virtual clock), sharded across
+/// `base.sweep_threads` worker threads in virtual time (see module
+/// docs). Cell order and content are identical at any thread count.
 pub fn run_sweep(sweep: &SweepConfig) -> Result<Vec<SweepCell>> {
-    let mut cells = Vec::with_capacity(sweep.schemes.len() * sweep.ks.len());
-    for &scheme in &sweep.schemes {
-        for &k in &sweep.ks {
-            let mut cfg = sweep.base.clone();
-            cfg.scheme = scheme;
-            cfg.straggler.k = k;
-            cfg.straggler.delay = sweep.delay;
-            let factory = backend_factory(&cfg, sweep.artifacts_dir.clone(), &sweep.spec);
-            let pool = spawn_pool(&cfg, factory)?;
-            let mut ctrl = Controller::new(cfg, sweep.spec.clone(), pool)
-                .with_context(|| format!("building controller for {scheme} k={k}"))?;
-            ctrl.train().with_context(|| format!("training cell {scheme} k={k}"))?;
-            let (mean_iter, mean_wait, measured_iters) = mean_non_warmup(&ctrl.log);
-            let redundancy = ctrl.code().redundancy();
-            let tolerance = ctrl.code().worst_case_tolerance();
-            ctrl.shutdown();
-            cells.push(SweepCell {
+    // Per-scheme analytics, hoisted out of the cell loop: redundancy
+    // and tolerance depend only on (scheme, N, M, p_m, scheme seed) —
+    // previously recomputed per cell, with the brute-force tolerance
+    // dominating the whole sweep beyond paper scale.
+    let infos: Vec<SchemeInfo> = sweep
+        .schemes
+        .iter()
+        .map(|&scheme| {
+            let seed = derive_scheme_seed(sweep.base.seed, scheme);
+            let code = Code::build(&CodeParams {
                 scheme,
-                k,
-                mean_iter,
-                mean_wait,
-                measured_iters,
-                redundancy,
-                tolerance,
+                n: sweep.base.n_learners,
+                m: sweep.spec.m,
+                p_m: sweep.base.p_m,
+                seed,
+            });
+            SchemeInfo { seed, redundancy: code.redundancy(), tolerance: code.worst_case_tolerance() }
+        })
+        .collect();
+    let jobs: Vec<(usize, usize)> = (0..sweep.schemes.len())
+        .flat_map(|s| sweep.ks.iter().map(move |&k| (s, k)))
+        .collect();
+    let threads = shard_width(sweep, jobs.len());
+    if threads <= 1 {
+        return jobs
+            .iter()
+            .map(|&(s, k)| run_cell(sweep, sweep.schemes[s], k, &infos[s]))
+            .collect();
+    }
+    // Shard pool: a shared job cursor and one pre-assigned result slot
+    // per cell, so output order is position-determined, never
+    // scheduling-determined.
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<SweepCell>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                let Some(&(s, k)) = jobs.get(i) else { break };
+                let out = run_cell(sweep, sweep.schemes[s], k, &infos[s]);
+                *slots[i].lock().expect("sweep slot poisoned") = Some(out);
             });
         }
-    }
-    Ok(cells)
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("sweep slot poisoned")
+                .expect("scope joined every worker")
+        })
+        .collect()
 }
 
 /// Render the sweep as the schemes × k table the examples print
-/// (cells in ms, plus the scheme's redundancy and tolerance).
+/// (cells in ms, plus the scheme's redundancy and tolerance). Cells
+/// are indexed by a `(scheme, k)` map built once — the old linear
+/// `find` made rendering O(cells²) and silently let a later duplicate
+/// cell overwrite the scheme info.
 pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
     let mut headers: Vec<String> = vec!["scheme".into()];
     headers.extend(ks.iter().map(|k| format!("k={k}")));
@@ -143,8 +267,11 @@ pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
     headers.push("tolerance".into());
     let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&header_refs);
+    let mut index: std::collections::HashMap<(Scheme, usize), &SweepCell> =
+        std::collections::HashMap::with_capacity(cells.len());
     let mut schemes: Vec<Scheme> = Vec::new();
     for c in cells {
+        index.entry((c.scheme, c.k)).or_insert(c);
         if !schemes.contains(&c.scheme) {
             schemes.push(c.scheme);
         }
@@ -153,10 +280,12 @@ pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
         let mut row = vec![scheme.name().to_string()];
         let mut info: Option<(f64, usize)> = None;
         for &k in ks {
-            match cells.iter().find(|c| c.scheme == scheme && c.k == k) {
+            match index.get(&(scheme, k)) {
                 Some(c) => {
                     row.push(format!("{:.1}ms", c.mean_iter.as_secs_f64() * 1e3));
-                    info = Some((c.redundancy, c.tolerance));
+                    if info.is_none() {
+                        info = Some((c.redundancy, c.tolerance));
+                    }
                 }
                 None => row.push("-".into()),
             }
@@ -169,17 +298,21 @@ pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
     table.render()
 }
 
-/// One CSV row per cell (`scheme,k,mean_iter_s,mean_wait_s,iters`).
+/// One CSV row per cell (`scheme,k,mean_iter_s,mean_wait_s,iters,…`).
 pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "scheme,k,mean_iter_s,mean_wait_s,iters,redundancy,tolerance")?;
+    writeln!(
+        f,
+        "scheme,k,mean_iter_s,mean_wait_s,iters,redundancy,tolerance,\
+         decode_plan_hits,decode_plan_misses"
+    )?;
     for c in cells {
         writeln!(
             f,
-            "{},{},{:.6},{:.6},{},{:.3},{}",
+            "{},{},{:.6},{:.6},{},{:.3},{},{},{}",
             c.scheme.name(),
             c.k,
             c.mean_iter.as_secs_f64(),
@@ -187,8 +320,59 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
             c.measured_iters,
             c.redundancy,
             c.tolerance,
+            c.decode_plan.hits,
+            c.decode_plan.misses,
         )?;
     }
+    f.flush()
+}
+
+/// Machine-readable perf record (`BENCH_sweep.json`): per-cell means,
+/// decode-plan cache counters, and wall-clock — written by `sim-sweep`
+/// so the perf trajectory is tracked across PRs (the values are plain
+/// enum names and finite numbers; no string escaping is needed).
+pub fn write_bench_json(
+    cells: &[SweepCell],
+    wall: Duration,
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let hits: u64 = cells.iter().map(|c| c.decode_plan.hits).sum();
+    let misses: u64 = cells.iter().map(|c| c.decode_plan.misses).sum();
+    let rate = if hits + misses == 0 { 0.0 } else { hits as f64 / (hits + misses) as f64 };
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"sim_sweep\",")?;
+    writeln!(f, "  \"wall_s\": {:.6},", wall.as_secs_f64())?;
+    writeln!(f, "  \"simulated_s\": {:.6},", simulated_total(cells).as_secs_f64())?;
+    writeln!(f, "  \"decode_plan_hits\": {hits},")?;
+    writeln!(f, "  \"decode_plan_misses\": {misses},")?;
+    writeln!(f, "  \"decode_plan_hit_rate\": {rate:.6},")?;
+    writeln!(f, "  \"cells\": [")?;
+    for (i, c) in cells.iter().enumerate() {
+        let comma = if i + 1 == cells.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"scheme\": \"{}\", \"k\": {}, \"mean_iter_s\": {:.9}, \
+             \"mean_wait_s\": {:.9}, \"iters\": {}, \"redundancy\": {:.6}, \
+             \"tolerance\": {}, \"decode_plan_hits\": {}, \"decode_plan_misses\": {}, \
+             \"wall_s\": {:.6}}}{comma}",
+            c.scheme.name(),
+            c.k,
+            c.mean_iter.as_secs_f64(),
+            c.mean_wait.as_secs_f64(),
+            c.measured_iters,
+            c.redundancy,
+            c.tolerance,
+            c.decode_plan.hits,
+            c.decode_plan.misses,
+            c.wall.as_secs_f64(),
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
     f.flush()
 }
 
@@ -250,23 +434,161 @@ mod tests {
         assert!(txt.contains("uncoded") && txt.contains("mds"));
     }
 
-    #[test]
-    fn csv_roundtrip() {
-        let cells = vec![SweepCell {
-            scheme: Scheme::Mds,
-            k: 2,
+    fn cell(scheme: Scheme, k: usize) -> SweepCell {
+        SweepCell {
+            scheme,
+            k,
             mean_iter: Duration::from_millis(12),
             mean_wait: Duration::from_millis(9),
             measured_iters: 5,
             redundancy: 2.5,
             tolerance: 3,
-        }];
+            decode_plan: PlanCacheStats { hits: 4, misses: 1, entries: 1 },
+            wall: Duration::from_millis(3),
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let cells = vec![cell(Scheme::Mds, 2)];
         let dir = std::env::temp_dir().join("coded_marl_sweep_csv_test");
         let path = dir.join("sweep.csv");
         write_csv(&cells, &path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2);
         assert!(text.contains("mds,2,0.012"));
+        assert!(text.lines().next().unwrap().contains("decode_plan_hits"));
+        assert!(text.contains(",4,1"), "cache counters must be recorded: {text}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_json_is_valid_and_carries_cache_counters() {
+        let cells = vec![cell(Scheme::Mds, 0), cell(Scheme::Ldpc, 4)];
+        let dir = std::env::temp_dir().join("coded_marl_sweep_json_test");
+        let path = dir.join("BENCH_sweep.json");
+        write_bench_json(&cells, Duration::from_millis(250), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "sim_sweep");
+        assert_eq!(json.get("decode_plan_hits").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(json.get("decode_plan_misses").unwrap().as_usize().unwrap(), 2);
+        let rate = json.get("decode_plan_hit_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 0.8).abs() < 1e-9);
+        assert_eq!(json.get("cells").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn render_table_dedups_duplicate_cells_first_wins() {
+        let mut dup = cell(Scheme::Mds, 2);
+        dup.redundancy = 99.0;
+        let cells = vec![cell(Scheme::Mds, 2), dup];
+        let txt = render_table(&cells, &[2]);
+        assert!(txt.contains("2.5x"), "first cell's info must win:\n{txt}");
+        assert!(!txt.contains("99.0x"), "duplicate must not overwrite:\n{txt}");
+    }
+
+    #[test]
+    fn derive_scheme_seed_is_stable_and_spread() {
+        assert_eq!(
+            derive_scheme_seed(9, Scheme::Mds),
+            derive_scheme_seed(9, Scheme::Mds)
+        );
+        assert_ne!(
+            derive_scheme_seed(9, Scheme::Mds),
+            derive_scheme_seed(9, Scheme::Ldpc)
+        );
+        assert_ne!(
+            derive_scheme_seed(9, Scheme::Mds),
+            derive_scheme_seed(10, Scheme::Mds)
+        );
+    }
+
+    /// A (seed, scheme) cell must not depend on which other schemes are
+    /// in the sweep — single-scheme repros of full-grid anomalies have
+    /// to measure the identical experiment.
+    #[test]
+    fn scheme_cells_are_independent_of_the_sweep_list() {
+        let run = |schemes: Vec<Scheme>| {
+            let cfg = SweepConfig {
+                base: base(),
+                spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+                schemes,
+                ks: vec![2],
+                delay: Duration::from_millis(40),
+                artifacts_dir: "artifacts".into(),
+            };
+            run_sweep(&cfg).unwrap()
+        };
+        let full = run(vec![Scheme::Uncoded, Scheme::Mds, Scheme::Ldpc]);
+        let solo = run(vec![Scheme::Mds]);
+        let full_mds = full.iter().find(|c| c.scheme == Scheme::Mds).unwrap();
+        assert_eq!(full_mds.mean_iter, solo[0].mean_iter);
+        assert_eq!(full_mds.mean_wait, solo[0].mean_wait);
+        assert_eq!(full_mds.redundancy.to_bits(), solo[0].redundancy.to_bits());
+    }
+
+    /// The tentpole determinism contract: the shard pool produces
+    /// bit-identical cells to the serial runner, at any thread count.
+    #[test]
+    fn parallel_sweep_matches_serial_at_any_thread_count() {
+        let sweep = |threads: usize| {
+            let mut base = base();
+            base.sweep_threads = threads;
+            let cfg = SweepConfig {
+                base,
+                spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+                schemes: vec![Scheme::Uncoded, Scheme::Mds, Scheme::Ldpc],
+                ks: vec![0, 3],
+                delay: Duration::from_millis(40),
+                artifacts_dir: "artifacts".into(),
+            };
+            run_sweep(&cfg).unwrap()
+        };
+        let serial = sweep(1);
+        for threads in [2usize, 4, 7] {
+            let parallel = sweep(threads);
+            assert_eq!(serial.len(), parallel.len());
+            for (a, b) in serial.iter().zip(parallel.iter()) {
+                assert_eq!(a.scheme, b.scheme, "threads={threads}");
+                assert_eq!(a.k, b.k, "threads={threads}");
+                assert_eq!(a.mean_iter, b.mean_iter, "threads={threads} {}/{}", a.scheme, a.k);
+                assert_eq!(a.mean_wait, b.mean_wait, "threads={threads} {}/{}", a.scheme, a.k);
+                assert_eq!(a.measured_iters, b.measured_iters, "threads={threads}");
+                assert_eq!(a.redundancy.to_bits(), b.redundancy.to_bits(), "threads={threads}");
+                assert_eq!(a.tolerance, b.tolerance, "threads={threads}");
+                assert_eq!(
+                    (a.decode_plan.hits, a.decode_plan.misses),
+                    (b.decode_plan.hits, b.decode_plan.misses),
+                    "threads={threads} {}/{}",
+                    a.scheme,
+                    a.k
+                );
+            }
+        }
+    }
+
+    /// Real-time sweeps must not shard (wall-clock cells would contend);
+    /// the width helper enforces it regardless of the knob.
+    #[test]
+    fn real_time_sweeps_run_serially() {
+        let mut base = base();
+        base.time_mode = TimeMode::Real;
+        base.sweep_threads = 8;
+        let cfg = SweepConfig {
+            base,
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Mds],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        };
+        assert_eq!(shard_width(&cfg, 5), 1);
+        let mut virt = cfg;
+        virt.base.time_mode = TimeMode::Virtual;
+        assert_eq!(shard_width(&virt, 5), 5, "threads cap at the job count");
+        virt.base.sweep_threads = 3;
+        assert_eq!(shard_width(&virt, 5), 3);
     }
 }

@@ -159,20 +159,15 @@ impl SimTransport {
         for backend in backends.iter_mut().flatten() {
             backend.set_clock(sink.clone());
         }
-        SimTransport {
-            clock: VirtualClock::shared(),
-            learners: backends
-                .into_iter()
-                .map(|backend| SimLearner {
-                    backend,
-                    compute,
-                    generation: 0,
-                    pending_iter: None,
-                })
-                .collect(),
-            events: BinaryHeap::new(),
-            seq: 0,
-        }
+        let learners: Vec<SimLearner> = backends
+            .into_iter()
+            .map(|backend| SimLearner { backend, compute, generation: 0, pending_iter: None })
+            .collect();
+        // Each learner carries at most one live event plus a bounded
+        // number of lazily-deleted stale ones; pre-sizing avoids heap
+        // regrowth inside N = 1000-learner iterations.
+        let events = BinaryHeap::with_capacity(2 * learners.len() + 1);
+        SimTransport { clock: VirtualClock::shared(), learners, events, seq: 0 }
     }
 
     /// The transport's virtual clock (also returned, type-erased, by

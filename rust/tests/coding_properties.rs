@@ -13,7 +13,7 @@ fn encode(code: &Code, theta: &[Vec<f32>], rows: &[usize]) -> Vec<Vec<f32>> {
     rows.iter()
         .map(|&j| {
             let mut y = vec![0.0f32; theta[0].len()];
-            for (i, c) in code.assignments(j) {
+            for &(i, c) in code.assignments(j) {
                 for (acc, &t) in y.iter_mut().zip(theta[i].iter()) {
                     *acc += c as f32 * t;
                 }
@@ -170,7 +170,7 @@ fn property_full_matrix_rank_is_m() {
         let m = g.usize_in(1, 12);
         let n = m + g.usize_in(0, 8);
         let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: g.case_seed });
-        assert_eq!(code.c.rank(RANK_TOL), m, "scheme={scheme} n={n} m={m}");
+        assert_eq!(code.matrix().rank(RANK_TOL), m, "scheme={scheme} n={n} m={m}");
         // and every row of the deterministic coded schemes is useful
         if matches!(scheme, Scheme::Replication | Scheme::Mds | Scheme::Ldpc) {
             for j in 0..n {
