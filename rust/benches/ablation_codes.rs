@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use coded_marl::coding::decoder::{DecodeMethod, Decoder};
 use coded_marl::coding::{random_set_decode_probability, Code, CodeParams, Scheme};
-use coded_marl::config::{Backend, StragglerConfig, TrainConfig};
+use coded_marl::config::{Backend, DelayDist, StragglerConfig, TrainConfig};
 use coded_marl::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
 use coded_marl::env::EnvKind;
 use coded_marl::metrics::table::Table;
@@ -242,7 +242,7 @@ fn ablation_straggler_model() {
             cfg.straggler = StragglerConfig {
                 k: 2,
                 delay: Duration::from_millis(25),
-                exponential,
+                dist: if exponential { DelayDist::Exponential } else { DelayDist::Fixed },
             };
             cfg.seed = 17;
             let factory = backend_factory(&cfg, common::artifacts_dir(), &spec);

@@ -18,7 +18,7 @@ use std::io::Write;
 use std::time::{Duration, Instant};
 
 use coded_marl::coding::decoder::{DecodeMethod, Decoder};
-use coded_marl::coding::{Code, CodeParams, Scheme};
+use coded_marl::coding::{Code, CodeParams, RankTracker, Scheme};
 use coded_marl::metrics::table::{fmt_duration, Table};
 use coded_marl::rng::Pcg32;
 
@@ -33,7 +33,18 @@ struct Record {
     erasures: usize,
 }
 
-fn write_bench_json(records: &[Record]) -> std::io::Result<std::path::PathBuf> {
+/// One per-arrival decodability-check measurement: the old collect
+/// loop's full re-rank per arrival vs the incremental tracker, over an
+/// adversarial arrival order (the decisive rows arrive last).
+struct ArrivalCheck {
+    scheme: &'static str,
+    n: usize,
+    m: usize,
+    full: Duration,
+    tracker: Duration,
+}
+
+fn write_bench_json(records: &[Record], checks: &[ArrivalCheck]) -> std::io::Result<std::path::PathBuf> {
     let dir = std::env::var("CODED_MARL_BENCH_DIR").unwrap_or_else(|_| ".".into());
     let path = std::path::Path::new(&dir).join("BENCH_decode_micro.json");
     if let Some(parent) = path.parent() {
@@ -58,10 +69,68 @@ fn write_bench_json(records: &[Record]) -> std::io::Result<std::path::PathBuf> {
             r.erasures,
         )?;
     }
+    writeln!(f, "  ],")?;
+    writeln!(f, "  \"arrival_checks\": [")?;
+    for (i, c) in checks.iter().enumerate() {
+        let comma = if i + 1 == checks.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"scheme\": \"{}\", \"n\": {}, \"m\": {}, \"full_s\": {:.9}, \
+             \"tracker_s\": {:.9}}}{comma}",
+            c.scheme,
+            c.n,
+            c.m,
+            c.full.as_secs_f64(),
+            c.tracker.as_secs_f64(),
+        )?;
+    }
     writeln!(f, "  ]")?;
     writeln!(f, "}}")?;
     f.flush()?;
     Ok(path)
+}
+
+/// Arrival order that keeps the received set undecodable as long as the
+/// code structure allows: every row covering the least-covered agent
+/// arrives last (the "essential stragglers reply last" worst case the
+/// collect loop actually hits under injected delays).
+fn adversarial_order(code: &Code) -> Vec<usize> {
+    let mut cover = vec![0usize; code.m];
+    for j in 0..code.n {
+        for &(i, _) in code.assignments(j) {
+            cover[i] += 1;
+        }
+    }
+    let scarce = (0..code.m).min_by_key(|&i| cover[i]).unwrap_or(0);
+    let covers = |j: usize| code.assignments(j).iter().any(|&(i, _)| i == scarce);
+    let mut order: Vec<usize> = (0..code.n).filter(|&j| !covers(j)).collect();
+    order.extend((0..code.n).filter(|&j| covers(j)));
+    order
+}
+
+/// Replay the collect loop's decision sequence over `order` with the
+/// OLD per-arrival full re-rank; returns the accepting arrival index.
+fn collect_full_rank(code: &Code, order: &[usize]) -> usize {
+    let mut received = Vec::with_capacity(order.len());
+    for (a, &j) in order.iter().enumerate() {
+        received.push(j);
+        if received.len() >= code.m && code.decodable(&received) {
+            return a;
+        }
+    }
+    usize::MAX
+}
+
+/// The same decision sequence through the incremental tracker.
+fn collect_tracked(code: &Code, order: &[usize]) -> usize {
+    let mut tracker = RankTracker::new(code);
+    for (a, &j) in order.iter().enumerate() {
+        tracker.push_row(code.matrix().row(j));
+        if tracker.decodable() {
+            return a;
+        }
+    }
+    usize::MAX
 }
 
 fn encode(code: &Code, theta: &[Vec<f32>], rows: &[usize]) -> Vec<Vec<f32>> {
@@ -189,7 +258,67 @@ fn main() {
         ]);
     }
     print!("{}", table.render());
-    match write_bench_json(&records) {
+
+    println!("\n=== per-arrival decodability check: full re-rank (old collect) vs tracker ===");
+    println!("(adversarial arrival order — the decisive rows reply last, so the old path");
+    println!(" re-ranks the whole received set at every arrival past the M-th; MDS is the");
+    println!(" any-M-rows control: both paths accept at arrival M, expect ~1x there)");
+    let mut checks: Vec<ArrivalCheck> = Vec::new();
+    let mut table = Table::new(&["scheme", "N", "accept idx", "full re-rank", "tracker", "speedup"]);
+    for &n_learners in &[15usize, 256, 1024, 2048] {
+        for scheme in [Scheme::Mds, Scheme::Ldpc] {
+            let code = Code::build(&CodeParams { scheme, n: n_learners, m: 8, p_m: 0.8, seed: 1 });
+            let order = adversarial_order(&code);
+            let accept_full = collect_full_rank(&code, &order);
+            let accept_tracked = collect_tracked(&code, &order);
+            assert_eq!(
+                accept_full, accept_tracked,
+                "tracker must accept at the identical arrival ({} N={n_learners})",
+                scheme.name()
+            );
+            let full = time_median(
+                || {
+                    std::hint::black_box(collect_full_rank(&code, &order));
+                },
+                5,
+            );
+            let tracker = time_median(
+                || {
+                    std::hint::black_box(collect_tracked(&code, &order));
+                },
+                5,
+            );
+            table.row(&[
+                scheme.name().to_string(),
+                n_learners.to_string(),
+                (accept_full + 1).to_string(),
+                fmt_duration(full),
+                fmt_duration(tracker),
+                format!("{:.1}x", full.as_secs_f64() / tracker.as_secs_f64().max(1e-12)),
+            ]);
+            checks.push(ArrivalCheck {
+                scheme: scheme.name(),
+                n: n_learners,
+                m: 8,
+                full,
+                tracker,
+            });
+        }
+    }
+    print!("{}", table.render());
+    // The full path at N = 10 000 would re-rank ~10⁴ arrivals of a
+    // 10⁴-row set — minutes; the tracker alone shows the scale is free.
+    let code = Code::build(&CodeParams { scheme: Scheme::Ldpc, n: 10_000, m: 8, p_m: 0.8, seed: 1 });
+    let order = adversarial_order(&code);
+    let t = time_median(
+        || {
+            std::hint::black_box(collect_tracked(&code, &order));
+        },
+        5,
+    );
+    println!("ldpc N=10000 tracker-only: {} for the full arrival sequence", fmt_duration(t));
+
+    match write_bench_json(&records, &checks) {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\ncould not write BENCH_decode_micro.json: {e}"),
     }

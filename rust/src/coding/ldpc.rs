@@ -106,7 +106,12 @@ pub fn ldpc_assignment(n: usize, m: usize, rng: &mut Pcg32) -> Mat {
     // Try the paper's array construction first (it systematizes while
     // n − m stays within the base matrix's rank, i.e. paper scale);
     // fall back to the directly-systematic random parity otherwise.
+    // The array base has GF(2) rank ≤ w² (block-row r equals block-row
+    // r mod w because A^w = I), so when r > w² systematization is
+    // guaranteed to fail — skip straight to the fallback instead of
+    // building and eliminating an r×n matrix only to discover that.
     let sys = pick_w(n)
+        .filter(|&w| r <= w * w)
         .map(|w| array_parity_base(n, w, r).take_rows(r))
         .and_then(|h| h.systematize())
         .unwrap_or_else(|| random_systematic_parity(r, n, rng));
@@ -198,6 +203,17 @@ mod tests {
         for col in 0..15 {
             let ones: usize = (0..h.rows).map(|r| h.get(r, col) as usize).sum();
             assert_eq!(ones, 2, "col {col} should have one 1 per block-row");
+        }
+    }
+
+    /// The premise of the large-N gate in [`ldpc_assignment`]: block-row
+    /// r of the array base repeats block-row r mod w (A^w = I), so its
+    /// GF(2) rank never exceeds w² no matter how many rows are stacked.
+    #[test]
+    fn array_base_rank_is_at_most_w_squared() {
+        for (n, w) in [(15usize, 5usize), (12, 3), (8, 2)] {
+            let h = array_parity_base(n, w, w * w + w);
+            assert!(h.rank() <= w * w, "n={n} w={w} rank={}", h.rank());
         }
     }
 

@@ -15,11 +15,15 @@
 //!
 //! Submodules: [`schemes`] (constructions), [`ldpc`] (parity-check
 //! machinery), [`decoder`] (recovery paths: QR, normal equations,
-//! peeling).
+//! peeling), [`rank_tracker`] (incremental decodability for the
+//! collect hot path).
 
 pub mod decoder;
 pub mod ldpc;
+pub mod rank_tracker;
 pub mod schemes;
+
+pub use rank_tracker::RankTracker;
 
 use crate::linalg::Mat;
 use crate::rng::Pcg32;
@@ -103,6 +107,10 @@ pub struct Code {
     rows_f32: Vec<Vec<f32>>,
     /// Rows with at least one nonzero entry (learners that do work).
     active_rows: usize,
+    /// Absolute pivot tolerance for incremental rank tracking:
+    /// `RANK_TOL · max|C|`, precomputed so [`RankTracker::new`] is O(1)
+    /// on the per-iteration collect path instead of re-scanning C.
+    rank_eps: f64,
 }
 
 /// Construction parameters.
@@ -164,7 +172,23 @@ impl Code {
             .map(|j| c.row(j).iter().map(|&v| v as f32).collect())
             .collect();
         let active_rows = sparse.iter().filter(|s| !s.is_empty()).count();
-        Code { scheme, n: c.rows, m: c.cols, c, p_m, sparse, rows_f32, active_rows }
+        let maxabs = c.data.iter().fold(0.0f64, |acc, x| acc.max(x.abs()));
+        Code {
+            scheme,
+            n: c.rows,
+            m: c.cols,
+            c,
+            p_m,
+            sparse,
+            rows_f32,
+            active_rows,
+            rank_eps: RANK_TOL * maxabs,
+        }
+    }
+
+    /// The precomputed incremental-rank tolerance (see [`RankTracker`]).
+    pub(crate) fn rank_eps(&self) -> f64 {
+        self.rank_eps
     }
 
     /// The dense assignment matrix `C` (N×M), read-only.
@@ -269,14 +293,17 @@ impl Code {
     }
 
     /// Exhaustive check: does EVERY straggler subset of size `k` leave
-    /// the code decodable?
+    /// the code decodable? Uses the shared early-exit tracker loop
+    /// ([`Code::decodable_excluding`], decision-equivalent to
+    /// [`Code::decodable`]) so the per-subset cost is O(M²·(1+ε))
+    /// instead of a full O(N·M²) elimination — the k = 1 pass alone
+    /// visits N subsets.
     fn all_straggler_subsets_decodable(&self, k: usize) -> bool {
         let mut all_ok = true;
+        let mut tracker = RankTracker::new(self);
         for_each_combination(self.n, k, &mut |stragglers| {
             if all_ok {
-                let received: Vec<usize> =
-                    (0..self.n).filter(|j| !stragglers.contains(j)).collect();
-                all_ok &= self.decodable(&received);
+                all_ok &= self.decodable_excluding(&mut tracker, |j| stragglers.contains(&j));
             }
         });
         all_ok
@@ -326,12 +353,20 @@ impl Code {
     /// repeated calls agree.
     fn monte_carlo_tolerance(&self, known_good: usize, max_k: usize) -> usize {
         let mut rng = Pcg32::new(((self.n as u64) << 32) | self.m as u64, 0x701E5A);
+        // Shared early-exit tracker loop + straggler mask: each trial
+        // costs O(N) plus O(M·rank) per pushed row — the old per-trial
+        // `select_rows` + full elimination (and the O(N·k) `contains`
+        // scan) made N = 10 000 analytics the slowest part of a sweep.
+        let mut tracker = RankTracker::new(self);
+        let mut straggling = vec![false; self.n];
         let mut sample_ok = |k: usize| -> bool {
             for _ in 0..MC_TOLERANCE_TRIALS {
                 let stragglers = rng.choose_k(self.n, k);
-                let received: Vec<usize> =
-                    (0..self.n).filter(|j| !stragglers.contains(j)).collect();
-                if !self.decodable(&received) {
+                straggling.fill(false);
+                for &j in &stragglers {
+                    straggling[j] = true;
+                }
+                if !self.decodable_excluding(&mut tracker, |j| straggling[j]) {
                     return false;
                 }
             }

@@ -1,0 +1,282 @@
+//! Incremental decodability tracking for the collect hot path.
+//!
+//! The controller's Alg. 1 lines 10-13 loop asks, on **every** arrival
+//! past the M-th, "does the received set span R^M?". The batch answer
+//! (`Code::decodable` → `select_rows` + full Gaussian elimination) costs
+//! O(|I|·M²) per arrival and O(N²·M²) per iteration once stragglers
+//! push the decodable subset toward the tail — the named engine limit
+//! that made N ≫ 1000 sweeps intractable.
+//!
+//! [`RankTracker`] maintains the elimination *incrementally*: it keeps
+//! the reduced pivot rows of everything received so far, charges one
+//! O(M·rank) reduction per arrival, and answers [`RankTracker::decodable`]
+//! in O(1). Over a whole collection the total work is O(|I|·M·rank) ≤
+//! O(|I|·M²) — the cost of ONE batch check — instead of one batch check
+//! *per arrival*.
+//!
+//! ## Agreement with `Code::decodable`
+//!
+//! The tracker must make the same accept/reject decision the batch rank
+//! check makes, for every prefix of every arrival order:
+//!
+//! * Its tolerance is `RANK_TOL · max|C|` over the **full** assignment
+//!   matrix, while the batch check uses `RANK_TOL · max|C_I|` over the
+//!   received submatrix — the tracker's epsilon is ≥ the batch epsilon,
+//!   i.e. at least as strict, and the constructions in use keep their
+//!   row maxima within a few orders of magnitude of each other.
+//! * An arriving row is reduced against the current pivot rows and its
+//!   largest remaining entry becomes the new pivot. For the rows these
+//!   codes produce, a dependent row cancels to O(machine-eps · scale)
+//!   ≪ ε while an independent row keeps a pivot ≫ ε, so both
+//!   algorithms land on the same side of the tolerance.
+//!
+//! That argument is empirical at the margin, so it is pinned by a
+//! property test (`rust/tests/coding_properties.rs`): for every scheme
+//! and randomized arrival order, every prefix's tracker decision must
+//! equal `Code::decodable`'s, bit for bit.
+
+use crate::linalg::Mat;
+
+use super::{Code, RANK_TOL};
+
+/// Incremental row-rank tracker over a growing set of received rows.
+///
+/// Holds at most M reduced pivot rows (each of length M), so the
+/// memory footprint is O(M²) regardless of how many rows arrive.
+#[derive(Clone, Debug)]
+pub struct RankTracker {
+    m: usize,
+    /// Absolute pivot tolerance: `RANK_TOL · max|C|` (see module docs).
+    eps: f64,
+    /// Reduced pivot rows, flat `rank × m` storage.
+    basis: Vec<f64>,
+    /// `pivot_cols[i]` is the pivot column of basis row `i`; the stored
+    /// row is scaled so that entry is exactly 1.0.
+    pivot_cols: Vec<usize>,
+    rank: usize,
+    /// Scratch row reused across pushes (no per-arrival allocation).
+    scratch: Vec<f64>,
+}
+
+impl RankTracker {
+    /// Tracker for the given code's assignment matrix (rows are pushed
+    /// via [`RankTracker::push_row`]). O(1): the tolerance is
+    /// precomputed at code construction, so the per-iteration collect
+    /// path never re-scans the N×M matrix.
+    pub fn new(code: &Code) -> RankTracker {
+        RankTracker::with_tolerance(code.m, code.rank_eps())
+    }
+
+    /// Tracker for an arbitrary assignment matrix (N×M, rows pushed as
+    /// learners reply).
+    pub fn for_matrix(c: &Mat) -> RankTracker {
+        let maxabs = c.data.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        RankTracker::with_tolerance(c.cols, RANK_TOL * maxabs)
+    }
+
+    /// Tracker over R^m with an explicit absolute pivot tolerance.
+    pub fn with_tolerance(m: usize, eps: f64) -> RankTracker {
+        RankTracker {
+            m,
+            eps,
+            basis: Vec::with_capacity(m * m),
+            pivot_cols: Vec::with_capacity(m),
+            rank: 0,
+            scratch: vec![0.0; m],
+        }
+    }
+
+    /// Current row rank of everything pushed so far.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// O(1): does the received set span R^M (⇔ `rank(C_I) = M`, the
+    /// paper's decodability condition)?
+    #[inline]
+    pub fn decodable(&self) -> bool {
+        self.rank == self.m
+    }
+
+    /// Forget everything (start a new iteration) without releasing the
+    /// backing storage.
+    pub fn reset(&mut self) {
+        self.basis.clear();
+        self.pivot_cols.clear();
+        self.rank = 0;
+    }
+
+    /// Fold one received row into the factorization: reduce it against
+    /// the current pivot rows (O(M·rank)), and if an entry above the
+    /// tolerance survives, keep it as a new pivot row. Returns `true`
+    /// iff the rank increased.
+    pub fn push_row(&mut self, row: &[f64]) -> bool {
+        debug_assert_eq!(row.len(), self.m);
+        if self.rank == self.m {
+            return false; // already full rank; nothing can change
+        }
+        let m = self.m;
+        self.scratch.copy_from_slice(row);
+        for (b, &pc) in self.basis.chunks_exact(m).zip(&self.pivot_cols) {
+            let f = self.scratch[pc];
+            if f != 0.0 {
+                for (x, &bv) in self.scratch.iter_mut().zip(b) {
+                    *x -= f * bv;
+                }
+                // the pivot position cancels exactly by construction
+                self.scratch[pc] = 0.0;
+            }
+        }
+        // largest surviving entry becomes this row's pivot
+        let (mut pc, mut pv) = (0usize, 0.0f64);
+        for (c, &x) in self.scratch.iter().enumerate() {
+            if x.abs() > pv {
+                pv = x.abs();
+                pc = c;
+            }
+        }
+        if pv <= self.eps {
+            return false; // dependent on (or numerically within) the span
+        }
+        let inv = 1.0 / self.scratch[pc];
+        for x in self.scratch.iter_mut() {
+            *x *= inv;
+        }
+        self.scratch[pc] = 1.0;
+        self.basis.extend_from_slice(&self.scratch);
+        self.pivot_cols.push(pc);
+        self.rank += 1;
+        true
+    }
+}
+
+impl Code {
+    /// The one early-exit decodability loop behind every subset search
+    /// (exact enumeration and Monte-Carlo tolerance): resets `tracker`
+    /// and folds in the rows of every learner for whom `straggling` is
+    /// false, returning as soon as rank M is reached. O(Σ M·rank)
+    /// instead of the batch O(|I|·M²) elimination — at cluster scale
+    /// (|I| ≈ N ≫ M) the batch check would clone an N×M submatrix per
+    /// query. Decision-equivalent to [`Code::decodable`] (pinned by the
+    /// property test); keep a single copy so a tolerance or early-exit
+    /// tweak can never desynchronize the search paths.
+    pub(crate) fn decodable_excluding(
+        &self,
+        tracker: &mut RankTracker,
+        straggling: impl Fn(usize) -> bool,
+    ) -> bool {
+        tracker.reset();
+        for j in 0..self.n {
+            if !straggling(j)
+                && tracker.push_row(self.matrix().row(j))
+                && tracker.decodable()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Batch-call form of the same early-exit loop for an explicit
+    /// received list (library surface + the tracker property tests;
+    /// the subset searches use [`Code::decodable_excluding`] to avoid
+    /// materializing received lists).
+    pub fn decodable_incremental(&self, received: &[usize]) -> bool {
+        if received.len() < self.m {
+            return false;
+        }
+        let mut tracker = RankTracker::new(self);
+        for &j in received {
+            if tracker.push_row(self.matrix().row(j)) && tracker.decodable() {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeParams, Scheme};
+
+    fn build(scheme: Scheme, n: usize, m: usize) -> Code {
+        Code::build(&CodeParams::new(scheme, n, m))
+    }
+
+    #[test]
+    fn tracker_matches_batch_on_full_arrival() {
+        for scheme in Scheme::ALL {
+            let code = build(scheme, 15, 8);
+            let mut t = RankTracker::new(&code);
+            let mut received = Vec::new();
+            for j in 0..15 {
+                received.push(j);
+                t.push_row(code.matrix().row(j));
+                assert_eq!(
+                    t.decodable(),
+                    code.decodable(&received),
+                    "scheme={scheme} prefix={received:?}"
+                );
+            }
+            assert!(t.decodable(), "scheme={scheme}: all rows must span R^M");
+            assert_eq!(t.rank(), 8);
+        }
+    }
+
+    #[test]
+    fn rank_saturates_and_resets() {
+        let code = build(Scheme::Mds, 10, 4);
+        let mut t = RankTracker::new(&code);
+        for j in 0..10 {
+            t.push_row(code.matrix().row(j));
+        }
+        assert_eq!(t.rank(), 4);
+        // further pushes are O(1) no-ops once full rank is reached
+        assert!(!t.push_row(code.matrix().row(0)));
+        t.reset();
+        assert_eq!(t.rank(), 0);
+        assert!(!t.decodable());
+        assert!(t.push_row(code.matrix().row(3)));
+        assert_eq!(t.rank(), 1);
+    }
+
+    #[test]
+    fn duplicate_and_dependent_rows_add_no_rank() {
+        let code = build(Scheme::Uncoded, 8, 4);
+        let mut t = RankTracker::new(&code);
+        assert!(t.push_row(code.matrix().row(0)));
+        assert!(!t.push_row(code.matrix().row(0)), "duplicate row");
+        // learners 4..8 have all-zero rows under uncoded
+        assert!(!t.push_row(code.matrix().row(5)), "zero row");
+        assert_eq!(t.rank(), 1);
+    }
+
+    #[test]
+    fn zero_tolerance_zero_matrix() {
+        let mut t = RankTracker::with_tolerance(3, 0.0);
+        assert!(!t.push_row(&[0.0, 0.0, 0.0]));
+        assert_eq!(t.rank(), 0);
+    }
+
+    #[test]
+    fn decodable_incremental_matches_batch() {
+        for scheme in Scheme::ALL {
+            let code = build(scheme, 15, 8);
+            let mut rng = crate::rng::Pcg32::seeded(17);
+            for k in 0..=7usize {
+                for _ in 0..20 {
+                    let stragglers = rng.choose_k(15, k);
+                    let received: Vec<usize> =
+                        (0..15).filter(|j| !stragglers.contains(j)).collect();
+                    assert_eq!(
+                        code.decodable_incremental(&received),
+                        code.decodable(&received),
+                        "scheme={scheme} received={received:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -101,27 +101,87 @@ impl TimeMode {
     }
 }
 
+/// How an injected straggler's delay is drawn each iteration. Every
+/// non-fixed distribution is **mean-normalized to t_s**, so sweeps
+/// over tails compare equal injected delay *budgets* and differ only
+/// in how that budget concentrates in the tail.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelayDist {
+    /// Deterministic t_s — the paper's §V-C model.
+    Fixed,
+    /// `t_s · Exp(1)`: light exponential tail (the PR-0 ablation's
+    /// `--straggler-exponential`, kept as an alias).
+    Exponential,
+    /// Pareto with shape `alpha` (must be > 1 for a finite mean),
+    /// scaled to mean t_s: `x_m / U^{1/alpha}` with
+    /// `x_m = t_s·(alpha−1)/alpha`. Power-law tail — the heavy-tail
+    /// regime measured in cluster traces; `alpha < 2` has infinite
+    /// variance.
+    Pareto { alpha: f64 },
+    /// Lognormal with shape `sigma` (> 0), scaled to mean t_s:
+    /// `t_s · exp(sigma·Z − sigma²/2)`.
+    LogNormal { sigma: f64 },
+}
+
+impl DelayDist {
+    /// Default Pareto shape (`--delay-alpha`) — single source for every
+    /// CLI surface that reads the knob.
+    pub const DEFAULT_ALPHA: f64 = 1.5;
+    /// Default lognormal shape (`--delay-sigma`).
+    pub const DEFAULT_SIGMA: f64 = 1.0;
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DelayDist::Fixed => "fixed",
+            DelayDist::Exponential => "exponential",
+            DelayDist::Pareto { .. } => "pareto",
+            DelayDist::LogNormal { .. } => "lognormal",
+        }
+    }
+
+    /// Parse a `--delay-dist` value; `alpha`/`sigma` are the shape
+    /// knobs for the families that take one.
+    pub fn parse(s: &str, alpha: f64, sigma: f64) -> Option<DelayDist> {
+        match s {
+            "fixed" => Some(DelayDist::Fixed),
+            "exponential" | "exp" => Some(DelayDist::Exponential),
+            "pareto" => Some(DelayDist::Pareto { alpha }),
+            "lognormal" => Some(DelayDist::LogNormal { sigma }),
+            _ => None,
+        }
+    }
+
+    /// Short human label for run summaries.
+    pub fn label(&self) -> String {
+        match self {
+            DelayDist::Fixed => "fixed".into(),
+            DelayDist::Exponential => "exp".into(),
+            DelayDist::Pareto { alpha } => format!("pareto(a={alpha})"),
+            DelayDist::LogNormal { sigma } => format!("lognormal(s={sigma})"),
+        }
+    }
+}
+
 /// Straggler injection model (paper §V-C): each iteration, `k` learners
-/// chosen uniformly at random delay their reply by `delay`.
+/// chosen uniformly at random delay their reply; the delay is `delay`
+/// itself or a mean-`delay` draw from [`DelayDist`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StragglerConfig {
     /// Number of stragglers per iteration.
     pub k: usize,
-    /// The injected delay t_s.
+    /// The injected delay t_s (the mean for non-fixed distributions).
     pub delay: std::time::Duration,
-    /// Extension beyond the paper's fixed-delay model: when set, each
-    /// straggler's delay is drawn as `delay * Exp(1)` instead of the
-    /// deterministic `delay` (heavy-tail slowdowns; ablation bench).
-    pub exponential: bool,
+    /// Distribution the per-straggler delay is drawn from.
+    pub dist: DelayDist,
 }
 
 impl StragglerConfig {
     pub fn none() -> StragglerConfig {
-        StragglerConfig { k: 0, delay: std::time::Duration::ZERO, exponential: false }
+        StragglerConfig { k: 0, delay: std::time::Duration::ZERO, dist: DelayDist::Fixed }
     }
 
     pub fn fixed(k: usize, delay: std::time::Duration) -> StragglerConfig {
-        StragglerConfig { k, delay, exponential: false }
+        StragglerConfig { k, delay, dist: DelayDist::Fixed }
     }
 }
 
@@ -249,7 +309,20 @@ impl TrainConfig {
             cfg.straggler.delay = std::time::Duration::from_millis(v.parse()?);
         }
         if args.flag("straggler-exponential") {
-            cfg.straggler.exponential = true;
+            cfg.straggler.dist = DelayDist::Exponential;
+        }
+        // Shape knobs are read unconditionally so `args.finish()` never
+        // flags them as unknown when `--delay-dist` is absent.
+        let delay_alpha = args.get_or("delay-alpha", DelayDist::DEFAULT_ALPHA)?;
+        let delay_sigma = args.get_or("delay-sigma", DelayDist::DEFAULT_SIGMA)?;
+        if let Some(v) = args.opt("delay-dist") {
+            cfg.straggler.dist = DelayDist::parse(v, delay_alpha, delay_sigma)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown delay distribution '{v}' \
+                         (fixed|exponential|pareto|lognormal)"
+                    )
+                })?;
         }
         if let Some(v) = args.opt("iterations") {
             cfg.iterations = v.parse()?;
@@ -337,6 +410,15 @@ impl TrainConfig {
         if self.collect_timeout.is_zero() {
             bail!("collect timeout must be > 0");
         }
+        match self.straggler.dist {
+            DelayDist::Pareto { alpha } if alpha <= 1.0 => {
+                bail!("pareto delay shape must satisfy alpha > 1 (finite mean), got {alpha}");
+            }
+            DelayDist::LogNormal { sigma } if sigma <= 0.0 => {
+                bail!("lognormal delay shape must satisfy sigma > 0, got {sigma}");
+            }
+            _ => {}
+        }
         if self.time_mode == TimeMode::Virtual {
             if self.transport != Transport::Local {
                 bail!(
@@ -364,7 +446,10 @@ impl TrainConfig {
             self.decode.name(),
             self.straggler.k,
             self.straggler.delay,
-            if self.straggler.exponential { ", exp" } else { "" },
+            match self.straggler.dist {
+                DelayDist::Fixed => String::new(),
+                d => format!(", {}", d.label()),
+            },
             self.iterations,
             self.backend.name(),
             self.transport.name(),
@@ -416,7 +501,7 @@ mod tests {
         assert_eq!(cfg.decode, DecodeMethod::Peeling);
         assert_eq!(cfg.straggler.k, 5);
         assert_eq!(cfg.straggler.delay, std::time::Duration::from_millis(150));
-        assert!(cfg.straggler.exponential);
+        assert_eq!(cfg.straggler.dist, DelayDist::Exponential);
         assert_eq!(cfg.backend, Backend::Mock);
         assert_eq!(cfg.mock_compute, std::time::Duration::from_micros(500));
         assert_eq!(cfg.transport, Transport::Tcp);
@@ -431,6 +516,35 @@ mod tests {
         assert!(parse(&["--preset", "x", "--stragglers", "99"]).is_err());
         assert!(parse(&["--preset", "x", "--p-m", "1.5"]).is_err());
         assert!(parse(&["--preset", "x", "--iterations", "0"]).is_err());
+    }
+
+    #[test]
+    fn delay_dist_parses_with_shape_knobs() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert_eq!(cfg.straggler.dist, DelayDist::Fixed);
+        let cfg = parse(&["--preset", "x", "--delay-dist", "pareto"]).unwrap();
+        assert_eq!(cfg.straggler.dist, DelayDist::Pareto { alpha: 1.5 });
+        let cfg =
+            parse(&["--preset", "x", "--delay-dist", "pareto", "--delay-alpha", "2.5"]).unwrap();
+        assert_eq!(cfg.straggler.dist, DelayDist::Pareto { alpha: 2.5 });
+        let cfg =
+            parse(&["--preset", "x", "--delay-dist", "lognormal", "--delay-sigma", "0.5"]).unwrap();
+        assert_eq!(cfg.straggler.dist, DelayDist::LogNormal { sigma: 0.5 });
+        let cfg = parse(&["--preset", "x", "--delay-dist", "exp"]).unwrap();
+        assert_eq!(cfg.straggler.dist, DelayDist::Exponential);
+        // shape validation: infinite-mean pareto and degenerate lognormal
+        assert!(parse(&["--preset", "x", "--delay-dist", "pareto", "--delay-alpha", "1.0"])
+            .is_err());
+        assert!(parse(&["--preset", "x", "--delay-dist", "lognormal", "--delay-sigma", "0"])
+            .is_err());
+        assert!(parse(&["--preset", "x", "--delay-dist", "weibull"]).is_err());
+        // legacy switch stays an alias
+        let cfg = parse(&["--preset", "x", "--straggler-exponential"]).unwrap();
+        assert_eq!(cfg.straggler.dist, DelayDist::Exponential);
+        // summary names the tail
+        let mut c = TrainConfig::new("x");
+        c.straggler.dist = DelayDist::Pareto { alpha: 1.5 };
+        assert!(c.summary().contains("pareto"));
     }
 
     #[test]

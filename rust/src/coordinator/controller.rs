@@ -24,7 +24,7 @@ use super::rollout;
 use super::straggler::StragglerInjector;
 use super::RunSpec;
 use crate::coding::decoder::Decoder;
-use crate::coding::{Code, CodeParams};
+use crate::coding::{Code, CodeParams, RankTracker};
 use crate::config::TrainConfig;
 use crate::env::make_env;
 use crate::marl::buffer::ReplayBuffer;
@@ -398,13 +398,22 @@ impl<T: ControllerTransport> Controller<T> {
     /// (Alg. 1 lines 10-13), gathering the telemetry the adaptive
     /// selector consumes. `tasked` is how many learners were actually
     /// sent a task this iteration (idle zero-row learners are skipped
-    /// at broadcast and can never reply).
+    /// at broadcast and can never legitimately reply).
+    ///
+    /// Decodability is tracked **incrementally**: each accepted arrival
+    /// folds its assignment row into a [`RankTracker`] at O(M·rank),
+    /// and the accept test is the tracker's O(1) `decodable()` — not a
+    /// fresh O(|I|·M²) elimination of the whole received set per
+    /// arrival. Decisions are identical to `Code::decodable` (pinned by
+    /// property test); at N ≫ 1000 this turns the collect loop from
+    /// O(N²·M²) worst case into O(N·M²) total.
     fn collect(&mut self, iter: u64, tasked: usize) -> Result<CollectOutcome> {
         let m = self.spec.m;
         let n = self.cfg.n_learners;
         let mut received: Vec<usize> = Vec::with_capacity(n);
         let mut results: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut got = vec![false; n];
+        let mut tracker = RankTracker::new(self.code());
         let mut mth_arrival: Option<Duration> = None;
         let mut compute_sum = 0.0f64;
         let mut compute_n = 0usize;
@@ -430,18 +439,25 @@ impl<T: ControllerTransport> Controller<T> {
                     if ri != iter || j >= n || got[j] {
                         continue; // stale or duplicate
                     }
+                    let workload = self.code().workload(j);
+                    if workload == 0 {
+                        // This learner was never tasked (all-zero row):
+                        // a spurious reply must not inflate
+                        // `results_used` or trip the `== tasked`
+                        // rank-deficiency bail below — drop it exactly
+                        // like a stale message.
+                        continue;
+                    }
                     got[j] = true;
+                    tracker.push_row(self.code().matrix().row(j));
                     received.push(j);
                     results.push(y);
-                    let workload = self.code().workload(j);
-                    if workload > 0 {
-                        compute_sum += compute_ns as f64 / 1e9 / workload as f64;
-                        compute_n += 1;
-                    }
+                    compute_sum += compute_ns as f64 / 1e9 / workload as f64;
+                    compute_n += 1;
                     if received.len() == m {
                         mth_arrival = Some(self.clock.now());
                     }
-                    if received.len() >= m && self.code().decodable(&received) {
+                    if tracker.decodable() {
                         let stall = mth_arrival
                             .map(|t| self.clock.now().saturating_sub(t))
                             .unwrap_or(Duration::ZERO);

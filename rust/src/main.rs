@@ -10,6 +10,9 @@
 //! * `presets` — list the AOT-lowered presets in the artifacts manifest
 //! * `sim-sweep` — straggler sweep over schemes × k in **virtual time**
 //!   (discrete-event simulation; paper-scale delays at hardware speed)
+//! * `scale-study` — the cluster-scale study: schemes × k-fractions ×
+//!   N × delay tails (fixed/exponential/Pareto/lognormal), emitting
+//!   `BENCH_scale.json` and the MDS-vs-LDPC crossover table
 
 use anyhow::{Context, Result};
 
@@ -37,6 +40,7 @@ SUBCOMMANDS:
     code       inspect a coding scheme's assignment matrix
     presets    list AOT-lowered presets
     sim-sweep  straggler sweep over schemes x k in virtual time
+    scale-study  cluster-scale sweep: N x delay-tail grid, BENCH_scale.json
 
 COMMON TRAIN FLAGS:
     --preset NAME              preset from artifacts/manifest.json (required)
@@ -46,7 +50,10 @@ COMMON TRAIN FLAGS:
     --decode D                 auto|qr|normal_equations|peeling [auto]
     --stragglers K             stragglers per iteration  [0]
     --straggler-delay-ms MS    injected delay t_s        [0]
-    --straggler-exponential    exponential instead of fixed delay
+    --delay-dist D             fixed|exponential|pareto|lognormal [fixed]
+    --delay-alpha A            pareto shape (> 1)        [1.5]
+    --delay-sigma S            lognormal shape (> 0)     [1.0]
+    --straggler-exponential    alias for --delay-dist exponential
     --iterations I             training iterations       [50]
     --episodes E               episodes per iteration    [2]
     --episode-len L            steps per episode         [25]
@@ -70,18 +77,32 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --schemes S1,S2            schemes to sweep          [all five]
     --stragglers-list K1,K2    straggler counts          [0,1,2,4,7]
     --straggler-delay-ms MS    injected delay t_s        [250]
-    --straggler-exponential    heavy-tail Exp(1)-scaled delays
+    --delay-dist D             fixed|exponential|pareto|lognormal [fixed]
+    --delay-alpha A            pareto shape (> 1)        [1.5]
+    --delay-sigma S            lognormal shape (> 0)     [1.0]
+    --straggler-exponential    alias for --delay-dist exponential
     --iterations I             iterations per cell       [10]
     --mock-compute-us US       modeled per-update compute [2000]
     --sweep-threads T          parallel sweep shards (0 = all cores) [0]
     --seed S                   experiment seed           [0]
     --out-dir DIR              also write sim_sweep.csv + BENCH_sweep.json here
 
+SCALE-STUDY FLAGS (all optional; virtual time only):
+    --learners-list N1,N2      learner counts            [100,1000,10000]
+    --straggler-fracs F1,F2    straggler counts as fractions of N [0,0.05,0.25,0.5,0.9]
+    --delay-dists D1,D2        delay tails to compare    [fixed,pareto]
+    --m/--env/--adversaries/--schemes/--straggler-delay-ms/--delay-alpha/
+    --delay-sigma/--iterations/--mock-compute-us/--sweep-threads/--seed
+                               as in sim-sweep           [iterations: 5]
+    --out-dir DIR              write BENCH_scale.json here
+
 EXAMPLES:
     coded-marl train --preset coop_nav_m8 --scheme mds \\
         --stragglers 2 --straggler-delay-ms 250 --verbose
     coded-marl code --scheme ldpc --n 15 --m 8
     coded-marl sim-sweep --m 8 --straggler-delay-ms 250
+    coded-marl scale-study --learners-list 100,1000,10000 \\
+        --delay-dists fixed,pareto --out-dir bench-out
 ";
 
 fn main() {
@@ -93,6 +114,7 @@ fn main() {
         "code" => cmd_code(),
         "presets" => cmd_presets(),
         "sim-sweep" => cmd_sim_sweep(),
+        "scale-study" => cmd_scale_study(),
         "help" | "--help" | "-h" | "" => {
             print!("{USAGE}");
             Ok(())
@@ -185,6 +207,48 @@ fn cmd_worker() -> Result<()> {
     learner_loop(ep, id, backend, coded_marl::sim::real_clock())
 }
 
+/// Shared `--schemes` parsing for the sweep-style subcommands.
+fn parse_schemes(args: &Args) -> Result<Vec<Scheme>> {
+    match args.opt("schemes") {
+        None => Ok(Scheme::ALL.to_vec()),
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                Scheme::parse(s.trim())
+                    .with_context(|| format!("unknown scheme '{s}' in --schemes"))
+            })
+            .collect(),
+    }
+}
+
+/// Shared `--delay-alpha`/`--delay-sigma` shape knobs (defaults live on
+/// [`coded_marl::config::DelayDist`] so every surface agrees).
+fn delay_shape_knobs(args: &Args) -> Result<(f64, f64)> {
+    use coded_marl::config::DelayDist;
+    Ok((
+        args.get_or("delay-alpha", DelayDist::DEFAULT_ALPHA)?,
+        args.get_or("delay-sigma", DelayDist::DEFAULT_SIGMA)?,
+    ))
+}
+
+/// Shared `--delay-dist`/`--delay-alpha`/`--delay-sigma` parsing (the
+/// legacy `--straggler-exponential` switch stays an alias).
+fn parse_delay_dist(args: &Args) -> Result<coded_marl::config::DelayDist> {
+    use coded_marl::config::DelayDist;
+    let (alpha, sigma) = delay_shape_knobs(args)?;
+    let mut dist = if args.flag("straggler-exponential") {
+        DelayDist::Exponential
+    } else {
+        DelayDist::Fixed
+    };
+    if let Some(v) = args.opt("delay-dist") {
+        dist = DelayDist::parse(v, alpha, sigma).with_context(|| {
+            format!("unknown delay distribution '{v}' (fixed|exponential|pareto|lognormal)")
+        })?;
+    }
+    Ok(dist)
+}
+
 /// Straggler sweep over schemes × k in virtual time: the full
 /// discrete-event path (sim::SimTransport + VirtualClock), synthetic
 /// model dims, no artifacts needed. Paper-scale delays cost virtual
@@ -204,16 +268,7 @@ fn cmd_sim_sweep() -> Result<()> {
     let m = args.get_or("m", 8usize)?;
     let adversaries = args.get_or("adversaries", 0usize)?;
     let n = args.get_or("learners", 15usize)?;
-    let schemes = match args.opt("schemes") {
-        None => Scheme::ALL.to_vec(),
-        Some(csv) => csv
-            .split(',')
-            .map(|s| {
-                Scheme::parse(s.trim())
-                    .with_context(|| format!("unknown scheme '{s}' in --schemes"))
-            })
-            .collect::<Result<Vec<_>>>()?,
-    };
+    let schemes = parse_schemes(&args)?;
     let ks: Vec<usize> = match args.opt("stragglers-list") {
         None => vec![0, 1, 2, 4, 7],
         Some(csv) => csv
@@ -231,21 +286,25 @@ fn cmd_sim_sweep() -> Result<()> {
         std::time::Duration::from_micros(args.get_or("mock-compute-us", 2000u64)?);
     let seed = args.get_or("seed", 0u64)?;
     let sweep_threads = args.get_or("sweep-threads", 0usize)?;
-    let exponential = args.flag("straggler-exponential");
+    let dist = parse_delay_dist(&args)?;
     let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
     args.finish()?;
 
     let mut base = sweep_base(format!("{}_m{}", env.name(), m), n, iterations, mock_compute, seed);
-    base.straggler.exponential = exponential;
+    base.straggler.dist = dist;
     base.sweep_threads = sweep_threads;
+    // Heavy tails legitimately draw delays past the 120 s real-time
+    // default; virtual seconds are free, so give collect a wide window
+    // instead of failing the cell on a tail draw.
+    base.collect_timeout = std::time::Duration::from_secs(4 * 3600);
     // Lean synthetic dims: reported times come from the compute model,
     // not the mock's arithmetic, so small dims only cut wall cost.
     let spec = RunSpec::synthetic(env, m, adversaries, 32, 32);
 
     println!(
-        "sim-sweep: {} M={m} N={n} t_s={delay:?}{} compute={mock_compute:?}/update ({iterations} iters/cell, virtual time)",
+        "sim-sweep: {} M={m} N={n} t_s={delay:?} ({}) compute={mock_compute:?}/update ({iterations} iters/cell, virtual time)",
         env.name(),
-        if exponential { " (exponential)" } else { "" },
+        dist.label(),
     );
     let t0 = std::time::Instant::now();
     let cells = run_sweep(&SweepConfig {
@@ -279,6 +338,122 @@ fn cmd_sim_sweep() -> Result<()> {
         println!("wrote {}", path.display());
         let bench = dir.join("BENCH_sweep.json");
         write_bench_json(&cells, wall, &bench)
+            .with_context(|| format!("writing {}", bench.display()))?;
+        println!("wrote {}", bench.display());
+    }
+    Ok(())
+}
+
+/// The cluster-scale study (ROADMAP "cluster-scale scheduling
+/// studies"): for each delay tail and each N, a full schemes ×
+/// k-fraction sweep in virtual time; prints per-point tables plus the
+/// MDS-vs-LDPC crossover summary and writes `BENCH_scale.json`.
+fn cmd_scale_study() -> Result<()> {
+    use coded_marl::sim::sweep::{
+        crossover_summary, render_table, run_scale_study, simulated_total, sweep_base,
+        write_scale_json, ScaleStudyConfig,
+    };
+
+    let args = Args::from_env(2)?;
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+    let env_name = args.opt("env").unwrap_or("coop_nav").to_string();
+    let env = coded_marl::env::EnvKind::parse(&env_name)
+        .with_context(|| format!("unknown --env '{env_name}'"))?;
+    let m = args.get_or("m", 8usize)?;
+    let adversaries = args.get_or("adversaries", 0usize)?;
+    let schemes = parse_schemes(&args)?;
+    let ns: Vec<usize> = match args.opt("learners-list") {
+        None => vec![100, 1000, 10000],
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .with_context(|| format!("bad learner count '{s}' in --learners-list"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let k_fracs: Vec<f64> = match args.opt("straggler-fracs") {
+        None => vec![0.0, 0.05, 0.25, 0.5, 0.9],
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .with_context(|| format!("bad straggler fraction '{s}' in --straggler-fracs"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    if k_fracs.iter().any(|f| !(0.0..=1.0).contains(f)) {
+        anyhow::bail!("--straggler-fracs must lie in [0, 1]");
+    }
+    let (alpha, sigma) = delay_shape_knobs(&args)?;
+    let dists: Vec<coded_marl::config::DelayDist> = match args.opt("delay-dists") {
+        None => vec![
+            coded_marl::config::DelayDist::Fixed,
+            coded_marl::config::DelayDist::Pareto { alpha },
+        ],
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                coded_marl::config::DelayDist::parse(s.trim(), alpha, sigma).with_context(|| {
+                    format!("unknown delay distribution '{s}' in --delay-dists")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let delay = std::time::Duration::from_millis(args.get_or("straggler-delay-ms", 250u64)?);
+    let iterations = args.get_or("iterations", 5usize)?;
+    let mock_compute =
+        std::time::Duration::from_micros(args.get_or("mock-compute-us", 2000u64)?);
+    let seed = args.get_or("seed", 0u64)?;
+    let sweep_threads = args.get_or("sweep-threads", 0usize)?;
+    let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
+    args.finish()?;
+
+    let n0 = *ns.first().context("--learners-list must not be empty")?;
+    let mut base =
+        sweep_base(format!("{}_m{}", env.name(), m), n0, iterations, mock_compute, seed);
+    base.sweep_threads = sweep_threads;
+    // Heavy tails legitimately draw delays past the 120 s real-time
+    // default; virtual seconds are free.
+    base.collect_timeout = std::time::Duration::from_secs(4 * 3600);
+    let spec = RunSpec::synthetic(env, m, adversaries, 32, 32);
+
+    let dist_names: Vec<String> = dists.iter().map(|d| d.label()).collect();
+    println!(
+        "scale-study: {} M={m} N∈{ns:?} fracs={k_fracs:?} dists=[{}] t_s={delay:?} ({iterations} iters/cell, virtual time)",
+        env.name(),
+        dist_names.join(","),
+    );
+    let t0 = std::time::Instant::now();
+    let points = run_scale_study(&ScaleStudyConfig {
+        base,
+        spec,
+        schemes,
+        ns,
+        k_fracs,
+        delay,
+        dists,
+        artifacts_dir: artifacts.into(),
+    })?;
+    let wall = t0.elapsed();
+    for p in &points {
+        println!("\n--- N = {} · {} delays ({} wall) ---", p.n, p.dist.label(), fmt_duration(p.wall));
+        print!("{}", render_table(&p.cells, &p.ks));
+    }
+    println!("\n== crossover: winner per (dist, N, k); ldpc/mds < 1 ⇒ sparse overtakes ==");
+    print!("{}", crossover_summary(&points));
+    let simulated: std::time::Duration =
+        points.iter().map(|p| simulated_total(&p.cells)).sum();
+    println!(
+        "\nsimulated {} of training time in {} wall-clock",
+        fmt_duration(simulated),
+        fmt_duration(wall),
+    );
+    if let Some(dir) = out_dir {
+        let bench = dir.join("BENCH_scale.json");
+        write_scale_json(&points, wall, &bench)
             .with_context(|| format!("writing {}", bench.display()))?;
         println!("wrote {}", bench.display());
     }

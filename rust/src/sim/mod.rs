@@ -31,5 +31,8 @@ pub mod sweep;
 pub mod transport;
 
 pub use clock::{real_clock, Clock, ClockRef, RealClock, VirtualClock};
-pub use sweep::{run_sweep, simulated_total, sweep_base, SweepCell, SweepConfig};
+pub use sweep::{
+    run_scale_study, run_sweep, simulated_total, sweep_base, ScalePoint, ScaleStudyConfig,
+    SweepCell, SweepConfig,
+};
 pub use transport::SimTransport;

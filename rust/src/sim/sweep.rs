@@ -34,7 +34,7 @@ use anyhow::{Context, Result};
 
 use crate::coding::decoder::PlanCacheStats;
 use crate::coding::{Code, CodeParams, Scheme};
-use crate::config::{Backend, TimeMode, TrainConfig};
+use crate::config::{Backend, DelayDist, TimeMode, TrainConfig};
 use crate::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
 use crate::metrics::table::Table;
 use crate::metrics::RunLog;
@@ -79,20 +79,29 @@ pub fn sweep_base(
     cfg
 }
 
-/// Total simulated training time across cells (mean × measured
-/// iterations) — the "how much time did the sweep model" headline.
+/// Total simulated training time across cells — the "how much time did
+/// the sweep model" headline. Sums the **exact** per-cell totals: the
+/// old `mean_iter × measured_iters` form re-multiplied an already
+/// floor-divided mean (losing up to `iters − 1` ns per cell) and the
+/// `Duration × u32` panicked on overflow at large virtual-time grids.
 pub fn simulated_total(cells: &[SweepCell]) -> Duration {
-    cells.iter().map(|c| c.mean_iter * c.measured_iters as u32).sum()
+    cells.iter().map(|c| c.total).sum()
 }
 
 /// One (scheme, k) cell's outcome.
 pub struct SweepCell {
     pub scheme: Scheme,
     pub k: usize,
+    /// Exact summed training time over the non-warmup iterations — the
+    /// value downstream aggregation must consume (means are display
+    /// derivatives; re-multiplying them re-truncates).
+    pub total: Duration,
+    /// Exact summed collect/wait time over the non-warmup iterations.
+    pub wait: Duration,
     /// Mean per-iteration training time over non-warmup iterations —
-    /// the y-axis of the paper's Figs. 4-5.
+    /// the y-axis of the paper's Figs. 4-5. Derived: `total / iters`.
     pub mean_iter: Duration,
-    /// Mean of the collect/wait phase alone.
+    /// Mean of the collect/wait phase alone. Derived: `wait / iters`.
     pub mean_wait: Duration,
     /// Iterations averaged over (excludes warmup).
     pub measured_iters: usize,
@@ -126,20 +135,52 @@ pub fn derive_scheme_seed(base: u64, scheme: Scheme) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Mean (total, wait) over the non-warmup iterations of a run log.
-pub fn mean_non_warmup(log: &RunLog) -> (Duration, Duration, usize) {
+/// Exact non-warmup timing sums of a run log. Means are derived on
+/// demand (see [`NonWarmup::mean_total`]) so downstream aggregation —
+/// [`simulated_total`], the sweep JSON — can always consume the exact
+/// sums and never re-multiply a floor-divided mean back up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NonWarmup {
+    /// Exact summed per-iteration training time.
+    pub total: Duration,
+    /// Exact summed collect/wait time.
+    pub wait: Duration,
+    /// Iterations summed over (excludes warmup).
+    pub iters: usize,
+}
+
+impl NonWarmup {
+    /// Mean per-iteration training time (zero when nothing measured).
+    pub fn mean_total(&self) -> Duration {
+        if self.iters == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.iters as u32
+        }
+    }
+
+    /// Mean per-iteration collect/wait time.
+    pub fn mean_wait(&self) -> Duration {
+        if self.iters == 0 {
+            Duration::ZERO
+        } else {
+            self.wait / self.iters as u32
+        }
+    }
+}
+
+/// Exact (total, wait) sums over the non-warmup iterations of a run
+/// log, with the means available as derived accessors.
+pub fn mean_non_warmup(log: &RunLog) -> NonWarmup {
     let mut total = Duration::ZERO;
     let mut wait = Duration::ZERO;
-    let mut n = 0usize;
+    let mut iters = 0usize;
     for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
         total += r.timing.total;
         wait += r.timing.wait;
-        n += 1;
+        iters += 1;
     }
-    if n == 0 {
-        return (Duration::ZERO, Duration::ZERO, 0);
-    }
-    (total / n as u32, wait / n as u32, n)
+    NonWarmup { total, wait, iters }
 }
 
 /// Analytics shared by every k cell of one scheme, computed once.
@@ -164,15 +205,17 @@ fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) ->
     let mut ctrl = Controller::new(cfg, sweep.spec.clone(), pool)
         .with_context(|| format!("building controller for {scheme} k={k}"))?;
     ctrl.train().with_context(|| format!("training cell {scheme} k={k}"))?;
-    let (mean_iter, mean_wait, measured_iters) = mean_non_warmup(&ctrl.log);
+    let nw = mean_non_warmup(&ctrl.log);
     let decode_plan = ctrl.decode_plan_stats();
     ctrl.shutdown();
     Ok(SweepCell {
         scheme,
         k,
-        mean_iter,
-        mean_wait,
-        measured_iters,
+        total: nw.total,
+        wait: nw.wait,
+        mean_iter: nw.mean_total(),
+        mean_wait: nw.mean_wait(),
+        measured_iters: nw.iters,
         redundancy: info.redundancy,
         tolerance: info.tolerance,
         decode_plan,
@@ -298,7 +341,8 @@ pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
     table.render()
 }
 
-/// One CSV row per cell (`scheme,k,mean_iter_s,mean_wait_s,iters,…`).
+/// One CSV row per cell (`scheme,k,mean_iter_s,mean_wait_s,total_s,…`;
+/// `total_s`/`wait_s` are the exact sums, the means are display-only).
 pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         std::fs::create_dir_all(dir)?;
@@ -306,17 +350,19 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(
         f,
-        "scheme,k,mean_iter_s,mean_wait_s,iters,redundancy,tolerance,\
+        "scheme,k,mean_iter_s,mean_wait_s,total_s,wait_s,iters,redundancy,tolerance,\
          decode_plan_hits,decode_plan_misses"
     )?;
     for c in cells {
         writeln!(
             f,
-            "{},{},{:.6},{:.6},{},{:.3},{},{},{}",
+            "{},{},{:.6},{:.6},{:.9},{:.9},{},{:.3},{},{},{}",
             c.scheme.name(),
             c.k,
             c.mean_iter.as_secs_f64(),
             c.mean_wait.as_secs_f64(),
+            c.total.as_secs_f64(),
+            c.wait.as_secs_f64(),
             c.measured_iters,
             c.redundancy,
             c.tolerance,
@@ -325,6 +371,30 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
         )?;
     }
     f.flush()
+}
+
+/// One cell as a JSON object (shared by `BENCH_sweep.json` and
+/// `BENCH_scale.json`; plain enum names and finite numbers only, so no
+/// string escaping is needed).
+fn cell_json(c: &SweepCell) -> String {
+    format!(
+        "{{\"scheme\": \"{}\", \"k\": {}, \"mean_iter_s\": {:.9}, \
+         \"mean_wait_s\": {:.9}, \"total_s\": {:.9}, \"wait_s\": {:.9}, \"iters\": {}, \
+         \"redundancy\": {:.6}, \"tolerance\": {}, \"decode_plan_hits\": {}, \
+         \"decode_plan_misses\": {}, \"wall_s\": {:.6}}}",
+        c.scheme.name(),
+        c.k,
+        c.mean_iter.as_secs_f64(),
+        c.mean_wait.as_secs_f64(),
+        c.total.as_secs_f64(),
+        c.wait.as_secs_f64(),
+        c.measured_iters,
+        c.redundancy,
+        c.tolerance,
+        c.decode_plan.hits,
+        c.decode_plan.misses,
+        c.wall.as_secs_f64(),
+    )
 }
 
 /// Machine-readable perf record (`BENCH_sweep.json`): per-cell means,
@@ -353,23 +423,159 @@ pub fn write_bench_json(
     writeln!(f, "  \"cells\": [")?;
     for (i, c) in cells.iter().enumerate() {
         let comma = if i + 1 == cells.len() { "" } else { "," };
-        writeln!(
-            f,
-            "    {{\"scheme\": \"{}\", \"k\": {}, \"mean_iter_s\": {:.9}, \
-             \"mean_wait_s\": {:.9}, \"iters\": {}, \"redundancy\": {:.6}, \
-             \"tolerance\": {}, \"decode_plan_hits\": {}, \"decode_plan_misses\": {}, \
-             \"wall_s\": {:.6}}}{comma}",
-            c.scheme.name(),
-            c.k,
-            c.mean_iter.as_secs_f64(),
-            c.mean_wait.as_secs_f64(),
-            c.measured_iters,
-            c.redundancy,
-            c.tolerance,
-            c.decode_plan.hits,
-            c.decode_plan.misses,
-            c.wall.as_secs_f64(),
-        )?;
+        writeln!(f, "    {}{comma}", cell_json(c))?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    f.flush()
+}
+
+// ------------------------------------------------------------------
+// Cluster-scale study: schemes × k-fractions × N × delay tails
+// ------------------------------------------------------------------
+
+/// The N = 100–10 000 heavy-tail study (ROADMAP "cluster-scale
+/// scheduling studies"): for each delay distribution and each learner
+/// count, run a full schemes × k sweep with straggler counts expressed
+/// as **fractions of N** so the points are comparable across scales.
+pub struct ScaleStudyConfig {
+    /// Template cell config (seed, iterations, mock_compute, threads,
+    /// t_s in `straggler.delay`…); `n_learners` and `straggler.dist`
+    /// are overwritten per point.
+    pub base: TrainConfig,
+    pub spec: RunSpec,
+    pub schemes: Vec<Scheme>,
+    /// Learner counts to sweep (e.g. `[100, 1000, 10000]`).
+    pub ns: Vec<usize>,
+    /// Straggler counts as fractions of N (rounded, clamped to N,
+    /// deduped after rounding).
+    pub k_fracs: Vec<f64>,
+    /// Injected mean delay t_s.
+    pub delay: Duration,
+    /// Delay tails to compare (e.g. fixed vs Pareto).
+    pub dists: Vec<DelayDist>,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+/// One (N, delay distribution) point: a full schemes × k sweep.
+pub struct ScalePoint {
+    pub n: usize,
+    pub dist: DelayDist,
+    /// The realized straggler counts (`k_fracs` × N, deduped).
+    pub ks: Vec<usize>,
+    pub cells: Vec<SweepCell>,
+    /// Wall-clock spent on this point.
+    pub wall: Duration,
+}
+
+/// Round the k-fractions against a concrete N (sorted, deduped).
+pub fn ks_for_n(k_fracs: &[f64], n: usize) -> Vec<usize> {
+    let mut ks: Vec<usize> =
+        k_fracs.iter().map(|f| ((f * n as f64).round() as usize).min(n)).collect();
+    ks.sort_unstable();
+    ks.dedup();
+    ks
+}
+
+/// Run the full study grid. Points run sequentially (each inner sweep
+/// already shards its cells across `base.sweep_threads`).
+pub fn run_scale_study(cfg: &ScaleStudyConfig) -> Result<Vec<ScalePoint>> {
+    let mut points = Vec::with_capacity(cfg.dists.len() * cfg.ns.len());
+    for &dist in &cfg.dists {
+        for &n in &cfg.ns {
+            let wall_t = std::time::Instant::now();
+            let mut base = cfg.base.clone();
+            base.n_learners = n;
+            base.straggler.dist = dist;
+            let ks = ks_for_n(&cfg.k_fracs, n);
+            let cells = run_sweep(&SweepConfig {
+                base,
+                spec: cfg.spec.clone(),
+                schemes: cfg.schemes.clone(),
+                ks: ks.clone(),
+                delay: cfg.delay,
+                artifacts_dir: cfg.artifacts_dir.clone(),
+            })
+            .with_context(|| format!("scale point N={n} dist={}", dist.name()))?;
+            points.push(ScalePoint { n, dist, ks, cells, wall: wall_t.elapsed() });
+        }
+    }
+    Ok(points)
+}
+
+/// The crossover table the study exists for: per (dist, N, k), which
+/// scheme wins on mean iteration time, and the LDPC/MDS ratio (< 1 ⇒
+/// the sparse code overtakes MDS at that point).
+pub fn crossover_summary(points: &[ScalePoint]) -> String {
+    let mut table =
+        Table::new(&["dist", "N", "k", "winner", "mean_iter", "ldpc/mds"]);
+    for p in points {
+        for &k in &p.ks {
+            let at = |s: Scheme| p.cells.iter().find(|c| c.scheme == s && c.k == k);
+            let Some(winner) = p
+                .cells
+                .iter()
+                .filter(|c| c.k == k)
+                .min_by_key(|c| c.mean_iter)
+            else {
+                continue;
+            };
+            let ratio = match (at(Scheme::Ldpc), at(Scheme::Mds)) {
+                (Some(l), Some(m)) if m.mean_iter > Duration::ZERO => format!(
+                    "{:.3}",
+                    l.mean_iter.as_secs_f64() / m.mean_iter.as_secs_f64()
+                ),
+                _ => "-".into(),
+            };
+            table.row(&[
+                p.dist.label(),
+                p.n.to_string(),
+                k.to_string(),
+                winner.scheme.name().to_string(),
+                format!("{:.1}ms", winner.mean_iter.as_secs_f64() * 1e3),
+                ratio,
+            ]);
+        }
+    }
+    table.render()
+}
+
+/// Machine-readable study record (`BENCH_scale.json`): one entry per
+/// (N, dist) point with its full cell list — written by `coded-marl
+/// scale-study` so the crossover trajectory is tracked across PRs.
+pub fn write_scale_json(
+    points: &[ScalePoint],
+    wall: Duration,
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let simulated: Duration = points.iter().map(|p| simulated_total(&p.cells)).sum();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"scale_study\",")?;
+    writeln!(f, "  \"wall_s\": {:.6},", wall.as_secs_f64())?;
+    writeln!(f, "  \"simulated_s\": {:.6},", simulated.as_secs_f64())?;
+    writeln!(f, "  \"points\": [")?;
+    for (i, p) in points.iter().enumerate() {
+        let comma = if i + 1 == points.len() { "" } else { "," };
+        writeln!(f, "    {{")?;
+        writeln!(f, "      \"n\": {},", p.n)?;
+        writeln!(f, "      \"dist\": \"{}\",", p.dist.name())?;
+        match p.dist {
+            DelayDist::Pareto { alpha } => writeln!(f, "      \"alpha\": {alpha},")?,
+            DelayDist::LogNormal { sigma } => writeln!(f, "      \"sigma\": {sigma},")?,
+            _ => {}
+        }
+        writeln!(f, "      \"wall_s\": {:.6},", p.wall.as_secs_f64())?;
+        writeln!(f, "      \"cells\": [")?;
+        for (j, c) in p.cells.iter().enumerate() {
+            let ccomma = if j + 1 == p.cells.len() { "" } else { "," };
+            writeln!(f, "        {}{ccomma}", cell_json(c))?;
+        }
+        writeln!(f, "      ]")?;
+        writeln!(f, "    }}{comma}")?;
     }
     writeln!(f, "  ]")?;
     writeln!(f, "}}")?;
@@ -438,6 +644,8 @@ mod tests {
         SweepCell {
             scheme,
             k,
+            total: Duration::from_millis(60),
+            wait: Duration::from_millis(45),
             mean_iter: Duration::from_millis(12),
             mean_wait: Duration::from_millis(9),
             measured_iters: 5,
@@ -446,6 +654,68 @@ mod tests {
             decode_plan: PlanCacheStats { hits: 4, misses: 1, entries: 1 },
             wall: Duration::from_millis(3),
         }
+    }
+
+    /// Regression (ISSUE 3): `simulated_total` must consume the exact
+    /// per-cell sums. The old `mean_iter × iters` form (a) re-truncated
+    /// an already floor-divided mean and (b) panicked on `Duration ×
+    /// u32` overflow for large virtual-time cells.
+    #[test]
+    fn simulated_total_is_exact_and_overflow_safe() {
+        // (a) truncation: 10 ns over 3 iters → mean floors to 3 ns; the
+        // old formula reported 9 ns. The exact total must survive.
+        let mut c = cell(Scheme::Mds, 0);
+        c.total = Duration::from_nanos(10);
+        c.measured_iters = 3;
+        c.mean_iter = c.total / 3; // 3 ns (floored), display only
+        assert_eq!(simulated_total(&[c]), Duration::from_nanos(10));
+        // (b) overflow: a mean whose × iters blows past Duration. The
+        // exact-sum path never touches that product.
+        let mut c = cell(Scheme::Mds, 0);
+        c.mean_iter = Duration::MAX / 2;
+        c.measured_iters = 1000; // old: (MAX/2) × 1000 → panic
+        c.total = Duration::from_secs(86_400); // the exact simulated sum
+        let mut d = cell(Scheme::Ldpc, 1);
+        d.total = Duration::from_secs(13);
+        assert_eq!(simulated_total(&[c, d]), Duration::from_secs(86_413));
+    }
+
+    /// Regression (ISSUE 3): `mean_non_warmup` returns the exact sums;
+    /// means are derived accessors, never part of downstream math.
+    #[test]
+    fn mean_non_warmup_returns_exact_sums() {
+        use crate::metrics::{IterRecord, IterTiming};
+        let mut log = RunLog::new();
+        let mut push = |iter: u64, total_ns: u64, wait_ns: u64, method: &'static str| {
+            let timing = IterTiming {
+                total: Duration::from_nanos(total_ns),
+                wait: Duration::from_nanos(wait_ns),
+                ..Default::default()
+            };
+            log.push(IterRecord {
+                iter,
+                timing,
+                reward: 0.0,
+                critic_loss: f64::NAN,
+                results_used: 0,
+                decode_method: method,
+                stragglers: Vec::new(),
+            });
+        };
+        push(0, 999, 999, "warmup"); // excluded
+        push(1, 5, 2, "qr");
+        push(2, 5, 2, "qr");
+        push(3, 7, 3, "qr");
+        let nw = mean_non_warmup(&log);
+        assert_eq!(nw.iters, 3);
+        assert_eq!(nw.total, Duration::from_nanos(17), "exact, not mean×n");
+        assert_eq!(nw.wait, Duration::from_nanos(7));
+        // the displayed means floor…
+        assert_eq!(nw.mean_total(), Duration::from_nanos(5));
+        assert_eq!(nw.mean_wait(), Duration::from_nanos(2));
+        // …and an empty log yields zeros without dividing by zero
+        let empty = mean_non_warmup(&RunLog::new());
+        assert_eq!((empty.iters, empty.mean_total()), (0, Duration::ZERO));
     }
 
     #[test]
@@ -487,6 +757,60 @@ mod tests {
         let txt = render_table(&cells, &[2]);
         assert!(txt.contains("2.5x"), "first cell's info must win:\n{txt}");
         assert!(!txt.contains("99.0x"), "duplicate must not overwrite:\n{txt}");
+    }
+
+    #[test]
+    fn ks_for_n_rounds_clamps_and_dedups() {
+        assert_eq!(ks_for_n(&[0.0, 0.3, 1.0], 7), vec![0, 2, 7]);
+        assert_eq!(ks_for_n(&[0.0, 0.05, 0.5], 9), vec![0, 5], "0.05·9 rounds to 0, deduped");
+        assert_eq!(ks_for_n(&[2.0], 4), vec![4], "clamped to N");
+        assert_eq!(ks_for_n(&[0.0, 0.05, 0.25], 1000), vec![0, 50, 250]);
+    }
+
+    /// The scale-study grid end to end at test scale: every (dist, N)
+    /// point carries a full schemes × k cell set, the crossover table
+    /// renders, and BENCH_scale.json is valid JSON with the exact sums.
+    #[test]
+    fn scale_study_runs_grid_and_writes_json() {
+        let mut study_base = base();
+        // a Pareto tail draw may exceed the 120 s real-time default;
+        // virtual seconds are free
+        study_base.collect_timeout = Duration::from_secs(24 * 3600);
+        let cfg = ScaleStudyConfig {
+            base: study_base,
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Mds, Scheme::Ldpc],
+            ns: vec![7, 9],
+            k_fracs: vec![0.0, 0.3, 1.0],
+            delay: Duration::from_millis(40),
+            dists: vec![DelayDist::Fixed, DelayDist::Pareto { alpha: 1.5 }],
+            artifacts_dir: "artifacts".into(),
+        };
+        let points = run_scale_study(&cfg).unwrap();
+        assert_eq!(points.len(), 4, "2 dists × 2 Ns");
+        assert_eq!(points[0].ks, vec![0, 2, 7]);
+        assert_eq!(points[1].ks, vec![0, 3, 9]);
+        for p in &points {
+            assert_eq!(p.cells.len(), 2 * p.ks.len(), "schemes × ks");
+            for c in &p.cells {
+                assert_eq!(c.measured_iters, 3);
+                assert!(c.total >= c.wait, "{}/{}", c.scheme, c.k);
+            }
+        }
+        let txt = crossover_summary(&points);
+        assert!(txt.contains("ldpc/mds") && txt.contains("pareto"), "{txt}");
+
+        let dir = std::env::temp_dir().join("coded_marl_scale_json_test");
+        let path = dir.join("BENCH_scale.json");
+        write_scale_json(&points, Duration::from_millis(80), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "scale_study");
+        let pts = json.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 4);
+        assert!(pts.iter().any(|p| p.get("dist").unwrap().as_str().unwrap() == "pareto"));
+        assert_eq!(pts[0].get("cells").unwrap().as_arr().unwrap().len(), 6);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

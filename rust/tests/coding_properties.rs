@@ -4,7 +4,8 @@
 
 use coded_marl::coding::decoder::{DecodeMethod, Decoder};
 use coded_marl::coding::{
-    for_each_combination, random_set_decode_probability, Code, CodeParams, Scheme, RANK_TOL,
+    for_each_combination, random_set_decode_probability, Code, CodeParams, RankTracker, Scheme,
+    RANK_TOL,
 };
 use coded_marl::rng::Pcg32;
 use coded_marl::testkit::forall;
@@ -21,6 +22,43 @@ fn encode(code: &Code, theta: &[Vec<f32>], rows: &[usize]) -> Vec<Vec<f32>> {
             y
         })
         .collect()
+}
+
+/// Tentpole invariant (ISSUE 3): the incremental [`RankTracker`] makes
+/// the **identical** accept/reject decision `Code::decodable` makes,
+/// for EVERY prefix of randomized arrival orders, across all schemes
+/// and sizes — this is what lets `Controller::collect` replace the
+/// per-arrival O(|I|·M²) re-rank with an O(M·rank) incremental update
+/// without changing a single collection decision.
+#[test]
+fn rank_tracker_matches_decodable_on_every_prefix() {
+    forall("tracker == Code::decodable on every prefix", 120, |g| {
+        let scheme = *g.choice(&Scheme::ALL);
+        let m = g.usize_in(2, 8);
+        let n = m + g.usize_in(0, 9);
+        let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: g.case_seed });
+        let order = g.subset(n, n); // random arrival permutation
+        let mut tracker = RankTracker::new(&code);
+        let mut received: Vec<usize> = Vec::with_capacity(n);
+        for &j in &order {
+            tracker.push_row(code.matrix().row(j));
+            received.push(j);
+            assert!(tracker.rank() <= m.min(received.len()));
+            assert_eq!(
+                tracker.decodable(),
+                code.decodable(&received),
+                "scheme={scheme} n={n} m={m} prefix={received:?}"
+            );
+            // the early-exit batch helper must agree too (it backs the
+            // Monte-Carlo tolerance search)
+            assert_eq!(
+                tracker.decodable(),
+                code.decodable_incremental(&received),
+                "scheme={scheme} n={n} m={m} prefix={received:?}"
+            );
+        }
+        assert!(tracker.decodable(), "all N rows must span R^M (rank(C) = M by construction)");
+    });
 }
 
 /// Invariant: `worst_case_tolerance` is exact — every straggler subset

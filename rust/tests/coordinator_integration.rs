@@ -357,6 +357,62 @@ fn adaptive_controller_switches_scheme_at_runtime() {
     ctrl.shutdown();
 }
 
+/// A transport that replays a scripted message sequence — lets tests
+/// inject protocol-level misbehaviour (spurious senders, forged ids)
+/// that no healthy learner pool produces.
+struct ScriptedTransport {
+    n: usize,
+    script: std::collections::VecDeque<coded_marl::transport::LearnerMsg>,
+}
+
+impl coded_marl::transport::ControllerTransport for ScriptedTransport {
+    fn n_learners(&self) -> usize {
+        self.n
+    }
+    fn send_to(&mut self, _learner: usize, _msg: coded_marl::transport::CtrlMsg) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn recv_timeout(
+        &mut self,
+        _timeout: Duration,
+    ) -> anyhow::Result<Option<coded_marl::transport::LearnerMsg>> {
+        Ok(self.script.pop_front())
+    }
+    fn shutdown(&mut self) {}
+}
+
+/// Regression (ISSUE 3): a Result from a learner the controller never
+/// tasked (all-zero assignment row) must be dropped like a stale
+/// message. Before the fix it entered `received`, inflating
+/// `results_used` and tripping the `received == tasked`
+/// rank-deficiency bail with a spurious "invalid code construction"
+/// error: under uncoded N=7/M=4 the spurious reply plus three real
+/// ones hit `tasked = 4` with rank 3.
+#[test]
+fn untasked_learner_reply_is_dropped() {
+    use coded_marl::transport::LearnerMsg;
+    let spec = spec();
+    let p = spec.dims.agent_param_dim();
+    let mut cfg = mock_cfg(Scheme::Uncoded, 2, 41);
+    cfg.collect_timeout = Duration::from_millis(500);
+    // iteration 0 is warmup (no learner round); iteration 1 collects.
+    let result = |learner_id: u32| LearnerMsg::Result {
+        iter: 1,
+        learner_id,
+        y: vec![0.0f32; p],
+        compute_ns: 1_000,
+    };
+    // learner 6 has a zero row under uncoded (only 0..4 are tasked):
+    // its reply arrives FIRST, then the four real ones.
+    let script: Vec<LearnerMsg> = vec![result(6), result(0), result(1), result(2), result(3)];
+    let transport = ScriptedTransport { n: cfg.n_learners, script: script.into_iter().collect() };
+    let mut ctrl = Controller::new(cfg, spec, transport).unwrap();
+    ctrl.train().expect("spurious reply from an untasked learner must not fail the iteration");
+    let rec = ctrl.log.records.last().unwrap();
+    assert_eq!(rec.results_used, 4, "only tasked learners may count toward recovery");
+    ctrl.shutdown();
+}
+
 // ------------------------------------------------------------ PJRT ---
 
 fn artifacts_dir() -> std::path::PathBuf {

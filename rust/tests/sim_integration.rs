@@ -61,9 +61,9 @@ fn max_param_diff(a: &[AgentParams], b: &[AgentParams]) -> f32 {
 /// The same statistic `sim-sweep` reports (so the fidelity test pins
 /// exactly what users read off the sweep tables).
 fn mean_non_warmup_total(log: &RunLog) -> Duration {
-    let (total, _wait, n) = coded_marl::sim::sweep::mean_non_warmup(log);
-    assert!(n > 0, "run produced no measured iterations");
-    total
+    let nw = coded_marl::sim::sweep::mean_non_warmup(log);
+    assert!(nw.iters > 0, "run produced no measured iterations");
+    nw.mean_total()
 }
 
 /// Same seed ⇒ the *entire* virtual run replays bit-for-bit: recovered
@@ -280,6 +280,48 @@ fn sharded_sweep_scales_past_paper_n() {
     assert!(
         cell(Scheme::Mds, 16).mean_wait < Duration::from_millis(40),
         "MDS must mask 16/128 stragglers"
+    );
+}
+
+/// Heavy-tail delay injection through the full virtual path: a Pareto
+/// run is (a) deterministic — same seed replays bit-identical timing —
+/// and (b) actually heavy-tailed — across iterations the injected
+/// stalls vary, unlike the fixed-delay model, while the recovered
+/// parameters match the clean run exactly (stragglers change timing,
+/// never results).
+#[test]
+fn heavy_tail_virtual_runs_are_deterministic_and_vary() {
+    use coded_marl::config::DelayDist;
+    let mut c = cfg(Scheme::Uncoded, TimeMode::Virtual, 13);
+    c.iterations = 12;
+    c.straggler = StragglerConfig::fixed(7, Duration::from_millis(100)); // k = N
+    c.straggler.dist = DelayDist::Pareto { alpha: 1.5 };
+    // a tail draw may legitimately exceed the 120 s real-time default;
+    // virtual seconds are free
+    c.collect_timeout = Duration::from_secs(24 * 3600);
+    let (params_a, log_a) = train(&c);
+    let (params_b, log_b) = train(&c);
+    assert_eq!(max_param_diff(&params_a, &params_b), 0.0);
+    for (x, y) in log_a.records.iter().zip(log_b.records.iter()) {
+        assert_eq!(x.timing.wait, y.timing.wait, "iter {}: tail draw diverged", x.iter);
+    }
+    // the tail varies across iterations (a fixed delay would not)
+    let waits: Vec<Duration> = log_a
+        .records
+        .iter()
+        .filter(|r| r.decode_method != "warmup")
+        .map(|r| r.timing.wait)
+        .collect();
+    let distinct: std::collections::HashSet<Duration> = waits.iter().copied().collect();
+    assert!(distinct.len() > 1, "pareto delays must vary across iterations: {waits:?}");
+    // results are untouched by the tail
+    let mut clean = c.clone();
+    clean.straggler = StragglerConfig::none();
+    let (params_clean, _) = train(&clean);
+    assert_eq!(
+        max_param_diff(&params_a, &params_clean),
+        0.0,
+        "uncoded decode subset is unique: heavy-tail delays must not change results"
     );
 }
 
