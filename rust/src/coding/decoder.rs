@@ -38,6 +38,8 @@ use anyhow::{bail, Result};
 
 use super::ldpc::BinaryStructure;
 use super::Code;
+use crate::linalg::kernels;
+use crate::linalg::pool::{BufPool, PoolStats};
 use crate::linalg::{Mat, QrFactor};
 
 /// Decode plans kept per decoder (LRU). Each plan is an M×|I| f64
@@ -142,12 +144,20 @@ pub struct Decoder {
     /// cross threads — e.g. sweep cells on the shard pool. Uncontended
     /// in practice: one controller owns one decoder.
     plans: Mutex<PlanCache>,
+    /// Free list for the P-sized working buffers of a decode: the
+    /// apply accumulators (Θ' rows) and peeling's copy-on-write
+    /// residuals. The controller returns recovered Θ' via
+    /// [`Decoder::recycle`], so steady-state decodes allocate nothing.
+    pool: BufPool,
 }
 
 impl Decoder {
     pub fn new(code: Code) -> Self {
         let binary = BinaryStructure::from_matrix(&code.c);
-        Decoder { code, binary, plans: Mutex::new(PlanCache::default()) }
+        // Worst-case working set: M accumulators (least squares) or up
+        // to |I| ≤ N residuals + M solved rows (peeling).
+        let pool = BufPool::with_shelf_cap(2 * code.n + 8);
+        Decoder { code, binary, plans: Mutex::new(PlanCache::default()), pool }
     }
 
     pub fn code(&self) -> &Code {
@@ -158,6 +168,17 @@ impl Decoder {
     pub fn plan_cache_stats(&self) -> PlanCacheStats {
         let cache = self.plans.lock().expect("plan cache poisoned");
         PlanCacheStats { hits: cache.hits, misses: cache.misses, entries: cache.map.len() }
+    }
+
+    /// Buffer-pool counters (apply accumulators + peel residuals).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Return buffers (typically a consumed [`DecodeOutput::theta`]) to
+    /// the decoder's free list.
+    pub fn recycle(&self, bufs: Vec<Vec<f32>>) {
+        self.pool.put_all(bufs);
     }
 
     /// Recover Θ' from results of learners `received` (parallel arrays:
@@ -186,7 +207,7 @@ impl Decoder {
                 let Some(bin) = &self.binary else {
                     bail!("peeling requires a binary (0/1) assignment matrix");
                 };
-                match try_peel(bin, self.code.m, received, results, p) {
+                match try_peel(bin, self.code.m, received, results, p, &self.pool) {
                     Some(theta) => Ok(DecodeOutput { theta, method: "peeling" }),
                     None => bail!("peeling stalled: erasure pattern not peelable"),
                 }
@@ -195,7 +216,9 @@ impl Decoder {
             DecodeMethod::NormalEquations => self.decode_ne(received, results, p),
             DecodeMethod::Auto => {
                 if let Some(bin) = &self.binary {
-                    if let Some(theta) = try_peel(bin, self.code.m, received, results, p) {
+                    if let Some(theta) =
+                        try_peel(bin, self.code.m, received, results, p, &self.pool)
+                    {
                         return Ok(DecodeOutput { theta, method: "peeling" });
                     }
                 }
@@ -226,7 +249,7 @@ impl Decoder {
     fn decode_qr(&self, received: &[usize], results: &[Vec<f32>], p: usize) -> Result<DecodeOutput> {
         let order = sorted_order(received);
         let w = self.weights(received, &order, 0)?;
-        Ok(DecodeOutput { theta: apply_weights(&w, results, &order, p), method: "qr" })
+        Ok(DecodeOutput { theta: apply_weights(&w, results, &order, p, &self.pool), method: "qr" })
     }
 
     /// The paper's Eq. (2) literally — same weight-matrix reorganization
@@ -235,7 +258,7 @@ impl Decoder {
         let order = sorted_order(received);
         let w = self.weights(received, &order, 1)?;
         Ok(DecodeOutput {
-            theta: apply_weights(&w, results, &order, p),
+            theta: apply_weights(&w, results, &order, p, &self.pool),
             method: "normal_equations",
         })
     }
@@ -280,12 +303,14 @@ impl Decoder {
             cache.misses += 1;
             cache.tick += 1;
             if cache.map.len() >= PLAN_CACHE_CAPACITY && !cache.map.contains_key(&key) {
-                // Evict the least-recently-used plan (O(capacity) scan —
-                // capacity is small and eviction is off the common path).
-                if let Some(oldest) =
-                    cache.map.iter().min_by_key(|(_, p)| p.stamp).map(|(k, _)| k.clone())
-                {
-                    cache.map.remove(&oldest);
+                // Evict the least-recently-used plan without cloning its
+                // (bitset) key: find the minimum stamp, then drop that
+                // entry in place. Stamps are unique — `tick` increments
+                // on every insert and hit — so exactly one entry goes.
+                // Still an O(capacity) scan; capacity is small and
+                // eviction is off the common path.
+                if let Some(oldest) = cache.map.values().map(|p| p.stamp).min() {
+                    cache.map.retain(|_, p| p.stamp != oldest);
                 }
             }
             let stamp = cache.tick;
@@ -322,26 +347,33 @@ fn sorted_order(received: &[usize]) -> Vec<usize> {
     order
 }
 
-/// Θ = W·Y without materializing Y as an f64 matrix: per agent, an
-/// axpy over each received result vector. Sequential access, LLVM
-/// auto-vectorizes the inner loop. Column `c` of `W` corresponds to
-/// the result at `order[c]` (plans are built on the sorted received
-/// set), so summation order — and therefore every output bit — is
-/// independent of arrival order.
-fn apply_weights(w: &Mat, results: &[Vec<f32>], order: &[usize], p: usize) -> Vec<Vec<f32>> {
+/// Θ = W·Y without materializing Y as an f64 matrix: per agent, a
+/// vectorized [`kernels::axpy`] over each received result vector
+/// (bit-identical to the scalar loop it replaced — elementwise, no
+/// reduction reordering). Column `c` of `W` corresponds to the result
+/// at `order[c]` (plans are built on the sorted received set), so
+/// summation order — and therefore every output bit — is independent
+/// of arrival order. Accumulators come from the decoder's pool and
+/// return via [`Decoder::recycle`].
+fn apply_weights(
+    w: &Mat,
+    results: &[Vec<f32>],
+    order: &[usize],
+    p: usize,
+    pool: &BufPool,
+) -> Vec<Vec<f32>> {
     debug_assert_eq!(w.cols, results.len());
     debug_assert_eq!(order.len(), results.len());
     (0..w.rows)
         .map(|i| {
-            let mut acc = vec![0.0f32; p];
+            let mut acc = pool.take_zeroed(p);
+            let wrow = w.row(i);
             for (col, &r) in order.iter().enumerate() {
-                let c = w[(i, col)] as f32;
+                let c = wrow[col] as f32;
                 if c == 0.0 {
                     continue;
                 }
-                for (a, &v) in acc.iter_mut().zip(results[r].iter()) {
-                    *a += c * v;
-                }
+                kernels::axpy(&mut acc, c, &results[r]);
             }
             acc
         })
@@ -349,20 +381,23 @@ fn apply_weights(w: &Mat, results: &[Vec<f32>], order: &[usize], p: usize) -> Ve
 }
 
 /// Iterative erasure peeling over a binary code. Returns None when the
-/// pattern does not peel to completion (caller falls back to lstsq).
+/// pattern does not peel to completion (caller falls back to lstsq) —
+/// with every taken buffer returned to the pool.
 ///
 /// Work: each received row is visited when its unknown-count reaches 1,
 /// and each resolution touches the rows containing that agent —
 /// O(Σ row degree) = O(M · d_avg) vector ops of length P. Residual
-/// rows are copied lazily (only when first mutated or resolved), so
-/// rows the peel never touches cost nothing — for the uncoded /
-/// replication patterns the whole decode is exactly M row copies.
+/// rows are copied lazily (only when first mutated or resolved) into
+/// pooled buffers, so rows the peel never touches cost nothing — for
+/// the uncoded / replication patterns the whole decode is exactly M
+/// row copies, allocation-free once warm.
 fn try_peel(
     bin: &BinaryStructure,
     m: usize,
     received: &[usize],
     results: &[Vec<f32>],
     p: usize,
+    pool: &BufPool,
 ) -> Option<Vec<Vec<f32>>> {
     // Residual rows, copy-on-write against `results`.
     let mut residual: Vec<Option<Vec<f32>>> = vec![None; results.len()];
@@ -391,7 +426,7 @@ fn try_peel(
             unknowns[r].clear();
             continue;
         }
-        let value = residual[r].take().unwrap_or_else(|| results[r].clone());
+        let value = residual[r].take().unwrap_or_else(|| pool.take_copy(&results[r]));
         theta[agent] = Some(value);
         solved += 1;
         unknowns[r].clear();
@@ -405,21 +440,23 @@ fn try_peel(
             }
             if let Some(pos) = unknowns[r2].iter().position(|&i| i == agent) {
                 unknowns[r2].swap_remove(pos);
-                let res = residual[r2].get_or_insert_with(|| results[r2].clone());
+                let res = residual[r2].get_or_insert_with(|| pool.take_copy(&results[r2]));
                 debug_assert_eq!(res.len(), p);
                 let val_ref = theta[agent].as_ref().unwrap();
-                for (d, &s) in res.iter_mut().zip(val_ref.iter()) {
-                    *d -= s;
-                }
+                kernels::sub_assign(res, val_ref);
                 if unknowns[r2].len() == 1 {
                     queue.push(r2);
                 }
             }
         }
     }
+    // Unpromoted residual copies go back to the pool either way.
+    pool.put_all(residual.into_iter().flatten());
     if solved == m {
         Some(theta.into_iter().map(|t| t.unwrap()).collect())
     } else {
+        // Stalled: also return the partially solved rows.
+        pool.put_all(theta.into_iter().flatten());
         None
     }
 }
@@ -704,6 +741,157 @@ mod tests {
         }
         let s = dec.plan_cache_stats();
         assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+    }
+
+    /// The pre-kernel scalar apply, kept verbatim: Θ = W·Y as plain
+    /// per-element loops with fresh allocations.
+    fn scalar_apply_weights(
+        w: &Mat,
+        results: &[Vec<f32>],
+        order: &[usize],
+        p: usize,
+    ) -> Vec<Vec<f32>> {
+        (0..w.rows)
+            .map(|i| {
+                let mut acc = vec![0.0f32; p];
+                for (col, &r) in order.iter().enumerate() {
+                    let c = w[(i, col)] as f32;
+                    if c == 0.0 {
+                        continue;
+                    }
+                    for (a, &v) in acc.iter_mut().zip(results[r].iter()) {
+                        *a += c * v;
+                    }
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// The pre-kernel scalar peel, kept verbatim (clone-based
+    /// copy-on-write, per-element subtraction).
+    fn scalar_peel(
+        bin: &BinaryStructure,
+        m: usize,
+        received: &[usize],
+        results: &[Vec<f32>],
+    ) -> Option<Vec<Vec<f32>>> {
+        let mut residual: Vec<Option<Vec<f32>>> = vec![None; results.len()];
+        let mut unknowns: Vec<Vec<usize>> = received
+            .iter()
+            .map(|&j| bin.support.get(j).cloned().unwrap_or_default())
+            .collect();
+        let mut rows_of_agent: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for (r, u) in unknowns.iter().enumerate() {
+            for &i in u {
+                rows_of_agent[i].push(r);
+            }
+        }
+        let mut theta: Vec<Option<Vec<f32>>> = vec![None; m];
+        let mut queue: Vec<usize> =
+            (0..unknowns.len()).filter(|&r| unknowns[r].len() == 1).collect();
+        let mut solved = 0usize;
+        while let Some(r) = queue.pop() {
+            if unknowns[r].len() != 1 {
+                continue;
+            }
+            let agent = unknowns[r][0];
+            if theta[agent].is_some() {
+                unknowns[r].clear();
+                continue;
+            }
+            let value = residual[r].take().unwrap_or_else(|| results[r].clone());
+            theta[agent] = Some(value);
+            solved += 1;
+            unknowns[r].clear();
+            if solved == m {
+                break;
+            }
+            for &r2 in &rows_of_agent[agent] {
+                if r2 == r || unknowns[r2].is_empty() {
+                    continue;
+                }
+                if let Some(pos) = unknowns[r2].iter().position(|&i| i == agent) {
+                    unknowns[r2].swap_remove(pos);
+                    let res = residual[r2].get_or_insert_with(|| results[r2].clone());
+                    let val_ref = theta[agent].as_ref().unwrap();
+                    for (d, &s) in res.iter_mut().zip(val_ref.iter()) {
+                        *d -= s;
+                    }
+                    if unknowns[r2].len() == 1 {
+                        queue.push(r2);
+                    }
+                }
+            }
+        }
+        (solved == m).then(|| theta.into_iter().map(|t| t.unwrap()).collect())
+    }
+
+    /// Tentpole guarantee: the vectorized decode paths (pooled buffers
+    /// + chunked kernels) reproduce the old scalar paths **bit for
+    /// bit**, for every scheme and every method that applies — warm
+    /// (pooled/recycled buffers) as well as cold.
+    #[test]
+    fn kernelized_decode_matches_scalar_reference_bitwise() {
+        for scheme in Scheme::ALL {
+            let (n, m) = (15usize, 8usize);
+            let code = Code::build(&CodeParams::new(scheme, n, m));
+            let dec = Decoder::new(code.clone());
+            let mut rng = Pcg32::seeded(0xB17 ^ scheme as u64);
+            let theta = random_theta(&mut rng, m, P);
+            let drop = code.worst_case_tolerance();
+            let received: Vec<usize> = (drop..n).collect();
+            let results = encode(&code, &theta, &received);
+            for method in [DecodeMethod::Qr, DecodeMethod::NormalEquations, DecodeMethod::Auto] {
+                let Ok(out) = dec.decode(&received, &results, method) else {
+                    continue; // e.g. NE on an ill-conditioned C_I
+                };
+                let reference = match out.method {
+                    "peeling" => {
+                        let bin = BinaryStructure::from_matrix(code.matrix()).unwrap();
+                        scalar_peel(&bin, m, &received, &results).expect("reference peel")
+                    }
+                    _ => {
+                        let order = sorted_order(&received);
+                        let path = if out.method == "qr" { 0 } else { 1 };
+                        let w = dec.weights(&received, &order, path).unwrap();
+                        scalar_apply_weights(&w, &results, &order, P)
+                    }
+                };
+                assert!(
+                    bits_equal(&out.theta, &reference),
+                    "scheme={scheme} method={method:?} ({}) diverged from scalar path",
+                    out.method
+                );
+                // Warm pass: recycled buffers must not change a bit.
+                dec.recycle(out.theta);
+                let warm = dec.decode(&received, &results, method).unwrap();
+                assert!(
+                    bits_equal(&warm.theta, &reference),
+                    "scheme={scheme} method={method:?} warm (pooled) pass diverged"
+                );
+            }
+        }
+    }
+
+    /// Steady-state decode allocates nothing: after one recycle cycle,
+    /// every pooled take is a hit.
+    #[test]
+    fn recycled_decodes_hit_the_pool() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(77);
+        let theta = random_theta(&mut rng, 8, P);
+        let received: Vec<usize> = (0..15).collect();
+        let results = encode(&code, &theta, &received);
+        let out = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        dec.recycle(out.theta);
+        let warm_misses = dec.pool_stats().misses;
+        let out = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+        let s = dec.pool_stats();
+        assert_eq!(s.misses, warm_misses, "warm decode must not allocate");
+        assert_eq!(s.hits, 8, "all 8 accumulators served from the pool");
+        dec.recycle(out.theta);
     }
 
     #[test]

@@ -23,17 +23,20 @@ use super::adaptive::{AdaptiveSelector, StragglerStats};
 use super::rollout;
 use super::straggler::StragglerInjector;
 use super::RunSpec;
+use std::sync::Arc;
+
 use crate::coding::decoder::Decoder;
 use crate::coding::{Code, CodeParams, RankTracker};
 use crate::config::TrainConfig;
 use crate::env::make_env;
+use crate::linalg::pool::{BufPool, PoolStats};
 use crate::marl::buffer::ReplayBuffer;
 use crate::marl::noise::DecaySchedule;
 use crate::marl::AgentParams;
 use crate::metrics::{IterRecord, IterTiming, RunLog, Timer};
 use crate::rng::Pcg32;
 use crate::sim::ClockRef;
-use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
+use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
 
 /// The RNG streams that drive *training* randomness. Forked in a fixed
 /// order so the coded controller and the centralized baseline consume
@@ -77,6 +80,16 @@ pub struct Controller<T: ControllerTransport> {
     compute_ewma: f64,
     /// The transport's time domain (real or virtual).
     clock: ClockRef,
+    /// Gradient-buffer free list: the transport's shared pool when it
+    /// owns one (sim), else a private one. Flat parameter vectors and
+    /// assignment rows are taken here; decoded result vectors return
+    /// here — steady-state zero allocation per iteration on the sim
+    /// path (see `rust/tests/sim_integration.rs`).
+    pool: Arc<BufPool>,
+    /// Last iteration's broadcast body, held until the transport has
+    /// dropped its references so the flat parameter vectors can be
+    /// reclaimed into the pool.
+    pending_body: Option<Arc<TaskBody>>,
     pub log: RunLog,
     shut_down: bool,
 }
@@ -131,6 +144,13 @@ impl<T: ControllerTransport> Controller<T> {
             )
         });
         let clock = transport.clock();
+        // Share the transport's buffer pool when it has one (sim);
+        // otherwise keep a private pool so decoded result vectors still
+        // feed the next iteration's flat-parameter takes. Shelf cap =
+        // one iteration's working set (N rows + 2N results + M flats).
+        let pool = transport
+            .buf_pool()
+            .unwrap_or_else(|| Arc::new(BufPool::with_shelf_cap(3 * cfg.n_learners + 8)));
         Ok(Controller {
             buffer: ReplayBuffer::new(cfg.buffer_capacity),
             cfg,
@@ -145,6 +165,8 @@ impl<T: ControllerTransport> Controller<T> {
             adaptive,
             compute_ewma: 0.0,
             clock,
+            pool,
+            pending_body: None,
             log: RunLog::new(),
             shut_down: false,
         })
@@ -158,6 +180,19 @@ impl<T: ControllerTransport> Controller<T> {
     /// an adaptive switch replaces the decoder mid-run).
     pub fn decode_plan_stats(&self) -> crate::coding::decoder::PlanCacheStats {
         self.decoder.plan_cache_stats()
+    }
+
+    /// Gradient-buffer pool telemetry of the data plane (rows, flat
+    /// parameters, result vectors) — 100% hit rate in steady state on
+    /// the sim transport.
+    pub fn buf_pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// The decoder's buffer-pool telemetry (apply accumulators, peel
+    /// residuals; reset when an adaptive switch replaces the decoder).
+    pub fn decode_pool_stats(&self) -> PoolStats {
+        self.decoder.pool_stats()
     }
 
     pub fn agents(&self) -> &[AgentParams] {
@@ -285,11 +320,21 @@ impl<T: ControllerTransport> Controller<T> {
         // --- Broadcast (line 9) -----------------------------------------
         let t = Timer::with_clock(&self.clock);
         let plan = self.injector.plan(self.cfg.n_learners);
-        // Arc-shared payload: one flatten, N refcount bumps (not N
-        // multi-megabyte clones — EXPERIMENTS.md §Perf).
-        let agent_params =
-            std::sync::Arc::new(self.agents.iter().map(|a| a.to_flat()).collect::<Vec<_>>());
-        let mb = std::sync::Arc::new(mb);
+        // Reclaim last iteration's flat parameter vectors (the
+        // transport has dropped its body references by now) so this
+        // iteration's flatten is allocation-free in steady state.
+        self.reclaim_pending_body();
+        // Shared body: one flatten into pooled buffers, N `Arc` bumps
+        // (not N multi-megabyte clones), and — on the TCP transport —
+        // one wire encoding for the whole broadcast (EXPERIMENTS.md
+        // §Data plane).
+        let p_dim = self.spec.dims.agent_param_dim();
+        let agent_params: Vec<Vec<f32>> = self
+            .agents
+            .iter()
+            .map(|a| self.pool.take_with(p_dim, |out| a.write_flat(out)))
+            .collect();
+        let body = TaskBody::new(Arc::new(agent_params), Arc::new(mb));
         // Learners with an all-zero row have nothing to compute and
         // contribute nothing to decodability — skip them outright. At
         // N = 1000 an uncoded iteration tasks M learners, not N.
@@ -298,7 +343,7 @@ impl<T: ControllerTransport> Controller<T> {
             if self.code().workload(j) == 0 {
                 continue;
             }
-            let row = self.code().row_f32(j).to_vec();
+            let row = self.pool.take_copy(self.code().row_f32(j));
             // A dead learner (crashed thread / worker) is just a
             // permanent erasure: coding exists to mask exactly this, so
             // a failed send must not abort the iteration.
@@ -307,8 +352,7 @@ impl<T: ControllerTransport> Controller<T> {
                 CtrlMsg::Task {
                     iter,
                     row,
-                    agent_params: std::sync::Arc::clone(&agent_params),
-                    minibatch: std::sync::Arc::clone(&mb),
+                    body: Arc::clone(&body),
                     straggler_delay_ns: plan.delay_ns[j],
                 },
             ) {
@@ -317,6 +361,7 @@ impl<T: ControllerTransport> Controller<T> {
                 }
             }
         }
+        self.pending_body = Some(body);
         timing.broadcast = t.elapsed();
 
         // --- Collect until decodable (lines 10-13) ----------------------
@@ -340,8 +385,15 @@ impl<T: ControllerTransport> Controller<T> {
         let out = self.decoder.decode(&received, &results, self.cfg.decode)?;
         timing.decode = t.elapsed();
         for (agent, theta) in self.agents.iter_mut().zip(out.theta.iter()) {
-            *agent = AgentParams::from_flat(&self.spec.dims, theta);
+            // In-place copy into the existing block vectors — no
+            // per-agent reallocation.
+            agent.copy_from_flat(&self.spec.dims, theta);
         }
+        // Close the buffer loop: recovered Θ' goes back to the decoder
+        // pool, consumed result vectors back to the data-plane pool
+        // (where the sim transport takes next iteration's accumulators).
+        self.decoder.recycle(out.theta);
+        self.pool.put_all(results);
 
         // --- Adaptive scheme selection (extension; DESIGN.md §9) --------
         if let Some(c) = compute_per_update {
@@ -394,6 +446,22 @@ impl<T: ControllerTransport> Controller<T> {
         self.cfg.scheme
     }
 
+    /// Recycle the previous broadcast's flat parameter vectors once the
+    /// controller is the body's sole owner. The sim transport drops its
+    /// references synchronously inside `send_to`, so this always
+    /// succeeds there; learner threads may still hold the Arc briefly,
+    /// in which case the buffers are simply dropped (a later pool miss,
+    /// never a correctness issue).
+    fn reclaim_pending_body(&mut self) {
+        if let Some(body) = self.pending_body.take() {
+            if let Ok(body) = Arc::try_unwrap(body) {
+                if let Ok(flats) = Arc::try_unwrap(body.agent_params) {
+                    self.pool.put_all(flats);
+                }
+            }
+        }
+    }
+
     /// Listen to the channel until the received subset is decodable
     /// (Alg. 1 lines 10-13), gathering the telemetry the adaptive
     /// selector consumes. `tasked` is how many learners were actually
@@ -410,6 +478,7 @@ impl<T: ControllerTransport> Controller<T> {
     fn collect(&mut self, iter: u64, tasked: usize) -> Result<CollectOutcome> {
         let m = self.spec.m;
         let n = self.cfg.n_learners;
+        let p_dim = self.spec.dims.agent_param_dim();
         let mut received: Vec<usize> = Vec::with_capacity(n);
         let mut results: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut got = vec![false; n];
@@ -446,6 +515,22 @@ impl<T: ControllerTransport> Controller<T> {
                         // `results_used` or trip the `== tasked`
                         // rank-deficiency bail below — drop it exactly
                         // like a stale message.
+                        continue;
+                    }
+                    if y.len() != p_dim {
+                        // A malformed reply (buggy / version-skewed
+                        // worker whose frame still parses) is an
+                        // erasure, not a poison pill: admitting it
+                        // would fail the decode — and the elementwise
+                        // kernels assert equal lengths — so drop it
+                        // like a stale message and keep collecting.
+                        if self.cfg.verbose {
+                            eprintln!(
+                                "iter {iter}: learner {j} sent a result of length {} \
+                                 (expected {p_dim}); dropping as an erasure",
+                                y.len()
+                            );
+                        }
                         continue;
                     }
                     got[j] = true;

@@ -17,14 +17,21 @@
 //! **single** interruptible [`LearnerEndpoint::recv_timeout`] wait
 //! (the controller's ack cancels the remainder) instead of the old
 //! 1 ms chunked-sleep poll loop that burned a core per straggler.
+//!
+//! The accumulator `y` is recycled: abort paths keep it, and
+//! [`LearnerEndpoint::send_result`] hands it back when the transport
+//! only serialized it (TCP) — so a worker's steady state allocates no
+//! P-sized buffer per task. The accumulation itself runs through
+//! [`crate::linalg::kernels::axpy`] (bit-identical to the scalar loop).
 
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::backend::LearnerBackend;
+use crate::linalg::kernels;
 use crate::sim::ClockRef;
-use crate::transport::{CtrlMsg, LearnerEndpoint, LearnerMsg};
+use crate::transport::{CtrlMsg, LearnerEndpoint};
 
 /// Outcome of polling the control channel mid-task.
 enum Poll {
@@ -97,27 +104,38 @@ pub fn learner_loop(
     mut backend: Box<dyn LearnerBackend>,
     clock: ClockRef,
 ) -> Result<()> {
+    // One-slot accumulator free list: abort paths and serializing
+    // transports return the buffer here; in-process transports move it
+    // to the controller, which recycles it in its own pool instead.
+    let mut scratch: Option<Vec<f32>> = None;
     loop {
         let msg = match ep.recv() {
             Ok(m) => m,
             Err(_) => return Ok(()), // controller gone: clean exit
         };
-        let CtrlMsg::Task { iter, row, agent_params, minibatch, straggler_delay_ns } = msg else {
+        let CtrlMsg::Task { iter, row, body, straggler_delay_ns } = msg else {
             match msg {
                 CtrlMsg::Shutdown => return Ok(()),
                 _ => continue, // stale Ack / Welcome
             }
         };
         // Drain any already-queued ack/supersession *before* paying the
-        // P-sized allocation — a stale task can be skipped for free.
+        // P-sized (re)initialization — a stale task can be skipped for
+        // free.
         match poll_ctrl(&mut ep, iter)? {
             Poll::Continue => {}
             Poll::AbortIteration => continue,
             Poll::Shutdown => return Ok(()),
         }
         let t0 = clock.now();
-        let p = agent_params.first().map(|v| v.len()).unwrap_or(0);
-        let mut y = vec![0.0f32; p];
+        let p = body.agent_params.first().map(|v| v.len()).unwrap_or(0);
+        let mut y = match scratch.take() {
+            Some(mut buf) if buf.len() == p => {
+                buf.fill(0.0);
+                buf
+            }
+            _ => vec![0.0f32; p],
+        };
         let mut aborted = false;
         for (i, &c) in row.iter().enumerate() {
             if c == 0.0 {
@@ -131,19 +149,21 @@ pub fn learner_loop(
                 }
                 Poll::Shutdown => return Ok(()),
             }
-            let theta_i = backend.update_agent(i, &agent_params, &minibatch)?;
-            for (acc, &v) in y.iter_mut().zip(theta_i.iter()) {
-                *acc += c * v;
-            }
+            let theta_i = backend.update_agent(i, &body.agent_params, &body.minibatch)?;
+            kernels::axpy(&mut y, c, &theta_i);
         }
         if aborted {
+            scratch = Some(y);
             continue;
         }
         let compute_ns = clock.now().saturating_sub(t0).as_nanos() as u64;
         if straggler_delay_ns > 0 {
             match serve_delay(&mut ep, &clock, iter, Duration::from_nanos(straggler_delay_ns))? {
                 Poll::Continue => {}
-                Poll::AbortIteration => continue,
+                Poll::AbortIteration => {
+                    scratch = Some(y);
+                    continue;
+                }
                 Poll::Shutdown => return Ok(()),
             }
         }
@@ -151,11 +171,15 @@ pub fn learner_loop(
         // is no point shipping a large stale vector.
         match poll_ctrl(&mut ep, iter)? {
             Poll::Continue => {}
-            Poll::AbortIteration => continue,
+            Poll::AbortIteration => {
+                scratch = Some(y);
+                continue;
+            }
             Poll::Shutdown => return Ok(()),
         }
-        if ep.send(LearnerMsg::Result { iter, learner_id, y, compute_ns }).is_err() {
-            return Ok(()); // controller gone mid-send
+        match ep.send_result(iter, learner_id, y, compute_ns) {
+            Ok(returned) => scratch = returned,
+            Err(_) => return Ok(()), // controller gone mid-send
         }
     }
 }
@@ -169,7 +193,7 @@ mod tests {
     use crate::rng::Pcg32;
     use crate::sim::real_clock;
     use crate::transport::local::local_pair;
-    use crate::transport::ControllerTransport;
+    use crate::transport::{ControllerTransport, LearnerMsg, TaskBody};
     use std::time::Duration;
 
     fn dims() -> ModelDims {
@@ -195,8 +219,10 @@ mod tests {
             CtrlMsg::Task {
                 iter,
                 row,
-                agent_params: std::sync::Arc::new(params.clone()),
-                minibatch: std::sync::Arc::new(mb.clone()),
+                body: TaskBody::new(
+                    std::sync::Arc::new(params.clone()),
+                    std::sync::Arc::new(mb.clone()),
+                ),
                 straggler_delay_ns: 0,
             },
             params,
@@ -284,17 +310,11 @@ mod tests {
         let (mut ctrl, handles) = spawn_learner(1);
         let mut rng = Pcg32::seeded(2);
         let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], &mut rng);
-        let CtrlMsg::Task { iter, row, agent_params, minibatch, .. } = msg else { unreachable!() };
+        let CtrlMsg::Task { iter, row, body, .. } = msg else { unreachable!() };
         let t0 = std::time::Instant::now();
         ctrl.send_to(
             0,
-            CtrlMsg::Task {
-                iter,
-                row,
-                agent_params,
-                minibatch,
-                straggler_delay_ns: 80_000_000,
-            },
+            CtrlMsg::Task { iter, row, body, straggler_delay_ns: 80_000_000 },
         )
         .unwrap();
         let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
@@ -313,14 +333,13 @@ mod tests {
         let (mut ctrl, handles) = spawn_learner(1);
         let mut rng = Pcg32::seeded(5);
         let (msg, _, _) = task(3, vec![1.0, 0.0, 0.0], &mut rng);
-        let CtrlMsg::Task { iter, row, agent_params, minibatch, .. } = msg else { unreachable!() };
+        let CtrlMsg::Task { iter, row, body, .. } = msg else { unreachable!() };
         ctrl.send_to(
             0,
             CtrlMsg::Task {
                 iter,
                 row,
-                agent_params,
-                minibatch,
+                body,
                 straggler_delay_ns: 5_000_000_000, // 5 s — must NOT be waited out
             },
         )

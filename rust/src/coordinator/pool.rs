@@ -57,6 +57,14 @@ impl ControllerTransport for Pool {
         }
     }
 
+    fn buf_pool(&self) -> Option<Arc<crate::linalg::pool::BufPool>> {
+        match self {
+            Pool::Local(c) => c.buf_pool(),
+            Pool::Tcp { ctrl, .. } => ctrl.buf_pool(),
+            Pool::Sim(s) => s.buf_pool(),
+        }
+    }
+
     fn shutdown(&mut self) {
         match self {
             Pool::Local(c) => c.shutdown(),

@@ -1,0 +1,287 @@
+//! Vectorized elementwise kernels for the gradient data plane.
+//!
+//! The hot loops of the coded pipeline — the learner's `y += c·θ'`
+//! accumulation ([`axpy`]), the decoder's `Θ = W·Y` apply ([`axpy`]),
+//! peeling's residual subtraction ([`sub_assign`]), and the
+//! `Mat::matmul`/QR inner loops (the f64 variants) — are all
+//! elementwise over long contiguous slices. These kernels process them
+//! in fixed-width chunks (`&[T; W]` views, so LLVM sees the exact trip
+//! count, elides bounds checks, and emits SIMD) with a scalar tail.
+//! [`add_assign`] and [`scale`] round out the f32 elementwise set for
+//! callers outside the current hot paths (benches, future reductions);
+//! they have no in-crate call sites yet.
+//!
+//! **Bit-identity contract:** every kernel is purely elementwise —
+//! output element `i` depends only on input element(s) `i`, computed by
+//! the same single expression the scalar loop used. There is no
+//! reduction, so no reordering, and therefore no floating-point
+//! difference from the straight-line scalar code these replaced
+//! (pinned by the property tests below and by the decoder's
+//! scalar-reference suite).
+
+/// Chunk width. 8 f32 = one AVX2 register; 8 f64 = two — both well
+/// within what LLVM unrolls cleanly.
+const W: usize = 8;
+
+/// `acc[i] += c * x[i]`.
+#[inline]
+pub fn axpy(acc: &mut [f32], c: f32, x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+    let mut a = acc.chunks_exact_mut(W);
+    let mut b = x.chunks_exact(W);
+    for (aa, bb) in (&mut a).zip(&mut b) {
+        let aa: &mut [f32; W] = aa.try_into().unwrap();
+        let bb: &[f32; W] = bb.try_into().unwrap();
+        for (a, b) in aa.iter_mut().zip(bb) {
+            *a += c * *b;
+        }
+    }
+    for (aa, &bb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *aa += c * bb;
+    }
+}
+
+/// `acc[i] -= x[i]` (peeling's residual subtraction).
+#[inline]
+pub fn sub_assign(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "sub_assign length mismatch");
+    let mut a = acc.chunks_exact_mut(W);
+    let mut b = x.chunks_exact(W);
+    for (aa, bb) in (&mut a).zip(&mut b) {
+        let aa: &mut [f32; W] = aa.try_into().unwrap();
+        let bb: &[f32; W] = bb.try_into().unwrap();
+        for (a, b) in aa.iter_mut().zip(bb) {
+            *a -= *b;
+        }
+    }
+    for (aa, &bb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *aa -= bb;
+    }
+}
+
+/// `acc[i] += x[i]`.
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "add_assign length mismatch");
+    let mut a = acc.chunks_exact_mut(W);
+    let mut b = x.chunks_exact(W);
+    for (aa, bb) in (&mut a).zip(&mut b) {
+        let aa: &mut [f32; W] = aa.try_into().unwrap();
+        let bb: &[f32; W] = bb.try_into().unwrap();
+        for (a, b) in aa.iter_mut().zip(bb) {
+            *a += *b;
+        }
+    }
+    for (aa, &bb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *aa += bb;
+    }
+}
+
+/// `v[i] *= c`.
+#[inline]
+pub fn scale(v: &mut [f32], c: f32) {
+    let mut a = v.chunks_exact_mut(W);
+    for aa in &mut a {
+        let aa: &mut [f32; W] = aa.try_into().unwrap();
+        for a in aa.iter_mut() {
+            *a *= c;
+        }
+    }
+    for aa in a.into_remainder() {
+        *aa *= c;
+    }
+}
+
+/// `acc[i] += c * x[i]` (f64 — `Mat::matmul` / QR inner loops).
+#[inline]
+pub fn axpy_f64(acc: &mut [f64], c: f64, x: &[f64]) {
+    assert_eq!(acc.len(), x.len(), "axpy_f64 length mismatch");
+    let mut a = acc.chunks_exact_mut(W);
+    let mut b = x.chunks_exact(W);
+    for (aa, bb) in (&mut a).zip(&mut b) {
+        let aa: &mut [f64; W] = aa.try_into().unwrap();
+        let bb: &[f64; W] = bb.try_into().unwrap();
+        for (a, b) in aa.iter_mut().zip(bb) {
+            *a += c * *b;
+        }
+    }
+    for (aa, &bb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *aa += c * bb;
+    }
+}
+
+/// `acc[i] -= x[i]` (f64).
+#[inline]
+pub fn sub_assign_f64(acc: &mut [f64], x: &[f64]) {
+    assert_eq!(acc.len(), x.len(), "sub_assign_f64 length mismatch");
+    let mut a = acc.chunks_exact_mut(W);
+    let mut b = x.chunks_exact(W);
+    for (aa, bb) in (&mut a).zip(&mut b) {
+        let aa: &mut [f64; W] = aa.try_into().unwrap();
+        let bb: &[f64; W] = bb.try_into().unwrap();
+        for (a, b) in aa.iter_mut().zip(bb) {
+            *a -= *b;
+        }
+    }
+    for (aa, &bb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *aa -= bb;
+    }
+}
+
+/// `acc[i] -= c * x[i]` (f64 — Householder updates, back substitution).
+#[inline]
+pub fn sub_axpy_f64(acc: &mut [f64], c: f64, x: &[f64]) {
+    assert_eq!(acc.len(), x.len(), "sub_axpy_f64 length mismatch");
+    let mut a = acc.chunks_exact_mut(W);
+    let mut b = x.chunks_exact(W);
+    for (aa, bb) in (&mut a).zip(&mut b) {
+        let aa: &mut [f64; W] = aa.try_into().unwrap();
+        let bb: &[f64; W] = bb.try_into().unwrap();
+        for (a, b) in aa.iter_mut().zip(bb) {
+            *a -= c * *b;
+        }
+    }
+    for (aa, &bb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *aa -= c * bb;
+    }
+}
+
+/// `v[i] *= c` (f64).
+#[inline]
+pub fn scale_f64(v: &mut [f64], c: f64) {
+    let mut a = v.chunks_exact_mut(W);
+    for aa in &mut a {
+        let aa: &mut [f64; W] = aa.try_into().unwrap();
+        for a in aa.iter_mut() {
+            *a *= c;
+        }
+    }
+    for aa in a.into_remainder() {
+        *aa *= c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn bits_f32(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn bits_f64(a: &[f64], b: &[f64]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Every kernel must reproduce its scalar loop bit for bit, at
+    /// every length (chunk boundaries included) and for denormal /
+    /// mixed-sign data.
+    #[test]
+    fn kernels_match_scalar_loops_bitwise() {
+        forall("kernels == scalar (bitwise)", 80, |g| {
+            let n = g.usize_in(0, 40); // spans 0, sub-chunk, multi-chunk + tail
+            let c32 = g.f32_vec(1, 1.0)[0];
+            let x32 = g.f32_vec(n, 1.0);
+            let base32 = g.f32_vec(n, 1.0);
+
+            let mut k = base32.clone();
+            axpy(&mut k, c32, &x32);
+            let mut s = base32.clone();
+            for (a, &v) in s.iter_mut().zip(x32.iter()) {
+                *a += c32 * v;
+            }
+            assert!(bits_f32(&k, &s), "axpy n={n}");
+
+            let mut k = base32.clone();
+            sub_assign(&mut k, &x32);
+            let mut s = base32.clone();
+            for (a, &v) in s.iter_mut().zip(x32.iter()) {
+                *a -= v;
+            }
+            assert!(bits_f32(&k, &s), "sub_assign n={n}");
+
+            let mut k = base32.clone();
+            add_assign(&mut k, &x32);
+            let mut s = base32.clone();
+            for (a, &v) in s.iter_mut().zip(x32.iter()) {
+                *a += v;
+            }
+            assert!(bits_f32(&k, &s), "add_assign n={n}");
+
+            let mut k = base32.clone();
+            scale(&mut k, c32);
+            let mut s = base32.clone();
+            for a in s.iter_mut() {
+                *a *= c32;
+            }
+            assert!(bits_f32(&k, &s), "scale n={n}");
+
+            let c64 = g.f64_in(-3.0, 3.0);
+            let x64 = g.normal_vec(n);
+            let base64 = g.normal_vec(n);
+
+            let mut k = base64.clone();
+            axpy_f64(&mut k, c64, &x64);
+            let mut s = base64.clone();
+            for (a, &v) in s.iter_mut().zip(x64.iter()) {
+                *a += c64 * v;
+            }
+            assert!(bits_f64(&k, &s), "axpy_f64 n={n}");
+
+            let mut k = base64.clone();
+            sub_axpy_f64(&mut k, c64, &x64);
+            let mut s = base64.clone();
+            for (a, &v) in s.iter_mut().zip(x64.iter()) {
+                *a -= c64 * v;
+            }
+            assert!(bits_f64(&k, &s), "sub_axpy_f64 n={n}");
+
+            let mut k = base64.clone();
+            sub_assign_f64(&mut k, &x64);
+            let mut s = base64.clone();
+            for (a, &v) in s.iter_mut().zip(x64.iter()) {
+                *a -= v;
+            }
+            assert!(bits_f64(&k, &s), "sub_assign_f64 n={n}");
+
+            let mut k = base64.clone();
+            scale_f64(&mut k, c64);
+            let mut s = base64.clone();
+            for a in s.iter_mut() {
+                *a *= c64;
+            }
+            assert!(bits_f64(&k, &s), "scale_f64 n={n}");
+        });
+    }
+
+    /// The learner's coded accumulation — a *sequence* of axpys into one
+    /// accumulator — must match the scalar sequence bitwise (this is the
+    /// `y = Σ_i c_i·θ'_i` path of Alg. 1 line 26).
+    #[test]
+    fn chained_axpy_matches_scalar_accumulation() {
+        forall("chained axpy == scalar", 40, |g| {
+            let p = g.usize_in(1, 67);
+            let rows = g.usize_in(1, 6);
+            let coeffs: Vec<f32> = (0..rows).map(|_| g.f32_vec(1, 1.0)[0]).collect();
+            let thetas: Vec<Vec<f32>> = (0..rows).map(|_| g.f32_vec(p, 1.0)).collect();
+            let mut k = vec![0.0f32; p];
+            for (c, th) in coeffs.iter().zip(&thetas) {
+                axpy(&mut k, *c, th);
+            }
+            let mut s = vec![0.0f32; p];
+            for (c, th) in coeffs.iter().zip(&thetas) {
+                for (a, &v) in s.iter_mut().zip(th.iter()) {
+                    *a += c * v;
+                }
+            }
+            assert!(bits_f32(&k, &s));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy length mismatch")]
+    fn mismatched_lengths_panic() {
+        axpy(&mut [0.0; 3], 1.0, &[0.0; 4]);
+    }
+}

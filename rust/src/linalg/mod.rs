@@ -12,8 +12,14 @@
 //!   `(CᵀC)⁻¹Cᵀ` form, kept for fidelity + benchmarking
 //! * [`Mat::rank`] — pivoted Gaussian elimination rank (decodability test)
 //! * [`gf2`] — GF(2) matrices for the LDPC code construction
+//! * [`kernels`] — chunked elementwise f32/f64 kernels for the data
+//!   plane (bit-identical to the scalar loops they replaced)
+//! * [`pool`] — length-keyed `Vec<f32>` free-list recycling the
+//!   per-iteration gradient buffers
 
 pub mod gf2;
+pub mod kernels;
+pub mod pool;
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -58,6 +64,12 @@ impl Mat {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
     /// Select a subset of rows (the `C_I` submatrix of the paper).
     pub fn select_rows(&self, idx: &[usize]) -> Mat {
         let mut m = Mat::zeros(idx.len(), self.cols);
@@ -77,21 +89,20 @@ impl Mat {
         t
     }
 
-    /// Matrix product, cache-friendly ikj loop order.
+    /// Matrix product, cache-friendly ikj loop order. The inner loop is
+    /// a row-slice axpy ([`kernels::axpy_f64`]) — no `Index` calls, so
+    /// LLVM sees contiguous slices and elides the bounds checks.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
+            let arow = self.row(i);
+            let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a) in arow.iter().enumerate() {
                 if a == 0.0 {
                     continue;
                 }
-                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
-                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
-                for (d, &o) in dst.iter_mut().zip(orow) {
-                    *d += a * o;
-                }
+                kernels::axpy_f64(dst, a, other.row(k));
             }
         }
         out
@@ -201,6 +212,8 @@ fn householder_qr(a: &Mat) -> (Mat, Vec<f64>) {
     assert!(m >= n, "QR requires m >= n");
     let mut qr = a.clone();
     let mut betas = vec![0.0; n];
+    // Scratch for the per-column reflector application (see below).
+    let mut scratch = vec![0.0f64; n.saturating_sub(1)];
     for k in 0..n {
         // norm of column k below the diagonal
         let mut norm = 0.0;
@@ -225,17 +238,26 @@ fn householder_qr(a: &Mat) -> (Mat, Vec<f64>) {
             continue;
         }
         let beta = 2.0 / vnorm2;
-        // apply H = I - beta v v^T to the trailing submatrix
-        for j in (k + 1)..n {
-            let mut dot = v0 * qr[(k, j)];
-            for i in (k + 1)..m {
-                dot += qr[(i, k)] * qr[(i, j)];
+        // Apply H = I − β·v·vᵀ to the trailing submatrix, row-major:
+        // dots[j] = v0·qr[k][j] + Σ_{i>k} v_i·qr[i][j], then each row
+        // subtracts v_i·(β·dots[j]). Row-slice kernels instead of
+        // column-at-a-time `Index` calls; per-element arithmetic and
+        // i-summation order are unchanged (every j is independent), so
+        // the factorization is bit-identical to the old loop.
+        if k + 1 < n {
+            let dots = &mut scratch[..n - k - 1];
+            for (d, &x) in dots.iter_mut().zip(&qr.row(k)[k + 1..]) {
+                *d = v0 * x;
             }
-            let s = beta * dot;
-            qr[(k, j)] -= s * v0;
             for i in (k + 1)..m {
-                let vik = qr[(i, k)];
-                qr[(i, j)] -= s * vik;
+                let row = qr.row(i);
+                kernels::axpy_f64(dots, row[k], &row[k + 1..]);
+            }
+            kernels::scale_f64(dots, beta);
+            kernels::sub_axpy_f64(&mut qr.row_mut(k)[k + 1..], v0, dots);
+            for i in (k + 1)..m {
+                let (head, tail) = qr.row_mut(i).split_at_mut(k + 1);
+                kernels::sub_axpy_f64(tail, head[k], dots);
             }
         }
         qr[(k, k)] = alpha;
@@ -255,42 +277,55 @@ fn householder_qr(a: &Mat) -> (Mat, Vec<f64>) {
 }
 
 /// Apply Qᵀ (from compact QR) to a dense RHS matrix in place.
+///
+/// Row-major formulation of the old column-at-a-time loop: all RHS
+/// columns advance together through row-slice kernels, with identical
+/// per-element arithmetic and i-order (columns are independent), so
+/// the result is bit-identical while the inner loops run over
+/// contiguous slices.
 fn apply_qt(qr: &Mat, betas: &[f64], b: &mut Mat) {
     let (m, n) = (qr.rows, qr.cols);
     assert_eq!(b.rows, m);
+    let mut dots = vec![0.0f64; b.cols];
     for k in 0..n {
         let beta = betas[k];
         if beta == 0.0 {
             continue;
         }
-        for j in 0..b.cols {
-            // v = [1, qr[k+1..m, k]]
-            let mut dot = b[(k, j)];
-            for i in (k + 1)..m {
-                dot += qr[(i, k)] * b[(i, j)];
-            }
-            let s = beta * dot;
-            b[(k, j)] -= s;
-            for i in (k + 1)..m {
-                let v = qr[(i, k)];
-                b[(i, j)] -= s * v;
-            }
+        // dots[j] = b[k][j] + Σ_{i>k} v_i·b[i][j]   (v_0 = 1 implicit)
+        dots.copy_from_slice(b.row(k));
+        for i in (k + 1)..m {
+            kernels::axpy_f64(&mut dots, qr[(i, k)], b.row(i));
+        }
+        kernels::scale_f64(&mut dots, beta);
+        // b[k][j] -= s_j;  b[i][j] -= v_i·s_j
+        kernels::sub_assign_f64(b.row_mut(k), &dots);
+        for i in (k + 1)..m {
+            kernels::sub_axpy_f64(b.row_mut(i), qr[(i, k)], &dots);
         }
     }
 }
 
-/// Solve R x = y by back substitution for each RHS column.
+/// Solve R x = y by back substitution, all RHS columns advancing
+/// together (row-slice kernels; same per-element op order as the old
+/// column-at-a-time loop, hence bit-identical).
 fn back_substitute(qr: &Mat, b: &Mat) -> Mat {
     let n = qr.cols;
     let mut x = Mat::zeros(n, b.cols);
-    for j in 0..b.cols {
-        for i in (0..n).rev() {
-            let mut s = b[(i, j)];
-            for k in (i + 1)..n {
-                s -= qr[(i, k)] * x[(k, j)];
+    let mut s = vec![0.0f64; b.cols];
+    for i in (0..n).rev() {
+        s.copy_from_slice(b.row(i));
+        for k in (i + 1)..n {
+            kernels::sub_axpy_f64(&mut s, qr[(i, k)], x.row(k));
+        }
+        let d = qr[(i, i)];
+        let xrow = x.row_mut(i);
+        if d.abs() < 1e-300 {
+            xrow.fill(0.0);
+        } else {
+            for (o, &v) in xrow.iter_mut().zip(s.iter()) {
+                *o = v / d;
             }
-            let d = qr[(i, i)];
-            x[(i, j)] = if d.abs() < 1e-300 { 0.0 } else { s / d };
         }
     }
     x

@@ -1,0 +1,237 @@
+//! Length-keyed `Vec<f32>` free-list for the gradient data plane.
+//!
+//! The coded loop moves the same handful of buffer shapes every
+//! iteration — P-sized parameter/result vectors and M-sized assignment
+//! rows — and previously allocated all of them fresh per iteration
+//! (N results + M flats + N rows at N = 10 000 is hundreds of MB of
+//! churn per virtual second). A [`BufPool`] recycles them: `take_*`
+//! pops a buffer of the exact requested length from the matching
+//! shelf (or allocates on a miss), `put` returns one. In steady state
+//! every take is a hit and the per-iteration heap traffic drops to
+//! zero (pinned by the sim steady-state test).
+//!
+//! Shelves are bounded (`shelf_cap` buffers per distinct length) so a
+//! producer/consumer imbalance — e.g. the local-thread transport,
+//! where learner-side result vectors arrive but assignment rows never
+//! return — cannot grow the pool without bound; excess puts are
+//! dropped and counted.
+//!
+//! Thread-safe via an uncontended `Mutex` (one controller or transport
+//! owns each pool; sweep shards each own their cell's pool), so pools
+//! can live inside `Sync` structures like [`crate::coding::decoder::Decoder`].
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Hit/miss telemetry of a buffer pool, surfaced alongside
+/// [`crate::coding::decoder::PlanCacheStats`] in sweep/bench output.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Takes served from a shelf (no allocation).
+    pub hits: u64,
+    /// Takes that had to allocate.
+    pub misses: u64,
+    /// Puts dropped because the shelf was at capacity.
+    pub dropped: u64,
+    /// Buffers currently resident across all shelves.
+    pub resident: usize,
+}
+
+impl PoolStats {
+    /// Fraction of takes served without allocating (0.0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Shelves {
+    /// Buffers keyed by their length (buffers keep `len` intact while
+    /// shelved; contents are stale and overwritten by `take_*`).
+    by_len: HashMap<usize, Vec<Vec<f32>>>,
+    hits: u64,
+    misses: u64,
+    dropped: u64,
+    resident: usize,
+}
+
+/// Bounded free-list of `Vec<f32>` buffers, keyed by length.
+pub struct BufPool {
+    shelves: Mutex<Shelves>,
+    /// Max buffers kept per distinct length.
+    shelf_cap: usize,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        BufPool::with_shelf_cap(64)
+    }
+}
+
+impl BufPool {
+    /// Pool keeping at most `shelf_cap` buffers per distinct length.
+    /// Size it to one iteration's working set (the data plane sizes it
+    /// as ~3N+8: N rows + up to 2N in-flight results + M flats).
+    pub fn with_shelf_cap(shelf_cap: usize) -> BufPool {
+        BufPool {
+            shelves: Mutex::new(Shelves {
+                by_len: HashMap::new(),
+                hits: 0,
+                misses: 0,
+                dropped: 0,
+                resident: 0,
+            }),
+            shelf_cap,
+        }
+    }
+
+    fn pop(&self, len: usize) -> Option<Vec<f32>> {
+        let mut s = self.shelves.lock().expect("buf pool poisoned");
+        match s.by_len.get_mut(&len).and_then(|shelf| shelf.pop()) {
+            Some(buf) => {
+                s.hits += 1;
+                s.resident -= 1;
+                debug_assert_eq!(buf.len(), len);
+                Some(buf)
+            }
+            None => {
+                s.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// A zeroed buffer of exactly `len` elements.
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        match self.pop(len) {
+            Some(mut buf) => {
+                buf.fill(0.0);
+                buf
+            }
+            None => vec![0.0f32; len],
+        }
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn take_copy(&self, src: &[f32]) -> Vec<f32> {
+        match self.pop(src.len()) {
+            Some(mut buf) => {
+                buf.copy_from_slice(src);
+                buf
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// A buffer of `len` elements filled by `init` (which must write
+    /// every element — recycled buffers carry stale contents).
+    pub fn take_with(&self, len: usize, init: impl FnOnce(&mut [f32])) -> Vec<f32> {
+        let mut buf = match self.pop(len) {
+            Some(buf) => buf,
+            None => vec![0.0f32; len],
+        };
+        init(&mut buf);
+        buf
+    }
+
+    /// Return a buffer to its length's shelf (dropped if the shelf is
+    /// full or the buffer is empty).
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut s = self.shelves.lock().expect("buf pool poisoned");
+        let cap = self.shelf_cap;
+        let shelf = s.by_len.entry(buf.len()).or_default();
+        if shelf.len() < cap {
+            shelf.push(buf);
+            s.resident += 1;
+        } else {
+            s.dropped += 1;
+        }
+    }
+
+    /// Return a batch of buffers (e.g. a decoded Θ' or the iteration's
+    /// collected results).
+    pub fn put_all(&self, bufs: impl IntoIterator<Item = Vec<f32>>) {
+        for b in bufs {
+            self.put(b);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let s = self.shelves.lock().expect("buf pool poisoned");
+        PoolStats { hits: s.hits, misses: s.misses, dropped: s.dropped, resident: s.resident }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_cycle_hits_after_warmup() {
+        let pool = BufPool::with_shelf_cap(8);
+        let a = pool.take_zeroed(10);
+        assert_eq!(a, vec![0.0; 10]);
+        pool.put(a);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.resident), (0, 1, 1));
+        let b = pool.take_zeroed(10);
+        assert_eq!(b, vec![0.0; 10], "recycled buffer must come back zeroed");
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(pool.stats().resident, 0);
+    }
+
+    #[test]
+    fn shelves_are_keyed_by_length() {
+        let pool = BufPool::with_shelf_cap(8);
+        pool.put(vec![1.0; 5]);
+        // A different length misses even though a buffer is resident.
+        let _ = pool.take_zeroed(6);
+        assert_eq!(pool.stats().misses, 1);
+        assert_eq!(pool.stats().resident, 1);
+        // The matching length hits.
+        let v = pool.take_copy(&[9.0, 8.0, 7.0, 6.0, 5.0]);
+        assert_eq!(v, vec![9.0, 8.0, 7.0, 6.0, 5.0]);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn take_with_overwrites_stale_contents() {
+        let pool = BufPool::with_shelf_cap(4);
+        pool.put(vec![f32::NAN; 3]);
+        let v = pool.take_with(3, |out| {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = i as f32;
+            }
+        });
+        assert_eq!(v, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn shelf_cap_bounds_residency() {
+        let pool = BufPool::with_shelf_cap(2);
+        for _ in 0..5 {
+            pool.put(vec![0.0; 4]);
+        }
+        let s = pool.stats();
+        assert_eq!(s.resident, 2, "cap must bound the shelf");
+        assert_eq!(s.dropped, 3);
+        // Other lengths get their own (also bounded) shelf.
+        pool.put(vec![0.0; 9]);
+        assert_eq!(pool.stats().resident, 3);
+    }
+
+    #[test]
+    fn empty_buffers_are_not_shelved() {
+        let pool = BufPool::with_shelf_cap(4);
+        pool.put(Vec::new());
+        assert_eq!(pool.stats().resident, 0);
+        assert_eq!(pool.take_zeroed(0), Vec::<f32>::new());
+    }
+}

@@ -99,6 +99,33 @@ impl AgentParams {
         }
     }
 
+    /// Write the flat layout into an existing buffer of exactly
+    /// [`ModelDims::agent_param_dim`] elements — the allocation-free
+    /// counterpart of [`AgentParams::to_flat`] used by the controller's
+    /// pooled broadcast path.
+    pub fn write_flat(&self, out: &mut [f32]) {
+        let (p, c) = (self.policy.len(), self.critic.len());
+        let (tp, tc) = (self.target_policy.len(), self.target_critic.len());
+        assert_eq!(out.len(), p + c + tp + tc, "write_flat length mismatch");
+        out[..p].copy_from_slice(&self.policy);
+        out[p..p + c].copy_from_slice(&self.critic);
+        out[p + c..p + c + tp].copy_from_slice(&self.target_policy);
+        out[p + c + tp..].copy_from_slice(&self.target_critic);
+    }
+
+    /// Overwrite `self` from the flat layout without reallocating the
+    /// four block vectors — the allocation-free counterpart of
+    /// [`AgentParams::from_flat`] for the controller's recovery path
+    /// (`self` must already have the layout implied by `dims`).
+    pub fn copy_from_flat(&mut self, dims: &ModelDims, flat: &[f32]) {
+        assert_eq!(flat.len(), dims.agent_param_dim(), "flat length mismatch");
+        let [(o0, l0), (o1, l1), (o2, l2), (o3, l3)] = dims.blocks();
+        self.policy.copy_from_slice(&flat[o0..o0 + l0]);
+        self.critic.copy_from_slice(&flat[o1..o1 + l1]);
+        self.target_policy.copy_from_slice(&flat[o2..o2 + l2]);
+        self.target_critic.copy_from_slice(&flat[o3..o3 + l3]);
+    }
+
     pub fn max_abs_diff(&self, other: &AgentParams) -> f32 {
         fn d(a: &[f32], b: &[f32]) -> f32 {
             a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
@@ -188,6 +215,29 @@ mod tests {
         assert_eq!(flat.len(), d.agent_param_dim());
         let q = AgentParams::from_flat(&d, &flat);
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn write_flat_and_copy_from_flat_match_the_allocating_paths() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(7);
+        let p = AgentParams::init(&d, &mut rng);
+        let mut buf = vec![f32::NAN; d.agent_param_dim()];
+        p.write_flat(&mut buf);
+        assert_eq!(buf, p.to_flat());
+        // copy_from_flat reuses q's block vectors and reproduces from_flat.
+        let mut q = AgentParams::init(&d, &mut rng);
+        q.copy_from_flat(&d, &buf);
+        assert_eq!(q, p);
+        assert_eq!(q, AgentParams::from_flat(&d, &buf));
+    }
+
+    #[test]
+    #[should_panic(expected = "write_flat length mismatch")]
+    fn write_flat_checks_length() {
+        let d = dims();
+        let mut rng = Pcg32::seeded(8);
+        AgentParams::init(&d, &mut rng).write_flat(&mut [0.0; 3]);
     }
 
     #[test]

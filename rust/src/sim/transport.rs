@@ -41,6 +41,8 @@ use anyhow::Result;
 
 use super::clock::{Clock, ClockRef, VirtualClock};
 use crate::coordinator::backend::{LearnerBackend, MockBackend};
+use crate::linalg::kernels;
+use crate::linalg::pool::BufPool;
 use crate::marl::buffer::Minibatch;
 use crate::marl::ModelDims;
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
@@ -99,6 +101,12 @@ pub struct SimTransport {
     learners: Vec<SimLearner>,
     events: BinaryHeap<Event>,
     seq: u64,
+    /// Gradient-buffer free list shared with the controller
+    /// ([`ControllerTransport::buf_pool`]): result vectors are taken
+    /// here and return after decode (or when a cancelled event is
+    /// lazily popped); assignment rows return the moment their task is
+    /// absorbed. Steady state: zero per-iteration heap allocation.
+    pool: Arc<BufPool>,
 }
 
 impl SimTransport {
@@ -167,7 +175,11 @@ impl SimTransport {
         // number of lazily-deleted stale ones; pre-sizing avoids heap
         // regrowth inside N = 1000-learner iterations.
         let events = BinaryHeap::with_capacity(2 * learners.len() + 1);
-        SimTransport { clock: VirtualClock::shared(), learners, events, seq: 0 }
+        // Shelf cap sized to one iteration's working set: N assignment
+        // rows + up to 2N result vectors in flight (pending + just
+        // recycled) + M ≤ N flat parameter vectors from the controller.
+        let pool = Arc::new(BufPool::with_shelf_cap(3 * learners.len() + 8));
+        SimTransport { clock: VirtualClock::shared(), learners, events, seq: 0, pool }
     }
 
     /// The transport's virtual clock (also returned, type-erased, by
@@ -177,39 +189,42 @@ impl SimTransport {
     }
 
     /// Run the learner's coded update now, schedule its result at the
-    /// modeled completion time.
+    /// modeled completion time. The accumulator comes from the shared
+    /// [`BufPool`] (recycled from previously decoded results), and the
+    /// absorbed assignment row goes straight back to it.
     fn handle_task(
         &mut self,
         j: usize,
         iter: u64,
-        row: &[f32],
+        row: Vec<f32>,
         agent_params: &[Vec<f32>],
         minibatch: &Minibatch,
         straggler_delay_ns: u64,
     ) -> Result<()> {
         let now = self.clock.now();
-        let learner = &mut self.learners[j];
-        learner.generation += 1; // a new task supersedes any pending result
-        let Some(backend) = learner.backend.as_mut() else {
+        self.learners[j].generation += 1; // a new task supersedes any pending result
+        if self.learners[j].backend.is_none() {
+            self.pool.put(row);
             return Ok(()); // permanent erasure: the task is swallowed
-        };
+        }
         let p = agent_params.first().map(|v| v.len()).unwrap_or(0);
-        let mut y = vec![0.0f32; p];
+        let mut y = self.pool.take_zeroed(p);
+        let learner = &mut self.learners[j];
+        let backend = learner.backend.as_mut().expect("checked above");
         let mut updates = 0u32;
         for (i, &c) in row.iter().enumerate() {
             if c == 0.0 {
                 continue;
             }
             let theta_i = backend.update_agent(i, agent_params, minibatch)?;
-            for (acc, &v) in y.iter_mut().zip(theta_i.iter()) {
-                *acc += c * v;
-            }
+            kernels::axpy(&mut y, c, &theta_i);
             updates += 1;
         }
         let compute = learner.compute * updates;
         let at = now + compute + Duration::from_nanos(straggler_delay_ns);
         learner.pending_iter = Some(iter);
         let generation = learner.generation;
+        self.pool.put(row);
         self.seq += 1;
         self.events.push(Event {
             at,
@@ -244,9 +259,14 @@ impl ControllerTransport for SimTransport {
 
     fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
         match msg {
-            CtrlMsg::Task { iter, row, agent_params, minibatch, straggler_delay_ns } => {
-                self.handle_task(learner, iter, &row, &agent_params, &minibatch, straggler_delay_ns)
-            }
+            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => self.handle_task(
+                learner,
+                iter,
+                row,
+                &body.agent_params,
+                &body.minibatch,
+                straggler_delay_ns,
+            ),
             CtrlMsg::Ack { iter } => {
                 self.handle_ack(learner, iter);
                 Ok(())
@@ -259,7 +279,12 @@ impl ControllerTransport for SimTransport {
         let deadline = self.clock.now() + timeout;
         while let Some(top) = self.events.peek() {
             if top.generation != self.learners[top.learner].generation {
-                self.events.pop(); // cancelled (superseded task / acked iteration)
+                // Cancelled (superseded task / acked iteration): its
+                // result vector goes back to the pool instead of the
+                // allocator.
+                if let Some(Event { msg: LearnerMsg::Result { y, .. }, .. }) = self.events.pop() {
+                    self.pool.put(y);
+                }
                 continue;
             }
             if top.at > deadline {
@@ -286,6 +311,10 @@ impl ControllerTransport for SimTransport {
 
     fn clock(&self) -> ClockRef {
         self.clock.clone()
+    }
+
+    fn buf_pool(&self) -> Option<Arc<BufPool>> {
+        Some(Arc::clone(&self.pool))
     }
 }
 
@@ -323,8 +352,10 @@ mod tests {
             CtrlMsg::Task {
                 iter,
                 row,
-                agent_params: Arc::new(params.clone()),
-                minibatch: Arc::new(mb.clone()),
+                body: crate::transport::TaskBody::new(
+                    Arc::new(params.clone()),
+                    Arc::new(mb.clone()),
+                ),
                 straggler_delay_ns: delay_ns,
             },
             params,
@@ -465,6 +496,35 @@ mod tests {
         // …and the dead one never does
         let quiet = sim.recv_timeout(Duration::from_millis(50)).unwrap();
         assert!(quiet.is_none(), "dead learner produced a result: {quiet:?}");
+    }
+
+    #[test]
+    fn result_buffers_recycle_through_the_shared_pool() {
+        let mut sim = SimTransport::new(1, dims(), Duration::ZERO);
+        let pool = sim.buf_pool().expect("sim owns a pool");
+        let mut rng = Pcg32::seeded(9);
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { y, .. } = got else { panic!() };
+        // What the controller does after decoding: return the result.
+        pool.put(y);
+        let hits_before = pool.stats().hits;
+        let (msg2, _, _) = task(2, vec![0.0, 1.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg2).unwrap();
+        assert!(
+            pool.stats().hits > hits_before,
+            "second task must reuse the recycled result buffer"
+        );
+        // A cancelled (acked) pending result returns to the pool when
+        // its stale event is lazily popped.
+        sim.send_to(0, CtrlMsg::Ack { iter: 2 }).unwrap();
+        let resident_before = pool.stats().resident;
+        assert!(sim.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        assert!(
+            pool.stats().resident > resident_before,
+            "cancelled result must be recycled, not dropped"
+        );
     }
 
     #[test]

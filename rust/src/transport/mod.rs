@@ -32,12 +32,14 @@ pub mod msg;
 pub mod tcp;
 pub mod wire;
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-pub use msg::{CtrlMsg, LearnerMsg};
+pub use msg::{CtrlMsg, LearnerMsg, TaskBody};
 
+use crate::linalg::pool::BufPool;
 use crate::sim::{real_clock, ClockRef};
 
 /// Controller-side view of the learner pool.
@@ -70,6 +72,18 @@ pub trait ControllerTransport {
     fn clock(&self) -> ClockRef {
         real_clock()
     }
+
+    /// The gradient-buffer pool this transport recycles through, if it
+    /// owns one. The controller shares it (result vectors it has
+    /// decoded go back here; assignment rows and flat parameters are
+    /// taken from it), so a transport that allocates per-learner
+    /// buffers — the sim pool's result vectors — reaches steady-state
+    /// zero allocation. Thread/socket transports return None (buffers
+    /// cross thread/process boundaries and cannot be recycled in
+    /// place); the controller then keeps a private pool.
+    fn buf_pool(&self) -> Option<Arc<BufPool>> {
+        None
+    }
 }
 
 /// Learner-side endpoint.
@@ -90,4 +104,20 @@ pub trait LearnerEndpoint {
 
     /// Send a message to the controller.
     fn send(&mut self, msg: LearnerMsg) -> Result<()>;
+
+    /// Send a [`LearnerMsg::Result`], handing the `y` buffer back to
+    /// the caller when the transport only *serialized* it (TCP) rather
+    /// than moved it (in-process channels). The learner loop keeps the
+    /// returned buffer as its accumulator for the next iteration, so a
+    /// TCP worker's steady state allocates nothing per task.
+    fn send_result(
+        &mut self,
+        iter: u64,
+        learner_id: u32,
+        y: Vec<f32>,
+        compute_ns: u64,
+    ) -> Result<Option<Vec<f32>>> {
+        self.send(LearnerMsg::Result { iter, learner_id, y, compute_ns })?;
+        Ok(None)
+    }
 }

@@ -1,25 +1,104 @@
 //! Controller ⇄ learner protocol messages (paper Alg. 1) and their
 //! wire encoding.
 //!
+//! ## Encode-once broadcast
+//!
 //! The Task payload (all agent parameters + the minibatch, ~2 MB at
-//! paper scale) is `Arc`-shared: the controller broadcasts one message
-//! to N learners, and with the local transport the clone per learner
-//! is a refcount bump instead of a multi-megabyte copy (EXPERIMENTS.md
-//! §Perf). The TCP transport serializes through the same Arc.
+//! paper scale) is identical for every learner; only a tiny header
+//! (iteration, assignment row, injected delay) differs. The wire
+//! format is therefore split:
+//!
+//! ```text
+//! Task payload := header | body
+//! header       := u8 tag | u64 iter | u64 delay_ns | f32_slice row
+//!                 | u32 body_len
+//! body         := u32 M | f32_slice θ × M | minibatch
+//! ```
+//!
+//! The shared [`TaskBody`] memoizes its body bytes (`Arc<[u8]>`,
+//! encoded at most once per iteration); [`CtrlMsg::write_framed`]
+//! writes those bytes per learner after a fresh ~100-byte header — so
+//! a TCP broadcast serializes the multi-megabyte payload **once** per
+//! iteration instead of N times, and the in-process transports pass
+//! the `Arc` without ever touching bytes. The `body_len` field lets
+//! the decoder reject frames whose body was truncated or spliced.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Result};
 
 use super::wire::{WireReader, WireWriter};
 use crate::marl::buffer::Minibatch;
 
+/// The broadcast-shared part of a Task: every learner of one iteration
+/// holds the same `Arc<TaskBody>`. Wire bytes are produced lazily and
+/// at most once ([`TaskBody::wire_bytes`]).
+pub struct TaskBody {
+    /// M flat agent vectors (wire layout: [θ_p|θ_q|θ̂_p|θ̂_q] per agent).
+    pub agent_params: Arc<Vec<Vec<f32>>>,
+    /// The sampled minibatch `B` (Alg. 1 line 9).
+    pub minibatch: Arc<Minibatch>,
+    /// Memoized body encoding (shared across all per-learner frames).
+    encoded: OnceLock<Arc<[u8]>>,
+}
+
+impl TaskBody {
+    pub fn new(agent_params: Arc<Vec<Vec<f32>>>, minibatch: Arc<Minibatch>) -> Arc<TaskBody> {
+        Arc::new(TaskBody { agent_params, minibatch, encoded: OnceLock::new() })
+    }
+
+    /// The body's wire bytes, encoded on first use and shared by every
+    /// subsequent frame of the broadcast.
+    pub fn wire_bytes(&self) -> Arc<[u8]> {
+        Arc::clone(self.encoded.get_or_init(|| {
+            let mut w = WireWriter::new();
+            w.u32(self.agent_params.len() as u32);
+            for p in self.agent_params.iter() {
+                w.f32_slice(p);
+            }
+            write_minibatch(&mut w, &self.minibatch);
+            w.buf.into()
+        }))
+    }
+
+    fn read(r: &mut WireReader) -> Result<TaskBody> {
+        let m = r.u32()? as usize;
+        let mut agent_params = Vec::with_capacity(m);
+        for _ in 0..m {
+            agent_params.push(r.f32_vec()?);
+        }
+        let minibatch = read_minibatch(r)?;
+        Ok(TaskBody {
+            agent_params: Arc::new(agent_params),
+            minibatch: Arc::new(minibatch),
+            encoded: OnceLock::new(),
+        })
+    }
+}
+
+impl PartialEq for TaskBody {
+    fn eq(&self, other: &TaskBody) -> bool {
+        // The memoized encoding is derived state — never compared.
+        self.agent_params == other.agent_params && self.minibatch == other.minibatch
+    }
+}
+
+impl std::fmt::Debug for TaskBody {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TaskBody")
+            .field("agents", &self.agent_params.len())
+            .field("p", &self.agent_params.first().map(|v| v.len()).unwrap_or(0))
+            .field("batch", &self.minibatch.batch)
+            .field("encoded", &self.encoded.get().map(|b| b.len()))
+            .finish()
+    }
+}
+
 /// Controller → learner.
 #[derive(Clone, Debug, PartialEq)]
 pub enum CtrlMsg {
-    /// One training iteration's work: the broadcast parameters `θ` for
-    /// all M agents (wire layout: [θ_p|θ_q|θ̂_p|θ̂_q] per agent) and the
-    /// sampled minibatch `B` (Alg. 1 line 9).
+    /// One training iteration's work: the per-learner header plus the
+    /// broadcast-shared [`TaskBody`] (Alg. 1 line 9).
     Task {
         iter: u64,
         /// This learner's row of the assignment matrix `C` (length M;
@@ -27,9 +106,9 @@ pub enum CtrlMsg {
         /// learners stateless w.r.t. the coding scheme, so one pool can
         /// serve every scheme/straggler configuration in a sweep.
         row: Vec<f32>,
-        /// M flat agent vectors (shared across the broadcast).
-        agent_params: Arc<Vec<Vec<f32>>>,
-        minibatch: Arc<Minibatch>,
+        /// Shared body: agent parameters + minibatch, `Arc`-shared
+        /// across the broadcast and wire-encoded at most once.
+        body: Arc<TaskBody>,
         /// Injected straggler delay in nanoseconds (0 = healthy). The
         /// controller selects the k stragglers per iteration (§V-C).
         straggler_delay_ns: u64,
@@ -107,31 +186,65 @@ fn read_minibatch(r: &mut WireReader) -> Result<Minibatch> {
 }
 
 impl CtrlMsg {
-    pub fn encode(&self) -> WireWriter {
+    /// The per-learner header of a Task frame (everything except the
+    /// shared body bytes). `body_len` is the length of the body that
+    /// will follow in the same frame.
+    fn encode_task_header(iter: u64, row: &[f32], delay_ns: u64, body_len: usize) -> WireWriter {
         let mut w = WireWriter::new();
+        w.u8(TAG_TASK);
+        w.u64(iter);
+        w.u64(delay_ns);
+        w.f32_slice(row);
+        w.u32(body_len as u32);
+        w
+    }
+
+    /// Full payload encoding. For Task this concatenates header +
+    /// shared body bytes into one buffer; the zero-copy broadcast path
+    /// is [`CtrlMsg::write_framed`], which never materializes the
+    /// concatenation.
+    pub fn encode(&self) -> WireWriter {
         match self {
-            CtrlMsg::Task { iter, row, agent_params, minibatch, straggler_delay_ns } => {
-                w.u8(TAG_TASK);
-                w.u64(*iter);
-                w.u64(*straggler_delay_ns);
-                w.f32_slice(row);
-                w.u32(agent_params.len() as u32);
-                for p in agent_params.iter() {
-                    w.f32_slice(p);
-                }
-                write_minibatch(&mut w, minibatch);
+            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => {
+                let bytes = body.wire_bytes();
+                let mut w =
+                    Self::encode_task_header(*iter, row, *straggler_delay_ns, bytes.len());
+                w.buf.extend_from_slice(&bytes);
+                w
             }
             CtrlMsg::Ack { iter } => {
+                let mut w = WireWriter::new();
                 w.u8(TAG_ACK);
                 w.u64(*iter);
+                w
             }
-            CtrlMsg::Shutdown => w.u8(TAG_SHUTDOWN),
+            CtrlMsg::Shutdown => {
+                let mut w = WireWriter::new();
+                w.u8(TAG_SHUTDOWN);
+                w
+            }
             CtrlMsg::Welcome { learner_id } => {
+                let mut w = WireWriter::new();
                 w.u8(TAG_WELCOME);
                 w.u32(*learner_id);
+                w
             }
         }
-        w
+    }
+
+    /// Write this message as one length-prefixed frame. Task frames
+    /// take the encode-once path: a fresh header plus the memoized
+    /// shared body bytes — per-learner serialization work is
+    /// header-only, independent of the body size and of N.
+    pub fn write_framed(&self, out: &mut impl std::io::Write) -> Result<()> {
+        match self {
+            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => {
+                let bytes = body.wire_bytes();
+                Self::encode_task_header(*iter, row, *straggler_delay_ns, bytes.len())
+                    .write_frame_with_tail(out, &bytes)
+            }
+            _ => self.encode().write_frame(out),
+        }
     }
 
     pub fn decode(payload: &[u8]) -> Result<CtrlMsg> {
@@ -141,22 +254,18 @@ impl CtrlMsg {
                 let iter = r.u64()?;
                 let straggler_delay_ns = r.u64()?;
                 let row = r.f32_vec()?;
-                let m = r.u32()? as usize;
-                let mut agent_params = Vec::with_capacity(m);
-                for _ in 0..m {
-                    agent_params.push(r.f32_vec()?);
+                let body_len = r.u32()? as usize;
+                if r.remaining() != body_len {
+                    bail!(
+                        "wire: Task body length mismatch (header says {body_len}, frame has {})",
+                        r.remaining()
+                    );
                 }
-                let minibatch = read_minibatch(&mut r)?;
-                if row.len() != agent_params.len() {
+                let body = TaskBody::read(&mut r)?;
+                if row.len() != body.agent_params.len() {
                     bail!("wire: assignment row length != M");
                 }
-                CtrlMsg::Task {
-                    iter,
-                    row,
-                    agent_params: Arc::new(agent_params),
-                    minibatch: Arc::new(minibatch),
-                    straggler_delay_ns,
-                }
+                CtrlMsg::Task { iter, row, body: Arc::new(body), straggler_delay_ns }
             }
             TAG_ACK => CtrlMsg::Ack { iter: r.u64()? },
             TAG_SHUTDOWN => CtrlMsg::Shutdown,
@@ -211,6 +320,7 @@ impl LearnerMsg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit::forall;
 
     fn mb() -> Minibatch {
         Minibatch {
@@ -226,16 +336,44 @@ mod tests {
         }
     }
 
-    #[test]
-    fn task_roundtrip() {
-        let msg = CtrlMsg::Task {
+    fn task_msg() -> CtrlMsg {
+        CtrlMsg::Task {
             iter: 42,
             row: vec![1.0, 0.0, -0.5],
-            agent_params: Arc::new(vec![vec![1.0; 7], vec![2.0; 7], vec![3.0; 7]]),
-            minibatch: Arc::new(mb()),
+            body: TaskBody::new(
+                Arc::new(vec![vec![1.0; 7], vec![2.0; 7], vec![3.0; 7]]),
+                Arc::new(mb()),
+            ),
             straggler_delay_ns: 250_000_000,
-        };
+        }
+    }
+
+    #[test]
+    fn task_roundtrip() {
+        let msg = task_msg();
         assert_eq!(CtrlMsg::decode(&msg.encode().buf).unwrap(), msg);
+    }
+
+    /// `write_framed` (header + memoized body bytes, no concatenation)
+    /// must emit the byte-identical frame `encode` would — and the body
+    /// must be encoded exactly once no matter how many learners the
+    /// frame is written for.
+    #[test]
+    fn framed_write_matches_full_encode_and_encodes_body_once() {
+        let msg = task_msg();
+        let CtrlMsg::Task { body, .. } = &msg else { unreachable!() };
+        let mut framed: Vec<u8> = Vec::new();
+        for _ in 0..5 {
+            msg.write_framed(&mut framed).unwrap();
+        }
+        let mut full: Vec<u8> = Vec::new();
+        for _ in 0..5 {
+            msg.encode().write_frame(&mut full).unwrap();
+        }
+        assert_eq!(framed, full, "encode-once frames diverged from the full encode");
+        // Memoization: both paths shared one body encoding.
+        let first = body.wire_bytes();
+        assert!(Arc::ptr_eq(&first, &body.wire_bytes()));
     }
 
     #[test]
@@ -266,17 +404,75 @@ mod tests {
         let msg = CtrlMsg::Task {
             iter: 1,
             row: vec![],
-            agent_params: Arc::new(vec![]),
-            minibatch: Arc::new(Minibatch {
-                batch: 2, m: 2, obs_dim: 2, act_dim: 1,
-                obs: vec![0.0; 3], // wrong: should be 8
-                act: vec![0.0; 4],
-                rew: vec![0.0; 4],
-                next_obs: vec![0.0; 8],
-                done: vec![0.0; 2],
-            }),
+            body: TaskBody::new(
+                Arc::new(vec![]),
+                Arc::new(Minibatch {
+                    batch: 2, m: 2, obs_dim: 2, act_dim: 1,
+                    obs: vec![0.0; 3], // wrong: should be 8
+                    act: vec![0.0; 4],
+                    rew: vec![0.0; 4],
+                    next_obs: vec![0.0; 8],
+                    done: vec![0.0; 2],
+                }),
+            ),
             straggler_delay_ns: 0,
         };
         assert!(CtrlMsg::decode(&msg.encode().buf).is_err());
+    }
+
+    /// Property: random Task frames roundtrip exactly through the
+    /// header/shared-body format; every strict prefix (truncated frame)
+    /// and every body_len corruption is an error, never a panic and
+    /// never a silent partial decode.
+    #[test]
+    fn task_frame_roundtrip_property() {
+        forall("task wire roundtrip + corruption", 25, |g| {
+            let m = g.usize_in(1, 4);
+            let p = g.usize_in(1, 40);
+            let batch = g.usize_in(1, 3);
+            let (obs_dim, act_dim) = (g.usize_in(1, 5), g.usize_in(1, 3));
+            let params: Vec<Vec<f32>> = (0..m).map(|_| g.f32_vec(p, 1.0)).collect();
+            let mb = Minibatch {
+                batch,
+                m,
+                obs_dim,
+                act_dim,
+                obs: g.f32_vec(batch * m * obs_dim, 1.0),
+                act: g.f32_vec(batch * m * act_dim, 1.0),
+                rew: g.f32_vec(m * batch, 1.0),
+                next_obs: g.f32_vec(batch * m * obs_dim, 1.0),
+                done: vec![0.0; batch],
+            };
+            let msg = CtrlMsg::Task {
+                iter: g.usize_in(0, 1 << 20) as u64,
+                row: g.f32_vec(m, 1.0),
+                body: TaskBody::new(Arc::new(params), Arc::new(mb)),
+                straggler_delay_ns: g.usize_in(0, 1 << 30) as u64,
+            };
+            let buf = msg.encode().buf;
+            assert_eq!(CtrlMsg::decode(&buf).unwrap(), msg);
+            // Every truncation is a clean error.
+            for cut in 0..buf.len() {
+                assert!(
+                    CtrlMsg::decode(&buf[..cut]).is_err(),
+                    "truncated frame at {cut}/{} decoded",
+                    buf.len()
+                );
+            }
+            // Corrupting body_len (the last header field, right before
+            // the body's leading u32 M) must be caught by the length
+            // check. Header: tag(1) + iter(8) + delay(8) + row(4 + 4m).
+            let body_len_at = 1 + 8 + 8 + 4 + 4 * m;
+            for delta in [1u32, 4, 1 << 16] {
+                let mut bad = buf.clone();
+                let old = u32::from_le_bytes(bad[body_len_at..body_len_at + 4].try_into().unwrap());
+                bad[body_len_at..body_len_at + 4]
+                    .copy_from_slice(&old.wrapping_add(delta).to_le_bytes());
+                assert!(
+                    CtrlMsg::decode(&bad).is_err(),
+                    "body_len corruption (+{delta}) went undetected"
+                );
+            }
+        });
     }
 }

@@ -98,8 +98,11 @@ impl ControllerTransport for TcpController {
     }
 
     fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
-        msg.encode()
-            .write_frame(&mut self.streams[learner])
+        // Encode-once broadcast: Task frames write a fresh ~100-byte
+        // header plus the body bytes memoized on the shared TaskBody —
+        // the multi-MB payload is serialized once per iteration, not
+        // once per learner.
+        msg.write_framed(&mut self.streams[learner])
             .with_context(|| format!("sending to worker {learner}"))
     }
 
@@ -196,6 +199,21 @@ impl LearnerEndpoint for TcpLearner {
 
     fn send(&mut self, msg: LearnerMsg) -> Result<()> {
         msg.encode().write_frame(&mut self.stream)
+    }
+
+    fn send_result(
+        &mut self,
+        iter: u64,
+        learner_id: u32,
+        y: Vec<f32>,
+        compute_ns: u64,
+    ) -> Result<Option<Vec<f32>>> {
+        // The socket path only serializes `y` — hand the buffer back so
+        // the learner loop reuses it as next iteration's accumulator.
+        let msg = LearnerMsg::Result { iter, learner_id, y, compute_ns };
+        msg.encode().write_frame(&mut self.stream)?;
+        let LearnerMsg::Result { y, .. } = msg else { unreachable!() };
+        Ok(Some(y))
     }
 }
 

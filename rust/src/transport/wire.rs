@@ -70,6 +70,20 @@ impl WireWriter {
         w.flush()?;
         Ok(())
     }
+
+    /// Write one frame whose payload is this writer's bytes followed by
+    /// `tail` — the encode-once broadcast path: the (tiny) per-learner
+    /// header is in `self`, the (multi-MB) shared body bytes are passed
+    /// by reference and written straight to the stream, never copied
+    /// into an intermediate per-learner buffer.
+    pub fn write_frame_with_tail(&self, w: &mut impl Write, tail: &[u8]) -> Result<()> {
+        let len = (self.buf.len() + tail.len()) as u32;
+        w.write_all(&len.to_le_bytes())?;
+        w.write_all(&self.buf)?;
+        w.write_all(tail)?;
+        w.flush()?;
+        Ok(())
+    }
 }
 
 /// Decoder over a received payload.
@@ -133,6 +147,12 @@ impl<'a> WireReader<'a> {
 
     pub fn finished(&self) -> bool {
         self.pos == self.buf.len()
+    }
+
+    /// Bytes not yet consumed (used to validate length-delimited
+    /// sub-sections like the Task body).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 }
 
@@ -216,6 +236,30 @@ mod tests {
         bytes.extend_from_slice(&(300u32 << 20).to_le_bytes());
         let mut cursor = std::io::Cursor::new(bytes);
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn frame_with_tail_equals_concatenated_frame() {
+        let mut header = WireWriter::new();
+        header.u8(7);
+        header.u32(99);
+        let tail = vec![1u8, 2, 3, 4, 5];
+        let mut split: Vec<u8> = Vec::new();
+        header.write_frame_with_tail(&mut split, &tail).unwrap();
+        let mut whole = WireWriter::new();
+        whole.u8(7);
+        whole.u32(99);
+        whole.buf.extend_from_slice(&tail);
+        let mut concat: Vec<u8> = Vec::new();
+        whole.write_frame(&mut concat).unwrap();
+        assert_eq!(split, concat);
+        // and it reads back as one payload
+        let mut cursor = std::io::Cursor::new(split);
+        let payload = read_frame(&mut cursor).unwrap();
+        let mut r = WireReader::new(&payload);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 99);
+        assert_eq!(r.remaining(), 5);
     }
 
     #[test]

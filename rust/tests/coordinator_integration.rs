@@ -413,6 +413,42 @@ fn untasked_learner_reply_is_dropped() {
     ctrl.shutdown();
 }
 
+/// Regression (ISSUE 4): a Result whose `y` has the wrong length — a
+/// buggy or version-skewed worker whose frame still parses — must be
+/// dropped like a stale message, not admitted into the decode. The
+/// vectorized kernels assert equal slice lengths, so before this guard
+/// a single malformed reply panicked the controller instead of being
+/// treated as an erasure.
+#[test]
+fn malformed_length_reply_is_dropped() {
+    use coded_marl::transport::LearnerMsg;
+    let spec = spec();
+    let p = spec.dims.agent_param_dim();
+    let mut cfg = mock_cfg(Scheme::Uncoded, 2, 43);
+    cfg.collect_timeout = Duration::from_millis(500);
+    let result = |learner_id: u32, len: usize| LearnerMsg::Result {
+        iter: 1,
+        learner_id,
+        y: vec![0.0f32; len],
+        compute_ns: 1_000,
+    };
+    // learner 0's first reply is truncated; a well-formed retry and the
+    // other three tasked learners follow.
+    let script: Vec<LearnerMsg> = vec![
+        result(0, p / 2),
+        result(0, p),
+        result(1, p),
+        result(2, p),
+        result(3, p),
+    ];
+    let transport = ScriptedTransport { n: cfg.n_learners, script: script.into_iter().collect() };
+    let mut ctrl = Controller::new(cfg, spec, transport).unwrap();
+    ctrl.train().expect("a malformed reply must be an erasure, not a crash");
+    let rec = ctrl.log.records.last().unwrap();
+    assert_eq!(rec.results_used, 4, "only well-formed replies may count toward recovery");
+    ctrl.shutdown();
+}
+
 // ------------------------------------------------------------ PJRT ---
 
 fn artifacts_dir() -> std::path::PathBuf {

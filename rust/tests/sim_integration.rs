@@ -245,6 +245,58 @@ fn decode_plan_cache_hits_on_repeated_erasure_patterns() {
     ctrl.shutdown();
 }
 
+/// The data-plane acceptance contract: once warm, a sim iteration runs
+/// with **zero heap allocation** on the pooled paths — every take
+/// (flat parameters, assignment rows, result accumulators, decode
+/// buffers) is served from the controller/transport/decoder free
+/// lists. Exercised both in the tight N = M regime (every result
+/// consumed, shelves balance exactly) and with stragglers (cancelled
+/// results return via lazy heap deletion a few iterations later).
+#[test]
+fn steady_state_sim_iteration_hits_the_pools_100_percent() {
+    let run = |scheme: Scheme, n_learners: usize, k: usize| {
+        let mut c = cfg(scheme, TimeMode::Virtual, 99);
+        c.n_learners = n_learners;
+        c.straggler = StragglerConfig::fixed(k, Duration::from_millis(40));
+        let run_spec = spec();
+        let factory = backend_factory(&c, "unused", &run_spec);
+        let pool = spawn_pool(&c, factory).unwrap();
+        let mut ctrl = Controller::new(c, run_spec, pool).unwrap();
+        // Prime: warmup + enough iterations for cancelled straggler
+        // results to cycle back through the lazy-deletion path.
+        for iter in 0..12 {
+            ctrl.run_iteration(iter).unwrap();
+        }
+        let ctrl_before = ctrl.buf_pool_stats();
+        let dec_before = ctrl.decode_pool_stats();
+        ctrl.run_iteration(12).unwrap();
+        let ctrl_after = ctrl.buf_pool_stats();
+        let dec_after = ctrl.decode_pool_stats();
+        assert_eq!(
+            ctrl_after.misses, ctrl_before.misses,
+            "N={n_learners} k={k}: steady-state iteration allocated on the data plane \
+             (controller pool: {ctrl_before:?} -> {ctrl_after:?})"
+        );
+        assert!(
+            ctrl_after.hits > ctrl_before.hits,
+            "N={n_learners} k={k}: the iteration must actually go through the pool"
+        );
+        assert_eq!(
+            dec_after.misses, dec_before.misses,
+            "N={n_learners} k={k}: steady-state decode allocated \
+             (decoder pool: {dec_before:?} -> {dec_after:?})"
+        );
+        assert!(dec_after.hits > dec_before.hits);
+        ctrl.shutdown();
+    };
+    // N = M, identity assignment (peeling decode): every result is
+    // consumed every iteration, so the shelves balance exactly.
+    run(Scheme::Uncoded, 4, 0);
+    // Paper shape with injected stragglers: cancelled results recycle
+    // through lazy heap deletion.
+    run(Scheme::Mds, 7, 2);
+}
+
 /// Cluster scale through the sharded sweep runner: an N = 128 grid
 /// (beyond the paper's 15 by ~an order of magnitude) completes with
 /// coherent per-cell analytics even in a debug build — N = 256+ in

@@ -72,6 +72,12 @@ fn tcp_workers_answer_tasks() {
     let manifest = Manifest::load(artifacts_dir()).unwrap();
     let p = manifest.preset("quickstart_m3").unwrap().agent_param_dim;
     let params: Vec<Vec<f32>> = (0..3).map(|i| vec![0.01 * (i + 1) as f32; p]).collect();
+    // One shared body for the whole broadcast — the TCP controller
+    // serializes it once and writes only per-learner headers after.
+    let body = coded_marl::transport::TaskBody::new(
+        std::sync::Arc::new(params.clone()),
+        std::sync::Arc::new(mb.clone()),
+    );
     for j in 0..n {
         let mut row = vec![0.0f32; 3];
         row[j] = 1.0;
@@ -80,8 +86,7 @@ fn tcp_workers_answer_tasks() {
             CtrlMsg::Task {
                 iter: 1,
                 row,
-                agent_params: std::sync::Arc::new(params.clone()),
-                minibatch: std::sync::Arc::new(mb.clone()),
+                body: std::sync::Arc::clone(&body),
                 straggler_delay_ns: 0,
             },
         )
