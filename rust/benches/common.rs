@@ -22,9 +22,7 @@ use coded_marl::coordinator::{
     backend_factory, spawn_pool, Controller, PjrtBackend, RunSpec,
 };
 use coded_marl::env::EnvKind;
-use coded_marl::marl::buffer::{ReplayBuffer, Transition};
-use coded_marl::marl::AgentParams;
-use coded_marl::rng::Pcg32;
+use coded_marl::model::compute::measure_backend;
 
 /// Time-scale factor vs the paper (paper seconds → bench centiseconds).
 pub const TIME_SCALE: f64 = 0.1;
@@ -76,48 +74,40 @@ pub fn preset_name(env: EnvKind, m: usize) -> String {
     format!("{}_m{}", env.name(), m)
 }
 
-/// Measure the real PJRT per-agent update duration for a preset: median
-/// of several learner_step executions on a synthetic minibatch. Falls
-/// back to 5 ms when artifacts are missing.
-pub fn calibrate_compute(env: EnvKind, m: usize) -> Duration {
+/// Measure the real PJRT per-agent update durations for a preset
+/// through the system-model layer ([`measure_backend`]). Returns None
+/// (with a note) when artifacts are missing or PJRT fails to load.
+pub fn calibrate_compute_samples(env: EnvKind, m: usize, rounds: usize) -> Option<Vec<Duration>> {
     if !have_artifacts() {
         eprintln!("  (no artifacts; assuming 5ms/update)");
-        return Duration::from_millis(5);
+        return None;
     }
     let preset = preset_name(env, m);
-    let backend = match PjrtBackend::load(artifacts_dir(), &preset) {
+    let mut backend = match PjrtBackend::load(artifacts_dir(), &preset) {
         Ok(b) => b,
         Err(e) => {
             eprintln!("  (calibration failed for {preset}: {e:#}; assuming 5ms)");
-            return Duration::from_millis(5);
+            return None;
         }
     };
-    let dims = {
-        use coded_marl::coordinator::LearnerBackend;
-        backend.dims()
+    match measure_backend(&mut backend, rounds, 0) {
+        Ok(samples) => Some(samples),
+        Err(e) => {
+            eprintln!("  (calibration step failed for {preset}: {e:#}; assuming 5ms)");
+            None
+        }
+    }
+}
+
+/// Median real PJRT per-agent update duration for a preset; 5 ms
+/// fallback when artifacts are missing. (The sim's `--compute-model
+/// calibrated` path does NOT come through here — it probes the
+/// configured backend factory in `coordinator::spawn_pool`; this is
+/// the benches' own point estimate for the mock's emulated sleep.)
+pub fn calibrate_compute(env: EnvKind, m: usize) -> Duration {
+    let Some(mut times) = calibrate_compute_samples(env, m, 5) else {
+        return Duration::from_millis(5);
     };
-    let mut rng = Pcg32::seeded(0);
-    let agents: Vec<Vec<f32>> =
-        (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng).to_flat()).collect();
-    let mut buffer = ReplayBuffer::new(64);
-    for _ in 0..8 {
-        buffer.push(Transition {
-            obs: (0..dims.m).map(|_| rng.normal_vec_f32(dims.obs_dim, 1.0)).collect(),
-            act: (0..dims.m).map(|_| rng.normal_vec_f32(dims.act_dim, 0.5)).collect(),
-            rew: rng.normal_vec_f32(dims.m, 1.0),
-            next_obs: (0..dims.m).map(|_| rng.normal_vec_f32(dims.obs_dim, 1.0)).collect(),
-            done: false,
-        });
-    }
-    let mb = buffer.sample(dims.batch, &mut rng);
-    let mut backend = backend;
-    let mut times = Vec::new();
-    for i in 0..5 {
-        use coded_marl::coordinator::LearnerBackend;
-        let t0 = std::time::Instant::now();
-        backend.update_agent(i % dims.m, &agents, &mb).expect("calibration step");
-        times.push(t0.elapsed());
-    }
     times.sort();
     times[times.len() / 2]
 }

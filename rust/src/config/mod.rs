@@ -162,6 +162,77 @@ impl DelayDist {
     }
 }
 
+/// Modeled network link for the virtual-time simulator
+/// ([`crate::model::NetworkModel`]): per-message transfer time =
+/// payload bytes / bandwidth + exponential jitter. The default is
+/// **free** (infinite bandwidth, zero jitter) — bit-identical to the
+/// pre-model sim.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetConfig {
+    /// Link bandwidth in MB/s (1 MB = 10⁶ bytes); 0 = infinite.
+    pub bandwidth_mbps: f64,
+    /// Mean of the exponential per-message jitter; zero = none.
+    pub jitter: std::time::Duration,
+}
+
+impl NetConfig {
+    /// Infinite bandwidth, zero jitter: transfers cost nothing.
+    pub fn free() -> NetConfig {
+        NetConfig { bandwidth_mbps: 0.0, jitter: std::time::Duration::ZERO }
+    }
+
+    pub fn is_free(&self) -> bool {
+        self.bandwidth_mbps == 0.0 && self.jitter.is_zero()
+    }
+
+    /// Short human label for run summaries.
+    pub fn label(&self) -> String {
+        if self.is_free() {
+            return "free".into();
+        }
+        let bw = if self.bandwidth_mbps > 0.0 {
+            format!("{}MB/s", self.bandwidth_mbps)
+        } else {
+            "inf".into()
+        };
+        if self.jitter.is_zero() {
+            bw
+        } else {
+            format!("{bw}+j{:?}", self.jitter)
+        }
+    }
+}
+
+/// How per-update learner compute time is modeled in virtual time
+/// ([`crate::model::ComputeModel`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeModelCfg {
+    /// Deterministic `mock_compute` per update (the PR 1 behavior).
+    Fixed,
+    /// Measured at pool startup: the backend's real per-update
+    /// duration is timed and the sim samples the empirical
+    /// distribution — works with any backend, which is what lifts the
+    /// old `TimeMode::Virtual ⇒ Backend::Mock` restriction.
+    Calibrated,
+}
+
+impl ComputeModelCfg {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeModelCfg::Fixed => "fixed",
+            ComputeModelCfg::Calibrated => "calibrated",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ComputeModelCfg> {
+        match s {
+            "fixed" => Some(ComputeModelCfg::Fixed),
+            "calibrated" => Some(ComputeModelCfg::Calibrated),
+            _ => None,
+        }
+    }
+}
+
 /// Straggler injection model (paper §V-C): each iteration, `k` learners
 /// chosen uniformly at random delay their reply; the delay is `delay`
 /// itself or a mean-`delay` draw from [`DelayDist`].
@@ -197,6 +268,16 @@ pub struct TrainConfig {
     /// `p_m` for the random sparse code (paper: 0.8).
     pub p_m: f64,
     pub straggler: StragglerConfig,
+    /// Replay measured per-learner latency traces instead of the
+    /// synthetic injector (`--trace`; JSONL or CSV, see
+    /// [`crate::model::trace`]). Mutually exclusive with the injector
+    /// knobs — the single validation point is [`TrainConfig::validate`].
+    pub trace: Option<std::path::PathBuf>,
+    /// Modeled network link for virtual-time runs (`--bandwidth`,
+    /// `--net-jitter-us`); free by default.
+    pub net: NetConfig,
+    /// How virtual compute time is modeled (`--compute-model`).
+    pub compute_model: ComputeModelCfg,
     /// Training iterations (paper Alg. 1 outer loop).
     pub iterations: usize,
     /// Episodes executed per iteration (Alg. 1 line 3).
@@ -259,6 +340,9 @@ impl TrainConfig {
             decode: DecodeMethod::Auto,
             p_m: 0.8,
             straggler: StragglerConfig::none(),
+            trace: None,
+            net: NetConfig::free(),
+            compute_model: ComputeModelCfg::Fixed,
             iterations: 50,
             episodes_per_iter: 2,
             episode_len: 25,
@@ -324,6 +408,7 @@ impl TrainConfig {
                     )
                 })?;
         }
+        cfg.apply_model_args(args)?;
         if let Some(v) = args.opt("iterations") {
             cfg.iterations = v.parse()?;
         }
@@ -388,6 +473,27 @@ impl TrainConfig {
         Ok(cfg)
     }
 
+    /// Parse the system-model flag surface (`--trace`, `--bandwidth`,
+    /// `--net-jitter-us`, `--compute-model`) — shared by
+    /// [`TrainConfig::from_args`] and the sweep subcommands, which
+    /// build their base config through `sweep_base` instead.
+    pub fn apply_model_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.opt("trace") {
+            self.trace = Some(v.into());
+        }
+        if let Some(v) = args.opt("bandwidth") {
+            self.net.bandwidth_mbps = v.parse()?;
+        }
+        if let Some(v) = args.opt("net-jitter-us") {
+            self.net.jitter = std::time::Duration::from_micros(v.parse()?);
+        }
+        if let Some(v) = args.opt("compute-model") {
+            self.compute_model = ComputeModelCfg::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown compute model '{v}' (fixed|calibrated)"))?;
+        }
+        Ok(())
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.n_learners == 0 {
             bail!("need at least one learner");
@@ -419,37 +525,75 @@ impl TrainConfig {
             }
             _ => {}
         }
-        if self.time_mode == TimeMode::Virtual {
-            if self.transport != Transport::Local {
-                bail!(
-                    "--time-mode virtual requires --transport local \
-                     (simulated learners live in the controller process)"
-                );
-            }
-            if self.backend != Backend::Mock {
-                bail!(
-                    "--time-mode virtual requires --backend mock (learner compute \
-                     is modeled via --mock-compute-us, not executed through PJRT)"
-                );
-            }
+        if !self.net.bandwidth_mbps.is_finite() || self.net.bandwidth_mbps < 0.0 {
+            bail!(
+                "--bandwidth must be a finite MB/s value ≥ 0 (0 = infinite), got {}",
+                self.net.bandwidth_mbps
+            );
         }
+        if self.trace.is_some()
+            && (self.straggler.k > 0
+                || !self.straggler.delay.is_zero()
+                || self.straggler.dist != DelayDist::Fixed)
+        {
+            bail!(
+                "--trace replays measured per-learner delays and cannot be combined with \
+                 the synthetic injector flags (--stragglers / --straggler-delay-ms / \
+                 --delay-dist / --straggler-exponential)"
+            );
+        }
+        if self.time_mode == TimeMode::Virtual && self.transport != Transport::Local {
+            bail!(
+                "--time-mode virtual requires --transport local \
+                 (simulated learners live in the controller process)"
+            );
+        }
+        if self.time_mode == TimeMode::Real
+            && (!self.net.is_free() || self.compute_model != ComputeModelCfg::Fixed)
+        {
+            // These models exist only in the discrete-event transport;
+            // silently ignoring them in real time would let a user
+            // believe a modeled link/compute distribution was applied.
+            bail!(
+                "--bandwidth/--net-jitter-us/--compute-model are virtual-time models; \
+                 pass --time-mode virtual (real transports measure real transfer and \
+                 compute). --trace works in both modes."
+            );
+        }
+        // Note: `TimeMode::Virtual` no longer requires `Backend::Mock`
+        // — the sim runs any backend's numerics and charges time via
+        // the compute model (`--compute-model calibrated` measures the
+        // real backend at pool startup).
         Ok(())
     }
 
     /// One-line human summary for run headers.
     pub fn summary(&self) -> String {
+        let disturbance = match &self.trace {
+            Some(path) => format!("trace={}", path.display()),
+            None => format!(
+                "stragglers(k={}, t_s={:?}{})",
+                self.straggler.k,
+                self.straggler.delay,
+                match self.straggler.dist {
+                    DelayDist::Fixed => String::new(),
+                    d => format!(", {}", d.label()),
+                },
+            ),
+        };
+        let mut model = String::new();
+        if !self.net.is_free() {
+            model.push_str(&format!(" net={}", self.net.label()));
+        }
+        if self.compute_model != ComputeModelCfg::Fixed {
+            model.push_str(&format!(" compute={}", self.compute_model.name()));
+        }
         format!(
-            "preset={} N={} scheme={} decode={} stragglers(k={}, t_s={:?}{}) iters={} backend={} transport={} time={} seed={}",
+            "preset={} N={} scheme={} decode={} {disturbance} iters={} backend={} transport={} time={}{model} seed={}",
             self.preset,
             self.n_learners,
             self.scheme,
             self.decode.name(),
-            self.straggler.k,
-            self.straggler.delay,
-            match self.straggler.dist {
-                DelayDist::Fixed => String::new(),
-                d => format!(", {}", d.label()),
-            },
             self.iterations,
             self.backend.name(),
             self.transport.name(),
@@ -562,8 +706,11 @@ mod tests {
         assert_eq!(cfg.time_mode, TimeMode::Virtual);
         let cfg = parse(&["--preset", "x"]).unwrap();
         assert_eq!(cfg.time_mode, TimeMode::Real);
-        // virtual time models compute: PJRT and TCP are rejected
-        assert!(parse(&["--preset", "x", "--time-mode", "virtual"]).is_err());
+        // PJRT + virtual is now allowed: the compute model charges the
+        // time, the backend only supplies the numerics (ISSUE 5 lifts
+        // the old mock-only restriction).
+        assert!(parse(&["--preset", "x", "--time-mode", "virtual"]).is_ok());
+        // TCP stays rejected: simulated learners are in-process.
         assert!(parse(&[
             "--preset", "x", "--time-mode", "virtual", "--backend", "mock", "--transport", "tcp",
         ])
@@ -590,6 +737,75 @@ mod tests {
         assert_eq!(Transport::parse("local"), Some(Transport::Local));
         assert_eq!(Transport::parse("tcp"), Some(Transport::Tcp));
         assert_eq!(Transport::parse("x"), None);
+    }
+
+    #[test]
+    fn model_flags_parse_with_neutral_defaults() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert_eq!(cfg.net, NetConfig::free());
+        assert!(cfg.net.is_free());
+        assert_eq!(cfg.compute_model, ComputeModelCfg::Fixed);
+        assert!(cfg.trace.is_none());
+
+        let cfg = parse(&[
+            "--preset", "x",
+            "--time-mode", "virtual",
+            "--bandwidth", "125",
+            "--net-jitter-us", "200",
+            "--compute-model", "calibrated",
+        ])
+        .unwrap();
+        assert_eq!(cfg.net.bandwidth_mbps, 125.0);
+        assert_eq!(cfg.net.jitter, std::time::Duration::from_micros(200));
+        assert_eq!(cfg.compute_model, ComputeModelCfg::Calibrated);
+        assert!(cfg.summary().contains("net=125MB/s"), "{}", cfg.summary());
+        assert!(cfg.summary().contains("compute=calibrated"), "{}", cfg.summary());
+
+        // trace works in BOTH time modes (real learners sleep the
+        // recorded delay; the sim charges it on the event clock)
+        let cfg = parse(&["--preset", "x", "--trace", "traces/ec2.jsonl"]).unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some(std::path::Path::new("traces/ec2.jsonl")));
+        assert!(cfg.summary().contains("trace=traces/ec2.jsonl"), "{}", cfg.summary());
+
+        // ...but the network/compute models are virtual-only: silently
+        // modeling nothing in real time would mislead the user
+        assert!(parse(&["--preset", "x", "--bandwidth", "25"]).is_err());
+        assert!(parse(&["--preset", "x", "--net-jitter-us", "200"]).is_err());
+        assert!(parse(&["--preset", "x", "--compute-model", "calibrated"]).is_err());
+
+        // validation: bandwidth must be finite and non-negative
+        let virt = |bw: &str| {
+            parse(&["--preset", "x", "--time-mode", "virtual", "--bandwidth", bw])
+        };
+        assert!(virt("-1").is_err());
+        assert!(virt("inf").is_err());
+        assert!(virt("NaN").is_err());
+        assert!(virt("125").is_ok());
+        assert!(parse(&["--preset", "x", "--compute-model", "psychic"]).is_err());
+    }
+
+    #[test]
+    fn trace_conflicts_with_the_synthetic_injector() {
+        let both = |extra: &[&str]| {
+            let mut argv = vec!["--preset", "x", "--trace", "t.jsonl"];
+            argv.extend_from_slice(extra);
+            parse(&argv)
+        };
+        assert!(both(&[]).is_ok(), "trace alone is fine");
+        assert!(both(&["--stragglers", "2"]).is_err());
+        assert!(both(&["--straggler-delay-ms", "100"]).is_err());
+        assert!(both(&["--delay-dist", "pareto"]).is_err());
+        assert!(both(&["--straggler-exponential"]).is_err());
+    }
+
+    #[test]
+    fn net_config_labels() {
+        assert_eq!(NetConfig::free().label(), "free");
+        let n = NetConfig { bandwidth_mbps: 125.0, jitter: std::time::Duration::ZERO };
+        assert_eq!(n.label(), "125MB/s");
+        let n = NetConfig { bandwidth_mbps: 0.0, jitter: std::time::Duration::from_micros(50) };
+        assert!(n.label().starts_with("inf+j"), "{}", n.label());
+        assert!(!n.is_free(), "pure jitter still charges time");
     }
 
     #[test]

@@ -21,7 +21,6 @@ use anyhow::{bail, Context, Result};
 
 use super::adaptive::{AdaptiveSelector, StragglerStats};
 use super::rollout;
-use super::straggler::StragglerInjector;
 use super::RunSpec;
 use std::sync::Arc;
 
@@ -34,6 +33,7 @@ use crate::marl::buffer::ReplayBuffer;
 use crate::marl::noise::DecaySchedule;
 use crate::marl::AgentParams;
 use crate::metrics::{IterRecord, IterTiming, RunLog, Timer};
+use crate::model::{DisturbanceModel, NetStats};
 use crate::rng::Pcg32;
 use crate::sim::ClockRef;
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
@@ -66,7 +66,10 @@ pub struct Controller<T: ControllerTransport> {
     spec: RunSpec,
     transport: T,
     decoder: Decoder,
-    injector: StragglerInjector,
+    /// Who is slowed down each iteration: the §V-C injector or a
+    /// measured-trace replay — built through the single
+    /// [`DisturbanceModel::from_config`] path.
+    disturbance: DisturbanceModel,
     env: Box<dyn crate::env::Env>,
     buffer: ReplayBuffer,
     agents: Vec<AgentParams>,
@@ -127,7 +130,7 @@ impl<T: ControllerTransport> Controller<T> {
             seed: cfg.seed,
         });
         let decoder = Decoder::new(code);
-        let injector = StragglerInjector::new(cfg.straggler, Pcg32::new(cfg.seed, 0x57A6));
+        let disturbance = DisturbanceModel::from_config(&cfg)?;
         let env = make_env(spec.env, spec.m, spec.k_adversaries);
         let mut streams = Streams::new(cfg.seed);
         let agents: Vec<AgentParams> =
@@ -157,7 +160,7 @@ impl<T: ControllerTransport> Controller<T> {
             spec,
             transport,
             decoder,
-            injector,
+            disturbance,
             env,
             agents,
             streams,
@@ -193,6 +196,14 @@ impl<T: ControllerTransport> Controller<T> {
     /// residuals; reset when an adaptive switch replaces the decoder).
     pub fn decode_pool_stats(&self) -> PoolStats {
         self.decoder.pool_stats()
+    }
+
+    /// Network-model transfer telemetry, when the transport models one
+    /// (the sim transport under a finite-bandwidth/jitter
+    /// [`crate::model::NetworkModel`]); None on real transports and
+    /// under the free default model the stats stay zero.
+    pub fn net_stats(&self) -> Option<NetStats> {
+        self.transport.net_stats()
     }
 
     pub fn agents(&self) -> &[AgentParams] {
@@ -319,7 +330,7 @@ impl<T: ControllerTransport> Controller<T> {
 
         // --- Broadcast (line 9) -----------------------------------------
         let t = Timer::with_clock(&self.clock);
-        let plan = self.injector.plan(self.cfg.n_learners);
+        let plan = self.disturbance.plan(self.cfg.n_learners);
         // Reclaim last iteration's flat parameter vectors (the
         // transport has dropped its body references by now) so this
         // iteration's flatten is allocation-free in steady state.

@@ -49,17 +49,18 @@ pub mod straggler;
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 pub use backend::{BackendFactory, LearnerBackend, MockBackend, PjrtBackend};
 pub use centralized::Centralized;
 pub use controller::{Controller, Streams};
 pub use pool::{spawn_local, spawn_tcp, Pool, WorkerCmd};
 
-use crate::config::{Backend, TimeMode, TrainConfig, Transport};
+use crate::config::{Backend, ComputeModelCfg, TimeMode, TrainConfig, Transport};
 use crate::env::EnvKind;
 use crate::marl::ModelDims;
 use crate::metrics::RunLog;
+use crate::model::{ComputeModel, NetworkModel, SystemModel};
 use crate::runtime::{Manifest, PresetSpec};
 use crate::sim::SimTransport;
 
@@ -124,18 +125,42 @@ pub fn backend_factory(
 /// threads in real time, or the discrete-event sim pool in virtual
 /// time. Both honor the same factory contract (a factory error is a
 /// permanent erasure, not a crash); in virtual mode each backend's
-/// emulated compute is made instantaneous and `cfg.mock_compute` is
-/// charged in virtual nanoseconds per update instead
-/// (`TrainConfig::validate` enforces `Backend::Mock`).
+/// emulated compute is made instantaneous and its virtual time comes
+/// from the [`crate::model::SystemModel`] built here — fixed
+/// `cfg.mock_compute` per update by default, or an empirical
+/// distribution measured against the factory's backend under
+/// `--compute-model calibrated` (which is what lets any backend, not
+/// just the mock, run in virtual time). The network leg comes from
+/// `cfg.net` (free by default).
 pub fn spawn_pool(cfg: &TrainConfig, factory: Arc<BackendFactory>) -> Result<Pool> {
     match cfg.time_mode {
         TimeMode::Real => spawn_local(cfg.n_learners, factory),
-        TimeMode::Virtual => Ok(Pool::Sim(SimTransport::from_factory(
-            cfg.n_learners,
-            &factory,
-            cfg.mock_compute,
-        ))),
+        TimeMode::Virtual => {
+            let model = build_system_model(cfg, &factory)?;
+            Ok(Pool::Sim(SimTransport::from_factory_with_model(
+                cfg.n_learners,
+                &factory,
+                model,
+            )?))
+        }
     }
+}
+
+/// Assemble the transport-side system model for a virtual-time pool.
+/// Calibration times a probe backend from the factory once, at pool
+/// construction — never on the iteration path.
+fn build_system_model(cfg: &TrainConfig, factory: &BackendFactory) -> Result<SystemModel> {
+    let compute = match cfg.compute_model {
+        ComputeModelCfg::Fixed => ComputeModel::fixed(cfg.mock_compute),
+        ComputeModelCfg::Calibrated => {
+            let mut probe =
+                factory(0).context("constructing the compute-calibration probe backend")?;
+            let samples = crate::model::compute::measure_backend(probe.as_mut(), 16, cfg.seed)
+                .context("calibrating the compute model")?;
+            ComputeModel::empirical(samples, cfg.seed)?
+        }
+    };
+    Ok(SystemModel { compute, network: NetworkModel::from_config(&cfg.net, cfg.seed) })
 }
 
 /// Construct the pool implied by the config.

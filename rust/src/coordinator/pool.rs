@@ -65,6 +65,14 @@ impl ControllerTransport for Pool {
         }
     }
 
+    fn net_stats(&self) -> Option<crate::model::NetStats> {
+        match self {
+            Pool::Local(c) => c.net_stats(),
+            Pool::Tcp { ctrl, .. } => ctrl.net_stats(),
+            Pool::Sim(s) => s.net_stats(),
+        }
+    }
+
     fn shutdown(&mut self) {
         match self {
             Pool::Local(c) => c.shutdown(),

@@ -1,180 +1,10 @@
-//! Straggler injection (paper §V-C): each training iteration, `k`
-//! learners chosen uniformly at random delay their reply by `t_s`.
+//! Straggler injection (paper §V-C) — moved to the unified
+//! system-model layer: see [`crate::model::disturbance`], where the
+//! synthetic [`StragglerInjector`] is one pluggable
+//! [`crate::model::DisturbanceModel`] implementation next to
+//! measured-trace replay ([`crate::model::trace`]).
 //!
-//! The delay is carried in the Task message and applied learner-side
-//! (after compute, before send) so both transports exhibit identical
-//! timing behaviour. Beyond the paper's fixed delay, per-straggler
-//! delays can be drawn from a mean-t_s [`DelayDist`] — exponential
-//! (light tail), Pareto or lognormal (heavy tails) — for the
-//! cluster-scale tail studies (`--delay-dist`).
+//! This module re-exports the types so existing
+//! `coordinator::straggler::*` paths keep working.
 
-use crate::config::{DelayDist, StragglerConfig};
-use crate::rng::Pcg32;
-
-/// Per-iteration straggler selector.
-pub struct StragglerInjector {
-    cfg: StragglerConfig,
-    rng: Pcg32,
-}
-
-/// The injection plan for one iteration.
-#[derive(Clone, Debug)]
-pub struct InjectionPlan {
-    /// Learner ids selected as stragglers (sorted).
-    pub stragglers: Vec<usize>,
-    /// Delay (ns) per learner; 0 for healthy learners.
-    pub delay_ns: Vec<u64>,
-}
-
-impl StragglerInjector {
-    pub fn new(cfg: StragglerConfig, rng: Pcg32) -> StragglerInjector {
-        StragglerInjector { cfg, rng }
-    }
-
-    pub fn config(&self) -> &StragglerConfig {
-        &self.cfg
-    }
-
-    /// Draw this iteration's stragglers among `n` learners.
-    pub fn plan(&mut self, n: usize) -> InjectionPlan {
-        let k = self.cfg.k.min(n);
-        let mut stragglers = self.rng.choose_k(n, k);
-        stragglers.sort_unstable();
-        let mut delay_ns = vec![0u64; n];
-        for &j in &stragglers {
-            let base = self.cfg.delay.as_nanos() as f64;
-            let d = match self.cfg.dist {
-                DelayDist::Fixed => base,
-                // Exp(1)-scaled delay: mean t_s, occasionally much worse.
-                DelayDist::Exponential => base * (-self.nonzero_uniform().ln()),
-                // x_m / U^{1/α} with x_m = t_s·(α−1)/α ⇒ mean exactly
-                // t_s; the tail decays as a power law (infinite
-                // variance for α < 2).
-                DelayDist::Pareto { alpha } => {
-                    let x_m = base * (alpha - 1.0) / alpha;
-                    x_m * self.nonzero_uniform().powf(-1.0 / alpha)
-                }
-                // t_s·exp(σZ − σ²/2) ⇒ mean exactly t_s.
-                DelayDist::LogNormal { sigma } => {
-                    base * (sigma * self.rng.normal() - 0.5 * sigma * sigma).exp()
-                }
-            };
-            delay_ns[j] = d as u64;
-        }
-        InjectionPlan { stragglers, delay_ns }
-    }
-
-    /// Uniform draw in (0, 1) — guards the log/power transforms.
-    fn nonzero_uniform(&mut self) -> f64 {
-        loop {
-            let u = self.rng.uniform();
-            if u > 0.0 {
-                return u;
-            }
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::time::Duration;
-
-    #[test]
-    fn plan_selects_exactly_k_distinct() {
-        let cfg = StragglerConfig::fixed(4, Duration::from_millis(100));
-        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(0));
-        for _ in 0..50 {
-            let plan = inj.plan(15);
-            assert_eq!(plan.stragglers.len(), 4);
-            let mut s = plan.stragglers.clone();
-            s.dedup();
-            assert_eq!(s.len(), 4);
-            assert_eq!(plan.delay_ns.iter().filter(|&&d| d > 0).count(), 4);
-            for &j in &plan.stragglers {
-                assert_eq!(plan.delay_ns[j], 100_000_000);
-            }
-        }
-    }
-
-    #[test]
-    fn zero_k_injects_nothing() {
-        let mut inj = StragglerInjector::new(StragglerConfig::none(), Pcg32::seeded(1));
-        let plan = inj.plan(15);
-        assert!(plan.stragglers.is_empty());
-        assert!(plan.delay_ns.iter().all(|&d| d == 0));
-    }
-
-    #[test]
-    fn k_clamped_to_n() {
-        let cfg = StragglerConfig::fixed(20, Duration::from_millis(1));
-        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(2));
-        let plan = inj.plan(5);
-        assert_eq!(plan.stragglers.len(), 5);
-    }
-
-    #[test]
-    fn selection_varies_across_iterations() {
-        let cfg = StragglerConfig::fixed(3, Duration::from_millis(1));
-        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(3));
-        let a = inj.plan(15).stragglers;
-        let mut differs = false;
-        for _ in 0..10 {
-            if inj.plan(15).stragglers != a {
-                differs = true;
-                break;
-            }
-        }
-        assert!(differs, "straggler selection should vary across iterations");
-    }
-
-    fn mean_delay_ms(dist: DelayDist, trials: usize, seed: u64) -> f64 {
-        let cfg = StragglerConfig { k: 1, delay: Duration::from_millis(100), dist };
-        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(seed));
-        let mut sum = 0.0;
-        for _ in 0..trials {
-            let plan = inj.plan(4);
-            sum += plan.delay_ns[plan.stragglers[0]] as f64;
-        }
-        sum / trials as f64 / 1e6
-    }
-
-    #[test]
-    fn exponential_delays_have_mean_near_ts() {
-        let mean_ms = mean_delay_ms(DelayDist::Exponential, 4000, 4);
-        assert!((mean_ms - 100.0).abs() < 8.0, "mean={mean_ms}ms");
-    }
-
-    /// Every distribution is mean-normalized to t_s, so equal injected
-    /// budgets differ only in the tail. α = 3 keeps the Pareto variance
-    /// finite so the sample mean converges at test scale.
-    #[test]
-    fn heavy_tail_delays_are_mean_normalized() {
-        let pareto = mean_delay_ms(DelayDist::Pareto { alpha: 3.0 }, 4000, 5);
-        assert!((pareto - 100.0).abs() < 8.0, "pareto mean={pareto}ms");
-        let lognormal = mean_delay_ms(DelayDist::LogNormal { sigma: 1.0 }, 4000, 6);
-        assert!((lognormal - 100.0).abs() < 12.0, "lognormal mean={lognormal}ms");
-    }
-
-    /// The heavy tails really are heavier: at matched means, the
-    /// quantile far in the tail orders fixed < exponential < pareto.
-    #[test]
-    fn pareto_tail_dominates_exponential() {
-        let tail_q = |dist: DelayDist| -> f64 {
-            let cfg = StragglerConfig { k: 1, delay: Duration::from_millis(100), dist };
-            let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(7));
-            let mut draws: Vec<f64> = (0..4000)
-                .map(|_| {
-                    let plan = inj.plan(4);
-                    plan.delay_ns[plan.stragglers[0]] as f64
-                })
-                .collect();
-            draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            draws[draws.len() * 999 / 1000] // p99.9
-        };
-        let fixed = tail_q(DelayDist::Fixed);
-        let exp = tail_q(DelayDist::Exponential);
-        let pareto = tail_q(DelayDist::Pareto { alpha: 1.5 });
-        assert!(fixed < exp && exp < pareto, "p99.9: fixed={fixed} exp={exp} pareto={pareto}");
-    }
-}
+pub use crate::model::disturbance::{InjectionPlan, StragglerInjector};

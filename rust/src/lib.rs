@@ -32,6 +32,7 @@ pub mod env;
 pub mod linalg;
 pub mod marl;
 pub mod metrics;
+pub mod model;
 pub mod rng;
 pub mod runtime;
 pub mod sim;

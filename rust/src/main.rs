@@ -54,6 +54,12 @@ COMMON TRAIN FLAGS:
     --delay-alpha A            pareto shape (> 1)        [1.5]
     --delay-sigma S            lognormal shape (> 0)     [1.0]
     --straggler-exponential    alias for --delay-dist exponential
+    --trace PATH               replay measured per-learner latency traces
+                               (.jsonl/.csv; replaces the synthetic injector)
+    --bandwidth MBPS           modeled link bandwidth, MB/s (virtual time;
+                               0 = infinite)             [0]
+    --net-jitter-us US         mean exponential per-message jitter [0]
+    --compute-model C          fixed|calibrated          [fixed]
     --iterations I             training iterations       [50]
     --episodes E               episodes per iteration    [2]
     --episode-len L            steps per episode         [25]
@@ -81,18 +87,27 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --delay-alpha A            pareto shape (> 1)        [1.5]
     --delay-sigma S            lognormal shape (> 0)     [1.0]
     --straggler-exponential    alias for --delay-dist exponential
+    --trace PATH               replay a measured latency trace (forces k=0
+                               cells; defaults --bandwidth to 125 MB/s)
+    --bandwidth MBPS           modeled link bandwidth, MB/s (0 = infinite) [0]
+    --bandwidth-list B1,B2     sweep the bandwidth axis (MB/s; 0 = infinite)
+    --net-jitter-us US         mean exponential per-message jitter [0]
+    --compute-model C          fixed|calibrated          [fixed]
     --iterations I             iterations per cell       [10]
     --mock-compute-us US       modeled per-update compute [2000]
     --sweep-threads T          parallel sweep shards (0 = all cores) [0]
     --seed S                   experiment seed           [0]
     --out-dir DIR              also write sim_sweep.csv + BENCH_sweep.json here
+                               (+ BENCH_model.json when a system-model knob
+                               is active)
 
 SCALE-STUDY FLAGS (all optional; virtual time only):
     --learners-list N1,N2      learner counts            [100,1000,10000]
     --straggler-fracs F1,F2    straggler counts as fractions of N [0,0.05,0.25,0.5,0.9]
     --delay-dists D1,D2        delay tails to compare    [fixed,pareto]
     --m/--env/--adversaries/--schemes/--straggler-delay-ms/--delay-alpha/
-    --delay-sigma/--iterations/--mock-compute-us/--sweep-threads/--seed
+    --delay-sigma/--iterations/--mock-compute-us/--sweep-threads/--seed/
+    --bandwidth/--net-jitter-us/--compute-model
                                as in sim-sweep           [iterations: 5]
     --out-dir DIR              write BENCH_scale.json here
 
@@ -101,6 +116,8 @@ EXAMPLES:
         --stragglers 2 --straggler-delay-ms 250 --verbose
     coded-marl code --scheme ldpc --n 15 --m 8
     coded-marl sim-sweep --m 8 --straggler-delay-ms 250
+    coded-marl sim-sweep --trace examples/traces/ec2_sample.jsonl --out-dir bench-out
+    coded-marl sim-sweep --m 8 --bandwidth-list 0,25,125 --stragglers-list 0,2
     coded-marl scale-study --learners-list 100,1000,10000 \\
         --delay-dists fixed,pareto --out-dir bench-out
 ";
@@ -255,9 +272,10 @@ fn parse_delay_dist(args: &Args) -> Result<coded_marl::config::DelayDist> {
 /// nanoseconds instead of wall seconds, so the whole grid prints in
 /// well under a second.
 fn cmd_sim_sweep() -> Result<()> {
+    use coded_marl::config::{ComputeModelCfg, DelayDist};
     use coded_marl::sim::sweep::{
-        render_table, run_sweep, simulated_total, sweep_base, write_bench_json, write_csv,
-        SweepConfig,
+        bandwidth_table, grid_iter_stats, render_table, run_bandwidth_sweep, simulated_total,
+        sweep_base, write_bench_json, write_csv, write_model_json, SweepConfig,
     };
 
     let args = Args::from_env(2)?;
@@ -288,11 +306,56 @@ fn cmd_sim_sweep() -> Result<()> {
     let sweep_threads = args.get_or("sweep-threads", 0usize)?;
     let dist = parse_delay_dist(&args)?;
     let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
-    args.finish()?;
+    let bandwidth_list: Option<Vec<f64>> = match args.opt("bandwidth-list") {
+        None => None,
+        Some(csv) => Some(
+            csv.split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .with_context(|| format!("bad bandwidth '{s}' in --bandwidth-list"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        ),
+    };
 
     let mut base = sweep_base(format!("{}_m{}", env.name(), m), n, iterations, mock_compute, seed);
     base.straggler.dist = dist;
     base.sweep_threads = sweep_threads;
+    base.apply_model_args(&args)?;
+    let mut ks = ks;
+    let mut delay = delay;
+    if base.trace.is_some() {
+        // Measured replay owns the disturbance: the synthetic injector
+        // knobs are rejected rather than silently ignored.
+        if args.opt("delay-dist").is_some() || args.flag("straggler-exponential") {
+            anyhow::bail!("--trace replays measured delays; drop --delay-dist/--straggler-exponential");
+        }
+        if args.opt("stragglers-list").is_some() {
+            anyhow::bail!("--trace replays measured delays; drop --stragglers-list (cells run with k=0)");
+        }
+        if args.opt("straggler-delay-ms").is_some() {
+            anyhow::bail!("--trace replays measured delays; drop --straggler-delay-ms");
+        }
+        ks = vec![0];
+        delay = std::time::Duration::ZERO;
+        base.straggler.dist = DelayDist::Fixed;
+        if args.opt("bandwidth").is_none() && bandwidth_list.is_none() {
+            // A measured-cluster replay over a free network would be
+            // the very inconsistency this layer removes: default to
+            // 1 GbE so the broadcasts cost what they measured.
+            base.net.bandwidth_mbps = 125.0;
+            eprintln!(
+                "sim-sweep: --trace without --bandwidth: modeling a 125 MB/s (1 GbE) link; \
+                 pass --bandwidth 0 for an infinite one"
+            );
+        }
+    }
+    args.finish()?;
+    let model_active = base.trace.is_some()
+        || !base.net.is_free()
+        || base.compute_model != ComputeModelCfg::Fixed
+        || bandwidth_list.is_some();
     // Heavy tails legitimately draw delays past the 120 s real-time
     // default; virtual seconds are free, so give collect a wide window
     // instead of failing the cell on a tail draw.
@@ -301,30 +364,69 @@ fn cmd_sim_sweep() -> Result<()> {
     // not the mock's arithmetic, so small dims only cut wall cost.
     let spec = RunSpec::synthetic(env, m, adversaries, 32, 32);
 
+    let disturbance = match &base.trace {
+        Some(p) => format!("trace={}", p.display()),
+        None => format!("t_s={delay:?} ({})", dist.label()),
+    };
     println!(
-        "sim-sweep: {} M={m} N={n} t_s={delay:?} ({}) compute={mock_compute:?}/update ({iterations} iters/cell, virtual time)",
+        "sim-sweep: {} M={m} N={n} {disturbance} net={} compute-model={} compute={mock_compute:?}/update ({iterations} iters/cell, virtual time)",
         env.name(),
-        dist.label(),
+        base.net.label(),
+        base.compute_model.name(),
     );
     let t0 = std::time::Instant::now();
-    let cells = run_sweep(&SweepConfig {
-        base,
+    let sweep_cfg = SweepConfig {
+        base: base.clone(),
         spec,
         schemes,
         ks: ks.clone(),
         delay,
         artifacts_dir: artifacts.into(),
-    })?;
+    };
+    // One code path for both shapes: without --bandwidth-list the
+    // sweep is a single point at the base bandwidth (identical cells
+    // to the plain grid runner).
+    let bandwidths = bandwidth_list.clone().unwrap_or_else(|| vec![base.net.bandwidth_mbps]);
+    let points = run_bandwidth_sweep(&sweep_cfg, &bandwidths)?;
     let wall = t0.elapsed();
-    print!("{}", render_table(&cells, &ks));
-    let virtual_total = simulated_total(&cells);
+    for p in &points {
+        if points.len() > 1 {
+            println!("\n--- bandwidth {} ---", if p.bandwidth_mbps == 0.0 { "inf".into() } else { format!("{} MB/s", p.bandwidth_mbps) });
+        }
+        print!("{}", render_table(&p.cells, &ks));
+    }
+    if points.len() > 1 {
+        println!("\n== bandwidth sensitivity: mean iteration time per (scheme, k) ==");
+        print!("{}", bandwidth_table(&points));
+    }
+    let all_cells: Vec<&coded_marl::sim::SweepCell> =
+        points.iter().flat_map(|p| p.cells.iter()).collect();
+    let virtual_total: std::time::Duration =
+        points.iter().map(|p| simulated_total(&p.cells)).sum();
     println!(
         "\nsimulated {} of training time in {} wall-clock",
         fmt_duration(virtual_total),
         fmt_duration(wall),
     );
-    let hits: u64 = cells.iter().map(|c| c.decode_plan.hits).sum();
-    let misses: u64 = cells.iter().map(|c| c.decode_plan.misses).sum();
+    let stats = {
+        let mut s = coded_marl::metrics::Stats::new();
+        for p in &points {
+            s.merge(&grid_iter_stats(&p.cells));
+        }
+        s
+    };
+    if stats.count() > 0 {
+        println!(
+            "per-iteration: mean {:.1}ms std {:.1}ms min {:.1}ms max {:.1}ms over {} iterations",
+            stats.mean() * 1e3,
+            stats.std() * 1e3,
+            stats.min() * 1e3,
+            stats.max() * 1e3,
+            stats.count(),
+        );
+    }
+    let hits: u64 = all_cells.iter().map(|c| c.decode_plan.hits).sum();
+    let misses: u64 = all_cells.iter().map(|c| c.decode_plan.misses).sum();
     if hits + misses > 0 {
         println!(
             "decode-plan cache: {hits} hits / {misses} misses ({:.0}% hit rate — one \
@@ -332,14 +434,40 @@ fn cmd_sim_sweep() -> Result<()> {
             100.0 * hits as f64 / (hits + misses) as f64,
         );
     }
+    if model_active {
+        let net_b: u64 = all_cells.iter().map(|c| c.net.broadcast_ns).sum();
+        let net_r: u64 = all_cells.iter().map(|c| c.net.return_ns).sum();
+        println!(
+            "network model: {} broadcast + {} return transfer simulated",
+            fmt_duration(std::time::Duration::from_nanos(net_b)),
+            fmt_duration(std::time::Duration::from_nanos(net_r)),
+        );
+    }
     if let Some(dir) = out_dir {
-        let path = dir.join("sim_sweep.csv");
-        write_csv(&cells, &path).with_context(|| format!("writing {}", path.display()))?;
-        println!("wrote {}", path.display());
-        let bench = dir.join("BENCH_sweep.json");
-        write_bench_json(&cells, wall, &bench)
-            .with_context(|| format!("writing {}", bench.display()))?;
-        println!("wrote {}", bench.display());
+        // The legacy single-grid records only make sense for a single
+        // bandwidth point; a multi-point sweep is recorded solely in
+        // BENCH_model.json (writing just the first point there would
+        // silently drop the rest and misattribute the wall-clock).
+        if points.len() == 1 {
+            let path = dir.join("sim_sweep.csv");
+            write_csv(&points[0].cells, &path)
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("wrote {}", path.display());
+            let bench = dir.join("BENCH_sweep.json");
+            write_bench_json(&points[0].cells, wall, &bench)
+                .with_context(|| format!("writing {}", bench.display()))?;
+            println!("wrote {}", bench.display());
+        } else {
+            println!(
+                "(multi-bandwidth sweep: per-cell records go to BENCH_model.json only)"
+            );
+        }
+        if model_active {
+            let model = dir.join("BENCH_model.json");
+            write_model_json(&points, &base, wall, &model)
+                .with_context(|| format!("writing {}", model.display()))?;
+            println!("wrote {}", model.display());
+        }
     }
     Ok(())
 }
@@ -409,12 +537,21 @@ fn cmd_scale_study() -> Result<()> {
     let seed = args.get_or("seed", 0u64)?;
     let sweep_threads = args.get_or("sweep-threads", 0usize)?;
     let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
-    args.finish()?;
 
     let n0 = *ns.first().context("--learners-list must not be empty")?;
     let mut base =
         sweep_base(format!("{}_m{}", env.name(), m), n0, iterations, mock_compute, seed);
     base.sweep_threads = sweep_threads;
+    // The study sweeps synthetic straggler fractions; the network and
+    // compute models compose with it, measured-trace replay does not.
+    base.apply_model_args(&args)?;
+    if base.trace.is_some() {
+        anyhow::bail!(
+            "scale-study sweeps synthetic straggler fractions; use `sim-sweep --trace` \
+             for measured-trace replay"
+        );
+    }
+    args.finish()?;
     // Heavy tails legitimately draw delays past the 120 s real-time
     // default; virtual seconds are free.
     base.collect_timeout = std::time::Duration::from_secs(4 * 3600);

@@ -1,0 +1,174 @@
+//! Compute model: per-update learner compute time in virtual-time
+//! simulation.
+//!
+//! PR 1 hardcoded virtual compute to the mock backend's fixed
+//! `mock_compute` per agent update (and `TrainConfig::validate`
+//! enforced `TimeMode::Virtual ⇒ Backend::Mock`). [`ComputeModel`]
+//! makes the cost pluggable:
+//!
+//! * [`ComputeModel::Fixed`] — the PR 1 behavior, bit for bit:
+//!   `per_update × updates`, no RNG.
+//! * [`ComputeModel::Empirical`] — per-update cost sampled uniformly
+//!   from **measured** durations (e.g. timed against the real PJRT
+//!   learner step via [`measure_backend`], the library twin of
+//!   `benches/common.rs::calibrate_compute`). This is what lifts the
+//!   mock-only restriction: any backend's numerics run in the sim, and
+//!   its *time* is the calibrated distribution.
+//!
+//! Draws come from the model's own PCG stream in task order, so
+//! calibrated sweeps stay deterministic per seed.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::backend::LearnerBackend;
+use crate::marl::buffer::Minibatch;
+use crate::marl::AgentParams;
+use crate::rng::Pcg32;
+
+/// Pluggable per-update compute-time model (see module docs).
+#[derive(Debug)]
+pub enum ComputeModel {
+    /// Deterministic cost per agent update (`TrainConfig::mock_compute`).
+    Fixed { per_update: Duration },
+    /// Per-update cost drawn uniformly from measured samples.
+    Empirical { samples: Vec<Duration>, rng: Pcg32 },
+}
+
+impl ComputeModel {
+    pub fn fixed(per_update: Duration) -> ComputeModel {
+        ComputeModel::Fixed { per_update }
+    }
+
+    /// Empirical model over measured per-update durations. The RNG
+    /// stream is derived from the experiment seed, independent of the
+    /// straggler-injection and training streams.
+    pub fn empirical(samples: Vec<Duration>, seed: u64) -> Result<ComputeModel> {
+        if samples.is_empty() {
+            bail!("empirical compute model needs at least one measured sample");
+        }
+        Ok(ComputeModel::Empirical { samples, rng: Pcg32::new(seed, 0xC03D) })
+    }
+
+    /// Virtual cost of `updates` agent updates on one learner.
+    pub fn cost(&mut self, updates: u32) -> Duration {
+        match self {
+            ComputeModel::Fixed { per_update } => *per_update * updates,
+            ComputeModel::Empirical { samples, rng } => {
+                let mut t = Duration::ZERO;
+                for _ in 0..updates {
+                    t += samples[rng.below(samples.len() as u32) as usize];
+                }
+                t
+            }
+        }
+    }
+
+    /// Mean per-update cost (exact for Fixed, sample mean for Empirical).
+    pub fn mean(&self) -> Duration {
+        match self {
+            ComputeModel::Fixed { per_update } => *per_update,
+            ComputeModel::Empirical { samples, .. } => {
+                let sum: Duration = samples.iter().sum();
+                sum / samples.len().max(1) as u32
+            }
+        }
+    }
+
+}
+
+/// Measure a backend's real per-update duration: `rounds` timed
+/// `update_agent` calls on a synthetic minibatch built from the
+/// backend's own dims. With the PJRT backend this calibrates against
+/// the real learner step; with the mock it recovers its emulated
+/// sleep. Wall-clock cost ≈ `rounds × per-update time`, paid once at
+/// pool construction, never on the iteration path.
+pub fn measure_backend(
+    backend: &mut dyn LearnerBackend,
+    rounds: usize,
+    seed: u64,
+) -> Result<Vec<Duration>> {
+    if rounds == 0 {
+        bail!("compute calibration needs at least one round");
+    }
+    let dims = backend.dims();
+    let mut rng = Pcg32::new(seed, 0xCA1B);
+    let agents: Vec<Vec<f32>> =
+        (0..dims.m).map(|_| AgentParams::init(&dims, &mut rng).to_flat()).collect();
+    let mb = Minibatch {
+        batch: dims.batch,
+        m: dims.m,
+        obs_dim: dims.obs_dim,
+        act_dim: dims.act_dim,
+        obs: rng.normal_vec_f32(dims.batch * dims.m * dims.obs_dim, 1.0),
+        act: rng.normal_vec_f32(dims.batch * dims.m * dims.act_dim, 0.5),
+        rew: rng.normal_vec_f32(dims.m * dims.batch, 1.0),
+        next_obs: rng.normal_vec_f32(dims.batch * dims.m * dims.obs_dim, 1.0),
+        done: vec![0.0; dims.batch],
+    };
+    let mut times = Vec::with_capacity(rounds);
+    for i in 0..rounds {
+        let t0 = std::time::Instant::now();
+        backend
+            .update_agent(i % dims.m, &agents, &mb)
+            .context("compute calibration step failed")?;
+        times.push(t0.elapsed());
+    }
+    Ok(times)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use crate::marl::ModelDims;
+
+    fn dims() -> ModelDims {
+        ModelDims { m: 3, obs_dim: 4, act_dim: 2, hidden: 8, batch: 4 }
+    }
+
+    #[test]
+    fn fixed_cost_is_linear_in_updates() {
+        let mut m = ComputeModel::fixed(Duration::from_millis(2));
+        assert_eq!(m.cost(0), Duration::ZERO);
+        assert_eq!(m.cost(1), Duration::from_millis(2));
+        assert_eq!(m.cost(5), Duration::from_millis(10));
+        assert_eq!(m.mean(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn empirical_draws_are_seed_deterministic() {
+        let samples =
+            vec![Duration::from_micros(10), Duration::from_micros(20), Duration::from_micros(70)];
+        let run = |seed: u64| -> Vec<Duration> {
+            let mut m = ComputeModel::empirical(samples.clone(), seed).unwrap();
+            (0..50).map(|_| m.cost(3)).collect()
+        };
+        let a = run(9);
+        assert_eq!(a, run(9), "same seed must replay the same draws");
+        assert_ne!(a, run(10));
+        // every cost is a sum of 3 samples, so it lies inside the hull
+        for &c in &a {
+            assert!(c >= Duration::from_micros(30) && c <= Duration::from_micros(210), "{c:?}");
+        }
+        let mean = ComputeModel::empirical(samples, 0).unwrap().mean();
+        assert!((mean.as_micros() as i64 - 33).abs() <= 1, "{mean:?}");
+    }
+
+    #[test]
+    fn empirical_rejects_empty_samples() {
+        assert!(ComputeModel::empirical(Vec::new(), 0).is_err());
+    }
+
+    #[test]
+    fn measure_backend_times_the_mock_sleep() {
+        let mut be = MockBackend::new(dims(), Duration::from_millis(2));
+        let samples = measure_backend(&mut be, 4, 0).unwrap();
+        assert_eq!(samples.len(), 4);
+        for s in &samples {
+            assert!(*s >= Duration::from_millis(2), "mock sleeps ≥ 2ms, measured {s:?}");
+        }
+        assert!(measure_backend(&mut be, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! Disturbance model: which learners are slowed down each iteration,
+//! and by how much.
+//!
+//! Two pluggable implementations behind [`DisturbanceModel`]:
+//!
+//! * [`StragglerInjector`] — the paper's §V-C synthetic model: each
+//!   iteration, `k` learners chosen uniformly at random delay their
+//!   reply by `t_s` (or a mean-t_s draw from a [`DelayDist`] tail).
+//! * [`TraceReplay`](super::trace::TraceReplay) — recorded per-learner
+//!   latency traces from a measured cluster, looping deterministically
+//!   per seed (ROADMAP "trace replay").
+//!
+//! The model **decides** the per-learner delays; the transport layer
+//! merely carries them (the Task header's `straggler_delay_ns`) to
+//! their application point — a real learner's interruptible wait, or
+//! the sim's event timestamp. All construction sites go through
+//! [`DisturbanceModel::from_config`], the single path validated by
+//! `TrainConfig::validate` (`--trace` and the injector knobs are
+//! mutually exclusive there).
+
+use anyhow::{Context, Result};
+
+use super::trace::TraceReplay;
+use crate::config::{DelayDist, StragglerConfig, TrainConfig};
+use crate::rng::Pcg32;
+
+/// The injection plan for one iteration.
+#[derive(Clone, Debug)]
+pub struct InjectionPlan {
+    /// Learner ids with a nonzero delay this iteration (sorted).
+    pub stragglers: Vec<usize>,
+    /// Delay (ns) per learner; 0 for healthy learners.
+    pub delay_ns: Vec<u64>,
+}
+
+/// Per-iteration straggler selector (paper §V-C).
+pub struct StragglerInjector {
+    cfg: StragglerConfig,
+    rng: Pcg32,
+}
+
+impl StragglerInjector {
+    pub fn new(cfg: StragglerConfig, rng: Pcg32) -> StragglerInjector {
+        StragglerInjector { cfg, rng }
+    }
+
+    pub fn config(&self) -> &StragglerConfig {
+        &self.cfg
+    }
+
+    /// Draw this iteration's stragglers among `n` learners.
+    pub fn plan(&mut self, n: usize) -> InjectionPlan {
+        let k = self.cfg.k.min(n);
+        let mut stragglers = self.rng.choose_k(n, k);
+        stragglers.sort_unstable();
+        let mut delay_ns = vec![0u64; n];
+        for &j in &stragglers {
+            let base = self.cfg.delay.as_nanos() as f64;
+            let d = match self.cfg.dist {
+                DelayDist::Fixed => base,
+                // Exp(1)-scaled delay: mean t_s, occasionally much worse.
+                DelayDist::Exponential => base * (-self.nonzero_uniform().ln()),
+                // x_m / U^{1/α} with x_m = t_s·(α−1)/α ⇒ mean exactly
+                // t_s; the tail decays as a power law (infinite
+                // variance for α < 2).
+                DelayDist::Pareto { alpha } => {
+                    let x_m = base * (alpha - 1.0) / alpha;
+                    x_m * self.nonzero_uniform().powf(-1.0 / alpha)
+                }
+                // t_s·exp(σZ − σ²/2) ⇒ mean exactly t_s.
+                DelayDist::LogNormal { sigma } => {
+                    base * (sigma * self.rng.normal() - 0.5 * sigma * sigma).exp()
+                }
+            };
+            delay_ns[j] = d as u64;
+        }
+        InjectionPlan { stragglers, delay_ns }
+    }
+
+    /// Uniform draw in (0, 1) — guards the log/power transforms.
+    fn nonzero_uniform(&mut self) -> f64 {
+        loop {
+            let u = self.rng.uniform();
+            if u > 0.0 {
+                return u;
+            }
+        }
+    }
+}
+
+/// Pluggable disturbance source (see module docs).
+pub enum DisturbanceModel {
+    /// Synthetic §V-C injection.
+    Injector(StragglerInjector),
+    /// Measured-trace replay.
+    Trace(TraceReplay),
+}
+
+impl DisturbanceModel {
+    /// The single construction path: `--trace` selects replay,
+    /// otherwise the synthetic injector — on the exact RNG stream the
+    /// pre-model controller used, so injector runs stay bit-identical.
+    pub fn from_config(cfg: &TrainConfig) -> Result<DisturbanceModel> {
+        match &cfg.trace {
+            Some(path) => Ok(DisturbanceModel::Trace(
+                TraceReplay::load(path, cfg.seed)
+                    .context("building trace-replay disturbance model")?,
+            )),
+            None => Ok(DisturbanceModel::Injector(StragglerInjector::new(
+                cfg.straggler,
+                Pcg32::new(cfg.seed, 0x57A6),
+            ))),
+        }
+    }
+
+    /// This iteration's per-learner delays.
+    pub fn plan(&mut self, n: usize) -> InjectionPlan {
+        match self {
+            DisturbanceModel::Injector(inj) => inj.plan(n),
+            DisturbanceModel::Trace(replay) => replay.plan(n),
+        }
+    }
+    // Run headers describe the disturbance via `TrainConfig::summary`
+    // (trace=… / stragglers(…)); no second label format lives here.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn plan_selects_exactly_k_distinct() {
+        let cfg = StragglerConfig::fixed(4, Duration::from_millis(100));
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(0));
+        for _ in 0..50 {
+            let plan = inj.plan(15);
+            assert_eq!(plan.stragglers.len(), 4);
+            let mut s = plan.stragglers.clone();
+            s.dedup();
+            assert_eq!(s.len(), 4);
+            assert_eq!(plan.delay_ns.iter().filter(|&&d| d > 0).count(), 4);
+            for &j in &plan.stragglers {
+                assert_eq!(plan.delay_ns[j], 100_000_000);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_k_injects_nothing() {
+        let mut inj = StragglerInjector::new(StragglerConfig::none(), Pcg32::seeded(1));
+        let plan = inj.plan(15);
+        assert!(plan.stragglers.is_empty());
+        assert!(plan.delay_ns.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let cfg = StragglerConfig::fixed(20, Duration::from_millis(1));
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(2));
+        let plan = inj.plan(5);
+        assert_eq!(plan.stragglers.len(), 5);
+    }
+
+    #[test]
+    fn selection_varies_across_iterations() {
+        let cfg = StragglerConfig::fixed(3, Duration::from_millis(1));
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(3));
+        let a = inj.plan(15).stragglers;
+        let mut differs = false;
+        for _ in 0..10 {
+            if inj.plan(15).stragglers != a {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "straggler selection should vary across iterations");
+    }
+
+    fn mean_delay_ms(dist: DelayDist, trials: usize, seed: u64) -> f64 {
+        let cfg = StragglerConfig { k: 1, delay: Duration::from_millis(100), dist };
+        let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(seed));
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            let plan = inj.plan(4);
+            sum += plan.delay_ns[plan.stragglers[0]] as f64;
+        }
+        sum / trials as f64 / 1e6
+    }
+
+    #[test]
+    fn exponential_delays_have_mean_near_ts() {
+        let mean_ms = mean_delay_ms(DelayDist::Exponential, 4000, 4);
+        assert!((mean_ms - 100.0).abs() < 8.0, "mean={mean_ms}ms");
+    }
+
+    /// Every distribution is mean-normalized to t_s, so equal injected
+    /// budgets differ only in the tail. α = 3 keeps the Pareto variance
+    /// finite so the sample mean converges at test scale.
+    #[test]
+    fn heavy_tail_delays_are_mean_normalized() {
+        let pareto = mean_delay_ms(DelayDist::Pareto { alpha: 3.0 }, 4000, 5);
+        assert!((pareto - 100.0).abs() < 8.0, "pareto mean={pareto}ms");
+        let lognormal = mean_delay_ms(DelayDist::LogNormal { sigma: 1.0 }, 4000, 6);
+        assert!((lognormal - 100.0).abs() < 12.0, "lognormal mean={lognormal}ms");
+    }
+
+    /// The heavy tails really are heavier: at matched means, the
+    /// quantile far in the tail orders fixed < exponential < pareto.
+    #[test]
+    fn pareto_tail_dominates_exponential() {
+        let tail_q = |dist: DelayDist| -> f64 {
+            let cfg = StragglerConfig { k: 1, delay: Duration::from_millis(100), dist };
+            let mut inj = StragglerInjector::new(cfg, Pcg32::seeded(7));
+            let mut draws: Vec<f64> = (0..4000)
+                .map(|_| {
+                    let plan = inj.plan(4);
+                    plan.delay_ns[plan.stragglers[0]] as f64
+                })
+                .collect();
+            draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            draws[draws.len() * 999 / 1000] // p99.9
+        };
+        let fixed = tail_q(DelayDist::Fixed);
+        let exp = tail_q(DelayDist::Exponential);
+        let pareto = tail_q(DelayDist::Pareto { alpha: 1.5 });
+        assert!(fixed < exp && exp < pareto, "p99.9: fixed={fixed} exp={exp} pareto={pareto}");
+    }
+
+    #[test]
+    fn from_config_builds_injector_on_the_legacy_stream() {
+        let mut cfg = TrainConfig::new("x");
+        cfg.straggler = StragglerConfig::fixed(2, Duration::from_millis(10));
+        cfg.seed = 9;
+        let mut model = DisturbanceModel::from_config(&cfg).unwrap();
+        // Bit-identity pin: the model draws from the exact stream the
+        // pre-model controller seeded (Pcg32::new(seed, 0x57A6)).
+        let mut reference =
+            StragglerInjector::new(cfg.straggler, Pcg32::new(cfg.seed, 0x57A6));
+        for _ in 0..5 {
+            let a = model.plan(8);
+            let b = reference.plan(8);
+            assert_eq!(a.stragglers, b.stragglers);
+            assert_eq!(a.delay_ns, b.delay_ns);
+        }
+        assert!(matches!(model, DisturbanceModel::Injector(_)));
+    }
+
+    #[test]
+    fn from_config_builds_trace_replay() {
+        let dir = std::env::temp_dir().join("coded_marl_disturbance_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        std::fs::write(&path, "t_s,l0,l1\n0.0,5,0\n1.0,0,7\n").unwrap();
+        let mut cfg = TrainConfig::new("x");
+        cfg.trace = Some(path.clone());
+        cfg.seed = 0;
+        let mut model = DisturbanceModel::from_config(&cfg).unwrap();
+        assert!(matches!(model, DisturbanceModel::Trace(_)));
+        let p = model.plan(2);
+        assert_eq!(p.delay_ns, vec![5_000_000, 0]);
+        assert_eq!(p.stragglers, vec![0]);
+        // missing file: clear error
+        cfg.trace = Some(dir.join("missing.csv"));
+        assert!(DisturbanceModel::from_config(&cfg).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,99 @@
+//! Unified system-model layer: pluggable compute, network and
+//! disturbance models for the virtual-time simulator.
+//!
+//! The paper's straggler model (§V-C: k uniform learners delayed by
+//! t_s) is one point in a much larger space of system disturbances —
+//! "slow-downs or failures of compute nodes and communication
+//! bottlenecks". This layer factors the sim's timing assumptions into
+//! three pluggable parts:
+//!
+//! * [`ComputeModel`] — virtual time per agent update: the fixed
+//!   `mock_compute` constant (PR 1 behavior), or an empirical
+//!   distribution calibrated against a real backend
+//!   ([`compute::measure_backend`]) — which is what lifts the old
+//!   `TimeMode::Virtual ⇒ Backend::Mock` restriction.
+//! * [`NetworkModel`] — per-message transfer time
+//!   (`payload_bytes / bandwidth + jitter`) charged via the PR 4 split
+//!   frame: the shared `TaskBody` once per broadcast, the small header
+//!   and Result frames per learner. Default: free (bit-identical to
+//!   PR 1-4).
+//! * [`DisturbanceModel`] — who is slowed down each iteration: the
+//!   §V-C [`StragglerInjector`] (synthetic tails) or
+//!   [`TraceReplay`](trace::TraceReplay) of measured per-learner
+//!   latency traces (JSONL/CSV), looping deterministically per seed.
+//!
+//! Ownership split: [`SystemModel`] (compute + network) lives in the
+//! transport ([`crate::sim::SimTransport`]) where message timing is
+//! decided; the [`DisturbanceModel`] lives in the controller, which
+//! draws one plan per iteration — the Task header carries the decided
+//! delay to its application point (real learner wait / sim event
+//! timestamp), but the *decision* is the model's.
+//!
+//! With every knob at its default (fixed compute, free network,
+//! injector disturbance), virtual runs are **bit-identical** to the
+//! pre-model code — pinned by `rust/tests/model_integration.rs`.
+
+pub mod compute;
+pub mod disturbance;
+pub mod network;
+pub mod trace;
+
+pub use compute::ComputeModel;
+pub use disturbance::{DisturbanceModel, InjectionPlan, StragglerInjector};
+pub use network::{NetStats, NetworkModel};
+pub use trace::{Trace, TraceReplay};
+
+use crate::config::TrainConfig;
+
+/// The transport-side system model: compute cost + network transfer.
+/// (The disturbance part is controller-side; see module docs.)
+#[derive(Debug)]
+pub struct SystemModel {
+    pub compute: ComputeModel,
+    pub network: NetworkModel,
+}
+
+impl SystemModel {
+    /// Fixed per-update compute over a free network — the exact PR 1-4
+    /// sim behavior.
+    pub fn fixed(per_update: std::time::Duration) -> SystemModel {
+        SystemModel { compute: ComputeModel::fixed(per_update), network: NetworkModel::free() }
+    }
+
+    /// Model implied by the config's `Fixed` compute path. The
+    /// calibrated compute path needs a live backend to measure and is
+    /// assembled in [`crate::coordinator::spawn_pool`].
+    pub fn from_config(cfg: &TrainConfig) -> SystemModel {
+        SystemModel {
+            compute: ComputeModel::fixed(cfg.mock_compute),
+            network: NetworkModel::from_config(&cfg.net, cfg.seed),
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fixed_model_is_the_neutral_default() {
+        let m = SystemModel::fixed(Duration::from_millis(2));
+        assert!(m.network.is_free());
+        assert_eq!(m.compute.mean(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn from_config_picks_up_the_net_knobs() {
+        let mut cfg = TrainConfig::new("x");
+        cfg.mock_compute = Duration::from_millis(3);
+        let m = SystemModel::from_config(&cfg);
+        assert!(m.network.is_free(), "default config must model a free network");
+        cfg.net.bandwidth_mbps = 125.0;
+        let m = SystemModel::from_config(&cfg);
+        assert!(!m.network.is_free());
+        assert_eq!(m.network.serialization_time(2_000_000), Duration::from_millis(16));
+        assert_eq!(m.compute.mean(), Duration::from_millis(3));
+    }
+}

@@ -1,0 +1,229 @@
+//! Network model: per-message transfer time in virtual-time simulation.
+//!
+//! The paper's protocol broadcasts a multi-megabyte `(θ, B)` body to N
+//! learners every iteration and collects N parameter-sized results —
+//! phases that real clusters pay for but PR 1's `SimTransport`
+//! delivered in zero virtual time. [`NetworkModel`] charges them:
+//!
+//! ```text
+//! transfer(bytes) = bytes / bandwidth + Exp(jitter_mean)
+//! ```
+//!
+//! and the sim applies it per the PR 4 split frame: the shared
+//! [`crate::transport::TaskBody`] is charged **once per broadcast**
+//! (the encode-once body every learner shares, as over a multicast
+//! tree or a controller-side serialize-once uplink), while each
+//! learner pays only its small per-learner Task header on the way in
+//! and its Result frame on the way out. That makes the coded schemes'
+//! real bandwidth structure visible: MDS ships one body + N tiny
+//! headers, while uncoded's advantage shrinks to its smaller result
+//! traffic.
+//!
+//! The **default model is free** ([`NetworkModel::free`]): infinite
+//! bandwidth, zero jitter, no RNG draws — bit-identical to the PR 1-4
+//! behavior (pinned by `rust/tests/model_integration.rs`). Jitter is
+//! exponential with the configured mean, drawn from the model's own
+//! PCG stream in event-scheduling order, so runs are deterministic
+//! per seed at any `--sweep-threads` count.
+
+use std::time::Duration;
+
+use crate::config::NetConfig;
+use crate::rng::Pcg32;
+
+/// Transfer-time telemetry accumulated by the sim transport. In a
+/// training cell the totals cover exactly the broadcasting (non-warmup)
+/// iterations, so `broadcast_ns / measured_iters` is the per-iteration
+/// broadcast cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Total broadcast-leg transfer time (shared bodies + per-learner
+    /// Task headers), in nanoseconds.
+    pub broadcast_ns: u64,
+    /// Total result-return transfer time, in nanoseconds — counts
+    /// **delivered** results only: a cancelled (acked/superseded)
+    /// result was never sent by the real learner, so its frame is not
+    /// traffic.
+    pub return_ns: u64,
+    /// Task frames charged (per-learner sends).
+    pub tasks: u64,
+    /// Shared bodies charged (once per broadcast iteration).
+    pub bodies: u64,
+}
+
+impl NetStats {
+    pub fn broadcast(&self) -> Duration {
+        Duration::from_nanos(self.broadcast_ns)
+    }
+
+    pub fn ret(&self) -> Duration {
+        Duration::from_nanos(self.return_ns)
+    }
+}
+
+/// Pluggable per-message transfer-time model (see module docs).
+#[derive(Debug)]
+pub struct NetworkModel {
+    /// Link bandwidth in bytes per (virtual) second; `None` = infinite.
+    bandwidth: Option<f64>,
+    /// Mean of the exponential per-message jitter; zero = none.
+    jitter_mean: Duration,
+    rng: Pcg32,
+    stats: NetStats,
+}
+
+impl NetworkModel {
+    /// The PR 1-4 behavior: transfers are free, no RNG is consumed.
+    pub fn free() -> NetworkModel {
+        NetworkModel {
+            bandwidth: None,
+            jitter_mean: Duration::ZERO,
+            rng: Pcg32::seeded(0),
+            stats: NetStats::default(),
+        }
+    }
+
+    /// Model from the config knobs (`--bandwidth` in MB/s, 0 = infinite;
+    /// `--net-jitter-us`). The jitter stream is derived from the
+    /// experiment seed on its own PCG stream, so enabling it never
+    /// perturbs the straggler-injection or training streams.
+    pub fn from_config(net: &NetConfig, seed: u64) -> NetworkModel {
+        let bandwidth =
+            if net.bandwidth_mbps > 0.0 { Some(net.bandwidth_mbps * 1e6) } else { None };
+        NetworkModel {
+            bandwidth,
+            jitter_mean: net.jitter,
+            rng: Pcg32::new(seed, 0x4E77),
+            stats: NetStats::default(),
+        }
+    }
+
+    /// True when the model can never charge time (the fast path: the
+    /// sim skips payload-size queries and stats entirely).
+    pub fn is_free(&self) -> bool {
+        self.bandwidth.is_none() && self.jitter_mean.is_zero()
+    }
+
+    /// Pure serialization delay of `bytes` at this model's bandwidth
+    /// (zero when infinite); no jitter, no RNG, no stats.
+    pub fn serialization_time(&self, bytes: usize) -> Duration {
+        match self.bandwidth {
+            Some(bw) => Duration::from_secs_f64(bytes as f64 / bw),
+            None => Duration::ZERO,
+        }
+    }
+
+    /// One message transfer: serialization + a fresh jitter draw.
+    /// Draw order is event-scheduling order, which the single-threaded
+    /// sim makes deterministic.
+    pub fn transfer(&mut self, bytes: usize) -> Duration {
+        let mut t = self.serialization_time(bytes);
+        if !self.jitter_mean.is_zero() {
+            // Exponential with mean `jitter_mean`.
+            let u = loop {
+                let u = self.rng.uniform();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            t += Duration::from_secs_f64(self.jitter_mean.as_secs_f64() * -u.ln());
+        }
+        t
+    }
+
+    pub fn stats(&self) -> NetStats {
+        self.stats
+    }
+
+    /// Record a broadcast-leg charge (shared body or per-learner header).
+    pub fn record_broadcast(&mut self, t: Duration, is_body: bool) {
+        self.stats.broadcast_ns += duration_ns(t);
+        if is_body {
+            self.stats.bodies += 1;
+        } else {
+            self.stats.tasks += 1;
+        }
+    }
+
+    /// Record a result-return charge.
+    pub fn record_return(&mut self, t: Duration) {
+        self.stats.return_ns += duration_ns(t);
+    }
+}
+
+fn duration_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mbps: f64, jitter: Duration) -> NetConfig {
+        NetConfig { bandwidth_mbps: mbps, jitter }
+    }
+
+    #[test]
+    fn free_model_charges_nothing_and_draws_nothing() {
+        let mut m = NetworkModel::free();
+        assert!(m.is_free());
+        assert_eq!(m.transfer(10 << 20), Duration::ZERO);
+        assert_eq!(m.serialization_time(usize::MAX / 8), Duration::ZERO);
+        assert_eq!(m.stats(), NetStats::default());
+    }
+
+    #[test]
+    fn bandwidth_math_is_exact() {
+        // 1 MB/s ⇒ 1 byte costs 1 µs.
+        let m = NetworkModel::from_config(&cfg(1.0, Duration::ZERO), 0);
+        assert!(!m.is_free());
+        assert_eq!(m.serialization_time(1), Duration::from_micros(1));
+        assert_eq!(m.serialization_time(2_000_000), Duration::from_secs(2));
+        // 125 MB/s (1 GbE): a 2 MB body costs 16 ms.
+        let m = NetworkModel::from_config(&cfg(125.0, Duration::ZERO), 0);
+        assert_eq!(m.serialization_time(2_000_000), Duration::from_millis(16));
+    }
+
+    #[test]
+    fn zero_jitter_transfer_is_deterministic_serialization() {
+        let mut m = NetworkModel::from_config(&cfg(10.0, Duration::ZERO), 7);
+        for _ in 0..4 {
+            assert_eq!(m.transfer(1_000_000), Duration::from_millis(100));
+        }
+    }
+
+    #[test]
+    fn jitter_is_seed_deterministic_and_mean_calibrated() {
+        let draws = |seed: u64| -> Vec<Duration> {
+            let mut m =
+                NetworkModel::from_config(&cfg(0.0, Duration::from_micros(500)), seed);
+            (0..2000).map(|_| m.transfer(0)).collect()
+        };
+        let a = draws(3);
+        assert_eq!(a, draws(3), "same seed must replay the same jitter");
+        assert_ne!(a, draws(4), "different seeds must differ");
+        let mean_us =
+            a.iter().map(|d| d.as_secs_f64() * 1e6).sum::<f64>() / a.len() as f64;
+        assert!((mean_us - 500.0).abs() < 50.0, "mean jitter {mean_us}µs, want ≈500µs");
+    }
+
+    #[test]
+    fn pure_jitter_model_is_not_free() {
+        let m = NetworkModel::from_config(&cfg(0.0, Duration::from_micros(1)), 0);
+        assert!(!m.is_free(), "jitter without a bandwidth cap still charges time");
+    }
+
+    #[test]
+    fn stats_accumulate_by_leg() {
+        let mut m = NetworkModel::from_config(&cfg(1.0, Duration::ZERO), 0);
+        m.record_broadcast(Duration::from_millis(2), true);
+        m.record_broadcast(Duration::from_micros(30), false);
+        m.record_broadcast(Duration::from_micros(30), false);
+        m.record_return(Duration::from_millis(1));
+        let s = m.stats();
+        assert_eq!(s.bodies, 1);
+        assert_eq!(s.tasks, 2);
+        assert_eq!(s.broadcast(), Duration::from_micros(2060));
+        assert_eq!(s.ret(), Duration::from_millis(1));
+    }
+}

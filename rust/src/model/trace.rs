@@ -1,0 +1,359 @@
+//! Measured-trace loading and replay: per-learner latency traces
+//! recorded on real clusters (EC2, k8s), fed into the sim instead of
+//! the synthetic straggler injector (ROADMAP "trace replay"; cf.
+//! Karakus et al. and Tandon et al., who evaluate coded schemes
+//! against measured delay distributions, not just synthetic tails).
+//!
+//! ## Formats
+//!
+//! **JSONL** (`.jsonl` / `.ndjson`) — one round per line:
+//!
+//! ```text
+//! {"t_s": 0.00, "latency_ms": [3.1, 1.2, 412.0, 2.8]}
+//! {"t_s": 0.25, "latency_ms": [2.9, 1.4, 3.0, 188.5]}
+//! ```
+//!
+//! **CSV** (`.csv`) — optional header, then one round per row with the
+//! timestamp first:
+//!
+//! ```text
+//! t_s,l0,l1,l2,l3
+//! 0.00,3.1,1.2,412.0,2.8
+//! 0.25,2.9,1.4,3.0,188.5
+//! ```
+//!
+//! Validation (all errors name the offending line): timestamps must be
+//! **strictly increasing**, every round must carry the **same learner
+//! count**, and latencies must be finite and non-negative. An empty
+//! trace is an error.
+//!
+//! ## Replay semantics
+//!
+//! [`TraceReplay::plan`] hands the controller one round per
+//! broadcasting iteration, **looping deterministically per seed**: the
+//! starting round is `seed mod rounds`, and the cursor wraps. A run
+//! with more learners than trace columns maps learner `j` to column
+//! `j mod columns` (documented wrap, not an error — the file-level
+//! learner-count check is about internally inconsistent rows).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::disturbance::InjectionPlan;
+use crate::runtime::json::Json;
+
+/// A parsed latency trace: `rounds[r][c]` is the recorded delay (ns)
+/// of trace column `c` in round `r`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    rounds: Vec<Vec<u64>>,
+    columns: usize,
+}
+
+impl Trace {
+    /// Load a trace file, dispatching on extension (`.jsonl`/`.ndjson`
+    /// vs `.csv`).
+    pub fn load(path: impl AsRef<Path>) -> Result<Trace> {
+        let path = path.as_ref();
+        let jsonl = match path.extension().and_then(|e| e.to_str()) {
+            Some("jsonl") | Some("ndjson") => true,
+            Some("csv") => false,
+            other => bail!(
+                "trace file {} has unsupported extension {:?} (want .jsonl, .ndjson or .csv)",
+                path.display(),
+                other.unwrap_or("")
+            ),
+        };
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace file {}", path.display()))?;
+        let parsed = if jsonl { Trace::parse_jsonl(&text) } else { Trace::parse_csv(&text) };
+        parsed.with_context(|| format!("parsing trace file {}", path.display()))
+    }
+
+    /// Parse the JSONL form (see module docs).
+    pub fn parse_jsonl(text: &str) -> Result<Trace> {
+        let mut b = TraceBuilder::default();
+        for (i, line) in text.lines().enumerate() {
+            let lineno = i + 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line)
+                .with_context(|| format!("trace line {lineno}: invalid JSON"))?;
+            let t = v
+                .get("t_s")
+                .and_then(|t| t.as_f64())
+                .with_context(|| format!("trace line {lineno}: missing numeric 't_s'"))?;
+            let lats = v
+                .get("latency_ms")
+                .and_then(|l| l.as_arr().map(<[Json]>::to_vec))
+                .with_context(|| format!("trace line {lineno}: missing 'latency_ms' array"))?;
+            let mut row = Vec::with_capacity(lats.len());
+            for (c, l) in lats.iter().enumerate() {
+                let ms = l.as_f64().with_context(|| {
+                    format!("trace line {lineno}: latency_ms[{c}] is not a number")
+                })?;
+                row.push(latency_ns(ms, lineno, c)?);
+            }
+            b.push(t, row, lineno)?;
+        }
+        b.finish()
+    }
+
+    /// Parse the CSV form (see module docs). A first line whose first
+    /// field is not a number is treated as a header and skipped.
+    pub fn parse_csv(text: &str) -> Result<Trace> {
+        let mut b = TraceBuilder::default();
+        for (i, line) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut fields = line.split(',').map(str::trim);
+            let first = fields.next().expect("split yields at least one field");
+            let t: f64 = match first.parse() {
+                Ok(t) => t,
+                Err(_) if b.is_empty() => continue, // header row
+                Err(_) => bail!("trace line {lineno}: timestamp '{first}' is not a number"),
+            };
+            let mut row = Vec::new();
+            for (c, f) in fields.enumerate() {
+                let ms: f64 = f.parse().map_err(|_| {
+                    anyhow::anyhow!("trace line {lineno}: latency column {c} ('{f}') is not a number")
+                })?;
+                row.push(latency_ns(ms, lineno, c)?);
+            }
+            if row.is_empty() {
+                bail!("trace line {lineno}: a round needs at least one latency column");
+            }
+            b.push(t, row, lineno)?;
+        }
+        b.finish()
+    }
+
+    /// Rounds recorded in the trace.
+    pub fn rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Per-round learner columns.
+    pub fn columns(&self) -> usize {
+        self.columns
+    }
+
+    /// One round's recorded delays (ns per trace column).
+    pub fn round(&self, r: usize) -> &[u64] {
+        &self.rounds[r]
+    }
+}
+
+/// Shared validation for both parsers: strictly increasing timestamps
+/// and a consistent column count.
+#[derive(Default)]
+struct TraceBuilder {
+    rounds: Vec<Vec<u64>>,
+    last_t: Option<f64>,
+    columns: Option<usize>,
+}
+
+impl TraceBuilder {
+    fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+
+    fn push(&mut self, t: f64, row: Vec<u64>, lineno: usize) -> Result<()> {
+        if !t.is_finite() {
+            bail!("trace line {lineno}: timestamp {t} is not finite");
+        }
+        if let Some(last) = self.last_t {
+            if t <= last {
+                bail!(
+                    "trace line {lineno}: timestamps must be strictly increasing \
+                     (t_s={t} after t_s={last})"
+                );
+            }
+        }
+        match self.columns {
+            None => self.columns = Some(row.len()),
+            Some(c) if c != row.len() => bail!(
+                "trace line {lineno}: learner-count mismatch \
+                 ({} latencies, earlier rounds have {c})",
+                row.len()
+            ),
+            Some(_) => {}
+        }
+        self.last_t = Some(t);
+        self.rounds.push(row);
+        Ok(())
+    }
+
+    fn finish(self) -> Result<Trace> {
+        let Some(columns) = self.columns else {
+            bail!("trace contains no rounds");
+        };
+        Ok(Trace { rounds: self.rounds, columns })
+    }
+}
+
+fn latency_ns(ms: f64, lineno: usize, col: usize) -> Result<u64> {
+    if !ms.is_finite() || ms < 0.0 {
+        bail!("trace line {lineno}: latency_ms[{col}] = {ms} must be finite and ≥ 0");
+    }
+    Ok((ms * 1e6).round() as u64)
+}
+
+/// Deterministic looping replay of a [`Trace`] (see module docs).
+#[derive(Debug)]
+pub struct TraceReplay {
+    trace: Trace,
+    cursor: usize,
+    /// Human label for run summaries (usually the file path).
+    source: String,
+}
+
+impl TraceReplay {
+    /// Replay starting at round `seed mod rounds` — different seeds
+    /// sample different phases of the recorded cluster, the same seed
+    /// replays identically.
+    pub fn new(trace: Trace, seed: u64, source: impl Into<String>) -> TraceReplay {
+        let cursor = (seed % trace.rounds() as u64) as usize;
+        TraceReplay { trace, cursor, source: source.into() }
+    }
+
+    pub fn load(path: impl AsRef<Path>, seed: u64) -> Result<TraceReplay> {
+        let source = path.as_ref().display().to_string();
+        Ok(TraceReplay::new(Trace::load(path)?, seed, source))
+    }
+
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// The next round's delays for `n` learners (learner `j` reads
+    /// column `j mod columns`); advances and wraps the cursor.
+    pub fn plan(&mut self, n: usize) -> InjectionPlan {
+        let round = self.trace.round(self.cursor);
+        self.cursor = (self.cursor + 1) % self.trace.rounds();
+        let delay_ns: Vec<u64> = (0..n).map(|j| round[j % round.len()]).collect();
+        let stragglers: Vec<usize> =
+            (0..n).filter(|&j| delay_ns[j] > 0).collect();
+        InjectionPlan { stragglers, delay_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const JSONL: &str = r#"
+{"t_s": 0.0,  "latency_ms": [0.0, 5.5, 250.0]}
+{"t_s": 0.25, "latency_ms": [1.0, 0.0, 0.0]}
+
+{"t_s": 0.5,  "latency_ms": [0.0, 0.0, 900.25]}
+"#;
+
+    #[test]
+    fn jsonl_parses_rounds_and_converts_to_ns() {
+        let t = Trace::parse_jsonl(JSONL).unwrap();
+        assert_eq!(t.rounds(), 3);
+        assert_eq!(t.columns(), 3);
+        assert_eq!(t.round(0), &[0, 5_500_000, 250_000_000]);
+        assert_eq!(t.round(2), &[0, 0, 900_250_000]);
+    }
+
+    #[test]
+    fn csv_parses_with_and_without_header() {
+        let with = "t_s,l0,l1\n0.0,3.5,0\n1.0,0,120\n";
+        let without = "0.0,3.5,0\n1.0,0,120\n";
+        let a = Trace::parse_csv(with).unwrap();
+        let b = Trace::parse_csv(without).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.rounds(), 2);
+        assert_eq!(a.columns(), 2);
+        assert_eq!(a.round(0), &[3_500_000, 0]);
+        assert_eq!(a.round(1), &[0, 120_000_000]);
+    }
+
+    #[test]
+    fn non_monotone_timestamps_are_rejected_with_the_line() {
+        let bad = "t_s,l0\n0.0,1\n0.0,2\n";
+        let err = Trace::parse_csv(bad).unwrap_err().to_string();
+        assert!(err.contains("line 3") && err.contains("strictly increasing"), "{err}");
+        let bad = r#"{"t_s": 2.0, "latency_ms": [1]}
+{"t_s": 1.0, "latency_ms": [1]}"#;
+        let err = Trace::parse_jsonl(bad).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("strictly increasing"), "{err}");
+    }
+
+    #[test]
+    fn learner_count_mismatch_is_rejected_with_the_line() {
+        let bad = "0.0,1,2,3\n1.0,1,2\n";
+        let err = Trace::parse_csv(bad).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("learner-count mismatch"), "{err}");
+        let bad = r#"{"t_s": 0.0, "latency_ms": [1, 2]}
+{"t_s": 1.0, "latency_ms": [1, 2, 3]}"#;
+        let err = Trace::parse_jsonl(bad).unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("learner-count mismatch"), "{err}");
+    }
+
+    #[test]
+    fn malformed_inputs_error_cleanly() {
+        // invalid JSON
+        let err = Trace::parse_jsonl("{not json}").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        // missing fields
+        assert!(Trace::parse_jsonl(r#"{"t_s": 0.0}"#).is_err());
+        assert!(Trace::parse_jsonl(r#"{"latency_ms": [1]}"#).is_err());
+        // non-numeric latency
+        assert!(Trace::parse_jsonl(r#"{"t_s": 0.0, "latency_ms": ["x"]}"#).is_err());
+        let err = Trace::parse_csv("0.0,abc\n").unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("not a number"), "{err}");
+        // negative latency
+        let err = Trace::parse_csv("0.0,-5\n").unwrap_err().to_string();
+        assert!(err.contains("≥ 0"), "{err}");
+        // mid-file garbage timestamp (header only allowed first)
+        assert!(Trace::parse_csv("0.0,1\nxx,2\n").is_err());
+        // empty rounds
+        assert!(Trace::parse_csv("t_s,l0\n").is_err());
+        assert!(Trace::parse_jsonl("\n\n").is_err());
+        assert!(Trace::parse_csv("0.0\n").is_err(), "a round with no latencies");
+    }
+
+    #[test]
+    fn replay_loops_deterministically_per_seed() {
+        let trace = Trace::parse_jsonl(JSONL).unwrap();
+        let mut r = TraceReplay::new(trace.clone(), 0, "test");
+        let rounds: Vec<Vec<u64>> = (0..6).map(|_| r.plan(3).delay_ns).collect();
+        assert_eq!(rounds[0], vec![0, 5_500_000, 250_000_000]);
+        assert_eq!(rounds[3], rounds[0], "cursor must wrap");
+        assert_eq!(rounds[4], rounds[1]);
+        // seed offsets the starting round
+        let mut r1 = TraceReplay::new(trace.clone(), 1, "test");
+        assert_eq!(r1.plan(3).delay_ns, vec![1_000_000, 0, 0]);
+        // seed ≥ rounds wraps
+        let mut r4 = TraceReplay::new(trace, 4, "test");
+        assert_eq!(r4.plan(3).delay_ns, vec![1_000_000, 0, 0]);
+    }
+
+    #[test]
+    fn replay_wraps_columns_and_reports_stragglers() {
+        let trace = Trace::parse_csv("0.0,10,0\n").unwrap();
+        let mut r = TraceReplay::new(trace, 0, "test");
+        let plan = r.plan(5);
+        assert_eq!(plan.delay_ns, vec![10_000_000, 0, 10_000_000, 0, 10_000_000]);
+        assert_eq!(plan.stragglers, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn load_rejects_unknown_extensions_and_missing_files() {
+        let err = Trace::load("trace.parquet").unwrap_err().to_string();
+        assert!(err.contains("unsupported extension"), "{err}");
+        assert!(Trace::load("/nonexistent/trace.csv").is_err());
+    }
+}

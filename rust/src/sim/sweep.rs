@@ -37,7 +37,8 @@ use crate::coding::{Code, CodeParams, Scheme};
 use crate::config::{Backend, DelayDist, TimeMode, TrainConfig};
 use crate::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
 use crate::metrics::table::Table;
-use crate::metrics::RunLog;
+use crate::metrics::{RunLog, Stats};
+use crate::model::NetStats;
 
 /// A sweep grid: the cross product of `schemes` × `ks`, run on top of
 /// `base` (whose `scheme`/`straggler.k`/`straggler.delay` are
@@ -112,8 +113,29 @@ pub struct SweepCell {
     /// Decode-plan cache counters from the cell's controller: one miss
     /// per *distinct* erasure pattern, hits for every repeat.
     pub decode_plan: PlanCacheStats,
+    /// Network-model transfer telemetry (zero under the default free
+    /// model). The totals cover exactly the broadcasting (non-warmup)
+    /// iterations, so `net.broadcast() / measured_iters` is the
+    /// per-iteration broadcast transfer.
+    pub net: NetStats,
+    /// Per-iteration training-time statistics over the non-warmup
+    /// iterations (seconds) — mergeable across cells via
+    /// [`Stats::merge`] for grid-level summaries
+    /// ([`grid_iter_stats`]).
+    pub iter_stats: Stats,
     /// Wall-clock spent executing the cell (not simulated time).
     pub wall: Duration,
+}
+
+/// Grid-level per-iteration statistics: every cell's [`Stats`] merged
+/// with the parallel-Welford [`Stats::merge`] — identical to pushing
+/// all iterations into one accumulator, without re-walking the logs.
+pub fn grid_iter_stats(cells: &[SweepCell]) -> Stats {
+    let mut all = Stats::new();
+    for c in cells {
+        all.merge(&c.iter_stats);
+    }
+    all
 }
 
 /// Per-scheme seed derived from the experiment seed (splitmix64
@@ -197,8 +219,13 @@ fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) ->
     let wall_t = std::time::Instant::now();
     let mut cfg = sweep.base.clone();
     cfg.scheme = scheme;
-    cfg.straggler.k = k;
-    cfg.straggler.delay = sweep.delay;
+    // A trace-replay sweep's disturbance comes from the recorded
+    // trace, not the synthetic injector (the combination is rejected
+    // by `TrainConfig::validate`); such sweeps run with `ks = [0]`.
+    if cfg.trace.is_none() {
+        cfg.straggler.k = k;
+        cfg.straggler.delay = sweep.delay;
+    }
     cfg.seed = info.seed;
     let factory = backend_factory(&cfg, sweep.artifacts_dir.clone(), &sweep.spec);
     let pool = spawn_pool(&cfg, factory)?;
@@ -207,6 +234,11 @@ fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) ->
     ctrl.train().with_context(|| format!("training cell {scheme} k={k}"))?;
     let nw = mean_non_warmup(&ctrl.log);
     let decode_plan = ctrl.decode_plan_stats();
+    let net = ctrl.net_stats().unwrap_or_default();
+    let mut iter_stats = Stats::new();
+    for r in ctrl.log.records.iter().filter(|r| r.decode_method != "warmup") {
+        iter_stats.push(r.timing.total.as_secs_f64());
+    }
     ctrl.shutdown();
     Ok(SweepCell {
         scheme,
@@ -219,6 +251,8 @@ fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) ->
         redundancy: info.redundancy,
         tolerance: info.tolerance,
         decode_plan,
+        net,
+        iter_stats,
         wall: wall_t.elapsed(),
     })
 }
@@ -351,12 +385,12 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
     writeln!(
         f,
         "scheme,k,mean_iter_s,mean_wait_s,total_s,wait_s,iters,redundancy,tolerance,\
-         decode_plan_hits,decode_plan_misses"
+         decode_plan_hits,decode_plan_misses,net_broadcast_s,net_return_s"
     )?;
     for c in cells {
         writeln!(
             f,
-            "{},{},{:.6},{:.6},{:.9},{:.9},{},{:.3},{},{},{}",
+            "{},{},{:.6},{:.6},{:.9},{:.9},{},{:.3},{},{},{},{:.9},{:.9}",
             c.scheme.name(),
             c.k,
             c.mean_iter.as_secs_f64(),
@@ -368,6 +402,8 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
             c.tolerance,
             c.decode_plan.hits,
             c.decode_plan.misses,
+            c.net.broadcast().as_secs_f64(),
+            c.net.ret().as_secs_f64(),
         )?;
     }
     f.flush()
@@ -377,11 +413,22 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
 /// `BENCH_scale.json`; plain enum names and finite numbers only, so no
 /// string escaping is needed).
 fn cell_json(c: &SweepCell) -> String {
+    // Per-iteration network legs: the totals cover exactly the
+    // broadcasting (non-warmup) iterations.
+    let per_iter = |total: Duration| -> f64 {
+        if c.measured_iters == 0 {
+            0.0
+        } else {
+            total.as_secs_f64() / c.measured_iters as f64
+        }
+    };
     format!(
         "{{\"scheme\": \"{}\", \"k\": {}, \"mean_iter_s\": {:.9}, \
          \"mean_wait_s\": {:.9}, \"total_s\": {:.9}, \"wait_s\": {:.9}, \"iters\": {}, \
          \"redundancy\": {:.6}, \"tolerance\": {}, \"decode_plan_hits\": {}, \
-         \"decode_plan_misses\": {}, \"wall_s\": {:.6}}}",
+         \"decode_plan_misses\": {}, \"net_broadcast_s\": {:.9}, \"net_return_s\": {:.9}, \
+         \"net_broadcast_per_iter_s\": {:.9}, \"net_return_per_iter_s\": {:.9}, \
+         \"net_tasks\": {}, \"net_bodies\": {}, \"wall_s\": {:.6}}}",
         c.scheme.name(),
         c.k,
         c.mean_iter.as_secs_f64(),
@@ -393,6 +440,12 @@ fn cell_json(c: &SweepCell) -> String {
         c.tolerance,
         c.decode_plan.hits,
         c.decode_plan.misses,
+        c.net.broadcast().as_secs_f64(),
+        c.net.ret().as_secs_f64(),
+        per_iter(c.net.broadcast()),
+        per_iter(c.net.ret()),
+        c.net.tasks,
+        c.net.bodies,
         c.wall.as_secs_f64(),
     )
 }
@@ -424,6 +477,152 @@ pub fn write_bench_json(
     for (i, c) in cells.iter().enumerate() {
         let comma = if i + 1 == cells.len() { "" } else { "," };
         writeln!(f, "    {}{comma}", cell_json(c))?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    f.flush()
+}
+
+// ------------------------------------------------------------------
+// System-model sweeps: bandwidth axis + BENCH_model.json
+// ------------------------------------------------------------------
+
+/// One bandwidth point of a system-model sweep: a full schemes × k
+/// grid run with `base.net.bandwidth_mbps` overridden.
+pub struct ModelSweepPoint {
+    /// Link bandwidth in MB/s; 0 = infinite.
+    pub bandwidth_mbps: f64,
+    pub cells: Vec<SweepCell>,
+    /// Wall-clock spent on this point.
+    pub wall: Duration,
+}
+
+/// The bandwidth sweep axis (`--bandwidth-list`): run the grid once
+/// per bandwidth. Everything else of the base config (trace, jitter,
+/// compute model, scheme seeds) is shared, so the points isolate the
+/// bandwidth sensitivity — coded schemes' N·header + 1·body broadcast
+/// vs uncoded's smaller bodies.
+pub fn run_bandwidth_sweep(
+    sweep: &SweepConfig,
+    bandwidths: &[f64],
+) -> Result<Vec<ModelSweepPoint>> {
+    bandwidths
+        .iter()
+        .map(|&bw| {
+            let wall_t = std::time::Instant::now();
+            let mut base = sweep.base.clone();
+            base.net.bandwidth_mbps = bw;
+            let cells = run_sweep(&SweepConfig {
+                base,
+                spec: sweep.spec.clone(),
+                schemes: sweep.schemes.clone(),
+                ks: sweep.ks.clone(),
+                delay: sweep.delay,
+                artifacts_dir: sweep.artifacts_dir.clone(),
+            })
+            .with_context(|| format!("bandwidth point {bw} MB/s"))?;
+            Ok(ModelSweepPoint { bandwidth_mbps: bw, cells, wall: wall_t.elapsed() })
+        })
+        .collect()
+}
+
+fn bandwidth_label(mbps: f64) -> String {
+    if mbps == 0.0 { "bw=inf".into() } else { format!("bw={mbps}MB/s") }
+}
+
+/// Bandwidth-sensitivity table: mean iteration time per (scheme, k)
+/// row across the bandwidth points.
+pub fn bandwidth_table(points: &[ModelSweepPoint]) -> String {
+    let mut headers: Vec<String> = vec!["scheme".into(), "k".into()];
+    headers.extend(points.iter().map(|p| bandwidth_label(p.bandwidth_mbps)));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    let Some(first) = points.first() else {
+        return table.render();
+    };
+    for cell in &first.cells {
+        let mut row = vec![cell.scheme.name().to_string(), cell.k.to_string()];
+        for p in points {
+            match p.cells.iter().find(|c| c.scheme == cell.scheme && c.k == cell.k) {
+                Some(c) => row.push(format!("{:.1}ms", c.mean_iter.as_secs_f64() * 1e3)),
+                None => row.push("-".into()),
+            }
+        }
+        table.row(&row);
+    }
+    table.render()
+}
+
+/// Minimal JSON string escaping (paths can carry anything).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Machine-readable system-model record (`BENCH_model.json`): the
+/// active model knobs, grid-level per-iteration statistics (every
+/// cell's [`Stats`] merged via [`Stats::merge`]), and per-bandwidth
+/// cell lists with the network transfer legs — written by `sim-sweep`
+/// whenever a system-model knob is active.
+pub fn write_model_json(
+    points: &[ModelSweepPoint],
+    base: &TrainConfig,
+    wall: Duration,
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let all_cells: Vec<&SweepCell> = points.iter().flat_map(|p| p.cells.iter()).collect();
+    let mut iter_stats = Stats::new();
+    for c in &all_cells {
+        iter_stats.merge(&c.iter_stats);
+    }
+    let simulated: Duration = points.iter().map(|p| simulated_total(&p.cells)).sum();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"model_sweep\",")?;
+    writeln!(f, "  \"wall_s\": {:.6},", wall.as_secs_f64())?;
+    writeln!(f, "  \"simulated_s\": {:.6},", simulated.as_secs_f64())?;
+    match &base.trace {
+        Some(p) => writeln!(f, "  \"trace\": {},", json_str(&p.display().to_string()))?,
+        None => writeln!(f, "  \"trace\": null,")?,
+    }
+    writeln!(f, "  \"net_jitter_us\": {},", base.net.jitter.as_micros())?;
+    writeln!(f, "  \"compute_model\": \"{}\",", base.compute_model.name())?;
+    if iter_stats.count() > 0 {
+        writeln!(f, "  \"iter_mean_s\": {:.9},", iter_stats.mean())?;
+        writeln!(f, "  \"iter_std_s\": {:.9},", iter_stats.std())?;
+        writeln!(f, "  \"iter_min_s\": {:.9},", iter_stats.min())?;
+        writeln!(f, "  \"iter_max_s\": {:.9},", iter_stats.max())?;
+    }
+    writeln!(f, "  \"iters\": {},", iter_stats.count())?;
+    writeln!(f, "  \"points\": [")?;
+    for (i, p) in points.iter().enumerate() {
+        let comma = if i + 1 == points.len() { "" } else { "," };
+        writeln!(f, "    {{")?;
+        writeln!(f, "      \"bandwidth_mbps\": {},", p.bandwidth_mbps)?;
+        writeln!(f, "      \"wall_s\": {:.6},", p.wall.as_secs_f64())?;
+        writeln!(f, "      \"cells\": [")?;
+        for (j, c) in p.cells.iter().enumerate() {
+            let ccomma = if j + 1 == p.cells.len() { "" } else { "," };
+            writeln!(f, "        {}{ccomma}", cell_json(c))?;
+        }
+        writeln!(f, "      ]")?;
+        writeln!(f, "    }}{comma}")?;
     }
     writeln!(f, "  ]")?;
     writeln!(f, "}}")?;
@@ -641,6 +840,10 @@ mod tests {
     }
 
     fn cell(scheme: Scheme, k: usize) -> SweepCell {
+        let mut iter_stats = Stats::new();
+        for _ in 0..5 {
+            iter_stats.push(0.012);
+        }
         SweepCell {
             scheme,
             k,
@@ -652,6 +855,8 @@ mod tests {
             redundancy: 2.5,
             tolerance: 3,
             decode_plan: PlanCacheStats { hits: 4, misses: 1, entries: 1 },
+            net: NetStats::default(),
+            iter_stats,
             wall: Duration::from_millis(3),
         }
     }
@@ -810,6 +1015,100 @@ mod tests {
         assert_eq!(pts.len(), 4);
         assert!(pts.iter().any(|p| p.get("dist").unwrap().as_str().unwrap() == "pareto"));
         assert_eq!(pts[0].get("cells").unwrap().as_arr().unwrap().len(), 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The once-dead `Stats::merge` path, now wired: grid-level
+    /// per-iteration statistics are per-cell [`Stats`] merged across
+    /// cells — identical to one sequential accumulator.
+    #[test]
+    fn grid_iter_stats_merges_cells_exactly() {
+        let mut a = cell(Scheme::Mds, 0);
+        a.iter_stats = Stats::new();
+        for x in [0.010, 0.014, 0.012] {
+            a.iter_stats.push(x);
+        }
+        let mut b = cell(Scheme::Ldpc, 2);
+        b.iter_stats = Stats::new();
+        for x in [0.030, 0.050] {
+            b.iter_stats.push(x);
+        }
+        let merged = grid_iter_stats(&[a, b]);
+        let mut seq = Stats::new();
+        for x in [0.010, 0.014, 0.012, 0.030, 0.050] {
+            seq.push(x);
+        }
+        assert_eq!(merged.count(), seq.count());
+        assert!((merged.mean() - seq.mean()).abs() < 1e-12);
+        assert!((merged.variance() - seq.variance()).abs() < 1e-12);
+        assert_eq!(merged.min(), 0.010);
+        assert_eq!(merged.max(), 0.050);
+        // a real sweep populates the per-cell stats from its log
+        let cells = run_sweep(&SweepConfig {
+            base: base(),
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Mds],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        })
+        .unwrap();
+        assert_eq!(cells[0].iter_stats.count(), 3, "one sample per measured iteration");
+        let want = cells[0].total.as_secs_f64() / 3.0;
+        assert!((grid_iter_stats(&cells).mean() - want).abs() < 1e-9);
+    }
+
+    /// The bandwidth axis: a finite-bandwidth point must be slower
+    /// than the infinite-bandwidth point of the same grid, record
+    /// nonzero transfer legs, and BENCH_model.json must parse with the
+    /// per-cell network fields.
+    #[test]
+    fn bandwidth_sweep_charges_transfer_and_writes_model_json() {
+        let sweep = SweepConfig {
+            base: base(),
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Uncoded, Scheme::Mds],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        };
+        // 0 = infinite; 0.5 MB/s makes the ~KB-scale synthetic bodies
+        // clearly visible in virtual time.
+        let points = run_bandwidth_sweep(&sweep, &[0.0, 0.5]).unwrap();
+        assert_eq!(points.len(), 2);
+        let (free, slow) = (&points[0], &points[1]);
+        for (f, s) in free.cells.iter().zip(slow.cells.iter()) {
+            assert_eq!(f.net, NetStats::default(), "infinite bandwidth must charge nothing");
+            assert!(s.net.broadcast_ns > 0, "{}/{}: broadcast leg must be charged", s.scheme, s.k);
+            assert!(s.net.return_ns > 0, "{}/{}: return leg must be charged", s.scheme, s.k);
+            assert_eq!(s.net.bodies as usize, s.measured_iters, "one body per broadcast");
+            assert!(
+                s.mean_iter > f.mean_iter,
+                "{}/{}: finite bandwidth must cost time ({:?} vs {:?})",
+                s.scheme,
+                s.k,
+                s.mean_iter,
+                f.mean_iter
+            );
+        }
+        let table = bandwidth_table(&points);
+        assert!(table.contains("bw=inf") && table.contains("bw=0.5MB/s"), "{table}");
+
+        let dir = std::env::temp_dir().join("coded_marl_model_json_test");
+        let path = dir.join("BENCH_model.json");
+        write_model_json(&points, &sweep.base, Duration::from_millis(5), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "model_sweep");
+        assert_eq!(json.get("compute_model").unwrap().as_str().unwrap(), "fixed");
+        assert!(json.get("iter_mean_s").unwrap().as_f64().unwrap() > 0.0);
+        let pts = json.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        let slow_cells = pts[1].get("cells").unwrap().as_arr().unwrap();
+        for c in slow_cells {
+            assert!(c.get("net_broadcast_per_iter_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(c.get("net_return_per_iter_s").unwrap().as_f64().unwrap() > 0.0);
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

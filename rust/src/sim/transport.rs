@@ -19,6 +19,26 @@
 //! the controller the [`LearnerMsg::Result`] — so a sweep with
 //! 250 ms injected delays costs 250 virtual ms and ~zero wall ms.
 //!
+//! ## System model (PR 5)
+//!
+//! Compute and network time come from a pluggable
+//! [`crate::model::SystemModel`]:
+//!
+//! * the per-update cost is a [`crate::model::ComputeModel`] — the
+//!   fixed `mock_compute` constant (default, bit-identical to the old
+//!   hardcoded path) or an empirical calibrated distribution;
+//! * message transfer runs through a [`crate::model::NetworkModel`]:
+//!   a Task delivery costs the **shared body once per broadcast**
+//!   (PR 4's split frame — every learner of one iteration waits the
+//!   same body transfer, as over a serialize-once uplink) plus its
+//!   small per-learner header, and the result return costs the Result
+//!   frame (recorded as traffic only when actually delivered — a
+//!   cancelled result was never sent by the real learner). With the
+//!   default free network nothing is charged and no RNG is consumed. Payload sizes come from the exact wire-length
+//!   queries (`TaskBody::wire_len` & friends), never from forcing an
+//!   encode. Acks stay free: they are tiny and charging them would
+//!   only delay cancellations the real transport performs eagerly.
+//!
 //! An [`CtrlMsg::Ack`] cancels the acknowledged iteration's still
 //! pending results (generation counters; lazy heap deletion), exactly
 //! like the threaded learner aborting its delay wait when the
@@ -37,15 +57,16 @@ use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::clock::{Clock, ClockRef, VirtualClock};
 use crate::coordinator::backend::{LearnerBackend, MockBackend};
 use crate::linalg::kernels;
 use crate::linalg::pool::BufPool;
-use crate::marl::buffer::Minibatch;
 use crate::marl::ModelDims;
-use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
+use crate::model::{NetStats, SystemModel};
+use crate::transport::msg::{result_wire_len, task_header_wire_len};
+use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
 
 /// A scheduled learner reply. Orders as a **min**-heap entry on
 /// (virtual time, send sequence) under `BinaryHeap`'s max-heap.
@@ -54,6 +75,11 @@ struct Event {
     seq: u64,
     learner: usize,
     generation: u64,
+    /// Modeled return-leg transfer inside `at`, recorded into the
+    /// network stats only if the result is actually **delivered** — a
+    /// cancelled (acked/superseded) result was never sent by the real
+    /// learner, so its frame must not count as traffic.
+    net_out: Duration,
     msg: LearnerMsg,
 }
 
@@ -85,9 +111,6 @@ struct SimLearner {
     /// permanent erasure, mirroring the threaded pool's dead-learner
     /// semantics (tasks are swallowed, no result ever arrives).
     backend: Option<Box<dyn LearnerBackend>>,
-    /// Virtual time charged per agent update (the threaded mock's
-    /// `mock_compute` sleep, made instantaneous).
-    compute: Duration,
     /// Bumped to invalidate this learner's scheduled event (on a new
     /// Task or a covering Ack).
     generation: u64,
@@ -107,6 +130,14 @@ pub struct SimTransport {
     /// lazily popped); assignment rows return the moment their task is
     /// absorbed. Steady state: zero per-iteration heap allocation.
     pool: Arc<BufPool>,
+    /// Compute-cost + network-transfer models (module docs §System
+    /// model). Default: fixed compute, free network.
+    model: SystemModel,
+    /// The iteration whose shared-body transfer has been charged, and
+    /// its memoized transfer time — every learner of one broadcast
+    /// waits the same body leg.
+    net_iter: Option<u64>,
+    net_body_time: Duration,
 }
 
 impl SimTransport {
@@ -125,13 +156,28 @@ impl SimTransport {
     /// instrumented or failing factories behave identically in virtual
     /// time. A factory error makes that learner a permanent erasure
     /// (logged, not fatal), exactly like a learner thread that dies at
-    /// startup.
+    /// startup — except when **every** backend fails, which is a
+    /// backend/artifacts misconfiguration (e.g. PJRT without
+    /// artifacts) and errors up front instead of masquerading as N
+    /// stragglers that later trip the collect timeout.
     pub fn from_factory(
         n: usize,
         factory: &crate::coordinator::backend::BackendFactory,
         compute: Duration,
-    ) -> SimTransport {
-        let backends = (0..n)
+    ) -> Result<SimTransport> {
+        SimTransport::from_factory_with_model(n, factory, SystemModel::fixed(compute))
+    }
+
+    /// [`SimTransport::from_factory`] with an explicit
+    /// [`SystemModel`] — the path [`crate::coordinator::spawn_pool`]
+    /// takes when the config asks for calibrated compute or a modeled
+    /// network.
+    pub fn from_factory_with_model(
+        n: usize,
+        factory: &crate::coordinator::backend::BackendFactory,
+        model: SystemModel,
+    ) -> Result<SimTransport> {
+        let backends: Vec<Option<Box<dyn LearnerBackend>>> = (0..n)
             .map(|id| match factory(id as u32) {
                 Ok(b) => Some(b),
                 Err(e) => {
@@ -143,7 +189,14 @@ impl SimTransport {
                 }
             })
             .collect();
-        SimTransport::assemble(backends, compute)
+        if n > 0 && backends.iter().all(|b| b.is_none()) {
+            bail!(
+                "all {n} simulated learner backends failed to construct — this is a \
+                 backend/artifacts misconfiguration (see the errors above), not a \
+                 straggler scenario"
+            );
+        }
+        Ok(SimTransport::assemble(backends, model))
     }
 
     /// Custom backends. Their wall time is modeled by `compute`.
@@ -151,12 +204,20 @@ impl SimTransport {
         backends: Vec<Box<dyn LearnerBackend>>,
         compute: Duration,
     ) -> SimTransport {
-        SimTransport::assemble(backends.into_iter().map(Some).collect(), compute)
+        SimTransport::with_backends_and_model(backends, SystemModel::fixed(compute))
+    }
+
+    /// Custom backends with an explicit [`SystemModel`].
+    pub fn with_backends_and_model(
+        backends: Vec<Box<dyn LearnerBackend>>,
+        model: SystemModel,
+    ) -> SimTransport {
+        SimTransport::assemble(backends.into_iter().map(Some).collect(), model)
     }
 
     fn assemble(
         mut backends: Vec<Option<Box<dyn LearnerBackend>>>,
-        compute: Duration,
+        model: SystemModel,
     ) -> SimTransport {
         // Redirect every backend's *emulated* time spending onto a
         // detached sink clock: its sleeps become instant and wall-free
@@ -169,7 +230,7 @@ impl SimTransport {
         }
         let learners: Vec<SimLearner> = backends
             .into_iter()
-            .map(|backend| SimLearner { backend, compute, generation: 0, pending_iter: None })
+            .map(|backend| SimLearner { backend, generation: 0, pending_iter: None })
             .collect();
         // Each learner carries at most one live event plus a bounded
         // number of lazily-deleted stale ones; pre-sizing avoids heap
@@ -179,7 +240,16 @@ impl SimTransport {
         // rows + up to 2N result vectors in flight (pending + just
         // recycled) + M ≤ N flat parameter vectors from the controller.
         let pool = Arc::new(BufPool::with_shelf_cap(3 * learners.len() + 8));
-        SimTransport { clock: VirtualClock::shared(), learners, events, seq: 0, pool }
+        SimTransport {
+            clock: VirtualClock::shared(),
+            learners,
+            events,
+            seq: 0,
+            pool,
+            model,
+            net_iter: None,
+            net_body_time: Duration::ZERO,
+        }
     }
 
     /// The transport's virtual clock (also returned, type-erased, by
@@ -188,26 +258,67 @@ impl SimTransport {
         Arc::clone(&self.clock)
     }
 
+    /// Broadcast-leg network charge for one Task: the shared body once
+    /// per iteration (memoized — every learner of the broadcast waits
+    /// the same body transfer) plus this learner's small header. Free
+    /// network: zero, no RNG, no size query.
+    fn charge_broadcast(&mut self, iter: u64, body: &TaskBody, row_len: usize) -> Duration {
+        if self.model.network.is_free() {
+            return Duration::ZERO;
+        }
+        let body_time = if self.net_iter == Some(iter) {
+            self.net_body_time
+        } else {
+            let t = self.model.network.transfer(body.wire_len());
+            self.model.network.record_broadcast(t, true);
+            self.net_iter = Some(iter);
+            self.net_body_time = t;
+            t
+        };
+        let header = self.model.network.transfer(task_header_wire_len(row_len));
+        self.model.network.record_broadcast(header, false);
+        body_time + header
+    }
+
+    /// Return-leg transfer time for one Result frame of `p` floats.
+    /// Drawn (jitter) at scheduling time so RNG order is the
+    /// deterministic send order, but **recorded** into the stats only
+    /// on delivery (see [`Event::net_out`]).
+    fn return_leg(&mut self, p: usize) -> Duration {
+        if self.model.network.is_free() {
+            return Duration::ZERO;
+        }
+        self.model.network.transfer(result_wire_len(p))
+    }
+
     /// Run the learner's coded update now, schedule its result at the
-    /// modeled completion time. The accumulator comes from the shared
-    /// [`BufPool`] (recycled from previously decoded results), and the
-    /// absorbed assignment row goes straight back to it.
+    /// modeled completion time
+    ///
+    /// ```text
+    /// t_ready = now + net_in + compute + injected_delay + net_out
+    /// ```
+    ///
+    /// (network legs zero under the default free model). The
+    /// accumulator comes from the shared [`BufPool`] (recycled from
+    /// previously decoded results), and the absorbed assignment row
+    /// goes straight back to it.
     fn handle_task(
         &mut self,
         j: usize,
         iter: u64,
         row: Vec<f32>,
-        agent_params: &[Vec<f32>],
-        minibatch: &Minibatch,
+        body: &TaskBody,
         straggler_delay_ns: u64,
     ) -> Result<()> {
         let now = self.clock.now();
         self.learners[j].generation += 1; // a new task supersedes any pending result
+        let net_in = self.charge_broadcast(iter, body, row.len());
         if self.learners[j].backend.is_none() {
             self.pool.put(row);
             return Ok(()); // permanent erasure: the task is swallowed
         }
-        let p = agent_params.first().map(|v| v.len()).unwrap_or(0);
+        let p = body.agent_params.first().map(|v| v.len()).unwrap_or(0);
+        let net_out = self.return_leg(p);
         let mut y = self.pool.take_zeroed(p);
         let learner = &mut self.learners[j];
         let backend = learner.backend.as_mut().expect("checked above");
@@ -216,12 +327,12 @@ impl SimTransport {
             if c == 0.0 {
                 continue;
             }
-            let theta_i = backend.update_agent(i, agent_params, minibatch)?;
+            let theta_i = backend.update_agent(i, &body.agent_params, &body.minibatch)?;
             kernels::axpy(&mut y, c, &theta_i);
             updates += 1;
         }
-        let compute = learner.compute * updates;
-        let at = now + compute + Duration::from_nanos(straggler_delay_ns);
+        let compute = self.model.compute.cost(updates);
+        let at = now + net_in + compute + Duration::from_nanos(straggler_delay_ns) + net_out;
         learner.pending_iter = Some(iter);
         let generation = learner.generation;
         self.pool.put(row);
@@ -231,6 +342,7 @@ impl SimTransport {
             seq: self.seq,
             learner: j,
             generation,
+            net_out,
             msg: LearnerMsg::Result {
                 iter,
                 learner_id: j as u32,
@@ -259,14 +371,9 @@ impl ControllerTransport for SimTransport {
 
     fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
         match msg {
-            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => self.handle_task(
-                learner,
-                iter,
-                row,
-                &body.agent_params,
-                &body.minibatch,
-                straggler_delay_ns,
-            ),
+            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => {
+                self.handle_task(learner, iter, row, &body, straggler_delay_ns)
+            }
             CtrlMsg::Ack { iter } => {
                 self.handle_ack(learner, iter);
                 Ok(())
@@ -297,6 +404,10 @@ impl ControllerTransport for SimTransport {
             let ev = self.events.pop().expect("peeked event");
             self.clock.advance_to(ev.at);
             self.learners[ev.learner].pending_iter = None;
+            // Delivered: NOW the return frame counts as traffic.
+            if !ev.net_out.is_zero() {
+                self.model.network.record_return(ev.net_out);
+            }
             return Ok(Some(ev.msg));
         }
         // Nothing in flight: the wait can only end by timeout, so the
@@ -316,11 +427,16 @@ impl ControllerTransport for SimTransport {
     fn buf_pool(&self) -> Option<Arc<BufPool>> {
         Some(Arc::clone(&self.pool))
     }
+
+    fn net_stats(&self) -> Option<NetStats> {
+        Some(self.model.network.stats())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::marl::buffer::Minibatch;
     use crate::marl::AgentParams;
     use crate::rng::Pcg32;
 
@@ -483,7 +599,7 @@ mod tests {
             }
             Ok(Box::new(MockBackend::new(d, Duration::ZERO)) as Box<dyn LearnerBackend>)
         });
-        let mut sim = SimTransport::from_factory(2, &factory, Duration::from_millis(1));
+        let mut sim = SimTransport::from_factory(2, &factory, Duration::from_millis(1)).unwrap();
         let mut rng = Pcg32::seeded(7);
         for j in 0..2 {
             let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
@@ -496,6 +612,24 @@ mod tests {
         // …and the dead one never does
         let quiet = sim.recv_timeout(Duration::from_millis(50)).unwrap();
         assert!(quiet.is_none(), "dead learner produced a result: {quiet:?}");
+    }
+
+    /// A misconfigured backend (e.g. PJRT without artifacts) fails for
+    /// EVERY learner — that must be a construction error, not N
+    /// permanent erasures that later surface as a misleading collect
+    /// timeout.
+    #[test]
+    fn all_backends_failing_is_a_construction_error_not_n_stragglers() {
+        use crate::coordinator::backend::BackendFactory;
+        let factory: Arc<BackendFactory> =
+            Arc::new(|_id: u32| -> Result<Box<dyn LearnerBackend>> {
+                anyhow::bail!("injected: backend cannot load")
+            });
+        let err = SimTransport::from_factory(3, &factory, Duration::ZERO).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("all 3 simulated learner backends failed"),
+            "{err:#}"
+        );
     }
 
     #[test]
@@ -525,6 +659,92 @@ mod tests {
             pool.stats().resident > resident_before,
             "cancelled result must be recycled, not dropped"
         );
+    }
+
+    /// Finite bandwidth, zero jitter: delivery time is exactly
+    /// body/bw (once per broadcast) + header/bw + compute + result/bw,
+    /// with the payload sizes taken from the wire-length queries.
+    #[test]
+    fn finite_bandwidth_charges_split_frame_transfer_exactly() {
+        use crate::config::NetConfig;
+        use crate::model::{ComputeModel, NetworkModel};
+        let d = dims();
+        let backends: Vec<Box<dyn LearnerBackend>> = (0..2)
+            .map(|_| Box::new(MockBackend::new(d, Duration::ZERO)) as Box<dyn LearnerBackend>)
+            .collect();
+        // 1 MB/s ⇒ 1 byte costs exactly 1 µs.
+        let net = NetConfig { bandwidth_mbps: 1.0, jitter: Duration::ZERO };
+        let model = SystemModel {
+            compute: ComputeModel::fixed(Duration::from_millis(2)),
+            network: NetworkModel::from_config(&net, 0),
+        };
+        let mut sim = SimTransport::with_backends_and_model(backends, model);
+        let mut rng = Pcg32::seeded(11);
+        let (msg, params, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        let CtrlMsg::Task { body, .. } = &msg else { unreachable!() };
+        let body_us = body.wire_len() as u64; // 1 byte = 1 µs
+        let header_us = task_header_wire_len(3) as u64;
+        let result_us = result_wire_len(params[0].len()) as u64;
+        // Same body Arc to the second learner, as the controller sends it.
+        let msg2 = msg.clone();
+        sim.send_to(0, msg).unwrap();
+        sim.send_to(1, msg2).unwrap();
+        let expect = Duration::from_micros(body_us + header_us + result_us)
+            + Duration::from_millis(2); // one update
+        let got = sim.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = got else { panic!() };
+        assert_eq!(learner_id, 0, "equal times pop in send order");
+        assert_eq!(sim.virtual_clock().now(), expect, "exact split-frame transfer charge");
+        // Learner 1 shares the SAME body transfer (charged once), so it
+        // lands at the same instant, not one body-time later.
+        let got = sim.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = got else { panic!() };
+        assert_eq!(learner_id, 1);
+        assert_eq!(sim.virtual_clock().now(), expect);
+        let stats = sim.net_stats().unwrap();
+        assert_eq!(stats.bodies, 1, "shared body charged once per broadcast");
+        assert_eq!(stats.tasks, 2);
+        assert_eq!(stats.broadcast(), Duration::from_micros(body_us + 2 * header_us));
+        assert_eq!(stats.ret(), Duration::from_micros(2 * result_us));
+    }
+
+    /// A cancelled (acked) result was never sent by the real learner:
+    /// its return leg must not count as traffic, while the broadcast
+    /// leg (which the controller really did send) must.
+    #[test]
+    fn cancelled_result_return_leg_is_not_recorded() {
+        use crate::config::NetConfig;
+        use crate::model::{ComputeModel, NetworkModel};
+        let d = dims();
+        let backends: Vec<Box<dyn LearnerBackend>> =
+            vec![Box::new(MockBackend::new(d, Duration::ZERO))];
+        let net = NetConfig { bandwidth_mbps: 1.0, jitter: Duration::ZERO };
+        let model = SystemModel {
+            compute: ComputeModel::fixed(Duration::from_millis(2)),
+            network: NetworkModel::from_config(&net, 0),
+        };
+        let mut sim = SimTransport::with_backends_and_model(backends, model);
+        let mut rng = Pcg32::seeded(13);
+        let (msg, _, _) = task(4, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        sim.send_to(0, CtrlMsg::Ack { iter: 4 }).unwrap();
+        assert!(sim.recv_timeout(Duration::from_secs(1)).unwrap().is_none());
+        let stats = sim.net_stats().unwrap();
+        assert!(stats.broadcast_ns > 0, "the broadcast really was sent");
+        assert_eq!(stats.return_ns, 0, "a cancelled result is not return traffic");
+    }
+
+    /// The default model is a free network: nothing is charged, stats
+    /// stay zero — the bit-identity guarantee of the refactor.
+    #[test]
+    fn free_network_charges_nothing() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(2));
+        let mut rng = Pcg32::seeded(12);
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(sim.virtual_clock().now(), Duration::from_millis(2));
+        assert_eq!(sim.net_stats().unwrap(), NetStats::default());
     }
 
     #[test]

@@ -84,6 +84,15 @@ pub trait ControllerTransport {
     fn buf_pool(&self) -> Option<Arc<BufPool>> {
         None
     }
+
+    /// Transfer-time telemetry of the transport's network model, when
+    /// it has one. The sim transport reports its
+    /// [`crate::model::NetworkModel`] counters (broadcast bodies +
+    /// headers in, results out); real transports return None — their
+    /// transfer time is real and already inside the measured phases.
+    fn net_stats(&self) -> Option<crate::model::NetStats> {
+        None
+    }
 }
 
 /// Learner-side endpoint.

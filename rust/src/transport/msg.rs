@@ -61,6 +61,24 @@ impl TaskBody {
         }))
     }
 
+    /// Exact wire length of the body in bytes, computed **without**
+    /// encoding — the payload-size query the network model uses on the
+    /// send path (forcing the multi-MB encode just to measure it would
+    /// defeat the virtual-time fast path). Must equal
+    /// `wire_bytes().len()` exactly (pinned by test).
+    pub fn wire_len(&self) -> usize {
+        let params: usize =
+            self.agent_params.iter().map(|p| 4 + 4 * p.len()).sum();
+        let mb = &self.minibatch;
+        let minibatch = 4 * 4 // batch, m, obs_dim, act_dim
+            + (4 + 4 * mb.obs.len())
+            + (4 + 4 * mb.act.len())
+            + (4 + 4 * mb.rew.len())
+            + (4 + 4 * mb.next_obs.len())
+            + (4 + 4 * mb.done.len());
+        4 + params + minibatch // leading u32 M
+    }
+
     fn read(r: &mut WireReader) -> Result<TaskBody> {
         let m = r.u32()? as usize;
         let mut agent_params = Vec::with_capacity(m);
@@ -137,6 +155,20 @@ pub enum LearnerMsg {
         /// Pure compute time (excludes the injected straggler delay).
         compute_ns: u64,
     },
+}
+
+/// Exact wire length of a Task frame's per-learner header (everything
+/// except the shared body bytes) for an assignment row of length `m`:
+/// tag + iter + delay_ns + row (u32 count + f32 data) + body_len.
+pub fn task_header_wire_len(m: usize) -> usize {
+    1 + 8 + 8 + (4 + 4 * m) + 4
+}
+
+/// Exact wire length of a [`LearnerMsg::Result`] frame for a
+/// parameter vector of length `p`: tag + iter + learner_id +
+/// compute_ns + y (u32 count + f32 data).
+pub fn result_wire_len(p: usize) -> usize {
+    1 + 8 + 4 + 8 + (4 + 4 * p)
 }
 
 const TAG_TASK: u8 = 1;
@@ -374,6 +406,24 @@ mod tests {
         // Memoization: both paths shared one body encoding.
         let first = body.wire_bytes();
         assert!(Arc::ptr_eq(&first, &body.wire_bytes()));
+    }
+
+    /// The send-path size queries must agree byte-for-byte with the
+    /// real encodings — the network model charges transfer time from
+    /// them without ever forcing an encode.
+    #[test]
+    fn wire_len_queries_match_the_encodings_exactly() {
+        let msg = task_msg();
+        let CtrlMsg::Task { row, body, .. } = &msg else { unreachable!() };
+        assert_eq!(body.wire_len(), body.wire_bytes().len());
+        let full = msg.encode().buf.len();
+        assert_eq!(task_header_wire_len(row.len()) + body.wire_len(), full);
+        let result =
+            LearnerMsg::Result { iter: 3, learner_id: 1, y: vec![0.5; 321], compute_ns: 7 };
+        assert_eq!(result_wire_len(321), result.encode().buf.len());
+        // degenerate sizes
+        let empty = LearnerMsg::Result { iter: 0, learner_id: 0, y: vec![], compute_ns: 0 };
+        assert_eq!(result_wire_len(0), empty.encode().buf.len());
     }
 
     #[test]
