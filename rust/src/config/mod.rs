@@ -327,6 +327,12 @@ pub struct TrainConfig {
     pub collect_timeout: std::time::Duration,
     /// Print per-iteration progress lines.
     pub verbose: bool,
+    /// Write a Chrome trace-event file of the run here (`--trace-out`;
+    /// one lane per learner, Perfetto-loadable) plus a JSONL event log
+    /// next to it. `None` (the default) keeps event tracing fully off —
+    /// the run is bit-identical to a build without the obs layer.
+    /// Distinct from `trace`, which *replays* measured delays.
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl TrainConfig {
@@ -362,6 +368,7 @@ impl TrainConfig {
             adaptive: false,
             collect_timeout: std::time::Duration::from_secs(120),
             verbose: false,
+            trace_out: None,
         }
     }
 
@@ -462,6 +469,9 @@ impl TrainConfig {
         }
         if let Some(v) = args.opt("collect-timeout-ms") {
             cfg.collect_timeout = std::time::Duration::from_millis(v.parse()?);
+        }
+        if let Some(v) = args.opt("trace-out") {
+            cfg.trace_out = Some(v.into());
         }
         if args.flag("adaptive") {
             cfg.adaptive = true;
@@ -806,6 +816,20 @@ mod tests {
         let n = NetConfig { bandwidth_mbps: 0.0, jitter: std::time::Duration::from_micros(50) };
         assert!(n.label().starts_with("inf+j"), "{}", n.label());
         assert!(!n.is_free(), "pure jitter still charges time");
+    }
+
+    #[test]
+    fn trace_out_parses_and_defaults_off() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert!(cfg.trace_out.is_none(), "tracing must be off by default");
+        let cfg = parse(&["--preset", "x", "--trace-out", "run.trace.json"]).unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some(std::path::Path::new("run.trace.json")));
+        // orthogonal to --trace (input replay): both may be set
+        let cfg = parse(&[
+            "--preset", "x", "--trace", "t.jsonl", "--trace-out", "out.trace.json",
+        ])
+        .unwrap();
+        assert!(cfg.trace.is_some() && cfg.trace_out.is_some());
     }
 
     #[test]

@@ -98,17 +98,18 @@ impl Centralized {
     }
 
     pub fn train(&mut self) -> Result<&RunLog> {
+        if self.cfg.verbose {
+            crate::obs::log::set_max_level(crate::obs::Level::Info);
+        }
         for iter in 0..self.cfg.iterations as u64 {
             let rec = self.run_iteration(iter)?;
-            if self.cfg.verbose {
-                eprintln!(
-                    "central iter {:>4}  reward {:>10.3}  critic_loss {:>9.4}  total {:>8.1}ms",
-                    rec.iter,
-                    rec.reward,
-                    rec.critic_loss,
-                    rec.timing.total.as_secs_f64() * 1e3,
-                );
-            }
+            crate::log_info!(
+                "central iter {:>4}  reward {:>10.3}  critic_loss {:>9.4}  total {:>8.1}ms",
+                rec.iter,
+                rec.reward,
+                rec.critic_loss,
+                rec.timing.total.as_secs_f64() * 1e3,
+            );
             self.log.push(rec);
         }
         if let Some(dir) = self.cfg.out_dir.clone() {

@@ -33,9 +33,11 @@ use crate::marl::buffer::ReplayBuffer;
 use crate::marl::noise::DecaySchedule;
 use crate::marl::AgentParams;
 use crate::metrics::{IterRecord, IterTiming, RunLog, Timer};
-use crate::model::{DisturbanceModel, NetStats};
+use crate::model::{DisturbanceModel, InjectionPlan, NetStats};
+use crate::obs::{self, Attribution, Disposition, Event as ObsEvent, Tracer, WasteStats};
 use crate::rng::Pcg32;
 use crate::sim::ClockRef;
+use crate::transport::msg::{result_wire_len, task_header_wire_len};
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
 
 /// The RNG streams that drive *training* randomness. Forked in a fixed
@@ -93,6 +95,16 @@ pub struct Controller<T: ControllerTransport> {
     /// dropped its references so the flat parameter vectors can be
     /// reclaimed into the pool.
     pending_body: Option<Arc<TaskBody>>,
+    /// Event tracer (enabled iff `cfg.trace_out` is set) shared with
+    /// the transport; when disabled every record is a single branch.
+    tracer: Arc<Tracer>,
+    /// Always-on straggler attribution: pure accumulators over values
+    /// the collect loop already holds — no RNG, no timing side effects.
+    attr: Attribution,
+    /// Wasted work the controller classified (post-decodable,
+    /// duplicate, malformed arrivals); [`Controller::waste_stats`]
+    /// merges the transport's own count (in-flight cancellations).
+    waste: WasteStats,
     pub log: RunLog,
     shut_down: bool,
 }
@@ -113,7 +125,7 @@ impl<T: ControllerTransport> Controller<T> {
     /// Build the controller: constructs the assignment matrix for
     /// `cfg.scheme`, the environment, the replay buffer, and the initial
     /// agent parameters (Alg. 1 line 1).
-    pub fn new(cfg: TrainConfig, spec: RunSpec, transport: T) -> Result<Controller<T>> {
+    pub fn new(cfg: TrainConfig, spec: RunSpec, mut transport: T) -> Result<Controller<T>> {
         cfg.validate()?;
         if transport.n_learners() != cfg.n_learners {
             bail!(
@@ -154,6 +166,22 @@ impl<T: ControllerTransport> Controller<T> {
         let pool = transport
             .buf_pool()
             .unwrap_or_else(|| Arc::new(BufPool::with_shelf_cap(3 * cfg.n_learners + 8)));
+        // Event tracing is bound to `--trace-out`: off means the
+        // disabled tracer (a branch, nothing else). The transport
+        // shares the handle so its events land on the same timeline.
+        let tracer = if cfg.trace_out.is_some() {
+            Tracer::enabled(clock.clone(), obs::DEFAULT_EVENT_CAP)
+        } else {
+            Tracer::disabled()
+        };
+        transport.set_tracer(Arc::clone(&tracer));
+        if cfg.verbose {
+            // `--verbose` raises the process log level so the
+            // per-iteration progress lines (info) are emitted; an
+            // explicit CODED_MARL_LOG still wins.
+            obs::log::set_max_level(obs::Level::Info);
+        }
+        let attr = Attribution::new(cfg.n_learners);
         Ok(Controller {
             buffer: ReplayBuffer::new(cfg.buffer_capacity),
             cfg,
@@ -170,6 +198,9 @@ impl<T: ControllerTransport> Controller<T> {
             clock,
             pool,
             pending_body: None,
+            tracer,
+            attr,
+            waste: WasteStats::default(),
             log: RunLog::new(),
             shut_down: false,
         })
@@ -206,6 +237,49 @@ impl<T: ControllerTransport> Controller<T> {
         self.transport.net_stats()
     }
 
+    /// Per-learner straggler attribution accumulated so far
+    /// (arrival-rank histograms, tail latency, decodability front,
+    /// injected-vs-organic split). Always on.
+    pub fn attribution(&self) -> &Attribution {
+        &self.attr
+    }
+
+    /// Wasted work so far: controller-classified waste (post-decodable
+    /// / duplicate / malformed arrivals) merged with the transport's
+    /// in-flight cancellations.
+    pub fn waste_stats(&self) -> WasteStats {
+        let mut w = self.waste;
+        if let Some(t) = self.transport.waste_stats() {
+            w.merge(&t);
+        }
+        w
+    }
+
+    /// The run's event tracer (disabled unless `cfg.trace_out`).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// Export the buffered events: a Chrome trace-event file at `path`
+    /// (one lane per learner — load in Perfetto / chrome://tracing)
+    /// plus a JSONL twin next to it.
+    pub fn write_trace(&self, path: &std::path::Path) -> Result<()> {
+        let events = self.tracer.snapshot();
+        obs::export::write_chrome_trace(&events, self.cfg.n_learners, path)
+            .with_context(|| format!("writing {}", path.display()))?;
+        let jsonl = path.with_extension("jsonl");
+        obs::export::write_jsonl(&events, &jsonl)
+            .with_context(|| format!("writing {}", jsonl.display()))?;
+        if self.tracer.dropped() > 0 {
+            crate::log_warn!(
+                "trace ring dropped {} events (cap {}); the file covers the run's tail",
+                self.tracer.dropped(),
+                obs::DEFAULT_EVENT_CAP
+            );
+        }
+        Ok(())
+    }
+
     pub fn agents(&self) -> &[AgentParams] {
         &self.agents
     }
@@ -240,18 +314,16 @@ impl<T: ControllerTransport> Controller<T> {
     pub fn train(&mut self) -> Result<&RunLog> {
         for iter in 0..self.cfg.iterations as u64 {
             let rec = self.run_iteration(iter)?;
-            if self.cfg.verbose {
-                eprintln!(
-                    "iter {:>4}  reward {:>10.3}  total {:>8.1}ms  (wait {:>7.1}ms, decode {:>6.2}ms, via {}, stragglers {:?})",
-                    rec.iter,
-                    rec.reward,
-                    rec.timing.total.as_secs_f64() * 1e3,
-                    rec.timing.wait.as_secs_f64() * 1e3,
-                    rec.timing.decode.as_secs_f64() * 1e3,
-                    rec.decode_method,
-                    rec.stragglers,
-                );
-            }
+            crate::log_info!(
+                "iter {:>4}  reward {:>10.3}  total {:>8.1}ms  (wait {:>7.1}ms, decode {:>6.2}ms, via {}, stragglers {:?})",
+                rec.iter,
+                rec.reward,
+                rec.timing.total.as_secs_f64() * 1e3,
+                rec.timing.wait.as_secs_f64() * 1e3,
+                rec.timing.decode.as_secs_f64() * 1e3,
+                rec.decode_method,
+                rec.stragglers,
+            );
             self.log.push(rec);
             if self.cfg.checkpoint_every > 0
                 && (iter + 1) % self.cfg.checkpoint_every as u64 == 0
@@ -268,6 +340,9 @@ impl<T: ControllerTransport> Controller<T> {
         }
         if self.cfg.checkpoint_every > 0 {
             self.checkpoint()?;
+        }
+        if let Some(path) = self.cfg.trace_out.clone() {
+            self.write_trace(&path)?;
         }
         Ok(&self.log)
     }
@@ -286,6 +361,7 @@ impl<T: ControllerTransport> Controller<T> {
     pub fn run_iteration(&mut self, iter: u64) -> Result<IterRecord> {
         let total_t = Timer::with_clock(&self.clock);
         let mut timing = IterTiming::default();
+        self.tracer.record(|| ObsEvent::IterStart { iter });
 
         // --- Rollout (lines 3-7) ---------------------------------------
         let t = Timer::with_clock(&self.clock);
@@ -312,6 +388,7 @@ impl<T: ControllerTransport> Controller<T> {
             || self.buffer.len() < self.spec.dims.batch
         {
             timing.total = total_t.elapsed();
+            self.tracer.record(|| ObsEvent::IterEnd { iter });
             return Ok(IterRecord {
                 iter,
                 timing,
@@ -346,6 +423,14 @@ impl<T: ControllerTransport> Controller<T> {
             .map(|a| self.pool.take_with(p_dim, |out| a.write_flat(out)))
             .collect();
         let body = TaskBody::new(Arc::new(agent_params), Arc::new(mb));
+        self.tracer.record(|| ObsEvent::BroadcastBody { iter, bytes: body.wire_len() as u64 });
+        for &s in &plan.stragglers {
+            self.tracer.record(|| ObsEvent::StragglerInjected {
+                iter,
+                learner: s as u32,
+                delay_ns: plan.delay_ns[s],
+            });
+        }
         // Learners with an all-zero row have nothing to compute and
         // contribute nothing to decodability — skip them outright. At
         // N = 1000 an uncoded iteration tasks M learners, not N.
@@ -355,6 +440,7 @@ impl<T: ControllerTransport> Controller<T> {
                 continue;
             }
             let row = self.pool.take_copy(self.code().row_f32(j));
+            let row_len = row.len();
             // A dead learner (crashed thread / worker) is just a
             // permanent erasure: coding exists to mask exactly this, so
             // a failed send must not abort the iteration.
@@ -367,9 +453,15 @@ impl<T: ControllerTransport> Controller<T> {
                     straggler_delay_ns: plan.delay_ns[j],
                 },
             ) {
-                if self.cfg.verbose {
-                    eprintln!("iter {iter}: learner {j} unreachable ({e:#}); treating as erasure");
-                }
+                crate::log_info!(
+                    "iter {iter}: learner {j} unreachable ({e:#}); treating as erasure"
+                );
+            } else {
+                self.tracer.record(|| ObsEvent::TaskSent {
+                    iter,
+                    learner: j as u32,
+                    bytes: task_header_wire_len(row_len) as u64,
+                });
             }
         }
         self.pending_body = Some(body);
@@ -377,7 +469,7 @@ impl<T: ControllerTransport> Controller<T> {
 
         // --- Collect until decodable (lines 10-13) ----------------------
         let t = Timer::with_clock(&self.clock);
-        let outcome = self.collect(iter, tasked)?;
+        let outcome = self.collect(iter, tasked, &plan)?;
         timing.wait = t.elapsed();
         let CollectOutcome { received, results, stall, compute_per_update } = outcome;
 
@@ -393,8 +485,15 @@ impl<T: ControllerTransport> Controller<T> {
 
         // --- Recover θ' (line 15) ---------------------------------------
         let t = Timer::with_clock(&self.clock);
+        let plan_hits_before =
+            self.tracer.is_enabled().then(|| self.decoder.plan_cache_stats().hits);
         let out = self.decoder.decode(&received, &results, self.cfg.decode)?;
         timing.decode = t.elapsed();
+        if let Some(before) = plan_hits_before {
+            let cache_hit = self.decoder.plan_cache_stats().hits > before;
+            let method = out.method;
+            self.tracer.record(|| ObsEvent::DecodeDone { iter, method, cache_hit });
+        }
         for (agent, theta) in self.agents.iter_mut().zip(out.theta.iter()) {
             // In-place copy into the existing block vectors — no
             // per-agent reallocation.
@@ -434,12 +533,25 @@ impl<T: ControllerTransport> Controller<T> {
                 p_m: self.cfg.p_m,
                 seed: self.cfg.seed,
             }));
-            if self.cfg.verbose {
-                eprintln!("iter {iter}: adaptive switch {from} -> {to}");
-            }
+            crate::log_info!("iter {iter}: adaptive switch {from} -> {to}");
         }
 
         timing.total = total_t.elapsed();
+        if self.tracer.is_enabled() {
+            let ps = self.pool.stats();
+            self.tracer.record(|| ObsEvent::PoolSample {
+                hits: ps.hits,
+                misses: ps.misses,
+                resident: ps.resident as u64,
+            });
+            if let Some(ns) = self.transport.net_stats() {
+                self.tracer.record(|| ObsEvent::NetSample {
+                    broadcast_ns: ns.broadcast_ns,
+                    return_ns: ns.return_ns,
+                });
+            }
+        }
+        self.tracer.record(|| ObsEvent::IterEnd { iter });
         Ok(IterRecord {
             iter,
             timing,
@@ -486,7 +598,7 @@ impl<T: ControllerTransport> Controller<T> {
     /// arrival. Decisions are identical to `Code::decodable` (pinned by
     /// property test); at N ≫ 1000 this turns the collect loop from
     /// O(N²·M²) worst case into O(N·M²) total.
-    fn collect(&mut self, iter: u64, tasked: usize) -> Result<CollectOutcome> {
+    fn collect(&mut self, iter: u64, tasked: usize, plan: &InjectionPlan) -> Result<CollectOutcome> {
         let m = self.spec.m;
         let n = self.cfg.n_learners;
         let p_dim = self.spec.dims.agent_param_dim();
@@ -495,10 +607,12 @@ impl<T: ControllerTransport> Controller<T> {
         let mut got = vec![false; n];
         let mut tracker = RankTracker::new(self.code());
         let mut mth_arrival: Option<Duration> = None;
+        let mut first_used: Option<Duration> = None;
         let mut compute_sum = 0.0f64;
         let mut compute_n = 0usize;
         let timeout = self.cfg.collect_timeout;
-        let deadline = self.clock.now() + timeout;
+        let start = self.clock.now();
+        let deadline = start + timeout;
         loop {
             let now = self.clock.now();
             if now >= deadline {
@@ -516,44 +630,80 @@ impl<T: ControllerTransport> Controller<T> {
             match msg {
                 LearnerMsg::Result { iter: ri, learner_id, y, compute_ns } => {
                     let j = learner_id as usize;
-                    if ri != iter || j >= n || got[j] {
-                        continue; // stale or duplicate
-                    }
-                    let workload = self.code().workload(j);
-                    if workload == 0 {
-                        // This learner was never tasked (all-zero row):
-                        // a spurious reply must not inflate
-                        // `results_used` or trip the `== tasked`
-                        // rank-deficiency bail below — drop it exactly
-                        // like a stale message.
-                        continue;
-                    }
-                    if y.len() != p_dim {
+                    // Classify first (the event vocabulary of
+                    // `obs::Disposition`); the reject paths below drop
+                    // the reply exactly as before — classification is a
+                    // pure function of values already in hand.
+                    let disposition = if j >= n || ri > iter {
+                        Disposition::Stale
+                    } else if ri < iter {
+                        Disposition::PostDecodable
+                    } else if got[j] {
+                        Disposition::Duplicate
+                    } else if self.code().workload(j) == 0 {
+                        // Never tasked (all-zero row): a spurious reply
+                        // must not inflate `results_used` or trip the
+                        // `== tasked` rank-deficiency bail below.
+                        Disposition::ZeroWorkload
+                    } else if y.len() != p_dim {
                         // A malformed reply (buggy / version-skewed
                         // worker whose frame still parses) is an
                         // erasure, not a poison pill: admitting it
                         // would fail the decode — and the elementwise
                         // kernels assert equal lengths — so drop it
                         // like a stale message and keep collecting.
-                        if self.cfg.verbose {
-                            eprintln!(
-                                "iter {iter}: learner {j} sent a result of length {} \
-                                 (expected {p_dim}); dropping as an erasure",
-                                y.len()
-                            );
-                        }
+                        crate::log_info!(
+                            "iter {iter}: learner {j} sent a result of length {} \
+                             (expected {p_dim}); dropping as an erasure",
+                            y.len()
+                        );
+                        Disposition::Malformed
+                    } else {
+                        Disposition::Used
+                    };
+                    let bytes = result_wire_len(y.len()) as u64;
+                    self.tracer.record(|| ObsEvent::ResultArrival {
+                        iter: ri,
+                        learner: learner_id,
+                        disposition,
+                        bytes,
+                        compute_ns,
+                    });
+                    if disposition.is_waste() {
+                        self.waste.add(bytes, compute_ns);
+                    }
+                    if disposition != Disposition::Used {
                         continue;
                     }
                     got[j] = true;
                     tracker.push_row(self.code().matrix().row(j));
                     received.push(j);
                     results.push(y);
-                    compute_sum += compute_ns as f64 / 1e9 / workload as f64;
+                    compute_sum += compute_ns as f64 / 1e9 / self.code().workload(j) as f64;
                     compute_n += 1;
+                    let at = self.clock.now();
+                    if first_used.is_none() {
+                        first_used = Some(at);
+                    }
+                    self.attr.observe_arrival(
+                        j,
+                        received.len(),
+                        tasked,
+                        at.saturating_sub(start),
+                        plan.delay_ns[j] > 0,
+                    );
+                    let rank = tracker.rank() as u32;
+                    self.tracer.record(|| ObsEvent::RankAdvance { iter, rank });
                     if received.len() == m {
                         mth_arrival = Some(self.clock.now());
                     }
                     if tracker.decodable() {
+                        let front = at.saturating_sub(first_used.unwrap_or(at));
+                        self.attr.observe_decodable(j, front);
+                        self.tracer.record(|| ObsEvent::DecodableAt {
+                            iter,
+                            front_ns: u64::try_from(front.as_nanos()).unwrap_or(u64::MAX),
+                        });
                         let stall = mth_arrival
                             .map(|t| self.clock.now().saturating_sub(t))
                             .unwrap_or(Duration::ZERO);

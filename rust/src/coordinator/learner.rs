@@ -124,7 +124,10 @@ pub fn learner_loop(
         // free.
         match poll_ctrl(&mut ep, iter)? {
             Poll::Continue => {}
-            Poll::AbortIteration => continue,
+            Poll::AbortIteration => {
+                crate::log_debug!("learner {learner_id}: iter {iter} already acked; skipping task");
+                continue;
+            }
             Poll::Shutdown => return Ok(()),
         }
         let t0 = clock.now();
@@ -153,6 +156,7 @@ pub fn learner_loop(
             kernels::axpy(&mut y, c, &theta_i);
         }
         if aborted {
+            crate::log_debug!("learner {learner_id}: iter {iter} aborted mid-compute");
             scratch = Some(y);
             continue;
         }
@@ -161,6 +165,9 @@ pub fn learner_loop(
             match serve_delay(&mut ep, &clock, iter, Duration::from_nanos(straggler_delay_ns))? {
                 Poll::Continue => {}
                 Poll::AbortIteration => {
+                    crate::log_debug!(
+                        "learner {learner_id}: iter {iter} aborted during injected delay"
+                    );
                     scratch = Some(y);
                     continue;
                 }
@@ -172,6 +179,9 @@ pub fn learner_loop(
         match poll_ctrl(&mut ep, iter)? {
             Poll::Continue => {}
             Poll::AbortIteration => {
+                crate::log_debug!(
+                    "learner {learner_id}: iter {iter} result suppressed (already decodable)"
+                );
                 scratch = Some(y);
                 continue;
             }

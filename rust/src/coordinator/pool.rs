@@ -73,6 +73,22 @@ impl ControllerTransport for Pool {
         }
     }
 
+    fn set_tracer(&mut self, tracer: Arc<crate::obs::Tracer>) {
+        match self {
+            Pool::Local(c) => c.set_tracer(tracer),
+            Pool::Tcp { ctrl, .. } => ctrl.set_tracer(tracer),
+            Pool::Sim(s) => s.set_tracer(tracer),
+        }
+    }
+
+    fn waste_stats(&self) -> Option<crate::obs::WasteStats> {
+        match self {
+            Pool::Local(c) => c.waste_stats(),
+            Pool::Tcp { ctrl, .. } => ctrl.waste_stats(),
+            Pool::Sim(s) => s.waste_stats(),
+        }
+    }
+
     fn shutdown(&mut self) {
         match self {
             Pool::Local(c) => c.shutdown(),
@@ -113,12 +129,12 @@ pub fn spawn_local(n: usize, factory: Arc<BackendFactory>) -> Result<Pool> {
                 let backend = match factory(id as u32) {
                     Ok(b) => b,
                     Err(e) => {
-                        eprintln!("learner {id}: backend construction failed: {e:#}");
+                        crate::log_error!("learner {id}: backend construction failed: {e:#}");
                         return;
                     }
                 };
                 if let Err(e) = learner_loop(ep, id as u32, backend, real_clock()) {
-                    eprintln!("learner {id}: loop error: {e:#}");
+                    crate::log_error!("learner {id}: loop error: {e:#}");
                 }
             })
             .with_context(|| format!("spawning learner thread {id}"))?;

@@ -33,6 +33,7 @@ pub mod linalg;
 pub mod marl;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod sim;

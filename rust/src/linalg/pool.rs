@@ -234,4 +234,20 @@ mod tests {
         assert_eq!(pool.stats().resident, 0);
         assert_eq!(pool.take_zeroed(0), Vec::<f32>::new());
     }
+
+    /// `hit_rate` must be well-defined before any take runs (0/0 → 0.0,
+    /// never NaN — the value lands in BENCH json) and exact afterwards.
+    #[test]
+    fn hit_rate_handles_zero_takes_and_counts_exactly() {
+        assert_eq!(PoolStats::default().hit_rate(), 0.0);
+        let pool = BufPool::with_shelf_cap(4);
+        let b = pool.take_zeroed(8); // miss
+        pool.put(b);
+        let b = pool.take_zeroed(8); // hit
+        pool.put(b);
+        let _c = pool.take_zeroed(8); // hit
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
 }

@@ -73,6 +73,9 @@ COMMON TRAIN FLAGS:
     --adaptive                 measure stragglers, switch scheme at runtime
     --collect-timeout-ms MS    dead-learner timeout      [120000]
     --verbose                  per-iteration progress lines
+    --trace-out PATH           write a Chrome trace-event timeline of the run
+                               (one lane per learner; open in Perfetto or
+                               chrome://tracing; a .jsonl twin lands next to it)
 
 SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --artifacts DIR            artifacts directory       [artifacts]
@@ -100,6 +103,10 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --out-dir DIR              also write sim_sweep.csv + BENCH_sweep.json here
                                (+ BENCH_model.json when a system-model knob
                                is active)
+    --trace-out PATH           write a Chrome trace-event timeline of the
+                               grid's FIRST cell (tracing is free of timing
+                               side effects; one traced cell stands in for
+                               its bit-identical untraced twin)
 
 SCALE-STUDY FLAGS (all optional; virtual time only):
     --learners-list N1,N2      learner counts            [100,1000,10000]
@@ -110,6 +117,10 @@ SCALE-STUDY FLAGS (all optional; virtual time only):
     --bandwidth/--net-jitter-us/--compute-model
                                as in sim-sweep           [iterations: 5]
     --out-dir DIR              write BENCH_scale.json here
+
+ENVIRONMENT:
+    CODED_MARL_LOG=error|warn|info|debug   diagnostic log level [warn]
+                               (--verbose raises it to info; the env var wins)
 
 EXAMPLES:
     coded-marl train --preset coop_nav_m8 --scheme mds \\
@@ -183,6 +194,18 @@ fn report_run(log: &coded_marl::metrics::RunLog, wall: std::time::Duration) {
     println!("iterations:        {n}");
     println!("wall time:         {}", fmt_duration(wall));
     println!("mean iter time:    {}", fmt_duration(log.mean_iter_time()));
+    let mut q = coded_marl::obs::Quantiles::new();
+    for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
+        q.push(r.timing.total.as_secs_f64());
+    }
+    if q.count() > 0 {
+        println!(
+            "iter time p50/p90/p99:   {} / {} / {}",
+            fmt_duration(std::time::Duration::from_secs_f64(q.p50().max(0.0))),
+            fmt_duration(std::time::Duration::from_secs_f64(q.p90().max(0.0))),
+            fmt_duration(std::time::Duration::from_secs_f64(q.p99().max(0.0))),
+        );
+    }
     println!("final reward (smoothed): {tail:.3}");
     for phase in coded_marl::metrics::Phase::ALL {
         let s = log.phase_stats(phase);
@@ -273,6 +296,7 @@ fn parse_delay_dist(args: &Args) -> Result<coded_marl::config::DelayDist> {
 /// well under a second.
 fn cmd_sim_sweep() -> Result<()> {
     use coded_marl::config::{ComputeModelCfg, DelayDist};
+    use coded_marl::obs::WasteStats;
     use coded_marl::sim::sweep::{
         bandwidth_table, grid_iter_stats, render_table, run_bandwidth_sweep, simulated_total,
         sweep_base, write_bench_json, write_csv, write_model_json, SweepConfig,
@@ -306,6 +330,7 @@ fn cmd_sim_sweep() -> Result<()> {
     let sweep_threads = args.get_or("sweep-threads", 0usize)?;
     let dist = parse_delay_dist(&args)?;
     let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
+    let trace_out = args.opt("trace-out").map(std::path::PathBuf::from);
     let bandwidth_list: Option<Vec<f64>> = match args.opt("bandwidth-list") {
         None => None,
         Some(csv) => Some(
@@ -321,6 +346,7 @@ fn cmd_sim_sweep() -> Result<()> {
 
     let mut base = sweep_base(format!("{}_m{}", env.name(), m), n, iterations, mock_compute, seed);
     base.straggler.dist = dist;
+    base.trace_out = trace_out;
     base.sweep_threads = sweep_threads;
     base.apply_model_args(&args)?;
     let mut ks = ks;
@@ -423,6 +449,55 @@ fn cmd_sim_sweep() -> Result<()> {
             stats.min() * 1e3,
             stats.max() * 1e3,
             stats.count(),
+        );
+    }
+    // Tail + wasted-work headline (P² sketches are per-cell, so the
+    // grid tail is a range over cells, not a pooled quantile).
+    let p99_range = all_cells
+        .iter()
+        .filter(|c| c.iter_q.count() > 0 && c.iter_q.p99().is_finite())
+        .map(|c| c.iter_q.p99())
+        .fold(None::<(f64, f64)>, |acc, p| match acc {
+            None => Some((p, p)),
+            Some((lo, hi)) => Some((lo.min(p), hi.max(p))),
+        });
+    if let Some((lo, hi)) = p99_range {
+        println!("per-cell iteration p99: {:.1}ms – {:.1}ms across the grid", lo * 1e3, hi * 1e3);
+    }
+    let mut waste = WasteStats::default();
+    for c in &all_cells {
+        waste.merge(&c.waste);
+    }
+    if waste.results > 0 {
+        println!(
+            "wasted work: {} results / {} KiB / {:.1}ms modeled compute discarded past \
+             decodability (cancelled in flight or arrived stale)",
+            waste.results,
+            waste.bytes / 1024,
+            waste.compute_secs() * 1e3,
+        );
+    }
+    // Single-cell deep dive: the straggler-attribution summary that
+    // sweep tables only carry in aggregate.
+    if let [c] = all_cells.as_slice() {
+        let a = &c.attr;
+        let tail_learner =
+            a.tail_learner.map_or("-".to_string(), |j| format!("L{j}"));
+        println!(
+            "attribution: decodability front p50 {:.1}ms p99 {:.1}ms · tail learner {} \
+             (arrival p99 {:.1}ms) · injected share of used results {:.0}%",
+            a.front_p50_s * 1e3,
+            a.front_p99_s * 1e3,
+            tail_learner,
+            a.tail_p99_s * 1e3,
+            a.injected_share * 100.0,
+        );
+    }
+    if let Some(p) = &base.trace_out {
+        println!(
+            "wrote {} (+ {}) — first grid cell, one lane per learner; open in Perfetto",
+            p.display(),
+            p.with_extension("jsonl").display(),
         );
     }
     let hits: u64 = all_cells.iter().map(|c| c.decode_plan.hits).sum();

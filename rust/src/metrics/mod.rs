@@ -17,13 +17,22 @@ use std::time::Duration;
 use crate::sim::{real_clock, ClockRef};
 
 /// Streaming mean/variance/min/max (Welford).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Stats {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `Default` must match [`Stats::new`]: the derived impl would start
+/// min/max at 0.0, silently clamping the observed `min` of any
+/// all-positive stream to 0.0 on first push (regression-tested below).
+impl Default for Stats {
+    fn default() -> Stats {
+        Stats::new()
+    }
 }
 
 impl Stats {
@@ -322,6 +331,25 @@ mod tests {
         assert!((a.variance() - whole.variance()).abs() < 1e-10);
     }
 
+    /// Regression: the old `#[derive(Default)]` started min/max at 0.0,
+    /// so a default-constructed accumulator reported min = 0.0 for any
+    /// all-positive stream. `Default` must behave exactly like `new()`.
+    #[test]
+    fn default_matches_new_and_does_not_clamp_min() {
+        let mut d = Stats::default();
+        d.push(5.0);
+        d.push(9.0);
+        assert_eq!(d.min(), 5.0, "default-constructed Stats clamped min toward 0.0");
+        assert_eq!(d.max(), 9.0);
+        let mut negative = Stats::default();
+        negative.push(-3.0);
+        assert_eq!(negative.max(), -3.0, "max of an all-negative stream must not be 0.0");
+        let (d, n) = (Stats::default(), Stats::new());
+        assert_eq!(d.count(), n.count());
+        assert_eq!(d.min(), n.min());
+        assert_eq!(d.max(), n.max());
+    }
+
     #[test]
     fn empty_stats_are_safe() {
         let s = Stats::new();
@@ -385,5 +413,43 @@ mod tests {
         assert!(text.lines().next().unwrap().starts_with("iter,total_s"));
         assert!(text.contains("1|3"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Edge cases of the CSV format: an iteration with no stragglers
+    /// must write an *empty* trailing column (same field count as every
+    /// other row), and a NaN critic_loss must round-trip through the
+    /// text format (`{:.6}` prints "NaN", which `f64::from_str`
+    /// re-parses as NaN).
+    #[test]
+    fn csv_empty_stragglers_and_nan_critic_loss_round_trip() {
+        let mut log = RunLog::new();
+        let mut r = rec(0, 10, 1.0);
+        r.stragglers = Vec::new();
+        r.critic_loss = f64::NAN;
+        log.push(r);
+        let dir = std::env::temp_dir().join("coded_marl_metrics_edge_test");
+        let path = dir.join("edge.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        let header_fields = text.lines().next().unwrap().split(',').count();
+        let row = text.lines().nth(1).unwrap();
+        let fields: Vec<&str> = row.split(',').collect();
+        assert_eq!(fields.len(), header_fields, "empty stragglers must keep the column: {row}");
+        assert_eq!(*fields.last().unwrap(), "", "stragglers column must be empty, got {row}");
+        assert!(row.ends_with(','), "row must end with the empty stragglers field: {row}");
+        // critic_loss is field index 8 (0-based) per the header
+        assert_eq!(fields[8], "NaN");
+        let reparsed: f64 = fields[8].parse().unwrap();
+        assert!(reparsed.is_nan(), "NaN must survive the text round-trip");
+        // and a straggler-bearing row still joins with '|'
+        let mut log2 = RunLog::new();
+        log2.push(rec(1, 10, 1.0));
+        let dir2 = std::env::temp_dir().join("coded_marl_metrics_edge_test2");
+        let path2 = dir2.join("edge2.csv");
+        log2.write_csv(&path2).unwrap();
+        let text2 = std::fs::read_to_string(&path2).unwrap();
+        std::fs::remove_dir_all(&dir2).ok();
+        assert!(text2.lines().nth(1).unwrap().ends_with("1|3"));
     }
 }

@@ -226,4 +226,17 @@ mod tests {
         assert_eq!(s.broadcast(), Duration::from_micros(2060));
         assert_eq!(s.ret(), Duration::from_millis(1));
     }
+
+    /// The Duration accessors are plain nanosecond views of the raw
+    /// counters — downstream consumers (sweep CSV, BENCH json, the
+    /// obs NetSample event) rely on the exact equivalence.
+    #[test]
+    fn duration_accessors_mirror_the_raw_counters() {
+        let s = NetStats { broadcast_ns: 1_500_000_001, return_ns: 7, tasks: 3, bodies: 1 };
+        assert_eq!(s.broadcast(), Duration::new(1, 500_000_001));
+        assert_eq!(s.ret(), Duration::from_nanos(7));
+        let zero = NetStats::default();
+        assert_eq!(zero.broadcast(), Duration::ZERO);
+        assert_eq!(zero.ret(), Duration::ZERO);
+    }
 }

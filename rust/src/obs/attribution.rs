@@ -1,0 +1,307 @@
+//! Derived analytics: per-learner straggler attribution, the
+//! decodability front, and wasted-work accounting.
+//!
+//! These run **always-on** in the controller (unlike event tracing):
+//! they are pure accumulators over values the collect loop already
+//! has — no RNG, no timing side effects — so enabling them cannot
+//! perturb a virtual run (the bit-identity test in
+//! `tests/obs_integration.rs` covers the traced case, which subsumes
+//! this one).
+//!
+//! * [`Attribution`] answers *which learner costs us the tail*: per
+//!   learner, a quartile arrival-rank histogram, P² latency quantiles
+//!   of its used arrivals, how often its arrival was the one that made
+//!   the prefix decodable, and how many of its arrivals happened while
+//!   the disturbance model had injected a delay into it
+//!   (injected-vs-organic split).
+//! * The decodability **front** is the time from an iteration's first
+//!   used arrival until rank M — the window the code's redundancy has
+//!   to cover; its p99 is the quantity the scheme comparison in the
+//!   Karakus et al. survey turns on.
+//! * [`WasteStats`] counts the results whose bytes/compute bought
+//!   nothing: post-decodable and malformed arrivals on real
+//!   transports, ack-cancelled in-flight results on the sim transport.
+
+use std::time::Duration;
+
+use crate::metrics::table::Table;
+
+use super::quantile::Quantiles;
+
+/// Bytes and compute-seconds spent on results that were never used.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WasteStats {
+    /// Results wasted (cancelled, post-decodable, duplicate, malformed).
+    pub results: u64,
+    /// Exact wire bytes those results occupied (or would have).
+    pub bytes: u64,
+    /// Learner compute spent producing them, in nanoseconds.
+    pub compute_ns: u64,
+}
+
+impl WasteStats {
+    pub fn add(&mut self, bytes: u64, compute_ns: u64) {
+        self.results += 1;
+        self.bytes += bytes;
+        self.compute_ns += compute_ns;
+    }
+
+    pub fn merge(&mut self, other: &WasteStats) {
+        self.results += other.results;
+        self.bytes += other.bytes;
+        self.compute_ns += other.compute_ns;
+    }
+
+    pub fn compute_secs(&self) -> f64 {
+        self.compute_ns as f64 / 1e9
+    }
+}
+
+/// Per-learner accumulators (see [`Attribution`]).
+#[derive(Clone, Debug, Default)]
+struct LearnerAttr {
+    /// Used arrivals.
+    arrivals: u64,
+    /// Sum of 1-based arrival ranks of those arrivals.
+    rank_sum: u64,
+    /// Arrival-rank histogram over quartiles of the tasked count:
+    /// bucket q holds arrivals whose rank fell in the q-th quarter of
+    /// that iteration's tasked learners.
+    rank_hist: [u64; 4],
+    /// Times this learner's arrival completed rank M (the decisive,
+    /// iteration-ending arrival).
+    decisive: u64,
+    /// Used arrivals that happened while the disturbance model had
+    /// injected a delay into this learner.
+    injected: u64,
+    /// Latency quantiles of used arrivals (collect start → arrival).
+    latency: Quantiles,
+}
+
+/// Compact per-cell attribution summary carried into sweep tables and
+/// BENCH json (the full per-learner table is printed for single-cell
+/// deep dives and available via [`Attribution::render_table`]).
+#[derive(Clone, Copy, Debug)]
+pub struct AttrSummary {
+    /// Decodability front (first used arrival → rank M), seconds.
+    pub front_p50_s: f64,
+    pub front_p99_s: f64,
+    /// The learner with the worst p99 arrival latency, if any arrived.
+    pub tail_learner: Option<u32>,
+    /// That learner's p99 arrival latency, seconds (0 when none).
+    pub tail_p99_s: f64,
+    /// Fraction of used arrivals that came from learners with an
+    /// injected delay that iteration (the injected-vs-organic split;
+    /// the remainder of the tail is organic).
+    pub injected_share: f64,
+}
+
+impl Default for AttrSummary {
+    fn default() -> AttrSummary {
+        AttrSummary {
+            front_p50_s: 0.0,
+            front_p99_s: 0.0,
+            tail_learner: None,
+            tail_p99_s: 0.0,
+            injected_share: 0.0,
+        }
+    }
+}
+
+/// Straggler attribution over a run: who arrives late, who decides
+/// iterations, and how wide the decodability front is.
+#[derive(Clone, Debug)]
+pub struct Attribution {
+    learners: Vec<LearnerAttr>,
+    front: Quantiles,
+    /// Used arrivals observed in total.
+    arrivals: u64,
+    /// … of which from injected-delay learners.
+    injected: u64,
+    /// Iterations that reached decodability.
+    iters: u64,
+}
+
+impl Attribution {
+    pub fn new(n_learners: usize) -> Attribution {
+        Attribution {
+            learners: vec![LearnerAttr::default(); n_learners],
+            front: Quantiles::new(),
+            arrivals: 0,
+            injected: 0,
+            iters: 0,
+        }
+    }
+
+    /// Record a used arrival: `rank` is 1-based among this iteration's
+    /// used arrivals, `tasked` the number of tasked learners,
+    /// `latency` the time since the collect phase began, `injected`
+    /// whether the disturbance plan delayed this learner.
+    pub fn observe_arrival(
+        &mut self,
+        learner: usize,
+        rank: usize,
+        tasked: usize,
+        latency: Duration,
+        injected: bool,
+    ) {
+        let Some(l) = self.learners.get_mut(learner) else { return };
+        l.arrivals += 1;
+        l.rank_sum += rank as u64;
+        let quarter = if tasked > 0 { (4 * (rank - 1) / tasked).min(3) } else { 0 };
+        l.rank_hist[quarter] += 1;
+        l.latency.push(latency.as_secs_f64());
+        self.arrivals += 1;
+        if injected {
+            l.injected += 1;
+            self.injected += 1;
+        }
+    }
+
+    /// Record that `learner`'s arrival completed rank M, `front` after
+    /// the iteration's first used arrival.
+    pub fn observe_decodable(&mut self, learner: usize, front: Duration) {
+        if let Some(l) = self.learners.get_mut(learner) {
+            l.decisive += 1;
+        }
+        self.front.push(front.as_secs_f64());
+        self.iters += 1;
+    }
+
+    /// Iterations that reached decodability.
+    pub fn iters(&self) -> u64 {
+        self.iters
+    }
+
+    /// Decodability-front quantiles (seconds).
+    pub fn front(&self) -> &Quantiles {
+        &self.front
+    }
+
+    fn finite(x: f64) -> f64 {
+        if x.is_finite() {
+            x
+        } else {
+            0.0
+        }
+    }
+
+    /// Compact summary for sweep cells / BENCH json.
+    pub fn summary(&self) -> AttrSummary {
+        let mut tail: Option<(u32, f64)> = None;
+        for (j, l) in self.learners.iter().enumerate() {
+            if l.arrivals == 0 {
+                continue;
+            }
+            let p99 = l.latency.p99();
+            if p99.is_finite() && tail.map(|(_, t)| p99 > t).unwrap_or(true) {
+                tail = Some((j as u32, p99));
+            }
+        }
+        AttrSummary {
+            front_p50_s: Self::finite(self.front.p50()),
+            front_p99_s: Self::finite(self.front.p99()),
+            tail_learner: tail.map(|(j, _)| j),
+            tail_p99_s: tail.map(|(_, t)| t).unwrap_or(0.0),
+            injected_share: if self.arrivals > 0 {
+                self.injected as f64 / self.arrivals as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Per-learner attribution table, worst p99 latency first, at most
+    /// `top` rows (learners that never arrived are skipped).
+    pub fn render_table(&self, top: usize) -> String {
+        let mut order: Vec<usize> = (0..self.learners.len())
+            .filter(|&j| self.learners[j].arrivals > 0)
+            .collect();
+        order.sort_by(|&a, &b| {
+            let (la, lb) = (&self.learners[a], &self.learners[b]);
+            lb.latency.p99().total_cmp(&la.latency.p99()).then(a.cmp(&b))
+        });
+        let mut t = Table::new(&[
+            "learner", "used", "mean_rank", "rank_hist", "p50_ms", "p99_ms", "injected",
+            "decisive",
+        ]);
+        for &j in order.iter().take(top) {
+            let l = &self.learners[j];
+            t.row(&[
+                j.to_string(),
+                l.arrivals.to_string(),
+                format!("{:.1}", l.rank_sum as f64 / l.arrivals as f64),
+                format!(
+                    "{}|{}|{}|{}",
+                    l.rank_hist[0], l.rank_hist[1], l.rank_hist[2], l.rank_hist[3]
+                ),
+                format!("{:.2}", Self::finite(l.latency.p50()) * 1e3),
+                format!("{:.2}", Self::finite(l.latency.p99()) * 1e3),
+                format!("{:.0}%", 100.0 * l.injected as f64 / l.arrivals as f64),
+                l.decisive.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waste_accumulates_and_merges() {
+        let mut a = WasteStats::default();
+        a.add(100, 2_000_000_000);
+        a.add(50, 500_000_000);
+        let mut b = WasteStats::default();
+        b.add(10, 1_000_000_000);
+        a.merge(&b);
+        assert_eq!(a.results, 3);
+        assert_eq!(a.bytes, 160);
+        assert!((a.compute_secs() - 3.5).abs() < 1e-12);
+        assert_eq!(WasteStats::default(), WasteStats { results: 0, bytes: 0, compute_ns: 0 });
+    }
+
+    #[test]
+    fn attribution_tracks_ranks_fronts_and_splits() {
+        let mut attr = Attribution::new(3);
+        // Two iterations over 3 tasked learners: learner 2 is always
+        // last and injected; learner 0 always first.
+        for _ in 0..2 {
+            attr.observe_arrival(0, 1, 3, Duration::from_millis(1), false);
+            attr.observe_arrival(1, 2, 3, Duration::from_millis(2), false);
+            attr.observe_arrival(2, 3, 3, Duration::from_millis(30), true);
+            attr.observe_decodable(2, Duration::from_millis(29));
+        }
+        assert_eq!(attr.iters(), 2);
+        let s = attr.summary();
+        assert_eq!(s.tail_learner, Some(2), "worst p99 latency must name learner 2");
+        assert!((s.tail_p99_s - 0.030).abs() < 1e-9);
+        assert!((s.injected_share - 2.0 / 6.0).abs() < 1e-12);
+        assert!((s.front_p50_s - 0.029).abs() < 1e-9);
+        let table = attr.render_table(10);
+        assert!(table.contains("learner"), "{table}");
+        // learner 2: decisive both times, 100% injected
+        let row2 = table.lines().find(|l| l.trim_start().starts_with('2')).unwrap();
+        assert!(row2.contains("100%"), "{row2}");
+        assert!(row2.contains('2'), "{row2}");
+    }
+
+    #[test]
+    fn empty_attribution_yields_a_null_summary() {
+        let attr = Attribution::new(4);
+        let s = attr.summary();
+        assert_eq!(s.tail_learner, None);
+        assert_eq!(s.front_p99_s, 0.0);
+        assert_eq!(s.injected_share, 0.0);
+        assert!(attr.render_table(5).contains("learner"));
+    }
+
+    #[test]
+    fn out_of_range_learners_are_ignored() {
+        let mut attr = Attribution::new(2);
+        attr.observe_arrival(9, 1, 2, Duration::ZERO, false);
+        assert_eq!(attr.summary().tail_learner, None);
+    }
+}

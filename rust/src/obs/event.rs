@@ -1,0 +1,128 @@
+//! The structured event vocabulary of the coded training loop.
+//!
+//! One enum covers the controller hot loop (Alg. 1 lines 9-15) and the
+//! transport beneath it; every variant carries plain integers so
+//! recording is allocation-free. Timestamps live outside the event
+//! ([`TracedEvent::at`]) and come from the transport's
+//! [`crate::sim::ClockRef`], so a virtual-time trace and a wall-clock
+//! trace have identical structure.
+
+use std::time::Duration;
+
+/// How the controller classified a learner reply (`collect`, Alg. 1
+/// lines 10-13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Disposition {
+    /// Accepted: folded into the decodable prefix.
+    Used,
+    /// Reply for a *future* iteration or an out-of-range learner id
+    /// (protocol confusion; should not happen).
+    Stale,
+    /// Reply for an already-completed iteration — the result raced the
+    /// ack and its work is wasted (the real-transport twin of the sim's
+    /// cancelled events).
+    PostDecodable,
+    /// Reply from a learner whose assignment row is all-zero (never
+    /// tasked; contributes nothing to decodability).
+    ZeroWorkload,
+    /// Second reply from a learner this iteration.
+    Duplicate,
+    /// Parseable frame with a wrong-length result vector — dropped as
+    /// an erasure.
+    Malformed,
+}
+
+impl Disposition {
+    pub fn name(self) -> &'static str {
+        match self {
+            Disposition::Used => "used",
+            Disposition::Stale => "stale",
+            Disposition::PostDecodable => "post_decodable",
+            Disposition::ZeroWorkload => "zero_workload",
+            Disposition::Duplicate => "duplicate",
+            Disposition::Malformed => "malformed",
+        }
+    }
+
+    /// Dispositions whose bytes/compute count as wasted work.
+    pub fn is_waste(self) -> bool {
+        matches!(self, Disposition::PostDecodable | Disposition::Duplicate | Disposition::Malformed)
+    }
+}
+
+/// One hot-loop occurrence. Byte counts are exact wire lengths
+/// (`transport::msg::{task_header_wire_len, result_wire_len}`,
+/// `TaskBody::wire_len`), identical across transports.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// `run_iteration(iter)` entered.
+    IterStart { iter: u64 },
+    /// The broadcast-shared Task body for `iter` (encoded at most once;
+    /// `bytes` is its exact wire length).
+    BroadcastBody { iter: u64, bytes: u64 },
+    /// Per-learner Task header sent (`bytes` = header wire length; the
+    /// body bytes ride on [`Event::BroadcastBody`]).
+    TaskSent { iter: u64, learner: u32, bytes: u64 },
+    /// The disturbance model slowed `learner` by `delay_ns` this
+    /// iteration (§V-C injector or trace replay).
+    StragglerInjected { iter: u64, learner: u32, delay_ns: u64 },
+    /// A learner reply reached `collect` and was classified. `iter` is
+    /// the *result's* iteration (≠ current for stale/post-decodable).
+    ResultArrival {
+        iter: u64,
+        learner: u32,
+        disposition: Disposition,
+        bytes: u64,
+        compute_ns: u64,
+    },
+    /// An accepted arrival advanced the incremental rank to `rank`.
+    RankAdvance { iter: u64, rank: u32 },
+    /// The received prefix reached rank M. `front_ns` is the
+    /// decodability front: time from the first used arrival to this
+    /// event.
+    DecodableAt { iter: u64, front_ns: u64 },
+    /// θ' recovered. `cache_hit` = the decode plan came from the LRU
+    /// cache (no fresh factorization).
+    DecodeDone { iter: u64, method: &'static str, cache_hit: bool },
+    /// `run_iteration(iter)` returned.
+    IterEnd { iter: u64 },
+    /// Sim transport: an in-flight result was cancelled by the
+    /// iteration's ack (lazy heap deletion) — pure wasted work.
+    ResultCancelled { iter: u64, learner: u32, bytes: u64, compute_ns: u64 },
+    /// Transport level: a result frame crossed the wire (TCP reader /
+    /// sim delivery), before the controller classified it.
+    FrameRecv { learner: u32, bytes: u64 },
+    /// Data-plane buffer-pool counters sampled at an iteration end.
+    PoolSample { hits: u64, misses: u64, resident: u64 },
+    /// Network-model transfer counters sampled at an iteration end.
+    NetSample { broadcast_ns: u64, return_ns: u64 },
+}
+
+impl Event {
+    /// Stable snake_case tag used by the JSONL exporter.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::IterStart { .. } => "iter_start",
+            Event::BroadcastBody { .. } => "broadcast_body",
+            Event::TaskSent { .. } => "task_sent",
+            Event::StragglerInjected { .. } => "straggler_injected",
+            Event::ResultArrival { .. } => "result_arrival",
+            Event::RankAdvance { .. } => "rank_advance",
+            Event::DecodableAt { .. } => "decodable_at",
+            Event::DecodeDone { .. } => "decode_done",
+            Event::IterEnd { .. } => "iter_end",
+            Event::ResultCancelled { .. } => "result_cancelled",
+            Event::FrameRecv { .. } => "frame_recv",
+            Event::PoolSample { .. } => "pool_sample",
+            Event::NetSample { .. } => "net_sample",
+        }
+    }
+}
+
+/// An [`Event`] stamped with its clock time (real or virtual).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TracedEvent {
+    /// Time on the recording [`crate::sim::ClockRef`]'s epoch.
+    pub at: Duration,
+    pub event: Event,
+}

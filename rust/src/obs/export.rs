@@ -1,0 +1,344 @@
+//! Trace exporters: JSONL (one event object per line) and the Chrome
+//! trace-event format (Perfetto / `chrome://tracing`).
+//!
+//! Hand-rolled writers following the `runtime/json.rs` conventions —
+//! no serde. The Chrome trace lays one lane (`tid`) per learner plus
+//! lane 0 for the controller: iterations are complete (`"X"`) spans on
+//! the controller lane, each learner's task (send → arrival or
+//! cancellation) is a span on its own lane, rank progress is a counter
+//! track, and stragglers / decodability / decode outcomes are instant
+//! events. Timestamps are microseconds on the recording clock (virtual
+//! time for sim runs — Perfetto renders it like any other timeline).
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Duration;
+
+use super::event::{Event, TracedEvent};
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn us(at: Duration) -> String {
+    format!("{:.3}", at.as_secs_f64() * 1e6)
+}
+
+/// One event per line, flat fields, `t_ns` on the recording clock.
+pub fn jsonl(events: &[TracedEvent]) -> String {
+    let mut out = String::new();
+    for te in events {
+        let t = te.at.as_nanos();
+        let body = match &te.event {
+            Event::IterStart { iter } => format!("\"iter\":{iter}"),
+            Event::BroadcastBody { iter, bytes } => {
+                format!("\"iter\":{iter},\"bytes\":{bytes}")
+            }
+            Event::TaskSent { iter, learner, bytes } => {
+                format!("\"iter\":{iter},\"learner\":{learner},\"bytes\":{bytes}")
+            }
+            Event::StragglerInjected { iter, learner, delay_ns } => {
+                format!("\"iter\":{iter},\"learner\":{learner},\"delay_ns\":{delay_ns}")
+            }
+            Event::ResultArrival { iter, learner, disposition, bytes, compute_ns } => format!(
+                "\"iter\":{iter},\"learner\":{learner},\"disposition\":\"{}\",\"bytes\":{bytes},\"compute_ns\":{compute_ns}",
+                disposition.name()
+            ),
+            Event::RankAdvance { iter, rank } => format!("\"iter\":{iter},\"rank\":{rank}"),
+            Event::DecodableAt { iter, front_ns } => {
+                format!("\"iter\":{iter},\"front_ns\":{front_ns}")
+            }
+            Event::DecodeDone { iter, method, cache_hit } => format!(
+                "\"iter\":{iter},\"method\":\"{}\",\"cache_hit\":{cache_hit}",
+                esc(method)
+            ),
+            Event::IterEnd { iter } => format!("\"iter\":{iter}"),
+            Event::ResultCancelled { iter, learner, bytes, compute_ns } => format!(
+                "\"iter\":{iter},\"learner\":{learner},\"bytes\":{bytes},\"compute_ns\":{compute_ns}"
+            ),
+            Event::FrameRecv { learner, bytes } => {
+                format!("\"learner\":{learner},\"bytes\":{bytes}")
+            }
+            Event::PoolSample { hits, misses, resident } => {
+                format!("\"hits\":{hits},\"misses\":{misses},\"resident\":{resident}")
+            }
+            Event::NetSample { broadcast_ns, return_ns } => {
+                format!("\"broadcast_ns\":{broadcast_ns},\"return_ns\":{return_ns}")
+            }
+        };
+        out.push_str(&format!("{{\"t_ns\":{t},\"ev\":\"{}\",{body}}}\n", te.event.kind()));
+    }
+    out
+}
+
+pub fn write_jsonl(events: &[TracedEvent], path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(jsonl(events).as_bytes())
+}
+
+/// Lane id for a learner (lane 0 is the controller).
+fn lane(learner: u32) -> u32 {
+    learner + 1
+}
+
+/// Render the Chrome trace-event JSON for `events` over `n_learners`
+/// lanes.
+pub fn chrome_trace(events: &[TracedEvent], n_learners: usize) -> String {
+    let mut evs: Vec<String> = Vec::new();
+    let meta = |name: &str, tid: u32, label: &str| {
+        format!(
+            "{{\"name\":\"{name}\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"args\":{{\"name\":\"{}\"}}}}",
+            esc(label)
+        )
+    };
+    evs.push("{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{\"name\":\"coded-marl\"}}".into());
+    evs.push(meta("thread_name", 0, "controller"));
+    evs.push(meta("thread_sort_index", 0, "controller"));
+    for j in 0..n_learners {
+        evs.push(meta("thread_name", lane(j as u32), &format!("learner {j}")));
+    }
+
+    let span = |name: &str, tid: u32, start: Duration, end: Duration, args: String| {
+        let dur = (end.saturating_sub(start)).as_secs_f64() * 1e6;
+        format!(
+            "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\"ts\":{},\"dur\":{dur:.3},\"args\":{{{args}}}}}",
+            us(start)
+        )
+    };
+    let instant = |name: &str, tid: u32, at: Duration, args: String| {
+        format!(
+            "{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{tid},\"ts\":{},\"args\":{{{args}}}}}",
+            us(at)
+        )
+    };
+    let counter = |name: &str, at: Duration, args: String| {
+        format!(
+            "{{\"name\":\"{name}\",\"ph\":\"C\",\"pid\":1,\"ts\":{},\"args\":{{{args}}}}}",
+            us(at)
+        )
+    };
+
+    let mut open_iter: Option<(u64, Duration)> = None;
+    let mut open_task: HashMap<(u64, u32), Duration> = HashMap::new();
+    for te in events {
+        let at = te.at;
+        match &te.event {
+            Event::IterStart { iter } => open_iter = Some((*iter, at)),
+            Event::IterEnd { iter } => {
+                if let Some((i0, t0)) = open_iter.take() {
+                    if i0 == *iter {
+                        evs.push(span("iter", 0, t0, at, format!("\"iter\":{iter}")));
+                    }
+                }
+            }
+            Event::BroadcastBody { iter, bytes } => evs.push(instant(
+                "broadcast",
+                0,
+                at,
+                format!("\"iter\":{iter},\"bytes\":{bytes}"),
+            )),
+            Event::TaskSent { iter, learner, .. } => {
+                open_task.insert((*iter, *learner), at);
+            }
+            Event::StragglerInjected { iter, learner, delay_ns } => evs.push(instant(
+                "straggle",
+                lane(*learner),
+                at,
+                format!("\"iter\":{iter},\"delay_ms\":{:.3}", *delay_ns as f64 / 1e6),
+            )),
+            Event::ResultArrival { iter, learner, disposition, compute_ns, .. } => {
+                let args = format!(
+                    "\"iter\":{iter},\"disposition\":\"{}\",\"compute_ms\":{:.3}",
+                    disposition.name(),
+                    *compute_ns as f64 / 1e6
+                );
+                match open_task.remove(&(*iter, *learner)) {
+                    Some(t0) => evs.push(span("task", lane(*learner), t0, at, args)),
+                    None => evs.push(instant("arrival", lane(*learner), at, args)),
+                }
+            }
+            Event::ResultCancelled { iter, learner, compute_ns, .. } => {
+                let args =
+                    format!("\"iter\":{iter},\"compute_ms\":{:.3}", *compute_ns as f64 / 1e6);
+                match open_task.remove(&(*iter, *learner)) {
+                    Some(t0) => evs.push(span("cancelled", lane(*learner), t0, at, args)),
+                    None => evs.push(instant("cancelled", lane(*learner), at, args)),
+                }
+            }
+            Event::RankAdvance { rank, .. } => {
+                evs.push(counter("rank", at, format!("\"rank\":{rank}")))
+            }
+            Event::DecodableAt { iter, front_ns } => evs.push(instant(
+                "decodable",
+                0,
+                at,
+                format!("\"iter\":{iter},\"front_ms\":{:.3}", *front_ns as f64 / 1e6),
+            )),
+            Event::DecodeDone { iter, method, cache_hit } => evs.push(instant(
+                "decode",
+                0,
+                at,
+                format!("\"iter\":{iter},\"method\":\"{}\",\"cache_hit\":{cache_hit}", esc(method)),
+            )),
+            Event::FrameRecv { learner, bytes } => {
+                evs.push(instant("frame", lane(*learner), at, format!("\"bytes\":{bytes}")))
+            }
+            Event::PoolSample { hits, misses, resident } => evs.push(counter(
+                "pool",
+                at,
+                format!("\"hits\":{hits},\"misses\":{misses},\"resident\":{resident}"),
+            )),
+            Event::NetSample { broadcast_ns, return_ns } => evs.push(counter(
+                "net_ms",
+                at,
+                format!(
+                    "\"broadcast\":{:.3},\"return\":{:.3}",
+                    *broadcast_ns as f64 / 1e6,
+                    *return_ns as f64 / 1e6
+                ),
+            )),
+        }
+    }
+
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    for (i, e) in evs.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < evs.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+pub fn write_chrome_trace(
+    events: &[TracedEvent],
+    n_learners: usize,
+    path: &Path,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(chrome_trace(events, n_learners).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::Disposition;
+    use crate::runtime::json::Json;
+
+    fn sample_events() -> Vec<TracedEvent> {
+        let ms = Duration::from_millis;
+        vec![
+            TracedEvent { at: ms(0), event: Event::IterStart { iter: 1 } },
+            TracedEvent { at: ms(0), event: Event::BroadcastBody { iter: 1, bytes: 2048 } },
+            TracedEvent { at: ms(1), event: Event::TaskSent { iter: 1, learner: 0, bytes: 41 } },
+            TracedEvent { at: ms(1), event: Event::TaskSent { iter: 1, learner: 1, bytes: 41 } },
+            TracedEvent {
+                at: ms(1),
+                event: Event::StragglerInjected { iter: 1, learner: 1, delay_ns: 5_000_000 },
+            },
+            TracedEvent {
+                at: ms(3),
+                event: Event::ResultArrival {
+                    iter: 1,
+                    learner: 0,
+                    disposition: Disposition::Used,
+                    bytes: 100,
+                    compute_ns: 2_000_000,
+                },
+            },
+            TracedEvent { at: ms(3), event: Event::RankAdvance { iter: 1, rank: 1 } },
+            TracedEvent { at: ms(8), event: Event::DecodableAt { iter: 1, front_ns: 5_000_000 } },
+            TracedEvent {
+                at: ms(8),
+                event: Event::DecodeDone { iter: 1, method: "qr", cache_hit: false },
+            },
+            TracedEvent {
+                at: ms(9),
+                event: Event::ResultCancelled { iter: 1, learner: 1, bytes: 100, compute_ns: 7 },
+            },
+            TracedEvent { at: ms(9), event: Event::IterEnd { iter: 1 } },
+        ]
+    }
+
+    fn str_of<'a>(e: &'a Json, k: &str) -> Option<&'a str> {
+        e.get(k).ok().and_then(|v| v.as_str().ok())
+    }
+
+    fn num_of(e: &Json, k: &str) -> Option<f64> {
+        e.get(k).ok().and_then(|v| v.as_f64().ok())
+    }
+
+    /// The Chrome trace must parse with the repo's own JSON parser and
+    /// contain the expected lanes and spans (what Perfetto renders).
+    #[test]
+    fn chrome_trace_parses_and_has_lanes() {
+        let txt = chrome_trace(&sample_events(), 2);
+        let doc = Json::parse(&txt).expect("trace must be valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().expect("traceEvents array");
+        // lanes: controller + 2 learners named via metadata
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| str_of(e, "ph") == Some("M"))
+            .filter_map(|e| e.get("args").ok().and_then(|a| str_of(a, "name")))
+            .collect();
+        assert!(names.contains(&"controller"), "{names:?}");
+        assert!(names.contains(&"learner 0") && names.contains(&"learner 1"), "{names:?}");
+        // exactly one iteration span, with a duration
+        let iters: Vec<_> = evs
+            .iter()
+            .filter(|e| str_of(e, "ph") == Some("X") && str_of(e, "name") == Some("iter"))
+            .collect();
+        assert_eq!(iters.len(), 1);
+        assert!(num_of(iters[0], "dur").unwrap() > 0.0);
+        // learner 0's task became a span on its lane; learner 1's a
+        // cancelled span
+        let task =
+            evs.iter().find(|e| str_of(e, "name") == Some("task")).expect("task span");
+        assert_eq!(num_of(task, "tid"), Some(1.0));
+        assert!(evs.iter().any(|e| str_of(e, "name") == Some("cancelled")));
+        // rank counter present
+        assert!(evs.iter().any(|e| str_of(e, "ph") == Some("C")));
+    }
+
+    /// Every JSONL line must parse independently and carry the event
+    /// tag plus a timestamp.
+    #[test]
+    fn jsonl_lines_parse_independently() {
+        let txt = jsonl(&sample_events());
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 11);
+        for l in &lines {
+            let v = Json::parse(l).unwrap_or_else(|e| panic!("bad line {l}: {e}"));
+            assert!(num_of(&v, "t_ns").is_some(), "{l}");
+            assert!(str_of(&v, "ev").is_some(), "{l}");
+        }
+        assert!(txt.contains("\"disposition\":\"used\""));
+        assert!(txt.contains("\"ev\":\"result_cancelled\""));
+    }
+
+    #[test]
+    fn escapes_control_characters() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

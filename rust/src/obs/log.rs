@@ -1,0 +1,174 @@
+//! Tiny leveled stderr logger (no `log` crate).
+//!
+//! Level comes from the `CODED_MARL_LOG` environment variable
+//! (`error|warn|info|debug|off`), read once on first use; the default
+//! is `warn` so operational warnings (bad frames, unreachable
+//! learners, backend failures) stay visible exactly as the old
+//! unconditional `eprintln!` calls were. A disabled call site costs
+//! one relaxed atomic load and a branch — `format_args!` captures
+//! references lazily, so nothing is formatted unless the level is on.
+//!
+//! CLI *table* output (sweep tables, bench summaries) stays on plain
+//! `println!` — it is the program's product, not its diagnostics.
+//!
+//! `--verbose` raises the process level to `info` via
+//! [`set_max_level`] (an explicit env var still wins: set_max_level
+//! never lowers an env-configured level).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered: a level is emitted when it is ≤ the
+/// configured maximum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn from_env(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Sentinel: level not yet read from the environment.
+const UNINIT: u8 = u8::MAX;
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+/// Whether the level came from an explicit `CODED_MARL_LOG` (which
+/// then wins over programmatic raises like `--verbose`).
+static FROM_ENV: AtomicU8 = AtomicU8::new(0);
+
+#[cold]
+fn init() -> u8 {
+    let (lvl, explicit) = match std::env::var("CODED_MARL_LOG") {
+        Ok(v) => match Level::from_env(&v) {
+            Some(l) => (l as u8, 1),
+            None => {
+                eprintln!("[warn] CODED_MARL_LOG={v:?} not recognized; using warn");
+                (Level::Warn as u8, 0)
+            }
+        },
+        Err(_) => (Level::Warn as u8, 0),
+    };
+    FROM_ENV.store(explicit, Ordering::Relaxed);
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Is `level` currently emitted?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    let max = MAX_LEVEL.load(Ordering::Relaxed);
+    let max = if max == UNINIT { init() } else { max };
+    (level as u8) <= max
+}
+
+/// Raise the maximum level programmatically (e.g. `--verbose` ⇒
+/// `Info`). Never lowers a level set explicitly via `CODED_MARL_LOG`,
+/// and never lowers the current level.
+pub fn set_max_level(level: Level) {
+    // Force env init first so FROM_ENV is meaningful.
+    let current = {
+        let m = MAX_LEVEL.load(Ordering::Relaxed);
+        if m == UNINIT {
+            init()
+        } else {
+            m
+        }
+    };
+    if FROM_ENV.load(Ordering::Relaxed) == 1 {
+        return;
+    }
+    if (level as u8) > current {
+        MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+    }
+}
+
+/// Emit one log line (call sites go through the `log_*!` macros, which
+/// check [`enabled`] first).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{}] {}", level.name(), args);
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::Level::Error) {
+            $crate::obs::log::emit($crate::obs::Level::Error, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::Level::Warn) {
+            $crate::obs::log::emit($crate::obs::Level::Warn, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::Level::Info) {
+            $crate::obs::log::emit($crate::obs::Level::Info, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::Level::Debug) {
+            $crate::obs::log::emit($crate::obs::Level::Debug, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(Level::Error < Level::Debug);
+        assert_eq!(Level::from_env("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_env(" debug "), Some(Level::Debug));
+        assert_eq!(Level::from_env("off"), Some(Level::Off));
+        assert_eq!(Level::from_env("???"), None);
+    }
+
+    #[test]
+    fn set_max_level_only_raises() {
+        // Whatever the env says, raising to Debug must enable Info…
+        set_max_level(Level::Debug);
+        if FROM_ENV.load(Ordering::Relaxed) == 0 {
+            assert!(enabled(Level::Info));
+            // …and a later lower request must not lower it back.
+            set_max_level(Level::Error);
+            assert!(enabled(Level::Info));
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Observability: structured event tracing, streaming quantiles, and
+//! straggler attribution for the coded training loop.
+//!
+//! The paper's whole argument is about *which* learners straggle and
+//! *when* the received prefix becomes decodable — quantities the
+//! per-phase means in [`crate::metrics`] cannot show. This module adds
+//! the missing telemetry substrate, hand-rolled like the rest of the
+//! repo (no serde / tracing / log crates):
+//!
+//! * [`Event`] / [`Tracer`] / [`EventLog`] — a bounded ring buffer of
+//!   timestamped hot-loop events (task sends, arrivals with their
+//!   disposition, rank advances, decode outcomes, cancellations),
+//!   stamped off a [`crate::sim::ClockRef`] so real and virtual-time
+//!   runs share one code path. **Off by default**: a disabled tracer's
+//!   `record` is a branch on a plain bool and never constructs the
+//!   event, so the traced loop is bit-identical to the untraced one
+//!   (pinned by `tests/obs_integration.rs`).
+//! * [`export`] — JSONL and Chrome trace-event writers
+//!   (`--trace-out run.trace.json`; load in Perfetto / `chrome://tracing`,
+//!   one lane per learner plus one for the controller).
+//! * [`quantile`] — a streaming P² sketch ([`Quantiles`]: p50/p90/p99
+//!   without storing samples), replacing mean-only reporting in sweep
+//!   tables and `BENCH_*.json`.
+//! * [`attribution`] — per-learner straggler attribution (arrival-rank
+//!   histograms, tail-latency quantiles, injected-vs-organic split),
+//!   decodability-front stats, and wasted-work accounting
+//!   ([`WasteStats`]: bytes + compute of post-decodable / cancelled
+//!   results).
+//! * [`log`] — the tiny leveled stderr logger (`CODED_MARL_LOG=
+//!   error|warn|info|debug|off`) that replaced the ad-hoc `eprintln!`
+//!   calls in `coordinator/` and `sim/`.
+//!
+//! ROADMAP item 1 (Adaptive Gradient Coding's online disturbance
+//! estimator) consumes this layer: [`Attribution`] and the event
+//! stream are exactly the observed-straggler signal it needs.
+
+pub mod attribution;
+pub mod event;
+pub mod export;
+pub mod log;
+pub mod quantile;
+pub mod trace;
+
+pub use attribution::{AttrSummary, Attribution, WasteStats};
+pub use event::{Disposition, Event, TracedEvent};
+pub use log::Level;
+pub use quantile::{P2Quantile, Quantiles};
+pub use trace::{EventLog, Tracer, DEFAULT_EVENT_CAP};

@@ -1,0 +1,170 @@
+//! The bounded [`EventLog`] ring buffer and the [`Tracer`] handle the
+//! hot loop records through.
+//!
+//! A [`Tracer`] is shared (`Arc`) between the controller and its
+//! transport so both sides of the wire append to one timeline. The
+//! enabled flag is fixed at construction: the disabled tracer's
+//! [`Tracer::record`] is a single branch on a plain bool — it never
+//! reads the clock, never takes the lock, and never even constructs
+//! the event (callers pass a closure), which is what keeps untraced
+//! runs bit-identical to the pre-tracing code path.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{real_clock, ClockRef};
+
+use super::event::{Event, TracedEvent};
+
+/// Default ring capacity: ~64k events ≈ hundreds of 15-learner
+/// iterations; old events are dropped (and counted) rather than
+/// growing without bound at N = 10 000.
+pub const DEFAULT_EVENT_CAP: usize = 1 << 16;
+
+/// Bounded ring buffer of timestamped events.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    cap: usize,
+    events: VecDeque<TracedEvent>,
+    dropped: u64,
+}
+
+impl EventLog {
+    pub fn new(cap: usize) -> EventLog {
+        EventLog { cap, events: VecDeque::new(), dropped: 0 }
+    }
+
+    /// Append, evicting the oldest event when full.
+    pub fn push(&mut self, ev: TracedEvent) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted (or refused by a zero-capacity log) so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Copy the buffered events out, oldest first.
+    pub fn snapshot(&self) -> Vec<TracedEvent> {
+        self.events.iter().cloned().collect()
+    }
+}
+
+/// Shared recording handle stamped off a [`ClockRef`].
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    clock: ClockRef,
+    log: Mutex<EventLog>,
+}
+
+impl Tracer {
+    /// The no-op tracer: `record` is a branch and nothing else.
+    pub fn disabled() -> Arc<Tracer> {
+        Arc::new(Tracer {
+            enabled: false,
+            clock: real_clock(),
+            log: Mutex::new(EventLog::new(0)),
+        })
+    }
+
+    /// A recording tracer on `clock` (the transport's time domain, so
+    /// virtual runs produce virtual-time traces).
+    pub fn enabled(clock: ClockRef, cap: usize) -> Arc<Tracer> {
+        Arc::new(Tracer { enabled: true, clock, log: Mutex::new(EventLog::new(cap)) })
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record the event built by `ev`, stamped with the clock's now.
+    /// When disabled the closure is never called.
+    #[inline]
+    pub fn record(&self, ev: impl FnOnce() -> Event) {
+        if !self.enabled {
+            return;
+        }
+        let at = self.clock.now();
+        let mut log = self.log.lock().expect("event log poisoned");
+        log.push(TracedEvent { at, event: ev() });
+    }
+
+    /// Copy the buffered events out, oldest first.
+    pub fn snapshot(&self) -> Vec<TracedEvent> {
+        self.log.lock().expect("event log poisoned").snapshot()
+    }
+
+    /// Events lost to the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.log.lock().expect("event log poisoned").dropped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn ring_bounds_and_counts_evictions() {
+        let mut log = EventLog::new(3);
+        for i in 0..5u64 {
+            log.push(TracedEvent {
+                at: Duration::from_nanos(i),
+                event: Event::IterStart { iter: i },
+            });
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 2);
+        let evs = log.snapshot();
+        assert_eq!(evs[0].event, Event::IterStart { iter: 2 }, "oldest events evicted first");
+        assert_eq!(evs[2].event, Event::IterStart { iter: 4 });
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_skips_the_closure() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        let mut called = false;
+        t.record(|| {
+            called = true;
+            Event::IterStart { iter: 0 }
+        });
+        assert!(!called, "disabled tracer must not construct events");
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn enabled_tracer_stamps_off_the_given_clock() {
+        let vc = crate::sim::VirtualClock::shared();
+        vc.advance_to(Duration::from_millis(7));
+        let clock: ClockRef = vc.clone();
+        let t = Tracer::enabled(clock, 16);
+        assert!(t.is_enabled());
+        t.record(|| Event::IterStart { iter: 1 });
+        vc.advance_to(Duration::from_millis(9));
+        t.record(|| Event::IterEnd { iter: 1 });
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].at, Duration::from_millis(7));
+        assert_eq!(evs[1].at, Duration::from_millis(9));
+        assert_eq!(t.dropped(), 0);
+    }
+}

@@ -39,6 +39,7 @@ use crate::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
 use crate::metrics::table::Table;
 use crate::metrics::{RunLog, Stats};
 use crate::model::NetStats;
+use crate::obs::{AttrSummary, Quantiles, WasteStats};
 
 /// A sweep grid: the cross product of `schemes` × `ks`, run on top of
 /// `base` (whose `scheme`/`straggler.k`/`straggler.delay` are
@@ -123,8 +124,42 @@ pub struct SweepCell {
     /// [`Stats::merge`] for grid-level summaries
     /// ([`grid_iter_stats`]).
     pub iter_stats: Stats,
+    /// Streaming per-iteration time quantiles (seconds) over the same
+    /// non-warmup iterations — P² sketches, so p50/p90/p99 come at
+    /// O(1) memory per cell. **Not** mergeable across cells (unlike
+    /// [`Stats`]); grid summaries report the per-cell range instead
+    /// ([`grid_p99_range`]).
+    pub iter_q: Quantiles,
+    /// Wasted work over the cell: post-decodable / duplicate /
+    /// malformed arrivals plus transport-cancelled in-flight results.
+    pub waste: WasteStats,
+    /// Straggler-attribution summary (decodability front, tail
+    /// learner, injected-vs-organic split).
+    pub attr: AttrSummary,
     /// Wall-clock spent executing the cell (not simulated time).
     pub wall: Duration,
+}
+
+/// Range of the per-cell p99 iteration times across the grid, seconds
+/// (`(min, max)`; `None` when no cell measured anything). P² sketches
+/// cannot be merged, so the grid-level tail is reported as a range
+/// over cells rather than a pooled quantile.
+pub fn grid_p99_range(cells: &[SweepCell]) -> Option<(f64, f64)> {
+    let mut range: Option<(f64, f64)> = None;
+    for c in cells {
+        if c.iter_q.count() == 0 {
+            continue;
+        }
+        let p99 = c.iter_q.p99();
+        if !p99.is_finite() {
+            continue;
+        }
+        range = Some(match range {
+            None => (p99, p99),
+            Some((lo, hi)) => (lo.min(p99), hi.max(p99)),
+        });
+    }
+    range
 }
 
 /// Grid-level per-iteration statistics: every cell's [`Stats`] merged
@@ -214,11 +249,23 @@ struct SchemeInfo {
 
 /// Run one (scheme, k) cell: a fresh short training with the scheme's
 /// derived seed. Pure function of its arguments — the shard pool and
-/// the serial loop produce identical cells.
-fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) -> Result<SweepCell> {
+/// the serial loop produce identical cells. Only the grid's `first`
+/// cell honours `base.trace_out` (every cell tracing would have N
+/// cells overwrite one file); tracing never perturbs timing, so the
+/// traced cell is bit-identical to its untraced twin.
+fn run_cell(
+    sweep: &SweepConfig,
+    scheme: Scheme,
+    k: usize,
+    info: &SchemeInfo,
+    first: bool,
+) -> Result<SweepCell> {
     let wall_t = std::time::Instant::now();
     let mut cfg = sweep.base.clone();
     cfg.scheme = scheme;
+    if !first {
+        cfg.trace_out = None;
+    }
     // A trace-replay sweep's disturbance comes from the recorded
     // trace, not the synthetic injector (the combination is rejected
     // by `TrainConfig::validate`); such sweeps run with `ks = [0]`.
@@ -236,9 +283,13 @@ fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) ->
     let decode_plan = ctrl.decode_plan_stats();
     let net = ctrl.net_stats().unwrap_or_default();
     let mut iter_stats = Stats::new();
+    let mut iter_q = Quantiles::new();
     for r in ctrl.log.records.iter().filter(|r| r.decode_method != "warmup") {
         iter_stats.push(r.timing.total.as_secs_f64());
+        iter_q.push(r.timing.total.as_secs_f64());
     }
+    let waste = ctrl.waste_stats();
+    let attr = ctrl.attribution().summary();
     ctrl.shutdown();
     Ok(SweepCell {
         scheme,
@@ -253,6 +304,9 @@ fn run_cell(sweep: &SweepConfig, scheme: Scheme, k: usize, info: &SchemeInfo) ->
         decode_plan,
         net,
         iter_stats,
+        iter_q,
+        waste,
+        attr,
         wall: wall_t.elapsed(),
     })
 }
@@ -303,7 +357,8 @@ pub fn run_sweep(sweep: &SweepConfig) -> Result<Vec<SweepCell>> {
     if threads <= 1 {
         return jobs
             .iter()
-            .map(|&(s, k)| run_cell(sweep, sweep.schemes[s], k, &infos[s]))
+            .enumerate()
+            .map(|(i, &(s, k))| run_cell(sweep, sweep.schemes[s], k, &infos[s], i == 0))
             .collect();
     }
     // Shard pool: a shared job cursor and one pre-assigned result slot
@@ -317,7 +372,7 @@ pub fn run_sweep(sweep: &SweepConfig) -> Result<Vec<SweepCell>> {
             scope.spawn(|| loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 let Some(&(s, k)) = jobs.get(i) else { break };
-                let out = run_cell(sweep, sweep.schemes[s], k, &infos[s]);
+                let out = run_cell(sweep, sweep.schemes[s], k, &infos[s], i == 0);
                 *slots[i].lock().expect("sweep slot poisoned") = Some(out);
             });
         }
@@ -342,6 +397,7 @@ pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
     headers.extend(ks.iter().map(|k| format!("k={k}")));
     headers.push("redundancy".into());
     headers.push("tolerance".into());
+    headers.push("iter p50/p99".into());
     let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&header_refs);
     let mut index: std::collections::HashMap<(Scheme, usize), &SweepCell> =
@@ -356,12 +412,21 @@ pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
     for scheme in schemes {
         let mut row = vec![scheme.name().to_string()];
         let mut info: Option<(f64, usize)> = None;
+        // The scheme's tail summary: the worst-p99 cell across its
+        // swept ks (P² sketches are per-cell; they cannot be pooled).
+        let mut tail: Option<(f64, f64)> = None;
         for &k in ks {
             match index.get(&(scheme, k)) {
                 Some(c) => {
                     row.push(format!("{:.1}ms", c.mean_iter.as_secs_f64() * 1e3));
                     if info.is_none() {
                         info = Some((c.redundancy, c.tolerance));
+                    }
+                    if c.iter_q.count() > 0 && c.iter_q.p99().is_finite() {
+                        let (p50, p99) = (c.iter_q.p50(), c.iter_q.p99());
+                        if tail.map_or(true, |(_, hi)| p99 > hi) {
+                            tail = Some((p50, p99));
+                        }
                     }
                 }
                 None => row.push("-".into()),
@@ -370,9 +435,24 @@ pub fn render_table(cells: &[SweepCell], ks: &[usize]) -> String {
         let (red, tol) = info.unwrap_or((f64::NAN, 0));
         row.push(format!("{red:.1}x"));
         row.push(tol.to_string());
+        row.push(match tail {
+            Some((p50, p99)) => format!("{:.1}/{:.1}ms", p50 * 1e3, p99 * 1e3),
+            None => "-".into(),
+        });
         table.row(&row);
     }
     table.render()
+}
+
+/// Quantile/attribution values for serialization: an empty sketch
+/// reports NaN, which neither CSV consumers nor strict JSON parsers
+/// accept — write 0 instead (a cell that measured nothing).
+fn finite_or_zero(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
 }
 
 /// One CSV row per cell (`scheme,k,mean_iter_s,mean_wait_s,total_s,…`;
@@ -385,12 +465,15 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
     writeln!(
         f,
         "scheme,k,mean_iter_s,mean_wait_s,total_s,wait_s,iters,redundancy,tolerance,\
-         decode_plan_hits,decode_plan_misses,net_broadcast_s,net_return_s"
+         decode_plan_hits,decode_plan_misses,net_broadcast_s,net_return_s,\
+         iter_p50_s,iter_p90_s,iter_p99_s,wasted_results,wasted_bytes,wasted_compute_s,\
+         front_p50_s,front_p99_s,tail_learner,tail_p99_s,injected_share"
     )?;
     for c in cells {
         writeln!(
             f,
-            "{},{},{:.6},{:.6},{:.9},{:.9},{},{:.3},{},{},{},{:.9},{:.9}",
+            "{},{},{:.6},{:.6},{:.9},{:.9},{},{:.3},{},{},{},{:.9},{:.9},\
+             {:.9},{:.9},{:.9},{},{},{:.9},{:.9},{:.9},{},{:.9},{:.6}",
             c.scheme.name(),
             c.k,
             c.mean_iter.as_secs_f64(),
@@ -404,6 +487,17 @@ pub fn write_csv(cells: &[SweepCell], path: impl AsRef<std::path::Path>) -> std:
             c.decode_plan.misses,
             c.net.broadcast().as_secs_f64(),
             c.net.ret().as_secs_f64(),
+            finite_or_zero(c.iter_q.p50()),
+            finite_or_zero(c.iter_q.p90()),
+            finite_or_zero(c.iter_q.p99()),
+            c.waste.results,
+            c.waste.bytes,
+            c.waste.compute_secs(),
+            finite_or_zero(c.attr.front_p50_s),
+            finite_or_zero(c.attr.front_p99_s),
+            c.attr.tail_learner.map_or(-1i64, |j| j as i64),
+            finite_or_zero(c.attr.tail_p99_s),
+            finite_or_zero(c.attr.injected_share),
         )?;
     }
     f.flush()
@@ -428,7 +522,11 @@ fn cell_json(c: &SweepCell) -> String {
          \"redundancy\": {:.6}, \"tolerance\": {}, \"decode_plan_hits\": {}, \
          \"decode_plan_misses\": {}, \"net_broadcast_s\": {:.9}, \"net_return_s\": {:.9}, \
          \"net_broadcast_per_iter_s\": {:.9}, \"net_return_per_iter_s\": {:.9}, \
-         \"net_tasks\": {}, \"net_bodies\": {}, \"wall_s\": {:.6}}}",
+         \"net_tasks\": {}, \"net_bodies\": {}, \
+         \"iter_p50_s\": {:.9}, \"iter_p90_s\": {:.9}, \"iter_p99_s\": {:.9}, \
+         \"wasted_results\": {}, \"wasted_bytes\": {}, \"wasted_compute_s\": {:.9}, \
+         \"front_p50_s\": {:.9}, \"front_p99_s\": {:.9}, \"tail_learner\": {}, \
+         \"tail_p99_s\": {:.9}, \"injected_share\": {:.6}, \"wall_s\": {:.6}}}",
         c.scheme.name(),
         c.k,
         c.mean_iter.as_secs_f64(),
@@ -446,6 +544,17 @@ fn cell_json(c: &SweepCell) -> String {
         per_iter(c.net.ret()),
         c.net.tasks,
         c.net.bodies,
+        finite_or_zero(c.iter_q.p50()),
+        finite_or_zero(c.iter_q.p90()),
+        finite_or_zero(c.iter_q.p99()),
+        c.waste.results,
+        c.waste.bytes,
+        c.waste.compute_secs(),
+        finite_or_zero(c.attr.front_p50_s),
+        finite_or_zero(c.attr.front_p99_s),
+        c.attr.tail_learner.map_or("null".to_string(), |j| j.to_string()),
+        finite_or_zero(c.attr.tail_p99_s),
+        finite_or_zero(c.attr.injected_share),
         c.wall.as_secs_f64(),
     )
 }
@@ -508,10 +617,16 @@ pub fn run_bandwidth_sweep(
 ) -> Result<Vec<ModelSweepPoint>> {
     bandwidths
         .iter()
-        .map(|&bw| {
+        .enumerate()
+        .map(|(i, &bw)| {
             let wall_t = std::time::Instant::now();
             let mut base = sweep.base.clone();
             base.net.bandwidth_mbps = bw;
+            // Only the first point's first cell traces — every point
+            // tracing would overwrite one `trace_out` file per point.
+            if i > 0 {
+                base.trace_out = None;
+            }
             let cells = run_sweep(&SweepConfig {
                 base,
                 spec: sweep.spec.clone(),
@@ -707,7 +822,7 @@ pub fn run_scale_study(cfg: &ScaleStudyConfig) -> Result<Vec<ScalePoint>> {
 /// the sparse code overtakes MDS at that point).
 pub fn crossover_summary(points: &[ScalePoint]) -> String {
     let mut table =
-        Table::new(&["dist", "N", "k", "winner", "mean_iter", "ldpc/mds"]);
+        Table::new(&["dist", "N", "k", "winner", "mean_iter", "iter_p99", "ldpc/mds"]);
     for p in points {
         for &k in &p.ks {
             let at = |s: Scheme| p.cells.iter().find(|c| c.scheme == s && c.k == k);
@@ -726,12 +841,18 @@ pub fn crossover_summary(points: &[ScalePoint]) -> String {
                 ),
                 _ => "-".into(),
             };
+            let p99 = if winner.iter_q.count() > 0 && winner.iter_q.p99().is_finite() {
+                format!("{:.1}ms", winner.iter_q.p99() * 1e3)
+            } else {
+                "-".into()
+            };
             table.row(&[
                 p.dist.label(),
                 p.n.to_string(),
                 k.to_string(),
                 winner.scheme.name().to_string(),
                 format!("{:.1}ms", winner.mean_iter.as_secs_f64() * 1e3),
+                p99,
                 ratio,
             ]);
         }
@@ -835,14 +956,40 @@ mod tests {
             mds_k3.mean_iter
         );
         assert_eq!(mds_k3.tolerance, 3);
+        // Observability rides on every cell: per-iteration quantiles
+        // over exactly the measured iterations, finite and ordered…
+        for c in &cells {
+            assert_eq!(c.iter_q.count(), 3, "{}/{}", c.scheme, c.k);
+            let (p50, p99) = (c.iter_q.p50(), c.iter_q.p99());
+            assert!(p50.is_finite() && p99.is_finite() && p50 <= p99, "{}/{}", c.scheme, c.k);
+            assert!((c.iter_q.p99() - c.iter_stats.max()).abs() < 1e-12, "3 samples: p99 = max");
+        }
+        // …attribution: with every learner injected, every used arrival
+        // is injected; the k = N cell waits out t_s so the front is
+        // (near-)zero only when arrivals are simultaneous.
+        assert_eq!(unc_all.attr.injected_share, 1.0, "k = N ⇒ all used arrivals injected");
+        assert!(unc_all.attr.tail_learner.is_some());
+        // …and wasted work: MDS reaches decodability while 3 straggler
+        // results are still in flight — they are cancelled or arrive
+        // post-decodable, either way counted as waste.
+        assert!(
+            mds_k3.waste.results > 0,
+            "straggler results past decodability must be accounted as waste"
+        );
+        assert!(mds_k3.waste.bytes > 0);
         let txt = render_table(&cells, &sweep.ks);
         assert!(txt.contains("uncoded") && txt.contains("mds"));
+        assert!(txt.contains("iter p50/p99"), "tail column present:\n{txt}");
+        let (lo, hi) = grid_p99_range(&cells).expect("measured cells");
+        assert!(lo <= hi && lo > 0.0);
     }
 
     fn cell(scheme: Scheme, k: usize) -> SweepCell {
         let mut iter_stats = Stats::new();
+        let mut iter_q = Quantiles::new();
         for _ in 0..5 {
             iter_stats.push(0.012);
+            iter_q.push(0.012);
         }
         SweepCell {
             scheme,
@@ -857,6 +1004,9 @@ mod tests {
             decode_plan: PlanCacheStats { hits: 4, misses: 1, entries: 1 },
             net: NetStats::default(),
             iter_stats,
+            iter_q,
+            waste: WasteStats { results: 2, bytes: 100, compute_ns: 3_000_000 },
+            attr: AttrSummary { tail_learner: Some(5), tail_p99_s: 0.040, ..Default::default() },
             wall: Duration::from_millis(3),
         }
     }
@@ -932,8 +1082,20 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2);
         assert!(text.contains("mds,2,0.012"));
-        assert!(text.lines().next().unwrap().contains("decode_plan_hits"));
+        let header = text.lines().next().unwrap();
+        assert!(header.contains("decode_plan_hits"));
         assert!(text.contains(",4,1"), "cache counters must be recorded: {text}");
+        // Observability columns ride at the END of the row so existing
+        // consumers keep their positional reads.
+        assert!(header.ends_with(
+            "iter_p50_s,iter_p90_s,iter_p99_s,wasted_results,wasted_bytes,wasted_compute_s,\
+             front_p50_s,front_p99_s,tail_learner,tail_p99_s,injected_share"
+        ));
+        let row = text.lines().nth(1).unwrap();
+        assert!(row.contains(",2,100,0.003000000,"), "waste columns: {row}");
+        assert!(row.contains(",5,0.040000000,"), "tail learner + p99: {row}");
+        // 5 × 0.012 → the exact-below-5-samples quantile path
+        assert!(row.contains("0.012000000,0.012000000,0.012000000"), "quantiles: {row}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -950,7 +1112,17 @@ mod tests {
         assert_eq!(json.get("decode_plan_misses").unwrap().as_usize().unwrap(), 2);
         let rate = json.get("decode_plan_hit_rate").unwrap().as_f64().unwrap();
         assert!((rate - 0.8).abs() < 1e-9);
-        assert_eq!(json.get("cells").unwrap().as_arr().unwrap().len(), 2);
+        let cells_json = json.get("cells").unwrap();
+        assert_eq!(cells_json.as_arr().unwrap().len(), 2);
+        // Observability keys ride on every cell, finite numbers only
+        // (empty sketches serialize as 0, never NaN).
+        let c0 = &cells_json.as_arr().unwrap()[0];
+        assert!((c0.get("iter_p99_s").unwrap().as_f64().unwrap() - 0.012).abs() < 1e-12);
+        assert_eq!(c0.get("wasted_results").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(c0.get("wasted_bytes").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(c0.get("tail_learner").unwrap().as_usize().unwrap(), 5);
+        assert!((c0.get("tail_p99_s").unwrap().as_f64().unwrap() - 0.040).abs() < 1e-12);
+        assert_eq!(c0.get("injected_share").unwrap().as_f64().unwrap(), 0.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

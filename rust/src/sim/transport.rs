@@ -65,6 +65,7 @@ use crate::linalg::kernels;
 use crate::linalg::pool::BufPool;
 use crate::marl::ModelDims;
 use crate::model::{NetStats, SystemModel};
+use crate::obs::{Event as ObsEvent, Tracer, WasteStats};
 use crate::transport::msg::{result_wire_len, task_header_wire_len};
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
 
@@ -138,6 +139,14 @@ pub struct SimTransport {
     /// waits the same body leg.
     net_iter: Option<u64>,
     net_body_time: Duration,
+    /// Run tracer shared with the controller
+    /// ([`ControllerTransport::set_tracer`]); disabled by default.
+    tracer: Arc<Tracer>,
+    /// Wasted work only the transport can see: results cancelled while
+    /// in flight (acked / superseded before delivery). Always counted
+    /// — it is a pure accumulator over values the cancellation path
+    /// already holds.
+    waste: WasteStats,
 }
 
 impl SimTransport {
@@ -181,7 +190,7 @@ impl SimTransport {
             .map(|id| match factory(id as u32) {
                 Ok(b) => Some(b),
                 Err(e) => {
-                    eprintln!(
+                    crate::log_error!(
                         "sim learner {id}: backend construction failed: {e:#}; \
                          treating as permanent erasure"
                     );
@@ -249,6 +258,8 @@ impl SimTransport {
             model,
             net_iter: None,
             net_body_time: Duration::ZERO,
+            tracer: Tracer::disabled(),
+            waste: WasteStats::default(),
         }
     }
 
@@ -388,8 +399,20 @@ impl ControllerTransport for SimTransport {
             if top.generation != self.learners[top.learner].generation {
                 // Cancelled (superseded task / acked iteration): its
                 // result vector goes back to the pool instead of the
-                // allocator.
-                if let Some(Event { msg: LearnerMsg::Result { y, .. }, .. }) = self.events.pop() {
+                // allocator, and its bytes/compute count as waste —
+                // the threaded learner would have burned them too
+                // before noticing the ack.
+                if let Some(Event { msg: LearnerMsg::Result { iter, learner_id, y, compute_ns }, .. }) =
+                    self.events.pop()
+                {
+                    let bytes = result_wire_len(y.len()) as u64;
+                    self.waste.add(bytes, compute_ns);
+                    self.tracer.record(|| ObsEvent::ResultCancelled {
+                        iter,
+                        learner: learner_id,
+                        bytes,
+                        compute_ns,
+                    });
                     self.pool.put(y);
                 }
                 continue;
@@ -407,6 +430,12 @@ impl ControllerTransport for SimTransport {
             // Delivered: NOW the return frame counts as traffic.
             if !ev.net_out.is_zero() {
                 self.model.network.record_return(ev.net_out);
+            }
+            if self.tracer.is_enabled() {
+                if let LearnerMsg::Result { learner_id, ref y, .. } = ev.msg {
+                    let bytes = result_wire_len(y.len()) as u64;
+                    self.tracer.record(|| ObsEvent::FrameRecv { learner: learner_id, bytes });
+                }
             }
             return Ok(Some(ev.msg));
         }
@@ -430,6 +459,14 @@ impl ControllerTransport for SimTransport {
 
     fn net_stats(&self) -> Option<NetStats> {
         Some(self.model.network.stats())
+    }
+
+    fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = tracer;
+    }
+
+    fn waste_stats(&self) -> Option<WasteStats> {
+        Some(self.waste)
     }
 }
 
@@ -745,6 +782,45 @@ mod tests {
         sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
         assert_eq!(sim.virtual_clock().now(), Duration::from_millis(2));
         assert_eq!(sim.net_stats().unwrap(), NetStats::default());
+    }
+
+    /// Cancelled in-flight results are wasted work: the transport
+    /// counts their exact wire bytes + modeled compute always, and —
+    /// with a tracer installed — records a `result_cancelled` event on
+    /// the shared timeline (delivered results record `frame_recv`).
+    #[test]
+    fn cancellation_waste_is_counted_and_traced() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(2));
+        assert_eq!(sim.waste_stats(), Some(WasteStats::default()));
+        let tracer = Tracer::enabled(sim.clock(), 64);
+        sim.set_tracer(Arc::clone(&tracer));
+        let mut rng = Pcg32::seeded(21);
+        let (msg, params, _) = task(3, vec![1.0, 0.0, 0.0], 50_000_000, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        sim.send_to(0, CtrlMsg::Ack { iter: 3 }).unwrap();
+        assert!(sim.recv_timeout(Duration::from_millis(100)).unwrap().is_none());
+        let waste = sim.waste_stats().unwrap();
+        assert_eq!(waste.results, 1);
+        assert_eq!(waste.bytes, result_wire_len(params[0].len()) as u64);
+        assert_eq!(waste.compute_ns, 2_000_000, "one modeled update was burned");
+        let evs = tracer.snapshot();
+        assert!(
+            evs.iter().any(|e| matches!(
+                e.event,
+                ObsEvent::ResultCancelled { iter: 3, learner: 0, .. }
+            )),
+            "{evs:?}"
+        );
+        // a delivered result records a frame receipt instead
+        let (msg2, _, _) = task(4, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg2).unwrap();
+        assert!(sim.recv_timeout(Duration::from_secs(1)).unwrap().is_some());
+        assert!(sim
+            .tracer
+            .snapshot()
+            .iter()
+            .any(|e| matches!(e.event, ObsEvent::FrameRecv { learner: 0, .. })));
+        assert_eq!(sim.waste_stats().unwrap().results, 1, "delivery is not waste");
     }
 
     #[test]

@@ -93,6 +93,22 @@ pub trait ControllerTransport {
     fn net_stats(&self) -> Option<crate::model::NetStats> {
         None
     }
+
+    /// Install the run's event tracer. The controller calls this once
+    /// at construction so transport-internal events (in-flight result
+    /// cancellations on the sim, frame receipts on TCP) land in the
+    /// same timeline as the controller's. The default ignores it —
+    /// transports with nothing transport-internal to report need no
+    /// state.
+    fn set_tracer(&mut self, _tracer: Arc<crate::obs::Tracer>) {}
+
+    /// Wasted work the *transport* observed (results cancelled while
+    /// in flight — the controller never sees those, so its own
+    /// [`crate::obs::WasteStats`] cannot count them). None when the
+    /// transport has no such visibility.
+    fn waste_stats(&self) -> Option<crate::obs::WasteStats> {
+        None
+    }
 }
 
 /// Learner-side endpoint.

@@ -10,12 +10,15 @@
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::msg::result_wire_len;
 use super::wire::read_frame;
 use super::{ControllerTransport, CtrlMsg, LearnerEndpoint, LearnerMsg};
+use crate::obs::{Event as ObsEvent, Tracer};
 
 /// Controller side: accepts `n` workers.
 pub struct TcpController {
@@ -23,6 +26,10 @@ pub struct TcpController {
     from_learners: Receiver<LearnerMsg>,
     reader_handles: Vec<std::thread::JoinHandle<()>>,
     _keep_tx: Sender<LearnerMsg>,
+    /// Run tracer ([`ControllerTransport::set_tracer`]); disabled by
+    /// default. Result frames are stamped when the controller thread
+    /// drains them — one timeline, no cross-thread clock reads.
+    tracer: Arc<Tracer>,
 }
 
 /// Bound-but-not-yet-accepting listener: exposes the address so the
@@ -53,6 +60,7 @@ impl TcpController {
             from_learners: channel().1,
             reader_handles: Vec::new(),
             _keep_tx: channel().0,
+            tracer: Tracer::disabled(),
         };
         let (tx, rx) = channel::<LearnerMsg>();
         for id in 0..n {
@@ -75,7 +83,7 @@ impl TcpController {
                                     }
                                 }
                                 Err(e) => {
-                                    eprintln!("tcp: bad frame from {peer}: {e}");
+                                    crate::log_warn!("tcp: bad frame from {peer}: {e}");
                                     return;
                                 }
                             },
@@ -108,12 +116,24 @@ impl ControllerTransport for TcpController {
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<LearnerMsg>> {
         match self.from_learners.recv_timeout(timeout) {
-            Ok(m) => Ok(Some(m)),
+            Ok(m) => {
+                if self.tracer.is_enabled() {
+                    if let LearnerMsg::Result { learner_id, ref y, .. } = m {
+                        let bytes = result_wire_len(y.len()) as u64;
+                        self.tracer.record(|| ObsEvent::FrameRecv { learner: learner_id, bytes });
+                    }
+                }
+                Ok(Some(m))
+            }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 Err(anyhow!("all worker connections closed"))
             }
         }
+    }
+
+    fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = tracer;
     }
 
     fn shutdown(&mut self) {
@@ -162,7 +182,7 @@ impl TcpLearner {
                                 }
                             }
                             Err(e) => {
-                                eprintln!("tcp worker: bad frame: {e}");
+                                crate::log_warn!("tcp worker: bad frame: {e}");
                                 return;
                             }
                         },

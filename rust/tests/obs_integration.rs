@@ -1,0 +1,180 @@
+//! Integration tests for the observability layer (`coded_marl::obs`):
+//!
+//! 1. **Zero-cost contract** — enabling `--trace-out` must not perturb
+//!    the run: a traced virtual training replays bit-identical
+//!    parameters AND per-iteration timing telemetry vs its untraced
+//!    twin (the tracer only *reads* the clock; it never consumes RNG
+//!    or adds virtual events).
+//! 2. **Trace artifact** — the Chrome trace-event file parses with the
+//!    repo's own JSON parser, lays one lane per learner plus the
+//!    controller lane, and carries one `iter` span per iteration
+//!    (warmup included).
+//! 3. **Derived analytics** — straggler attribution and wasted-work
+//!    accounting report sane values for a run with injected stragglers.
+
+use std::time::Duration;
+
+use coded_marl::coding::Scheme;
+use coded_marl::config::{Backend, StragglerConfig, TimeMode, TrainConfig};
+use coded_marl::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
+use coded_marl::env::EnvKind;
+use coded_marl::marl::AgentParams;
+use coded_marl::metrics::RunLog;
+use coded_marl::obs::{AttrSummary, WasteStats};
+use coded_marl::runtime::json::Json;
+
+fn spec() -> RunSpec {
+    RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4)
+}
+
+/// MDS with 2 injected stragglers (within tolerance N−M = 3): the
+/// scheme masks them, so their late results become cancelled /
+/// post-decodable work — exactly what the waste accounting measures.
+fn cfg(seed: u64, trace_out: Option<std::path::PathBuf>) -> TrainConfig {
+    let mut cfg = TrainConfig::new("synthetic");
+    cfg.backend = Backend::Mock;
+    cfg.time_mode = TimeMode::Virtual;
+    cfg.scheme = Scheme::Mds;
+    cfg.n_learners = 7;
+    cfg.iterations = 7;
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 8;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = Duration::from_millis(2);
+    cfg.straggler = StragglerConfig::fixed(2, Duration::from_millis(100));
+    cfg.seed = seed;
+    cfg.trace_out = trace_out;
+    cfg
+}
+
+struct Run {
+    agents: Vec<AgentParams>,
+    log: RunLog,
+    waste: WasteStats,
+    attr: AttrSummary,
+}
+
+fn train(cfg: &TrainConfig) -> Run {
+    let run_spec = spec();
+    let factory = backend_factory(cfg, "unused", &run_spec);
+    let pool = spawn_pool(cfg, factory).unwrap();
+    let mut ctrl = Controller::new(cfg.clone(), run_spec, pool).unwrap();
+    ctrl.train().unwrap();
+    let run = Run {
+        agents: ctrl.agents().to_vec(),
+        log: std::mem::take(&mut ctrl.log),
+        waste: ctrl.waste_stats(),
+        attr: ctrl.attribution().summary(),
+    };
+    ctrl.shutdown();
+    run
+}
+
+fn max_param_diff(a: &[AgentParams], b: &[AgentParams]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.max_abs_diff(y)).fold(0.0, f32::max)
+}
+
+fn str_of<'a>(e: &'a Json, k: &str) -> Option<&'a str> {
+    e.get(k).ok().and_then(|v| v.as_str().ok())
+}
+
+/// Tracing must be invisible to the run itself: same parameters, same
+/// virtual timing, same straggler draws as the untraced twin — the
+/// acceptance bar that lets a traced cell stand in for any cell.
+#[test]
+fn tracing_does_not_perturb_the_run() {
+    let dir = std::env::temp_dir().join("coded_marl_obs_bitident");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("run.trace.json");
+    let plain = train(&cfg(42, None));
+    let traced = train(&cfg(42, Some(trace.clone())));
+    assert_eq!(
+        max_param_diff(&plain.agents, &traced.agents),
+        0.0,
+        "tracing must not perturb parameters"
+    );
+    assert_eq!(plain.log.len(), traced.log.len());
+    for (x, y) in plain.log.records.iter().zip(traced.log.records.iter()) {
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "iter {}", x.iter);
+        assert_eq!(x.timing.total, y.timing.total, "iter {}: total diverged", x.iter);
+        assert_eq!(x.timing.wait, y.timing.wait, "iter {}: wait diverged", x.iter);
+        assert_eq!(x.stragglers, y.stragglers, "iter {}", x.iter);
+        assert_eq!(x.decode_method, y.decode_method, "iter {}", x.iter);
+    }
+    // …and the always-on analytics agree too (they are part of the
+    // deterministic run state, not a tracing side effect).
+    assert_eq!(plain.waste, traced.waste);
+    assert_eq!(plain.attr.tail_learner, traced.attr.tail_learner);
+    assert_eq!(plain.attr.front_p99_s.to_bits(), traced.attr.front_p99_s.to_bits());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The written Chrome trace parses with the repo's own JSON parser,
+/// names one lane per learner, and carries one `iter` span per
+/// iteration (warmup included); the JSONL twin parses line by line.
+#[test]
+fn trace_file_has_per_learner_lanes_and_iter_spans() {
+    let dir = std::env::temp_dir().join("coded_marl_obs_tracefile");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("run.trace.json");
+    let c = cfg(7, Some(trace.clone()));
+    let _ = train(&c);
+
+    let txt = std::fs::read_to_string(&trace).expect("trace file written");
+    let doc = Json::parse(&txt).expect("trace must be valid JSON");
+    let evs = doc.get("traceEvents").unwrap().as_arr().expect("traceEvents array");
+    let lane_names: Vec<&str> = evs
+        .iter()
+        .filter(|e| str_of(e, "ph") == Some("M"))
+        .filter_map(|e| e.get("args").ok().and_then(|a| str_of(a, "name")))
+        .collect();
+    assert!(lane_names.contains(&"controller"), "{lane_names:?}");
+    for j in 0..c.n_learners {
+        let want = format!("learner {j}");
+        assert!(lane_names.iter().any(|n| *n == want), "missing lane {want}: {lane_names:?}");
+    }
+    let iter_spans = evs
+        .iter()
+        .filter(|e| str_of(e, "ph") == Some("X") && str_of(e, "name") == Some("iter"))
+        .count();
+    assert_eq!(iter_spans, c.iterations, "one iter span per iteration, warmup included");
+    // injected stragglers and decodability instants make it onto lanes
+    assert!(evs.iter().any(|e| str_of(e, "name") == Some("straggle")), "straggle instants");
+    assert!(evs.iter().any(|e| str_of(e, "name") == Some("decodable")), "decodable instants");
+    assert!(evs.iter().any(|e| str_of(e, "name") == Some("task")), "task spans");
+
+    let jsonl = std::fs::read_to_string(trace.with_extension("jsonl")).expect("jsonl twin");
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert!(!lines.is_empty());
+    for l in &lines {
+        let v = Json::parse(l).unwrap_or_else(|e| panic!("bad jsonl line {l}: {e}"));
+        assert!(str_of(&v, "ev").is_some(), "{l}");
+    }
+    assert!(jsonl.contains("\"ev\":\"result_arrival\""));
+    assert!(jsonl.contains("\"disposition\":\"used\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Straggler attribution and wasted-work accounting over a run where
+/// MDS masks 2 injected stragglers every iteration: their late results
+/// are pure waste, every used arrival beats the injected delay, and
+/// the decodability-front quantiles are finite and ordered.
+#[test]
+fn attribution_and_waste_report_sane_values() {
+    let run = train(&cfg(3, None));
+    assert!(
+        run.waste.results > 0,
+        "masked stragglers' results must be accounted as waste"
+    );
+    assert!(run.waste.bytes > 0);
+    assert!(run.waste.compute_secs() >= 0.0);
+    let a = &run.attr;
+    assert!(a.front_p50_s.is_finite() && a.front_p99_s.is_finite());
+    assert!(a.front_p50_s <= a.front_p99_s, "{} <= {}", a.front_p50_s, a.front_p99_s);
+    assert!(a.tail_learner.is_some(), "someone must own the tail");
+    assert!((0.0..=1.0).contains(&a.injected_share), "{}", a.injected_share);
+    // within tolerance, the injected stragglers never decide an
+    // iteration: the used arrivals are all organic
+    assert_eq!(a.injected_share, 0.0, "MDS masks k <= N-M: no injected result is used");
+    assert!(a.tail_p99_s >= 0.0);
+}
