@@ -186,6 +186,16 @@ impl Code {
         }
     }
 
+    /// The code restricted to the row subset `keep` (elastic
+    /// membership): row `r` of the result is row `keep[r]` of this
+    /// code. Restriction — unlike a fresh n′-row draw of the same
+    /// scheme, which for the random constructions can be
+    /// rank-deficient — inherits decodability for every survivor set
+    /// the original tolerance covers.
+    pub fn restrict_rows(&self, keep: &[usize]) -> Code {
+        Code::from_matrix(self.scheme, self.c.select_rows(keep), self.p_m)
+    }
+
     /// The precomputed incremental-rank tolerance (see [`RankTracker`]).
     pub(crate) fn rank_eps(&self) -> f64 {
         self.rank_eps

@@ -256,6 +256,102 @@ impl StragglerConfig {
     }
 }
 
+/// What the controller does when the surviving membership can no
+/// longer reach rank M (crashes beyond the code's worst-case
+/// tolerance mid-iteration, or fewer than M survivors overall).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradedMode {
+    /// Terminate deterministically with a structured
+    /// [`crate::coordinator::failure::FaultError`] naming the dead
+    /// learners (the default — sweeps record the cell as degraded).
+    Error,
+    /// Force the currently-lost learners out of the membership, fall
+    /// back to an uncoded assignment over the survivors, and retry the
+    /// iteration — training continues as long as ≥ M learners survive.
+    Uncoded,
+}
+
+impl DegradedMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegradedMode::Error => "error",
+            DegradedMode::Uncoded => "uncoded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DegradedMode> {
+        match s {
+            "error" => Some(DegradedMode::Error),
+            "uncoded" => Some(DegradedMode::Uncoded),
+            _ => None,
+        }
+    }
+}
+
+/// Fault-injection and failure-handling knobs (`--crash-rate`,
+/// `--crash-restart-s`, `--omission-rate`, `--degraded-mode`,
+/// `--suspect-after`, `--dead-after`). Injection is drawn by
+/// [`crate::model::disturbance::FaultInjector`] on its own RNG stream
+/// and executed by [`crate::sim::SimTransport`]; with every knob at
+/// its default the injector is never constructed and runs are
+/// bit-identical to the pre-fault code.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-learner, per-iteration crash probability (0 = never). A
+    /// crashed learner swallows its task; its in-flight result is
+    /// cancelled.
+    pub crash_rate: f64,
+    /// Mean downtime of a crash-and-restart (exponential draw). `None`
+    /// makes every injected crash permanent.
+    pub crash_restart: Option<std::time::Duration>,
+    /// Per-result omission probability: the learner computes, sends,
+    /// and the result is lost in flight (charged as waste + network
+    /// traffic, never delivered).
+    pub omission_rate: f64,
+    /// Consecutive transport-corroborated missed iterations before a
+    /// learner is marked **suspect** (LearnerSuspected event).
+    pub suspect_after: u32,
+    /// Consecutive misses before a suspect is **declared dead** and
+    /// the membership remaps to survivors. Must be ≥ `suspect_after`.
+    pub dead_after: u32,
+    /// Behavior when survivors cannot reach rank M.
+    pub degraded: DegradedMode,
+}
+
+impl FaultConfig {
+    /// No injection, default detection policy — bit-identical runs.
+    pub fn none() -> FaultConfig {
+        FaultConfig {
+            crash_rate: 0.0,
+            crash_restart: None,
+            omission_rate: 0.0,
+            suspect_after: 2,
+            dead_after: 3,
+            degraded: DegradedMode::Error,
+        }
+    }
+
+    /// Whether any fault *injection* is configured (detection and the
+    /// degraded path key off transport evidence, not this).
+    pub fn injects(&self) -> bool {
+        self.crash_rate > 0.0 || self.omission_rate > 0.0
+    }
+
+    /// Short human label for run summaries.
+    pub fn label(&self) -> String {
+        let restart = match self.crash_restart {
+            Some(d) => format!(", restart≈{d:?}"),
+            None => String::new(),
+        };
+        format!(
+            "crash={}{restart}, omit={}, degraded={}",
+            self.crash_rate,
+            self.omission_rate,
+            self.degraded.name()
+        )
+    }
+}
+
 /// Full specification of one training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -276,6 +372,10 @@ pub struct TrainConfig {
     /// Modeled network link for virtual-time runs (`--bandwidth`,
     /// `--net-jitter-us`); free by default.
     pub net: NetConfig,
+    /// Fault injection + failure-handling policy (`--crash-rate`,
+    /// `--crash-restart-s`, `--omission-rate`, `--degraded-mode`,
+    /// `--suspect-after`, `--dead-after`); no injection by default.
+    pub fault: FaultConfig,
     /// How virtual compute time is modeled (`--compute-model`).
     pub compute_model: ComputeModelCfg,
     /// Training iterations (paper Alg. 1 outer loop).
@@ -348,6 +448,7 @@ impl TrainConfig {
             straggler: StragglerConfig::none(),
             trace: None,
             net: NetConfig::free(),
+            fault: FaultConfig::none(),
             compute_model: ComputeModelCfg::Fixed,
             iterations: 50,
             episodes_per_iter: 2,
@@ -484,8 +585,10 @@ impl TrainConfig {
     }
 
     /// Parse the system-model flag surface (`--trace`, `--bandwidth`,
-    /// `--net-jitter-us`, `--compute-model`) — shared by
-    /// [`TrainConfig::from_args`] and the sweep subcommands, which
+    /// `--net-jitter-us`, `--compute-model`) plus the fault knobs
+    /// (`--crash-rate`, `--crash-restart-s`, `--omission-rate`,
+    /// `--degraded-mode`, `--suspect-after`, `--dead-after`) — shared
+    /// by [`TrainConfig::from_args`] and the sweep subcommands, which
     /// build their base config through `sweep_base` instead.
     pub fn apply_model_args(&mut self, args: &Args) -> Result<()> {
         if let Some(v) = args.opt("trace") {
@@ -500,6 +603,29 @@ impl TrainConfig {
         if let Some(v) = args.opt("compute-model") {
             self.compute_model = ComputeModelCfg::parse(v)
                 .ok_or_else(|| anyhow::anyhow!("unknown compute model '{v}' (fixed|calibrated)"))?;
+        }
+        if let Some(v) = args.opt("crash-rate") {
+            self.fault.crash_rate = v.parse()?;
+        }
+        if let Some(v) = args.opt("crash-restart-s") {
+            let secs: f64 = v.parse()?;
+            if !secs.is_finite() || secs <= 0.0 {
+                bail!("--crash-restart-s must be a finite mean downtime > 0 s, got {v}");
+            }
+            self.fault.crash_restart = Some(std::time::Duration::from_secs_f64(secs));
+        }
+        if let Some(v) = args.opt("omission-rate") {
+            self.fault.omission_rate = v.parse()?;
+        }
+        if let Some(v) = args.opt("degraded-mode") {
+            self.fault.degraded = DegradedMode::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown degraded mode '{v}' (error|uncoded)"))?;
+        }
+        if let Some(v) = args.opt("suspect-after") {
+            self.fault.suspect_after = v.parse()?;
+        }
+        if let Some(v) = args.opt("dead-after") {
+            self.fault.dead_after = v.parse()?;
         }
         Ok(())
     }
@@ -552,6 +678,31 @@ impl TrainConfig {
                  --delay-dist / --straggler-exponential)"
             );
         }
+        for (name, rate) in
+            [("--crash-rate", self.fault.crash_rate), ("--omission-rate", self.fault.omission_rate)]
+        {
+            if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+                bail!("{name} must be a probability in [0, 1], got {rate}");
+            }
+        }
+        if self.fault.crash_restart.is_some() && self.fault.crash_rate == 0.0 {
+            bail!("--crash-restart-s only makes sense with --crash-rate > 0");
+        }
+        if self.fault.suspect_after == 0 || self.fault.dead_after < self.fault.suspect_after {
+            bail!(
+                "failure-detection policy needs 1 <= --suspect-after <= --dead-after, \
+                 got suspect_after={} dead_after={}",
+                self.fault.suspect_after,
+                self.fault.dead_after
+            );
+        }
+        if self.fault.injects() && self.time_mode != TimeMode::Virtual {
+            bail!(
+                "--crash-rate/--omission-rate inject faults in the discrete-event \
+                 simulator; pass --time-mode virtual (real transports surface real \
+                 connection failures instead)"
+            );
+        }
         if self.time_mode == TimeMode::Virtual && self.transport != Transport::Local {
             bail!(
                 "--time-mode virtual requires --transport local \
@@ -597,6 +748,9 @@ impl TrainConfig {
         }
         if self.compute_model != ComputeModelCfg::Fixed {
             model.push_str(&format!(" compute={}", self.compute_model.name()));
+        }
+        if self.fault.injects() {
+            model.push_str(&format!(" faults({})", self.fault.label()));
         }
         format!(
             "preset={} N={} scheme={} decode={} {disturbance} iters={} backend={} transport={} time={}{model} seed={}",
@@ -830,6 +984,63 @@ mod tests {
         ])
         .unwrap();
         assert!(cfg.trace.is_some() && cfg.trace_out.is_some());
+    }
+
+    #[test]
+    fn fault_flags_parse_with_neutral_defaults() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert_eq!(cfg.fault, FaultConfig::none());
+        assert!(!cfg.fault.injects(), "no injection by default");
+        assert!(!cfg.summary().contains("faults("), "{}", cfg.summary());
+
+        let cfg = parse(&[
+            "--preset", "x",
+            "--time-mode", "virtual",
+            "--crash-rate", "0.05",
+            "--crash-restart-s", "2.5",
+            "--omission-rate", "0.01",
+            "--degraded-mode", "uncoded",
+            "--suspect-after", "1",
+            "--dead-after", "2",
+        ])
+        .unwrap();
+        assert_eq!(cfg.fault.crash_rate, 0.05);
+        assert_eq!(cfg.fault.crash_restart, Some(std::time::Duration::from_secs_f64(2.5)));
+        assert_eq!(cfg.fault.omission_rate, 0.01);
+        assert_eq!(cfg.fault.degraded, DegradedMode::Uncoded);
+        assert_eq!((cfg.fault.suspect_after, cfg.fault.dead_after), (1, 2));
+        assert!(cfg.fault.injects());
+        assert!(cfg.summary().contains("faults("), "{}", cfg.summary());
+        assert!(cfg.summary().contains("degraded=uncoded"), "{}", cfg.summary());
+    }
+
+    #[test]
+    fn fault_flags_are_validated() {
+        let virt = |extra: &[&str]| {
+            let mut argv = vec!["--preset", "x", "--time-mode", "virtual"];
+            argv.extend_from_slice(extra);
+            parse(&argv)
+        };
+        // rates are probabilities
+        assert!(virt(&["--crash-rate", "1.5"]).is_err());
+        assert!(virt(&["--crash-rate", "-0.1"]).is_err());
+        assert!(virt(&["--omission-rate", "NaN"]).is_err());
+        assert!(virt(&["--crash-rate", "1"]).is_ok());
+        // restart needs a crash rate and a positive mean
+        assert!(virt(&["--crash-restart-s", "2"]).is_err());
+        assert!(virt(&["--crash-rate", "0.1", "--crash-restart-s", "0"]).is_err());
+        assert!(virt(&["--crash-rate", "0.1", "--crash-restart-s", "2"]).is_ok());
+        // detection policy ordering
+        assert!(virt(&["--suspect-after", "0"]).is_err());
+        assert!(virt(&["--suspect-after", "5", "--dead-after", "2"]).is_err());
+        // injection is sim-only
+        assert!(parse(&["--preset", "x", "--crash-rate", "0.1"]).is_err());
+        assert!(parse(&["--preset", "x", "--omission-rate", "0.1"]).is_err());
+        // unknown degraded mode
+        assert!(virt(&["--degraded-mode", "panic"]).is_err());
+        assert_eq!(DegradedMode::parse("error"), Some(DegradedMode::Error));
+        assert_eq!(DegradedMode::parse("uncoded"), Some(DegradedMode::Uncoded));
+        assert_eq!(DegradedMode::parse(""), None);
     }
 
     #[test]

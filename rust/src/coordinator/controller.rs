@@ -20,13 +20,14 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::adaptive::{AdaptiveSelector, StragglerStats};
+use super::failure::{FailureDetector, FaultError, FaultStats, Membership};
 use super::rollout;
 use super::RunSpec;
 use std::sync::Arc;
 
 use crate::coding::decoder::Decoder;
-use crate::coding::{Code, CodeParams, RankTracker};
-use crate::config::TrainConfig;
+use crate::coding::{Code, CodeParams, RankTracker, Scheme};
+use crate::config::{DegradedMode, TrainConfig};
 use crate::env::make_env;
 use crate::linalg::pool::{BufPool, PoolStats};
 use crate::marl::buffer::ReplayBuffer;
@@ -105,20 +106,47 @@ pub struct Controller<T: ControllerTransport> {
     /// duplicate, malformed arrivals); [`Controller::waste_stats`]
     /// merges the transport's own count (in-flight cancellations).
     waste: WasteStats,
+    /// Physical-learner → assignment-row map: identity until the
+    /// failure detector declares a death, then remapped incrementally
+    /// onto the survivors (the code is rebuilt over n′ rows).
+    membership: Membership,
+    /// Strike-based failure detection over transport-corroborated
+    /// losses ([`crate::transport::ControllerTransport::lost_for_iter`]);
+    /// inert (one virtual call per iteration) on fault-free runs.
+    detector: FailureDetector,
+    /// Fault-lifecycle counters (losses, suspicions, deaths, remaps,
+    /// degraded retries, recovery time).
+    fault_stats: FaultStats,
     pub log: RunLog,
     shut_down: bool,
 }
 
 /// Per-iteration collection telemetry used by the adaptive selector.
 struct CollectOutcome {
+    /// Code rows (indices into the *current* assignment matrix) whose
+    /// results were accepted, in arrival order.
     received: Vec<usize>,
     results: Vec<Vec<f32>>,
+    /// `arrived[j]` = physical learner `j` contributed a used result
+    /// (feeds the failure detector, which clears strikes on arrival).
+    arrived: Vec<bool>,
     /// Wall time from the M-th arrival until the pattern became
     /// decodable — the stall a better code would have avoided.
     stall: Duration,
     /// Mean per-agent-update compute reported by this iteration's
     /// learners (None when no workload telemetry was usable).
     compute_per_update: Option<Duration>,
+}
+
+/// What one collect attempt concluded.
+enum Collected {
+    Done(CollectOutcome),
+    /// Rank M is provably out of reach *right now*: every tasked
+    /// learner either already arrived or is transport-corroborated
+    /// lost, and the pattern is still undecodable. The caller degrades
+    /// (remap + uncoded fallback, or a structured [`FaultError`]) —
+    /// never idles to `collect_timeout` on dead learners.
+    Unreachable { rank: usize },
 }
 
 impl<T: ControllerTransport> Controller<T> {
@@ -182,6 +210,8 @@ impl<T: ControllerTransport> Controller<T> {
             obs::log::set_max_level(obs::Level::Info);
         }
         let attr = Attribution::new(cfg.n_learners);
+        let membership = Membership::identity(cfg.n_learners);
+        let detector = FailureDetector::new(cfg.n_learners, &cfg.fault);
         Ok(Controller {
             buffer: ReplayBuffer::new(cfg.buffer_capacity),
             cfg,
@@ -201,6 +231,9 @@ impl<T: ControllerTransport> Controller<T> {
             tracer,
             attr,
             waste: WasteStats::default(),
+            membership,
+            detector,
+            fault_stats: FaultStats::default(),
             log: RunLog::new(),
             shut_down: false,
         })
@@ -242,6 +275,18 @@ impl<T: ControllerTransport> Controller<T> {
     /// injected-vs-organic split). Always on.
     pub fn attribution(&self) -> &Attribution {
         &self.attr
+    }
+
+    /// Fault-lifecycle counters: corroborated losses, suspicions,
+    /// declared deaths, membership remaps, degraded retries and their
+    /// recovery time. All zero on a fault-free run.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault_stats
+    }
+
+    /// The live membership (identity until a declared death).
+    pub fn membership(&self) -> &Membership {
+        &self.membership
     }
 
     /// Wasted work so far: controller-classified waste (post-decodable
@@ -408,6 +453,12 @@ impl<T: ControllerTransport> Controller<T> {
         // --- Broadcast (line 9) -----------------------------------------
         let t = Timer::with_clock(&self.clock);
         let plan = self.disturbance.plan(self.cfg.n_learners);
+        // Fault directives travel out-of-band — never on the Task wire
+        // format, so modeled network charges are untouched — and the
+        // call itself is skipped on fault-free runs (empty plan).
+        if !plan.faults.is_empty() {
+            self.transport.inject_faults(iter, &plan.faults);
+        }
         // Reclaim last iteration's flat parameter vectors (the
         // transport has dropped its body references by now) so this
         // iteration's flatten is allocation-free in steady state.
@@ -431,55 +482,53 @@ impl<T: ControllerTransport> Controller<T> {
                 delay_ns: plan.delay_ns[s],
             });
         }
-        // Learners with an all-zero row have nothing to compute and
-        // contribute nothing to decodability — skip them outright. At
-        // N = 1000 an uncoded iteration tasks M learners, not N.
-        let tasked = self.code().active_rows();
-        for j in 0..self.cfg.n_learners {
-            if self.code().workload(j) == 0 {
-                continue;
-            }
-            let row = self.pool.take_copy(self.code().row_f32(j));
-            let row_len = row.len();
-            // A dead learner (crashed thread / worker) is just a
-            // permanent erasure: coding exists to mask exactly this, so
-            // a failed send must not abort the iteration.
-            if let Err(e) = self.transport.send_to(
-                j,
-                CtrlMsg::Task {
-                    iter,
-                    row,
-                    body: Arc::clone(&body),
-                    straggler_delay_ns: plan.delay_ns[j],
-                },
-            ) {
-                crate::log_info!(
-                    "iter {iter}: learner {j} unreachable ({e:#}); treating as erasure"
-                );
-            } else {
-                self.tracer.record(|| ObsEvent::TaskSent {
-                    iter,
-                    learner: j as u32,
-                    bytes: task_header_wire_len(row_len) as u64,
-                });
-            }
-        }
+        let mut tasked = self.broadcast_tasks(iter, &body, &plan);
         self.pending_body = Some(body);
         timing.broadcast = t.elapsed();
 
         // --- Collect until decodable (lines 10-13) ----------------------
+        // A degraded retry (rank M unreachable on the live set) remaps
+        // the membership and re-broadcasts the *same* body — the
+        // learner backends are pure, so recomputing the iteration on
+        // the survivors yields the exact parameters a fault-free run
+        // would. Each retry removes at least one learner, so the loop
+        // is bounded by N.
         let t = Timer::with_clock(&self.clock);
-        let outcome = self.collect(iter, tasked, &plan)?;
+        let mut degraded_at: Option<Duration> = None;
+        let outcome = loop {
+            match self.collect(iter, &tasked, &plan)? {
+                Collected::Done(o) => {
+                    if let Some(t0) = degraded_at {
+                        let rec = self.clock.now().saturating_sub(t0);
+                        self.fault_stats.recovery_ns = self
+                            .fault_stats
+                            .recovery_ns
+                            .saturating_add(u64::try_from(rec.as_nanos()).unwrap_or(u64::MAX));
+                    }
+                    break o;
+                }
+                Collected::Unreachable { rank } => {
+                    if degraded_at.is_none() {
+                        degraded_at = Some(self.clock.now());
+                        self.fault_stats.degraded_iters += 1;
+                    }
+                    let body = self
+                        .pending_body
+                        .as_ref()
+                        .map(Arc::clone)
+                        .expect("pending_body set by this iteration's broadcast");
+                    self.degrade(iter, rank)?;
+                    tasked = self.broadcast_tasks(iter, &body, &plan);
+                }
+            }
+        };
         timing.wait = t.elapsed();
-        let CollectOutcome { received, results, stall, compute_per_update } = outcome;
+        let CollectOutcome { received, results, arrived, stall, compute_per_update } = outcome;
 
         // --- Ack (line 14) ----------------------------------------------
-        // Per-learner ack failures are likewise non-fatal; idle
-        // learners were never tasked, so they get no ack either.
-        for j in 0..self.cfg.n_learners {
-            if self.code().workload(j) == 0 {
-                continue;
-            }
+        // Per-learner ack failures are likewise non-fatal; idle and
+        // dead learners were never tasked, so they get no ack either.
+        for &j in &tasked {
             let _ = self.transport.send_to(j, CtrlMsg::Ack { iter });
         }
 
@@ -505,6 +554,12 @@ impl<T: ControllerTransport> Controller<T> {
         self.decoder.recycle(out.theta);
         self.pool.put_all(results);
 
+        // --- Failure detection + elastic membership ---------------------
+        // After the decode so a policy-declared death never perturbs
+        // this iteration's recovery; fault-free this is one no-op
+        // virtual call and a branch.
+        self.observe_faults(iter, &arrived)?;
+
         // --- Adaptive scheme selection (extension; DESIGN.md §9) --------
         if let Some(c) = compute_per_update {
             let alpha = 0.3;
@@ -516,7 +571,7 @@ impl<T: ControllerTransport> Controller<T> {
             // made it into this round (biased high: includes healthy-
             // but-late learners; hysteresis absorbs the bias). Idle
             // learners were never tasked and must not count.
-            stats.observe(tasked.saturating_sub(received.len()), stall);
+            stats.observe(tasked.len().saturating_sub(received.len()), stall);
             let compute = Duration::from_secs_f64(self.compute_ewma.max(1e-6));
             if let Some(rec) = selector.recommend(stats, compute, self.cfg.scheme) {
                 if rec.scheme != self.cfg.scheme {
@@ -526,9 +581,11 @@ impl<T: ControllerTransport> Controller<T> {
             }
         }
         if let Some((from, to)) = switched {
+            // Rebuild over the *live* learner count: after a remap the
+            // code has n′ = survivors rows, not the configured N.
             self.decoder = Decoder::new(Code::build(&CodeParams {
                 scheme: to,
-                n: self.cfg.n_learners,
+                n: self.membership.live(),
                 m: self.spec.m,
                 p_m: self.cfg.p_m,
                 seed: self.cfg.seed,
@@ -585,11 +642,216 @@ impl<T: ControllerTransport> Controller<T> {
         }
     }
 
+    /// Send this iteration's tasks and return the physical learners
+    /// that were tasked. Dead learners (no assignment row under the
+    /// current membership) are excluded from the broadcast outright;
+    /// learners whose row is all-zero have nothing to compute and
+    /// contribute nothing to decodability — skip them too. At N = 1000
+    /// an uncoded iteration tasks M learners, not N. Re-invoked with
+    /// the same body on a degraded retry (the new tasks supersede the
+    /// previous generation on the transport).
+    fn broadcast_tasks(
+        &mut self,
+        iter: u64,
+        body: &Arc<TaskBody>,
+        plan: &InjectionPlan,
+    ) -> Vec<usize> {
+        let mut tasked = Vec::with_capacity(self.membership.live());
+        for j in 0..self.cfg.n_learners {
+            let Some(r) = self.membership.row_of(j) else { continue };
+            if self.code().workload(r) == 0 {
+                continue;
+            }
+            tasked.push(j);
+            let row = self.pool.take_copy(self.code().row_f32(r));
+            let row_len = row.len();
+            // A dead learner (crashed thread / worker) is just a
+            // permanent erasure: coding exists to mask exactly this, so
+            // a failed send must not abort the iteration.
+            if let Err(e) = self.transport.send_to(
+                j,
+                CtrlMsg::Task {
+                    iter,
+                    row,
+                    body: Arc::clone(body),
+                    straggler_delay_ns: plan.delay_ns[j],
+                },
+            ) {
+                crate::log_info!(
+                    "iter {iter}: learner {j} unreachable ({e:#}); treating as erasure"
+                );
+            } else {
+                self.tracer.record(|| ObsEvent::TaskSent {
+                    iter,
+                    learner: j as u32,
+                    bytes: task_header_wire_len(row_len) as u64,
+                });
+            }
+        }
+        tasked
+    }
+
+    /// The collect loop proved rank M unreachable on the live set:
+    /// every still-missing tasked learner is transport-corroborated
+    /// lost. Either terminate with a structured [`FaultError`]
+    /// (`--degraded-mode error`, or too few survivors) or fall back:
+    /// declare the lost learners dead on this hard evidence, remap the
+    /// membership onto the survivors, switch to the uncoded scheme and
+    /// let the caller retry the iteration.
+    fn degrade(&mut self, iter: u64, rank: usize) -> Result<()> {
+        let lost: Vec<usize> = self
+            .transport
+            .lost_for_iter(iter)
+            .unwrap_or(&[])
+            .iter()
+            .copied()
+            .filter(|&j| self.membership.is_live(j))
+            .collect();
+        let survivors = self.membership.live().saturating_sub(lost.len());
+        let m = self.spec.m;
+        let fallback = self.cfg.fault.degraded == DegradedMode::Uncoded && survivors >= m;
+        self.tracer.record(|| ObsEvent::DegradedDecode {
+            iter,
+            survivors: survivors as u32,
+            rank: rank as u32,
+            fallback,
+        });
+        if !fallback {
+            let detail = if survivors < m {
+                format!(
+                    "{} learners lost this iteration leave fewer survivors than agents",
+                    lost.len()
+                )
+            } else {
+                "reachable rank is below M and --degraded-mode is 'error'".to_string()
+            };
+            return Err(anyhow::anyhow!(FaultError { iter, survivors, needed: m, detail }));
+        }
+        crate::log_warn!(
+            "iter {iter}: rank {rank} < M={m} with every missing learner lost; \
+             degrading to uncoded over {survivors} survivors"
+        );
+        for &j in &lost {
+            let misses = self.detector.force_dead(j);
+            self.fault_stats.deaths += 1;
+            self.tracer.record(|| ObsEvent::LearnerDeclaredDead {
+                iter,
+                learner: j as u32,
+                misses,
+            });
+        }
+        self.remap(iter, &lost, Scheme::Uncoded)
+    }
+
+    /// Remove `dead` learners from the membership and rebuild the code
+    /// (and, if adaptive, the selector) over the survivors with
+    /// `scheme`. Errors with a structured [`FaultError`] when fewer
+    /// than M learners remain — no code can recover M gradients from
+    /// fewer rows.
+    fn remap(&mut self, iter: u64, dead: &[usize], scheme: Scheme) -> Result<()> {
+        // When the scheme is unchanged, the n′-row code is the running
+        // matrix *restricted* to the survivors' rows (captured before
+        // the membership rewrite): restriction inherits decodability
+        // from the tolerance property, whereas a fresh random draw at
+        // n′ could be rank-deficient. A scheme change (the uncoded
+        // fallback) rebuilds, which is safe — uncoded is deterministic
+        // and always decodable from its M active rows.
+        let same_scheme = scheme == self.cfg.scheme;
+        let keep: Vec<usize> = (0..self.cfg.n_learners)
+            .filter(|&j| !dead.contains(&j))
+            .filter_map(|j| self.membership.row_of(j))
+            .collect();
+        let live = self.membership.remove(dead);
+        self.fault_stats.remaps += 1;
+        if live < self.spec.m {
+            return Err(anyhow::anyhow!(FaultError {
+                iter,
+                survivors: live,
+                needed: self.spec.m,
+                detail: "fewer survivors than agents; no code can recover the gradients".into(),
+            }));
+        }
+        self.cfg.scheme = scheme;
+        let code = if same_scheme {
+            self.code().restrict_rows(&keep)
+        } else {
+            Code::build(&CodeParams {
+                scheme,
+                n: live,
+                m: self.spec.m,
+                p_m: self.cfg.p_m,
+                seed: self.cfg.seed,
+            })
+        };
+        self.decoder = Decoder::new(code);
+        if let Some((selector, _)) = self.adaptive.as_mut() {
+            *selector = AdaptiveSelector::new(live, self.spec.m, self.cfg.p_m, self.cfg.seed);
+        }
+        self.tracer.record(|| ObsEvent::MembershipRemap {
+            iter,
+            survivors: live as u32,
+            dead: self.membership.dead_count() as u32,
+        });
+        crate::log_info!(
+            "iter {iter}: membership remapped onto {live} survivors ({} dead; scheme {scheme})",
+            self.membership.dead_count()
+        );
+        Ok(())
+    }
+
+    /// Post-iteration failure detection: transport-corroborated losses
+    /// strike, used arrivals clear. Threshold crossings emit events; a
+    /// policy-declared death remaps the membership onto the survivors
+    /// (keeping the current scheme — the next iteration's code simply
+    /// has n′ rows).
+    fn observe_faults(&mut self, iter: u64, arrived: &[bool]) -> Result<()> {
+        let lost: Vec<usize> = match self.transport.lost_for_iter(iter) {
+            Some(l) => {
+                l.iter().copied().filter(|&j| self.membership.is_live(j)).collect()
+            }
+            // No losses this iteration, but strikes are pending: still
+            // run the detector so recovered learners reset.
+            None if self.detector.has_strikes() => Vec::new(),
+            None => return Ok(()),
+        };
+        self.fault_stats.lost_results += lost.len() as u64;
+        let verdict = self.detector.observe(arrived, &lost);
+        for &(j, misses) in &verdict.suspected {
+            self.fault_stats.suspected += 1;
+            self.tracer.record(|| ObsEvent::LearnerSuspected {
+                iter,
+                learner: j as u32,
+                misses,
+            });
+            crate::log_info!(
+                "iter {iter}: learner {j} suspected after {misses} consecutive losses ({})",
+                self.attr.describe(j)
+            );
+        }
+        if verdict.dead.is_empty() {
+            return Ok(());
+        }
+        for &(j, misses) in &verdict.dead {
+            self.fault_stats.deaths += 1;
+            self.tracer.record(|| ObsEvent::LearnerDeclaredDead {
+                iter,
+                learner: j as u32,
+                misses,
+            });
+            crate::log_info!(
+                "iter {iter}: learner {j} declared dead after {misses} consecutive losses"
+            );
+        }
+        let dead: Vec<usize> = verdict.dead.iter().map(|&(j, _)| j).collect();
+        self.remap(iter, &dead, self.cfg.scheme)
+    }
+
     /// Listen to the channel until the received subset is decodable
     /// (Alg. 1 lines 10-13), gathering the telemetry the adaptive
-    /// selector consumes. `tasked` is how many learners were actually
-    /// sent a task this iteration (idle zero-row learners are skipped
-    /// at broadcast and can never legitimately reply).
+    /// selector consumes. `tasked` lists the physical learners that
+    /// were actually sent a task this iteration (dead and idle
+    /// zero-row learners are skipped at broadcast and can never
+    /// legitimately reply).
     ///
     /// Decodability is tracked **incrementally**: each accepted arrival
     /// folds its assignment row into a [`RankTracker`] at O(M·rank),
@@ -598,7 +860,13 @@ impl<T: ControllerTransport> Controller<T> {
     /// arrival. Decisions are identical to `Code::decodable` (pinned by
     /// property test); at N ≫ 1000 this turns the collect loop from
     /// O(N²·M²) worst case into O(N·M²) total.
-    fn collect(&mut self, iter: u64, tasked: usize, plan: &InjectionPlan) -> Result<CollectOutcome> {
+    ///
+    /// Fail-fast: when the transport corroborates losses
+    /// ([`ControllerTransport::lost_for_iter`]) and every tasked
+    /// learner has either arrived or been lost, rank M is unreachable
+    /// in this attempt — return [`Collected::Unreachable`] immediately
+    /// instead of idling out the collect window on dead learners.
+    fn collect(&mut self, iter: u64, tasked: &[usize], plan: &InjectionPlan) -> Result<Collected> {
         let m = self.spec.m;
         let n = self.cfg.n_learners;
         let p_dim = self.spec.dims.agent_param_dim();
@@ -616,13 +884,41 @@ impl<T: ControllerTransport> Controller<T> {
         loop {
             let now = self.clock.now();
             if now >= deadline {
+                // Satellite diagnostics: name the learners still
+                // missing and what attribution knows about them — "3
+                // missing" alone is useless at N = 100.
+                let missing: Vec<usize> =
+                    tasked.iter().copied().filter(|&j| !got[j]).collect();
+                let shown = missing.len().min(8);
+                let names: Vec<String> = missing[..shown]
+                    .iter()
+                    .map(|&j| format!("learner {j} ({})", self.attr.describe(j)))
+                    .collect();
+                let more = if missing.len() > shown {
+                    format!(" +{} more", missing.len() - shown)
+                } else {
+                    String::new()
+                };
                 bail!(
                     "iteration {iter}: no decodable subset after {timeout:?} \
-                     ({} of {} results; scheme {})",
+                     ({} of {} tasked results; scheme {}; missing: {}{more})",
                     received.len(),
-                    n,
-                    self.cfg.scheme
+                    tasked.len(),
+                    self.cfg.scheme,
+                    names.join(", "),
                 );
+            }
+            if !tracker.decodable() {
+                if let Some(lost) = self.transport.lost_for_iter(iter) {
+                    if tasked.iter().all(|&j| got[j] || lost.contains(&j)) {
+                        // Every possible arrival is in and the pattern
+                        // is still short of rank M: return the partial
+                        // results to the pool and let the caller
+                        // degrade.
+                        self.pool.put_all(results);
+                        return Ok(Collected::Unreachable { rank: tracker.rank() });
+                    }
+                }
             }
             let Some(msg) = self.transport.recv_timeout(deadline - now)? else {
                 continue;
@@ -640,26 +936,34 @@ impl<T: ControllerTransport> Controller<T> {
                         Disposition::PostDecodable
                     } else if got[j] {
                         Disposition::Duplicate
-                    } else if self.code().workload(j) == 0 {
-                        // Never tasked (all-zero row): a spurious reply
-                        // must not inflate `results_used` or trip the
-                        // `== tasked` rank-deficiency bail below.
-                        Disposition::ZeroWorkload
-                    } else if y.len() != p_dim {
-                        // A malformed reply (buggy / version-skewed
-                        // worker whose frame still parses) is an
-                        // erasure, not a poison pill: admitting it
-                        // would fail the decode — and the elementwise
-                        // kernels assert equal lengths — so drop it
-                        // like a stale message and keep collecting.
-                        crate::log_info!(
-                            "iter {iter}: learner {j} sent a result of length {} \
-                             (expected {p_dim}); dropping as an erasure",
-                            y.len()
-                        );
-                        Disposition::Malformed
                     } else {
-                        Disposition::Used
+                        match self.membership.row_of(j) {
+                            // A reply from a declared-dead learner
+                            // (excluded from this broadcast) — protocol
+                            // confusion, same bucket as an unknown id.
+                            None => Disposition::Stale,
+                            // Never tasked (all-zero row): a spurious
+                            // reply must not inflate `results_used` or
+                            // trip the rank-deficiency bail below.
+                            Some(r) if self.code().workload(r) == 0 => Disposition::ZeroWorkload,
+                            Some(_) if y.len() != p_dim => {
+                                // A malformed reply (buggy / version-
+                                // skewed worker whose frame still
+                                // parses) is an erasure, not a poison
+                                // pill: admitting it would fail the
+                                // decode — and the elementwise kernels
+                                // assert equal lengths — so drop it
+                                // like a stale message and keep
+                                // collecting.
+                                crate::log_info!(
+                                    "iter {iter}: learner {j} sent a result of length {} \
+                                     (expected {p_dim}); dropping as an erasure",
+                                    y.len()
+                                );
+                                Disposition::Malformed
+                            }
+                            Some(_) => Disposition::Used,
+                        }
                     };
                     let bytes = result_wire_len(y.len()) as u64;
                     self.tracer.record(|| ObsEvent::ResultArrival {
@@ -675,11 +979,12 @@ impl<T: ControllerTransport> Controller<T> {
                     if disposition != Disposition::Used {
                         continue;
                     }
+                    let r = self.membership.row_of(j).expect("Used implies live");
                     got[j] = true;
-                    tracker.push_row(self.code().matrix().row(j));
-                    received.push(j);
+                    tracker.push_row(self.code().matrix().row(r));
+                    received.push(r);
                     results.push(y);
-                    compute_sum += compute_ns as f64 / 1e9 / self.code().workload(j) as f64;
+                    compute_sum += compute_ns as f64 / 1e9 / self.code().workload(r) as f64;
                     compute_n += 1;
                     let at = self.clock.now();
                     if first_used.is_none() {
@@ -688,7 +993,7 @@ impl<T: ControllerTransport> Controller<T> {
                     self.attr.observe_arrival(
                         j,
                         received.len(),
-                        tasked,
+                        tasked.len(),
                         at.saturating_sub(start),
                         plan.delay_ns[j] > 0,
                     );
@@ -710,15 +1015,22 @@ impl<T: ControllerTransport> Controller<T> {
                         let compute_per_update = (compute_n > 0).then(|| {
                             Duration::from_secs_f64(compute_sum / compute_n as f64)
                         });
-                        return Ok(CollectOutcome { received, results, stall, compute_per_update });
+                        return Ok(Collected::Done(CollectOutcome {
+                            received,
+                            results,
+                            arrived: got,
+                            stall,
+                            compute_per_update,
+                        }));
                     }
-                    if received.len() == tasked {
+                    if received.len() == tasked.len() {
                         // All tasked learners replied but the pattern is
                         // still not decodable: the assignment matrix
                         // itself is rank-deficient.
                         bail!(
-                            "iteration {iter}: all {tasked} tasked results received but \
-                             rank(C) < M — invalid code construction"
+                            "iteration {iter}: all {} tasked results received but \
+                             rank(C) < M — invalid code construction",
+                            tasked.len()
                         );
                     }
                 }

@@ -1,0 +1,331 @@
+//! Failure detection and elastic membership (ISSUE 7).
+//!
+//! Three pieces the controller composes:
+//!
+//! * [`FailureDetector`] — consecutive-miss strike counting over
+//!   **transport-corroborated losses only** ([`lost_for_iter`]): a
+//!   coded scheme masks stragglers by design, so mere non-arrival must
+//!   never strike a learner (that would kill exactly the learners the
+//!   code exists to tolerate). Arrivals clear strikes; `suspect_after`
+//!   consecutive losses raise suspicion, `dead_after` declare death.
+//! * [`Membership`] — the physical-learner → assignment-row map. The
+//!   identity map until a death; on a death the rows remap
+//!   incrementally onto the sorted survivor set and the code is
+//!   rebuilt over n′ = survivors (same scheme/seed). Decoding is
+//!   exact, so within-tolerance deaths leave the recovered parameters
+//!   bit-identical — only timing changes.
+//! * [`FaultError`] — the structured, downcastable error the run
+//!   terminates with when survivors can no longer reach rank M (or
+//!   `--degraded-mode error` forbids the uncoded fallback). Sweeps
+//!   downcast it to record a degraded cell instead of dying.
+//!
+//! [`lost_for_iter`]: crate::transport::ControllerTransport::lost_for_iter
+
+use crate::config::FaultConfig;
+
+/// Strike-based failure detector over corroborated losses.
+pub struct FailureDetector {
+    suspect_after: u32,
+    dead_after: u32,
+    /// Consecutive corroborated losses per physical learner.
+    strikes: Vec<u32>,
+    suspected: Vec<bool>,
+    dead: Vec<bool>,
+}
+
+/// What one [`FailureDetector::observe`] call concluded:
+/// `(learner, strikes)` pairs for learners that crossed a threshold
+/// this iteration.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct DetectorVerdict {
+    pub suspected: Vec<(usize, u32)>,
+    pub dead: Vec<(usize, u32)>,
+}
+
+impl FailureDetector {
+    pub fn new(n: usize, cfg: &FaultConfig) -> FailureDetector {
+        FailureDetector {
+            suspect_after: cfg.suspect_after,
+            dead_after: cfg.dead_after,
+            strikes: vec![0; n],
+            suspected: vec![false; n],
+            dead: vec![false; n],
+        }
+    }
+
+    /// Any learner currently carrying strikes — the cheap guard that
+    /// keeps fault-free iterations from paying for detector upkeep.
+    pub fn has_strikes(&self) -> bool {
+        self.strikes.iter().any(|&s| s > 0)
+    }
+
+    pub fn strikes_of(&self, j: usize) -> u32 {
+        self.strikes.get(j).copied().unwrap_or(0)
+    }
+
+    /// Fold one iteration's evidence: `arrived[j]` = a used result
+    /// from physical learner `j` this iteration (clears its strikes);
+    /// `lost` = learners the transport corroborated as lost (one
+    /// strike each). Returns the learners that crossed the suspicion /
+    /// death thresholds *this* call.
+    pub fn observe(&mut self, arrived: &[bool], lost: &[usize]) -> DetectorVerdict {
+        let mut verdict = DetectorVerdict::default();
+        for (j, &ok) in arrived.iter().enumerate().take(self.strikes.len()) {
+            if ok {
+                self.strikes[j] = 0;
+                self.suspected[j] = false;
+            }
+        }
+        for &j in lost {
+            if j >= self.strikes.len() || self.dead[j] {
+                continue;
+            }
+            self.strikes[j] = self.strikes[j].saturating_add(1);
+            let s = self.strikes[j];
+            if s >= self.dead_after {
+                self.dead[j] = true;
+                verdict.dead.push((j, s));
+            } else if s >= self.suspect_after && !self.suspected[j] {
+                self.suspected[j] = true;
+                verdict.suspected.push((j, s));
+            }
+        }
+        verdict
+    }
+
+    /// Hard evidence (lost **and** the iteration was undecodable
+    /// without it): declare `j` dead immediately, bypassing the strike
+    /// policy. Returns the strike count to report.
+    pub fn force_dead(&mut self, j: usize) -> u32 {
+        if let Some(s) = self.strikes.get_mut(j) {
+            *s = (*s).max(self.dead_after);
+            self.dead[j] = true;
+            *s
+        } else {
+            self.dead_after
+        }
+    }
+}
+
+/// Physical-learner → assignment-row map. Identity until a death;
+/// after deaths, row `r` of the (rebuilt, n′-row) code belongs to
+/// `survivors[r]`.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    /// phys → code row (`None` = declared dead, excluded from
+    /// broadcast).
+    row: Vec<Option<usize>>,
+    /// code row → phys (sorted ascending).
+    survivors: Vec<usize>,
+    remaps: u32,
+}
+
+impl Membership {
+    pub fn identity(n: usize) -> Membership {
+        Membership {
+            row: (0..n).map(Some).collect(),
+            survivors: (0..n).collect(),
+            remaps: 0,
+        }
+    }
+
+    /// The assignment row of physical learner `j`; `None` when dead.
+    pub fn row_of(&self, j: usize) -> Option<usize> {
+        self.row.get(j).copied().flatten()
+    }
+
+    /// The physical learner holding code row `r`.
+    pub fn phys_of(&self, r: usize) -> usize {
+        self.survivors[r]
+    }
+
+    pub fn is_live(&self, j: usize) -> bool {
+        self.row_of(j).is_some()
+    }
+
+    pub fn live(&self) -> usize {
+        self.survivors.len()
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.row.len() - self.survivors.len()
+    }
+
+    /// Times the membership was remapped.
+    pub fn remaps(&self) -> u32 {
+        self.remaps
+    }
+
+    /// Remove `dead` learners and remap the remaining rows
+    /// incrementally onto the survivors (ascending physical order, so
+    /// the map is deterministic). Already-dead entries are ignored.
+    /// Returns the new live count.
+    pub fn remove(&mut self, dead: &[usize]) -> usize {
+        for &j in dead {
+            if let Some(slot) = self.row.get_mut(j) {
+                *slot = None;
+            }
+        }
+        self.survivors.clear();
+        let mut next = 0usize;
+        for (j, slot) in self.row.iter_mut().enumerate() {
+            if slot.is_some() {
+                *slot = Some(next);
+                self.survivors.push(j);
+                next += 1;
+            }
+        }
+        self.remaps += 1;
+        self.survivors.len()
+    }
+}
+
+/// Structured "training cannot continue" error: survivors can no
+/// longer produce a rank-M decodable subset (or the degraded-mode
+/// policy forbids continuing). Downcastable from the `anyhow` chain so
+/// sweeps record a degraded cell instead of dying.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultError {
+    /// Iteration at which the run degraded.
+    pub iter: u64,
+    /// Live learners at that point (after excluding this iteration's
+    /// corroborated losses).
+    pub survivors: usize,
+    /// Rank the decode needs (M).
+    pub needed: usize,
+    /// Why the run could not continue.
+    pub detail: String,
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "iteration {}: {} surviving learners cannot reach rank M={} — {}",
+            self.iter, self.survivors, self.needed, self.detail
+        )
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Fault-lifecycle counters the controller accumulates (and sweeps
+/// export into `BENCH_fault.json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Transport-corroborated result losses observed.
+    pub lost_results: u64,
+    /// Learners that crossed the suspicion threshold.
+    pub suspected: u64,
+    /// Learners declared dead (policy or hard evidence).
+    pub deaths: u64,
+    /// Membership remaps performed.
+    pub remaps: u64,
+    /// Iterations that needed the degraded (uncoded-fallback) retry.
+    pub degraded_iters: u64,
+    /// Clock time (virtual on the sim) spent inside degraded retries —
+    /// the recovery time.
+    pub recovery_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(suspect_after: u32, dead_after: u32) -> FaultConfig {
+        FaultConfig { suspect_after, dead_after, ..FaultConfig::none() }
+    }
+
+    #[test]
+    fn strikes_accumulate_and_arrivals_reset() {
+        let mut det = FailureDetector::new(3, &cfg(2, 3));
+        assert!(!det.has_strikes());
+        // One loss: below every threshold.
+        let v = det.observe(&[true, false, true], &[1]);
+        assert_eq!(v, DetectorVerdict::default());
+        assert!(det.has_strikes());
+        // Second consecutive loss: suspected, exactly once.
+        let v = det.observe(&[true, false, true], &[1]);
+        assert_eq!(v.suspected, vec![(1, 2)]);
+        assert!(v.dead.is_empty());
+        // Third: dead.
+        let v = det.observe(&[true, false, true], &[1]);
+        assert_eq!(v.dead, vec![(1, 3)]);
+        // A dead learner is never re-reported.
+        let v = det.observe(&[false, false, false], &[1]);
+        assert_eq!(v, DetectorVerdict::default());
+    }
+
+    #[test]
+    fn an_arrival_clears_suspicion() {
+        let mut det = FailureDetector::new(2, &cfg(2, 3));
+        det.observe(&[false, false], &[0]);
+        let v = det.observe(&[false, false], &[0]);
+        assert_eq!(v.suspected, vec![(0, 2)]);
+        // The learner recovers (e.g. crash-and-restart): strikes reset,
+        // and it can be suspected afresh later.
+        det.observe(&[true, false], &[]);
+        assert!(!det.has_strikes());
+        det.observe(&[false, false], &[0]);
+        let v = det.observe(&[false, false], &[0]);
+        assert_eq!(v.suspected, vec![(0, 2)], "suspicion re-arms after recovery");
+    }
+
+    #[test]
+    fn non_arrival_without_corroboration_never_strikes() {
+        // The coded-masking guarantee: a straggler that simply hasn't
+        // arrived is NOT lost and must accumulate nothing.
+        let mut det = FailureDetector::new(2, &cfg(1, 2));
+        for _ in 0..10 {
+            det.observe(&[true, false], &[]);
+        }
+        assert!(!det.has_strikes());
+        assert_eq!(det.strikes_of(1), 0);
+    }
+
+    #[test]
+    fn force_dead_bypasses_the_policy() {
+        let mut det = FailureDetector::new(2, &cfg(2, 3));
+        assert_eq!(det.force_dead(1), 3);
+        // …and the strike path won't re-report it.
+        let v = det.observe(&[false, false], &[1]);
+        assert_eq!(v, DetectorVerdict::default());
+    }
+
+    #[test]
+    fn membership_identity_then_incremental_remap() {
+        let mut m = Membership::identity(5);
+        assert_eq!(m.live(), 5);
+        assert_eq!(m.remaps(), 0);
+        for j in 0..5 {
+            assert_eq!(m.row_of(j), Some(j), "identity fast-path");
+            assert_eq!(m.phys_of(j), j);
+        }
+        assert_eq!(m.remove(&[1, 3]), 3);
+        assert_eq!(m.live(), 3);
+        assert_eq!(m.dead_count(), 2);
+        assert_eq!(m.remaps(), 1);
+        assert_eq!(m.row_of(0), Some(0));
+        assert_eq!(m.row_of(1), None);
+        assert_eq!(m.row_of(2), Some(1));
+        assert_eq!(m.row_of(3), None);
+        assert_eq!(m.row_of(4), Some(2));
+        assert_eq!(m.phys_of(2), 4);
+        assert!(!m.is_live(3));
+        // Incremental: a further death remaps the remainder.
+        assert_eq!(m.remove(&[0]), 2);
+        assert_eq!(m.row_of(2), Some(0));
+        assert_eq!(m.row_of(4), Some(1));
+        // Removing an already-dead learner is a no-op on membership.
+        assert_eq!(m.remove(&[1]), 2);
+    }
+
+    #[test]
+    fn fault_error_displays_and_downcasts() {
+        let e = FaultError { iter: 7, survivors: 2, needed: 4, detail: "x".into() };
+        let any: anyhow::Error = anyhow::anyhow!(e.clone());
+        let back = any.downcast_ref::<FaultError>().expect("downcast");
+        assert_eq!(*back, e);
+        assert!(format!("{e}").contains("cannot reach rank M=4"));
+    }
+}

@@ -42,6 +42,7 @@ pub mod adaptive;
 pub mod backend;
 pub mod centralized;
 pub mod controller;
+pub mod failure;
 pub mod learner;
 pub mod pool;
 pub mod rollout;
@@ -54,6 +55,7 @@ use anyhow::{bail, Context, Result};
 pub use backend::{BackendFactory, LearnerBackend, MockBackend, PjrtBackend};
 pub use centralized::Centralized;
 pub use controller::{Controller, Streams};
+pub use failure::{FailureDetector, FaultError, FaultStats, Membership};
 pub use pool::{spawn_local, spawn_tcp, Pool, WorkerCmd};
 
 use crate::config::{Backend, ComputeModelCfg, TimeMode, TrainConfig, Transport};

@@ -89,6 +89,22 @@ impl ControllerTransport for Pool {
         }
     }
 
+    fn inject_faults(&mut self, iter: u64, plan: &crate::model::FaultPlan) {
+        match self {
+            Pool::Local(c) => c.inject_faults(iter, plan),
+            Pool::Tcp { ctrl, .. } => ctrl.inject_faults(iter, plan),
+            Pool::Sim(s) => s.inject_faults(iter, plan),
+        }
+    }
+
+    fn lost_for_iter(&self, iter: u64) -> Option<&[usize]> {
+        match self {
+            Pool::Local(c) => c.lost_for_iter(iter),
+            Pool::Tcp { ctrl, .. } => ctrl.lost_for_iter(iter),
+            Pool::Sim(s) => s.lost_for_iter(iter),
+        }
+    }
+
     fn shutdown(&mut self) {
         match self {
             Pool::Local(c) => c.shutdown(),

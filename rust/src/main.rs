@@ -76,6 +76,18 @@ COMMON TRAIN FLAGS:
     --trace-out PATH           write a Chrome trace-event timeline of the run
                                (one lane per learner; open in Perfetto or
                                chrome://tracing; a .jsonl twin lands next to it)
+    --crash-rate P             per-learner, per-iteration crash probability
+                               (virtual time only)       [0]
+    --crash-restart-s S        mean downtime before a crashed learner restarts
+                               (exponential draw; omit it for permanent crashes)
+    --omission-rate P          per-result-message drop probability [0]
+    --degraded-mode D          error|uncoded: stop with a structured error, or
+                               fall back to uncoded over the survivors when
+                               they can no longer reach rank M [error]
+    --suspect-after K          consecutive corroborated losses before a
+                               learner is suspected      [2]
+    --dead-after K             consecutive corroborated losses before it is
+                               declared dead and the assignment remapped [3]
 
 SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --artifacts DIR            artifacts directory       [artifacts]
@@ -107,6 +119,14 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
                                grid's FIRST cell (tracing is free of timing
                                side effects; one traced cell stands in for
                                its bit-identical untraced twin)
+    --crash-rate/--crash-restart-s/--omission-rate/--degraded-mode/
+    --suspect-after/--dead-after
+                               as in train. Any active fault knob switches
+                               sim-sweep to the FAULT AXIS: one cell per
+                               scheme under the configured faults, reporting
+                               iterations survived, availability, deaths,
+                               remaps and recovery time (+ BENCH_fault.json
+                               with --out-dir)
 
 SCALE-STUDY FLAGS (all optional; virtual time only):
     --learners-list N1,N2      learner counts            [100,1000,10000]
@@ -129,6 +149,7 @@ EXAMPLES:
     coded-marl sim-sweep --m 8 --straggler-delay-ms 250
     coded-marl sim-sweep --trace examples/traces/ec2_sample.jsonl --out-dir bench-out
     coded-marl sim-sweep --m 8 --bandwidth-list 0,25,125 --stragglers-list 0,2
+    coded-marl sim-sweep --m 8 --crash-rate 0.02 --crash-restart-s 5 --out-dir bench-out
     coded-marl scale-study --learners-list 100,1000,10000 \\
         --delay-dists fixed,pareto --out-dir bench-out
 ";
@@ -298,8 +319,9 @@ fn cmd_sim_sweep() -> Result<()> {
     use coded_marl::config::{ComputeModelCfg, DelayDist};
     use coded_marl::obs::WasteStats;
     use coded_marl::sim::sweep::{
-        bandwidth_table, grid_iter_stats, render_table, run_bandwidth_sweep, simulated_total,
-        sweep_base, write_bench_json, write_csv, write_model_json, SweepConfig,
+        bandwidth_table, fault_table, grid_iter_stats, render_table, run_bandwidth_sweep,
+        run_fault_sweep, simulated_total, sweep_base, write_bench_json, write_csv,
+        write_fault_json, write_model_json, SweepConfig,
     };
 
     let args = Args::from_env(2)?;
@@ -409,6 +431,33 @@ fn cmd_sim_sweep() -> Result<()> {
         delay,
         artifacts_dir: artifacts.into(),
     };
+    // Any active fault knob switches to the fault axis: one cell per
+    // scheme under the configured crash/omission model, reporting
+    // survival instead of the straggler grid (a grid cell that stops
+    // early on a FaultError would conflate the two studies).
+    if base.fault.injects() {
+        if bandwidth_list.is_some() {
+            anyhow::bail!("--bandwidth-list and fault injection are separate axes; drop one");
+        }
+        println!("fault axis: {} (one cell per scheme, k=0 stragglers)", base.fault.label());
+        let cells = run_fault_sweep(&sweep_cfg)?;
+        let wall = t0.elapsed();
+        print!("{}", fault_table(&cells));
+        let survived = cells.iter().filter(|c| c.survived).count();
+        println!(
+            "\n{survived}/{} schemes survived all {} iterations ({} wall-clock)",
+            cells.len(),
+            base.iterations,
+            fmt_duration(wall),
+        );
+        if let Some(dir) = out_dir {
+            let path = dir.join("BENCH_fault.json");
+            write_fault_json(&cells, &base, wall, &path)
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
     // One code path for both shapes: without --bandwidth-list the
     // sweep is a single point at the base bandwidth (identical cells
     // to the plain grid runner).

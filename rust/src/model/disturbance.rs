@@ -21,7 +21,7 @@
 use anyhow::{Context, Result};
 
 use super::trace::TraceReplay;
-use crate::config::{DelayDist, StragglerConfig, TrainConfig};
+use crate::config::{DelayDist, FaultConfig, StragglerConfig, TrainConfig};
 use crate::rng::Pcg32;
 
 /// The injection plan for one iteration.
@@ -31,6 +31,85 @@ pub struct InjectionPlan {
     pub stragglers: Vec<usize>,
     /// Delay (ns) per learner; 0 for healthy learners.
     pub delay_ns: Vec<u64>,
+    /// Injected faults (crashes / omissions); empty unless fault
+    /// injection is configured (`FaultConfig::injects`).
+    pub faults: FaultPlan,
+}
+
+/// The fault directives for one iteration, drawn by [`FaultInjector`]
+/// and executed by [`crate::sim::SimTransport`] (crashes swallow the
+/// task and cancel in-flight work; omissions drop the result in
+/// flight after charging compute and the return network leg).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// `(learner, downtime_ns)` crash directives, applied at task
+    /// receipt. `None` downtime = permanent crash; `Some(ns)` =
+    /// crash-and-restart after the drawn downtime. Directives against
+    /// already-down learners are ignored by the transport.
+    pub crashes: Vec<(usize, Option<u64>)>,
+    /// Learners whose result this iteration is lost in flight (sorted).
+    pub omissions: Vec<usize>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.omissions.is_empty()
+    }
+}
+
+/// Deterministic, seeded fault injection: per-learner crash and
+/// per-message omission draws on a dedicated RNG stream
+/// (`Pcg32::new(seed, 0xFA17)`) so enabling faults never perturbs the
+/// delay injector's 0x57A6 stream — and with no fault knobs set the
+/// injector is never constructed at all (zero RNG, bit-identical
+/// runs).
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    rng: Pcg32,
+}
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig, rng: Pcg32) -> FaultInjector {
+        FaultInjector { cfg, rng }
+    }
+
+    /// Draw this iteration's fault directives among `n` learners. The
+    /// draw order is fixed (crash pass, then omission pass, each over
+    /// learners in id order) so the stream is scheme-independent.
+    pub fn plan(&mut self, n: usize) -> FaultPlan {
+        let mut crashes = Vec::new();
+        if self.cfg.crash_rate > 0.0 {
+            for j in 0..n {
+                if self.rng.uniform() < self.cfg.crash_rate {
+                    // Exponential downtime with the configured mean;
+                    // no restart knob = permanent.
+                    let down = self.cfg.crash_restart.map(|mean| {
+                        (mean.as_nanos() as f64 * -self.nonzero_uniform().ln()) as u64
+                    });
+                    crashes.push((j, down));
+                }
+            }
+        }
+        let mut omissions = Vec::new();
+        if self.cfg.omission_rate > 0.0 {
+            for j in 0..n {
+                if self.rng.uniform() < self.cfg.omission_rate {
+                    omissions.push(j);
+                }
+            }
+        }
+        FaultPlan { crashes, omissions }
+    }
+
+    /// Uniform draw in (0, 1) — guards the log transform.
+    fn nonzero_uniform(&mut self) -> f64 {
+        loop {
+            let u = self.rng.uniform();
+            if u > 0.0 {
+                return u;
+            }
+        }
+    }
 }
 
 /// Per-iteration straggler selector (paper §V-C).
@@ -74,7 +153,7 @@ impl StragglerInjector {
             };
             delay_ns[j] = d as u64;
         }
-        InjectionPlan { stragglers, delay_ns }
+        InjectionPlan { stragglers, delay_ns, faults: FaultPlan::default() }
     }
 
     /// Uniform draw in (0, 1) — guards the log/power transforms.
@@ -88,12 +167,20 @@ impl StragglerInjector {
     }
 }
 
-/// Pluggable disturbance source (see module docs).
-pub enum DisturbanceModel {
-    /// Synthetic §V-C injection.
+/// Where per-learner delays come from: synthetic §V-C injection or
+/// measured-trace replay.
+enum DelaySource {
     Injector(StragglerInjector),
-    /// Measured-trace replay.
     Trace(TraceReplay),
+}
+
+/// Pluggable disturbance source (see module docs): a delay source plus
+/// an optional fault injector layered on top. `faults` is `None`
+/// unless fault knobs are set, so fault-free runs construct no fault
+/// RNG and stay bit-identical to pre-fault builds.
+pub struct DisturbanceModel {
+    delays: DelaySource,
+    faults: Option<FaultInjector>,
 }
 
 impl DisturbanceModel {
@@ -101,24 +188,40 @@ impl DisturbanceModel {
     /// otherwise the synthetic injector — on the exact RNG stream the
     /// pre-model controller used, so injector runs stay bit-identical.
     pub fn from_config(cfg: &TrainConfig) -> Result<DisturbanceModel> {
-        match &cfg.trace {
-            Some(path) => Ok(DisturbanceModel::Trace(
+        let delays = match &cfg.trace {
+            Some(path) => DelaySource::Trace(
                 TraceReplay::load(path, cfg.seed)
                     .context("building trace-replay disturbance model")?,
-            )),
-            None => Ok(DisturbanceModel::Injector(StragglerInjector::new(
+            ),
+            None => DelaySource::Injector(StragglerInjector::new(
                 cfg.straggler,
                 Pcg32::new(cfg.seed, 0x57A6),
-            ))),
-        }
+            )),
+        };
+        // A dedicated stream (0xFA17), never constructed fault-free:
+        // enabling faults cannot perturb delay draws and vice versa.
+        let faults = cfg
+            .fault
+            .injects()
+            .then(|| FaultInjector::new(cfg.fault, Pcg32::new(cfg.seed, 0xFA17)));
+        Ok(DisturbanceModel { delays, faults })
     }
 
-    /// This iteration's per-learner delays.
+    /// True when delays come from measured-trace replay.
+    pub fn replays_trace(&self) -> bool {
+        matches!(self.delays, DelaySource::Trace(_))
+    }
+
+    /// This iteration's per-learner delays and fault directives.
     pub fn plan(&mut self, n: usize) -> InjectionPlan {
-        match self {
-            DisturbanceModel::Injector(inj) => inj.plan(n),
-            DisturbanceModel::Trace(replay) => replay.plan(n),
+        let mut plan = match &mut self.delays {
+            DelaySource::Injector(inj) => inj.plan(n),
+            DelaySource::Trace(replay) => replay.plan(n),
+        };
+        if let Some(faults) = &mut self.faults {
+            plan.faults = faults.plan(n);
         }
+        plan
     }
     // Run headers describe the disturbance via `TrainConfig::summary`
     // (trace=… / stragglers(…)); no second label format lives here.
@@ -243,7 +346,7 @@ mod tests {
             assert_eq!(a.stragglers, b.stragglers);
             assert_eq!(a.delay_ns, b.delay_ns);
         }
-        assert!(matches!(model, DisturbanceModel::Injector(_)));
+        assert!(!model.replays_trace());
     }
 
     #[test]
@@ -256,7 +359,7 @@ mod tests {
         cfg.trace = Some(path.clone());
         cfg.seed = 0;
         let mut model = DisturbanceModel::from_config(&cfg).unwrap();
-        assert!(matches!(model, DisturbanceModel::Trace(_)));
+        assert!(model.replays_trace());
         let p = model.plan(2);
         assert_eq!(p.delay_ns, vec![5_000_000, 0]);
         assert_eq!(p.stragglers, vec![0]);
@@ -264,5 +367,80 @@ mod tests {
         cfg.trace = Some(dir.join("missing.csv"));
         assert!(DisturbanceModel::from_config(&cfg).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_free_config_draws_no_fault_rng_and_empty_plans() {
+        let mut cfg = TrainConfig::new("x");
+        cfg.straggler = StragglerConfig::fixed(2, Duration::from_millis(10));
+        cfg.seed = 9;
+        assert!(!cfg.fault.injects());
+        let mut model = DisturbanceModel::from_config(&cfg).unwrap();
+        assert!(model.faults.is_none(), "fault-free config must not build a FaultInjector");
+        // And the delay stream is untouched relative to the bare
+        // injector — the bit-identity guarantee ISSUE 7 pins.
+        let mut reference =
+            StragglerInjector::new(cfg.straggler, Pcg32::new(cfg.seed, 0x57A6));
+        for _ in 0..5 {
+            let p = model.plan(8);
+            assert!(p.faults.is_empty());
+            assert_eq!(p.stragglers, reference.plan(8).stragglers);
+        }
+    }
+
+    #[test]
+    fn fault_draws_are_deterministic_and_separate_from_delays() {
+        let mut cfg = TrainConfig::new("x");
+        cfg.straggler = StragglerConfig::fixed(2, Duration::from_millis(10));
+        cfg.seed = 9;
+        cfg.fault.crash_rate = 0.3;
+        cfg.fault.crash_restart = Some(Duration::from_secs(2));
+        cfg.fault.omission_rate = 0.2;
+        let plans: Vec<InjectionPlan> = {
+            let mut model = DisturbanceModel::from_config(&cfg).unwrap();
+            (0..20).map(|_| model.plan(8)).collect()
+        };
+        // Deterministic per seed: a second model replays identically.
+        let mut twin = DisturbanceModel::from_config(&cfg).unwrap();
+        for p in &plans {
+            let q = twin.plan(8);
+            assert_eq!(p.faults, q.faults);
+            assert_eq!(p.stragglers, q.stragglers);
+        }
+        // Delay draws are unaffected by fault injection (separate
+        // streams): match a fault-free reference.
+        let mut reference =
+            StragglerInjector::new(cfg.straggler, Pcg32::new(cfg.seed, 0x57A6));
+        for p in &plans {
+            let r = reference.plan(8);
+            assert_eq!(p.stragglers, r.stragglers);
+            assert_eq!(p.delay_ns, r.delay_ns);
+        }
+        // At these rates something fired in 20 iterations of 8.
+        assert!(plans.iter().any(|p| !p.faults.crashes.is_empty()));
+        assert!(plans.iter().any(|p| !p.faults.omissions.is_empty()));
+        // Restart configured ⇒ every crash carries a positive downtime.
+        for p in &plans {
+            for &(j, down) in &p.faults.crashes {
+                assert!(j < 8);
+                assert!(down.is_some() && down.unwrap() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn permanent_crashes_when_no_restart_configured() {
+        let mut inj = FaultInjector::new(
+            FaultConfig { crash_rate: 0.5, ..FaultConfig::none() },
+            Pcg32::seeded(11),
+        );
+        let mut saw_crash = false;
+        for _ in 0..20 {
+            for &(_, down) in &inj.plan(6).crashes {
+                saw_crash = true;
+                assert_eq!(down, None, "no --crash-restart-s ⇒ permanent");
+            }
+        }
+        assert!(saw_crash);
     }
 }

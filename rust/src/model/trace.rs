@@ -243,7 +243,7 @@ impl TraceReplay {
         let delay_ns: Vec<u64> = (0..n).map(|j| round[j % round.len()]).collect();
         let stragglers: Vec<usize> =
             (0..n).filter(|&j| delay_ns[j] > 0).collect();
-        InjectionPlan { stragglers, delay_ns }
+        InjectionPlan { stragglers, delay_ns, faults: Default::default() }
     }
 }
 

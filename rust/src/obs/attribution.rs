@@ -173,6 +173,32 @@ impl Attribution {
         self.iters
     }
 
+    /// Used arrivals recorded for `learner` (0 when out of range) —
+    /// read-only view for the failure detector and timeout
+    /// diagnostics; no new counters.
+    pub fn arrivals_of(&self, learner: usize) -> u64 {
+        self.learners.get(learner).map_or(0, |l| l.arrivals)
+    }
+
+    /// `(p50, p99)` arrival latency of `learner`'s used arrivals in
+    /// seconds, `None` until it has arrived at least once.
+    pub fn latency_of(&self, learner: usize) -> Option<(f64, f64)> {
+        let l = self.learners.get(learner).filter(|l| l.arrivals > 0)?;
+        Some((Self::finite(l.latency.p50()), Self::finite(l.latency.p99())))
+    }
+
+    /// One-line arrival attribution for `learner`, used by the collect
+    /// timeout error and detector events ("12 arrivals, p99 38.2ms" /
+    /// "never arrived").
+    pub fn describe(&self, learner: usize) -> String {
+        match self.latency_of(learner) {
+            Some((_, p99)) => {
+                format!("{} arrivals, p99 {:.1}ms", self.arrivals_of(learner), p99 * 1e3)
+            }
+            None => "never arrived".to_string(),
+        }
+    }
+
     /// Decodability-front quantiles (seconds).
     pub fn front(&self) -> &Quantiles {
         &self.front
@@ -303,5 +329,22 @@ mod tests {
         let mut attr = Attribution::new(2);
         attr.observe_arrival(9, 1, 2, Duration::ZERO, false);
         assert_eq!(attr.summary().tail_learner, None);
+    }
+
+    #[test]
+    fn per_learner_accessors_expose_arrivals_and_tails() {
+        let mut attr = Attribution::new(2);
+        assert_eq!(attr.arrivals_of(0), 0);
+        assert_eq!(attr.latency_of(0), None);
+        assert_eq!(attr.describe(0), "never arrived");
+        attr.observe_arrival(0, 1, 2, Duration::from_millis(5), false);
+        attr.observe_arrival(0, 1, 2, Duration::from_millis(7), false);
+        assert_eq!(attr.arrivals_of(0), 2);
+        let (p50, p99) = attr.latency_of(0).unwrap();
+        assert!(p50 > 0.0 && p99 >= p50);
+        assert!(attr.describe(0).starts_with("2 arrivals"), "{}", attr.describe(0));
+        // out of range stays inert
+        assert_eq!(attr.arrivals_of(9), 0);
+        assert_eq!(attr.describe(9), "never arrived");
     }
 }

@@ -96,6 +96,25 @@ pub enum Event {
     PoolSample { hits: u64, misses: u64, resident: u64 },
     /// Network-model transfer counters sampled at an iteration end.
     NetSample { broadcast_ns: u64, return_ns: u64 },
+    /// Fault injection crashed `learner` (`down_ns` = drawn downtime;
+    /// `None` = permanent). Recorded by the sim transport when the
+    /// directive is applied.
+    CrashInjected { iter: u64, learner: u32, down_ns: Option<u64> },
+    /// The failure detector's strike count on `learner` crossed the
+    /// suspicion threshold (`misses` consecutive corroborated losses).
+    LearnerSuspected { iter: u64, learner: u32, misses: u32 },
+    /// The failure detector declared `learner` dead; membership remap
+    /// follows.
+    LearnerDeclaredDead { iter: u64, learner: u32, misses: u32 },
+    /// Assignment rows were remapped onto `survivors` learners after
+    /// `dead` cumulative deaths; the code is rebuilt over the
+    /// survivor set.
+    MembershipRemap { iter: u64, survivors: u32, dead: u32 },
+    /// The iteration could not reach rank M on live learners
+    /// (`survivors` alive, rank stuck at `rank`); `fallback` = the run
+    /// continues via uncoded fallback, else it terminates with a
+    /// structured fault error.
+    DegradedDecode { iter: u64, survivors: u32, rank: u32, fallback: bool },
 }
 
 impl Event {
@@ -115,6 +134,11 @@ impl Event {
             Event::FrameRecv { .. } => "frame_recv",
             Event::PoolSample { .. } => "pool_sample",
             Event::NetSample { .. } => "net_sample",
+            Event::CrashInjected { .. } => "crash_injected",
+            Event::LearnerSuspected { .. } => "learner_suspected",
+            Event::LearnerDeclaredDead { .. } => "learner_declared_dead",
+            Event::MembershipRemap { .. } => "membership_remap",
+            Event::DegradedDecode { .. } => "degraded_decode",
         }
     }
 }

@@ -78,6 +78,24 @@ pub fn jsonl(events: &[TracedEvent]) -> String {
             Event::NetSample { broadcast_ns, return_ns } => {
                 format!("\"broadcast_ns\":{broadcast_ns},\"return_ns\":{return_ns}")
             }
+            Event::CrashInjected { iter, learner, down_ns } => match down_ns {
+                Some(ns) => {
+                    format!("\"iter\":{iter},\"learner\":{learner},\"down_ns\":{ns}")
+                }
+                None => format!("\"iter\":{iter},\"learner\":{learner},\"down_ns\":null"),
+            },
+            Event::LearnerSuspected { iter, learner, misses } => {
+                format!("\"iter\":{iter},\"learner\":{learner},\"misses\":{misses}")
+            }
+            Event::LearnerDeclaredDead { iter, learner, misses } => {
+                format!("\"iter\":{iter},\"learner\":{learner},\"misses\":{misses}")
+            }
+            Event::MembershipRemap { iter, survivors, dead } => {
+                format!("\"iter\":{iter},\"survivors\":{survivors},\"dead\":{dead}")
+            }
+            Event::DegradedDecode { iter, survivors, rank, fallback } => format!(
+                "\"iter\":{iter},\"survivors\":{survivors},\"rank\":{rank},\"fallback\":{fallback}"
+            ),
         };
         out.push_str(&format!("{{\"t_ns\":{t},\"ev\":\"{}\",{body}}}\n", te.event.kind()));
     }
@@ -213,6 +231,44 @@ pub fn chrome_trace(events: &[TracedEvent], n_learners: usize) -> String {
                     *return_ns as f64 / 1e6
                 ),
             )),
+            Event::CrashInjected { iter, learner, down_ns } => {
+                let down = match down_ns {
+                    Some(ns) => format!("{:.3}", *ns as f64 / 1e6),
+                    None => "\"permanent\"".into(),
+                };
+                evs.push(instant(
+                    "crash",
+                    lane(*learner),
+                    at,
+                    format!("\"iter\":{iter},\"down_ms\":{down}"),
+                ));
+            }
+            Event::LearnerSuspected { iter, learner, misses } => evs.push(instant(
+                "suspected",
+                lane(*learner),
+                at,
+                format!("\"iter\":{iter},\"misses\":{misses}"),
+            )),
+            Event::LearnerDeclaredDead { iter, learner, misses } => evs.push(instant(
+                "dead",
+                lane(*learner),
+                at,
+                format!("\"iter\":{iter},\"misses\":{misses}"),
+            )),
+            Event::MembershipRemap { iter, survivors, dead } => evs.push(instant(
+                "remap",
+                0,
+                at,
+                format!("\"iter\":{iter},\"survivors\":{survivors},\"dead\":{dead}"),
+            )),
+            Event::DegradedDecode { iter, survivors, rank, fallback } => evs.push(instant(
+                "degraded",
+                0,
+                at,
+                format!(
+                    "\"iter\":{iter},\"survivors\":{survivors},\"rank\":{rank},\"fallback\":{fallback}"
+                ),
+            )),
         }
     }
 
@@ -340,5 +396,69 @@ mod tests {
     #[test]
     fn escapes_control_characters() {
         assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    /// The fault-lifecycle events flow through both exporters: valid
+    /// JSON lines with their tags, and Chrome instants on the right
+    /// lanes (crash/suspect/dead on the learner's lane, remap/degraded
+    /// on the controller's).
+    #[test]
+    fn fault_events_flow_through_both_exporters() {
+        let ms = Duration::from_millis;
+        let events = vec![
+            TracedEvent {
+                at: ms(1),
+                event: Event::CrashInjected { iter: 3, learner: 1, down_ns: None },
+            },
+            TracedEvent {
+                at: ms(2),
+                event: Event::CrashInjected { iter: 3, learner: 0, down_ns: Some(5_000_000) },
+            },
+            TracedEvent {
+                at: ms(4),
+                event: Event::LearnerSuspected { iter: 4, learner: 1, misses: 2 },
+            },
+            TracedEvent {
+                at: ms(6),
+                event: Event::LearnerDeclaredDead { iter: 5, learner: 1, misses: 3 },
+            },
+            TracedEvent {
+                at: ms(6),
+                event: Event::MembershipRemap { iter: 5, survivors: 3, dead: 1 },
+            },
+            TracedEvent {
+                at: ms(8),
+                event: Event::DegradedDecode { iter: 7, survivors: 2, rank: 1, fallback: true },
+            },
+        ];
+        let txt = jsonl(&events);
+        for l in txt.lines() {
+            Json::parse(l).unwrap_or_else(|e| panic!("bad line {l}: {e}"));
+        }
+        for tag in [
+            "crash_injected",
+            "learner_suspected",
+            "learner_declared_dead",
+            "membership_remap",
+            "degraded_decode",
+        ] {
+            assert!(txt.contains(&format!("\"ev\":\"{tag}\"")), "missing {tag} in {txt}");
+        }
+        assert!(txt.contains("\"down_ns\":null"), "permanent crash encodes null downtime");
+        assert!(txt.contains("\"down_ns\":5000000"));
+
+        let trace = chrome_trace(&events, 2);
+        let doc = Json::parse(&trace).expect("trace must be valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let find = |name: &str| {
+            evs.iter()
+                .find(|e| str_of(e, "name") == Some(name))
+                .unwrap_or_else(|| panic!("no {name} instant"))
+        };
+        assert_eq!(num_of(find("crash"), "tid"), Some(2.0), "learner 1 lane");
+        assert_eq!(num_of(find("suspected"), "tid"), Some(2.0));
+        assert_eq!(num_of(find("dead"), "tid"), Some(2.0));
+        assert_eq!(num_of(find("remap"), "tid"), Some(0.0), "controller lane");
+        assert_eq!(num_of(find("degraded"), "tid"), Some(0.0));
     }
 }

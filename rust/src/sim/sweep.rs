@@ -35,7 +35,7 @@ use anyhow::{Context, Result};
 use crate::coding::decoder::PlanCacheStats;
 use crate::coding::{Code, CodeParams, Scheme};
 use crate::config::{Backend, DelayDist, TimeMode, TrainConfig};
-use crate::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
+use crate::coordinator::{backend_factory, spawn_pool, Controller, FaultError, FaultStats, RunSpec};
 use crate::metrics::table::Table;
 use crate::metrics::{RunLog, Stats};
 use crate::model::NetStats;
@@ -902,6 +902,184 @@ pub fn write_scale_json(
     f.flush()
 }
 
+// ------------------------------------------------------------------
+// Fault-tolerance sweeps: crash/omission axis + BENCH_fault.json
+// ------------------------------------------------------------------
+
+/// One scheme's outcome under the sweep's fault configuration: how far
+/// the run got, whether it survived (possibly degraded), and the
+/// controller's fault-lifecycle counters.
+pub struct FaultCell {
+    pub scheme: Scheme,
+    /// Iterations that completed before the run ended (= the target on
+    /// a survived run).
+    pub iters_done: usize,
+    /// Scheduled iterations (`base.iterations`).
+    pub iters_target: usize,
+    /// `iters_done / iters_target` — the headline availability number.
+    pub availability: f64,
+    /// Whether the run reached its final iteration. A `false` cell
+    /// terminated **deterministically** through the degraded path
+    /// ([`FaultError`]) — a hang to `collect_timeout` is a bug, not a
+    /// cell outcome.
+    pub survived: bool,
+    /// The [`FaultError`] rendering when the run terminated early.
+    pub error: Option<String>,
+    /// Losses / suspicions / deaths / remaps / degraded retries /
+    /// recovery time accumulated by the controller.
+    pub stats: FaultStats,
+    /// Worst-case crash tolerance of the scheme's assignment matrix.
+    pub tolerance: usize,
+    /// Wall-clock spent executing the cell (not simulated time).
+    pub wall: Duration,
+}
+
+/// Run one scheme under the base config's fault knobs. A [`FaultError`]
+/// is a *cell outcome* (degraded, recorded), not a sweep failure; any
+/// other error propagates — it is a bug.
+fn run_fault_cell(sweep: &SweepConfig, scheme: Scheme) -> Result<FaultCell> {
+    let wall_t = std::time::Instant::now();
+    let mut cfg = sweep.base.clone();
+    cfg.scheme = scheme;
+    cfg.trace_out = None; // one trace file; fault cells never trace
+    cfg.straggler.delay = sweep.delay;
+    cfg.seed = derive_scheme_seed(sweep.base.seed, scheme);
+    let code = Code::build(&CodeParams {
+        scheme,
+        n: cfg.n_learners,
+        m: sweep.spec.m,
+        p_m: cfg.p_m,
+        seed: cfg.seed,
+    });
+    let tolerance = code.worst_case_tolerance();
+    let factory = backend_factory(&cfg, sweep.artifacts_dir.clone(), &sweep.spec);
+    let pool = spawn_pool(&cfg, factory)?;
+    let iters_target = cfg.iterations;
+    let mut ctrl = Controller::new(cfg, sweep.spec.clone(), pool)
+        .with_context(|| format!("building fault cell for {scheme}"))?;
+    let res = ctrl.train().map(|_| ());
+    let iters_done = ctrl.log.len();
+    let stats = ctrl.fault_stats();
+    ctrl.shutdown();
+    let (survived, error) = match res {
+        Ok(()) => (true, None),
+        Err(e) => match e.downcast_ref::<FaultError>() {
+            Some(fe) => (false, Some(fe.to_string())),
+            None => {
+                return Err(e).with_context(|| format!("fault cell {scheme} died unexpectedly"))
+            }
+        },
+    };
+    Ok(FaultCell {
+        scheme,
+        iters_done,
+        iters_target,
+        availability: if iters_target == 0 {
+            0.0
+        } else {
+            iters_done as f64 / iters_target as f64
+        },
+        survived,
+        error,
+        stats,
+        tolerance,
+        wall: wall_t.elapsed(),
+    })
+}
+
+/// The fault axis: one cell per scheme, all under `base.fault`. Serial
+/// — fault sweeps are short and their value is the per-scheme
+/// comparison, not throughput.
+pub fn run_fault_sweep(sweep: &SweepConfig) -> Result<Vec<FaultCell>> {
+    sweep.schemes.iter().map(|&s| run_fault_cell(sweep, s)).collect()
+}
+
+/// Fault-sweep table: survival, availability, deaths/remaps, recovery.
+pub fn fault_table(cells: &[FaultCell]) -> String {
+    let mut table = Table::new(&[
+        "scheme",
+        "tolerance",
+        "iters",
+        "availability",
+        "lost",
+        "deaths",
+        "remaps",
+        "degraded",
+        "recovery",
+        "outcome",
+    ]);
+    for c in cells {
+        table.row(&[
+            c.scheme.name().to_string(),
+            c.tolerance.to_string(),
+            format!("{}/{}", c.iters_done, c.iters_target),
+            format!("{:.2}", c.availability),
+            c.stats.lost_results.to_string(),
+            c.stats.deaths.to_string(),
+            c.stats.remaps.to_string(),
+            c.stats.degraded_iters.to_string(),
+            format!("{:.1}ms", c.stats.recovery_ns as f64 / 1e6),
+            if c.survived { "survived".into() } else { "degraded-stop".into() },
+        ]);
+    }
+    table.render()
+}
+
+/// Machine-readable fault record (`BENCH_fault.json`): the fault knobs
+/// and one cell per scheme with iterations survived, availability, and
+/// recovery time — written by `sim-sweep` whenever a fault knob is
+/// active.
+pub fn write_fault_json(
+    cells: &[FaultCell],
+    base: &TrainConfig,
+    wall: Duration,
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"fault_sweep\",")?;
+    writeln!(f, "  \"wall_s\": {:.6},", wall.as_secs_f64())?;
+    writeln!(f, "  \"crash_rate\": {},", base.fault.crash_rate)?;
+    match base.fault.crash_restart {
+        Some(d) => writeln!(f, "  \"crash_restart_s\": {:.6},", d.as_secs_f64())?,
+        None => writeln!(f, "  \"crash_restart_s\": null,")?,
+    }
+    writeln!(f, "  \"omission_rate\": {},", base.fault.omission_rate)?;
+    writeln!(f, "  \"degraded_mode\": \"{}\",", base.fault.degraded.name())?;
+    writeln!(f, "  \"cells\": [")?;
+    for (i, c) in cells.iter().enumerate() {
+        let comma = if i + 1 == cells.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"scheme\": \"{}\", \"tolerance\": {}, \"iters_done\": {}, \
+             \"iters_target\": {}, \"availability\": {:.6}, \"survived\": {}, \
+             \"lost_results\": {}, \"suspected\": {}, \"deaths\": {}, \"remaps\": {}, \
+             \"degraded_iters\": {}, \"recovery_s\": {:.9}, \"error\": {}, \
+             \"wall_s\": {:.6}}}{comma}",
+            c.scheme.name(),
+            c.tolerance,
+            c.iters_done,
+            c.iters_target,
+            c.availability,
+            c.survived,
+            c.stats.lost_results,
+            c.stats.suspected,
+            c.stats.deaths,
+            c.stats.remaps,
+            c.stats.degraded_iters,
+            c.stats.recovery_ns as f64 / 1e9,
+            c.error.as_deref().map_or("null".to_string(), json_str),
+            c.wall.as_secs_f64(),
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    f.flush()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1385,5 +1563,99 @@ mod tests {
         assert_eq!(shard_width(&virt, 5), 5, "threads cap at the job count");
         virt.base.sweep_threads = 3;
         assert_eq!(shard_width(&virt, 5), 3);
+    }
+
+    /// The fault axis end to end: crash-everyone cells terminate
+    /// deterministically through the degraded path (never a hang to
+    /// the 24 h virtual collect window), zero-fault cells survive every
+    /// iteration, and BENCH_fault.json parses with the survival keys.
+    #[test]
+    fn fault_sweep_records_survival_and_writes_fault_json() {
+        use crate::config::FaultConfig;
+        let mut fault_base = base();
+        fault_base.collect_timeout = Duration::from_secs(24 * 3600);
+        // crash_rate = 1 kills every learner on the first coded
+        // iteration: survivors < M, so every scheme stops via
+        // FaultError — degraded-stop, not a timeout.
+        fault_base.fault = FaultConfig { crash_rate: 1.0, ..FaultConfig::none() };
+        let sweep = SweepConfig {
+            base: fault_base,
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Uncoded, Scheme::Mds],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        };
+        let wall_t = std::time::Instant::now();
+        let cells = run_fault_sweep(&sweep).unwrap();
+        assert!(
+            wall_t.elapsed() < Duration::from_secs(60),
+            "a dead fleet must fail fast, not idle out the virtual window"
+        );
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(!c.survived, "{}: no scheme survives losing everyone", c.scheme);
+            assert!(c.error.as_deref().unwrap_or("").contains("cannot reach rank M"));
+            assert!(c.iters_done < c.iters_target);
+            assert!(c.availability < 1.0);
+            assert!(c.stats.degraded_iters > 0, "{}: the degraded path must fire", c.scheme);
+        }
+
+        let txt = fault_table(&cells);
+        assert!(txt.contains("degraded-stop") && txt.contains("availability"), "{txt}");
+        let dir = std::env::temp_dir().join("coded_marl_fault_json_test");
+        let path = dir.join("BENCH_fault.json");
+        write_fault_json(&cells, &sweep.base, Duration::from_millis(9), &path).unwrap();
+
+        // A fault-free base survives everything, with zeroed counters.
+        let mut clean = sweep;
+        clean.base.fault = FaultConfig::none();
+        let clean_cells = run_fault_sweep(&clean).unwrap();
+        for c in &clean_cells {
+            assert!(c.survived && c.availability == 1.0, "{}", c.scheme);
+            assert_eq!(c.stats, FaultStats::default(), "{}", c.scheme);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "fault_sweep");
+        let jcells = json.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(jcells.len(), 2);
+        for c in jcells {
+            assert!(c.get("availability").unwrap().as_f64().unwrap() < 1.0);
+            assert!(c.get("iters_done").unwrap().as_usize().is_ok());
+            assert!(c.get("recovery_s").unwrap().as_f64().is_ok());
+            assert!(c.get("error").unwrap().as_str().is_ok());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Transient crash-and-restart within tolerance: MDS at N=7, M=2
+    /// (tolerance N−M = 5) rides out restarting learners and finishes
+    /// every iteration, while the losses are corroborated (not silent).
+    #[test]
+    fn fault_sweep_survives_transient_crashes_within_tolerance() {
+        use crate::config::FaultConfig;
+        let mut fault_base = base();
+        fault_base.collect_timeout = Duration::from_secs(24 * 3600);
+        fault_base.iterations = 7; // 6 measured + warmup: room to recover
+        fault_base.fault = FaultConfig {
+            crash_rate: 0.15,
+            crash_restart: Some(Duration::from_millis(1)),
+            ..FaultConfig::none()
+        };
+        let sweep = SweepConfig {
+            base: fault_base,
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 2, 0, 8, 4),
+            schemes: vec![Scheme::Mds],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        };
+        let cells = run_fault_sweep(&sweep).unwrap();
+        let c = &cells[0];
+        assert!(c.survived, "MDS must mask transient crashes: {:?}", c.error);
+        assert_eq!(c.availability, 1.0);
+        assert_eq!(c.iters_done, c.iters_target);
+        assert!(c.stats.lost_results > 0, "crashes must be corroborated as losses");
     }
 }

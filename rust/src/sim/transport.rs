@@ -64,7 +64,7 @@ use crate::coordinator::backend::{LearnerBackend, MockBackend};
 use crate::linalg::kernels;
 use crate::linalg::pool::BufPool;
 use crate::marl::ModelDims;
-use crate::model::{NetStats, SystemModel};
+use crate::model::{FaultPlan, NetStats, SystemModel};
 use crate::obs::{Event as ObsEvent, Tracer, WasteStats};
 use crate::transport::msg::{result_wire_len, task_header_wire_len};
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
@@ -81,6 +81,10 @@ struct Event {
     /// cancelled (acked/superseded) result was never sent by the real
     /// learner, so its frame must not count as traffic.
     net_out: Duration,
+    /// Injected omission: the learner really computed and sent this
+    /// result (compute + return leg are charged) but it is dropped in
+    /// flight instead of delivered.
+    omitted: bool,
     msg: LearnerMsg,
 }
 
@@ -117,6 +121,10 @@ struct SimLearner {
     generation: u64,
     /// Iteration of the scheduled-but-undelivered result, if any.
     pending_iter: Option<u64>,
+    /// Injected crash: down until this virtual instant
+    /// (`Duration::MAX` = permanent). Checked — and lazily cleared
+    /// once elapsed — at task receipt.
+    down_until: Option<Duration>,
 }
 
 /// Event-driven [`ControllerTransport`] over a [`VirtualClock`].
@@ -147,6 +155,19 @@ pub struct SimTransport {
     /// — it is a pure accumulator over values the cancellation path
     /// already holds.
     waste: WasteStats,
+    /// Learners whose result for `omit_iter` is dropped in flight
+    /// (installed by [`ControllerTransport::inject_faults`]).
+    omit_iter: Option<u64>,
+    omit: Vec<usize>,
+    /// Learners known lost for `lost_iter` — crashed at task receipt,
+    /// dead backend, or omitted result — recorded at *scheduling*
+    /// time so [`ControllerTransport::lost_for_iter`] lets the
+    /// controller fail fast instead of idling to its collect timeout.
+    /// Stale iterations are ignored by the iter check, so no
+    /// per-iteration reset is needed; fault-free runs never push here
+    /// beyond dead-backend erasures.
+    lost_iter: Option<u64>,
+    lost: Vec<usize>,
 }
 
 impl SimTransport {
@@ -239,7 +260,12 @@ impl SimTransport {
         }
         let learners: Vec<SimLearner> = backends
             .into_iter()
-            .map(|backend| SimLearner { backend, generation: 0, pending_iter: None })
+            .map(|backend| SimLearner {
+                backend,
+                generation: 0,
+                pending_iter: None,
+                down_until: None,
+            })
             .collect();
         // Each learner carries at most one live event plus a bounded
         // number of lazily-deleted stale ones; pre-sizing avoids heap
@@ -260,6 +286,35 @@ impl SimTransport {
             net_body_time: Duration::ZERO,
             tracer: Tracer::disabled(),
             waste: WasteStats::default(),
+            omit_iter: None,
+            omit: Vec::new(),
+            lost_iter: None,
+            lost: Vec::new(),
+        }
+    }
+
+    /// Whether learner `j` is crashed at `now`, lazily clearing an
+    /// elapsed restart.
+    fn is_down(&mut self, j: usize, now: Duration) -> bool {
+        match self.learners[j].down_until {
+            Some(until) if now < until => true,
+            Some(_) => {
+                self.learners[j].down_until = None;
+                false
+            }
+            None => false,
+        }
+    }
+
+    /// Record learner `j` as lost for `iter` (crash-swallowed task,
+    /// dead backend, or omitted result).
+    fn mark_lost(&mut self, iter: u64, j: usize) {
+        if self.lost_iter != Some(iter) {
+            self.lost_iter = Some(iter);
+            self.lost.clear();
+        }
+        if !self.lost.contains(&j) {
+            self.lost.push(j);
         }
     }
 
@@ -324,9 +379,14 @@ impl SimTransport {
         let now = self.clock.now();
         self.learners[j].generation += 1; // a new task supersedes any pending result
         let net_in = self.charge_broadcast(iter, body, row.len());
-        if self.learners[j].backend.is_none() {
+        if self.learners[j].backend.is_none() || self.is_down(j, now) {
+            // Permanent erasure (dead backend) or injected crash: the
+            // task is swallowed — and the loss is visible to the
+            // controller via `lost_for_iter`, so collect fails fast
+            // instead of waiting out its timeout.
             self.pool.put(row);
-            return Ok(()); // permanent erasure: the task is swallowed
+            self.mark_lost(iter, j);
+            return Ok(());
         }
         let p = body.agent_params.first().map(|v| v.len()).unwrap_or(0);
         let net_out = self.return_leg(p);
@@ -347,6 +407,13 @@ impl SimTransport {
         learner.pending_iter = Some(iter);
         let generation = learner.generation;
         self.pool.put(row);
+        // Injected omission: the learner computes and transmits as
+        // usual, but the result is dropped in flight. Marked lost at
+        // scheduling time so the controller never waits on it.
+        let omitted = self.omit_iter == Some(iter) && self.omit.contains(&j);
+        if omitted {
+            self.mark_lost(iter, j);
+        }
         self.seq += 1;
         self.events.push(Event {
             at,
@@ -354,6 +421,7 @@ impl SimTransport {
             learner: j,
             generation,
             net_out,
+            omitted,
             msg: LearnerMsg::Result {
                 iter,
                 learner_id: j as u32,
@@ -427,6 +495,26 @@ impl ControllerTransport for SimTransport {
             let ev = self.events.pop().expect("peeked event");
             self.clock.advance_to(ev.at);
             self.learners[ev.learner].pending_iter = None;
+            if ev.omitted {
+                // Dropped in flight: the learner really computed and
+                // transmitted (return leg + compute are charged as
+                // waste), but the controller never sees the frame.
+                if !ev.net_out.is_zero() {
+                    self.model.network.record_return(ev.net_out);
+                }
+                if let LearnerMsg::Result { iter, learner_id, y, compute_ns } = ev.msg {
+                    let bytes = result_wire_len(y.len()) as u64;
+                    self.waste.add(bytes, compute_ns);
+                    self.tracer.record(|| ObsEvent::ResultCancelled {
+                        iter,
+                        learner: learner_id,
+                        bytes,
+                        compute_ns,
+                    });
+                    self.pool.put(y);
+                }
+                continue;
+            }
             // Delivered: NOW the return frame counts as traffic.
             if !ev.net_out.is_zero() {
                 self.model.network.record_return(ev.net_out);
@@ -467,6 +555,39 @@ impl ControllerTransport for SimTransport {
 
     fn waste_stats(&self) -> Option<WasteStats> {
         Some(self.waste)
+    }
+
+    fn inject_faults(&mut self, iter: u64, plan: &FaultPlan) {
+        let now = self.clock.now();
+        for &(j, down_ns) in &plan.crashes {
+            if j >= self.learners.len() || self.is_down(j, now) {
+                continue; // already down: the directive is moot
+            }
+            let until = match down_ns {
+                Some(ns) => now + Duration::from_nanos(ns),
+                None => Duration::MAX, // permanent
+            };
+            let learner = &mut self.learners[j];
+            learner.down_until = Some(until);
+            // The crash kills any in-flight result (lazy heap delete,
+            // same mechanism as an ack — its waste is counted when the
+            // stale event pops).
+            learner.generation += 1;
+            learner.pending_iter = None;
+            self.tracer.record(|| ObsEvent::CrashInjected {
+                iter,
+                learner: j as u32,
+                down_ns,
+            });
+        }
+        self.omit_iter = Some(iter);
+        self.omit.clear();
+        self.omit.extend_from_slice(&plan.omissions);
+    }
+
+    fn lost_for_iter(&self, iter: u64) -> Option<&[usize]> {
+        (self.lost_iter == Some(iter) && !self.lost.is_empty())
+            .then(|| self.lost.as_slice())
     }
 }
 
@@ -821,6 +942,133 @@ mod tests {
             .iter()
             .any(|e| matches!(e.event, ObsEvent::FrameRecv { learner: 0, .. })));
         assert_eq!(sim.waste_stats().unwrap().results, 1, "delivery is not waste");
+    }
+
+    #[test]
+    fn injected_crash_swallows_task_and_is_reported_lost() {
+        let mut sim = SimTransport::new(2, dims(), Duration::from_millis(1));
+        let mut rng = Pcg32::seeded(30);
+        // Permanent crash on learner 0, injected before the broadcast
+        // (the controller's order: draw plan, inject, then send).
+        let plan = FaultPlan { crashes: vec![(0, None)], omissions: vec![] };
+        sim.inject_faults(1, &plan);
+        for j in 0..2 {
+            let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+            sim.send_to(j, msg).unwrap();
+        }
+        assert_eq!(sim.lost_for_iter(1), Some(&[0usize][..]));
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = got else { panic!() };
+        assert_eq!(learner_id, 1, "only the survivor replies");
+        assert!(sim.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        // Permanent: still down next iteration.
+        let (msg, _, _) = task(2, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        assert_eq!(sim.lost_for_iter(2), Some(&[0usize][..]));
+        assert_eq!(sim.lost_for_iter(1), None, "stale iteration is forgotten");
+    }
+
+    #[test]
+    fn crash_restart_brings_the_learner_back_after_downtime() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(1));
+        let mut rng = Pcg32::seeded(31);
+        // Down for 50 virtual ms from t=0.
+        sim.inject_faults(1, &FaultPlan {
+            crashes: vec![(0, Some(50_000_000))],
+            omissions: vec![],
+        });
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        assert_eq!(sim.lost_for_iter(1), Some(&[0usize][..]));
+        assert!(sim.recv_timeout(Duration::from_millis(100)).unwrap().is_none());
+        // Clock is now at 100 ms > 50 ms: the learner has restarted.
+        let (msg, _, _) = task(2, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        assert_eq!(sim.lost_for_iter(2), None);
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        assert!(matches!(got, LearnerMsg::Result { iter: 2, .. }));
+    }
+
+    #[test]
+    fn omitted_result_is_computed_charged_and_dropped() {
+        use crate::config::NetConfig;
+        use crate::model::{ComputeModel, NetworkModel};
+        let d = dims();
+        let backends: Vec<Box<dyn LearnerBackend>> =
+            vec![Box::new(MockBackend::new(d, Duration::ZERO))];
+        let net = NetConfig { bandwidth_mbps: 1.0, jitter: Duration::ZERO };
+        let model = SystemModel {
+            compute: ComputeModel::fixed(Duration::from_millis(2)),
+            network: NetworkModel::from_config(&net, 0),
+        };
+        let mut sim = SimTransport::with_backends_and_model(backends, model);
+        let mut rng = Pcg32::seeded(32);
+        sim.inject_faults(1, &FaultPlan { crashes: vec![], omissions: vec![0] });
+        let (msg, params, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        // Lost is known at scheduling time — before any recv.
+        assert_eq!(sim.lost_for_iter(1), Some(&[0usize][..]));
+        assert!(sim.recv_timeout(Duration::from_secs(1)).unwrap().is_none());
+        // The learner really computed and transmitted: compute is
+        // wasted and the return frame counts as traffic.
+        let waste = sim.waste_stats().unwrap();
+        assert_eq!(waste.results, 1);
+        assert_eq!(waste.compute_ns, 2_000_000);
+        let result_us = result_wire_len(params[0].len()) as u64;
+        assert_eq!(sim.net_stats().unwrap().ret(), Duration::from_micros(result_us));
+        // Omission is per-iteration: the next round delivers.
+        let (msg, _, _) = task(2, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        assert!(sim.recv_timeout(Duration::from_secs(1)).unwrap().is_some());
+    }
+
+    #[test]
+    fn crash_cancels_in_flight_result_and_traces() {
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(1));
+        let tracer = Tracer::enabled(sim.clock(), 64);
+        sim.set_tracer(Arc::clone(&tracer));
+        let mut rng = Pcg32::seeded(33);
+        // Task in flight (50 ms delay), then the learner crashes.
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 50_000_000, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        sim.inject_faults(2, &FaultPlan { crashes: vec![(0, None)], omissions: vec![] });
+        assert!(sim.recv_timeout(Duration::from_millis(200)).unwrap().is_none());
+        assert_eq!(sim.waste_stats().unwrap().results, 1, "in-flight result died with the crash");
+        let evs = tracer.snapshot();
+        assert!(
+            evs.iter().any(|e| matches!(
+                e.event,
+                ObsEvent::CrashInjected { iter: 2, learner: 0, down_ns: None }
+            )),
+            "{evs:?}"
+        );
+        // A second crash directive against a down learner is moot.
+        sim.inject_faults(3, &FaultPlan { crashes: vec![(0, Some(1))], omissions: vec![] });
+        let crashes = tracer
+            .snapshot()
+            .iter()
+            .filter(|e| matches!(e.event, ObsEvent::CrashInjected { .. }))
+            .count();
+        assert_eq!(crashes, 1, "already-down learners are not re-crashed");
+    }
+
+    #[test]
+    fn dead_backend_is_reported_lost_for_fail_fast() {
+        use crate::coordinator::backend::BackendFactory;
+        let d = dims();
+        let factory: Arc<BackendFactory> = Arc::new(move |id| {
+            if id == 0 {
+                anyhow::bail!("injected: learner 0 dead at startup");
+            }
+            Ok(Box::new(MockBackend::new(d, Duration::ZERO)) as Box<dyn LearnerBackend>)
+        });
+        let mut sim = SimTransport::from_factory(2, &factory, Duration::from_millis(1)).unwrap();
+        let mut rng = Pcg32::seeded(34);
+        for j in 0..2 {
+            let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+            sim.send_to(j, msg).unwrap();
+        }
+        assert_eq!(sim.lost_for_iter(1), Some(&[0usize][..]));
     }
 
     #[test]

@@ -40,7 +40,38 @@ use anyhow::Result;
 pub use msg::{CtrlMsg, LearnerMsg, TaskBody};
 
 use crate::linalg::pool::BufPool;
+use crate::model::FaultPlan;
 use crate::sim::{real_clock, ClockRef};
+
+/// Structured transport-layer failure: which peer failed and why.
+/// Returned (inside `anyhow::Error`, downcastable) instead of a bare
+/// string so callers can distinguish "this learner's link died" from
+/// "the transport itself is unusable" and react per-learner.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportError {
+    /// The learner whose link failed, when attributable; `None` for
+    /// transport-wide failures (listener gone, all channels closed).
+    pub learner: Option<usize>,
+    /// What happened (connection reset, send failed, channel closed…).
+    pub reason: String,
+}
+
+impl TransportError {
+    pub fn new(learner: Option<usize>, reason: impl Into<String>) -> TransportError {
+        TransportError { learner, reason: reason.into() }
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.learner {
+            Some(j) => write!(f, "transport failure on learner {j}: {}", self.reason),
+            None => write!(f, "transport failure: {}", self.reason),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// Controller-side view of the learner pool.
 pub trait ControllerTransport {
@@ -107,6 +138,27 @@ pub trait ControllerTransport {
     /// [`crate::obs::WasteStats`] cannot count them). None when the
     /// transport has no such visibility.
     fn waste_stats(&self) -> Option<crate::obs::WasteStats> {
+        None
+    }
+
+    /// Apply this iteration's fault directives (crashes / omissions)
+    /// drawn by the disturbance model. Called by the controller only
+    /// when the plan is non-empty — faults travel out-of-band so the
+    /// Task wire format (and therefore every modeled network charge)
+    /// is untouched when injection is off. The default ignores them:
+    /// real transports see real faults, not injected ones.
+    fn inject_faults(&mut self, _iter: u64, _plan: &FaultPlan) {}
+
+    /// Learners whose result for `iter` is already known lost at the
+    /// transport layer — crashed before compute, result omitted in
+    /// flight, connection dead. `None` means "no loss knowledge"
+    /// (equivalently: everything tasked may still arrive), which is
+    /// the fault-free fast path. The controller's collect loop uses
+    /// this to fail fast instead of idling to `collect_timeout`, and
+    /// its failure detector uses it as corroborated evidence (mere
+    /// non-arrival is NOT loss — coded schemes mask stragglers by
+    /// design).
+    fn lost_for_iter(&self, _iter: u64) -> Option<&[usize]> {
         None
     }
 }

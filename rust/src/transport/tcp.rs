@@ -6,26 +6,64 @@
 //! Reading is done by a dedicated reader thread per connection (on both
 //! sides) feeding an mpsc channel, so `recv_timeout` / `try_recv`
 //! semantics exactly match the local transport.
+//!
+//! ## Fault hardening
+//!
+//! A per-learner send or read failure marks that learner **down**
+//! instead of killing the run: its reader thread posts a `Gone` note on
+//! the shared channel (after any results it already read — mpsc
+//! preserves per-sender order, so nothing delivered is lost), the
+//! controller surfaces the down set through
+//! [`ControllerTransport::lost_for_iter`] (which is what lets the
+//! collect loop fail fast and the failure detector corroborate the
+//! loss), and subsequent sends to that learner attempt a **reconnect**
+//! under bounded exponential backoff (50 ms doubling to a 5 s cap): the
+//! listener is kept open non-blocking, and a fresh worker connection is
+//! welcomed under the lowest down learner id.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::msg::result_wire_len;
 use super::wire::read_frame;
-use super::{ControllerTransport, CtrlMsg, LearnerEndpoint, LearnerMsg};
+use super::{ControllerTransport, CtrlMsg, LearnerEndpoint, LearnerMsg, TransportError};
 use crate::obs::{Event as ObsEvent, Tracer};
+
+/// Reconnect backoff: `BACKOFF_BASE * 2^(failures-1)`, capped.
+const BACKOFF_BASE: Duration = Duration::from_millis(50);
+const BACKOFF_CAP: Duration = Duration::from_secs(5);
+
+/// What a reader thread posts on the shared channel.
+enum FromReader {
+    Msg(LearnerMsg),
+    /// The connection for `learner` closed or produced an unreadable
+    /// frame; posted once, after everything it successfully read.
+    Gone { learner: usize },
+}
 
 /// Controller side: accepts `n` workers.
 pub struct TcpController {
     streams: Vec<TcpStream>,
-    from_learners: Receiver<LearnerMsg>,
+    from_learners: Receiver<FromReader>,
     reader_handles: Vec<std::thread::JoinHandle<()>>,
-    _keep_tx: Sender<LearnerMsg>,
+    keep_tx: Sender<FromReader>,
+    /// Kept open (non-blocking) after the initial accepts so a crashed
+    /// worker can be replaced: a new connection is welcomed under the
+    /// lowest down learner id.
+    listener: Option<TcpListener>,
+    /// Learner links currently broken (send failed or reader exited).
+    down: Vec<bool>,
+    /// Consecutive link failures per learner — drives the backoff.
+    fails: Vec<u32>,
+    /// Earliest time the next reconnect attempt may run, per learner.
+    retry_at: Vec<Option<Instant>>,
+    /// Sorted down set, cached for [`ControllerTransport::lost_for_iter`].
+    lost: Vec<usize>,
     /// Run tracer ([`ControllerTransport::set_tracer`]); disabled by
     /// default. Result frames are stamped when the controller thread
     /// drains them — one timeline, no cross-thread clock reads.
@@ -55,48 +93,148 @@ impl TcpListenerHandle {
 
 impl TcpController {
     fn with_listener(listener: TcpListener, n: usize) -> Result<TcpController> {
+        let (tx, rx) = channel::<FromReader>();
         let mut this = TcpController {
             streams: Vec::with_capacity(n),
-            from_learners: channel().1,
+            from_learners: rx,
             reader_handles: Vec::new(),
-            _keep_tx: channel().0,
+            keep_tx: tx,
+            listener: None,
+            down: vec![false; n],
+            fails: vec![0; n],
+            retry_at: vec![None; n],
+            lost: Vec::new(),
             tracer: Tracer::disabled(),
         };
-        let (tx, rx) = channel::<LearnerMsg>();
         for id in 0..n {
-            let (stream, peer) = listener.accept().context("accepting worker")?;
-            stream.set_nodelay(true)?;
-            let mut w = stream.try_clone()?;
-            CtrlMsg::Welcome { learner_id: id as u32 }.encode().write_frame(&mut w)?;
-            let reader = stream.try_clone()?;
-            let tx2 = tx.clone();
-            let h = std::thread::Builder::new()
-                .name(format!("tcp-reader-{id}"))
-                .spawn(move || {
-                    let mut r = reader;
-                    loop {
-                        match read_frame(&mut r) {
-                            Ok(payload) => match LearnerMsg::decode(&payload) {
-                                Ok(msg) => {
-                                    if tx2.send(msg).is_err() {
-                                        return;
-                                    }
-                                }
-                                Err(e) => {
-                                    crate::log_warn!("tcp: bad frame from {peer}: {e}");
+            let (stream, _peer) = listener.accept().context("accepting worker")?;
+            this.welcome(id, stream)?;
+        }
+        // From here on accepts are opportunistic (reconnects only).
+        listener.set_nonblocking(true)?;
+        this.listener = Some(listener);
+        Ok(this)
+    }
+
+    /// Welcome `stream` as learner `id` and spawn its reader thread.
+    fn welcome(&mut self, id: usize, stream: TcpStream) -> Result<()> {
+        stream.set_nodelay(true)?;
+        let mut w = stream.try_clone()?;
+        CtrlMsg::Welcome { learner_id: id as u32 }.encode().write_frame(&mut w)?;
+        let reader = stream.try_clone()?;
+        let tx2 = self.keep_tx.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("tcp-reader-{id}"))
+            .spawn(move || {
+                let mut r = reader;
+                loop {
+                    match read_frame(&mut r) {
+                        Ok(payload) => match LearnerMsg::decode(&payload) {
+                            Ok(msg) => {
+                                if tx2.send(FromReader::Msg(msg)).is_err() {
                                     return;
                                 }
-                            },
-                            Err(_) => return, // disconnect
+                            }
+                            Err(e) => {
+                                crate::log_warn!("tcp: bad frame from learner {id}: {e}");
+                                let _ = tx2.send(FromReader::Gone { learner: id });
+                                return;
+                            }
+                        },
+                        Err(_) => {
+                            // Disconnect. Everything read before this
+                            // point is already queued ahead of the note.
+                            let _ = tx2.send(FromReader::Gone { learner: id });
+                            return;
                         }
                     }
-                })?;
-            this.reader_handles.push(h);
-            this.streams.push(stream);
+                }
+            })?;
+        self.reader_handles.push(h);
+        if id < self.streams.len() {
+            self.streams[id] = stream;
+        } else {
+            self.streams.push(stream);
         }
-        this.from_learners = rx;
-        this._keep_tx = tx;
-        Ok(this)
+        Ok(())
+    }
+
+    /// Mark learner `j` down: record the failure, schedule the next
+    /// reconnect attempt under bounded exponential backoff, and expose
+    /// it through the lost set.
+    fn mark_down(&mut self, j: usize) {
+        if j >= self.down.len() || self.down[j] {
+            return;
+        }
+        self.down[j] = true;
+        self.fails[j] = self.fails[j].saturating_add(1);
+        let backoff = BACKOFF_BASE
+            .saturating_mul(1u32 << (self.fails[j] - 1).min(16))
+            .min(BACKOFF_CAP);
+        self.retry_at[j] = Some(Instant::now() + backoff);
+        if let Err(i) = self.lost.binary_search(&j) {
+            self.lost.insert(i, j);
+        }
+        crate::log_warn!(
+            "tcp: learner {j} link down ({} failures); next reconnect attempt in {:?}",
+            self.fails[j],
+            backoff
+        );
+    }
+
+    /// Try to replace down learners with freshly connected workers.
+    /// Non-blocking: drains whatever the listener has queued; each new
+    /// connection is welcomed under the lowest down learner id.
+    fn try_reconnect(&mut self) {
+        let now = Instant::now();
+        if !self
+            .down
+            .iter()
+            .enumerate()
+            .any(|(j, &d)| d && self.retry_at[j].map_or(true, |t| now >= t))
+        {
+            return;
+        }
+        // Owned clone so the accept loop can call `welcome(&mut self)`.
+        let listener = match self.listener.as_ref().map(TcpListener::try_clone) {
+            Some(Ok(l)) => l,
+            _ => return,
+        };
+        loop {
+            let Some(j) = self.down.iter().position(|&d| d) else { return };
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if let Err(e) = self.welcome(j, stream) {
+                        crate::log_warn!("tcp: reconnect handshake for learner {j} failed: {e:#}");
+                        return;
+                    }
+                    self.down[j] = false;
+                    self.retry_at[j] = None;
+                    if let Ok(i) = self.lost.binary_search(&j) {
+                        self.lost.remove(i);
+                    }
+                    crate::log_info!("tcp: learner {j} reconnected");
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // Nothing waiting; push every due retry out by one
+                    // backoff step so we don't poll accept() hot.
+                    for j in 0..self.down.len() {
+                        if self.down[j] && self.retry_at[j].map_or(true, |t| now >= t) {
+                            self.fails[j] = self.fails[j].saturating_add(1);
+                            let backoff = BACKOFF_BASE
+                                .saturating_mul(1u32 << (self.fails[j] - 1).min(16))
+                                .min(BACKOFF_CAP);
+                            self.retry_at[j] = Some(now + backoff);
+                        }
+                    }
+                    return;
+                }
+                Err(e) => {
+                    crate::log_warn!("tcp: accept failed during reconnect: {e}");
+                    return;
+                }
+            }
+        }
     }
 }
 
@@ -106,17 +244,35 @@ impl ControllerTransport for TcpController {
     }
 
     fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
+        if self.down[learner] {
+            // Opportunistic repair under backoff; if the learner is
+            // still down afterwards the caller treats this as an
+            // erasure (the coded assignment exists to mask it).
+            self.try_reconnect();
+            if self.down[learner] {
+                return Err(anyhow!(TransportError::new(
+                    Some(learner),
+                    "link down; reconnect pending"
+                )));
+            }
+        }
         // Encode-once broadcast: Task frames write a fresh ~100-byte
         // header plus the body bytes memoized on the shared TaskBody —
         // the multi-MB payload is serialized once per iteration, not
         // once per learner.
-        msg.write_framed(&mut self.streams[learner])
-            .with_context(|| format!("sending to worker {learner}"))
+        if let Err(e) = msg.write_framed(&mut self.streams[learner]) {
+            self.mark_down(learner);
+            return Err(anyhow!(TransportError::new(
+                Some(learner),
+                format!("send failed: {e:#}")
+            )));
+        }
+        Ok(())
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<LearnerMsg>> {
         match self.from_learners.recv_timeout(timeout) {
-            Ok(m) => {
+            Ok(FromReader::Msg(m)) => {
                 if self.tracer.is_enabled() {
                     if let LearnerMsg::Result { learner_id, ref y, .. } = m {
                         let bytes = result_wire_len(y.len()) as u64;
@@ -125,10 +281,18 @@ impl ControllerTransport for TcpController {
                 }
                 Ok(Some(m))
             }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                Err(anyhow!("all worker connections closed"))
+            Ok(FromReader::Gone { learner }) => {
+                // Surface the loss to the caller immediately (as a
+                // timeout-shaped None): the collect loop re-checks
+                // `lost_for_iter` before its next wait, so a dead
+                // learner is noticed now, not at the collect deadline.
+                self.mark_down(learner);
+                Ok(None)
             }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(anyhow!(
+                TransportError::new(None, "all worker connections closed")
+            )),
         }
     }
 
@@ -143,8 +307,19 @@ impl ControllerTransport for TcpController {
             let _ = s.shutdown(std::net::Shutdown::Both);
         }
         self.streams.clear();
+        self.listener = None;
         for h in self.reader_handles.drain(..) {
             let _ = h.join();
+        }
+    }
+
+    fn lost_for_iter(&self, _iter: u64) -> Option<&[usize]> {
+        // A broken link cannot deliver for *any* iteration; the
+        // controller filters by its own tasked/arrived sets.
+        if self.lost.is_empty() {
+            None
+        } else {
+            Some(&self.lost)
         }
     }
 }
@@ -194,16 +369,31 @@ impl TcpLearner {
     }
 }
 
+impl TcpLearner {
+    /// The structured error every receive path returns once the
+    /// connection is gone. The reader thread drops its channel sender
+    /// the moment `read_frame` fails, so a closed/errored connection
+    /// surfaces **promptly** — a learner blocked in
+    /// [`LearnerEndpoint::recv_timeout`] wakes on the channel
+    /// disconnect instead of waiting out the full timeout.
+    fn gone(&self) -> anyhow::Error {
+        anyhow!(TransportError::new(
+            Some(self.learner_id as usize),
+            "connection to controller closed"
+        ))
+    }
+}
+
 impl LearnerEndpoint for TcpLearner {
     fn recv(&mut self) -> Result<CtrlMsg> {
-        self.rx.recv().map_err(|_| anyhow!("controller disconnected"))
+        self.rx.recv().map_err(|_| self.gone())
     }
 
     fn try_recv(&mut self) -> Result<Option<CtrlMsg>> {
         match self.rx.try_recv() {
             Ok(m) => Ok(Some(m)),
             Err(TryRecvError::Empty) => Ok(None),
-            Err(TryRecvError::Disconnected) => Err(anyhow!("controller disconnected")),
+            Err(TryRecvError::Disconnected) => Err(self.gone()),
         }
     }
 
@@ -211,9 +401,7 @@ impl LearnerEndpoint for TcpLearner {
         match self.rx.recv_timeout(timeout) {
             Ok(m) => Ok(Some(m)),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                Err(anyhow!("controller disconnected"))
-            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(self.gone()),
         }
     }
 
@@ -296,5 +484,120 @@ mod tests {
         for w in workers {
             w.join().unwrap();
         }
+    }
+
+    /// Satellite (b): a learner blocked in `recv_timeout` must notice a
+    /// closed connection promptly — via the structured
+    /// [`TransportError`] — instead of waiting out the full timeout.
+    #[test]
+    fn learner_recv_timeout_fails_promptly_on_closed_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut lp = TcpLearner::connect(&addr.to_string()).unwrap();
+            let t0 = Instant::now();
+            let err = lp
+                .recv_timeout(Duration::from_secs(30))
+                .expect_err("closed connection must error, not time out");
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "took {:?} to notice the close",
+                t0.elapsed()
+            );
+            let te = err.downcast_ref::<TransportError>().expect("structured TransportError");
+            assert_eq!(te.learner, Some(lp.learner_id as usize));
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        CtrlMsg::Welcome { learner_id: 3 }.encode().write_frame(&mut w).unwrap();
+        // Give the learner a moment to enter recv_timeout, then drop
+        // the socket without a Shutdown frame (a controller crash).
+        std::thread::sleep(Duration::from_millis(100));
+        stream.shutdown(std::net::Shutdown::Both).unwrap();
+        drop(stream);
+        worker.join().unwrap();
+    }
+
+    /// A worker that dies mid-run marks its learner down: the loss is
+    /// corroborated through `lost_for_iter`, sends to it return the
+    /// structured per-learner error (an erasure, not a crash), and the
+    /// other worker keeps serving.
+    #[test]
+    fn dead_worker_is_marked_lost_and_send_errors_structured() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Worker 0 connects and dies immediately after the Welcome;
+        // worker 1 stays healthy. Connect sequentially so ids are
+        // deterministic.
+        let w0 = std::thread::spawn(move || {
+            let lp = TcpLearner::connect(&addr.to_string()).unwrap();
+            let id = lp.learner_id;
+            drop(lp); // closes the socket
+            id
+        });
+        // Accept worker 0 first, then spawn worker 1, so ids are
+        // deterministic (connection order assigns ids).
+        let (s0, _) = listener.accept().unwrap();
+        let (tx, rx) = channel::<FromReader>();
+        let mut ctrl = TcpController {
+            streams: Vec::with_capacity(2),
+            from_learners: rx,
+            reader_handles: Vec::new(),
+            keep_tx: tx,
+            listener: None,
+            down: vec![false; 2],
+            fails: vec![0; 2],
+            retry_at: vec![None; 2],
+            lost: Vec::new(),
+            tracer: Tracer::disabled(),
+        };
+        ctrl.welcome(0, s0).unwrap();
+        let w1 = std::thread::spawn(move || {
+            let mut lp = TcpLearner::connect(&addr.to_string()).unwrap();
+            loop {
+                match lp.recv() {
+                    Ok(CtrlMsg::Ack { iter }) => lp
+                        .send(LearnerMsg::Result {
+                            iter,
+                            learner_id: lp.learner_id,
+                            y: vec![1.0; 4],
+                            compute_ns: 1,
+                        })
+                        .unwrap(),
+                    Ok(CtrlMsg::Shutdown) | Err(_) => return,
+                    Ok(_) => {}
+                }
+            }
+        });
+        let (s1, _) = listener.accept().unwrap();
+        ctrl.welcome(1, s1).unwrap();
+        listener.set_nonblocking(true).unwrap();
+        ctrl.listener = Some(listener);
+        assert_eq!(w0.join().unwrap(), 0);
+
+        // Worker 1 round-trips; worker 0's Gone note surfaces as a
+        // timeout-shaped None that populates the lost set.
+        ctrl.send_to(1, CtrlMsg::Ack { iter: 7 }).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut got_result = false;
+        while Instant::now() < deadline && !(got_result && ctrl.lost_for_iter(7).is_some()) {
+            if let Some(LearnerMsg::Result { iter, learner_id, .. }) =
+                ctrl.recv_timeout(Duration::from_millis(50)).unwrap()
+            {
+                assert_eq!((iter, learner_id), (7, 1));
+                got_result = true;
+            }
+        }
+        assert!(got_result, "healthy worker must keep serving");
+        assert_eq!(ctrl.lost_for_iter(7), Some(&[0usize][..]), "dead worker corroborated");
+
+        // Sending to the dead learner yields the structured
+        // per-learner error (backoff pending, no worker waiting).
+        let err = ctrl.send_to(0, CtrlMsg::Ack { iter: 7 }).unwrap_err();
+        let te = err.downcast_ref::<TransportError>().expect("TransportError");
+        assert_eq!(te.learner, Some(0));
+        ctrl.shutdown();
+        w1.join().unwrap();
     }
 }

@@ -1,0 +1,188 @@
+//! Fault-tolerance integration tests (ISSUE 7): crashes within the
+//! code's worst-case tolerance must not change the trained parameters;
+//! crashes beyond it must terminate **deterministically** through the
+//! degraded path — a structured [`FaultError`] under `--degraded-mode
+//! error`, or a continued uncoded-over-survivors run under
+//! `--degraded-mode uncoded` — and never hang to `collect_timeout`.
+//!
+//! All tests run the virtual-time sim pool: a factory that refuses to
+//! construct a learner's backend is a *permanent* erasure which the
+//! transport corroborates at scheduling time, so the failure detector
+//! accumulates strikes and the membership remaps exactly as it would
+//! for an injected crash.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use coded_marl::coding::{Code, CodeParams, Scheme};
+use coded_marl::config::{Backend, DegradedMode, TimeMode, TrainConfig};
+use coded_marl::coordinator::{spawn_pool, BackendFactory, Controller, FaultError, MockBackend, RunSpec};
+use coded_marl::env::EnvKind;
+use coded_marl::marl::AgentParams;
+use coded_marl::metrics::RunLog;
+
+const N: usize = 7;
+const M: usize = 4;
+
+fn mock_cfg(scheme: Scheme, iters: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("synthetic");
+    cfg.backend = Backend::Mock;
+    cfg.time_mode = TimeMode::Virtual;
+    cfg.scheme = scheme;
+    cfg.n_learners = N;
+    cfg.iterations = iters;
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 8;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = Duration::from_millis(1);
+    // Wide timeout: these tests assert the degraded path *fails fast*
+    // (virtual seconds are free, so an accidental wait-out would still
+    // return — the iteration-count and wall-clock asserts catch it).
+    cfg.collect_timeout = Duration::from_secs(4 * 3600);
+    cfg.seed = seed;
+    cfg
+}
+
+fn spec() -> RunSpec {
+    RunSpec::synthetic(EnvKind::CoopNav, M, 0, 8, 4)
+}
+
+/// Factory whose `dead` learners refuse to construct — the permanent
+/// erasure every transport corroborates as a loss.
+fn factory_with_dead(dead: Vec<usize>) -> Arc<BackendFactory> {
+    let dims = spec().dims;
+    Arc::new(move |id| {
+        if dead.contains(&(id as usize)) {
+            anyhow::bail!("injected: learner {id} crashed at startup");
+        }
+        Ok(Box::new(MockBackend::new(dims, Duration::ZERO)) as _)
+    })
+}
+
+fn train(cfg: &TrainConfig, dead: Vec<usize>) -> anyhow::Result<(Vec<AgentParams>, RunLog)> {
+    let pool = spawn_pool(cfg, factory_with_dead(dead))?;
+    let mut ctrl = Controller::new(cfg.clone(), spec(), pool)?;
+    let res = ctrl.train();
+    let agents = ctrl.agents().to_vec();
+    let log = std::mem::take(&mut ctrl.log);
+    ctrl.shutdown();
+    res.map(|_| (agents, log))
+}
+
+fn max_param_diff(a: &[AgentParams], b: &[AgentParams]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.max_abs_diff(y)).fold(0.0, f32::max)
+}
+
+fn tolerance_of(cfg: &TrainConfig) -> usize {
+    Code::build(&CodeParams {
+        scheme: cfg.scheme,
+        n: cfg.n_learners,
+        m: M,
+        p_m: cfg.p_m,
+        seed: cfg.seed,
+    })
+    .worst_case_tolerance()
+}
+
+/// The property, over all five schemes: crashing any set of learners no
+/// larger than `worst_case_tolerance()` leaves training running to the
+/// final iteration with the same recovered parameters as the
+/// crash-free run (decode is exact — only timing and membership
+/// change). The detector declares the crashed learners dead along the
+/// way and the survivors are remapped, so the run finishes on a
+/// *smaller* code than it started with.
+#[test]
+fn crashes_within_tolerance_preserve_results_for_every_scheme() {
+    for scheme in Scheme::ALL {
+        let cfg = mock_cfg(scheme, 5, 91);
+        let (clean_params, clean_log) = train(&cfg, vec![]).unwrap();
+        let t = tolerance_of(&cfg);
+        if t == 0 {
+            continue; // nothing can be crashed within tolerance
+        }
+        let dead: Vec<usize> = (N - t..N).collect();
+        let (params, log) =
+            train(&cfg, dead.clone()).unwrap_or_else(|e| panic!("scheme={scheme} dead={dead:?}: {e:#}"));
+        assert_eq!(log.len(), clean_log.len(), "scheme={scheme}: every iteration must complete");
+        let diff = max_param_diff(&params, &clean_params);
+        assert!(
+            diff < 2e-4,
+            "scheme={scheme} dead={dead:?}: crashes within tolerance changed the result (max |Δθ| = {diff})"
+        );
+        assert!(log.records.iter().all(|r| r.reward.is_finite()), "scheme={scheme}");
+    }
+}
+
+/// Beyond the code's reach — too many crashes for *any* decodable
+/// subset — the default `--degraded-mode error` policy must terminate
+/// promptly with a structured, downcastable [`FaultError`], not a hang
+/// to the (four-hour) collect timeout.
+#[test]
+fn crashes_beyond_tolerance_fail_fast_with_structured_error_for_every_scheme() {
+    // N−M+1 crashes leave at most M−1 useful rows for every scheme.
+    let dead: Vec<usize> = (M - 1..N).collect();
+    for scheme in Scheme::ALL {
+        let cfg = mock_cfg(scheme, 5, 93);
+        let wall = std::time::Instant::now();
+        let err = train(&cfg, dead.clone())
+            .map(|_| ())
+            .expect_err(&format!("scheme={scheme}: {} crashes must be fatal", dead.len()));
+        assert!(
+            wall.elapsed() < Duration::from_secs(30),
+            "scheme={scheme}: the degraded path must fail fast, not wait out the timeout"
+        );
+        let fe = err
+            .downcast_ref::<FaultError>()
+            .unwrap_or_else(|| panic!("scheme={scheme}: expected a FaultError, got: {err:#}"));
+        assert_eq!(fe.needed, M, "scheme={scheme}");
+        assert!(err.to_string().contains("cannot reach rank M"), "scheme={scheme}: {err:#}");
+    }
+}
+
+/// `--degraded-mode uncoded`: when an iteration is undecodable but the
+/// survivors can still cover all M agents, the controller force-deads
+/// the lost learners, remaps onto the survivors, and continues
+/// *uncoded* — same exact update, so the parameters match the
+/// crash-free run. Uncoded with learner 0 dead is the canonical case:
+/// agent 0's only worker is gone, yet six survivors remain.
+#[test]
+fn uncoded_fallback_continues_training_when_survivors_suffice() {
+    let mut cfg = mock_cfg(Scheme::Uncoded, 5, 95);
+    let (clean_params, clean_log) = train(&cfg, vec![]).unwrap();
+    cfg.fault.degraded = DegradedMode::Uncoded;
+    let (params, log) = train(&cfg, vec![0]).expect("six survivors cover four agents");
+    assert_eq!(log.len(), clean_log.len(), "the fallback must finish every iteration");
+    let diff = max_param_diff(&params, &clean_params);
+    assert!(diff < 1e-5, "the uncoded fallback changed the result (max |Δθ| = {diff})");
+
+    // …while the error policy stops the identical run with a FaultError.
+    cfg.fault.degraded = DegradedMode::Error;
+    let err = train(&cfg, vec![0]).map(|_| ()).expect_err("error policy must stop");
+    assert!(err.downcast_ref::<FaultError>().is_some(), "{err:#}");
+}
+
+/// Fault machinery at rest is invisible: with no losses the detector
+/// and membership never act, and repeated virtual-time runs are
+/// **bitwise** identical (the uncoded decodable subset is unique, so
+/// this holds bitwise, not just up to round-off).
+#[test]
+fn fault_free_virtual_runs_are_bitwise_deterministic() {
+    let cfg = mock_cfg(Scheme::Uncoded, 4, 97);
+    let (a, la) = train(&cfg, vec![]).unwrap();
+    let (b, lb) = train(&cfg, vec![]).unwrap();
+    assert_eq!(max_param_diff(&a, &b), 0.0, "fault-free runs must be bitwise identical");
+    for (x, y) in la.records.iter().zip(lb.records.iter()) {
+        assert_eq!(x.reward, y.reward);
+    }
+}
+
+/// Fault injection is a virtual-time (modeled) facility: the config
+/// layer rejects it under real time rather than silently ignoring it.
+#[test]
+fn fault_injection_requires_virtual_time() {
+    let mut cfg = mock_cfg(Scheme::Mds, 3, 1);
+    cfg.fault.crash_rate = 0.5;
+    cfg.time_mode = TimeMode::Real;
+    let err = cfg.validate().expect_err("crash injection needs --time-mode virtual");
+    assert!(err.to_string().contains("virtual"), "{err:#}");
+}
