@@ -104,6 +104,7 @@ fn bench_broadcast(rng: &mut Pcg32) -> Vec<BroadcastRecord> {
         let body = TaskBody::new(Arc::clone(&params), Arc::clone(&mb));
         let msg = CtrlMsg::Task {
             iter: 1,
+            epoch: 0,
             row: row.clone(),
             body,
             straggler_delay_ns: 0,
@@ -131,6 +132,7 @@ fn bench_broadcast(rng: &mut Pcg32) -> Vec<BroadcastRecord> {
                     let body = TaskBody::new(Arc::clone(&params), Arc::clone(&mb));
                     let msg = CtrlMsg::Task {
                         iter: 1,
+                        epoch: 0,
                         row: row.clone(),
                         body,
                         straggler_delay_ns: 0,
@@ -149,6 +151,7 @@ fn bench_broadcast(rng: &mut Pcg32) -> Vec<BroadcastRecord> {
                 for _ in 0..n {
                     let msg = CtrlMsg::Task {
                         iter: 1,
+                        epoch: 0,
                         row: row.clone(),
                         body: Arc::clone(&body),
                         straggler_delay_ns: 0,

@@ -164,6 +164,24 @@ impl Decoder {
         &self.code
     }
 
+    /// Re-key the decoder to a different code — the plan-swap path
+    /// (adaptive scheme switch or `restrict_rows` membership remap).
+    ///
+    /// Every memoized decode plan is a weight matrix derived from the
+    /// **old** assignment matrix; applying one under the new code would
+    /// silently combine results with the wrong coefficients. So the
+    /// plan cache is flushed wholesale (counters reset with it — a new
+    /// plan's hit rate starts from zero), and the binary structure is
+    /// recomputed for the new matrix. The buffer pool survives: its
+    /// P-sized accumulators are shape-compatible across codes of the
+    /// same model, so steady-state zero-allocation holds across a swap.
+    pub fn rebind(&mut self, code: Code) {
+        self.binary = BinaryStructure::from_matrix(&code.c);
+        self.code = code;
+        let mut cache = self.plans.lock().expect("plan cache poisoned");
+        *cache = PlanCache::default();
+    }
+
     /// Decode-plan cache counters (hits/misses/resident plans).
     pub fn plan_cache_stats(&self) -> PlanCacheStats {
         let cache = self.plans.lock().expect("plan cache poisoned");
@@ -892,6 +910,71 @@ mod tests {
         assert_eq!(s.misses, warm_misses, "warm decode must not allocate");
         assert_eq!(s.hits, 8, "all 8 accumulators served from the pool");
         dec.recycle(out.theta);
+    }
+
+    /// Regression (plan-swap safety): a decode plan cached under the
+    /// old assignment matrix must NEVER be applied after the decoder is
+    /// re-keyed — neither on a scheme switch nor on a `restrict_rows`
+    /// membership remap. The same received set decoded after `rebind`
+    /// must be bit-identical to a never-cached decoder on the new code.
+    #[test]
+    fn rebind_flushes_plans_from_the_old_matrix() {
+        let mut rng = Pcg32::seeded(31);
+        let theta = random_theta(&mut rng, 8, P);
+        // Scheme switch: MDS -> RandomSparse over the same N, M. The
+        // received set (and thus the cache key) is identical; only the
+        // matrix behind the plan differs.
+        let old = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let new = Code::build(&CodeParams::new(Scheme::RandomSparse, 15, 8));
+        let mut dec = Decoder::new(old.clone());
+        let received: Vec<usize> = (0..15).filter(|&j| j != 1 && j != 6).collect();
+        let y_old = encode(&old, &theta, &received);
+        dec.decode(&received, &y_old, DecodeMethod::Qr).unwrap();
+        dec.decode(&received, &y_old, DecodeMethod::Qr).unwrap();
+        assert_eq!(dec.plan_cache_stats().hits, 1, "plan cached under the old matrix");
+        dec.rebind(new.clone());
+        let s = dec.plan_cache_stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0), "rebind must flush the cache");
+        let y_new = encode(&new, &theta, &received);
+        let out = dec.decode(&received, &y_new, DecodeMethod::Qr).unwrap();
+        let reference =
+            Decoder::new(new.clone()).decode(&received, &y_new, DecodeMethod::Qr).unwrap();
+        assert!(
+            bits_equal(&out.theta, &reference.theta),
+            "post-rebind decode used a stale plan from the old matrix"
+        );
+        assert_eq!(dec.plan_cache_stats().misses, 1, "the swap forced a fresh factorization");
+        // …and a correctness pin: the recovered parameters are right.
+        for i in 0..8 {
+            for k in 0..P {
+                assert!((out.theta[i][k] - theta[i][k]).abs() < 2e-4);
+            }
+        }
+
+        // Membership remap: restrict_rows renumbers the rows, so a plan
+        // keyed on the old learner ids is doubly wrong. (This audits the
+        // elastic-membership path, which previously rebuilt the whole
+        // decoder and must stay safe through rebind too.)
+        let keep: Vec<usize> = (0..15).filter(|&j| j != 0).collect();
+        let restricted = old.restrict_rows(&keep);
+        let mut dec = Decoder::new(old.clone());
+        dec.decode(&received, &y_old, DecodeMethod::Qr).unwrap();
+        dec.rebind(restricted.clone());
+        assert_eq!(dec.plan_cache_stats().entries, 0);
+        let rows: Vec<usize> = (0..restricted.n).collect();
+        let y_r = encode(&restricted, &theta, &rows);
+        let out = dec.decode(&rows, &y_r, DecodeMethod::Qr).unwrap();
+        let reference =
+            Decoder::new(restricted).decode(&rows, &y_r, DecodeMethod::Qr).unwrap();
+        assert!(bits_equal(&out.theta, &reference.theta), "remap decode diverged");
+        // The binary structure was recomputed: peeling still works on a
+        // binary code after rebinding to it.
+        let ldpc = Code::build(&CodeParams::new(Scheme::Ldpc, 15, 8));
+        dec.rebind(ldpc.clone());
+        let all: Vec<usize> = (0..15).collect();
+        let y_l = encode(&ldpc, &theta, &all);
+        let out = dec.decode(&all, &y_l, DecodeMethod::Auto).unwrap();
+        assert_eq!(out.method, "peeling", "rebind must refresh the binary structure");
     }
 
     #[test]

@@ -16,13 +16,15 @@
 //! Submodules: [`schemes`] (constructions), [`ldpc`] (parity-check
 //! machinery), [`decoder`] (recovery paths: QR, normal equations,
 //! peeling), [`rank_tracker`] (incremental decodability for the
-//! collect hot path).
+//! collect hot path), [`plan`] (epoch-versioned live coding plans).
 
 pub mod decoder;
 pub mod ldpc;
+pub mod plan;
 pub mod rank_tracker;
 pub mod schemes;
 
+pub use plan::CodingPlan;
 pub use rank_tracker::RankTracker;
 
 use crate::linalg::Mat;

@@ -1,0 +1,155 @@
+//! Epoch-versioned coding plans — the live `(scheme, k)` binding.
+//!
+//! PR 1-7 froze the coding configuration at `Controller::new`: one
+//! [`Code`] built once, one decoder keyed to it forever. Two runtime
+//! forces break that assumption: the adaptive selector switches schemes
+//! mid-run, and elastic membership shrinks the row set when learners
+//! die. Both were handled ad hoc (the decoder was *replaced* in place),
+//! which left a hole: a result computed under the old matrix could
+//! arrive after the swap and be combined under the new one — silently
+//! wrong whenever row `r` means a different coefficient vector now.
+//!
+//! A [`CodingPlan`] closes that hole by making the binding explicit and
+//! *versioned*: every plan carries a monotonically increasing epoch,
+//! the scheme, the built assignment matrix, and the membership view it
+//! was built over. The epoch rides the Task/Result wire (packed into
+//! the high bits of the sequence word, see [`crate::transport::msg`]),
+//! so the controller can classify any cross-epoch result as stale
+//! instead of decoding it. Plans are immutable; adaptation installs a
+//! successor via [`CodingPlan::rebuild`] or [`CodingPlan::restrict`].
+
+use super::{Code, CodeParams, Scheme};
+
+/// One epoch of the controller's coding configuration.
+#[derive(Clone, Debug)]
+pub struct CodingPlan {
+    /// Version counter: 0 at startup, +1 per installed successor.
+    /// `u16` because it shares the 64-bit wire sequence word with the
+    /// 48-bit iteration counter; 65 535 switches outlasts any run.
+    epoch: u16,
+    code: Code,
+    /// Membership view: `members[r]` is the physical learner that owns
+    /// assignment row `r` under this plan. Identity at epoch 0.
+    members: Vec<usize>,
+}
+
+impl CodingPlan {
+    /// The epoch-0 plan over the identity membership (what
+    /// `Controller::new` froze before plans existed).
+    pub fn initial(params: &CodeParams) -> CodingPlan {
+        CodingPlan { epoch: 0, code: Code::build(params), members: (0..params.n).collect() }
+    }
+
+    pub fn epoch(&self) -> u16 {
+        self.epoch
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.code.scheme
+    }
+
+    pub fn code(&self) -> &Code {
+        &self.code
+    }
+
+    /// Physical learner ids in row order (`members[r]` owns row `r`).
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Rows in this plan's matrix (the live learner count it was built
+    /// over).
+    pub fn n_rows(&self) -> usize {
+        self.code.n
+    }
+
+    /// Worst-case straggler tolerance `k` of this plan's matrix.
+    /// Computed on demand (the searched schemes pay a Monte-Carlo scan,
+    /// see [`Code::worst_case_tolerance`]) — call it on the rare
+    /// switch/report paths, not per iteration.
+    pub fn k(&self) -> usize {
+        self.code.worst_case_tolerance()
+    }
+
+    /// Successor with a freshly built code — an adaptive scheme switch
+    /// or the uncoded degraded fallback. `members` is the new plan's
+    /// membership view; `params.n` must match its length.
+    pub fn rebuild(&self, params: &CodeParams, members: Vec<usize>) -> CodingPlan {
+        assert_eq!(params.n, members.len(), "plan membership view must cover every row");
+        CodingPlan { epoch: self.epoch.wrapping_add(1), code: Code::build(params), members }
+    }
+
+    /// Successor restricting this plan's matrix to the `keep` rows (a
+    /// same-scheme membership remap: restriction inherits decodability
+    /// from the tolerance property, a fresh n′-row draw may not).
+    /// `keep[r]` indexes this plan's rows; the membership view follows.
+    pub fn restrict(&self, keep: &[usize]) -> CodingPlan {
+        let members = keep.iter().map(|&r| self.members[r]).collect();
+        CodingPlan {
+            epoch: self.epoch.wrapping_add(1),
+            code: self.code.restrict_rows(keep),
+            members,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(scheme: Scheme) -> CodeParams {
+        CodeParams { scheme, n: 9, m: 4, p_m: 0.8, seed: 7 }
+    }
+
+    #[test]
+    fn initial_plan_is_epoch_zero_over_identity_membership() {
+        let p = CodingPlan::initial(&params(Scheme::Mds));
+        assert_eq!(p.epoch(), 0);
+        assert_eq!(p.scheme(), Scheme::Mds);
+        assert_eq!(p.members(), &[0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(p.n_rows(), 9);
+        assert_eq!(p.k(), 5, "MDS tolerates N-M stragglers");
+    }
+
+    #[test]
+    fn rebuild_bumps_the_epoch_and_swaps_the_matrix() {
+        let p0 = CodingPlan::initial(&params(Scheme::Mds));
+        let p1 = p0.rebuild(&params(Scheme::Uncoded), p0.members().to_vec());
+        assert_eq!(p1.epoch(), 1);
+        assert_eq!(p1.scheme(), Scheme::Uncoded);
+        assert_eq!(p1.members(), p0.members());
+        assert_eq!(p1.k(), 0);
+        // the predecessor is untouched — plans are immutable values
+        assert_eq!(p0.epoch(), 0);
+        assert_eq!(p0.scheme(), Scheme::Mds);
+        // a further successor keeps counting
+        let p2 = p1.rebuild(&params(Scheme::Replication), p1.members().to_vec());
+        assert_eq!(p2.epoch(), 2);
+    }
+
+    #[test]
+    fn restrict_remaps_the_membership_view() {
+        let p0 = CodingPlan::initial(&params(Scheme::Mds));
+        // learners 2 and 5 died: keep the other seven rows
+        let keep = [0, 1, 3, 4, 6, 7, 8];
+        let p1 = p0.restrict(&keep);
+        assert_eq!(p1.epoch(), 1);
+        assert_eq!(p1.n_rows(), 7);
+        assert_eq!(p1.members(), &keep);
+        // rows follow the kept learners: row r of p1 is row keep[r] of p0
+        for (r, &old) in keep.iter().enumerate() {
+            assert_eq!(p1.code().row_f32(r), p0.code().row_f32(old));
+        }
+        // restriction after restriction composes through the view
+        let p2 = p1.restrict(&[0, 2, 3, 4, 5, 6]);
+        assert_eq!(p2.epoch(), 2);
+        assert_eq!(p2.members(), &[0, 3, 4, 6, 7, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "membership view")]
+    fn rebuild_rejects_a_mismatched_membership_view() {
+        let p0 = CodingPlan::initial(&params(Scheme::Uncoded));
+        let _ = p0.rebuild(&params(Scheme::Uncoded), vec![0, 1, 2]);
+    }
+}

@@ -415,11 +415,21 @@ pub struct TrainConfig {
     pub checkpoint_every: usize,
     /// Resume initial parameters from this checkpoint file.
     pub resume: Option<std::path::PathBuf>,
-    /// Live scheme adaptation: measure straggler statistics and switch
-    /// the coding scheme at runtime when another one's expected
-    /// iteration time is clearly lower (extension beyond the paper;
-    /// see coordinator::adaptive).
+    /// Live coding-plan adaptation: the obs-fed selector measures
+    /// straggler statistics and installs a new epoch-versioned
+    /// [`crate::coding::CodingPlan`] at runtime when another scheme's
+    /// expected iteration time is clearly lower (extension beyond the
+    /// paper; see coordinator::adaptive).
     pub adaptive: bool,
+    /// Score the schemes only every this-many observations past warmup
+    /// (`--adapt-every`, default 1 = every iteration).
+    pub adapt_every: usize,
+    /// Observations before the selector recommends anything
+    /// (`--adapt-min-obs`, default 5).
+    pub adapt_min_obs: usize,
+    /// Relative improvement a challenger needs over the incumbent
+    /// (`--adapt-hysteresis`, default 0.1 = 10%).
+    pub adapt_hysteresis: f64,
     /// Give up on an iteration when no decodable subset arrives within
     /// this window — covers crashed learners / dead workers. In a
     /// healthy run all N results arrive and rank(C) = M guarantees
@@ -467,6 +477,9 @@ impl TrainConfig {
             checkpoint_every: 0,
             resume: None,
             adaptive: false,
+            adapt_every: 1,
+            adapt_min_obs: 5,
+            adapt_hysteresis: 0.1,
             collect_timeout: std::time::Duration::from_secs(120),
             verbose: false,
             trace_out: None,
@@ -574,9 +587,6 @@ impl TrainConfig {
         if let Some(v) = args.opt("trace-out") {
             cfg.trace_out = Some(v.into());
         }
-        if args.flag("adaptive") {
-            cfg.adaptive = true;
-        }
         if args.flag("verbose") {
             cfg.verbose = true;
         }
@@ -587,8 +597,10 @@ impl TrainConfig {
     /// Parse the system-model flag surface (`--trace`, `--bandwidth`,
     /// `--net-jitter-us`, `--compute-model`) plus the fault knobs
     /// (`--crash-rate`, `--crash-restart-s`, `--omission-rate`,
-    /// `--degraded-mode`, `--suspect-after`, `--dead-after`) — shared
-    /// by [`TrainConfig::from_args`] and the sweep subcommands, which
+    /// `--degraded-mode`, `--suspect-after`, `--dead-after`) and the
+    /// adaptive-plan knobs (`--adaptive`, `--adapt-every`,
+    /// `--adapt-min-obs`, `--adapt-hysteresis`) — shared by
+    /// [`TrainConfig::from_args`] and the sweep subcommands, which
     /// build their base config through `sweep_base` instead.
     pub fn apply_model_args(&mut self, args: &Args) -> Result<()> {
         if let Some(v) = args.opt("trace") {
@@ -626,6 +638,18 @@ impl TrainConfig {
         }
         if let Some(v) = args.opt("dead-after") {
             self.fault.dead_after = v.parse()?;
+        }
+        if args.flag("adaptive") {
+            self.adaptive = true;
+        }
+        if let Some(v) = args.opt("adapt-every") {
+            self.adapt_every = v.parse()?;
+        }
+        if let Some(v) = args.opt("adapt-min-obs") {
+            self.adapt_min_obs = v.parse()?;
+        }
+        if let Some(v) = args.opt("adapt-hysteresis") {
+            self.adapt_hysteresis = v.parse()?;
         }
         Ok(())
     }
@@ -694,6 +718,15 @@ impl TrainConfig {
                  got suspect_after={} dead_after={}",
                 self.fault.suspect_after,
                 self.fault.dead_after
+            );
+        }
+        if self.adapt_every == 0 {
+            bail!("--adapt-every must be >= 1");
+        }
+        if !self.adapt_hysteresis.is_finite() || self.adapt_hysteresis < 0.0 {
+            bail!(
+                "--adapt-hysteresis must be a finite relative margin >= 0, got {}",
+                self.adapt_hysteresis
             );
         }
         if self.fault.injects() && self.time_mode != TimeMode::Virtual {
@@ -862,6 +895,29 @@ mod tests {
         let cfg = parse(&["--preset", "x", "--sweep-threads", "6"]).unwrap();
         assert_eq!(cfg.sweep_threads, 6);
         assert!(parse(&["--preset", "x", "--sweep-threads", "lots"]).is_err());
+    }
+
+    #[test]
+    fn adaptive_flags_parse_and_are_validated() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert!(!cfg.adaptive, "adaptive plan switching is opt-in");
+        assert_eq!(cfg.adapt_every, 1);
+        assert_eq!(cfg.adapt_min_obs, 5);
+        assert_eq!(cfg.adapt_hysteresis, 0.1);
+        let cfg = parse(&[
+            "--preset", "x", "--adaptive",
+            "--adapt-every", "2",
+            "--adapt-min-obs", "3",
+            "--adapt-hysteresis", "0.2",
+        ])
+        .unwrap();
+        assert!(cfg.adaptive);
+        assert_eq!(cfg.adapt_every, 2);
+        assert_eq!(cfg.adapt_min_obs, 3);
+        assert_eq!(cfg.adapt_hysteresis, 0.2);
+        assert!(parse(&["--preset", "x", "--adapt-every", "0"]).is_err());
+        assert!(parse(&["--preset", "x", "--adapt-hysteresis", "-0.1"]).is_err());
+        assert!(parse(&["--preset", "x", "--adapt-hysteresis", "inf"]).is_err());
     }
 
     #[test]

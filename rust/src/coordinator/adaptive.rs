@@ -1,4 +1,5 @@
-//! Adaptive coding-scheme selection — an extension beyond the paper.
+//! Obs-driven adaptive coding-plan selection — an extension beyond the
+//! paper.
 //!
 //! The paper's conclusion observes a trade-off: dense codes (MDS,
 //! random sparse) tolerate many stragglers but cost redundant compute;
@@ -6,65 +7,126 @@
 //! wins depends on the *deployment's* straggler statistics — something
 //! a running controller can measure. This module closes that loop:
 //!
-//! 1. [`StragglerStats`] — an online estimator of the per-iteration
-//!    straggler count distribution and delay magnitude, fed from the
-//!    controller's wait-phase telemetry.
-//! 2. [`expected_iteration_time`] — a cost model for one scheme:
-//!    E[T] = compute·workload + P(not decodable among fast learners)·t̄_s
-//!    using the code's empirical decode-probability profile.
+//! 1. [`ObsEstimator`] — the straggler/waste estimate behind the
+//!    selector. Besides the wait-phase EWMAs of the original design it
+//!    reads the always-on observability layer: the decodability-front
+//!    quantiles of [`Attribution`] (the tail window a denser code could
+//!    cover), and the redundant-compute cost in [`WasteStats`] (what
+//!    the incumbent's redundancy actually burned).
+//! 2. [`NetCharge`] + [`expected_iteration_time`] — a cost model for
+//!    one scheme: compute · max workload, plus the modeled network leg
+//!    priced from **exact wire lengths** (shared body once, one Task
+//!    header per active row, M result frames — mirroring how the sim's
+//!    [`crate::model::NetworkModel`] charges the split frame), plus
+//!    P(not decodable among fast learners) · t̄_s. The network term is
+//!    mean-based and draws no RNG, so scoring stays reproducible at
+//!    any `--sweep-threads` count.
 //! 3. [`AdaptiveSelector`] — scores all schemes under the current
 //!    estimate and recommends the argmin, with hysteresis so the
-//!    recommendation does not thrash.
+//!    recommendation does not thrash, and a redundancy penalty scaled
+//!    by the *observed* waste rate.
 //!
-//! The selector is advisory: the controller applies it between
-//! iterations (a scheme switch is just a new assignment matrix — the
-//! learners are stateless w.r.t. the code, see transport::msg).
+//! The selector is advisory: the controller applies a recommendation
+//! between iterations by installing a successor
+//! [`crate::coding::CodingPlan`] — the epoch on the wire keeps results
+//! computed under the old plan out of the new plan's decode.
 
 use std::time::Duration;
 
 use crate::coding::{random_set_decode_probability, Code, CodeParams, Scheme};
+use crate::config::NetConfig;
+use crate::obs::{Attribution, WasteStats};
 use crate::rng::Pcg32;
+use crate::transport::msg::{result_wire_len, task_header_wire_len};
 
-/// Online straggler statistics from wait-phase telemetry.
+/// Obs-fed straggler and waste estimator (replaces the wait-phase-only
+/// `StragglerStats` EWMA of the original design).
 #[derive(Clone, Debug)]
-pub struct StragglerStats {
+pub struct ObsEstimator {
     /// EWMA of the observed straggler count per iteration.
     k_ewma: f64,
-    /// EWMA of the observed straggler delay (seconds).
-    delay_ewma: f64,
+    /// EWMA of the observed wait-phase stall (seconds).
+    stall_ewma: f64,
     /// EWMA smoothing factor.
     alpha: f64,
     observations: usize,
+    /// Decodability-front p90 (seconds) snapshotted from
+    /// [`Attribution`]: the tail window between the first used arrival
+    /// and rank M — the stall a denser code would have absorbed.
+    front_p90_s: f64,
+    /// Wasted learner-compute per decodable iteration (seconds),
+    /// snapshotted from [`WasteStats`] — the price already being paid
+    /// for redundancy (cancelled, post-decodable, stale results).
+    waste_per_iter_s: f64,
+    /// Exact wire length of the shared broadcast body, as observed.
+    body_bytes: u64,
 }
 
-impl StragglerStats {
-    pub fn new(alpha: f64) -> StragglerStats {
+impl ObsEstimator {
+    pub fn new(alpha: f64) -> ObsEstimator {
         assert!((0.0..=1.0).contains(&alpha));
-        StragglerStats { k_ewma: 0.0, delay_ewma: 0.0, alpha, observations: 0 }
+        ObsEstimator {
+            k_ewma: 0.0,
+            stall_ewma: 0.0,
+            alpha,
+            observations: 0,
+            front_p90_s: 0.0,
+            waste_per_iter_s: 0.0,
+            body_bytes: 0,
+        }
     }
 
-    /// Record one iteration: how many learners were still missing when
-    /// the iteration's results sufficed, and how long the slowest
-    /// needed result lagged the median.
-    pub fn observe(&mut self, stragglers_seen: usize, extra_delay: Duration) {
+    /// Record one iteration: how many tasked learners never
+    /// contributed, how long decodability stalled past the M-th
+    /// arrival, the broadcast body's wire length, and the current
+    /// observability accumulators (pure reads — no counters added).
+    pub fn observe(
+        &mut self,
+        stragglers_seen: usize,
+        stall: Duration,
+        body_bytes: u64,
+        attr: &Attribution,
+        waste: &WasteStats,
+    ) {
         let k = stragglers_seen as f64;
-        let d = extra_delay.as_secs_f64();
+        let d = stall.as_secs_f64();
         if self.observations == 0 {
             self.k_ewma = k;
-            self.delay_ewma = d;
+            self.stall_ewma = d;
         } else {
             self.k_ewma += self.alpha * (k - self.k_ewma);
-            self.delay_ewma += self.alpha * (d - self.delay_ewma);
+            self.stall_ewma += self.alpha * (d - self.stall_ewma);
         }
         self.observations += 1;
+        self.body_bytes = body_bytes;
+        let front = attr.front();
+        if front.count() > 0 {
+            let p90 = front.p90();
+            self.front_p90_s = if p90.is_finite() { p90 } else { 0.0 };
+        }
+        if attr.iters() > 0 {
+            self.waste_per_iter_s = waste.compute_secs() / attr.iters() as f64;
+        }
     }
 
     pub fn expected_stragglers(&self) -> f64 {
         self.k_ewma
     }
 
+    /// The delay a better code could avoid: the larger of the stall
+    /// EWMA and the attribution front's p90 (the EWMA reacts fast to
+    /// regime shifts; the quantile is robust to single outliers).
     pub fn expected_delay(&self) -> Duration {
-        Duration::from_secs_f64(self.delay_ewma.max(0.0))
+        Duration::from_secs_f64(self.stall_ewma.max(self.front_p90_s).max(0.0))
+    }
+
+    /// Wasted learner-compute per decodable iteration (seconds).
+    pub fn waste_per_iter(&self) -> f64 {
+        self.waste_per_iter_s
+    }
+
+    pub fn body_bytes(&self) -> u64 {
+        self.body_bytes
     }
 
     pub fn observations(&self) -> usize {
@@ -72,18 +134,66 @@ impl StragglerStats {
     }
 }
 
+/// Deterministic per-iteration network constants: exact wire lengths
+/// divided by the modeled bandwidth, plus the configured mean jitter
+/// per transfer. Mean-based — no RNG draws, so selector scoring is
+/// bit-identical at any `--sweep-threads` count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetCharge {
+    /// Shared broadcast body, charged once per iteration (s).
+    pub body_s: f64,
+    /// One per-learner Task header (s).
+    pub header_s: f64,
+    /// One Result frame (s).
+    pub result_s: f64,
+    /// Mean per-message jitter (s).
+    pub jitter_s: f64,
+}
+
+impl NetCharge {
+    /// Price the wire from the modeled network: `m` agents (assignment
+    /// row length), `p_dim` the flat parameter dimension, `body_bytes`
+    /// the observed shared-body wire length. The free default model
+    /// yields all zeros.
+    pub fn from_config(net: &NetConfig, m: usize, p_dim: usize, body_bytes: u64) -> NetCharge {
+        let bw = if net.bandwidth_mbps > 0.0 { net.bandwidth_mbps * 1e6 } else { f64::INFINITY };
+        NetCharge {
+            body_s: body_bytes as f64 / bw,
+            header_s: task_header_wire_len(m) as f64 / bw,
+            result_s: result_wire_len(p_dim) as f64 / bw,
+            jitter_s: net.jitter.as_secs_f64(),
+        }
+    }
+
+    /// Expected network time of one iteration under `code`, mirroring
+    /// the sim's split-frame charging: the body crosses once, every
+    /// active row pays a Task header, and M result frames must return;
+    /// each charged transfer carries the mean jitter.
+    pub fn iteration_time(&self, code: &Code) -> f64 {
+        let sends = code.active_rows() as f64;
+        let returns = code.m as f64;
+        self.body_s
+            + sends * self.header_s
+            + returns * self.result_s
+            + (1.0 + sends + returns) * self.jitter_s
+    }
+}
+
 /// Expected iteration time for `code` under `(k, t_s)` straggler
-/// statistics and a per-agent-update compute cost.
+/// statistics, a per-agent-update compute cost, and the modeled
+/// network charge.
 ///
 /// Model: every learner computes its row's workload sequentially
-/// (`compute · max workload` sets the fastest possible finish), and
-/// with probability `1 − P(decodable | k random stragglers)` the
-/// controller must additionally wait out the injected delay `t_s`.
+/// (`compute · max workload` sets the fastest possible finish), the
+/// wire adds `net.iteration_time(code)`, and with probability
+/// `1 − P(decodable | k random stragglers)` the controller must
+/// additionally wait out the delay `t_s`.
 pub fn expected_iteration_time(
     code: &Code,
     k: f64,
     t_s: Duration,
     compute: Duration,
+    net: &NetCharge,
     rng: &mut Pcg32,
 ) -> Duration {
     let k_floor = k.floor() as usize;
@@ -100,7 +210,7 @@ pub fn expected_iteration_time(
     let max_workload = (0..code.n).map(|j| code.workload(j)).max().unwrap_or(0);
     let base = compute.as_secs_f64() * max_workload as f64;
     let stall = (1.0 - p_decodable) * t_s.as_secs_f64();
-    Duration::from_secs_f64(base + stall)
+    Duration::from_secs_f64(base + net.iteration_time(code) + stall)
 }
 
 /// A scored scheme recommendation.
@@ -124,16 +234,22 @@ pub struct AdaptiveSelector {
     pub hysteresis: f64,
     /// Minimum observations before recommending anything.
     pub min_observations: usize,
+    /// Score only every this-many observations past warmup (1 = every
+    /// iteration). The Monte-Carlo decodability scoring is cheap but
+    /// not free; regime shifts play out over many iterations.
+    pub check_every: usize,
+    net_cfg: NetConfig,
+    p_dim: usize,
     codes: Vec<(Scheme, Code)>,
+    /// The selector's own seeded stream (`0xADA9`): Monte-Carlo
+    /// decodability trials never touch the training or injection
+    /// streams, so switching decisions are deterministic per seed.
     rng: Pcg32,
+    est: ObsEstimator,
 }
 
 impl AdaptiveSelector {
     pub fn new(n: usize, m: usize, p_m: f64, seed: u64) -> AdaptiveSelector {
-        let codes = Scheme::ALL
-            .iter()
-            .map(|&scheme| (scheme, Code::build(&CodeParams { scheme, n, m, p_m, seed })))
-            .collect();
         AdaptiveSelector {
             n,
             m,
@@ -141,30 +257,112 @@ impl AdaptiveSelector {
             seed,
             hysteresis: 0.1,
             min_observations: 5,
-            codes,
+            check_every: 1,
+            net_cfg: NetConfig::free(),
+            p_dim: 0,
+            codes: Self::build_codes(n, m, p_m, seed),
             rng: Pcg32::new(seed, 0xADA9),
+            est: ObsEstimator::new(0.3),
         }
     }
 
-    /// Score every scheme under the measured statistics; `incumbent` is
-    /// the currently-running scheme. Returns None until enough
-    /// observations have accumulated.
-    pub fn recommend(
+    /// Bind the modeled network (satellite of the cost model: the wire
+    /// leg is priced from exact frame lengths, not ignored).
+    pub fn with_net(mut self, net: NetConfig, p_dim: usize) -> AdaptiveSelector {
+        self.net_cfg = net;
+        self.p_dim = p_dim;
+        self
+    }
+
+    /// Override the estimator cadence knobs (`--adapt-every`,
+    /// `--adapt-min-obs`, `--adapt-hysteresis`).
+    pub fn with_knobs(
+        mut self,
+        every: usize,
+        min_observations: usize,
+        hysteresis: f64,
+    ) -> AdaptiveSelector {
+        self.check_every = every.max(1);
+        self.min_observations = min_observations;
+        self.hysteresis = hysteresis;
+        self
+    }
+
+    fn build_codes(n: usize, m: usize, p_m: f64, seed: u64) -> Vec<(Scheme, Code)> {
+        Scheme::ALL
+            .iter()
+            .map(|&scheme| (scheme, Code::build(&CodeParams { scheme, n, m, p_m, seed })))
+            .collect()
+    }
+
+    /// Feed one iteration of telemetry into the estimator.
+    pub fn observe(
         &mut self,
-        stats: &StragglerStats,
-        compute: Duration,
-        incumbent: Scheme,
-    ) -> Option<Recommendation> {
-        if stats.observations() < self.min_observations {
+        stragglers_seen: usize,
+        stall: Duration,
+        body_bytes: u64,
+        attr: &Attribution,
+        waste: &WasteStats,
+    ) {
+        self.est.observe(stragglers_seen, stall, body_bytes, attr, waste);
+    }
+
+    /// The current estimate (read-only; the controller emits it as an
+    /// `EstimateUpdate` event).
+    pub fn estimator(&self) -> &ObsEstimator {
+        &self.est
+    }
+
+    /// Rebuild the candidate codes over `n` live learners after a
+    /// membership remap. The estimator and the RNG stream carry over —
+    /// the cluster's straggler statistics did not reset because a
+    /// learner died.
+    pub fn rebuild_codes(&mut self, n: usize) {
+        self.n = n;
+        self.codes = Self::build_codes(n, self.m, self.p_m, self.seed);
+    }
+
+    /// Score every scheme under the current estimate; `incumbent` is
+    /// the currently-running scheme. Returns None until enough
+    /// observations have accumulated, and between `check_every` ticks.
+    pub fn recommend(&mut self, compute: Duration, incumbent: Scheme) -> Option<Recommendation> {
+        let obs = self.est.observations();
+        if obs < self.min_observations {
             return None;
         }
-        let k = stats.expected_stragglers();
-        let t_s = stats.expected_delay();
+        if (obs - self.min_observations) % self.check_every != 0 {
+            return None;
+        }
+        let k = self.est.expected_stragglers();
+        let t_s = self.est.expected_delay();
+        let net =
+            NetCharge::from_config(&self.net_cfg, self.m, self.p_dim, self.est.body_bytes());
+        // Redundancy penalty scaled by the *observed* waste rate: the
+        // fraction of the incumbent's redundant compute that actually
+        // went to waste prices each candidate's own redundancy. Quiet
+        // clusters that cancel every extra result push the selector
+        // toward sparse schemes even when latency alone would not.
+        let compute_s = compute.as_secs_f64();
+        let excess = |code: &Code| (code.redundancy() - 1.0).max(0.0) * code.m as f64;
+        let incumbent_excess_s = self
+            .codes
+            .iter()
+            .find(|(s, _)| *s == incumbent)
+            .map(|(_, c)| excess(c) * compute_s)
+            .unwrap_or(0.0);
+        let wasted_frac = if incumbent_excess_s > 1e-12 {
+            (self.est.waste_per_iter() / incumbent_excess_s).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
         let mut scores: Vec<(Scheme, Duration)> = self
             .codes
             .iter()
             .map(|(scheme, code)| {
-                (*scheme, expected_iteration_time(code, k, t_s, compute, &mut self.rng))
+                let latency =
+                    expected_iteration_time(code, k, t_s, compute, &net, &mut self.rng);
+                let penalty = wasted_frac * excess(code) * compute_s;
+                (*scheme, latency + Duration::from_secs_f64(penalty))
             })
             .collect();
         scores.sort_by_key(|&(_, t)| t);
@@ -182,11 +380,8 @@ impl AdaptiveSelector {
         } else {
             incumbent
         };
-        let expected_time = scores
-            .iter()
-            .find(|(s, _)| *s == winner)
-            .map(|&(_, t)| t)
-            .unwrap();
+        let expected_time =
+            scores.iter().find(|(s, _)| *s == winner).map(|&(_, t)| t).unwrap();
         Some(Recommendation { scheme: winner, expected_time, scores })
     }
 
@@ -199,66 +394,131 @@ impl AdaptiveSelector {
 mod tests {
     use super::*;
 
-    #[test]
-    fn stats_ewma_tracks_and_warms_up() {
-        let mut s = StragglerStats::new(0.5);
-        assert_eq!(s.observations(), 0);
-        s.observe(4, Duration::from_millis(100));
-        assert_eq!(s.expected_stragglers(), 4.0);
-        assert_eq!(s.expected_delay(), Duration::from_millis(100));
-        for _ in 0..20 {
-            s.observe(0, Duration::ZERO);
+    fn quiet(sel: &mut AdaptiveSelector, iters: usize) {
+        let attr = Attribution::new(15);
+        let waste = WasteStats::default();
+        for _ in 0..iters {
+            sel.observe(0, Duration::ZERO, 0, &attr, &waste);
         }
-        assert!(s.expected_stragglers() < 0.01);
-        assert!(s.expected_delay() < Duration::from_millis(1));
+    }
+
+    fn noisy(sel: &mut AdaptiveSelector, iters: usize) {
+        let attr = Attribution::new(15);
+        let waste = WasteStats::default();
+        for _ in 0..iters {
+            sel.observe(5, Duration::from_millis(500), 0, &attr, &waste);
+        }
+    }
+
+    #[test]
+    fn estimator_tracks_ewma_and_reads_the_obs_layer() {
+        let mut e = ObsEstimator::new(0.5);
+        assert_eq!(e.observations(), 0);
+        let attr = Attribution::new(3);
+        let waste = WasteStats::default();
+        e.observe(4, Duration::from_millis(100), 1234, &attr, &waste);
+        assert_eq!(e.expected_stragglers(), 4.0);
+        assert_eq!(e.expected_delay(), Duration::from_millis(100));
+        assert_eq!(e.body_bytes(), 1234);
+        for _ in 0..20 {
+            e.observe(0, Duration::ZERO, 1234, &attr, &waste);
+        }
+        assert!(e.expected_stragglers() < 0.01);
+        assert!(e.expected_delay() < Duration::from_millis(1));
+
+        // Decodability-front quantiles widen the delay estimate even
+        // when the stall EWMA has decayed: the front p90 is the floor.
+        let mut attr = Attribution::new(3);
+        for _ in 0..50 {
+            attr.observe_decodable(0, Duration::from_millis(80));
+        }
+        e.observe(0, Duration::ZERO, 1234, &attr, &waste);
+        assert!(
+            e.expected_delay() >= Duration::from_millis(70),
+            "front p90 must floor the delay estimate, got {:?}",
+            e.expected_delay()
+        );
+
+        // Waste feeds through as per-decodable-iteration compute cost.
+        let mut waste = WasteStats::default();
+        waste.add(100, 5_000_000_000); // 5 s wasted over 50 iters
+        e.observe(0, Duration::ZERO, 1234, &attr, &waste);
+        assert!((e.waste_per_iter() - 0.1).abs() < 1e-9, "{}", e.waste_per_iter());
     }
 
     #[test]
     fn cost_model_orders_schemes_sensibly() {
         let mut rng = Pcg32::seeded(0);
         let compute = Duration::from_millis(2);
+        let net = NetCharge::default();
         let build = |s| Code::build(&CodeParams { scheme: s, n: 15, m: 8, p_m: 0.8, seed: 1 });
         // no stragglers: uncoded (workload 1, always decodable) beats MDS
-        let t_unc = expected_iteration_time(&build(Scheme::Uncoded), 0.0, Duration::ZERO, compute, &mut rng);
-        let t_mds = expected_iteration_time(&build(Scheme::Mds), 0.0, Duration::ZERO, compute, &mut rng);
+        let t_unc = expected_iteration_time(
+            &build(Scheme::Uncoded), 0.0, Duration::ZERO, compute, &net, &mut rng);
+        let t_mds = expected_iteration_time(
+            &build(Scheme::Mds), 0.0, Duration::ZERO, compute, &net, &mut rng);
         assert!(t_unc < t_mds, "{t_unc:?} vs {t_mds:?}");
         // heavy stragglers with big delay: MDS beats uncoded
         let t_s = Duration::from_millis(500);
-        let t_unc = expected_iteration_time(&build(Scheme::Uncoded), 4.0, t_s, compute, &mut rng);
-        let t_mds = expected_iteration_time(&build(Scheme::Mds), 4.0, t_s, compute, &mut rng);
+        let t_unc = expected_iteration_time(
+            &build(Scheme::Uncoded), 4.0, t_s, compute, &net, &mut rng);
+        let t_mds = expected_iteration_time(
+            &build(Scheme::Mds), 4.0, t_s, compute, &net, &mut rng);
         assert!(t_mds < t_unc, "{t_mds:?} vs {t_unc:?}");
+    }
+
+    #[test]
+    fn net_charge_prices_exact_wire_lengths() {
+        // 1 MB/s ⇒ 1 byte = 1 µs; the constants are the real frame
+        // sizes, not estimates.
+        let cfg = NetConfig { bandwidth_mbps: 1.0, jitter: Duration::ZERO };
+        let net = NetCharge::from_config(&cfg, 8, 10, 2_000_000);
+        assert!((net.body_s - 2.0).abs() < 1e-12);
+        assert!((net.header_s - task_header_wire_len(8) as f64 * 1e-6).abs() < 1e-15);
+        assert!((net.result_s - result_wire_len(10) as f64 * 1e-6).abs() < 1e-15);
+        // Dense schemes task more learners: MDS pays N headers where
+        // uncoded pays M — the gap is exactly (N−M) header times.
+        let unc = Code::build(&CodeParams::new(Scheme::Uncoded, 15, 8));
+        let mds = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let gap = net.iteration_time(&mds) - net.iteration_time(&unc);
+        assert!((gap - 7.0 * net.header_s).abs() < 1e-9, "gap {gap}");
+        // Jitter charges every transfer: 1 body + sends + M returns.
+        let cfg = NetConfig { bandwidth_mbps: 0.0, jitter: Duration::from_micros(500) };
+        let net = NetCharge::from_config(&cfg, 8, 10, 2_000_000);
+        assert_eq!(net.body_s, 0.0, "infinite bandwidth serializes for free");
+        let want = (1 + 15 + 8) as f64 * 500e-6;
+        assert!((net.iteration_time(&mds) - want).abs() < 1e-12);
+        // The free default prices everything at zero.
+        let free = NetCharge::from_config(&NetConfig::free(), 8, 10, 2_000_000);
+        assert_eq!(free.iteration_time(&mds), 0.0);
     }
 
     #[test]
     fn fractional_k_interpolates() {
         let mut rng = Pcg32::seeded(1);
+        let net = NetCharge::default();
         let code = Code::build(&CodeParams { scheme: Scheme::Uncoded, n: 15, m: 8, p_m: 0.8, seed: 1 });
         let t_s = Duration::from_millis(100);
-        let t0 = expected_iteration_time(&code, 0.0, t_s, Duration::ZERO, &mut rng);
-        let t_half = expected_iteration_time(&code, 0.5, t_s, Duration::ZERO, &mut rng);
-        let t1 = expected_iteration_time(&code, 1.0, t_s, Duration::ZERO, &mut rng);
+        let t0 = expected_iteration_time(&code, 0.0, t_s, Duration::ZERO, &net, &mut rng);
+        let t_half = expected_iteration_time(&code, 0.5, t_s, Duration::ZERO, &net, &mut rng);
+        let t1 = expected_iteration_time(&code, 1.0, t_s, Duration::ZERO, &net, &mut rng);
         assert!(t0 <= t_half && t_half <= t1, "{t0:?} {t_half:?} {t1:?}");
     }
 
     #[test]
     fn selector_warms_up_then_recommends() {
         let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0);
-        let mut stats = StragglerStats::new(0.3);
         let compute = Duration::from_millis(2);
-        assert!(sel.recommend(&stats, compute, Scheme::Mds).is_none());
+        assert!(sel.recommend(compute, Scheme::Mds).is_none());
         // quiet cluster: no stragglers → should prefer a cheap scheme
-        for _ in 0..10 {
-            stats.observe(0, Duration::ZERO);
-        }
-        let rec = sel.recommend(&stats, compute, Scheme::Mds).unwrap();
+        quiet(&mut sel, 10);
+        let rec = sel.recommend(compute, Scheme::Mds).unwrap();
         assert_ne!(rec.scheme, Scheme::Mds, "quiet cluster should drop MDS");
         assert_eq!(rec.scores.len(), Scheme::ALL.len());
         // noisy cluster with long delays → a dense scheme
-        let mut stats = StragglerStats::new(0.3);
-        for _ in 0..10 {
-            stats.observe(5, Duration::from_millis(500));
-        }
-        let rec = sel.recommend(&stats, compute, Scheme::Uncoded).unwrap();
+        let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0);
+        noisy(&mut sel, 10);
+        let rec = sel.recommend(compute, Scheme::Uncoded).unwrap();
         assert!(
             matches!(rec.scheme, Scheme::Mds | Scheme::RandomSparse),
             "noisy cluster should pick a dense code, got {}",
@@ -270,11 +530,94 @@ mod tests {
     fn hysteresis_prevents_thrashing() {
         let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0);
         sel.hysteresis = 10.0; // absurd: nothing can beat the incumbent
-        let mut stats = StragglerStats::new(0.3);
-        for _ in 0..10 {
-            stats.observe(5, Duration::from_millis(500));
-        }
-        let rec = sel.recommend(&stats, Duration::from_millis(2), Scheme::Uncoded).unwrap();
+        noisy(&mut sel, 10);
+        let rec = sel.recommend(Duration::from_millis(2), Scheme::Uncoded).unwrap();
         assert_eq!(rec.scheme, Scheme::Uncoded, "hysteresis must hold the incumbent");
+    }
+
+    #[test]
+    fn check_every_gates_the_scoring_cadence() {
+        let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0).with_knobs(3, 2, 0.1);
+        let compute = Duration::from_millis(2);
+        let attr = Attribution::new(15);
+        let waste = WasteStats::default();
+        let mut fired = Vec::new();
+        for obs in 1..=8 {
+            sel.observe(0, Duration::ZERO, 0, &attr, &waste);
+            if sel.recommend(compute, Scheme::Mds).is_some() {
+                fired.push(obs);
+            }
+        }
+        assert_eq!(fired, vec![2, 5, 8], "min_obs 2, then every 3rd observation");
+    }
+
+    #[test]
+    fn observed_waste_penalizes_redundancy() {
+        // Two identically seeded selectors, identical EWMA feed; one
+        // also sees heavy redundant-compute waste. The first recommend
+        // call on each consumes the same RNG prefix, so the only score
+        // difference is the waste penalty — which must raise MDS
+        // (redundancy N/M) and leave uncoded (redundancy 1) alone.
+        let compute = Duration::from_millis(2);
+        let score_of = |rec: &Recommendation, s: Scheme| {
+            rec.scores.iter().find(|(x, _)| *x == s).map(|&(_, t)| t).unwrap()
+        };
+        let run = |wasted_ns: u64| {
+            let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0);
+            let mut attr = Attribution::new(15);
+            let mut waste = WasteStats::default();
+            for _ in 0..10 {
+                attr.observe_decodable(0, Duration::ZERO);
+                if wasted_ns > 0 {
+                    waste.add(100, wasted_ns);
+                }
+                sel.observe(0, Duration::ZERO, 0, &attr, &waste);
+            }
+            sel.recommend(compute, Scheme::Mds).unwrap()
+        };
+        let clean = run(0);
+        let wasted = run(100_000_000); // 0.1 s wasted per iteration
+        assert_eq!(
+            score_of(&clean, Scheme::Uncoded),
+            score_of(&wasted, Scheme::Uncoded),
+            "zero-redundancy schemes must not be penalized"
+        );
+        assert!(
+            score_of(&wasted, Scheme::Mds) > score_of(&clean, Scheme::Mds),
+            "observed waste must raise the dense scheme's score"
+        );
+    }
+
+    #[test]
+    fn scoring_is_deterministic_per_seed() {
+        let compute = Duration::from_millis(2);
+        let run = || {
+            let mut sel = AdaptiveSelector::new(15, 8, 0.8, 42);
+            noisy(&mut sel, 10);
+            let mut out = Vec::new();
+            for _ in 0..3 {
+                let attr = Attribution::new(15);
+                sel.observe(5, Duration::from_millis(500), 0, &attr, &WasteStats::default());
+                out.push(sel.recommend(compute, Scheme::Uncoded).unwrap().scores);
+            }
+            out
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x, y, "same seed and feed must reproduce every score exactly");
+        }
+    }
+
+    #[test]
+    fn rebuild_codes_keeps_the_estimator_and_stream() {
+        let mut sel = AdaptiveSelector::new(15, 8, 0.8, 0);
+        noisy(&mut sel, 10);
+        sel.rebuild_codes(12);
+        assert_eq!(sel.dims().0, 12);
+        assert_eq!(sel.estimator().observations(), 10, "telemetry survives the remap");
+        let rec = sel.recommend(Duration::from_millis(2), Scheme::Uncoded).unwrap();
+        assert_eq!(rec.scores.len(), Scheme::ALL.len());
     }
 }

@@ -19,14 +19,14 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::adaptive::{AdaptiveSelector, StragglerStats};
+use super::adaptive::AdaptiveSelector;
 use super::failure::{FailureDetector, FaultError, FaultStats, Membership};
 use super::rollout;
 use super::RunSpec;
 use std::sync::Arc;
 
 use crate::coding::decoder::Decoder;
-use crate::coding::{Code, CodeParams, RankTracker, Scheme};
+use crate::coding::{Code, CodeParams, CodingPlan, RankTracker, Scheme};
 use crate::config::{DegradedMode, TrainConfig};
 use crate::env::make_env;
 use crate::linalg::pool::{BufPool, PoolStats};
@@ -68,6 +68,15 @@ pub struct Controller<T: ControllerTransport> {
     cfg: TrainConfig,
     spec: RunSpec,
     transport: T,
+    /// The live coding plan: epoch counter, scheme, assignment matrix
+    /// and membership view. Every broadcast Task and every accepted
+    /// Result is stamped with its epoch; [`Controller::install_plan`]
+    /// swaps in a successor between iterations (adaptive switch or
+    /// membership remap) and cross-epoch results are classified stale.
+    plan: CodingPlan,
+    /// Decoder re-keyed to the plan's matrix on every install (the
+    /// decode-plan LRU is flushed wholesale — a cached factorization of
+    /// a superseded matrix must never be applied).
     decoder: Decoder,
     /// Who is slowed down each iteration: the §V-C injector or a
     /// measured-trace replay — built through the single
@@ -78,10 +87,12 @@ pub struct Controller<T: ControllerTransport> {
     agents: Vec<AgentParams>,
     streams: Streams,
     noise_schedule: DecaySchedule,
-    /// Live scheme adaptation (config `adaptive`): straggler telemetry
-    /// feeds the selector; a switch replaces the decoder in place —
-    /// learners are stateless w.r.t. the code so nothing else changes.
-    adaptive: Option<(AdaptiveSelector, StragglerStats)>,
+    /// Live plan adaptation (config `adaptive`): the obs-fed selector
+    /// (wait-phase telemetry + attribution front + waste stats) scores
+    /// the schemes each iteration; a recommendation installs a
+    /// successor plan — learners are stateless w.r.t. the code so
+    /// nothing else changes.
+    adaptive: Option<AdaptiveSelector>,
     /// EWMA of the per-agent-update compute time reported by learners.
     compute_ewma: f64,
     /// The transport's time domain (real or virtual).
@@ -162,14 +173,14 @@ impl<T: ControllerTransport> Controller<T> {
                 cfg.n_learners
             );
         }
-        let code = Code::build(&CodeParams {
+        let plan = CodingPlan::initial(&CodeParams {
             scheme: cfg.scheme,
             n: cfg.n_learners,
             m: spec.m,
             p_m: cfg.p_m,
             seed: cfg.seed,
         });
-        let decoder = Decoder::new(code);
+        let decoder = Decoder::new(plan.code().clone());
         let disturbance = DisturbanceModel::from_config(&cfg)?;
         let env = make_env(spec.env, spec.m, spec.k_adversaries);
         let mut streams = Streams::new(cfg.seed);
@@ -181,10 +192,9 @@ impl<T: ControllerTransport> Controller<T> {
             decay_iters: cfg.noise_decay_iters,
         };
         let adaptive = cfg.adaptive.then(|| {
-            (
-                AdaptiveSelector::new(cfg.n_learners, spec.m, cfg.p_m, cfg.seed),
-                StragglerStats::new(0.3),
-            )
+            AdaptiveSelector::new(cfg.n_learners, spec.m, cfg.p_m, cfg.seed)
+                .with_net(cfg.net, spec.dims.agent_param_dim())
+                .with_knobs(cfg.adapt_every, cfg.adapt_min_obs, cfg.adapt_hysteresis)
         });
         let clock = transport.clock();
         // Share the transport's buffer pool when it has one (sim);
@@ -217,6 +227,7 @@ impl<T: ControllerTransport> Controller<T> {
             cfg,
             spec,
             transport,
+            plan,
             decoder,
             disturbance,
             env,
@@ -243,8 +254,38 @@ impl<T: ControllerTransport> Controller<T> {
         self.decoder.code()
     }
 
-    /// Decode-plan cache telemetry of the current decoder (reset when
-    /// an adaptive switch replaces the decoder mid-run).
+    /// The live coding plan: epoch, scheme, assignment matrix and
+    /// membership view.
+    pub fn plan(&self) -> &CodingPlan {
+        &self.plan
+    }
+
+    /// The current plan epoch — equivalently, how many successor plans
+    /// have been installed (adaptive switches + membership remaps).
+    pub fn plan_epoch(&self) -> u16 {
+        self.plan.epoch()
+    }
+
+    /// Install a successor plan: re-key the decoder to the new matrix
+    /// (flushing every cached decode plan — a factorization of the
+    /// superseded assignment matrix must never be applied under the new
+    /// one), adopt its scheme, and stamp the new epoch. From the next
+    /// broadcast on, Tasks carry the new epoch; results still in flight
+    /// that were computed under the old plan echo the old epoch and are
+    /// classified stale in `collect`, never decoded.
+    fn install_plan(&mut self, iter: u64, plan: CodingPlan, why: &'static str) {
+        self.decoder.rebind(plan.code().clone());
+        self.cfg.scheme = plan.scheme();
+        let (epoch, scheme, rows) = (plan.epoch(), plan.scheme(), plan.n_rows() as u32);
+        self.tracer.record(|| ObsEvent::PlanSwitch { iter, epoch, scheme: scheme.name(), rows });
+        crate::log_info!(
+            "iter {iter}: coding plan epoch {epoch} installed ({why}; scheme {scheme}, {rows} rows)"
+        );
+        self.plan = plan;
+    }
+
+    /// Decode-plan cache telemetry of the current decoder (flushed
+    /// whenever a plan install re-keys the decoder mid-run).
     pub fn decode_plan_stats(&self) -> crate::coding::decoder::PlanCacheStats {
         self.decoder.plan_cache_stats()
     }
@@ -257,7 +298,8 @@ impl<T: ControllerTransport> Controller<T> {
     }
 
     /// The decoder's buffer-pool telemetry (apply accumulators, peel
-    /// residuals; reset when an adaptive switch replaces the decoder).
+    /// residuals; the pool survives plan installs — only the cached
+    /// decode plans are flushed).
     pub fn decode_pool_stats(&self) -> PoolStats {
         self.decoder.pool_stats()
     }
@@ -474,7 +516,8 @@ impl<T: ControllerTransport> Controller<T> {
             .map(|a| self.pool.take_with(p_dim, |out| a.write_flat(out)))
             .collect();
         let body = TaskBody::new(Arc::new(agent_params), Arc::new(mb));
-        self.tracer.record(|| ObsEvent::BroadcastBody { iter, bytes: body.wire_len() as u64 });
+        let body_bytes = body.wire_len() as u64;
+        self.tracer.record(|| ObsEvent::BroadcastBody { iter, bytes: body_bytes });
         for &s in &plan.stragglers {
             self.tracer.record(|| ObsEvent::StragglerInjected {
                 iter,
@@ -560,36 +603,61 @@ impl<T: ControllerTransport> Controller<T> {
         // virtual call and a branch.
         self.observe_faults(iter, &arrived)?;
 
-        // --- Adaptive scheme selection (extension; DESIGN.md §9) --------
+        // --- Adaptive plan selection (extension; DESIGN.md §9) ----------
         if let Some(c) = compute_per_update {
             let alpha = 0.3;
             self.compute_ewma += alpha * (c.as_secs_f64() - self.compute_ewma);
         }
         let mut switched = None;
-        if let Some((selector, stats)) = self.adaptive.as_mut() {
+        if let Some(selector) = self.adaptive.as_mut() {
             // effective stragglers = tasked learners whose results never
             // made it into this round (biased high: includes healthy-
             // but-late learners; hysteresis absorbs the bias). Idle
-            // learners were never tasked and must not count.
-            stats.observe(tasked.len().saturating_sub(received.len()), stall);
+            // learners were never tasked and must not count. The
+            // estimator also reads the always-on obs accumulators —
+            // decodability-front quantiles and waste — as pure inputs.
+            selector.observe(
+                tasked.len().saturating_sub(received.len()),
+                stall,
+                body_bytes,
+                &self.attr,
+                &self.waste,
+            );
+            let est = selector.estimator();
+            let (k_milli, delay_ns, waste_ns_per_iter) = (
+                (est.expected_stragglers() * 1e3) as u64,
+                u64::try_from(est.expected_delay().as_nanos()).unwrap_or(u64::MAX),
+                (est.waste_per_iter() * 1e9) as u64,
+            );
+            self.tracer.record(|| ObsEvent::EstimateUpdate {
+                iter,
+                k_milli,
+                delay_ns,
+                waste_ns_per_iter,
+            });
             let compute = Duration::from_secs_f64(self.compute_ewma.max(1e-6));
-            if let Some(rec) = selector.recommend(stats, compute, self.cfg.scheme) {
-                if rec.scheme != self.cfg.scheme {
-                    switched = Some((self.cfg.scheme, rec.scheme));
-                    self.cfg.scheme = rec.scheme;
+            if let Some(rec) = selector.recommend(compute, self.plan.scheme()) {
+                if rec.scheme != self.plan.scheme() {
+                    switched = Some((self.plan.scheme(), rec.scheme));
                 }
             }
         }
         if let Some((from, to)) = switched {
-            // Rebuild over the *live* learner count: after a remap the
-            // code has n′ = survivors rows, not the configured N.
-            self.decoder = Decoder::new(Code::build(&CodeParams {
-                scheme: to,
-                n: self.membership.live(),
-                m: self.spec.m,
-                p_m: self.cfg.p_m,
-                seed: self.cfg.seed,
-            }));
+            // Successor plan over the *live* row count: after a remap
+            // the code has n′ = survivors rows, not the configured N.
+            // Installing bumps the epoch, so any result still in flight
+            // under the old matrix is classified stale, never combined.
+            let next = self.plan.rebuild(
+                &CodeParams {
+                    scheme: to,
+                    n: self.plan.n_rows(),
+                    m: self.spec.m,
+                    p_m: self.cfg.p_m,
+                    seed: self.cfg.seed,
+                },
+                self.plan.members().to_vec(),
+            );
+            self.install_plan(iter, next, "adaptive switch");
             crate::log_info!("iter {iter}: adaptive switch {from} -> {to}");
         }
 
@@ -621,9 +689,9 @@ impl<T: ControllerTransport> Controller<T> {
     }
 
     /// The scheme currently in use (may differ from the initial config
-    /// under `adaptive`).
+    /// under `adaptive` or after a degraded fallback).
     pub fn current_scheme(&self) -> crate::coding::Scheme {
-        self.cfg.scheme
+        self.plan.scheme()
     }
 
     /// Recycle the previous broadcast's flat parameter vectors once the
@@ -656,6 +724,7 @@ impl<T: ControllerTransport> Controller<T> {
         body: &Arc<TaskBody>,
         plan: &InjectionPlan,
     ) -> Vec<usize> {
+        let epoch = self.plan.epoch();
         let mut tasked = Vec::with_capacity(self.membership.live());
         for j in 0..self.cfg.n_learners {
             let Some(r) = self.membership.row_of(j) else { continue };
@@ -672,6 +741,7 @@ impl<T: ControllerTransport> Controller<T> {
                 j,
                 CtrlMsg::Task {
                     iter,
+                    epoch,
                     row,
                     body: Arc::clone(body),
                     straggler_delay_ns: plan.delay_ns[j],
@@ -756,7 +826,7 @@ impl<T: ControllerTransport> Controller<T> {
         // n′ could be rank-deficient. A scheme change (the uncoded
         // fallback) rebuilds, which is safe — uncoded is deterministic
         // and always decodable from its M active rows.
-        let same_scheme = scheme == self.cfg.scheme;
+        let same_scheme = scheme == self.plan.scheme();
         let keep: Vec<usize> = (0..self.cfg.n_learners)
             .filter(|&j| !dead.contains(&j))
             .filter_map(|j| self.membership.row_of(j))
@@ -771,21 +841,34 @@ impl<T: ControllerTransport> Controller<T> {
                 detail: "fewer survivors than agents; no code can recover the gradients".into(),
             }));
         }
-        self.cfg.scheme = scheme;
-        let code = if same_scheme {
-            self.code().restrict_rows(&keep)
+        let next = if same_scheme {
+            self.plan.restrict(&keep)
         } else {
-            Code::build(&CodeParams {
-                scheme,
-                n: live,
-                m: self.spec.m,
-                p_m: self.cfg.p_m,
-                seed: self.cfg.seed,
-            })
+            // Membership view of the fresh n′-row matrix: row r belongs
+            // to the (unique) survivor the rewritten membership maps to
+            // it.
+            let mut members = vec![0usize; live];
+            for j in 0..self.cfg.n_learners {
+                if let Some(r) = self.membership.row_of(j) {
+                    members[r] = j;
+                }
+            }
+            self.plan.rebuild(
+                &CodeParams {
+                    scheme,
+                    n: live,
+                    m: self.spec.m,
+                    p_m: self.cfg.p_m,
+                    seed: self.cfg.seed,
+                },
+                members,
+            )
         };
-        self.decoder = Decoder::new(code);
-        if let Some((selector, _)) = self.adaptive.as_mut() {
-            *selector = AdaptiveSelector::new(live, self.spec.m, self.cfg.p_m, self.cfg.seed);
+        self.install_plan(iter, next, "membership remap");
+        if let Some(selector) = self.adaptive.as_mut() {
+            // Keep the estimator state and the seeded score stream —
+            // only the candidate codes must shrink to n′ rows.
+            selector.rebuild_codes(live);
         }
         self.tracer.record(|| ObsEvent::MembershipRemap {
             iter,
@@ -924,13 +1007,19 @@ impl<T: ControllerTransport> Controller<T> {
                 continue;
             };
             match msg {
-                LearnerMsg::Result { iter: ri, learner_id, y, compute_ns } => {
+                LearnerMsg::Result { iter: ri, epoch, learner_id, y, compute_ns } => {
                     let j = learner_id as usize;
+                    // A result computed under a superseded plan echoes
+                    // the old epoch: its y was encoded with rows of a
+                    // matrix the decoder no longer holds, so combining
+                    // it under the live plan would corrupt θ'. Classify
+                    // it stale and charge the waste.
+                    let epoch_stale = epoch != self.plan.epoch();
                     // Classify first (the event vocabulary of
                     // `obs::Disposition`); the reject paths below drop
                     // the reply exactly as before — classification is a
                     // pure function of values already in hand.
-                    let disposition = if j >= n || ri > iter {
+                    let disposition = if j >= n || ri > iter || epoch_stale {
                         Disposition::Stale
                     } else if ri < iter {
                         Disposition::PostDecodable
@@ -973,7 +1062,11 @@ impl<T: ControllerTransport> Controller<T> {
                         bytes,
                         compute_ns,
                     });
-                    if disposition.is_waste() {
+                    // Cross-epoch results are real work thrown away —
+                    // charge them to waste exactly once. (`Stale` is
+                    // not in `is_waste()` because its other causes are
+                    // protocol confusion, not discarded compute.)
+                    if disposition.is_waste() || epoch_stale {
                         self.waste.add(bytes, compute_ns);
                     }
                     if disposition != Disposition::Used {

@@ -113,7 +113,7 @@ pub fn learner_loop(
             Ok(m) => m,
             Err(_) => return Ok(()), // controller gone: clean exit
         };
-        let CtrlMsg::Task { iter, row, body, straggler_delay_ns } = msg else {
+        let CtrlMsg::Task { iter, epoch, row, body, straggler_delay_ns } = msg else {
             match msg {
                 CtrlMsg::Shutdown => return Ok(()),
                 _ => continue, // stale Ack / Welcome
@@ -187,7 +187,7 @@ pub fn learner_loop(
             }
             Poll::Shutdown => return Ok(()),
         }
-        match ep.send_result(iter, learner_id, y, compute_ns) {
+        match ep.send_result(iter, epoch, learner_id, y, compute_ns) {
             Ok(returned) => scratch = returned,
             Err(_) => return Ok(()), // controller gone mid-send
         }
@@ -228,6 +228,7 @@ mod tests {
         (
             CtrlMsg::Task {
                 iter,
+                epoch: 0,
                 row,
                 body: TaskBody::new(
                     std::sync::Arc::new(params.clone()),
@@ -324,7 +325,7 @@ mod tests {
         let t0 = std::time::Instant::now();
         ctrl.send_to(
             0,
-            CtrlMsg::Task { iter, row, body, straggler_delay_ns: 80_000_000 },
+            CtrlMsg::Task { iter, epoch: 0, row, body, straggler_delay_ns: 80_000_000 },
         )
         .unwrap();
         let got = ctrl.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
@@ -348,6 +349,7 @@ mod tests {
             0,
             CtrlMsg::Task {
                 iter,
+                epoch: 0,
                 row,
                 body,
                 straggler_delay_ns: 5_000_000_000, // 5 s — must NOT be waited out

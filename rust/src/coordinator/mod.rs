@@ -8,7 +8,6 @@
 //! * [`backend`] — the per-agent MADDPG update: PJRT (AOT artifacts) or
 //!   a deterministic mock for coordination tests
 //! * [`pool`] — learner spawning: in-process threads or TCP workers
-//! * [`straggler`] — the paper's §V-C injection model
 //! * [`centralized`] — the single-process baseline (Fig. 3 reference)
 //! * [`rollout`] — episode execution via the native MLP
 //!
@@ -46,7 +45,6 @@ pub mod failure;
 pub mod learner;
 pub mod pool;
 pub mod rollout;
-pub mod straggler;
 
 use std::sync::Arc;
 

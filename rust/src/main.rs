@@ -70,7 +70,13 @@ COMMON TRAIN FLAGS:
     --out-dir DIR              write per-iteration CSV here
     --checkpoint-every I       save params every I iterations (needs --out-dir)
     --resume PATH              start from a saved checkpoint
-    --adaptive                 measure stragglers, switch scheme at runtime
+    --adaptive                 obs-driven plan switching: estimate straggler/
+                               waste rates from telemetry, swap the coding
+                               scheme between iterations (epoch-versioned;
+                               off = bit-identical to a plain run)
+    --adapt-every I            consider a switch every I observations [1]
+    --adapt-min-obs K          observations before the first switch  [5]
+    --adapt-hysteresis F       min fractional gain required to switch [0.1]
     --collect-timeout-ms MS    dead-learner timeout      [120000]
     --verbose                  per-iteration progress lines
     --trace-out PATH           write a Chrome trace-event timeline of the run
@@ -127,6 +133,14 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
                                iterations survived, availability, deaths,
                                remaps and recovery time (+ BENCH_fault.json
                                with --out-dir)
+    --adaptive                 ADAPTIVE AXIS: one cell per STARTING scheme
+                               with the obs-driven selector live; reports
+                               start -> final scheme and plan-switch counts
+                               (+ BENCH_adaptive.json with --out-dir).
+                               Composes with --trace: a regime-shifting
+                               measured trace is the canonical input
+    --adapt-every/--adapt-min-obs/--adapt-hysteresis
+                               estimator knobs, as in train
 
 SCALE-STUDY FLAGS (all optional; virtual time only):
     --learners-list N1,N2      learner counts            [100,1000,10000]
@@ -150,6 +164,8 @@ EXAMPLES:
     coded-marl sim-sweep --trace examples/traces/ec2_sample.jsonl --out-dir bench-out
     coded-marl sim-sweep --m 8 --bandwidth-list 0,25,125 --stragglers-list 0,2
     coded-marl sim-sweep --m 8 --crash-rate 0.02 --crash-restart-s 5 --out-dir bench-out
+    coded-marl sim-sweep --m 4 --learners 7 --adaptive \\
+        --trace traces/regime_shift.csv --out-dir bench-out
     coded-marl scale-study --learners-list 100,1000,10000 \\
         --delay-dists fixed,pareto --out-dir bench-out
 ";
@@ -319,9 +335,10 @@ fn cmd_sim_sweep() -> Result<()> {
     use coded_marl::config::{ComputeModelCfg, DelayDist};
     use coded_marl::obs::WasteStats;
     use coded_marl::sim::sweep::{
-        bandwidth_table, fault_table, grid_iter_stats, render_table, run_bandwidth_sweep,
-        run_fault_sweep, simulated_total, sweep_base, write_bench_json, write_csv,
-        write_fault_json, write_model_json, SweepConfig,
+        adaptive_table, bandwidth_table, fault_table, grid_iter_stats, render_table,
+        run_adaptive_sweep, run_bandwidth_sweep, run_fault_sweep, simulated_total, sweep_base,
+        write_adaptive_json, write_bench_json, write_csv, write_fault_json, write_model_json,
+        SweepConfig,
     };
 
     let args = Args::from_env(2)?;
@@ -439,6 +456,9 @@ fn cmd_sim_sweep() -> Result<()> {
         if bandwidth_list.is_some() {
             anyhow::bail!("--bandwidth-list and fault injection are separate axes; drop one");
         }
+        if base.adaptive {
+            anyhow::bail!("--adaptive and fault injection are separate sim-sweep axes; drop one");
+        }
         println!("fault axis: {} (one cell per scheme, k=0 stragglers)", base.fault.label());
         let cells = run_fault_sweep(&sweep_cfg)?;
         let wall = t0.elapsed();
@@ -453,6 +473,40 @@ fn cmd_sim_sweep() -> Result<()> {
         if let Some(dir) = out_dir {
             let path = dir.join("BENCH_fault.json");
             write_fault_json(&cells, &base, wall, &path)
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
+    // --adaptive switches to the adaptive axis: one cell per STARTING
+    // scheme with the obs-driven selector live, reporting where the
+    // plan converged instead of the frozen straggler grid. The
+    // synthetic disturbance uses the largest --stragglers-list entry
+    // (varying k is the selector's job now); with --trace the recorded
+    // regime drives the switches.
+    if base.adaptive {
+        if bandwidth_list.is_some() {
+            anyhow::bail!("--bandwidth-list and --adaptive are separate axes; drop one");
+        }
+        let mut adaptive_cfg = sweep_cfg;
+        adaptive_cfg.base.straggler.k = ks.iter().copied().max().unwrap_or(0);
+        println!(
+            "adaptive axis: selector live (every={} min-obs={} hysteresis={}), one cell per \
+             starting scheme",
+            base.adapt_every, base.adapt_min_obs, base.adapt_hysteresis,
+        );
+        let cells = run_adaptive_sweep(&adaptive_cfg)?;
+        let wall = t0.elapsed();
+        print!("{}", adaptive_table(&cells));
+        let switched = cells.iter().filter(|c| c.final_epoch > 0).count();
+        println!(
+            "\n{switched}/{} starting schemes switched plans ({} wall-clock)",
+            cells.len(),
+            fmt_duration(wall),
+        );
+        if let Some(dir) = out_dir {
+            let path = dir.join("BENCH_adaptive.json");
+            write_adaptive_json(&cells, &adaptive_cfg.base, wall, &path)
                 .with_context(|| format!("writing {}", path.display()))?;
             println!("wrote {}", path.display());
         }

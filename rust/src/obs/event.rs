@@ -115,6 +115,17 @@ pub enum Event {
     /// continues via uncoded fallback, else it terminates with a
     /// structured fault error.
     DegradedDecode { iter: u64, survivors: u32, rank: u32, fallback: bool },
+    /// A successor [`crate::coding::CodingPlan`] was installed (adaptive
+    /// scheme switch or membership remap): `epoch` is the new plan's
+    /// version, `rows` its live row count. Results on the wire that
+    /// were encoded under an earlier epoch are classified stale from
+    /// here on.
+    PlanSwitch { iter: u64, epoch: u16, scheme: &'static str, rows: u32 },
+    /// The adaptive selector's obs-fed estimate after this iteration's
+    /// telemetry: expected stragglers (milli-units, so 2500 = 2.5
+    /// learners), the avoidable delay, and wasted compute per
+    /// decodable iteration.
+    EstimateUpdate { iter: u64, k_milli: u64, delay_ns: u64, waste_ns_per_iter: u64 },
 }
 
 impl Event {
@@ -139,6 +150,8 @@ impl Event {
             Event::LearnerDeclaredDead { .. } => "learner_declared_dead",
             Event::MembershipRemap { .. } => "membership_remap",
             Event::DegradedDecode { .. } => "degraded_decode",
+            Event::PlanSwitch { .. } => "plan_switch",
+            Event::EstimateUpdate { .. } => "estimate_update",
         }
     }
 }

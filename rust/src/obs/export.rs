@@ -96,6 +96,13 @@ pub fn jsonl(events: &[TracedEvent]) -> String {
             Event::DegradedDecode { iter, survivors, rank, fallback } => format!(
                 "\"iter\":{iter},\"survivors\":{survivors},\"rank\":{rank},\"fallback\":{fallback}"
             ),
+            Event::PlanSwitch { iter, epoch, scheme, rows } => format!(
+                "\"iter\":{iter},\"epoch\":{epoch},\"scheme\":\"{}\",\"rows\":{rows}",
+                esc(scheme)
+            ),
+            Event::EstimateUpdate { iter, k_milli, delay_ns, waste_ns_per_iter } => format!(
+                "\"iter\":{iter},\"k_milli\":{k_milli},\"delay_ns\":{delay_ns},\"waste_ns_per_iter\":{waste_ns_per_iter}"
+            ),
         };
         out.push_str(&format!("{{\"t_ns\":{t},\"ev\":\"{}\",{body}}}\n", te.event.kind()));
     }
@@ -269,6 +276,26 @@ pub fn chrome_trace(events: &[TracedEvent], n_learners: usize) -> String {
                     "\"iter\":{iter},\"survivors\":{survivors},\"rank\":{rank},\"fallback\":{fallback}"
                 ),
             )),
+            Event::PlanSwitch { iter, epoch, scheme, rows } => evs.push(instant(
+                "plan_switch",
+                0,
+                at,
+                format!(
+                    "\"iter\":{iter},\"epoch\":{epoch},\"scheme\":\"{}\",\"rows\":{rows}",
+                    esc(scheme)
+                ),
+            )),
+            Event::EstimateUpdate { iter, k_milli, delay_ns, waste_ns_per_iter } => evs
+                .push(counter(
+                    "estimate",
+                    at,
+                    format!(
+                        "\"k\":{:.3},\"delay_ms\":{:.3},\"waste_ms\":{:.3}",
+                        *k_milli as f64 / 1e3,
+                        *delay_ns as f64 / 1e6,
+                        *waste_ns_per_iter as f64 / 1e6
+                    ),
+                )),
         }
     }
 
@@ -460,5 +487,50 @@ mod tests {
         assert_eq!(num_of(find("dead"), "tid"), Some(2.0));
         assert_eq!(num_of(find("remap"), "tid"), Some(0.0), "controller lane");
         assert_eq!(num_of(find("degraded"), "tid"), Some(0.0));
+    }
+
+    /// The adaptive-plan events flow through both exporters: a
+    /// plan_switch instant on the controller lane and an estimate
+    /// counter track.
+    #[test]
+    fn plan_events_flow_through_both_exporters() {
+        let ms = Duration::from_millis;
+        let events = vec![
+            TracedEvent {
+                at: ms(2),
+                event: Event::EstimateUpdate {
+                    iter: 6,
+                    k_milli: 2500,
+                    delay_ns: 80_000_000,
+                    waste_ns_per_iter: 1_000_000,
+                },
+            },
+            TracedEvent {
+                at: ms(3),
+                event: Event::PlanSwitch { iter: 6, epoch: 1, scheme: "mds", rows: 15 },
+            },
+        ];
+        let txt = jsonl(&events);
+        for l in txt.lines() {
+            Json::parse(l).unwrap_or_else(|e| panic!("bad line {l}: {e}"));
+        }
+        assert!(txt.contains("\"ev\":\"estimate_update\""), "{txt}");
+        assert!(txt.contains("\"k_milli\":2500"), "{txt}");
+        assert!(txt.contains("\"ev\":\"plan_switch\""), "{txt}");
+        assert!(txt.contains("\"epoch\":1") && txt.contains("\"scheme\":\"mds\""), "{txt}");
+
+        let trace = chrome_trace(&events, 1);
+        let doc = Json::parse(&trace).expect("trace must be valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let switch = evs
+            .iter()
+            .find(|e| str_of(e, "name") == Some("plan_switch"))
+            .expect("plan_switch instant");
+        assert_eq!(num_of(switch, "tid"), Some(0.0), "controller lane");
+        assert!(
+            evs.iter()
+                .any(|e| str_of(e, "ph") == Some("C") && str_of(e, "name") == Some("estimate")),
+            "estimate counter track"
+        );
     }
 }

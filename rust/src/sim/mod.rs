@@ -32,8 +32,8 @@ pub mod transport;
 
 pub use clock::{real_clock, Clock, ClockRef, RealClock, VirtualClock};
 pub use sweep::{
-    grid_iter_stats, run_bandwidth_sweep, run_scale_study, run_sweep, simulated_total,
-    sweep_base, write_model_json, ModelSweepPoint, ScalePoint, ScaleStudyConfig, SweepCell,
-    SweepConfig,
+    grid_iter_stats, run_adaptive_sweep, run_bandwidth_sweep, run_scale_study, run_sweep,
+    simulated_total, sweep_base, write_adaptive_json, write_model_json, AdaptiveCell,
+    ModelSweepPoint, ScalePoint, ScaleStudyConfig, SweepCell, SweepConfig,
 };
 pub use transport::SimTransport;

@@ -1080,6 +1080,163 @@ pub fn write_fault_json(
     f.flush()
 }
 
+// ------------------------------------------------------------------
+// Adaptive-plan sweeps: obs-driven scheme switching + BENCH_adaptive.json
+// ------------------------------------------------------------------
+
+/// One starting scheme's outcome with the adaptive selector live:
+/// where the plan ended up, how many times it was rebuilt, and what
+/// the run cost. The axis answers the headline question of the
+/// adaptive layer — does the obs-driven selector move off a
+/// mis-provisioned scheme, and does the run stay sound while results
+/// encoded under old plans race the switch?
+pub struct AdaptiveCell {
+    /// Scheme the run was provisioned with (`cfg.scheme` at start).
+    pub start_scheme: Scheme,
+    /// Scheme the live plan held when the run finished.
+    pub final_scheme: Scheme,
+    /// Plan epoch at the end of the run — the number of plan installs.
+    /// Fault knobs are normally off in this axis, so every install is
+    /// an adaptive switch; with faults on it also counts remaps.
+    pub final_epoch: u16,
+    /// Exact summed training time over the non-warmup iterations.
+    pub total: Duration,
+    /// Mean per-iteration training time (derived, display only).
+    pub mean_iter: Duration,
+    /// Iterations averaged over (excludes warmup).
+    pub measured_iters: usize,
+    /// Wasted arrivals over the run — includes every cross-epoch
+    /// result that raced a plan switch (classified stale, never
+    /// decoded).
+    pub waste: WasteStats,
+    /// Wall-clock spent executing the cell (not simulated time).
+    pub wall: Duration,
+}
+
+/// Run one starting scheme with the adaptive selector forced on. The
+/// disturbance comes from the recorded trace when `base.trace` is set
+/// (the regime-shift proof), else from the synthetic injector with the
+/// sweep's delay.
+fn run_adaptive_cell(sweep: &SweepConfig, scheme: Scheme) -> Result<AdaptiveCell> {
+    let wall_t = std::time::Instant::now();
+    let mut cfg = sweep.base.clone();
+    cfg.scheme = scheme;
+    cfg.adaptive = true;
+    cfg.trace_out = None; // one trace file; adaptive cells never trace
+    if cfg.trace.is_none() {
+        cfg.straggler.delay = sweep.delay;
+    }
+    cfg.seed = derive_scheme_seed(sweep.base.seed, scheme);
+    let factory = backend_factory(&cfg, sweep.artifacts_dir.clone(), &sweep.spec);
+    let pool = spawn_pool(&cfg, factory)?;
+    let mut ctrl = Controller::new(cfg, sweep.spec.clone(), pool)
+        .with_context(|| format!("building adaptive cell for {scheme}"))?;
+    ctrl.train().with_context(|| format!("training adaptive cell {scheme}"))?;
+    let nw = mean_non_warmup(&ctrl.log);
+    let final_scheme = ctrl.current_scheme();
+    let final_epoch = ctrl.plan_epoch();
+    let waste = ctrl.waste_stats();
+    ctrl.shutdown();
+    Ok(AdaptiveCell {
+        start_scheme: scheme,
+        final_scheme,
+        final_epoch,
+        total: nw.total,
+        mean_iter: nw.mean_total(),
+        measured_iters: nw.iters,
+        waste,
+        wall: wall_t.elapsed(),
+    })
+}
+
+/// The adaptive axis: one cell per *starting* scheme, selector live in
+/// every cell. Serial — like the fault axis, its value is the
+/// per-scheme comparison, not throughput (and each cell's selector
+/// already decides from its own seeded stream, so serial execution
+/// costs nothing in determinism).
+pub fn run_adaptive_sweep(sweep: &SweepConfig) -> Result<Vec<AdaptiveCell>> {
+    sweep.schemes.iter().map(|&s| run_adaptive_cell(sweep, s)).collect()
+}
+
+/// Adaptive-sweep table: start → final scheme, plan installs, timing,
+/// waste.
+pub fn adaptive_table(cells: &[AdaptiveCell]) -> String {
+    let mut table = Table::new(&[
+        "start",
+        "final",
+        "switches",
+        "mean_iter",
+        "iters",
+        "wasted",
+        "wasted_compute",
+    ]);
+    for c in cells {
+        table.row(&[
+            c.start_scheme.name().to_string(),
+            c.final_scheme.name().to_string(),
+            c.final_epoch.to_string(),
+            format!("{:.1}ms", c.mean_iter.as_secs_f64() * 1e3),
+            c.measured_iters.to_string(),
+            c.waste.results.to_string(),
+            format!("{:.1}ms", c.waste.compute_secs() * 1e3),
+        ]);
+    }
+    table.render()
+}
+
+/// Machine-readable adaptive record (`BENCH_adaptive.json`): the
+/// estimator knobs and one cell per starting scheme with the final
+/// plan parameters and switch count — written by `sim-sweep` whenever
+/// `--adaptive` is set, and consumed by the CI smoke gate that asserts
+/// the selector actually moved on a regime-shifting trace.
+pub fn write_adaptive_json(
+    cells: &[AdaptiveCell],
+    base: &TrainConfig,
+    wall: Duration,
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"adaptive_sweep\",")?;
+    writeln!(f, "  \"wall_s\": {:.6},", wall.as_secs_f64())?;
+    writeln!(f, "  \"adapt_every\": {},", base.adapt_every)?;
+    writeln!(f, "  \"adapt_min_obs\": {},", base.adapt_min_obs)?;
+    writeln!(f, "  \"adapt_hysteresis\": {},", base.adapt_hysteresis)?;
+    match &base.trace {
+        Some(p) => writeln!(f, "  \"trace\": {},", json_str(&p.display().to_string()))?,
+        None => writeln!(f, "  \"trace\": null,")?,
+    }
+    writeln!(f, "  \"cells\": [")?;
+    for (i, c) in cells.iter().enumerate() {
+        let comma = if i + 1 == cells.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"start_scheme\": \"{}\", \"final_scheme\": \"{}\", \
+             \"plan_switches\": {}, \"switched\": {}, \"mean_iter_s\": {:.9}, \
+             \"total_s\": {:.9}, \"iters\": {}, \"wasted_results\": {}, \
+             \"wasted_bytes\": {}, \"wasted_compute_s\": {:.9}, \
+             \"wall_s\": {:.6}}}{comma}",
+            c.start_scheme.name(),
+            c.final_scheme.name(),
+            c.final_epoch,
+            c.final_epoch > 0,
+            c.mean_iter.as_secs_f64(),
+            c.total.as_secs_f64(),
+            c.measured_iters,
+            c.waste.results,
+            c.waste.bytes,
+            c.waste.compute_secs(),
+            c.wall.as_secs_f64(),
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    f.flush()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1657,5 +1814,115 @@ mod tests {
         assert_eq!(c.availability, 1.0);
         assert_eq!(c.iters_done, c.iters_target);
         assert!(c.stats.lost_results > 0, "crashes must be corroborated as losses");
+    }
+
+    /// The adaptive axis end to end on a hot measured trace: a run
+    /// provisioned with the uncoded scheme (tolerance 0) sees three
+    /// learners straggle 120 ms every round, so the obs-driven
+    /// selector must switch to a coded plan; the results encoded under
+    /// the abandoned plan are counted as waste (never decoded); and
+    /// BENCH_adaptive.json parses with the switch keys the CI smoke
+    /// gate asserts on.
+    #[test]
+    fn adaptive_sweep_switches_off_a_mis_provisioned_scheme_and_writes_json() {
+        let dir = std::env::temp_dir().join("coded_marl_adaptive_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A measured trace with a persistent hot set: columns 0-2 take
+        // 120 ms every round (the uncoded scheme's active learners),
+        // the rest are instant. Uniform across rounds, so the
+        // seed-offset replay cursor cannot change the regime.
+        let trace_path = dir.join("hot.csv");
+        let mut csv = String::from("t_s,l0,l1,l2,l3,l4,l5,l6\n");
+        for r in 0..8 {
+            csv.push_str(&format!("{}.0,120,120,120,0,0,0,0\n", r));
+        }
+        std::fs::write(&trace_path, csv).unwrap();
+
+        let mut adaptive_base = sweep_base("synthetic", 7, 12, Duration::from_millis(2), 9);
+        adaptive_base.episode_len = 5;
+        adaptive_base.trace = Some(trace_path);
+        let sweep = SweepConfig {
+            base: adaptive_base,
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Uncoded],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        };
+        let cells = run_adaptive_sweep(&sweep).unwrap();
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!(c.start_scheme, Scheme::Uncoded);
+        assert!(
+            c.final_epoch >= 1,
+            "the selector must install at least one new plan on a hot trace"
+        );
+        assert_ne!(
+            c.final_scheme,
+            Scheme::Uncoded,
+            "tolerance-0 provisioning must not survive 3 persistent stragglers"
+        );
+        assert_eq!(c.measured_iters, 12);
+
+        let txt = adaptive_table(&cells);
+        assert!(txt.contains("uncoded") && txt.contains("switches"), "{txt}");
+
+        let path = dir.join("BENCH_adaptive.json");
+        write_adaptive_json(&cells, &sweep.base, Duration::from_millis(7), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "adaptive_sweep");
+        assert_eq!(json.get("adapt_min_obs").unwrap().as_usize().unwrap(), 5);
+        let jcells = json.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(jcells.len(), 1);
+        let jc = &jcells[0];
+        assert_eq!(jc.get("start_scheme").unwrap().as_str().unwrap(), "uncoded");
+        assert!(jc.get("plan_switches").unwrap().as_usize().unwrap() >= 1);
+        assert_ne!(jc.get("final_scheme").unwrap().as_str().unwrap(), "uncoded");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite determinism pin: the ordinary sweep grid with the
+    /// adaptive selector live in every cell stays bit-identical between
+    /// the serial runner and the shard pool at any thread count — the
+    /// selector decides from its own seeded stream, never from
+    /// scheduling.
+    #[test]
+    fn adaptive_grid_is_bit_identical_across_sweep_threads() {
+        let sweep = |threads: usize| {
+            // enough measured iterations (10) that the selector clears
+            // its min-observation gate and can actually switch
+            let mut base = sweep_base("synthetic", 7, 10, Duration::from_millis(2), 9);
+            base.episode_len = 5;
+            base.adaptive = true;
+            base.sweep_threads = threads;
+            let cfg = SweepConfig {
+                base,
+                spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+                schemes: vec![Scheme::Uncoded, Scheme::Mds, Scheme::Ldpc],
+                ks: vec![0, 3],
+                delay: Duration::from_millis(40),
+                artifacts_dir: "artifacts".into(),
+            };
+            run_sweep(&cfg).unwrap()
+        };
+        let serial = sweep(1);
+        for threads in [2usize, 4] {
+            let parallel = sweep(threads);
+            assert_eq!(serial.len(), parallel.len());
+            for (a, b) in serial.iter().zip(parallel.iter()) {
+                assert_eq!(a.scheme, b.scheme, "threads={threads}");
+                assert_eq!(a.k, b.k, "threads={threads}");
+                assert_eq!(a.total, b.total, "threads={threads} {}/{}", a.scheme, a.k);
+                assert_eq!(a.wait, b.wait, "threads={threads} {}/{}", a.scheme, a.k);
+                assert_eq!(
+                    (a.waste.results, a.waste.bytes, a.waste.compute_ns),
+                    (b.waste.results, b.waste.bytes, b.waste.compute_ns),
+                    "threads={threads} {}/{}",
+                    a.scheme,
+                    a.k
+                );
+            }
+        }
     }
 }

@@ -372,6 +372,7 @@ impl SimTransport {
         &mut self,
         j: usize,
         iter: u64,
+        epoch: u16,
         row: Vec<f32>,
         body: &TaskBody,
         straggler_delay_ns: u64,
@@ -424,6 +425,7 @@ impl SimTransport {
             omitted,
             msg: LearnerMsg::Result {
                 iter,
+                epoch,
                 learner_id: j as u32,
                 y,
                 compute_ns: u64::try_from(compute.as_nanos()).unwrap_or(u64::MAX),
@@ -450,8 +452,8 @@ impl ControllerTransport for SimTransport {
 
     fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> Result<()> {
         match msg {
-            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => {
-                self.handle_task(learner, iter, row, &body, straggler_delay_ns)
+            CtrlMsg::Task { iter, epoch, row, body, straggler_delay_ns } => {
+                self.handle_task(learner, iter, epoch, row, &body, straggler_delay_ns)
             }
             CtrlMsg::Ack { iter } => {
                 self.handle_ack(learner, iter);
@@ -470,7 +472,7 @@ impl ControllerTransport for SimTransport {
                 // allocator, and its bytes/compute count as waste —
                 // the threaded learner would have burned them too
                 // before noticing the ack.
-                if let Some(Event { msg: LearnerMsg::Result { iter, learner_id, y, compute_ns }, .. }) =
+                if let Some(Event { msg: LearnerMsg::Result { iter, learner_id, y, compute_ns, .. }, .. }) =
                     self.events.pop()
                 {
                     let bytes = result_wire_len(y.len()) as u64;
@@ -502,7 +504,7 @@ impl ControllerTransport for SimTransport {
                 if !ev.net_out.is_zero() {
                     self.model.network.record_return(ev.net_out);
                 }
-                if let LearnerMsg::Result { iter, learner_id, y, compute_ns } = ev.msg {
+                if let LearnerMsg::Result { iter, learner_id, y, compute_ns, .. } = ev.msg {
                     let bytes = result_wire_len(y.len()) as u64;
                     self.waste.add(bytes, compute_ns);
                     self.tracer.record(|| ObsEvent::ResultCancelled {
@@ -625,6 +627,7 @@ mod tests {
         (
             CtrlMsg::Task {
                 iter,
+                epoch: 0,
                 row,
                 body: crate::transport::TaskBody::new(
                     Arc::new(params.clone()),
@@ -655,6 +658,24 @@ mod tests {
             let want = 2.0 * t0[k] - t2[k];
             assert!((y[k] - want).abs() < 1e-5, "k={k}: {} vs {want}", y[k]);
         }
+    }
+
+    /// Simulated learners echo the task's coding-plan epoch on the
+    /// result, exactly as the threaded/TCP learner loop does — the
+    /// controller's stale-epoch classification depends on it.
+    #[test]
+    fn result_echoes_the_task_epoch() {
+        let mut sim = SimTransport::new(1, dims(), Duration::ZERO);
+        let mut rng = Pcg32::seeded(40);
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        let CtrlMsg::Task { iter, row, body, straggler_delay_ns, .. } = msg else {
+            unreachable!()
+        };
+        sim.send_to(0, CtrlMsg::Task { iter, epoch: 5, row, body, straggler_delay_ns })
+            .unwrap();
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { epoch, .. } = got else { panic!() };
+        assert_eq!(epoch, 5, "the result must echo the task's plan epoch");
     }
 
     #[test]

@@ -123,6 +123,7 @@ mod tests {
                         CtrlMsg::Ack { iter } => {
                             ep.send(LearnerMsg::Result {
                                 iter,
+                                epoch: 0,
                                 learner_id: id as u32,
                                 y: vec![id as f32],
                                 compute_ns: 0,

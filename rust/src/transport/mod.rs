@@ -187,14 +187,17 @@ pub trait LearnerEndpoint {
     /// than moved it (in-process channels). The learner loop keeps the
     /// returned buffer as its accumulator for the next iteration, so a
     /// TCP worker's steady state allocates nothing per task.
+    /// `epoch` echoes the task's coding-plan epoch so the controller
+    /// can classify results computed under a superseded plan as stale.
     fn send_result(
         &mut self,
         iter: u64,
+        epoch: u16,
         learner_id: u32,
         y: Vec<f32>,
         compute_ns: u64,
     ) -> Result<Option<Vec<f32>>> {
-        self.send(LearnerMsg::Result { iter, learner_id, y, compute_ns })?;
+        self.send(LearnerMsg::Result { iter, epoch, learner_id, y, compute_ns })?;
         Ok(None)
     }
 }

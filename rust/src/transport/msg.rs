@@ -10,10 +10,16 @@
 //!
 //! ```text
 //! Task payload := header | body
-//! header       := u8 tag | u64 iter | u64 delay_ns | f32_slice row
+//! header       := u8 tag | u64 seq | u64 delay_ns | f32_slice row
 //!                 | u32 body_len
 //! body         := u32 M | f32_slice θ × M | minibatch
+//! seq          := (epoch << 48) | iter
 //! ```
+//!
+//! The `seq` word packs the coding-plan **epoch** (high 16 bits) with
+//! the iteration counter (low 48 bits) so a result encoded under plan
+//! e can never be combined under plan e+1 — without growing the frame:
+//! at epoch 0 every frame is byte-identical to the pre-epoch format.
 //!
 //! The shared [`TaskBody`] memoizes its body bytes (`Arc<[u8]>`,
 //! encoded at most once per iteration); [`CtrlMsg::write_framed`]
@@ -119,6 +125,13 @@ pub enum CtrlMsg {
     /// broadcast-shared [`TaskBody`] (Alg. 1 line 9).
     Task {
         iter: u64,
+        /// The coding-plan epoch this task was encoded under. Learners
+        /// echo it back on the Result so the controller can classify
+        /// cross-epoch arrivals as stale instead of combining them
+        /// under the wrong assignment matrix. Packed into the high 16
+        /// bits of the wire `seq` word (epoch 0 frames are
+        /// byte-identical to the pre-epoch format).
+        epoch: u16,
         /// This learner's row of the assignment matrix `C` (length M;
         /// entry i is `c_{j,i}`). Shipping the row with the task keeps
         /// learners stateless w.r.t. the coding scheme, so one pool can
@@ -150,6 +163,9 @@ pub enum LearnerMsg {
     /// (Alg. 1 line 26) plus timing telemetry.
     Result {
         iter: u64,
+        /// Echo of the task's coding-plan epoch: the controller only
+        /// combines results whose epoch matches the live plan.
+        epoch: u16,
         learner_id: u32,
         y: Vec<f32>,
         /// Pure compute time (excludes the injected straggler delay).
@@ -169,6 +185,22 @@ pub fn task_header_wire_len(m: usize) -> usize {
 /// compute_ns + y (u32 count + f32 data).
 pub fn result_wire_len(p: usize) -> usize {
     1 + 8 + 4 + 8 + (4 + 4 * p)
+}
+
+/// Iterations occupy the low 48 bits of the wire `seq` word; the plan
+/// epoch rides in the high 16. 2⁴⁸ iterations is ~9 years at 1 µs per
+/// iteration — the cap is never the binding constraint.
+const ITER_MASK: u64 = (1 << 48) - 1;
+
+/// Pack a plan epoch and iteration into one wire word.
+pub fn pack_seq(epoch: u16, iter: u64) -> u64 {
+    debug_assert!(iter <= ITER_MASK, "iteration counter overflowed 48 bits");
+    ((epoch as u64) << 48) | (iter & ITER_MASK)
+}
+
+/// Split a wire `seq` word back into (epoch, iter).
+pub fn unpack_seq(seq: u64) -> (u16, u64) {
+    ((seq >> 48) as u16, seq & ITER_MASK)
 }
 
 const TAG_TASK: u8 = 1;
@@ -221,10 +253,10 @@ impl CtrlMsg {
     /// The per-learner header of a Task frame (everything except the
     /// shared body bytes). `body_len` is the length of the body that
     /// will follow in the same frame.
-    fn encode_task_header(iter: u64, row: &[f32], delay_ns: u64, body_len: usize) -> WireWriter {
+    fn encode_task_header(seq: u64, row: &[f32], delay_ns: u64, body_len: usize) -> WireWriter {
         let mut w = WireWriter::new();
         w.u8(TAG_TASK);
-        w.u64(iter);
+        w.u64(seq);
         w.u64(delay_ns);
         w.f32_slice(row);
         w.u32(body_len as u32);
@@ -237,10 +269,11 @@ impl CtrlMsg {
     /// concatenation.
     pub fn encode(&self) -> WireWriter {
         match self {
-            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => {
+            CtrlMsg::Task { iter, epoch, row, body, straggler_delay_ns } => {
                 let bytes = body.wire_bytes();
+                let seq = pack_seq(*epoch, *iter);
                 let mut w =
-                    Self::encode_task_header(*iter, row, *straggler_delay_ns, bytes.len());
+                    Self::encode_task_header(seq, row, *straggler_delay_ns, bytes.len());
                 w.buf.extend_from_slice(&bytes);
                 w
             }
@@ -270,9 +303,9 @@ impl CtrlMsg {
     /// header-only, independent of the body size and of N.
     pub fn write_framed(&self, out: &mut impl std::io::Write) -> Result<()> {
         match self {
-            CtrlMsg::Task { iter, row, body, straggler_delay_ns } => {
+            CtrlMsg::Task { iter, epoch, row, body, straggler_delay_ns } => {
                 let bytes = body.wire_bytes();
-                Self::encode_task_header(*iter, row, *straggler_delay_ns, bytes.len())
+                Self::encode_task_header(pack_seq(*epoch, *iter), row, *straggler_delay_ns, bytes.len())
                     .write_frame_with_tail(out, &bytes)
             }
             _ => self.encode().write_frame(out),
@@ -283,7 +316,7 @@ impl CtrlMsg {
         let mut r = WireReader::new(payload);
         let msg = match r.u8()? {
             TAG_TASK => {
-                let iter = r.u64()?;
+                let (epoch, iter) = unpack_seq(r.u64()?);
                 let straggler_delay_ns = r.u64()?;
                 let row = r.f32_vec()?;
                 let body_len = r.u32()? as usize;
@@ -297,7 +330,7 @@ impl CtrlMsg {
                 if row.len() != body.agent_params.len() {
                     bail!("wire: assignment row length != M");
                 }
-                CtrlMsg::Task { iter, row, body: Arc::new(body), straggler_delay_ns }
+                CtrlMsg::Task { iter, epoch, row, body: Arc::new(body), straggler_delay_ns }
             }
             TAG_ACK => CtrlMsg::Ack { iter: r.u64()? },
             TAG_SHUTDOWN => CtrlMsg::Shutdown,
@@ -319,9 +352,9 @@ impl LearnerMsg {
                 w.u8(TAG_HELLO);
                 w.u32(*learner_id);
             }
-            LearnerMsg::Result { iter, learner_id, y, compute_ns } => {
+            LearnerMsg::Result { iter, epoch, learner_id, y, compute_ns } => {
                 w.u8(TAG_RESULT);
-                w.u64(*iter);
+                w.u64(pack_seq(*epoch, *iter));
                 w.u32(*learner_id);
                 w.u64(*compute_ns);
                 w.f32_slice(y);
@@ -334,12 +367,16 @@ impl LearnerMsg {
         let mut r = WireReader::new(payload);
         let msg = match r.u8()? {
             TAG_HELLO => LearnerMsg::Hello { learner_id: r.u32()? },
-            TAG_RESULT => LearnerMsg::Result {
-                iter: r.u64()?,
-                learner_id: r.u32()?,
-                compute_ns: r.u64()?,
-                y: r.f32_vec()?,
-            },
+            TAG_RESULT => {
+                let (epoch, iter) = unpack_seq(r.u64()?);
+                LearnerMsg::Result {
+                    iter,
+                    epoch,
+                    learner_id: r.u32()?,
+                    compute_ns: r.u64()?,
+                    y: r.f32_vec()?,
+                }
+            }
             t => bail!("wire: unknown LearnerMsg tag {t}"),
         };
         if !r.finished() {
@@ -371,6 +408,7 @@ mod tests {
     fn task_msg() -> CtrlMsg {
         CtrlMsg::Task {
             iter: 42,
+            epoch: 0,
             row: vec![1.0, 0.0, -0.5],
             body: TaskBody::new(
                 Arc::new(vec![vec![1.0; 7], vec![2.0; 7], vec![3.0; 7]]),
@@ -419,10 +457,11 @@ mod tests {
         let full = msg.encode().buf.len();
         assert_eq!(task_header_wire_len(row.len()) + body.wire_len(), full);
         let result =
-            LearnerMsg::Result { iter: 3, learner_id: 1, y: vec![0.5; 321], compute_ns: 7 };
+            LearnerMsg::Result { iter: 3, epoch: 2, learner_id: 1, y: vec![0.5; 321], compute_ns: 7 };
         assert_eq!(result_wire_len(321), result.encode().buf.len());
         // degenerate sizes
-        let empty = LearnerMsg::Result { iter: 0, learner_id: 0, y: vec![], compute_ns: 0 };
+        let empty =
+            LearnerMsg::Result { iter: 0, epoch: 0, learner_id: 0, y: vec![], compute_ns: 0 };
         assert_eq!(result_wire_len(0), empty.encode().buf.len());
     }
 
@@ -437,10 +476,57 @@ mod tests {
     fn learner_msgs_roundtrip() {
         for msg in [
             LearnerMsg::Hello { learner_id: 5 },
-            LearnerMsg::Result { iter: 9, learner_id: 3, y: vec![0.25; 100], compute_ns: 12345 },
+            LearnerMsg::Result {
+                iter: 9,
+                epoch: 0,
+                learner_id: 3,
+                y: vec![0.25; 100],
+                compute_ns: 12345,
+            },
+            LearnerMsg::Result {
+                iter: 9,
+                epoch: u16::MAX,
+                learner_id: 3,
+                y: vec![0.25; 4],
+                compute_ns: 1,
+            },
         ] {
             assert_eq!(LearnerMsg::decode(&msg.encode().buf).unwrap(), msg);
         }
+    }
+
+    /// The epoch rides in the high 16 bits of the existing seq word:
+    /// epoch-0 frames must be byte-identical to the pre-epoch format
+    /// (the `--adaptive`-off bit-compatibility guarantee), and nonzero
+    /// epochs must roundtrip through both Task and Result frames
+    /// without perturbing any neighboring field.
+    #[test]
+    fn epoch_packs_into_seq_word_without_growing_frames() {
+        assert_eq!(pack_seq(0, 42), 42);
+        assert_eq!(pack_seq(3, 42), (3u64 << 48) | 42);
+        assert_eq!(unpack_seq(pack_seq(u16::MAX, ITER_MASK)), (u16::MAX, ITER_MASK));
+        // epoch 0: the seq word on the wire IS the plain iteration
+        let msg = task_msg();
+        let buf = msg.encode().buf;
+        assert_eq!(u64::from_le_bytes(buf[1..9].try_into().unwrap()), 42);
+        // nonzero epoch: same frame length, only the high bits differ
+        let CtrlMsg::Task { iter, row, body, straggler_delay_ns, .. } = msg else {
+            unreachable!()
+        };
+        let epochal = CtrlMsg::Task { iter, epoch: 7, row, body, straggler_delay_ns };
+        let buf7 = epochal.encode().buf;
+        assert_eq!(buf.len(), buf7.len(), "epoch must not change the wire length");
+        assert_eq!(u64::from_le_bytes(buf7[1..9].try_into().unwrap()), (7u64 << 48) | 42);
+        assert_eq!(&buf[9..], &buf7[9..], "only the seq word may differ");
+        assert_eq!(CtrlMsg::decode(&buf7).unwrap(), epochal);
+        // Result frames: epoch 0 leaves the legacy bytes, epoch e packs high
+        let r0 = LearnerMsg::Result { iter: 9, epoch: 0, learner_id: 3, y: vec![1.0], compute_ns: 5 };
+        let re = LearnerMsg::Result { iter: 9, epoch: 9, learner_id: 3, y: vec![1.0], compute_ns: 5 };
+        let (b0, be) = (r0.encode().buf, re.encode().buf);
+        assert_eq!(b0.len(), be.len());
+        assert_eq!(u64::from_le_bytes(b0[1..9].try_into().unwrap()), 9);
+        assert_eq!(u64::from_le_bytes(be[1..9].try_into().unwrap()), (9u64 << 48) | 9);
+        assert_eq!(LearnerMsg::decode(&be).unwrap(), re);
     }
 
     #[test]
@@ -453,6 +539,7 @@ mod tests {
         // inconsistent minibatch dims
         let msg = CtrlMsg::Task {
             iter: 1,
+            epoch: 0,
             row: vec![],
             body: TaskBody::new(
                 Arc::new(vec![]),
@@ -495,6 +582,7 @@ mod tests {
             };
             let msg = CtrlMsg::Task {
                 iter: g.usize_in(0, 1 << 20) as u64,
+                epoch: g.usize_in(0, 5) as u16,
                 row: g.f32_vec(m, 1.0),
                 body: TaskBody::new(Arc::new(params), Arc::new(mb)),
                 straggler_delay_ns: g.usize_in(0, 1 << 30) as u64,

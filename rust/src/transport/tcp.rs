@@ -412,13 +412,14 @@ impl LearnerEndpoint for TcpLearner {
     fn send_result(
         &mut self,
         iter: u64,
+        epoch: u16,
         learner_id: u32,
         y: Vec<f32>,
         compute_ns: u64,
     ) -> Result<Option<Vec<f32>>> {
         // The socket path only serializes `y` — hand the buffer back so
         // the learner loop reuses it as next iteration's accumulator.
-        let msg = LearnerMsg::Result { iter, learner_id, y, compute_ns };
+        let msg = LearnerMsg::Result { iter, epoch, learner_id, y, compute_ns };
         msg.encode().write_frame(&mut self.stream)?;
         let LearnerMsg::Result { y, .. } = msg else { unreachable!() };
         Ok(Some(y))
@@ -446,6 +447,7 @@ mod tests {
                         CtrlMsg::Ack { iter } => {
                             lp.send(LearnerMsg::Result {
                                 iter,
+                                epoch: 0,
                                 learner_id: lp.learner_id,
                                 y: vec![lp.learner_id as f32; 8],
                                 compute_ns: 1,
@@ -560,6 +562,7 @@ mod tests {
                     Ok(CtrlMsg::Ack { iter }) => lp
                         .send(LearnerMsg::Result {
                             iter,
+                            epoch: 0,
                             learner_id: lp.learner_id,
                             y: vec![1.0; 4],
                             compute_ns: 1,

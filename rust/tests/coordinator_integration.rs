@@ -294,34 +294,44 @@ fn checkpoint_roundtrip_through_controller() {
 /// steers away from MDS, a stormy pool steers toward it.
 #[test]
 fn adaptive_selector_integrates_with_training_telemetry() {
-    use coded_marl::coordinator::adaptive::{AdaptiveSelector, StragglerStats};
+    use coded_marl::coordinator::adaptive::AdaptiveSelector;
+    use coded_marl::obs::{Attribution, WasteStats};
     let spec = spec();
     let compute = Duration::from_millis(2);
-    let run = |scheme: Scheme, k: usize, delay_ms: u64| -> StragglerStats {
-        let mut cfg = mock_cfg(scheme, 6, 71);
+    let run = |scheme: Scheme, k: usize, delay_ms: u64, incumbent: Scheme| {
+        let mut cfg = mock_cfg(scheme, 8, 71);
         cfg.straggler = StragglerConfig::fixed(k, Duration::from_millis(delay_ms));
         let (_, log) = train_coded(&cfg, &spec);
-        let mut stats = StragglerStats::new(0.4);
+        // Replay the run's telemetry into a fresh selector, exactly as
+        // the controller feeds its own: observed stragglers + the wait
+        // phase beyond the no-straggler baseline, plus the (here
+        // neutral) obs accumulators.
+        let mut sel = AdaptiveSelector::new(7, 4, 0.8, 0);
+        let attr = Attribution::new(7);
+        let waste = WasteStats::default();
+        let mut last = None;
         for r in log.records.iter().filter(|r| r.decode_method != "warmup") {
-            // telemetry: observed stragglers + how long the wait phase
-            // exceeded the no-straggler baseline
-            stats.observe(r.stragglers.len(), r.timing.wait.saturating_sub(compute * 2));
-            let _ = r;
+            sel.observe(
+                r.stragglers.len(),
+                r.timing.wait.saturating_sub(compute * 2),
+                0,
+                &attr,
+                &waste,
+            );
+            if let Some(rec) = sel.recommend(compute, incumbent) {
+                last = Some(rec);
+            }
         }
-        stats
+        last.expect("enough post-warmup iterations to clear min_observations")
     };
     // Telemetry is gathered under the scheme actually running: delays
     // are only *observable* when they stall you, so the stormy stats
     // come from an uncoded run (which any straggler stalls). k=2 is
     // inside MDS's tolerance (N-M=3), so the selector should move to a
     // dense code.
-    let quiet = run(Scheme::Mds, 0, 0);
-    let stormy = run(Scheme::Uncoded, 2, 120);
-    let mut sel = AdaptiveSelector::new(7, 4, 0.8, 0);
-    let rec_q = sel.recommend(&quiet, compute, Scheme::Mds).unwrap();
+    let rec_q = run(Scheme::Mds, 0, 0, Scheme::Mds);
     assert_ne!(rec_q.scheme, Scheme::Mds, "quiet pool should leave MDS");
-    let mut sel = AdaptiveSelector::new(7, 4, 0.8, 0);
-    let rec_s = sel.recommend(&stormy, compute, Scheme::Uncoded).unwrap();
+    let rec_s = run(Scheme::Uncoded, 2, 120, Scheme::Uncoded);
     assert!(
         matches!(rec_s.scheme, Scheme::Mds | Scheme::RandomSparse),
         "stormy pool should pick a dense code, got {}",
@@ -398,6 +408,7 @@ fn untasked_learner_reply_is_dropped() {
     // iteration 0 is warmup (no learner round); iteration 1 collects.
     let result = |learner_id: u32| LearnerMsg::Result {
         iter: 1,
+        epoch: 0,
         learner_id,
         y: vec![0.0f32; p],
         compute_ns: 1_000,
@@ -428,6 +439,7 @@ fn malformed_length_reply_is_dropped() {
     cfg.collect_timeout = Duration::from_millis(500);
     let result = |learner_id: u32, len: usize| LearnerMsg::Result {
         iter: 1,
+        epoch: 0,
         learner_id,
         y: vec![0.0f32; len],
         compute_ns: 1_000,
@@ -446,6 +458,43 @@ fn malformed_length_reply_is_dropped() {
     ctrl.train().expect("a malformed reply must be an erasure, not a crash");
     let rec = ctrl.log.records.last().unwrap();
     assert_eq!(rec.results_used, 4, "only well-formed replies may count toward recovery");
+    ctrl.shutdown();
+}
+
+/// Tentpole pin: a result stamped with a plan epoch other than the live
+/// one must be classified stale — charged to [`WasteStats`], never
+/// admitted into the decode — even when its iteration, learner id and
+/// length are all valid. Before the epoch wire a reply computed under a
+/// superseded assignment matrix was silently combined under the new
+/// one, corrupting θ'.
+#[test]
+fn cross_epoch_result_is_wasted_never_decoded() {
+    use coded_marl::transport::LearnerMsg;
+    let spec = spec();
+    let p = spec.dims.agent_param_dim();
+    let mut cfg = mock_cfg(Scheme::Uncoded, 2, 47);
+    cfg.collect_timeout = Duration::from_millis(500);
+    let result = |learner_id: u32, epoch: u16| LearnerMsg::Result {
+        iter: 1,
+        epoch,
+        learner_id,
+        y: vec![0.0f32; p],
+        compute_ns: 1_000,
+    };
+    // learner 0's first reply claims epoch 3 (a plan this controller
+    // never installed — the live plan is epoch 0); a current-epoch
+    // retry and the other three tasked learners follow.
+    let script: Vec<LearnerMsg> =
+        vec![result(0, 3), result(0, 0), result(1, 0), result(2, 0), result(3, 0)];
+    let transport = ScriptedTransport { n: cfg.n_learners, script: script.into_iter().collect() };
+    let mut ctrl = Controller::new(cfg, spec, transport).unwrap();
+    ctrl.train().expect("a cross-epoch reply must be an erasure, not a crash");
+    let rec = ctrl.log.records.last().unwrap();
+    assert_eq!(rec.results_used, 4, "the stale-epoch reply must not count toward recovery");
+    let waste = ctrl.waste_stats();
+    assert_eq!(waste.results, 1, "the stale-epoch reply's work is wasted exactly once");
+    assert_eq!(waste.compute_ns, 1_000);
+    assert_eq!(ctrl.plan_epoch(), 0, "no successor plan was ever installed");
     ctrl.shutdown();
 }
 

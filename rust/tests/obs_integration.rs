@@ -155,6 +155,52 @@ fn trace_file_has_per_learner_lanes_and_iter_spans() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The zero-cost contract extends to the adaptive plan layer: a traced
+/// adaptive run — selector live, plans switching mid-run — replays
+/// bit-identical parameters, timing, and plan trajectory vs its
+/// untraced twin (the selector decides from its own seeded stream,
+/// never from the tracer), and the switches show up as `plan_switch` /
+/// `estimate_update` events in the trace.
+#[test]
+fn tracing_does_not_perturb_an_adaptive_run() {
+    let dir = std::env::temp_dir().join("coded_marl_obs_adaptive_bitident");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("run.trace.json");
+    // Uncoded (tolerance 0) under 2 × 100 ms stragglers: the selector
+    // must move to a coded plan once its observation gate clears.
+    let adaptive = |trace_out: Option<std::path::PathBuf>| {
+        let mut c = cfg(42, trace_out);
+        c.scheme = Scheme::Uncoded;
+        c.adaptive = true;
+        c.iterations = 10;
+        c
+    };
+    let plain = train(&adaptive(None));
+    let traced = train(&adaptive(Some(trace.clone())));
+    assert_eq!(
+        max_param_diff(&plain.agents, &traced.agents),
+        0.0,
+        "tracing must not perturb an adaptive run's parameters"
+    );
+    assert_eq!(plain.log.len(), traced.log.len());
+    for (x, y) in plain.log.records.iter().zip(traced.log.records.iter()) {
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "iter {}", x.iter);
+        assert_eq!(x.timing.total, y.timing.total, "iter {}: total diverged", x.iter);
+        assert_eq!(x.timing.wait, y.timing.wait, "iter {}: wait diverged", x.iter);
+        assert_eq!(x.decode_method, y.decode_method, "iter {}", x.iter);
+    }
+    assert_eq!(plain.waste, traced.waste);
+    // the plan trajectory is part of the run, so both twins must have
+    // switched identically — and the traced one records it
+    let jsonl = std::fs::read_to_string(trace.with_extension("jsonl")).expect("jsonl twin");
+    assert!(
+        jsonl.contains("\"ev\":\"plan_switch\""),
+        "a tolerance-0 plan under persistent stragglers must switch"
+    );
+    assert!(jsonl.contains("\"ev\":\"estimate_update\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Straggler attribution and wasted-work accounting over a run where
 /// MDS masks 2 injected stragglers every iteration: their late results
 /// are pure waste, every used arrival beats the injected delay, and

@@ -85,6 +85,7 @@ fn tcp_workers_answer_tasks() {
             j,
             CtrlMsg::Task {
                 iter: 1,
+                epoch: 0,
                 row,
                 body: std::sync::Arc::clone(&body),
                 straggler_delay_ns: 0,
