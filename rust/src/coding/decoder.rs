@@ -87,6 +87,42 @@ pub struct DecodeOutput {
     pub method: &'static str,
 }
 
+/// Relative tolerance of the verified decode's residual parity check.
+/// Clean f32 decodes at repo scale leave relative residuals below
+/// ~1e-3 even on ill-conditioned MDS submatrices, while every injected
+/// corruption mode perturbs at least one element by ≥ 2.0 absolute —
+/// this sits well clear of both (plus a small absolute floor for
+/// near-zero rows).
+const VERIFY_REL_TOL: f64 = 5e-3;
+const VERIFY_ABS_TOL: f64 = 1e-4;
+
+/// Largest error count the combinatorial locator will try. The code's
+/// budget `2e ≤ |I| − M` still applies on top; this only bounds the
+/// leave-k-out search (C(|I|, 2) candidate decodes at worst).
+const VERIFY_MAX_ERRORS: usize = 2;
+
+/// What [`Decoder::decode_verified`] observed beyond the decode itself.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyOutcome {
+    /// Rows received beyond the decodable prefix — the redundancy that
+    /// powered the parity check (0 = nothing to verify against).
+    pub surplus: usize,
+    /// The first-pass residual check failed (a corrupted row reached
+    /// the decoder).
+    pub check_failed: bool,
+    /// Indices **into `received`** of rows rejected as corrupt; the
+    /// returned Θ̂ was decoded without them. Empty when the check
+    /// passed (or failed unresolved).
+    pub rejected: Vec<usize>,
+    /// Candidate decodes the error locator ran (leave-k-out).
+    pub locate_decodes: u32,
+    /// The check failed but no exclusion within the correction budget
+    /// explains the misfit (more corruptions than `2e ≤ |I| − M`
+    /// allows, or an undecodable remainder). The returned Θ̂ is the
+    /// unverified prefix decode — the caller decides how to degrade.
+    pub unresolved: bool,
+}
+
 /// Hit/miss telemetry of the decode-plan cache.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PlanCacheStats {
@@ -337,6 +373,158 @@ impl Decoder {
         Ok(w)
     }
 
+    /// Byzantine-robust decode (`--verify-decode`): recover Θ̂ exactly
+    /// as the unverified path would, then spend the redundancy beyond
+    /// rank M as a **residual parity check** instead of discarding it.
+    ///
+    /// The decode runs over the *shortest decodable prefix* of
+    /// `received` — precisely the set an unverified collect loop stops
+    /// at — so on a clean run the recovered Θ̂ is bit-identical to the
+    /// unverified decode, plan cache included. Every received row `j`
+    /// is then checked against `‖y_j − Σ_i c_{j,i}·θ̂_i‖_∞` (surplus
+    /// rows are true parity checks; prefix rows of a square solve fit
+    /// by construction and cost only the residual pass).
+    ///
+    /// On a check failure the error-locating decode runs: leave-k-out
+    /// over the received rows for k = 1, then 2, within the code's
+    /// correction budget `2e ≤ |I| − M` (e errors need e exclusions
+    /// *and* e surviving surplus rows to re-check against — exactly
+    /// the classical `2e + s ≤ N − M` with the stragglers s already
+    /// excluded from `|I|`). A candidate exclusion wins when the
+    /// remainder re-decodes and every remaining row passes the
+    /// residual check; a corrupted row left in any remainder keeps
+    /// failing it, so the true exclusion is generically the unique
+    /// survivor. Ambiguity or an over-budget pattern comes back as
+    /// [`VerifyOutcome::unresolved`] with the (unvalidated) prefix
+    /// decode, and the caller chooses how to degrade.
+    ///
+    /// There is deliberately **no** "trust the prefix, reject the
+    /// failing rows" shortcut: a corruption absorbed by a square
+    /// prefix solve makes exactly the *honest* corroborating rows
+    /// fail the check (replication is the textbook case), so every
+    /// rejection must come from a self-consistent re-decode. When the
+    /// corruption really is beyond the prefix, the winning exclusion
+    /// re-decodes the identical prefix set — same plan-cache key —
+    /// so Θ̂ is still bit-identical to the clean run's.
+    pub fn decode_verified(
+        &self,
+        received: &[usize],
+        results: &[Vec<f32>],
+        method: DecodeMethod,
+    ) -> Result<(DecodeOutput, VerifyOutcome)> {
+        if received.len() != results.len() {
+            bail!("received/results length mismatch: {} vs {}", received.len(), results.len());
+        }
+        let prefix = self.decodable_prefix(received)?;
+        let out = self.decode(&received[..prefix], &results[..prefix], method)?;
+        let mut outcome = VerifyOutcome {
+            surplus: received.len() - prefix,
+            ..VerifyOutcome::default()
+        };
+        let bad = self.residual_check(received, results, &out.theta);
+        if bad.is_empty() {
+            return Ok((out, outcome));
+        }
+        outcome.check_failed = true;
+        drop(bad); // which rows misfit is diagnostic, not attribution
+        let e_max = ((received.len() - self.code.m) / 2).min(VERIFY_MAX_ERRORS);
+        // Error-locating decode: smallest error count first; the unique
+        // self-consistent exclusion at that count wins.
+        for e in 1..=e_max {
+            let mut survivor: Option<(Vec<usize>, DecodeOutput)> = None;
+            let mut ambiguous = false;
+            for cand in combinations(received.len(), e) {
+                let keep: Vec<usize> =
+                    (0..received.len()).filter(|r| !cand.contains(r)).collect();
+                let sub_received: Vec<usize> = keep.iter().map(|&r| received[r]).collect();
+                let Ok(sub_prefix) = self.decodable_prefix(&sub_received) else {
+                    continue; // this exclusion breaks decodability
+                };
+                let sub_results: Vec<Vec<f32>> =
+                    keep.iter().map(|&r| results[r].clone()).collect();
+                let Ok(cand_out) =
+                    self.decode(&sub_received[..sub_prefix], &sub_results[..sub_prefix], method)
+                else {
+                    continue;
+                };
+                outcome.locate_decodes += 1;
+                if self.residual_check(&sub_received, &sub_results, &cand_out.theta).is_empty() {
+                    if survivor.is_some() {
+                        // Two different exclusions both self-consistent:
+                        // attribution would be a guess, not an identification.
+                        self.recycle(cand_out.theta);
+                        ambiguous = true;
+                        break;
+                    }
+                    survivor = Some((cand, cand_out));
+                } else {
+                    self.recycle(cand_out.theta);
+                }
+            }
+            if ambiguous {
+                if let Some((_, s)) = survivor {
+                    self.recycle(s.theta);
+                }
+                break;
+            }
+            if let Some((cand, cand_out)) = survivor {
+                outcome.rejected = cand;
+                self.recycle(out.theta);
+                return Ok((cand_out, outcome));
+            }
+        }
+        outcome.unresolved = true;
+        Ok((out, outcome))
+    }
+
+    /// Length of the shortest decodable prefix of `received` — the set
+    /// the unverified collect loop would have stopped (and decoded) at.
+    fn decodable_prefix(&self, received: &[usize]) -> Result<usize> {
+        for k in self.code.m.min(received.len())..=received.len() {
+            if self.code.decodable(&received[..k]) {
+                return Ok(k);
+            }
+        }
+        bail!(
+            "not decodable: |I|={} rank(C_I)<M={} (scheme {})",
+            received.len(),
+            self.code.m,
+            self.code.scheme
+        );
+    }
+
+    /// Indices into `received` whose rows misfit Θ̂:
+    /// `‖y_j − Σ_i c_{j,i}·θ̂_i‖_∞` beyond a tolerance scaled to the
+    /// row's own magnitude (`VERIFY_REL_TOL` relative + absolute
+    /// floor). Read-only; residual buffers come from the pool.
+    fn residual_check(
+        &self,
+        received: &[usize],
+        results: &[Vec<f32>],
+        theta: &[Vec<f32>],
+    ) -> Vec<usize> {
+        let theta_max: Vec<f64> = theta
+            .iter()
+            .map(|t| t.iter().fold(0.0f64, |acc, &v| acc.max(v.abs() as f64)))
+            .collect();
+        let mut bad = Vec::new();
+        for (r, &j) in received.iter().enumerate() {
+            let mut scale =
+                results[r].iter().fold(0.0f64, |acc, &v| acc.max(v.abs() as f64));
+            let mut res = self.pool.take_copy(&results[r]);
+            for &(i, c) in self.code.assignments(j) {
+                kernels::axpy(&mut res, -(c as f32), &theta[i]);
+                scale += c.abs() * theta_max[i];
+            }
+            let worst = res.iter().fold(0.0f64, |acc, &v| acc.max(v.abs() as f64));
+            self.pool.put(res);
+            if worst > VERIFY_REL_TOL * scale + VERIFY_ABS_TOL {
+                bad.push(r);
+            }
+        }
+        bad
+    }
+
     /// Bitset key over learner ids; None when `received` contains an
     /// out-of-range or duplicate id (duplicates fall through to a
     /// direct, uncached solve — sets cannot carry multiplicity).
@@ -354,6 +542,24 @@ impl Decoder {
             bits[w] |= 1 << b;
         }
         Some(PlanKey { path, bits })
+    }
+}
+
+/// Size-`e` index combinations of `0..n`, ascending — the candidate
+/// exclusion sets of the error locator (`e` ≤ [`VERIFY_MAX_ERRORS`]).
+fn combinations(n: usize, e: usize) -> Vec<Vec<usize>> {
+    match e {
+        1 => (0..n).map(|r| vec![r]).collect(),
+        2 => {
+            let mut out = Vec::with_capacity(n * (n.saturating_sub(1)) / 2);
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    out.push(vec![a, b]);
+                }
+            }
+            out
+        }
+        _ => Vec::new(),
     }
 }
 
@@ -975,6 +1181,157 @@ mod tests {
         let y_l = encode(&ldpc, &theta, &all);
         let out = dec.decode(&all, &y_l, DecodeMethod::Auto).unwrap();
         assert_eq!(out.method, "peeling", "rebind must refresh the binary structure");
+    }
+
+    /// Satellite guarantee (decoder half): on a **clean** run, verified
+    /// decode never rejects a row, never trips the parity check, and
+    /// recovers Θ̂ bit-identical to what the unverified path decodes
+    /// (the shortest decodable prefix) — for every scheme, size, and
+    /// received pattern.
+    #[test]
+    fn property_verified_decode_is_inert_on_clean_results() {
+        forall("clean verified decode", 60, |g| {
+            let scheme = *g.choice(&Scheme::ALL);
+            let m = g.usize_in(2, 8);
+            let n = m + g.usize_in(0, 7);
+            let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: g.case_seed });
+            let dec = Decoder::new(code.clone());
+            let fresh = Decoder::new(code.clone());
+            let theta = random_theta(g.rng(), m, 31);
+            let sz = g.usize_in(m, n);
+            let received = g.subset(n, sz);
+            let results = encode(&code, &theta, &received);
+            match dec.decode_verified(&received, &results, DecodeMethod::Auto) {
+                Ok((out, v)) => {
+                    assert!(!v.check_failed, "scheme={scheme} clean run tripped the check");
+                    assert!(v.rejected.is_empty() && !v.unresolved && v.locate_decodes == 0);
+                    let prefix = received.len() - v.surplus;
+                    let reference = fresh
+                        .decode(&received[..prefix], &results[..prefix], DecodeMethod::Auto)
+                        .expect("prefix must decode");
+                    assert!(
+                        bits_equal(&out.theta, &reference.theta),
+                        "scheme={scheme} verified decode diverged from the unverified prefix"
+                    );
+                }
+                Err(_) => assert!(!code.decodable(&received), "decodable pattern failed"),
+            }
+        });
+    }
+
+    /// A corrupted row *beyond* the decodable prefix: the winning
+    /// exclusion re-decodes the identical prefix set, so Θ̂ stays
+    /// bit-identical to the clean decode — the property the run-level
+    /// bit-identity acceptance rests on.
+    #[test]
+    fn corrupt_surplus_row_is_rejected_bit_identically() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(41);
+        let theta = random_theta(&mut rng, 8, P);
+        let received: Vec<usize> = (0..15).collect();
+        let mut results = encode(&code, &theta, &received);
+        let clean = dec.decode(&received[..8], &results[..8], DecodeMethod::Qr).unwrap();
+        results[12][5] += 1.0e3; // MDS prefix is the first 8 rows; 12 is surplus
+        let (out, v) = dec.decode_verified(&received, &results, DecodeMethod::Qr).unwrap();
+        assert!(v.check_failed);
+        assert_eq!(v.rejected, vec![12]);
+        assert!(v.locate_decodes >= 1 && !v.unresolved);
+        assert!(bits_equal(&out.theta, &clean.theta), "surplus rejection changed Θ̂");
+    }
+
+    /// A corrupted row *inside* the prefix poisons the first decode;
+    /// the leave-one-out locator must pin it and re-decode clean. Runs
+    /// for MDS (least squares) and for replication with 3 copies per
+    /// agent — the per-symbol budget replication needs to correct (2
+    /// copies can only detect, see below).
+    #[test]
+    fn corrupt_prefix_row_is_located_and_corrected() {
+        for (scheme, n, m) in [(Scheme::Mds, 15, 8), (Scheme::Replication, 12, 4)] {
+            let code = Code::build(&CodeParams::new(scheme, n, m));
+            let dec = Decoder::new(code.clone());
+            let mut rng = Pcg32::seeded(42);
+            let theta = random_theta(&mut rng, m, P);
+            let received: Vec<usize> = (0..n).collect();
+            let mut results = encode(&code, &theta, &received);
+            results[2][7] += 1.0e3; // row 2 is inside any decodable prefix
+            let (out, v) =
+                dec.decode_verified(&received, &results, DecodeMethod::Auto).unwrap();
+            assert!(v.check_failed, "scheme={scheme}");
+            assert_eq!(v.rejected, vec![2], "scheme={scheme} wrong row identified");
+            assert!(v.locate_decodes >= 1 && !v.unresolved, "scheme={scheme}");
+            for i in 0..m {
+                for k in 0..P {
+                    let err = (out.theta[i][k] - theta[i][k]).abs();
+                    assert!(err < 2e-4, "scheme={scheme} agent={i} k={k} err={err}");
+                }
+            }
+        }
+    }
+
+    /// The correction budget 2e ≤ |I| − M is enforced by the math, not
+    /// by fiat: with |I| = M there is nothing to check against (a
+    /// square fit absorbs the corruption), with |I| = M + 1 the check
+    /// fires but no single exclusion leaves a verifiable remainder, and
+    /// 2-copy replication detects but cannot attribute (excluding
+    /// either copy of the corrupted agent is self-consistent).
+    #[test]
+    fn verification_degrades_exactly_at_the_correction_budget() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(43);
+        let theta = random_theta(&mut rng, 8, P);
+
+        // |I| = M: silently absorbed — no redundancy, no detection.
+        let received: Vec<usize> = (0..8).collect();
+        let mut results = encode(&code, &theta, &received);
+        results[3][0] += 1.0e3;
+        let (out, v) = dec.decode_verified(&received, &results, DecodeMethod::Qr).unwrap();
+        assert_eq!(v.surplus, 0);
+        assert!(!v.check_failed, "square solve fits the corrupt row by construction");
+        dec.recycle(out.theta);
+
+        // |I| = M + 1: detected, not locatable.
+        let received: Vec<usize> = (0..9).collect();
+        let mut results = encode(&code, &theta, &received);
+        results[3][0] += 1.0e3;
+        let (out, v) = dec.decode_verified(&received, &results, DecodeMethod::Qr).unwrap();
+        assert!(v.check_failed && v.unresolved && v.rejected.is_empty());
+        dec.recycle(out.theta);
+
+        // 2-copy replication: both exclusions of the corrupted agent's
+        // copies are self-consistent → ambiguous → unresolved.
+        let code = Code::build(&CodeParams::new(Scheme::Replication, 8, 4));
+        let dec = Decoder::new(code.clone());
+        let theta = random_theta(&mut rng, 4, P);
+        let received: Vec<usize> = (0..8).collect();
+        let mut results = encode(&code, &theta, &received);
+        results[1][0] += 1.0e3;
+        let (out, v) = dec.decode_verified(&received, &results, DecodeMethod::Auto).unwrap();
+        assert!(v.check_failed && v.unresolved, "one-of-two copies must not be attributed");
+        dec.recycle(out.theta);
+    }
+
+    /// Two simultaneous corruptions within budget (2e = 4 ≤ |I| − M
+    /// = 7): the leave-two-out pass finds the unique consistent pair.
+    #[test]
+    fn two_corruptions_are_located_by_the_leave_two_out_pass() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(44);
+        let theta = random_theta(&mut rng, 8, P);
+        let received: Vec<usize> = (0..15).collect();
+        let mut results = encode(&code, &theta, &received);
+        results[3][10] += 1.0e3; // in the prefix
+        results[12][20] -= 1.0e3; // in the surplus
+        let (out, v) = dec.decode_verified(&received, &results, DecodeMethod::Qr).unwrap();
+        assert!(v.check_failed && !v.unresolved);
+        assert_eq!(v.rejected, vec![3, 12]);
+        for i in 0..8 {
+            for k in 0..P {
+                assert!((out.theta[i][k] - theta[i][k]).abs() < 2e-4);
+            }
+        }
     }
 
     #[test]

@@ -352,6 +352,77 @@ impl FaultConfig {
     }
 }
 
+/// How an injected corruption perturbs a learner's result vector
+/// (`--corrupt-mode`). All three modes produce perturbations far above
+/// the residual-check tolerance, so a detection miss is a verifier
+/// bug, not a marginal-signal artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorruptMode {
+    /// Flip a high (sign/exponent) bit of one element — classic memory
+    /// / wire bit-rot that survives a parseable frame.
+    Bitflip,
+    /// Multiply the whole vector by a large constant — a mis-scaled
+    /// gradient (wrong learning rate, fp overflow fallout).
+    Scale,
+    /// Overwrite the vector with large adversarial values — a
+    /// Byzantine learner actively poisoning the aggregate.
+    Adversarial,
+}
+
+impl CorruptMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorruptMode::Bitflip => "bitflip",
+            CorruptMode::Scale => "scale",
+            CorruptMode::Adversarial => "adversarial",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CorruptMode> {
+        match s {
+            "bitflip" => Some(CorruptMode::Bitflip),
+            "scale" => Some(CorruptMode::Scale),
+            "adversarial" => Some(CorruptMode::Adversarial),
+            _ => None,
+        }
+    }
+}
+
+/// Byzantine corruption-injection knobs (`--corrupt-rate`,
+/// `--corrupt-mode`). Corruption is drawn by
+/// [`crate::model::disturbance::CorruptionInjector`] on its own RNG
+/// stream and executed by [`crate::sim::SimTransport`] on the result
+/// vector *after* compute — the frame still parses, the length is
+/// right, only the payload lies. With the rate at zero the injector is
+/// never constructed and runs are bit-identical to the pre-corruption
+/// code.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CorruptConfig {
+    /// Per-learner, per-iteration corruption probability (0 = never).
+    pub rate: f64,
+    /// How a drawn corruption perturbs the result vector.
+    pub mode: CorruptMode,
+}
+
+impl CorruptConfig {
+    /// No corruption — bit-identical runs. The mode default (bitflip)
+    /// is inert while the rate is zero, so `--corrupt-mode` alone is a
+    /// neutral knob (the CI inert-twin relies on this).
+    pub fn none() -> CorruptConfig {
+        CorruptConfig { rate: 0.0, mode: CorruptMode::Bitflip }
+    }
+
+    /// Whether corruption injection is configured.
+    pub fn injects(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Short human label for run summaries.
+    pub fn label(&self) -> String {
+        format!("rate={}, mode={}", self.rate, self.mode.name())
+    }
+}
+
 /// Full specification of one training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -376,6 +447,16 @@ pub struct TrainConfig {
     /// `--crash-restart-s`, `--omission-rate`, `--degraded-mode`,
     /// `--suspect-after`, `--dead-after`); no injection by default.
     pub fault: FaultConfig,
+    /// Byzantine corruption injection (`--corrupt-rate`,
+    /// `--corrupt-mode`); no corruption by default.
+    pub corrupt: CorruptConfig,
+    /// Verified decode (`--verify-decode`): when arrivals exceed rank
+    /// M, spend the surplus rows on a residual parity check and — on a
+    /// failed check — an error-locating re-decode that identifies and
+    /// excludes the corrupted row (see coding::decoder). Off by
+    /// default; on a clean run the verified path is bit-identical to
+    /// the unverified one.
+    pub verify_decode: bool,
     /// How virtual compute time is modeled (`--compute-model`).
     pub compute_model: ComputeModelCfg,
     /// Training iterations (paper Alg. 1 outer loop).
@@ -459,6 +540,8 @@ impl TrainConfig {
             trace: None,
             net: NetConfig::free(),
             fault: FaultConfig::none(),
+            corrupt: CorruptConfig::none(),
+            verify_decode: false,
             compute_model: ComputeModelCfg::Fixed,
             iterations: 50,
             episodes_per_iter: 2,
@@ -639,6 +722,17 @@ impl TrainConfig {
         if let Some(v) = args.opt("dead-after") {
             self.fault.dead_after = v.parse()?;
         }
+        if let Some(v) = args.opt("corrupt-rate") {
+            self.corrupt.rate = v.parse()?;
+        }
+        if let Some(v) = args.opt("corrupt-mode") {
+            self.corrupt.mode = CorruptMode::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("unknown corrupt mode '{v}' (bitflip|scale|adversarial)")
+            })?;
+        }
+        if args.flag("verify-decode") {
+            self.verify_decode = true;
+        }
         if args.flag("adaptive") {
             self.adaptive = true;
         }
@@ -702,9 +796,11 @@ impl TrainConfig {
                  --delay-dist / --straggler-exponential)"
             );
         }
-        for (name, rate) in
-            [("--crash-rate", self.fault.crash_rate), ("--omission-rate", self.fault.omission_rate)]
-        {
+        for (name, rate) in [
+            ("--crash-rate", self.fault.crash_rate),
+            ("--omission-rate", self.fault.omission_rate),
+            ("--corrupt-rate", self.corrupt.rate),
+        ] {
             if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
                 bail!("{name} must be a probability in [0, 1], got {rate}");
             }
@@ -734,6 +830,13 @@ impl TrainConfig {
                 "--crash-rate/--omission-rate inject faults in the discrete-event \
                  simulator; pass --time-mode virtual (real transports surface real \
                  connection failures instead)"
+            );
+        }
+        if self.corrupt.injects() && self.time_mode != TimeMode::Virtual {
+            bail!(
+                "--corrupt-rate injects result corruption in the discrete-event \
+                 simulator; pass --time-mode virtual (real transports surface real \
+                 corruption through the wire-level CRC instead)"
             );
         }
         if self.time_mode == TimeMode::Virtual && self.transport != Transport::Local {
@@ -784,6 +887,12 @@ impl TrainConfig {
         }
         if self.fault.injects() {
             model.push_str(&format!(" faults({})", self.fault.label()));
+        }
+        if self.corrupt.injects() {
+            model.push_str(&format!(" corrupt({})", self.corrupt.label()));
+        }
+        if self.verify_decode {
+            model.push_str(" verify-decode");
         }
         format!(
             "preset={} N={} scheme={} decode={} {disturbance} iters={} backend={} transport={} time={}{model} seed={}",
@@ -1097,6 +1206,65 @@ mod tests {
         assert_eq!(DegradedMode::parse("error"), Some(DegradedMode::Error));
         assert_eq!(DegradedMode::parse("uncoded"), Some(DegradedMode::Uncoded));
         assert_eq!(DegradedMode::parse(""), None);
+    }
+
+    #[test]
+    fn byzantine_flags_parse_with_neutral_defaults() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert_eq!(cfg.corrupt, CorruptConfig::none());
+        assert!(!cfg.corrupt.injects(), "no corruption by default");
+        assert!(!cfg.verify_decode, "verified decode is opt-in");
+        assert!(!cfg.summary().contains("corrupt("), "{}", cfg.summary());
+
+        let cfg = parse(&[
+            "--preset", "x",
+            "--time-mode", "virtual",
+            "--corrupt-rate", "0.02",
+            "--corrupt-mode", "scale",
+            "--verify-decode",
+        ])
+        .unwrap();
+        assert_eq!(cfg.corrupt.rate, 0.02);
+        assert_eq!(cfg.corrupt.mode, CorruptMode::Scale);
+        assert!(cfg.corrupt.injects());
+        assert!(cfg.verify_decode);
+        assert!(cfg.summary().contains("corrupt("), "{}", cfg.summary());
+        assert!(cfg.summary().contains("verify-decode"), "{}", cfg.summary());
+
+        // Inert knobs must parse without virtual time: a rate of zero
+        // plus an explicit mode and --verify-decode is exactly the CI
+        // inert-twin invocation, and must be accepted everywhere.
+        let cfg = parse(&[
+            "--preset", "x", "--corrupt-rate", "0", "--corrupt-mode", "bitflip",
+            "--verify-decode",
+        ])
+        .unwrap();
+        assert!(!cfg.corrupt.injects());
+        assert!(cfg.verify_decode);
+    }
+
+    #[test]
+    fn byzantine_flags_are_validated() {
+        let virt = |extra: &[&str]| {
+            let mut argv = vec!["--preset", "x", "--time-mode", "virtual"];
+            argv.extend_from_slice(extra);
+            parse(&argv)
+        };
+        // rate is a probability
+        assert!(virt(&["--corrupt-rate", "1.5"]).is_err());
+        assert!(virt(&["--corrupt-rate", "-0.1"]).is_err());
+        assert!(virt(&["--corrupt-rate", "NaN"]).is_err());
+        assert!(virt(&["--corrupt-rate", "1"]).is_ok());
+        // injection is sim-only; the neutral knob is not
+        assert!(parse(&["--preset", "x", "--corrupt-rate", "0.1"]).is_err());
+        assert!(parse(&["--preset", "x", "--corrupt-mode", "scale"]).is_ok());
+        assert!(parse(&["--preset", "x", "--verify-decode"]).is_ok());
+        // unknown mode
+        assert!(virt(&["--corrupt-mode", "gremlins"]).is_err());
+        assert_eq!(CorruptMode::parse("bitflip"), Some(CorruptMode::Bitflip));
+        assert_eq!(CorruptMode::parse("scale"), Some(CorruptMode::Scale));
+        assert_eq!(CorruptMode::parse("adversarial"), Some(CorruptMode::Adversarial));
+        assert_eq!(CorruptMode::parse(""), None);
     }
 
     #[test]

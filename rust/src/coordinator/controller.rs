@@ -20,7 +20,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::adaptive::AdaptiveSelector;
-use super::failure::{FailureDetector, FaultError, FaultStats, Membership};
+use super::failure::{ByzantineStats, FailureDetector, FaultError, FaultStats, Membership};
 use super::rollout;
 use super::RunSpec;
 use std::sync::Arc;
@@ -128,6 +128,10 @@ pub struct Controller<T: ControllerTransport> {
     /// Fault-lifecycle counters (losses, suspicions, deaths, remaps,
     /// degraded retries, recovery time).
     fault_stats: FaultStats,
+    /// Byzantine-robustness counters (verified-decode checks, located
+    /// corruptions, quarantines, verification overhead); all zero
+    /// unless `--verify-decode`.
+    byz_stats: ByzantineStats,
     pub log: RunLog,
     shut_down: bool,
 }
@@ -245,6 +249,7 @@ impl<T: ControllerTransport> Controller<T> {
             membership,
             detector,
             fault_stats: FaultStats::default(),
+            byz_stats: ByzantineStats::default(),
             log: RunLog::new(),
             shut_down: false,
         })
@@ -324,6 +329,14 @@ impl<T: ControllerTransport> Controller<T> {
     /// recovery time. All zero on a fault-free run.
     pub fn fault_stats(&self) -> FaultStats {
         self.fault_stats
+    }
+
+    /// Byzantine-robustness counters: verified-decode parity checks,
+    /// located corruptions, quarantines, and the verification overhead
+    /// (surplus rows collected, locate decodes run). All zero unless
+    /// `--verify-decode` is on.
+    pub fn byzantine_stats(&self) -> ByzantineStats {
+        self.byz_stats
     }
 
     /// The live membership (identity until a declared death).
@@ -566,7 +579,7 @@ impl<T: ControllerTransport> Controller<T> {
             }
         };
         timing.wait = t.elapsed();
-        let CollectOutcome { received, results, arrived, stall, compute_per_update } = outcome;
+        let CollectOutcome { received, results, mut arrived, stall, compute_per_update } = outcome;
 
         // --- Ack (line 14) ----------------------------------------------
         // Per-learner ack failures are likewise non-fatal; idle and
@@ -579,7 +592,16 @@ impl<T: ControllerTransport> Controller<T> {
         let t = Timer::with_clock(&self.clock);
         let plan_hits_before =
             self.tracer.is_enabled().then(|| self.decoder.plan_cache_stats().hits);
-        let out = self.decoder.decode(&received, &results, self.cfg.decode)?;
+        // Verified decode recovers Θ̂ from the same decodable prefix the
+        // unverified path uses (bit-identical on clean runs) and spends
+        // the surplus rows as a residual parity check; `verdict` drives
+        // the corruption attribution below.
+        let (out, verdict) = if self.cfg.verify_decode {
+            let (out, v) = self.decoder.decode_verified(&received, &results, self.cfg.decode)?;
+            (out, Some(v))
+        } else {
+            (self.decoder.decode(&received, &results, self.cfg.decode)?, None)
+        };
         timing.decode = t.elapsed();
         if let Some(before) = plan_hits_before {
             let cache_hit = self.decoder.plan_cache_stats().hits > before;
@@ -597,11 +619,67 @@ impl<T: ControllerTransport> Controller<T> {
         self.decoder.recycle(out.theta);
         self.pool.put_all(results);
 
+        // --- Byzantine attribution (ISSUE 9) ----------------------------
+        // The controller drew the injection plan itself, so it can score
+        // the verified decode against ground truth: `detected` counts
+        // injected directives present when the parity check fired,
+        // `miscorrected` counts located rows that carried no injection.
+        // Identified learners lose their `arrived` credit — a corrupt
+        // arrival must never clear failure-detector strikes — and take
+        // a corruption strike instead (quarantine via the strike path).
+        let mut corrupt: Vec<usize> = Vec::new();
+        if let Some(v) = verdict {
+            self.byz_stats.surplus_rows += v.surplus as u64;
+            self.byz_stats.locate_decodes += u64::from(v.locate_decodes);
+            let delivered = plan
+                .faults
+                .corruptions
+                .iter()
+                .filter(|d| tasked.contains(&d.learner))
+                .count() as u64;
+            self.byz_stats.corrupted_seen += delivered;
+            if v.check_failed {
+                self.byz_stats.verify_failures += 1;
+                self.byz_stats.detected += delivered;
+                if v.rejected.is_empty() {
+                    self.byz_stats.unresolved += 1;
+                    self.tracer.record(|| ObsEvent::VerifyFailed {
+                        iter,
+                        learner: u32::MAX,
+                        identified: false,
+                    });
+                    crate::log_warn!(
+                        "iter {iter}: verify check failed but no exclusion within the \
+                         correction budget explains it; decode used unverified"
+                    );
+                } else {
+                    for &idx in &v.rejected {
+                        let j = self.membership.phys_of(received[idx]);
+                        self.byz_stats.identified += 1;
+                        if !plan.faults.corruptions.iter().any(|d| d.learner == j) {
+                            self.byz_stats.miscorrected += 1;
+                        }
+                        self.tracer.record(|| ObsEvent::VerifyFailed {
+                            iter,
+                            learner: j as u32,
+                            identified: true,
+                        });
+                        crate::log_warn!(
+                            "iter {iter}: learner {j} identified as corrupt by the \
+                             error-locating decode; re-decoded without its row"
+                        );
+                        arrived[j] = false;
+                        corrupt.push(j);
+                    }
+                }
+            }
+        }
+
         // --- Failure detection + elastic membership ---------------------
         // After the decode so a policy-declared death never perturbs
         // this iteration's recovery; fault-free this is one no-op
         // virtual call and a branch.
-        self.observe_faults(iter, &arrived)?;
+        self.observe_faults(iter, &arrived, &corrupt)?;
 
         // --- Adaptive plan selection (extension; DESIGN.md §9) ----------
         if let Some(c) = compute_per_update {
@@ -883,22 +961,29 @@ impl<T: ControllerTransport> Controller<T> {
     }
 
     /// Post-iteration failure detection: transport-corroborated losses
-    /// strike, used arrivals clear. Threshold crossings emit events; a
-    /// policy-declared death remaps the membership onto the survivors
-    /// (keeping the current scheme — the next iteration's code simply
-    /// has n′ rows).
-    fn observe_faults(&mut self, iter: u64, arrived: &[bool]) -> Result<()> {
+    /// and identified-corrupt arrivals strike, verified-good arrivals
+    /// clear. Threshold crossings emit events; a policy-declared death
+    /// remaps the membership onto the survivors (keeping the current
+    /// scheme — the next iteration's code simply has n′ rows). A death
+    /// whose final strike was a corruption is a **quarantine**: same
+    /// restrict-and-install mechanics, its own event and counter.
+    fn observe_faults(&mut self, iter: u64, arrived: &[bool], corrupt: &[usize]) -> Result<()> {
         let lost: Vec<usize> = match self.transport.lost_for_iter(iter) {
             Some(l) => {
                 l.iter().copied().filter(|&j| self.membership.is_live(j)).collect()
             }
-            // No losses this iteration, but strikes are pending: still
-            // run the detector so recovered learners reset.
-            None if self.detector.has_strikes() => Vec::new(),
+            // No losses this iteration, but corruption strikes or
+            // pending strikes: still run the detector so recovered
+            // learners reset (and corrupt ones escalate).
+            None if self.detector.has_strikes() || !corrupt.is_empty() => Vec::new(),
             None => return Ok(()),
         };
         self.fault_stats.lost_results += lost.len() as u64;
-        let verdict = self.detector.observe(arrived, &lost);
+        // Losses and corruptions are disjoint (a corrupt result was
+        // delivered and used), so one observe call folds both: each is
+        // one strike, and `arrived` no longer credits the corrupt rows.
+        let striking: Vec<usize> = lost.iter().chain(corrupt.iter()).copied().collect();
+        let verdict = self.detector.observe(arrived, &striking);
         for &(j, misses) in &verdict.suspected {
             self.fault_stats.suspected += 1;
             self.tracer.record(|| ObsEvent::LearnerSuspected {
@@ -907,7 +992,7 @@ impl<T: ControllerTransport> Controller<T> {
                 misses,
             });
             crate::log_info!(
-                "iter {iter}: learner {j} suspected after {misses} consecutive losses ({})",
+                "iter {iter}: learner {j} suspected after {misses} consecutive strikes ({})",
                 self.attr.describe(j)
             );
         }
@@ -916,14 +1001,23 @@ impl<T: ControllerTransport> Controller<T> {
         }
         for &(j, misses) in &verdict.dead {
             self.fault_stats.deaths += 1;
-            self.tracer.record(|| ObsEvent::LearnerDeclaredDead {
-                iter,
-                learner: j as u32,
-                misses,
-            });
-            crate::log_info!(
-                "iter {iter}: learner {j} declared dead after {misses} consecutive losses"
-            );
+            if corrupt.contains(&j) {
+                self.byz_stats.quarantined += 1;
+                self.tracer.record(|| ObsEvent::LearnerQuarantined { iter, learner: j as u32 });
+                crate::log_warn!(
+                    "iter {iter}: learner {j} quarantined after {misses} strikes \
+                     (last: identified-corrupt result)"
+                );
+            } else {
+                self.tracer.record(|| ObsEvent::LearnerDeclaredDead {
+                    iter,
+                    learner: j as u32,
+                    misses,
+                });
+                crate::log_info!(
+                    "iter {iter}: learner {j} declared dead after {misses} consecutive strikes"
+                );
+            }
         }
         let dead: Vec<usize> = verdict.dead.iter().map(|&(j, _)| j).collect();
         self.remap(iter, &dead, self.cfg.scheme)
@@ -953,6 +1047,16 @@ impl<T: ControllerTransport> Controller<T> {
         let m = self.spec.m;
         let n = self.cfg.n_learners;
         let p_dim = self.spec.dims.agent_param_dim();
+        // Verified decode needs redundancy: keep collecting *past*
+        // decodability — surplus rows are the parity checks — until
+        // every tasked learner has arrived or is corroborated lost
+        // (or the collect window closes). Off by default; the
+        // unverified path below is unchanged, returning at the first
+        // decodable prefix.
+        let verify = self.cfg.verify_decode;
+        // Set at the moment the pattern became decodable (verify mode
+        // only — the unverified path returns right there).
+        let mut decodable_stall: Option<Duration> = None;
         let mut received: Vec<usize> = Vec::with_capacity(n);
         let mut results: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut got = vec![false; n];
@@ -964,9 +1068,15 @@ impl<T: ControllerTransport> Controller<T> {
         let timeout = self.cfg.collect_timeout;
         let start = self.clock.now();
         let deadline = start + timeout;
-        loop {
+        let stall = 'collect: loop {
             let now = self.clock.now();
             if now >= deadline {
+                if let Some(stall) = decodable_stall {
+                    // Verify mode: decodable, but the surplus window
+                    // closed with stragglers outstanding — verify with
+                    // whatever redundancy arrived.
+                    break 'collect stall;
+                }
                 // Satellite diagnostics: name the learners still
                 // missing and what attribution knows about them — "3
                 // missing" alone is useless at N = 100.
@@ -1000,6 +1110,16 @@ impl<T: ControllerTransport> Controller<T> {
                         // degrade.
                         self.pool.put_all(results);
                         return Ok(Collected::Unreachable { rank: tracker.rank() });
+                    }
+                }
+            } else if let Some(stall) = decodable_stall {
+                // Verify mode, past decodability: done as soon as every
+                // tasked learner is accounted for (arrived or
+                // corroborated lost) — never idle out the window on a
+                // learner that provably cannot contribute a check row.
+                if let Some(lost) = self.transport.lost_for_iter(iter) {
+                    if tasked.iter().all(|&j| got[j] || lost.contains(&j)) {
+                        break 'collect stall;
                     }
                 }
             }
@@ -1096,27 +1216,27 @@ impl<T: ControllerTransport> Controller<T> {
                         mth_arrival = Some(self.clock.now());
                     }
                     if tracker.decodable() {
-                        let front = at.saturating_sub(first_used.unwrap_or(at));
-                        self.attr.observe_decodable(j, front);
-                        self.tracer.record(|| ObsEvent::DecodableAt {
-                            iter,
-                            front_ns: u64::try_from(front.as_nanos()).unwrap_or(u64::MAX),
-                        });
-                        let stall = mth_arrival
-                            .map(|t| self.clock.now().saturating_sub(t))
-                            .unwrap_or(Duration::ZERO);
-                        let compute_per_update = (compute_n > 0).then(|| {
-                            Duration::from_secs_f64(compute_sum / compute_n as f64)
-                        });
-                        return Ok(Collected::Done(CollectOutcome {
-                            received,
-                            results,
-                            arrived: got,
-                            stall,
-                            compute_per_update,
-                        }));
-                    }
-                    if received.len() == tasked.len() {
+                        if decodable_stall.is_none() {
+                            let front = at.saturating_sub(first_used.unwrap_or(at));
+                            self.attr.observe_decodable(j, front);
+                            self.tracer.record(|| ObsEvent::DecodableAt {
+                                iter,
+                                front_ns: u64::try_from(front.as_nanos()).unwrap_or(u64::MAX),
+                            });
+                            let stall = mth_arrival
+                                .map(|t| self.clock.now().saturating_sub(t))
+                                .unwrap_or(Duration::ZERO);
+                            if !verify {
+                                break 'collect stall;
+                            }
+                            decodable_stall = Some(stall);
+                        }
+                        if received.len() == tasked.len() {
+                            // Verify mode: every tasked learner replied —
+                            // maximum redundancy in hand.
+                            break 'collect decodable_stall.unwrap_or(Duration::ZERO);
+                        }
+                    } else if received.len() == tasked.len() {
                         // All tasked learners replied but the pattern is
                         // still not decodable: the assignment matrix
                         // itself is rank-deficient.
@@ -1129,7 +1249,16 @@ impl<T: ControllerTransport> Controller<T> {
                 }
                 LearnerMsg::Hello { .. } => {}
             }
-        }
+        };
+        let compute_per_update =
+            (compute_n > 0).then(|| Duration::from_secs_f64(compute_sum / compute_n as f64));
+        Ok(Collected::Done(CollectOutcome {
+            received,
+            results,
+            arrived: got,
+            stall,
+            compute_per_update,
+        }))
     }
 
     /// Broadcast Shutdown and release the transport. Idempotent; also

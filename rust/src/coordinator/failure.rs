@@ -63,11 +63,18 @@ impl FailureDetector {
         self.strikes.get(j).copied().unwrap_or(0)
     }
 
-    /// Fold one iteration's evidence: `arrived[j]` = a used result
-    /// from physical learner `j` this iteration (clears its strikes);
-    /// `lost` = learners the transport corroborated as lost (one
-    /// strike each). Returns the learners that crossed the suspicion /
-    /// death thresholds *this* call.
+    /// Fold one iteration's evidence: `arrived[j]` = a **verified-good**
+    /// result from physical learner `j` this iteration (clears its
+    /// strikes); `lost` = learners that must take one strike each —
+    /// transport-corroborated losses plus learners whose arrival the
+    /// verified decode identified as corrupt. Returns the learners that
+    /// crossed the suspicion / death thresholds *this* call.
+    ///
+    /// The caller is responsible for keeping corrupted or malformed
+    /// arrivals out of `arrived`: an arrival that merely *parsed* is
+    /// not evidence of health, and letting it clear strikes would let a
+    /// flaky-or-Byzantine learner reset its own escalation every time
+    /// it sends garbage (ISSUE 9 satellite bugfix).
     pub fn observe(&mut self, arrived: &[bool], lost: &[usize]) -> DetectorVerdict {
         let mut verdict = DetectorVerdict::default();
         for (j, &ok) in arrived.iter().enumerate().take(self.strikes.len()) {
@@ -226,6 +233,39 @@ pub struct FaultStats {
     /// Clock time (virtual on the sim) spent inside degraded retries —
     /// the recovery time.
     pub recovery_ns: u64,
+}
+
+/// Byzantine-robustness counters the controller accumulates under
+/// `--verify-decode` (and sweeps export into `BENCH_byzantine.json`).
+/// All zero when verification is off or the run is clean.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ByzantineStats {
+    /// Corruption directives scheduled against tasked learners — the
+    /// ground truth the controller knows because it draws the injection
+    /// plan itself (always 0 outside the sim injector).
+    pub corrupted_seen: u64,
+    /// Verified decodes whose residual parity check fired.
+    pub verify_failures: u64,
+    /// Injected directives present in iterations where the check fired
+    /// (the numerator of the CI detection-ratio assertion).
+    pub detected: u64,
+    /// Rows the error-locating decode pinned as corrupt.
+    pub identified: u64,
+    /// Identified rows that carried **no** injected corruption — wrong
+    /// attribution (the locator's false positives).
+    pub miscorrected: u64,
+    /// Check failures no exclusion within the correction budget could
+    /// explain (decode proceeded unverified).
+    pub unresolved: u64,
+    /// Learners quarantined after corruption strikes crossed the death
+    /// threshold.
+    pub quarantined: u64,
+    /// Surplus rows collected beyond the decodable prefix —
+    /// verification's collection overhead.
+    pub surplus_rows: u64,
+    /// Leave-k-out candidate decodes run by the locator —
+    /// verification's compute overhead.
+    pub locate_decodes: u64,
 }
 
 #[cfg(test)]

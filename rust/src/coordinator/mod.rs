@@ -53,7 +53,7 @@ use anyhow::{bail, Context, Result};
 pub use backend::{BackendFactory, LearnerBackend, MockBackend, PjrtBackend};
 pub use centralized::Centralized;
 pub use controller::{Controller, Streams};
-pub use failure::{FailureDetector, FaultError, FaultStats, Membership};
+pub use failure::{ByzantineStats, FailureDetector, FaultError, FaultStats, Membership};
 pub use pool::{spawn_local, spawn_tcp, Pool, WorkerCmd};
 
 use crate::config::{Backend, ComputeModelCfg, TimeMode, TrainConfig, Transport};

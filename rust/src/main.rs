@@ -94,6 +94,14 @@ COMMON TRAIN FLAGS:
                                learner is suspected      [2]
     --dead-after K             consecutive corroborated losses before it is
                                declared dead and the assignment remapped [3]
+    --corrupt-rate P           per-learner, per-iteration result-corruption
+                               probability (virtual time only) [0]
+    --corrupt-mode M           bitflip|scale|adversarial corruption [bitflip]
+    --verify-decode            collect surplus result rows and spend them as a
+                               residual parity check on the decode; on failure
+                               locate the corrupted row (leave-one/two-out
+                               within the correction budget), re-decode without
+                               it, and strike the learner toward quarantine
 
 SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --artifacts DIR            artifacts directory       [artifacts]
@@ -133,6 +141,13 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
                                iterations survived, availability, deaths,
                                remaps and recovery time (+ BENCH_fault.json
                                with --out-dir)
+    --corrupt-rate/--corrupt-mode/--verify-decode
+                               as in train. An active corruption knob switches
+                               sim-sweep to the BYZANTINE AXIS: one cell per
+                               scheme with the verified decoder forced on,
+                               reporting corruption seen/detected/identified,
+                               miscorrections and quarantines
+                               (+ BENCH_byzantine.json with --out-dir)
     --adaptive                 ADAPTIVE AXIS: one cell per STARTING scheme
                                with the obs-driven selector live; reports
                                start -> final scheme and plan-switch counts
@@ -164,6 +179,8 @@ EXAMPLES:
     coded-marl sim-sweep --trace examples/traces/ec2_sample.jsonl --out-dir bench-out
     coded-marl sim-sweep --m 8 --bandwidth-list 0,25,125 --stragglers-list 0,2
     coded-marl sim-sweep --m 8 --crash-rate 0.02 --crash-restart-s 5 --out-dir bench-out
+    coded-marl sim-sweep --m 8 --corrupt-rate 0.05 --corrupt-mode adversarial \\
+        --out-dir bench-out
     coded-marl sim-sweep --m 4 --learners 7 --adaptive \\
         --trace traces/regime_shift.csv --out-dir bench-out
     coded-marl scale-study --learners-list 100,1000,10000 \\
@@ -335,10 +352,10 @@ fn cmd_sim_sweep() -> Result<()> {
     use coded_marl::config::{ComputeModelCfg, DelayDist};
     use coded_marl::obs::WasteStats;
     use coded_marl::sim::sweep::{
-        adaptive_table, bandwidth_table, fault_table, grid_iter_stats, render_table,
-        run_adaptive_sweep, run_bandwidth_sweep, run_fault_sweep, simulated_total, sweep_base,
-        write_adaptive_json, write_bench_json, write_csv, write_fault_json, write_model_json,
-        SweepConfig,
+        adaptive_table, bandwidth_table, byzantine_table, fault_table, grid_iter_stats,
+        render_table, run_adaptive_sweep, run_bandwidth_sweep, run_byzantine_sweep,
+        run_fault_sweep, simulated_total, sweep_base, write_adaptive_json, write_bench_json,
+        write_byzantine_json, write_csv, write_fault_json, write_model_json, SweepConfig,
     };
 
     let args = Args::from_env(2)?;
@@ -448,6 +465,42 @@ fn cmd_sim_sweep() -> Result<()> {
         delay,
         artifacts_dir: artifacts.into(),
     };
+    // Any active corruption knob switches to the byzantine axis: one
+    // cell per scheme under the configured corruption with the
+    // verified decoder forced on, reporting detection and quarantine
+    // counters. Crash/omission knobs compose (the cell records both
+    // counter sets); the pure-loss fault axis below only claims runs
+    // with no corruption configured.
+    if base.corrupt.injects() {
+        if bandwidth_list.is_some() {
+            anyhow::bail!("--bandwidth-list and corruption injection are separate axes; drop one");
+        }
+        if base.adaptive {
+            anyhow::bail!("--adaptive and corruption injection are separate sim-sweep axes; drop one");
+        }
+        println!(
+            "byzantine axis: {} + verified decode (one cell per scheme, k=0 stragglers)",
+            base.corrupt.label(),
+        );
+        let cells = run_byzantine_sweep(&sweep_cfg)?;
+        let wall = t0.elapsed();
+        print!("{}", byzantine_table(&cells));
+        let seen: u64 = cells.iter().map(|c| c.byz.corrupted_seen).sum();
+        let detected: u64 = cells.iter().map(|c| c.byz.detected).sum();
+        let quarantined: u64 = cells.iter().map(|c| c.byz.quarantined).sum();
+        println!(
+            "\n{detected}/{seen} delivered corruptions detected, {quarantined} learners \
+             quarantined ({} wall-clock)",
+            fmt_duration(wall),
+        );
+        if let Some(dir) = out_dir {
+            let path = dir.join("BENCH_byzantine.json");
+            write_byzantine_json(&cells, &base, wall, &path)
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
     // Any active fault knob switches to the fault axis: one cell per
     // scheme under the configured crash/omission model, reporting
     // survival instead of the straggler grid (a grid cell that stops

@@ -21,7 +21,7 @@
 use anyhow::{Context, Result};
 
 use super::trace::TraceReplay;
-use crate::config::{DelayDist, FaultConfig, StragglerConfig, TrainConfig};
+use crate::config::{CorruptConfig, CorruptMode, DelayDist, FaultConfig, StragglerConfig, TrainConfig};
 use crate::rng::Pcg32;
 
 /// The injection plan for one iteration.
@@ -49,11 +49,69 @@ pub struct FaultPlan {
     pub crashes: Vec<(usize, Option<u64>)>,
     /// Learners whose result this iteration is lost in flight (sorted).
     pub omissions: Vec<usize>,
+    /// Learners whose result this iteration is *corrupted* in flight
+    /// (sorted by learner id). Unlike crashes/omissions the result
+    /// still arrives — silently wrong — which is exactly what
+    /// `--verify-decode` exists to catch.
+    pub corruptions: Vec<CorruptionDirective>,
 }
 
 impl FaultPlan {
     pub fn is_empty(&self) -> bool {
-        self.crashes.is_empty() && self.omissions.is_empty()
+        self.crashes.is_empty() && self.omissions.is_empty() && self.corruptions.is_empty()
+    }
+}
+
+/// One corruption directive: learner `learner`'s result this iteration
+/// is perturbed per `mode`. All randomness is captured at scheduling
+/// time as the raw `draw` word; the transport derives the concrete
+/// element index / bit position / scale from it deterministically at
+/// application time, so execution consumes zero RNG and the injector
+/// stream stays scheme- and timing-independent. (Storing the raw u64
+/// rather than derived floats also keeps `FaultPlan: Eq`.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CorruptionDirective {
+    pub learner: usize,
+    pub mode: CorruptMode,
+    pub draw: u64,
+}
+
+impl CorruptionDirective {
+    /// Apply this directive to a result vector. Pure function of
+    /// `(mode, draw, y)` — no RNG, no clock — so the same directive
+    /// corrupts the same result identically on every replay. Every
+    /// mode perturbs by a magnitude (≥ 2.0 on at least one element)
+    /// orders above the verified decoder's residual tolerance; a
+    /// detection miss is therefore a verifier bug, not noise.
+    pub fn apply(&self, y: &mut [f32]) {
+        if y.is_empty() {
+            return;
+        }
+        match self.mode {
+            // Flip the top exponent bit of one element: any f32 moves
+            // by at least 2.0 (0.0 → 2.0; |v| ≥ 2 collapses or
+            // explodes by a 2^±128 exponent shift).
+            CorruptMode::Bitflip => {
+                let k = (self.draw as usize) % y.len();
+                y[k] = f32::from_bits(y[k].to_bits() ^ 0x4000_0000);
+            }
+            // Mis-scaled gradient: the whole vector × a factor in
+            // [16, 256) derived from the draw's high word.
+            CorruptMode::Scale => {
+                let s = (16 + (self.draw >> 32) % 240) as f32;
+                for v in y.iter_mut() {
+                    *v *= s;
+                }
+            }
+            // Byzantine overwrite: large alternating values keyed off
+            // the draw, uncorrelated with the true coded combination.
+            CorruptMode::Adversarial => {
+                let base = 1.0e3 + (self.draw % 1000) as f32;
+                for (k, v) in y.iter_mut().enumerate() {
+                    *v = if (k as u64).wrapping_add(self.draw) % 2 == 0 { base } else { -base };
+                }
+            }
+        }
     }
 }
 
@@ -98,7 +156,7 @@ impl FaultInjector {
                 }
             }
         }
-        FaultPlan { crashes, omissions }
+        FaultPlan { crashes, omissions, corruptions: Vec::new() }
     }
 
     /// Uniform draw in (0, 1) — guards the log transform.
@@ -109,6 +167,40 @@ impl FaultInjector {
                 return u;
             }
         }
+    }
+}
+
+/// Deterministic, seeded result corruption: per-learner Bernoulli
+/// draws on a dedicated RNG stream (`Pcg32::new(seed, 0xBAD)`) so
+/// enabling corruption never perturbs the 0x57A6 delay or 0xFA17
+/// fault streams — and with `--corrupt-rate 0` the injector is never
+/// constructed at all (zero RNG, bit-identical runs).
+pub struct CorruptionInjector {
+    cfg: CorruptConfig,
+    rng: Pcg32,
+}
+
+impl CorruptionInjector {
+    pub fn new(cfg: CorruptConfig, rng: Pcg32) -> CorruptionInjector {
+        CorruptionInjector { cfg, rng }
+    }
+
+    /// Draw this iteration's corruption directives among `n` learners,
+    /// in id order so the stream is scheme-independent. Each hit also
+    /// draws the raw `draw` word the transport will expand into
+    /// concrete perturbation parameters.
+    pub fn plan(&mut self, n: usize) -> Vec<CorruptionDirective> {
+        let mut out = Vec::new();
+        for j in 0..n {
+            if self.rng.uniform() < self.cfg.rate {
+                out.push(CorruptionDirective {
+                    learner: j,
+                    mode: self.cfg.mode,
+                    draw: self.rng.next_u64(),
+                });
+            }
+        }
+        out
     }
 }
 
@@ -181,6 +273,7 @@ enum DelaySource {
 pub struct DisturbanceModel {
     delays: DelaySource,
     faults: Option<FaultInjector>,
+    corrupt: Option<CorruptionInjector>,
 }
 
 impl DisturbanceModel {
@@ -204,7 +297,13 @@ impl DisturbanceModel {
             .fault
             .injects()
             .then(|| FaultInjector::new(cfg.fault, Pcg32::new(cfg.seed, 0xFA17)));
-        Ok(DisturbanceModel { delays, faults })
+        // Corruption likewise gets its own stream (0xBAD), constructed
+        // only when the knob is set.
+        let corrupt = cfg
+            .corrupt
+            .injects()
+            .then(|| CorruptionInjector::new(cfg.corrupt, Pcg32::new(cfg.seed, 0xBAD)));
+        Ok(DisturbanceModel { delays, faults, corrupt })
     }
 
     /// True when delays come from measured-trace replay.
@@ -220,6 +319,9 @@ impl DisturbanceModel {
         };
         if let Some(faults) = &mut self.faults {
             plan.faults = faults.plan(n);
+        }
+        if let Some(corrupt) = &mut self.corrupt {
+            plan.faults.corruptions = corrupt.plan(n);
         }
         plan
     }
@@ -377,6 +479,7 @@ mod tests {
         assert!(!cfg.fault.injects());
         let mut model = DisturbanceModel::from_config(&cfg).unwrap();
         assert!(model.faults.is_none(), "fault-free config must not build a FaultInjector");
+        assert!(model.corrupt.is_none(), "corrupt-free config must not build a CorruptionInjector");
         // And the delay stream is untouched relative to the bare
         // injector — the bit-identity guarantee ISSUE 7 pins.
         let mut reference =
@@ -426,6 +529,93 @@ mod tests {
                 assert!(down.is_some() && down.unwrap() > 0);
             }
         }
+    }
+
+    #[test]
+    fn corruption_draws_are_deterministic_and_separate_from_other_streams() {
+        let mut cfg = TrainConfig::new("x");
+        cfg.straggler = StragglerConfig::fixed(2, Duration::from_millis(10));
+        cfg.seed = 9;
+        cfg.fault.crash_rate = 0.3;
+        cfg.corrupt = CorruptConfig { rate: 0.4, mode: CorruptMode::Scale };
+        let plans: Vec<InjectionPlan> = {
+            let mut model = DisturbanceModel::from_config(&cfg).unwrap();
+            (0..20).map(|_| model.plan(8)).collect()
+        };
+        // Deterministic per seed: a twin model replays identically.
+        let mut twin = DisturbanceModel::from_config(&cfg).unwrap();
+        for p in &plans {
+            assert_eq!(p.faults, twin.plan(8).faults);
+        }
+        // Corruption rides its own stream: the crash draws match a
+        // corruption-free reference, and the delay draws match a
+        // bare injector.
+        let mut no_corrupt = cfg.clone();
+        no_corrupt.corrupt = CorruptConfig::none();
+        let mut reference = DisturbanceModel::from_config(&no_corrupt).unwrap();
+        let mut delays =
+            StragglerInjector::new(cfg.straggler, Pcg32::new(cfg.seed, 0x57A6));
+        for p in &plans {
+            let r = reference.plan(8);
+            assert_eq!(p.faults.crashes, r.faults.crashes);
+            assert!(r.faults.corruptions.is_empty());
+            let d = delays.plan(8);
+            assert_eq!(p.stragglers, d.stragglers);
+            assert_eq!(p.delay_ns, d.delay_ns);
+        }
+        // At rate 0.4 something fired in 20 iterations of 8, directives
+        // are id-ordered, and each carries the configured mode.
+        assert!(plans.iter().any(|p| !p.faults.corruptions.is_empty()));
+        for p in &plans {
+            let c = &p.faults.corruptions;
+            assert!(c.windows(2).all(|w| w[0].learner < w[1].learner));
+            for d in c {
+                assert!(d.learner < 8);
+                assert_eq!(d.mode, CorruptMode::Scale);
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_apply_is_deterministic_and_large() {
+        let clean: Vec<f32> = (0..7).map(|k| 0.25 * k as f32).collect();
+        let d = CorruptionDirective {
+            learner: 0,
+            mode: CorruptMode::Bitflip,
+            draw: 0x1234_5678_9abc_def0,
+        };
+        let mut a = clean.clone();
+        d.apply(&mut a);
+        let mut b = clean.clone();
+        d.apply(&mut b);
+        assert_eq!(a, b, "apply is a pure function of (mode, draw)");
+        let changed: Vec<usize> = (0..7).filter(|&k| a[k] != clean[k]).collect();
+        assert_eq!(changed.len(), 1, "bitflip perturbs exactly one element");
+        assert!((a[changed[0]] - clean[changed[0]]).abs() >= 2.0);
+        let mut s = clean.clone();
+        CorruptionDirective { learner: 0, mode: CorruptMode::Scale, draw: 7 << 32 }
+            .apply(&mut s);
+        for k in 0..7 {
+            assert_eq!(s[k], clean[k] * 23.0, "scale factor 16 + 7 = 23");
+        }
+        let mut adv = clean.clone();
+        CorruptionDirective { learner: 0, mode: CorruptMode::Adversarial, draw: 2 }
+            .apply(&mut adv);
+        assert!(adv.iter().all(|v| v.abs() >= 1.0e3), "{adv:?}");
+    }
+
+    #[test]
+    fn corruption_only_plans_are_not_empty() {
+        let mut inj = CorruptionInjector::new(
+            CorruptConfig { rate: 1.0, mode: CorruptMode::Bitflip },
+            Pcg32::seeded(13),
+        );
+        let directives = inj.plan(4);
+        assert_eq!(directives.len(), 4);
+        let plan = FaultPlan { corruptions: directives, ..FaultPlan::default() };
+        // The controller only forwards non-empty plans to the
+        // transport — corruption-only plans must count as non-empty.
+        assert!(!plan.is_empty());
     }
 
     #[test]

@@ -39,7 +39,10 @@ pub mod network;
 pub mod trace;
 
 pub use compute::ComputeModel;
-pub use disturbance::{DisturbanceModel, FaultInjector, FaultPlan, InjectionPlan, StragglerInjector};
+pub use disturbance::{
+    CorruptionDirective, CorruptionInjector, DisturbanceModel, FaultInjector, FaultPlan,
+    InjectionPlan, StragglerInjector,
+};
 pub use network::{NetStats, NetworkModel};
 pub use trace::{Trace, TraceReplay};
 

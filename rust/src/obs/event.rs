@@ -126,6 +126,19 @@ pub enum Event {
     /// learners), the avoidable delay, and wasted compute per
     /// decodable iteration.
     EstimateUpdate { iter: u64, k_milli: u64, delay_ns: u64, waste_ns_per_iter: u64 },
+    /// Fault injection corrupted `learner`'s result this iteration
+    /// (delivered perturbed, not dropped). Recorded by the sim
+    /// transport when the directive is applied.
+    CorruptionInjected { iter: u64, learner: u32, mode: &'static str },
+    /// The verified decoder's residual parity check failed.
+    /// `identified` = the error-locating pass pinned the corrupted row
+    /// to `learner`; when false (not enough surplus to locate, or no
+    /// single row explains the misfit) `learner` is `u32::MAX`.
+    VerifyFailed { iter: u64, learner: u32, identified: bool },
+    /// A learner identified as corrupt crossed the death threshold on
+    /// corruption strikes and was quarantined: membership remap
+    /// excludes it from the successor plan.
+    LearnerQuarantined { iter: u64, learner: u32 },
 }
 
 impl Event {
@@ -152,6 +165,9 @@ impl Event {
             Event::DegradedDecode { .. } => "degraded_decode",
             Event::PlanSwitch { .. } => "plan_switch",
             Event::EstimateUpdate { .. } => "estimate_update",
+            Event::CorruptionInjected { .. } => "corruption_injected",
+            Event::VerifyFailed { .. } => "verify_failed",
+            Event::LearnerQuarantined { .. } => "learner_quarantined",
         }
     }
 }

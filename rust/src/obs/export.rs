@@ -103,6 +103,16 @@ pub fn jsonl(events: &[TracedEvent]) -> String {
             Event::EstimateUpdate { iter, k_milli, delay_ns, waste_ns_per_iter } => format!(
                 "\"iter\":{iter},\"k_milli\":{k_milli},\"delay_ns\":{delay_ns},\"waste_ns_per_iter\":{waste_ns_per_iter}"
             ),
+            Event::CorruptionInjected { iter, learner, mode } => format!(
+                "\"iter\":{iter},\"learner\":{learner},\"mode\":\"{}\"",
+                esc(mode)
+            ),
+            Event::VerifyFailed { iter, learner, identified } => format!(
+                "\"iter\":{iter},\"learner\":{learner},\"identified\":{identified}"
+            ),
+            Event::LearnerQuarantined { iter, learner } => {
+                format!("\"iter\":{iter},\"learner\":{learner}")
+            }
         };
         out.push_str(&format!("{{\"t_ns\":{t},\"ev\":\"{}\",{body}}}\n", te.event.kind()));
     }
@@ -296,6 +306,29 @@ pub fn chrome_trace(events: &[TracedEvent], n_learners: usize) -> String {
                         *waste_ns_per_iter as f64 / 1e6
                     ),
                 )),
+            Event::CorruptionInjected { iter, learner, mode } => evs.push(instant(
+                "corrupted",
+                lane(*learner),
+                at,
+                format!("\"iter\":{iter},\"mode\":\"{}\"", esc(mode)),
+            )),
+            Event::VerifyFailed { iter, learner, identified } => {
+                // Unidentified failures have no learner to pin: they
+                // land on the controller lane (learner = u32::MAX).
+                let tid = if *identified { lane(*learner) } else { 0 };
+                evs.push(instant(
+                    "verify_failed",
+                    tid,
+                    at,
+                    format!("\"iter\":{iter},\"identified\":{identified}"),
+                ));
+            }
+            Event::LearnerQuarantined { iter, learner } => evs.push(instant(
+                "quarantined",
+                lane(*learner),
+                at,
+                format!("\"iter\":{iter}"),
+            )),
         }
     }
 
@@ -487,6 +520,59 @@ mod tests {
         assert_eq!(num_of(find("dead"), "tid"), Some(2.0));
         assert_eq!(num_of(find("remap"), "tid"), Some(0.0), "controller lane");
         assert_eq!(num_of(find("degraded"), "tid"), Some(0.0));
+    }
+
+    /// The byzantine-lifecycle events flow through both exporters:
+    /// valid JSON lines with their tags, and Chrome instants on the
+    /// right lanes (corruption/quarantine on the learner's lane, an
+    /// unidentified verify failure on the controller's).
+    #[test]
+    fn byzantine_events_flow_through_both_exporters() {
+        let ms = Duration::from_millis;
+        let events = vec![
+            TracedEvent {
+                at: ms(1),
+                event: Event::CorruptionInjected { iter: 2, learner: 1, mode: "bitflip" },
+            },
+            TracedEvent {
+                at: ms(2),
+                event: Event::VerifyFailed { iter: 2, learner: 1, identified: true },
+            },
+            TracedEvent {
+                at: ms(3),
+                event: Event::VerifyFailed { iter: 3, learner: u32::MAX, identified: false },
+            },
+            TracedEvent { at: ms(4), event: Event::LearnerQuarantined { iter: 4, learner: 1 } },
+        ];
+        let txt = jsonl(&events);
+        for l in txt.lines() {
+            Json::parse(l).unwrap_or_else(|e| panic!("bad line {l}: {e}"));
+        }
+        for tag in ["corruption_injected", "verify_failed", "learner_quarantined"] {
+            assert!(txt.contains(&format!("\"ev\":\"{tag}\"")), "missing {tag} in {txt}");
+        }
+        assert!(txt.contains("\"mode\":\"bitflip\""), "{txt}");
+        assert!(txt.contains("\"identified\":true") && txt.contains("\"identified\":false"));
+
+        let trace = chrome_trace(&events, 2);
+        let doc = Json::parse(&trace).expect("trace must be valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let find = |name: &str| {
+            evs.iter()
+                .find(|e| str_of(e, "name") == Some(name))
+                .unwrap_or_else(|| panic!("no {name} instant"))
+        };
+        assert_eq!(num_of(find("corrupted"), "tid"), Some(2.0), "learner 1 lane");
+        assert_eq!(num_of(find("quarantined"), "tid"), Some(2.0));
+        let verify_tids: Vec<f64> = evs
+            .iter()
+            .filter(|e| str_of(e, "name") == Some("verify_failed"))
+            .filter_map(|e| num_of(e, "tid"))
+            .collect();
+        assert!(
+            verify_tids.contains(&2.0) && verify_tids.contains(&0.0),
+            "identified → learner lane, unidentified → controller: {verify_tids:?}"
+        );
     }
 
     /// The adaptive-plan events flow through both exporters: a

@@ -35,7 +35,9 @@ use anyhow::{Context, Result};
 use crate::coding::decoder::PlanCacheStats;
 use crate::coding::{Code, CodeParams, Scheme};
 use crate::config::{Backend, DelayDist, TimeMode, TrainConfig};
-use crate::coordinator::{backend_factory, spawn_pool, Controller, FaultError, FaultStats, RunSpec};
+use crate::coordinator::{
+    backend_factory, spawn_pool, ByzantineStats, Controller, FaultError, FaultStats, RunSpec,
+};
 use crate::metrics::table::Table;
 use crate::metrics::{RunLog, Stats};
 use crate::model::NetStats;
@@ -1237,6 +1239,194 @@ pub fn write_adaptive_json(
     f.flush()
 }
 
+// ------------------------------------------------------------------
+// Byzantine sweeps: corruption + verified decode + BENCH_byzantine.json
+// ------------------------------------------------------------------
+
+/// One scheme's outcome under the sweep's corruption configuration
+/// with the verified decoder live: how much injected corruption the
+/// residual parity check saw, caught, and attributed, and whether the
+/// run survived to the end.
+pub struct ByzantineCell {
+    pub scheme: Scheme,
+    /// Iterations that completed before the run ended.
+    pub iters_done: usize,
+    /// Scheduled iterations (`base.iterations`).
+    pub iters_target: usize,
+    /// Whether the run reached its final iteration (a `false` cell
+    /// terminated deterministically through the degraded path).
+    pub survived: bool,
+    /// The [`FaultError`] rendering when the run terminated early.
+    pub error: Option<String>,
+    /// Corruption seen/detected/identified counters from the verified
+    /// decoder plus quarantine outcomes.
+    pub byz: ByzantineStats,
+    /// The crash/omission lifecycle counters — context for runs mixing
+    /// corruption with loss faults.
+    pub faults: FaultStats,
+    /// Worst-case straggler (erasure) tolerance of the assignment
+    /// matrix: the surplus the verifier can spend.
+    pub tolerance: usize,
+    /// Worst-case guaranteed error-correction budget `e`: each located
+    /// error costs one exclusion *and* one surviving parity row, so
+    /// `e = ⌊tolerance / 2⌋` when every learner reports.
+    pub correction_budget: usize,
+    /// Wall-clock spent executing the cell (not simulated time).
+    pub wall: Duration,
+}
+
+/// Run one scheme under the base config's corruption knobs with
+/// `--verify-decode` forced on (the axis *is* verification — a
+/// corruption sweep without the checker would just measure silent
+/// poisoning). A [`FaultError`] is a cell outcome, not a sweep failure.
+fn run_byzantine_cell(sweep: &SweepConfig, scheme: Scheme) -> Result<ByzantineCell> {
+    let wall_t = std::time::Instant::now();
+    let mut cfg = sweep.base.clone();
+    cfg.scheme = scheme;
+    cfg.verify_decode = true;
+    cfg.trace_out = None; // one trace file; byzantine cells never trace
+    cfg.straggler.delay = sweep.delay;
+    cfg.seed = derive_scheme_seed(sweep.base.seed, scheme);
+    let code = Code::build(&CodeParams {
+        scheme,
+        n: cfg.n_learners,
+        m: sweep.spec.m,
+        p_m: cfg.p_m,
+        seed: cfg.seed,
+    });
+    let tolerance = code.worst_case_tolerance();
+    let factory = backend_factory(&cfg, sweep.artifacts_dir.clone(), &sweep.spec);
+    let pool = spawn_pool(&cfg, factory)?;
+    let iters_target = cfg.iterations;
+    let mut ctrl = Controller::new(cfg, sweep.spec.clone(), pool)
+        .with_context(|| format!("building byzantine cell for {scheme}"))?;
+    let res = ctrl.train().map(|_| ());
+    let iters_done = ctrl.log.len();
+    let byz = ctrl.byzantine_stats();
+    let faults = ctrl.fault_stats();
+    ctrl.shutdown();
+    let (survived, error) = match res {
+        Ok(()) => (true, None),
+        Err(e) => match e.downcast_ref::<FaultError>() {
+            Some(fe) => (false, Some(fe.to_string())),
+            None => {
+                return Err(e)
+                    .with_context(|| format!("byzantine cell {scheme} died unexpectedly"))
+            }
+        },
+    };
+    Ok(ByzantineCell {
+        scheme,
+        iters_done,
+        iters_target,
+        survived,
+        error,
+        byz,
+        faults,
+        tolerance,
+        correction_budget: tolerance / 2,
+        wall: wall_t.elapsed(),
+    })
+}
+
+/// The byzantine axis: one cell per scheme, all under `base.corrupt`
+/// with verification on. Serial — like the fault axis, its value is
+/// the per-scheme comparison, not throughput.
+pub fn run_byzantine_sweep(sweep: &SweepConfig) -> Result<Vec<ByzantineCell>> {
+    sweep.schemes.iter().map(|&s| run_byzantine_cell(sweep, s)).collect()
+}
+
+/// Byzantine-sweep table: correction budget, corruption seen vs
+/// caught, attribution quality, quarantines.
+pub fn byzantine_table(cells: &[ByzantineCell]) -> String {
+    let mut table = Table::new(&[
+        "scheme",
+        "budget",
+        "iters",
+        "seen",
+        "detected",
+        "identified",
+        "miscorrected",
+        "unresolved",
+        "quarantined",
+        "locate_decodes",
+        "outcome",
+    ]);
+    for c in cells {
+        table.row(&[
+            c.scheme.name().to_string(),
+            format!("e≤{}", c.correction_budget),
+            format!("{}/{}", c.iters_done, c.iters_target),
+            c.byz.corrupted_seen.to_string(),
+            c.byz.detected.to_string(),
+            c.byz.identified.to_string(),
+            c.byz.miscorrected.to_string(),
+            c.byz.unresolved.to_string(),
+            c.byz.quarantined.to_string(),
+            c.byz.locate_decodes.to_string(),
+            if c.survived { "survived".into() } else { "degraded-stop".into() },
+        ]);
+    }
+    table.render()
+}
+
+/// Machine-readable byzantine record (`BENCH_byzantine.json`): the
+/// corruption knobs and one cell per scheme with the detection /
+/// attribution / quarantine counters — written by `sim-sweep` whenever
+/// a corruption knob is active, and consumed by the CI smoke gate that
+/// asserts redundant schemes actually catch what was injected.
+pub fn write_byzantine_json(
+    cells: &[ByzantineCell],
+    base: &TrainConfig,
+    wall: Duration,
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"byzantine_sweep\",")?;
+    writeln!(f, "  \"wall_s\": {:.6},", wall.as_secs_f64())?;
+    writeln!(f, "  \"corrupt_rate\": {},", base.corrupt.rate)?;
+    writeln!(f, "  \"corrupt_mode\": \"{}\",", base.corrupt.mode.name())?;
+    writeln!(f, "  \"cells\": [")?;
+    for (i, c) in cells.iter().enumerate() {
+        let comma = if i + 1 == cells.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"scheme\": \"{}\", \"tolerance\": {}, \"correction_budget\": {}, \
+             \"iters_done\": {}, \"iters_target\": {}, \"survived\": {}, \
+             \"corrupted_seen\": {}, \"verify_failures\": {}, \"detected\": {}, \
+             \"identified\": {}, \"miscorrected\": {}, \"unresolved\": {}, \
+             \"quarantined\": {}, \"surplus_rows\": {}, \"locate_decodes\": {}, \
+             \"deaths\": {}, \"remaps\": {}, \"error\": {}, \"wall_s\": {:.6}}}{comma}",
+            c.scheme.name(),
+            c.tolerance,
+            c.correction_budget,
+            c.iters_done,
+            c.iters_target,
+            c.survived,
+            c.byz.corrupted_seen,
+            c.byz.verify_failures,
+            c.byz.detected,
+            c.byz.identified,
+            c.byz.miscorrected,
+            c.byz.unresolved,
+            c.byz.quarantined,
+            c.byz.surplus_rows,
+            c.byz.locate_decodes,
+            c.faults.deaths,
+            c.faults.remaps,
+            c.error.as_deref().map_or("null".to_string(), json_str),
+            c.wall.as_secs_f64(),
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    f.flush()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1814,6 +2004,81 @@ mod tests {
         assert_eq!(c.availability, 1.0);
         assert_eq!(c.iters_done, c.iters_target);
         assert!(c.stats.lost_results > 0, "crashes must be corroborated as losses");
+    }
+
+    /// The byzantine axis end to end: with corruption injected, the
+    /// MDS cell's verified decoder sees and detects it; with the rate
+    /// at zero, every counter stays zero and every cell survives; and
+    /// BENCH_byzantine.json parses with the detection keys the CI
+    /// smoke gate asserts on.
+    #[test]
+    fn byzantine_sweep_detects_injected_corruption_and_writes_json() {
+        use crate::config::{CorruptConfig, CorruptMode};
+        let mut byz_base = base();
+        byz_base.iterations = 7; // 6 measured + warmup: several injections
+        byz_base.corrupt = CorruptConfig { rate: 0.25, mode: CorruptMode::Adversarial };
+        let sweep = SweepConfig {
+            base: byz_base,
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Mds, Scheme::Replication],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        };
+        let cells = run_byzantine_sweep(&sweep).unwrap();
+        assert_eq!(cells.len(), 2);
+        let mds = &cells[0];
+        assert_eq!(mds.scheme, Scheme::Mds);
+        assert_eq!(mds.tolerance, 3, "MDS at N=7, M=4");
+        assert_eq!(mds.correction_budget, 1);
+        assert!(mds.byz.corrupted_seen > 0, "rate 0.25 over 7 iters must inject");
+        assert!(
+            mds.byz.detected > 0,
+            "the residual check must fire on adversarial rows: {:?}",
+            mds.byz
+        );
+        assert!(
+            mds.byz.verify_failures > 0 && mds.byz.surplus_rows > 0,
+            "verify mode must collect surplus and spend it: {:?}",
+            mds.byz
+        );
+
+        let txt = byzantine_table(&cells);
+        assert!(txt.contains("mds") && txt.contains("quarantined"), "{txt}");
+
+        let dir = std::env::temp_dir().join("coded_marl_byzantine_json_test");
+        let path = dir.join("BENCH_byzantine.json");
+        write_byzantine_json(&cells, &sweep.base, Duration::from_millis(9), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "byzantine_sweep");
+        assert_eq!(json.get("corrupt_mode").unwrap().as_str().unwrap(), "adversarial");
+        let jcells = json.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(jcells.len(), 2);
+        for c in jcells {
+            assert!(c.get("corrupted_seen").unwrap().as_usize().is_ok());
+            assert!(c.get("detected").unwrap().as_usize().is_ok());
+            assert!(c.get("quarantined").unwrap().as_usize().is_ok());
+            assert!(c.get("correction_budget").unwrap().as_usize().is_ok());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Corruption-free base: verification runs but every Byzantine
+        // counter stays zero and every scheme survives untouched.
+        let mut clean = sweep;
+        clean.base.corrupt = CorruptConfig::none();
+        let clean_cells = run_byzantine_sweep(&clean).unwrap();
+        for c in &clean_cells {
+            assert!(c.survived, "{}: clean cells must survive", c.scheme);
+            assert_eq!(c.iters_done, c.iters_target, "{}", c.scheme);
+            let b = c.byz;
+            assert_eq!(
+                (b.corrupted_seen, b.verify_failures, b.detected, b.identified, b.quarantined),
+                (0, 0, 0, 0, 0),
+                "{}: clean run must not trip the checker: {b:?}",
+                c.scheme
+            );
+        }
     }
 
     /// The adaptive axis end to end on a hot measured trace: a run

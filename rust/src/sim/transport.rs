@@ -64,7 +64,7 @@ use crate::coordinator::backend::{LearnerBackend, MockBackend};
 use crate::linalg::kernels;
 use crate::linalg::pool::BufPool;
 use crate::marl::ModelDims;
-use crate::model::{FaultPlan, NetStats, SystemModel};
+use crate::model::{CorruptionDirective, FaultPlan, NetStats, SystemModel};
 use crate::obs::{Event as ObsEvent, Tracer, WasteStats};
 use crate::transport::msg::{result_wire_len, task_header_wire_len};
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
@@ -159,6 +159,12 @@ pub struct SimTransport {
     /// (installed by [`ControllerTransport::inject_faults`]).
     omit_iter: Option<u64>,
     omit: Vec<usize>,
+    /// Corruption directives for `corrupt_iter` (installed by
+    /// [`ControllerTransport::inject_faults`]): the result is
+    /// delivered **perturbed**, not dropped — a corrupted learner is
+    /// not `lost`, because only the verified decoder can tell.
+    corrupt_iter: Option<u64>,
+    corrupt: Vec<CorruptionDirective>,
     /// Learners known lost for `lost_iter` — crashed at task receipt,
     /// dead backend, or omitted result — recorded at *scheduling*
     /// time so [`ControllerTransport::lost_for_iter`] lets the
@@ -288,6 +294,8 @@ impl SimTransport {
             waste: WasteStats::default(),
             omit_iter: None,
             omit: Vec::new(),
+            corrupt_iter: None,
+            corrupt: Vec::new(),
             lost_iter: None,
             lost: Vec::new(),
         }
@@ -408,6 +416,21 @@ impl SimTransport {
         learner.pending_iter = Some(iter);
         let generation = learner.generation;
         self.pool.put(row);
+        // Injected corruption: the learner computed the honest result,
+        // but what arrives is silently perturbed. Applied after the
+        // numerics (backend state and RNG streams untouched) and NOT
+        // marked lost — detecting it is the verified decoder's job.
+        if self.corrupt_iter == Some(iter) {
+            if let Some(d) = self.corrupt.iter().find(|d| d.learner == j) {
+                d.apply(&mut y);
+                let mode = d.mode.name();
+                self.tracer.record(|| ObsEvent::CorruptionInjected {
+                    iter,
+                    learner: j as u32,
+                    mode,
+                });
+            }
+        }
         // Injected omission: the learner computes and transmits as
         // usual, but the result is dropped in flight. Marked lost at
         // scheduling time so the controller never waits on it.
@@ -585,6 +608,9 @@ impl ControllerTransport for SimTransport {
         self.omit_iter = Some(iter);
         self.omit.clear();
         self.omit.extend_from_slice(&plan.omissions);
+        self.corrupt_iter = Some(iter);
+        self.corrupt.clear();
+        self.corrupt.extend_from_slice(&plan.corruptions);
     }
 
     fn lost_for_iter(&self, iter: u64) -> Option<&[usize]> {
@@ -971,7 +997,7 @@ mod tests {
         let mut rng = Pcg32::seeded(30);
         // Permanent crash on learner 0, injected before the broadcast
         // (the controller's order: draw plan, inject, then send).
-        let plan = FaultPlan { crashes: vec![(0, None)], omissions: vec![] };
+        let plan = FaultPlan { crashes: vec![(0, None)], ..FaultPlan::default() };
         sim.inject_faults(1, &plan);
         for j in 0..2 {
             let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
@@ -996,7 +1022,7 @@ mod tests {
         // Down for 50 virtual ms from t=0.
         sim.inject_faults(1, &FaultPlan {
             crashes: vec![(0, Some(50_000_000))],
-            omissions: vec![],
+            ..FaultPlan::default()
         });
         let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
         sim.send_to(0, msg).unwrap();
@@ -1024,7 +1050,7 @@ mod tests {
         };
         let mut sim = SimTransport::with_backends_and_model(backends, model);
         let mut rng = Pcg32::seeded(32);
-        sim.inject_faults(1, &FaultPlan { crashes: vec![], omissions: vec![0] });
+        sim.inject_faults(1, &FaultPlan { omissions: vec![0], ..FaultPlan::default() });
         let (msg, params, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
         sim.send_to(0, msg).unwrap();
         // Lost is known at scheduling time — before any recv.
@@ -1052,7 +1078,7 @@ mod tests {
         // Task in flight (50 ms delay), then the learner crashes.
         let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 50_000_000, &mut rng);
         sim.send_to(0, msg).unwrap();
-        sim.inject_faults(2, &FaultPlan { crashes: vec![(0, None)], omissions: vec![] });
+        sim.inject_faults(2, &FaultPlan { crashes: vec![(0, None)], ..FaultPlan::default() });
         assert!(sim.recv_timeout(Duration::from_millis(200)).unwrap().is_none());
         assert_eq!(sim.waste_stats().unwrap().results, 1, "in-flight result died with the crash");
         let evs = tracer.snapshot();
@@ -1064,13 +1090,63 @@ mod tests {
             "{evs:?}"
         );
         // A second crash directive against a down learner is moot.
-        sim.inject_faults(3, &FaultPlan { crashes: vec![(0, Some(1))], omissions: vec![] });
+        sim.inject_faults(3, &FaultPlan { crashes: vec![(0, Some(1))], ..FaultPlan::default() });
         let crashes = tracer
             .snapshot()
             .iter()
             .filter(|e| matches!(e.event, ObsEvent::CrashInjected { .. }))
             .count();
         assert_eq!(crashes, 1, "already-down learners are not re-crashed");
+    }
+
+    /// A corrupted result still ARRIVES — perturbed, traced, and NOT
+    /// reported lost (only the verified decoder can tell it's bad) —
+    /// and the corruption is scoped to its iteration.
+    #[test]
+    fn corrupted_result_is_delivered_perturbed_not_lost() {
+        use crate::config::CorruptMode;
+        let mut sim = SimTransport::new(1, dims(), Duration::from_millis(1));
+        let tracer = Tracer::enabled(sim.clock(), 64);
+        sim.set_tracer(Arc::clone(&tracer));
+        let mut rng = Pcg32::seeded(35);
+        // Reference: the clean result for the same task stream.
+        let mut clean_sim = SimTransport::new(1, dims(), Duration::from_millis(1));
+        let mut clean_rng = Pcg32::seeded(35);
+        sim.inject_faults(1, &FaultPlan {
+            corruptions: vec![CorruptionDirective {
+                learner: 0,
+                mode: CorruptMode::Adversarial,
+                draw: 42,
+            }],
+            ..FaultPlan::default()
+        });
+        let (msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        let (clean_msg, _, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut clean_rng);
+        clean_sim.send_to(0, clean_msg).unwrap();
+        // Not lost: the controller must wait for (and receive) it.
+        assert_eq!(sim.lost_for_iter(1), None);
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { iter, y, .. } = got else { panic!() };
+        assert_eq!(iter, 1);
+        let clean = clean_sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { y: clean_y, .. } = clean else { panic!() };
+        assert_ne!(y, clean_y, "the delivered result must be perturbed");
+        assert!(y.iter().all(|&v| v.abs() >= 1.0e3), "adversarial overwrite");
+        assert!(tracer.snapshot().iter().any(|e| matches!(
+            e.event,
+            ObsEvent::CorruptionInjected { iter: 1, learner: 0, mode: "adversarial" }
+        )));
+        // Per-iteration scope: the next round is clean again.
+        let (msg, _, _) = task(2, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        let got = sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { y, .. } = got else { panic!() };
+        let (clean_msg, _, _) = task(2, vec![1.0, 0.0, 0.0], 0, &mut clean_rng);
+        clean_sim.send_to(0, clean_msg).unwrap();
+        let clean = clean_sim.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        let LearnerMsg::Result { y: clean_y, .. } = clean else { panic!() };
+        assert_eq!(y, clean_y, "corruption must not leak into later iterations");
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Byzantine-robustness integration tests (ISSUE 9): a corrupt learner
+//! — one that returns a well-formed result whose *contents* lie — must
+//! be caught by the verified decoder's residual parity check, located
+//! by the error-locating decode, excluded from the recovery (leaving
+//! the trained parameters bit-identical to a clean run), and
+//! quarantined through the failure detector's strike path.
+//!
+//! The corruption here is scripted at the transport boundary
+//! ([`ByzantineWire`]), not drawn by the seeded injector: these tests
+//! need a *specific* learner corrupted at *specific* iterations so the
+//! attribution, strike accumulation, and bit-identity claims are
+//! deterministic. The injector-driven path (ground-truth scoring,
+//! detection rates) is covered by the byzantine sweep axis tests.
+
+use std::ops::RangeInclusive;
+use std::sync::Arc;
+use std::time::Duration;
+
+use coded_marl::coding::Scheme;
+use coded_marl::config::{Backend, TimeMode, TrainConfig};
+use coded_marl::coordinator::{
+    spawn_pool, BackendFactory, ByzantineStats, Controller, MockBackend, Pool, RunSpec,
+};
+use coded_marl::env::EnvKind;
+use coded_marl::marl::AgentParams;
+use coded_marl::metrics::RunLog;
+use coded_marl::model::FaultPlan;
+use coded_marl::transport::{ControllerTransport, CtrlMsg, LearnerMsg};
+
+const M: usize = 4;
+
+fn mock_cfg(scheme: Scheme, n: usize, iters: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("synthetic");
+    cfg.backend = Backend::Mock;
+    cfg.time_mode = TimeMode::Virtual;
+    cfg.scheme = scheme;
+    cfg.n_learners = n;
+    cfg.iterations = iters;
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 8;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = Duration::from_millis(1);
+    cfg.collect_timeout = Duration::from_secs(4 * 3600);
+    cfg.seed = seed;
+    cfg
+}
+
+fn spec() -> RunSpec {
+    RunSpec::synthetic(EnvKind::CoopNav, M, 0, 8, 4)
+}
+
+fn factory() -> Arc<BackendFactory> {
+    let dims = spec().dims;
+    Arc::new(move |_id| Ok(Box::new(MockBackend::new(dims, Duration::ZERO)) as _))
+}
+
+/// Transport wrapper acting as a scripted Byzantine learner: Result
+/// messages from `learner` at the scripted iterations pass through
+/// well-formed but with their payload perturbed — exactly what a
+/// corrupt (not crashed, not malformed) worker produces. Everything
+/// else, including the virtual clock and the loss corroboration the
+/// failure detector relies on, delegates to the wrapped pool.
+struct ByzantineWire {
+    inner: Pool,
+    learner: u32,
+    iters: RangeInclusive<u64>,
+}
+
+impl ControllerTransport for ByzantineWire {
+    fn n_learners(&self) -> usize {
+        self.inner.n_learners()
+    }
+
+    fn send_to(&mut self, learner: usize, msg: CtrlMsg) -> anyhow::Result<()> {
+        self.inner.send_to(learner, msg)
+    }
+
+    fn broadcast(&mut self, msg: &CtrlMsg) -> anyhow::Result<()> {
+        self.inner.broadcast(msg)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> anyhow::Result<Option<LearnerMsg>> {
+        let mut msg = self.inner.recv_timeout(timeout)?;
+        if let Some(LearnerMsg::Result { iter, learner_id, y, .. }) = &mut msg {
+            if *learner_id == self.learner && self.iters.contains(iter) && !y.is_empty() {
+                y[0] += 1.0e3;
+            }
+        }
+        Ok(msg)
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+
+    fn clock(&self) -> coded_marl::sim::ClockRef {
+        self.inner.clock()
+    }
+
+    fn buf_pool(&self) -> Option<Arc<coded_marl::linalg::pool::BufPool>> {
+        self.inner.buf_pool()
+    }
+
+    fn net_stats(&self) -> Option<coded_marl::model::NetStats> {
+        self.inner.net_stats()
+    }
+
+    fn set_tracer(&mut self, tracer: Arc<coded_marl::obs::Tracer>) {
+        self.inner.set_tracer(tracer)
+    }
+
+    fn waste_stats(&self) -> Option<coded_marl::obs::WasteStats> {
+        self.inner.waste_stats()
+    }
+
+    fn inject_faults(&mut self, iter: u64, plan: &FaultPlan) {
+        self.inner.inject_faults(iter, plan)
+    }
+
+    fn lost_for_iter(&self, iter: u64) -> Option<&[usize]> {
+        self.inner.lost_for_iter(iter)
+    }
+}
+
+struct Outcome {
+    params: Vec<AgentParams>,
+    log: RunLog,
+    byz: ByzantineStats,
+    epoch: u16,
+    alive: Vec<bool>,
+}
+
+/// Train through the scripted wire. `learner = u32::MAX` (no learner
+/// has that id) makes the wrapper inert — the clean twin runs through
+/// the identical code path.
+fn train(
+    cfg: &TrainConfig,
+    corrupt_learner: u32,
+    iters: RangeInclusive<u64>,
+) -> anyhow::Result<Outcome> {
+    let pool = spawn_pool(cfg, factory())?;
+    let wire = ByzantineWire { inner: pool, learner: corrupt_learner, iters };
+    let mut ctrl = Controller::new(cfg.clone(), spec(), wire)?;
+    let res = ctrl.train();
+    let outcome = Outcome {
+        params: ctrl.agents().to_vec(),
+        log: std::mem::take(&mut ctrl.log),
+        byz: ctrl.byzantine_stats(),
+        epoch: ctrl.plan_epoch(),
+        alive: (0..cfg.n_learners).map(|j| ctrl.membership().is_live(j)).collect(),
+    };
+    ctrl.shutdown();
+    res.map(|_| outcome)
+}
+
+fn train_clean(cfg: &TrainConfig) -> anyhow::Result<Outcome> {
+    train(cfg, u32::MAX, 0..=0)
+}
+
+fn max_param_diff(a: &[AgentParams], b: &[AgentParams]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.max_abs_diff(y)).fold(0.0, f32::max)
+}
+
+/// The inertness property (ISSUE 9 satellite), over all five schemes ×
+/// seeds: on a clean run, `--verify-decode` never rejects a result,
+/// never fires the parity check, and leaves the trained parameters
+/// **bit-identical** to the unverified run — the checker only changes
+/// how long collect listens, never what is decoded.
+#[test]
+fn verified_decode_is_inert_on_clean_runs_for_every_scheme() {
+    for scheme in Scheme::ALL {
+        for seed in [41u64, 142] {
+            let plain_cfg = mock_cfg(scheme, 7, 5, seed);
+            let plain = train_clean(&plain_cfg).unwrap();
+            let mut verify_cfg = plain_cfg.clone();
+            verify_cfg.verify_decode = true;
+            let verified = train_clean(&verify_cfg).unwrap();
+            assert_eq!(
+                plain.log.len(),
+                verified.log.len(),
+                "scheme={scheme} seed={seed}: both runs must finish"
+            );
+            let diff = max_param_diff(&plain.params, &verified.params);
+            assert_eq!(
+                diff, 0.0,
+                "scheme={scheme} seed={seed}: verification on a clean run changed the result"
+            );
+            for (p, v) in plain.log.records.iter().zip(verified.log.records.iter()) {
+                assert_eq!(p.reward, v.reward, "scheme={scheme} seed={seed}");
+            }
+            let b = verified.byz;
+            assert_eq!(
+                (b.verify_failures, b.detected, b.identified, b.quarantined, b.unresolved),
+                (0, 0, 0, 0, 0),
+                "scheme={scheme} seed={seed}: clean run tripped the checker: {b:?}"
+            );
+            assert!(verified.alive.iter().all(|&a| a), "scheme={scheme} seed={seed}");
+        }
+    }
+}
+
+/// The headline acceptance property, on MDS and replication: a learner
+/// whose results are corrupted for `dead_after` consecutive iterations
+/// is identified by the error-locating decode each time, the run's
+/// trained parameters stay **bit-identical** to the clean twin (the
+/// corrupt row is excluded, and it sat outside the decode prefix to
+/// begin with), and the learner is quarantined — declared dead on
+/// corruption strikes, membership remapped, plan epoch bumped.
+#[test]
+fn corrupt_learner_is_identified_corrected_bit_identically_and_quarantined() {
+    // (scheme, N): the corrupt learner is N−1 — the last arrival in
+    // the sim's deterministic order, so it is always a surplus row.
+    // MDS at N=7 has surplus 3; replication at N=12, M=4 gives every
+    // symbol 3 copies (locate needs 2 honest corroborators).
+    for (scheme, n) in [(Scheme::Mds, 7usize), (Scheme::Replication, 12)] {
+        let mut cfg = mock_cfg(scheme, n, 8, 51);
+        cfg.verify_decode = true;
+        let clean = train_clean(&cfg).unwrap();
+        let bad = (n - 1) as u32;
+        // Corrupt iters 2..=4: three consecutive strikes = dead_after.
+        let out = train(&cfg, bad, 2..=4)
+            .unwrap_or_else(|e| panic!("scheme={scheme}: corrupted run must survive: {e:#}"));
+        assert_eq!(out.log.len(), clean.log.len(), "scheme={scheme}: every iteration completes");
+        let diff = max_param_diff(&out.params, &clean.params);
+        assert_eq!(
+            diff, 0.0,
+            "scheme={scheme}: correction within budget must be bit-exact (max |Δθ| = {diff})"
+        );
+        let b = out.byz;
+        assert_eq!(b.verify_failures, 3, "scheme={scheme}: one check failure per corrupt iter");
+        assert_eq!(b.identified, 3, "scheme={scheme}: the locator must pin learner {bad}");
+        assert_eq!(b.unresolved, 0, "scheme={scheme}: within budget nothing is unresolved");
+        assert_eq!(b.quarantined, 1, "scheme={scheme}: 3 strikes = quarantine");
+        assert!(!out.alive[bad as usize], "scheme={scheme}: learner {bad} must be removed");
+        assert!(out.epoch >= 1, "scheme={scheme}: quarantine installs a successor plan");
+        // The clean twin kept everyone.
+        assert!(clean.alive.iter().all(|&a| a), "scheme={scheme}");
+        assert_eq!(clean.epoch, 0, "scheme={scheme}");
+    }
+}
+
+/// Regression (ISSUE 9 satellite bugfix): a corrupted-but-parseable
+/// arrival must NOT clear failure-detector strikes. Before the fix,
+/// `collect` classified the corrupt result as Used and the detector's
+/// observe() reset the learner's strike count every iteration — a
+/// persistently corrupt learner could never be quarantined. With the
+/// fix, identified-corrupt arrivals lose their `arrived` credit and
+/// strike instead, so three consecutive corrupt iterations escalate
+/// straight to death.
+#[test]
+fn corrupt_arrivals_do_not_clear_failure_detector_strikes() {
+    let mut cfg = mock_cfg(Scheme::Mds, 7, 8, 53);
+    cfg.verify_decode = true;
+    // Corrupt EVERY iteration from 1 on: under the old clearing bug
+    // the strike count would oscillate 0 → 1 → 0 and learner 6 would
+    // survive the whole run.
+    let out = train(&cfg, 6, 1..=1_000).unwrap();
+    assert_eq!(
+        out.byz.quarantined, 1,
+        "persistent corruption must escalate to quarantine, not re-clear strikes: {:?}",
+        out.byz
+    );
+    assert!(!out.alive[6]);
+    // Identified exactly dead_after (= 3) times: after quarantine the
+    // learner is out of the membership and sends nothing.
+    assert_eq!(out.byz.identified, 3, "{:?}", out.byz);
+    assert_eq!(out.log.len(), 8, "the run itself rides out the corruption");
+}
