@@ -496,7 +496,14 @@ impl Decoder {
     /// Indices into `received` whose rows misfit Θ̂:
     /// `‖y_j − Σ_i c_{j,i}·θ̂_i‖_∞` beyond a tolerance scaled to the
     /// row's own magnitude (`VERIFY_REL_TOL` relative + absolute
-    /// floor). Read-only; residual buffers come from the pool.
+    /// floor). A non-finite element — in the row itself or in its
+    /// residual against Θ̂ — flags the row outright, before the
+    /// tolerance test: `f64::max` silently drops NaN operands (an
+    /// all-NaN residual would fold to worst = 0) and an Inf row
+    /// inflates its own relative tolerance to Inf (`inf > inf` is
+    /// false), so the threshold comparison alone waves exactly the
+    /// worst corruptions through. Read-only; residual buffers come
+    /// from the pool.
     fn residual_check(
         &self,
         received: &[usize],
@@ -509,6 +516,10 @@ impl Decoder {
             .collect();
         let mut bad = Vec::new();
         for (r, &j) in received.iter().enumerate() {
+            if results[r].iter().any(|v| !v.is_finite()) {
+                bad.push(r);
+                continue;
+            }
             let mut scale =
                 results[r].iter().fold(0.0f64, |acc, &v| acc.max(v.abs() as f64));
             let mut res = self.pool.take_copy(&results[r]);
@@ -516,9 +527,20 @@ impl Decoder {
                 kernels::axpy(&mut res, -(c as f32), &theta[i]);
                 scale += c.abs() * theta_max[i];
             }
-            let worst = res.iter().fold(0.0f64, |acc, &v| acc.max(v.abs() as f64));
+            // NaN in the residual means Θ̂ itself is poisoned (a
+            // non-finite corruption sat inside the decodable prefix);
+            // every row must report misfit so the locator runs.
+            let mut worst = 0.0f64;
+            let mut finite = true;
+            for &v in res.iter() {
+                if !v.is_finite() {
+                    finite = false;
+                    break;
+                }
+                worst = worst.max(v.abs() as f64);
+            }
             self.pool.put(res);
-            if worst > VERIFY_REL_TOL * scale + VERIFY_ABS_TOL {
+            if !finite || worst > VERIFY_REL_TOL * scale + VERIFY_ABS_TOL {
                 bad.push(r);
             }
         }
@@ -1238,6 +1260,57 @@ mod tests {
         assert_eq!(v.rejected, vec![12]);
         assert!(v.locate_decodes >= 1 && !v.unresolved);
         assert!(bits_equal(&out.theta, &clean.theta), "surplus rejection changed Θ̂");
+    }
+
+    /// Non-finite corruption must be flagged, not waved through.
+    /// Regression: `f64::max` drops NaN operands (an all-NaN residual
+    /// folded to worst = 0) and an Inf row inflated its own relative
+    /// tolerance to Inf (`inf > inf` is false) — both previously came
+    /// back verified-clean while poisoning Θ̂.
+    #[test]
+    fn non_finite_prefix_corruption_is_located_and_corrected() {
+        for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let code = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+            let dec = Decoder::new(code.clone());
+            let mut rng = Pcg32::seeded(46);
+            let theta = random_theta(&mut rng, 8, P);
+            let received: Vec<usize> = (0..15).collect();
+            let mut results = encode(&code, &theta, &received);
+            // Inside the prefix: the initial decode is poisoned (Θ̂
+            // non-finite), the locator must still pin row 2.
+            results[2][7] = poison;
+            let (out, v) =
+                dec.decode_verified(&received, &results, DecodeMethod::Qr).unwrap();
+            assert!(v.check_failed, "poison={poison}: check must fire");
+            assert_eq!(v.rejected, vec![2], "poison={poison}: wrong row identified");
+            assert!(!v.unresolved, "poison={poison}");
+            for i in 0..8 {
+                for k in 0..P {
+                    let err = (out.theta[i][k] - theta[i][k]).abs();
+                    assert!(err < 2e-4, "poison={poison} agent={i} k={k} err={err}");
+                }
+            }
+            dec.recycle(out.theta);
+        }
+    }
+
+    /// A non-finite *surplus* row: the prefix decode is clean, so the
+    /// rejection must be exact and Θ̂ bit-identical to the clean run —
+    /// the same guarantee the finite surplus test above pins.
+    #[test]
+    fn non_finite_surplus_row_is_rejected_bit_identically() {
+        let code = Code::build(&CodeParams::new(Scheme::Mds, 15, 8));
+        let dec = Decoder::new(code.clone());
+        let mut rng = Pcg32::seeded(47);
+        let theta = random_theta(&mut rng, 8, P);
+        let received: Vec<usize> = (0..15).collect();
+        let mut results = encode(&code, &theta, &received);
+        let clean = dec.decode(&received[..8], &results[..8], DecodeMethod::Qr).unwrap();
+        results[12][5] = f32::NAN;
+        let (out, v) = dec.decode_verified(&received, &results, DecodeMethod::Qr).unwrap();
+        assert!(v.check_failed);
+        assert_eq!(v.rejected, vec![12]);
+        assert!(bits_equal(&out.theta, &clean.theta), "NaN surplus rejection changed Θ̂");
     }
 
     /// A corrupted row *inside* the prefix poisons the first decode;

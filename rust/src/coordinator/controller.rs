@@ -622,7 +622,7 @@ impl<T: ControllerTransport> Controller<T> {
         // --- Byzantine attribution (ISSUE 9) ----------------------------
         // The controller drew the injection plan itself, so it can score
         // the verified decode against ground truth: `detected` counts
-        // injected directives present when the parity check fired,
+        // delivered directives present when the parity check fired,
         // `miscorrected` counts located rows that carried no injection.
         // Identified learners lose their `arrived` credit — a corrupt
         // arrival must never clear failure-detector strikes — and take
@@ -631,11 +631,16 @@ impl<T: ControllerTransport> Controller<T> {
         if let Some(v) = verdict {
             self.byz_stats.surplus_rows += v.surplus as u64;
             self.byz_stats.locate_decodes += u64::from(v.locate_decodes);
+            // Only directives whose corrupted result actually reached
+            // the decoder count: a corrupt learner that straggled past
+            // the collect window (or whose frame was lost) contributed
+            // no row, so verification never saw anything to detect —
+            // crediting it would inflate the detection ratio.
             let delivered = plan
                 .faults
                 .corruptions
                 .iter()
-                .filter(|d| tasked.contains(&d.learner))
+                .filter(|d| arrived.get(d.learner).copied().unwrap_or(false))
                 .count() as u64;
             self.byz_stats.corrupted_seen += delivered;
             if v.check_failed {

@@ -240,13 +240,16 @@ pub struct FaultStats {
 /// All zero when verification is off or the run is clean.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ByzantineStats {
-    /// Corruption directives scheduled against tasked learners — the
-    /// ground truth the controller knows because it draws the injection
-    /// plan itself (always 0 outside the sim injector).
+    /// Corruption directives whose corrupted result actually reached
+    /// the decoder — the ground truth the controller knows because it
+    /// draws the injection plan itself (always 0 outside the sim
+    /// injector). Directives whose result straggled past the collect
+    /// window or was lost in flight don't count: verification never
+    /// saw a row for them.
     pub corrupted_seen: u64,
     /// Verified decodes whose residual parity check fired.
     pub verify_failures: u64,
-    /// Injected directives present in iterations where the check fired
+    /// Delivered directives present in iterations where the check fired
     /// (the numerator of the CI detection-ratio assertion).
     pub detected: u64,
     /// Rows the error-locating decode pinned as corrupt.

@@ -90,10 +90,18 @@ impl CorruptionDirective {
         match self.mode {
             // Flip the top exponent bit of one element: any f32 moves
             // by at least 2.0 (0.0 → 2.0; |v| ≥ 2 collapses or
-            // explodes by a 2^±128 exponent shift).
+            // explodes by a 2^±128 exponent shift). The one range
+            // where the flip lands on Inf/NaN is |v| ∈ [1, 2) (biased
+            // exponent 0x7F → 0xFF); this injector's contract is a
+            // *finite* wrong value — the verifier flags non-finite
+            // rows through a separate guard with its own decoder
+            // tests — so fall back to negate-and-scale there: still a
+            // pure function of (draw, y), still ≥ 2.0 off the
+            // original (|v + 512·v| ≥ 513 for |v| ≥ 1).
             CorruptMode::Bitflip => {
                 let k = (self.draw as usize) % y.len();
-                y[k] = f32::from_bits(y[k].to_bits() ^ 0x4000_0000);
+                let flipped = f32::from_bits(y[k].to_bits() ^ 0x4000_0000);
+                y[k] = if flipped.is_finite() { flipped } else { -512.0 * y[k] };
             }
             // Mis-scaled gradient: the whole vector × a factor in
             // [16, 256) derived from the draw's high word.
@@ -602,6 +610,32 @@ mod tests {
         CorruptionDirective { learner: 0, mode: CorruptMode::Adversarial, draw: 2 }
             .apply(&mut adv);
         assert!(adv.iter().all(|v| v.abs() >= 1.0e3), "{adv:?}");
+    }
+
+    /// Bitflip's exponent flip lands on Inf/NaN exactly when the
+    /// victim element has |v| ∈ [1, 2) (biased exponent 0x7F → 0xFF);
+    /// the fallback must keep the injected value finite while still
+    /// perturbing by ≥ 2.0 — across the whole hazardous range, both
+    /// signs, and a spread of draws (element positions).
+    #[test]
+    fn bitflip_is_always_finite_and_large() {
+        for draw in 0..16u64 {
+            let d = CorruptionDirective { learner: 0, mode: CorruptMode::Bitflip, draw };
+            for sign in [1.0f32, -1.0] {
+                for step in 0..64 {
+                    let v = sign * (1.0 + step as f32 / 64.0); // |v| ∈ [1, 2)
+                    let mut y = vec![v; 5];
+                    d.apply(&mut y);
+                    let k = (draw as usize) % 5;
+                    assert!(y[k].is_finite(), "draw={draw} v={v} produced {}", y[k]);
+                    assert!(
+                        (y[k] - v).abs() >= 2.0,
+                        "draw={draw} v={v} perturbation too small: {}",
+                        y[k]
+                    );
+                }
+            }
+        }
     }
 
     #[test]
