@@ -7,7 +7,10 @@
 //! ns/parameter so the crossover structure is visible. Decodes are
 //! timed **cold** (fresh decoder: rank check + factorization + apply)
 //! and **warm** (decode-plan cache hit: apply only) — the gap is what
-//! the plan cache buys on every repeated erasure pattern. Also times
+//! the plan cache buys on every repeated erasure pattern. A third
+//! `warm@4t` column runs the warm apply through the per-agent parallel
+//! path (`--decode-threads 4`), whose output is asserted bit-identical
+//! to the serial apply before timing. Also times
 //! the learner-side encode (y_j accumulation), and writes the whole
 //! record to `BENCH_decode_micro.json` (in `CODED_MARL_BENCH_DIR`, or
 //! the working directory) so the perf trajectory is tracked across PRs.
@@ -30,6 +33,8 @@ struct Record {
     p: usize,
     cold: Duration,
     warm: Duration,
+    /// Warm decode with the parallel apply (`--decode-threads 4`).
+    warm_par: Duration,
     erasures: usize,
 }
 
@@ -59,13 +64,14 @@ fn write_bench_json(records: &[Record], checks: &[ArrivalCheck]) -> std::io::Res
         writeln!(
             f,
             "    {{\"scheme\": \"{}\", \"method\": \"{}\", \"m\": {}, \"p\": {}, \
-             \"cold_s\": {:.9}, \"warm_s\": {:.9}, \"erasures\": {}}}{comma}",
+             \"cold_s\": {:.9}, \"warm_s\": {:.9}, \"warm_4t_s\": {:.9}, \"erasures\": {}}}{comma}",
             r.scheme,
             r.method,
             r.m,
             r.p,
             r.cold.as_secs_f64(),
             r.warm.as_secs_f64(),
+            r.warm_par.as_secs_f64(),
             r.erasures,
         )?;
     }
@@ -171,7 +177,7 @@ fn main() {
     for m in [8usize, 10] {
         println!("\n--- M = {m} ---");
         let mut table = Table::new(&[
-            "scheme", "method", "P", "cold", "warm", "warm ns/param", "erasures",
+            "scheme", "method", "P", "cold", "warm", "warm@4t", "warm ns/param", "erasures",
         ]);
         for scheme in Scheme::ALL {
             let code = Code::build(&CodeParams { scheme, n, m, p_m: 0.8, seed: 1 });
@@ -210,12 +216,28 @@ fn main() {
                         },
                         5,
                     );
+                    // Warm with the per-agent parallel apply — the
+                    // `--decode-threads` path, bit-identical output.
+                    let mut par = Decoder::new(code.clone());
+                    par.set_threads(4);
+                    let out_par = par.decode(&received, &results, method).unwrap();
+                    for (a, b) in out.theta.iter().zip(out_par.theta.iter()) {
+                        assert_eq!(a, b, "parallel apply must be bit-identical");
+                    }
+                    let warm_par = time_median(
+                        || {
+                            let out = par.decode(&received, &results, method).unwrap();
+                            std::hint::black_box(&out.theta);
+                        },
+                        5,
+                    );
                     table.row(&[
                         scheme.name().to_string(),
                         label.to_string(),
                         p.to_string(),
                         fmt_duration(cold),
                         fmt_duration(warm),
+                        fmt_duration(warm_par),
                         format!("{:.1}", warm.as_nanos() as f64 / (p as f64 * m as f64)),
                         drop.to_string(),
                     ]);
@@ -226,6 +248,7 @@ fn main() {
                         p,
                         cold,
                         warm,
+                        warm_par,
                         erasures: drop,
                     });
                 }

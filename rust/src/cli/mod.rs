@@ -24,7 +24,7 @@ pub struct Args {
 /// (is `--verbose`'s value `--seed`?): any flag listed here is parsed as
 /// a switch; everything else expects a value.
 const SWITCHES: &[&str] =
-    &["verbose", "straggler-exponential", "adaptive", "help", "quick", "json"];
+    &["verbose", "straggler-exponential", "adaptive", "help", "quick", "json", "pipeline"];
 
 impl Args {
     /// Parse an argv iterator (not including the program name).

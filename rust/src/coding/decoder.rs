@@ -185,6 +185,10 @@ pub struct Decoder {
     /// residuals. The controller returns recovered Θ' via
     /// [`Decoder::recycle`], so steady-state decodes allocate nothing.
     pool: BufPool,
+    /// Worker count for the Θ = W·Y apply (`--decode-threads`); 0 or 1
+    /// = serial. Agents are independent output rows, so the parallel
+    /// apply is bit-identical by construction (see [`apply_weights`]).
+    threads: usize,
 }
 
 impl Decoder {
@@ -193,7 +197,14 @@ impl Decoder {
         // Worst-case working set: M accumulators (least squares) or up
         // to |I| ≤ N residuals + M solved rows (peeling).
         let pool = BufPool::with_shelf_cap(2 * code.n + 8);
-        Decoder { code, binary, plans: Mutex::new(PlanCache::default()), pool }
+        Decoder { code, binary, plans: Mutex::new(PlanCache::default()), pool, threads: 0 }
+    }
+
+    /// Set the apply worker count (`--decode-threads`). Survives
+    /// [`Decoder::rebind`]: the knob is a property of the host machine,
+    /// not of the code.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
     }
 
     pub fn code(&self) -> &Code {
@@ -303,7 +314,10 @@ impl Decoder {
     fn decode_qr(&self, received: &[usize], results: &[Vec<f32>], p: usize) -> Result<DecodeOutput> {
         let order = sorted_order(received);
         let w = self.weights(received, &order, 0)?;
-        Ok(DecodeOutput { theta: apply_weights(&w, results, &order, p, &self.pool), method: "qr" })
+        Ok(DecodeOutput {
+            theta: apply_weights(&w, results, &order, p, &self.pool, self.threads),
+            method: "qr",
+        })
     }
 
     /// The paper's Eq. (2) literally — same weight-matrix reorganization
@@ -312,7 +326,7 @@ impl Decoder {
         let order = sorted_order(received);
         let w = self.weights(received, &order, 1)?;
         Ok(DecodeOutput {
-            theta: apply_weights(&w, results, &order, p, &self.pool),
+            theta: apply_weights(&w, results, &order, p, &self.pool, self.threads),
             method: "normal_equations",
         })
     }
@@ -601,29 +615,57 @@ fn sorted_order(received: &[usize]) -> Vec<usize> {
 /// summation order — and therefore every output bit — is independent
 /// of arrival order. Accumulators come from the decoder's pool and
 /// return via [`Decoder::recycle`].
+///
+/// `threads > 1` chunks the *agent* range over scoped threads
+/// (`--decode-threads`). Each agent is an independent output row —
+/// its accumulation order over the received results is untouched by
+/// the chunking, and the chunks are re-concatenated in agent order —
+/// so the parallel apply is bit-identical to the serial one by
+/// construction, not by tolerance. The shared [`BufPool`] is
+/// Mutex-backed; which pooled buffer a worker draws is irrelevant
+/// because accumulators start zeroed.
 fn apply_weights(
     w: &Mat,
     results: &[Vec<f32>],
     order: &[usize],
     p: usize,
     pool: &BufPool,
+    threads: usize,
 ) -> Vec<Vec<f32>> {
     debug_assert_eq!(w.cols, results.len());
     debug_assert_eq!(order.len(), results.len());
-    (0..w.rows)
-        .map(|i| {
-            let mut acc = pool.take_zeroed(p);
-            let wrow = w.row(i);
-            for (col, &r) in order.iter().enumerate() {
-                let c = wrow[col] as f32;
-                if c == 0.0 {
-                    continue;
-                }
-                kernels::axpy(&mut acc, c, &results[r]);
+    let apply_row = |i: usize| {
+        let mut acc = pool.take_zeroed(p);
+        let wrow = w.row(i);
+        for (col, &r) in order.iter().enumerate() {
+            let c = wrow[col] as f32;
+            if c == 0.0 {
+                continue;
             }
-            acc
-        })
-        .collect()
+            kernels::axpy(&mut acc, c, &results[r]);
+        }
+        acc
+    };
+    if threads <= 1 || w.rows <= 1 {
+        return (0..w.rows).map(apply_row).collect();
+    }
+    let workers = threads.min(w.rows);
+    let chunk = w.rows.div_ceil(workers);
+    let mut parts: Vec<Vec<Vec<f32>>> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(w.rows);
+                let apply_row = &apply_row;
+                scope.spawn(move || (lo..hi).map(apply_row).collect::<Vec<Vec<f32>>>())
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("decode apply worker panicked"));
+        }
+    });
+    parts.into_iter().flatten().collect()
 }
 
 /// Iterative erasure peeling over a binary code. Returns None when the
@@ -1115,6 +1157,41 @@ mod tests {
                 assert!(
                     bits_equal(&warm.theta, &reference),
                     "scheme={scheme} method={method:?} warm (pooled) pass diverged"
+                );
+            }
+        }
+    }
+
+    /// `--decode-threads`: the scoped-thread apply chunks independent
+    /// agent rows, so its output is bit-identical to the serial path
+    /// for every scheme and thread count (including workers > agents).
+    #[test]
+    fn parallel_apply_is_bit_identical_to_serial() {
+        for scheme in Scheme::ALL {
+            let (n, m) = (15usize, 8usize);
+            let code = Code::build(&CodeParams::new(scheme, n, m));
+            let mut rng = Pcg32::seeded(0xDEC0 ^ scheme as u64);
+            let theta = random_theta(&mut rng, m, P);
+            let drop = code.worst_case_tolerance();
+            let received: Vec<usize> = (drop..n).collect();
+            let results = encode(&code, &theta, &received);
+            let mut serial = Decoder::new(code.clone());
+            serial.set_threads(0);
+            let reference = serial.decode(&received, &results, DecodeMethod::Qr).unwrap();
+            for threads in [1usize, 2, 4, 64] {
+                let mut dec = Decoder::new(code.clone());
+                dec.set_threads(threads);
+                let out = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+                assert!(
+                    bits_equal(&out.theta, &reference.theta),
+                    "scheme={scheme} threads={threads} diverged from serial apply"
+                );
+                // Warm (pooled) pass under contention for the pool.
+                dec.recycle(out.theta);
+                let warm = dec.decode(&received, &results, DecodeMethod::Qr).unwrap();
+                assert!(
+                    bits_equal(&warm.theta, &reference.theta),
+                    "scheme={scheme} threads={threads} warm pass diverged"
                 );
             }
         }

@@ -162,6 +162,68 @@ impl DelayDist {
     }
 }
 
+/// Physical layout of the learner fleet for the per-link network
+/// model (`--topology`). The default **flat** topology is the PR 5
+/// single-link model: every transfer shares one modeled bandwidth and
+/// returns never queue. `racks:<r>x<w>` places learners round-robin
+/// into `r` racks of `w` slots each; Result returns then serialize
+/// over their rack's uplink (`--uplink-mbps`) and queue again on the
+/// controller's ingress link (the base `--bandwidth`), so simultaneous
+/// returns model incast instead of teleporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// One shared link, no queueing — bit-identical to the PR 5 model.
+    Flat,
+    /// `racks` racks of `width` learners; learner j lives in rack
+    /// `j / width`.
+    Racks { racks: usize, width: usize },
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::Racks { .. } => "racks",
+        }
+    }
+
+    /// Parse a `--topology` value: `flat` or `racks:<r>x<w>`.
+    pub fn parse(s: &str) -> Option<Topology> {
+        if s == "flat" {
+            return Some(Topology::Flat);
+        }
+        let spec = s.strip_prefix("racks:")?;
+        let (r, w) = spec.split_once('x')?;
+        let racks: usize = r.parse().ok()?;
+        let width: usize = w.parse().ok()?;
+        Some(Topology::Racks { racks, width })
+    }
+
+    /// Short human label for run summaries.
+    pub fn label(&self) -> String {
+        match self {
+            Topology::Flat => "flat".into(),
+            Topology::Racks { racks, width } => format!("racks:{racks}x{width}"),
+        }
+    }
+
+    /// Which rack learner `j` lives in (`None` under flat).
+    pub fn rack_of(&self, learner: usize) -> Option<usize> {
+        match self {
+            Topology::Flat => None,
+            Topology::Racks { width, .. } => Some(learner / width),
+        }
+    }
+
+    /// Rack count (1 under flat — the whole fleet is one "rack").
+    pub fn rack_count(&self) -> usize {
+        match self {
+            Topology::Flat => 1,
+            Topology::Racks { racks, .. } => *racks,
+        }
+    }
+}
+
 /// Modeled network link for the virtual-time simulator
 /// ([`crate::model::NetworkModel`]): per-message transfer time =
 /// payload bytes / bandwidth + exponential jitter. The default is
@@ -443,6 +505,29 @@ pub struct TrainConfig {
     /// Modeled network link for virtual-time runs (`--bandwidth`,
     /// `--net-jitter-us`); free by default.
     pub net: NetConfig,
+    /// Physical fleet layout for the per-link incast model
+    /// (`--topology flat|racks:<r>x<w>`); flat (single shared link,
+    /// no queueing) by default — bit-identical to the PR 5 model.
+    pub topology: Topology,
+    /// Rack uplink bandwidth in MB/s for racked topologies
+    /// (`--uplink-mbps`; 0 = infinite). Result returns serialize over
+    /// their rack's uplink before hitting the controller ingress.
+    pub uplink_mbps: f64,
+    /// Controller iterations deep the broadcast pipeline runs
+    /// (`--pipeline-depth`, 1 or 2). Depth 2 credits the controller
+    /// prelude (rollout + sample + encode) against the previous
+    /// iteration's collect window; depth 1 is the serial loop. Trained
+    /// parameters are bitwise identical at either depth.
+    pub pipeline_depth: usize,
+    /// Modeled controller prelude cost per non-warmup iteration
+    /// (`--ctrl-compute-us`); zero (free, the historical behavior) by
+    /// default. This is what pipelining can hide.
+    pub ctrl_compute: std::time::Duration,
+    /// Worker threads for the per-agent decode apply
+    /// (`--decode-threads`; agents are independent columns of
+    /// Θ = W·Y, so the split is bit-identical by construction).
+    /// 0 = serial.
+    pub decode_threads: usize,
     /// Fault injection + failure-handling policy (`--crash-rate`,
     /// `--crash-restart-s`, `--omission-rate`, `--degraded-mode`,
     /// `--suspect-after`, `--dead-after`); no injection by default.
@@ -539,6 +624,11 @@ impl TrainConfig {
             straggler: StragglerConfig::none(),
             trace: None,
             net: NetConfig::free(),
+            topology: Topology::Flat,
+            uplink_mbps: 0.0,
+            pipeline_depth: 1,
+            ctrl_compute: std::time::Duration::ZERO,
+            decode_threads: 0,
             fault: FaultConfig::none(),
             corrupt: CorruptConfig::none(),
             verify_decode: false,
@@ -695,6 +785,23 @@ impl TrainConfig {
         if let Some(v) = args.opt("net-jitter-us") {
             self.net.jitter = std::time::Duration::from_micros(v.parse()?);
         }
+        if let Some(v) = args.opt("topology") {
+            self.topology = Topology::parse(v).ok_or_else(|| {
+                anyhow::anyhow!("unknown topology '{v}' (flat|racks:<r>x<w>)")
+            })?;
+        }
+        if let Some(v) = args.opt("uplink-mbps") {
+            self.uplink_mbps = v.parse()?;
+        }
+        if let Some(v) = args.opt("pipeline-depth") {
+            self.pipeline_depth = v.parse()?;
+        }
+        if let Some(v) = args.opt("ctrl-compute-us") {
+            self.ctrl_compute = std::time::Duration::from_micros(v.parse()?);
+        }
+        if let Some(v) = args.opt("decode-threads") {
+            self.decode_threads = v.parse()?;
+        }
         if let Some(v) = args.opt("compute-model") {
             self.compute_model = ComputeModelCfg::parse(v)
                 .ok_or_else(|| anyhow::anyhow!("unknown compute model '{v}' (fixed|calibrated)"))?;
@@ -783,6 +890,41 @@ impl TrainConfig {
             bail!(
                 "--bandwidth must be a finite MB/s value ≥ 0 (0 = infinite), got {}",
                 self.net.bandwidth_mbps
+            );
+        }
+        if !(1..=2).contains(&self.pipeline_depth) {
+            bail!("--pipeline-depth must be 1 or 2, got {}", self.pipeline_depth);
+        }
+        if !self.uplink_mbps.is_finite() || self.uplink_mbps < 0.0 {
+            bail!(
+                "--uplink-mbps must be a finite MB/s value ≥ 0 (0 = infinite), got {}",
+                self.uplink_mbps
+            );
+        }
+        if let Topology::Racks { racks, width } = self.topology {
+            if racks == 0 || width == 0 {
+                bail!("--topology racks:<r>x<w> needs r ≥ 1 and w ≥ 1, got racks:{racks}x{width}");
+            }
+            if racks * width < self.n_learners {
+                bail!(
+                    "--topology racks:{racks}x{width} has {} slots but N={} learners",
+                    racks * width,
+                    self.n_learners
+                );
+            }
+        }
+        if self.uplink_mbps > 0.0 && self.topology == Topology::Flat {
+            bail!("--uplink-mbps models rack uplinks; pass --topology racks:<r>x<w>");
+        }
+        if self.time_mode != TimeMode::Virtual
+            && (self.pipeline_depth > 1
+                || !self.ctrl_compute.is_zero()
+                || self.topology != Topology::Flat
+                || self.uplink_mbps > 0.0)
+        {
+            bail!(
+                "--pipeline-depth 2/--ctrl-compute-us/--topology/--uplink-mbps are \
+                 virtual-time models; pass --time-mode virtual"
             );
         }
         if self.trace.is_some()
@@ -881,6 +1023,21 @@ impl TrainConfig {
         let mut model = String::new();
         if !self.net.is_free() {
             model.push_str(&format!(" net={}", self.net.label()));
+        }
+        if self.topology != Topology::Flat {
+            model.push_str(&format!(" topo={}", self.topology.label()));
+            if self.uplink_mbps > 0.0 {
+                model.push_str(&format!(" uplink={}MB/s", self.uplink_mbps));
+            }
+        }
+        if self.pipeline_depth > 1 {
+            model.push_str(&format!(" pipeline=depth{}", self.pipeline_depth));
+        }
+        if !self.ctrl_compute.is_zero() {
+            model.push_str(&format!(" ctrl-compute={:?}", self.ctrl_compute));
+        }
+        if self.decode_threads > 1 {
+            model.push_str(&format!(" decode-threads={}", self.decode_threads));
         }
         if self.compute_model != ComputeModelCfg::Fixed {
             model.push_str(&format!(" compute={}", self.compute_model.name()));
@@ -1265,6 +1422,91 @@ mod tests {
         assert_eq!(CorruptMode::parse("scale"), Some(CorruptMode::Scale));
         assert_eq!(CorruptMode::parse("adversarial"), Some(CorruptMode::Adversarial));
         assert_eq!(CorruptMode::parse(""), None);
+    }
+
+    #[test]
+    fn topology_parses_and_maps_racks() {
+        assert_eq!(Topology::parse("flat"), Some(Topology::Flat));
+        assert_eq!(Topology::parse("racks:4x4"), Some(Topology::Racks { racks: 4, width: 4 }));
+        assert_eq!(Topology::parse("racks:4"), None);
+        assert_eq!(Topology::parse("racks:x4"), None);
+        assert_eq!(Topology::parse("mesh"), None);
+        let t = Topology::Racks { racks: 4, width: 4 };
+        assert_eq!(t.label(), "racks:4x4");
+        assert_eq!(t.rack_of(0), Some(0));
+        assert_eq!(t.rack_of(3), Some(0));
+        assert_eq!(t.rack_of(4), Some(1));
+        assert_eq!(t.rack_of(15), Some(3));
+        assert_eq!(t.rack_count(), 4);
+        assert_eq!(Topology::Flat.rack_of(7), None);
+        assert_eq!(Topology::Flat.rack_count(), 1);
+    }
+
+    #[test]
+    fn pipeline_flags_parse_with_neutral_defaults() {
+        let cfg = parse(&["--preset", "x"]).unwrap();
+        assert_eq!(cfg.pipeline_depth, 1);
+        assert_eq!(cfg.topology, Topology::Flat);
+        assert_eq!(cfg.uplink_mbps, 0.0);
+        assert_eq!(cfg.ctrl_compute, std::time::Duration::ZERO);
+        assert_eq!(cfg.decode_threads, 0);
+
+        let cfg = parse(&[
+            "--preset", "x",
+            "--time-mode", "virtual",
+            "--pipeline-depth", "2",
+            "--ctrl-compute-us", "500",
+            "--topology", "racks:4x4",
+            "--uplink-mbps", "50",
+            "--decode-threads", "4",
+        ])
+        .unwrap();
+        assert_eq!(cfg.pipeline_depth, 2);
+        assert_eq!(cfg.ctrl_compute, std::time::Duration::from_micros(500));
+        assert_eq!(cfg.topology, Topology::Racks { racks: 4, width: 4 });
+        assert_eq!(cfg.uplink_mbps, 50.0);
+        assert_eq!(cfg.decode_threads, 4);
+        assert!(cfg.summary().contains("pipeline=depth2"), "{}", cfg.summary());
+        assert!(cfg.summary().contains("topo=racks:4x4"), "{}", cfg.summary());
+
+        // decode-threads is a pure implementation knob: legal in any
+        // time mode (the split is bit-identical by construction).
+        assert!(parse(&["--preset", "x", "--decode-threads", "8"]).is_ok());
+        // explicit defaults stay legal everywhere — the CI inert twin
+        // passes them on a real-time-defaulted command line.
+        assert!(parse(&[
+            "--preset", "x", "--pipeline-depth", "1", "--topology", "flat",
+            "--ctrl-compute-us", "0", "--decode-threads", "0",
+        ])
+        .is_ok());
+    }
+
+    #[test]
+    fn pipeline_flags_are_validated() {
+        let virt = |extra: &[&str]| {
+            let mut argv = vec!["--preset", "x", "--time-mode", "virtual"];
+            argv.extend_from_slice(extra);
+            parse(&argv)
+        };
+        // depth is 1 or 2
+        assert!(virt(&["--pipeline-depth", "0"]).is_err());
+        assert!(virt(&["--pipeline-depth", "3"]).is_err());
+        assert!(virt(&["--pipeline-depth", "2"]).is_ok());
+        // racks must cover the fleet
+        assert!(virt(&["--topology", "racks:2x4"]).is_err(), "8 slots < 15 learners");
+        assert!(virt(&["--topology", "racks:0x4"]).is_err());
+        assert!(virt(&["--topology", "racks:4x0"]).is_err());
+        assert!(virt(&["--topology", "racks:4x4"]).is_ok());
+        assert!(virt(&["--topology", "star"]).is_err());
+        // uplink needs racks and a sane value
+        assert!(virt(&["--uplink-mbps", "50"]).is_err(), "uplink without racks");
+        assert!(virt(&["--topology", "racks:4x4", "--uplink-mbps", "-1"]).is_err());
+        assert!(virt(&["--topology", "racks:4x4", "--uplink-mbps", "inf"]).is_err());
+        assert!(virt(&["--topology", "racks:4x4", "--uplink-mbps", "50"]).is_ok());
+        // the models are virtual-time only
+        assert!(parse(&["--preset", "x", "--pipeline-depth", "2"]).is_err());
+        assert!(parse(&["--preset", "x", "--ctrl-compute-us", "100"]).is_err());
+        assert!(parse(&["--preset", "x", "--topology", "racks:4x4"]).is_err());
     }
 
     #[test]

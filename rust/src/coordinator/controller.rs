@@ -22,11 +22,12 @@ use anyhow::{bail, Context, Result};
 use super::adaptive::AdaptiveSelector;
 use super::failure::{ByzantineStats, FailureDetector, FaultError, FaultStats, Membership};
 use super::rollout;
+use super::shard::ShardedRanks;
 use super::RunSpec;
 use std::sync::Arc;
 
 use crate::coding::decoder::Decoder;
-use crate::coding::{Code, CodeParams, CodingPlan, RankTracker, Scheme};
+use crate::coding::{Code, CodeParams, CodingPlan, Scheme};
 use crate::config::{DegradedMode, TrainConfig};
 use crate::env::make_env;
 use crate::linalg::pool::{BufPool, PoolStats};
@@ -132,6 +133,12 @@ pub struct Controller<T: ControllerTransport> {
     /// corruptions, quarantines, verification overhead); all zero
     /// unless `--verify-decode`.
     byz_stats: ByzantineStats,
+    /// Depth-2 pipelining credit: the previous iteration's measured
+    /// collect+decode window, against which the next iteration's
+    /// `--ctrl-compute-us` prelude is charged (double buffering — the
+    /// prelude for i+1 runs while i is still collecting/decoding).
+    /// Zero at depth 1 and for the first non-warmup iteration.
+    prelude_credit: Duration,
     pub log: RunLog,
     shut_down: bool,
 }
@@ -184,7 +191,12 @@ impl<T: ControllerTransport> Controller<T> {
             p_m: cfg.p_m,
             seed: cfg.seed,
         });
-        let decoder = Decoder::new(plan.code().clone());
+        let mut decoder = Decoder::new(plan.code().clone());
+        // `--decode-threads`: parallel per-agent apply, bit-identical
+        // by construction (independent columns of Θ = W·Y). The knob
+        // survives plan installs — `rebind` replaces the code, not the
+        // host-machine configuration.
+        decoder.set_threads(cfg.decode_threads);
         let disturbance = DisturbanceModel::from_config(&cfg)?;
         let env = make_env(spec.env, spec.m, spec.k_adversaries);
         let mut streams = Streams::new(cfg.seed);
@@ -250,6 +262,7 @@ impl<T: ControllerTransport> Controller<T> {
             detector,
             fault_stats: FaultStats::default(),
             byz_stats: ByzantineStats::default(),
+            prelude_credit: Duration::ZERO,
             log: RunLog::new(),
             shut_down: false,
         })
@@ -505,6 +518,35 @@ impl<T: ControllerTransport> Controller<T> {
         let mb = self.buffer.sample(self.spec.dims.batch, &mut self.streams.sample);
         timing.sample = t.elapsed();
 
+        // --- Controller prelude (PR 10 pipelining) ----------------------
+        // `--ctrl-compute-us` models the controller-side per-iteration
+        // prelude cost (rollout + sample + encode + TaskBody build).
+        // Depth 1 charges it serially, right here, before the
+        // broadcast. Depth 2 double-buffers: the prelude for iteration
+        // i+1 conceptually runs while iteration i is still
+        // collecting/decoding, so only the residue that the previous
+        // collect+decode window could not hide is charged (and named
+        // by a PipelineStall event). Execution stays strictly serial —
+        // i+1's broadcast is only released after i's decode committed
+        // parameters — so trained parameters are bitwise identical at
+        // any depth; the default zero cost charges nothing at all.
+        if !self.cfg.ctrl_compute.is_zero() {
+            let c = self.cfg.ctrl_compute;
+            let charge = if self.cfg.pipeline_depth > 1 {
+                let residue = c.saturating_sub(self.prelude_credit);
+                if !residue.is_zero() {
+                    let stall_ns = u64::try_from(residue.as_nanos()).unwrap_or(u64::MAX);
+                    self.tracer.record(|| ObsEvent::PipelineStall { iter, stall_ns });
+                }
+                residue
+            } else {
+                c
+            };
+            if !charge.is_zero() {
+                self.clock.sleep(charge);
+            }
+        }
+
         // --- Broadcast (line 9) -----------------------------------------
         let t = Timer::with_clock(&self.clock);
         let plan = self.disturbance.plan(self.cfg.n_learners);
@@ -603,6 +645,12 @@ impl<T: ControllerTransport> Controller<T> {
             (self.decoder.decode(&received, &results, self.cfg.decode)?, None)
         };
         timing.decode = t.elapsed();
+        // Depth-2 pipelining: the window this iteration spent waiting
+        // on results + decoding is exactly where the *next* iteration's
+        // prelude overlaps (double buffering). Bank it as credit.
+        if self.cfg.pipeline_depth > 1 {
+            self.prelude_credit = timing.wait + timing.decode;
+        }
         if let Some(before) = plan_hits_before {
             let cache_hit = self.decoder.plan_cache_stats().hits > before;
             let method = out.method;
@@ -1035,13 +1083,17 @@ impl<T: ControllerTransport> Controller<T> {
     /// zero-row learners are skipped at broadcast and can never
     /// legitimately reply).
     ///
-    /// Decodability is tracked **incrementally**: each accepted arrival
-    /// folds its assignment row into a [`RankTracker`] at O(M·rank),
-    /// and the accept test is the tracker's O(1) `decodable()` — not a
-    /// fresh O(|I|·M²) elimination of the whole received set per
-    /// arrival. Decisions are identical to `Code::decodable` (pinned by
-    /// property test); at N ≫ 1000 this turns the collect loop from
-    /// O(N²·M²) worst case into O(N·M²) total.
+    /// Decodability is tracked **incrementally and sharded**
+    /// ([`ShardedRanks`], PR 10): each accepted arrival folds its
+    /// assignment row into its shard's tracker at O(M·rank) (one shard
+    /// per rack under a racked topology; a single monolithic tracker
+    /// on the flat default), rank-advancing rows merge into the global
+    /// combine, and the accept test is the global O(1) `decodable()` —
+    /// not a fresh O(|I|·M²) elimination of the whole received set per
+    /// arrival. The hierarchical decisions reproduce the monolithic
+    /// tracker's (and therefore `Code::decodable`'s) at every prefix
+    /// (pinned by property tests); at N ≫ 1000 this keeps the collect
+    /// loop O(N·M²) total.
     ///
     /// Fail-fast: when the transport corroborates losses
     /// ([`ControllerTransport::lost_for_iter`]) and every tasked
@@ -1065,7 +1117,11 @@ impl<T: ControllerTransport> Controller<T> {
         let mut received: Vec<usize> = Vec::with_capacity(n);
         let mut results: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut got = vec![false; n];
-        let mut tracker = RankTracker::new(self.code());
+        // One shard per rack under a racked topology; rack_count() = 1
+        // on the flat default, where ShardedRanks elides the shard
+        // layer and is the monolithic tracker, bit for bit.
+        let shards = self.cfg.topology.rack_count();
+        let mut tracker = ShardedRanks::new(self.code(), shards);
         let mut mth_arrival: Option<Duration> = None;
         let mut first_used: Option<Duration> = None;
         let mut compute_sum = 0.0f64;
@@ -1199,7 +1255,18 @@ impl<T: ControllerTransport> Controller<T> {
                     }
                     let r = self.membership.row_of(j).expect("Used implies live");
                     got[j] = true;
-                    tracker.push_row(self.code().matrix().row(r));
+                    // Shard by the *physical* learner's rack: that is
+                    // the feed the per-rack collector would own.
+                    let shard = self.cfg.topology.rack_of(j).unwrap_or(0);
+                    let push = tracker.push_row(shard, self.code().matrix().row(r));
+                    if shards > 1 && push.global_advanced {
+                        let rank = tracker.rank() as u32;
+                        self.tracer.record(|| ObsEvent::ShardMerge {
+                            iter,
+                            shard: shard as u32,
+                            rank,
+                        });
+                    }
                     received.push(r);
                     results.push(y);
                     compute_sum += compute_ns as f64 / 1e9 / self.code().workload(r) as f64;

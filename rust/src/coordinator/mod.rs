@@ -45,6 +45,7 @@ pub mod failure;
 pub mod learner;
 pub mod pool;
 pub mod rollout;
+pub mod shard;
 
 use std::sync::Arc;
 
@@ -160,7 +161,10 @@ fn build_system_model(cfg: &TrainConfig, factory: &BackendFactory) -> Result<Sys
             ComputeModel::empirical(samples, cfg.seed)?
         }
     };
-    Ok(SystemModel { compute, network: NetworkModel::from_config(&cfg.net, cfg.seed) })
+    Ok(SystemModel {
+        compute,
+        network: NetworkModel::with_topology(&cfg.net, cfg.topology, cfg.uplink_mbps, cfg.seed),
+    })
 }
 
 /// Construct the pool implied by the config.

@@ -1,0 +1,235 @@
+//! Sharded collect: hierarchical rank tracking for the controller's
+//! Alg. 1 lines 10-13 loop.
+//!
+//! PR 10 splits `Controller::collect`'s single [`RankTracker`] feed
+//! into per-subset collectors: learners are partitioned into S shards
+//! (one per rack under `--topology racks:<r>x<w>`; S = 1 on the flat
+//! default), each with its **own** incremental tracker, merged by a
+//! hierarchical combine into one global tracker. An arriving row is
+//! first reduced against its shard's basis; only rows that advance the
+//! *shard* rank are forwarded to the global tracker. Rows a shard
+//! rejects are (numerically) in the span of rows that were already
+//! forwarded from that shard, so filtering them preserves the global
+//! span — the combine reproduces the monolithic tracker's rank,
+//! decodability, and accept decisions at **every prefix of every
+//! arrival order**. That equivalence carries the same at-the-margin
+//! numerical caveat as [`RankTracker`] vs `Code::decodable` (see its
+//! module docs) and is pinned the same way, by the randomized
+//! every-prefix property test below.
+//!
+//! The payoff is structural, not numerical: per-shard trackers bound
+//! each reduction to the shard's own pivot rows, give the obs layer a
+//! per-rack decodability signal ([`crate::obs::Event::ShardMerge`]),
+//! and keep the collect path ready for per-rack parallel feeds. With
+//! S = 1 the shard layer is skipped entirely (one tracker, one push —
+//! the monolithic path, bit for bit).
+
+use crate::coding::{Code, RankTracker};
+
+/// What one arrival did to the hierarchy — returned by
+/// [`ShardedRanks::push_row`] so the caller can emit shard-merge
+/// telemetry without re-deriving it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPush {
+    /// The row advanced its shard's local rank (always true when it
+    /// advanced the global rank).
+    pub shard_advanced: bool,
+    /// The row advanced the **global** rank — the monolithic
+    /// equivalent of `RankTracker::push_row` returning `true`.
+    pub global_advanced: bool,
+}
+
+/// Per-shard [`RankTracker`]s plus the global combine tracker.
+///
+/// Memory: (S + 1) · O(M²) worst case; the shard layer is elided for
+/// S = 1, so the flat default costs exactly one tracker, as before.
+#[derive(Clone, Debug)]
+pub struct ShardedRanks {
+    /// Empty when the partition is trivial (S = 1): every push goes
+    /// straight to `global`, which is then *the* monolithic tracker.
+    shards: Vec<RankTracker>,
+    global: RankTracker,
+}
+
+impl ShardedRanks {
+    /// Trackers for `shards` learner subsets over `code`'s assignment
+    /// matrix. `shards` is clamped to ≥ 1.
+    pub fn new(code: &Code, shards: usize) -> ShardedRanks {
+        let shard_layer = if shards > 1 {
+            (0..shards).map(|_| RankTracker::new(code)).collect()
+        } else {
+            Vec::new()
+        };
+        ShardedRanks { shards: shard_layer, global: RankTracker::new(code) }
+    }
+
+    /// Number of shards in the partition (1 = monolithic).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len().max(1)
+    }
+
+    /// Fold one received row into shard `shard`'s tracker and, iff it
+    /// advanced the shard rank, into the global combine. `shard` is
+    /// clamped into range (out-of-partition learners land in the last
+    /// shard rather than panicking the hot loop).
+    pub fn push_row(&mut self, shard: usize, row: &[f64]) -> ShardPush {
+        if self.shards.is_empty() {
+            let advanced = self.global.push_row(row);
+            return ShardPush { shard_advanced: advanced, global_advanced: advanced };
+        }
+        let s = shard.min(self.shards.len() - 1);
+        if !self.shards[s].push_row(row) {
+            return ShardPush { shard_advanced: false, global_advanced: false };
+        }
+        ShardPush { shard_advanced: true, global_advanced: self.global.push_row(row) }
+    }
+
+    /// Global row rank of everything pushed so far — the monolithic
+    /// tracker's answer.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.global.rank()
+    }
+
+    /// O(1): does the received set span R^M (the paper's decodability
+    /// condition), per the global combine?
+    #[inline]
+    pub fn decodable(&self) -> bool {
+        self.global.decodable()
+    }
+
+    /// Local rank of shard `shard` (global rank when S = 1).
+    pub fn shard_rank(&self, shard: usize) -> usize {
+        match self.shards.get(shard) {
+            Some(t) => t.rank(),
+            None => self.global.rank(),
+        }
+    }
+
+    /// Forget everything (start a new iteration) without releasing
+    /// backing storage.
+    pub fn reset(&mut self) {
+        for t in &mut self.shards {
+            t.reset();
+        }
+        self.global.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::{CodeParams, Scheme};
+    use crate::rng::Pcg32;
+
+    fn build(scheme: Scheme, n: usize, m: usize) -> Code {
+        Code::build(&CodeParams::new(scheme, n, m))
+    }
+
+    /// A seeded Fisher–Yates shuffle of `0..n` (the rng exposes draws,
+    /// not a shuffle).
+    fn shuffled(n: usize, rng: &mut Pcg32) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = (rng.next_u32() as usize) % (i + 1);
+            v.swap(i, j);
+        }
+        v
+    }
+
+    /// The tentpole pin: for every scheme, shard count, and randomized
+    /// arrival order, the hierarchical combine must reproduce the
+    /// monolithic tracker's global rank, decodability, and push
+    /// decision at **every prefix**.
+    #[test]
+    fn sharded_combine_matches_monolithic_at_every_prefix() {
+        for scheme in Scheme::ALL {
+            let (n, m) = (16usize, 8usize);
+            let code = build(scheme, n, m);
+            let mut rng = Pcg32::seeded(0x5AD ^ scheme as u64);
+            for shards in [1usize, 2, 4, 8] {
+                let width = n.div_ceil(shards);
+                for _ in 0..10 {
+                    let order = shuffled(n, &mut rng);
+                    let mut mono = RankTracker::new(&code);
+                    let mut sharded = ShardedRanks::new(&code, shards);
+                    for (k, &j) in order.iter().enumerate() {
+                        let row = code.matrix().row(j);
+                        let mono_advanced = mono.push_row(row);
+                        let push = sharded.push_row(j / width, row);
+                        assert_eq!(
+                            push.global_advanced, mono_advanced,
+                            "scheme={scheme} shards={shards} prefix={k} learner={j}: \
+                             accept decision diverged"
+                        );
+                        assert_eq!(
+                            sharded.rank(),
+                            mono.rank(),
+                            "scheme={scheme} shards={shards} prefix={k}: rank diverged"
+                        );
+                        assert_eq!(
+                            sharded.decodable(),
+                            mono.decodable(),
+                            "scheme={scheme} shards={shards} prefix={k}: decodability diverged"
+                        );
+                    }
+                    assert!(sharded.decodable(), "all rows must span R^M");
+                }
+            }
+        }
+    }
+
+    /// Duplicate arrivals (same learner twice) are rejected by the
+    /// shard layer and never reach the global tracker, exactly as the
+    /// monolithic tracker rejects them.
+    #[test]
+    fn duplicates_are_filtered_at_the_shard_layer() {
+        let code = build(Scheme::Mds, 8, 4);
+        let mut s = ShardedRanks::new(&code, 2);
+        let first = s.push_row(0, code.matrix().row(0));
+        assert!(first.shard_advanced && first.global_advanced);
+        let dup = s.push_row(0, code.matrix().row(0));
+        assert_eq!(dup, ShardPush { shard_advanced: false, global_advanced: false });
+        assert_eq!(s.rank(), 1);
+        assert_eq!(s.shard_rank(0), 1);
+        assert_eq!(s.shard_rank(1), 0);
+    }
+
+    /// Reset clears every layer and the partition survives for the
+    /// next iteration.
+    #[test]
+    fn reset_clears_all_layers() {
+        let code = build(Scheme::Mds, 8, 4);
+        let mut s = ShardedRanks::new(&code, 2);
+        for j in 0..8 {
+            s.push_row(j / 4, code.matrix().row(j));
+        }
+        assert!(s.decodable());
+        s.reset();
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.shard_rank(0), 0);
+        assert!(!s.decodable());
+        assert_eq!(s.shard_count(), 2);
+        assert!(s.push_row(1, code.matrix().row(5)).global_advanced);
+    }
+
+    /// S = 1 elides the shard layer: one tracker, one push per row —
+    /// the monolithic path bit for bit, plus clamping for
+    /// out-of-range shard ids.
+    #[test]
+    fn single_shard_is_the_monolithic_path() {
+        let code = build(Scheme::RandomSparse, 10, 5);
+        let mut s = ShardedRanks::new(&code, 1);
+        assert_eq!(s.shard_count(), 1);
+        let mut mono = RankTracker::new(&code);
+        for j in 0..10 {
+            let row = code.matrix().row(j);
+            // any shard id maps to the single global tracker
+            let push = s.push_row(j * 17, row);
+            assert_eq!(push.global_advanced, mono.push_row(row));
+            assert_eq!(push.shard_advanced, push.global_advanced);
+            assert_eq!(s.rank(), mono.rank());
+            assert_eq!(s.shard_rank(0), mono.rank());
+        }
+    }
+}

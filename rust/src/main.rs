@@ -102,6 +102,22 @@ COMMON TRAIN FLAGS:
                                locate the corrupted row (leave-one/two-out
                                within the correction budget), re-decode without
                                it, and strike the learner toward quarantine
+    --pipeline-depth D         1 = strictly serial controller loop, 2 = charge
+                               the controller prelude only past what the
+                               previous iteration's collect+decode window
+                               covers (virtual time; timing-only — trained
+                               params are bitwise identical)  [1]
+    --ctrl-compute-us US       modeled controller prelude cost per iteration
+                               (rollout/encode/task build — what depth 2
+                               overlaps; 0 = free)        [0]
+    --topology T               flat|racks:<r>x<w> result-return topology:
+                               results queue FCFS on their rack's uplink, then
+                               again on the controller ingress link (incast;
+                               virtual time)              [flat]
+    --uplink-mbps MBPS         rack uplink bandwidth, MB/s (0 = infinite;
+                               racked topology only)      [0]
+    --decode-threads T         threads for the per-agent decode apply
+                               (0 = serial; bit-identical at any count) [0]
 
 SIM-SWEEP FLAGS (all optional; runs without artifacts):
     --artifacts DIR            artifacts directory       [artifacts]
@@ -156,6 +172,16 @@ SIM-SWEEP FLAGS (all optional; runs without artifacts):
                                measured trace is the canonical input
     --adapt-every/--adapt-min-obs/--adapt-hysteresis
                                estimator knobs, as in train
+    --pipeline                 PIPELINE AXIS: run the grid at pipeline depth 1
+                               (serial) and depth 2 (prelude overlapped with
+                               the previous collect+decode), on the flat
+                               topology plus the racked --topology when given;
+                               reports per-(topology, scheme) overlap ratios
+                               (+ BENCH_pipeline.json with --out-dir)
+    --pipeline-depth/--ctrl-compute-us/--topology/--uplink-mbps/--decode-threads
+                               as in train (the pipeline axis sweeps the depth
+                               itself; --ctrl-compute-us sets the prelude it
+                               overlaps)
 
 SCALE-STUDY FLAGS (all optional; virtual time only):
     --learners-list N1,N2      learner counts            [100,1000,10000]
@@ -183,6 +209,8 @@ EXAMPLES:
         --out-dir bench-out
     coded-marl sim-sweep --m 4 --learners 7 --adaptive \\
         --trace traces/regime_shift.csv --out-dir bench-out
+    coded-marl sim-sweep --m 8 --pipeline --ctrl-compute-us 3000 \\
+        --topology racks:3x5 --uplink-mbps 200 --out-dir bench-out
     coded-marl scale-study --learners-list 100,1000,10000 \\
         --delay-dists fixed,pareto --out-dir bench-out
 ";
@@ -353,9 +381,10 @@ fn cmd_sim_sweep() -> Result<()> {
     use coded_marl::obs::WasteStats;
     use coded_marl::sim::sweep::{
         adaptive_table, bandwidth_table, byzantine_table, fault_table, grid_iter_stats,
-        render_table, run_adaptive_sweep, run_bandwidth_sweep, run_byzantine_sweep,
-        run_fault_sweep, simulated_total, sweep_base, write_adaptive_json, write_bench_json,
-        write_byzantine_json, write_csv, write_fault_json, write_model_json, SweepConfig,
+        pipeline_table, render_table, run_adaptive_sweep, run_bandwidth_sweep,
+        run_byzantine_sweep, run_fault_sweep, run_pipeline_sweep, simulated_total, sweep_base,
+        write_adaptive_json, write_bench_json, write_byzantine_json, write_csv, write_fault_json,
+        write_model_json, write_pipeline_json, SweepAxis, SweepConfig,
     };
 
     let args = Args::from_env(2)?;
@@ -387,6 +416,7 @@ fn cmd_sim_sweep() -> Result<()> {
     let dist = parse_delay_dist(&args)?;
     let out_dir = args.opt("out-dir").map(std::path::PathBuf::from);
     let trace_out = args.opt("trace-out").map(std::path::PathBuf::from);
+    let pipeline = args.flag("pipeline");
     let bandwidth_list: Option<Vec<f64>> = match args.opt("bandwidth-list") {
         None => None,
         Some(csv) => Some(
@@ -434,6 +464,9 @@ fn cmd_sim_sweep() -> Result<()> {
         }
     }
     args.finish()?;
+    // One resolver owns every axis-conflict rule (the bails that used
+    // to be scattered over this dispatch); see `SweepAxis::resolve`.
+    let axis = SweepAxis::resolve(&base, bandwidth_list.is_some(), pipeline)?;
     let model_active = base.trace.is_some()
         || !base.net.is_free()
         || base.compute_model != ComputeModelCfg::Fixed
@@ -465,19 +498,44 @@ fn cmd_sim_sweep() -> Result<()> {
         delay,
         artifacts_dir: artifacts.into(),
     };
+    // --pipeline switches to the pipeline axis: the grid at depth 1
+    // (strictly serial) and depth 2 (controller prelude overlapped
+    // with the previous iteration's collect+decode window), on the
+    // flat topology plus the racked one when --topology names racks.
+    // Depth and topology never change the trained parameters — the
+    // axis isolates the overlap win and the incast cost.
+    if axis == SweepAxis::Pipeline {
+        println!(
+            "pipeline axis: depth 1 vs 2, ctrl-compute={:?}/iter, topology={} (the flat twin \
+             always runs)",
+            base.ctrl_compute,
+            base.topology.label(),
+        );
+        let points = run_pipeline_sweep(&sweep_cfg)?;
+        let wall = t0.elapsed();
+        print!("{}", pipeline_table(&points));
+        let simulated: std::time::Duration =
+            points.iter().map(|p| simulated_total(&p.cells)).sum();
+        println!(
+            "\nsimulated {} of training time in {} wall-clock",
+            fmt_duration(simulated),
+            fmt_duration(wall),
+        );
+        if let Some(dir) = out_dir {
+            let path = dir.join("BENCH_pipeline.json");
+            write_pipeline_json(&points, &base, wall, &path)
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
     // Any active corruption knob switches to the byzantine axis: one
     // cell per scheme under the configured corruption with the
     // verified decoder forced on, reporting detection and quarantine
     // counters. Crash/omission knobs compose (the cell records both
     // counter sets); the pure-loss fault axis below only claims runs
     // with no corruption configured.
-    if base.corrupt.injects() {
-        if bandwidth_list.is_some() {
-            anyhow::bail!("--bandwidth-list and corruption injection are separate axes; drop one");
-        }
-        if base.adaptive {
-            anyhow::bail!("--adaptive and corruption injection are separate sim-sweep axes; drop one");
-        }
+    if axis == SweepAxis::Byzantine {
         println!(
             "byzantine axis: {} + verified decode (one cell per scheme, k=0 stragglers)",
             base.corrupt.label(),
@@ -505,13 +563,7 @@ fn cmd_sim_sweep() -> Result<()> {
     // scheme under the configured crash/omission model, reporting
     // survival instead of the straggler grid (a grid cell that stops
     // early on a FaultError would conflate the two studies).
-    if base.fault.injects() {
-        if bandwidth_list.is_some() {
-            anyhow::bail!("--bandwidth-list and fault injection are separate axes; drop one");
-        }
-        if base.adaptive {
-            anyhow::bail!("--adaptive and fault injection are separate sim-sweep axes; drop one");
-        }
+    if axis == SweepAxis::Fault {
         println!("fault axis: {} (one cell per scheme, k=0 stragglers)", base.fault.label());
         let cells = run_fault_sweep(&sweep_cfg)?;
         let wall = t0.elapsed();
@@ -537,10 +589,7 @@ fn cmd_sim_sweep() -> Result<()> {
     // synthetic disturbance uses the largest --stragglers-list entry
     // (varying k is the selector's job now); with --trace the recorded
     // regime drives the switches.
-    if base.adaptive {
-        if bandwidth_list.is_some() {
-            anyhow::bail!("--bandwidth-list and --adaptive are separate axes; drop one");
-        }
+    if axis == SweepAxis::Adaptive {
         let mut adaptive_cfg = sweep_cfg;
         adaptive_cfg.base.straggler.k = ks.iter().copied().max().unwrap_or(0);
         println!(

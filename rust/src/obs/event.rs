@@ -139,6 +139,17 @@ pub enum Event {
     /// corruption strikes and was quarantined: membership remap
     /// excludes it from the successor plan.
     LearnerQuarantined { iter: u64, learner: u32 },
+    /// Depth-2 pipelining could not fully hide the controller prelude:
+    /// `stall_ns` of `--ctrl-compute-us` remained after crediting the
+    /// previous iteration's collect+decode window.
+    PipelineStall { iter: u64, stall_ns: u64 },
+    /// Sharded collect: an arrival accepted into shard `shard`'s local
+    /// tracker advanced the *global* rank to `rank` through the
+    /// hierarchical combine.
+    ShardMerge { iter: u64, shard: u32, rank: u32 },
+    /// A result queued `queued_ns` behind busy rack-uplink/controller-
+    /// ingress links before delivery (racked-topology incast).
+    IngressQueued { iter: u64, learner: u32, queued_ns: u64 },
 }
 
 impl Event {
@@ -168,6 +179,9 @@ impl Event {
             Event::CorruptionInjected { .. } => "corruption_injected",
             Event::VerifyFailed { .. } => "verify_failed",
             Event::LearnerQuarantined { .. } => "learner_quarantined",
+            Event::PipelineStall { .. } => "pipeline_stall",
+            Event::ShardMerge { .. } => "shard_merge",
+            Event::IngressQueued { .. } => "ingress_queued",
         }
     }
 }

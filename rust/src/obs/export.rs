@@ -113,6 +113,15 @@ pub fn jsonl(events: &[TracedEvent]) -> String {
             Event::LearnerQuarantined { iter, learner } => {
                 format!("\"iter\":{iter},\"learner\":{learner}")
             }
+            Event::PipelineStall { iter, stall_ns } => {
+                format!("\"iter\":{iter},\"stall_ns\":{stall_ns}")
+            }
+            Event::ShardMerge { iter, shard, rank } => {
+                format!("\"iter\":{iter},\"shard\":{shard},\"rank\":{rank}")
+            }
+            Event::IngressQueued { iter, learner, queued_ns } => {
+                format!("\"iter\":{iter},\"learner\":{learner},\"queued_ns\":{queued_ns}")
+            }
         };
         out.push_str(&format!("{{\"t_ns\":{t},\"ev\":\"{}\",{body}}}\n", te.event.kind()));
     }
@@ -328,6 +337,24 @@ pub fn chrome_trace(events: &[TracedEvent], n_learners: usize) -> String {
                 lane(*learner),
                 at,
                 format!("\"iter\":{iter}"),
+            )),
+            Event::PipelineStall { iter, stall_ns } => evs.push(instant(
+                "pipeline_stall",
+                0,
+                at,
+                format!("\"iter\":{iter},\"stall_ms\":{:.3}", *stall_ns as f64 / 1e6),
+            )),
+            Event::ShardMerge { iter, shard, rank } => evs.push(instant(
+                "shard_merge",
+                0,
+                at,
+                format!("\"iter\":{iter},\"shard\":{shard},\"rank\":{rank}"),
+            )),
+            Event::IngressQueued { iter, learner, queued_ns } => evs.push(instant(
+                "ingress_queued",
+                lane(*learner),
+                at,
+                format!("\"iter\":{iter},\"queued_ms\":{:.3}", *queued_ns as f64 / 1e6),
             )),
         }
     }
@@ -573,6 +600,48 @@ mod tests {
             verify_tids.contains(&2.0) && verify_tids.contains(&0.0),
             "identified → learner lane, unidentified → controller: {verify_tids:?}"
         );
+    }
+
+    /// The pipeline/shard/incast events flow through both exporters:
+    /// valid JSON lines with their tags, and Chrome instants on the
+    /// right lanes (stall/merge on the controller's, queueing on the
+    /// learner's).
+    #[test]
+    fn pipeline_events_flow_through_both_exporters() {
+        let ms = Duration::from_millis;
+        let events = vec![
+            TracedEvent {
+                at: ms(1),
+                event: Event::PipelineStall { iter: 4, stall_ns: 2_000_000 },
+            },
+            TracedEvent { at: ms(2), event: Event::ShardMerge { iter: 4, shard: 1, rank: 3 } },
+            TracedEvent {
+                at: ms(3),
+                event: Event::IngressQueued { iter: 4, learner: 1, queued_ns: 750_000 },
+            },
+        ];
+        let txt = jsonl(&events);
+        for l in txt.lines() {
+            Json::parse(l).unwrap_or_else(|e| panic!("bad line {l}: {e}"));
+        }
+        for tag in ["pipeline_stall", "shard_merge", "ingress_queued"] {
+            assert!(txt.contains(&format!("\"ev\":\"{tag}\"")), "missing {tag} in {txt}");
+        }
+        assert!(txt.contains("\"stall_ns\":2000000"), "{txt}");
+        assert!(txt.contains("\"shard\":1") && txt.contains("\"rank\":3"), "{txt}");
+        assert!(txt.contains("\"queued_ns\":750000"), "{txt}");
+
+        let trace = chrome_trace(&events, 2);
+        let doc = Json::parse(&trace).expect("trace must be valid JSON");
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let find = |name: &str| {
+            evs.iter()
+                .find(|e| str_of(e, "name") == Some(name))
+                .unwrap_or_else(|| panic!("no {name} instant"))
+        };
+        assert_eq!(num_of(find("pipeline_stall"), "tid"), Some(0.0), "controller lane");
+        assert_eq!(num_of(find("shard_merge"), "tid"), Some(0.0));
+        assert_eq!(num_of(find("ingress_queued"), "tid"), Some(2.0), "learner 1 lane");
     }
 
     /// The adaptive-plan events flow through both exporters: a

@@ -32,8 +32,10 @@ pub mod transport;
 
 pub use clock::{real_clock, Clock, ClockRef, RealClock, VirtualClock};
 pub use sweep::{
-    grid_iter_stats, run_adaptive_sweep, run_bandwidth_sweep, run_scale_study, run_sweep,
-    simulated_total, sweep_base, write_adaptive_json, write_model_json, AdaptiveCell,
-    ModelSweepPoint, ScalePoint, ScaleStudyConfig, SweepCell, SweepConfig,
+    grid_iter_stats, pipeline_overlap, run_adaptive_sweep, run_bandwidth_sweep,
+    run_pipeline_sweep, run_scale_study, run_sweep, simulated_total, sweep_base,
+    write_adaptive_json, write_model_json, write_pipeline_json, AdaptiveCell, ModelSweepPoint,
+    OverlapRow, PipelineSweepPoint, ScalePoint, ScaleStudyConfig, SweepAxis, SweepCell,
+    SweepConfig,
 };
 pub use transport::SimTransport;

@@ -34,7 +34,7 @@ use anyhow::{Context, Result};
 
 use crate::coding::decoder::PlanCacheStats;
 use crate::coding::{Code, CodeParams, Scheme};
-use crate::config::{Backend, DelayDist, TimeMode, TrainConfig};
+use crate::config::{Backend, DelayDist, TimeMode, Topology, TrainConfig};
 use crate::coordinator::{
     backend_factory, spawn_pool, ByzantineStats, Controller, FaultError, FaultStats, RunSpec,
 };
@@ -740,6 +740,298 @@ pub fn write_model_json(
         }
         writeln!(f, "      ]")?;
         writeln!(f, "    }}{comma}")?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    f.flush()
+}
+
+// ------------------------------------------------------------------
+// Axis selection: one resolver for the sim-sweep dispatch
+// ------------------------------------------------------------------
+
+/// Which study a `sim-sweep` invocation runs. Exactly one axis is
+/// active per run; [`SweepAxis::resolve`] centralizes the
+/// mutual-exclusion rules that used to live as scattered bails in the
+/// CLI dispatch, so every conflicting flag pair is rejected in one
+/// place (and unit-tested as a table below).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepAxis {
+    /// The plain schemes × k straggler grid (a single bandwidth point
+    /// of the bandwidth runner).
+    Grid,
+    /// `--bandwidth-list`: the grid once per bandwidth point.
+    Bandwidth,
+    /// Crash/omission injection: one survival cell per scheme.
+    Fault,
+    /// Corruption injection: verified decode + quarantine counters.
+    /// Crash/omission knobs *compose* with this axis (the cell records
+    /// both counter sets), which is why corruption outranks fault in
+    /// the priority order instead of conflicting with it.
+    Byzantine,
+    /// `--adaptive`: the obs-driven plan selector live.
+    Adaptive,
+    /// `--pipeline`: serial vs depth-2 double buffering, flat vs
+    /// racked topology, per-scheme overlap ratios.
+    Pipeline,
+}
+
+impl SweepAxis {
+    /// Pick the axis implied by the config plus the two CLI-only
+    /// signals (`--bandwidth-list` has no `TrainConfig` field and
+    /// `--pipeline` is a pure dispatch flag), rejecting conflicting
+    /// combinations.
+    ///
+    /// Priority: pipeline (a deliberate opt-in that tolerates no other
+    /// axis) > byzantine > fault > adaptive > bandwidth > grid.
+    pub fn resolve(cfg: &TrainConfig, bandwidth_list: bool, pipeline: bool) -> Result<SweepAxis> {
+        if pipeline {
+            if cfg.corrupt.injects() {
+                anyhow::bail!(
+                    "--pipeline and corruption injection are separate sim-sweep axes; drop one"
+                );
+            }
+            if cfg.fault.injects() {
+                anyhow::bail!(
+                    "--pipeline and fault injection are separate sim-sweep axes; drop one"
+                );
+            }
+            if cfg.adaptive {
+                anyhow::bail!("--pipeline and --adaptive are separate sim-sweep axes; drop one");
+            }
+            if bandwidth_list {
+                anyhow::bail!(
+                    "--pipeline and --bandwidth-list are separate sim-sweep axes; drop one"
+                );
+            }
+            if cfg.trace.is_some() {
+                anyhow::bail!(
+                    "--pipeline measures the modeled controller pipeline; --trace replays \
+                     measured delays — drop one"
+                );
+            }
+            return Ok(SweepAxis::Pipeline);
+        }
+        if cfg.corrupt.injects() {
+            if bandwidth_list {
+                anyhow::bail!(
+                    "--bandwidth-list and corruption injection are separate axes; drop one"
+                );
+            }
+            if cfg.adaptive {
+                anyhow::bail!(
+                    "--adaptive and corruption injection are separate sim-sweep axes; drop one"
+                );
+            }
+            return Ok(SweepAxis::Byzantine);
+        }
+        if cfg.fault.injects() {
+            if bandwidth_list {
+                anyhow::bail!("--bandwidth-list and fault injection are separate axes; drop one");
+            }
+            if cfg.adaptive {
+                anyhow::bail!(
+                    "--adaptive and fault injection are separate sim-sweep axes; drop one"
+                );
+            }
+            return Ok(SweepAxis::Fault);
+        }
+        if cfg.adaptive {
+            if bandwidth_list {
+                anyhow::bail!("--bandwidth-list and --adaptive are separate axes; drop one");
+            }
+            return Ok(SweepAxis::Adaptive);
+        }
+        Ok(if bandwidth_list { SweepAxis::Bandwidth } else { SweepAxis::Grid })
+    }
+}
+
+// ------------------------------------------------------------------
+// Pipeline sweep axis: serial vs depth-2, flat vs racked
+// ------------------------------------------------------------------
+
+/// One point of the pipeline sweep: a full schemes × k grid at a
+/// fixed (pipeline depth, topology) pair.
+pub struct PipelineSweepPoint {
+    /// `TrainConfig::pipeline_depth` active for this point (1 or 2).
+    pub depth: usize,
+    pub topology: Topology,
+    /// Rack-uplink bandwidth active for this point (0 under flat).
+    pub uplink_mbps: f64,
+    pub cells: Vec<SweepCell>,
+    /// Wall-clock spent on this point.
+    pub wall: Duration,
+}
+
+/// The `--pipeline` axis: the grid at depth 1 (strictly serial) and
+/// depth 2 (controller prelude credited against the previous
+/// iteration's collect+decode window), on the flat topology and —
+/// when the base config carries a racked one — on that racked/incast
+/// topology too. Depth and topology are **timing-only** knobs: every
+/// point's trained parameters are bitwise identical (pinned by
+/// `rust/tests/pipeline_integration.rs`), so the axis isolates the
+/// overlap win and the incast cost.
+pub fn run_pipeline_sweep(sweep: &SweepConfig) -> Result<Vec<PipelineSweepPoint>> {
+    let mut topos: Vec<(Topology, f64)> = vec![(Topology::Flat, 0.0)];
+    if sweep.base.topology != Topology::Flat {
+        topos.push((sweep.base.topology, sweep.base.uplink_mbps));
+    }
+    let mut points = Vec::with_capacity(topos.len() * 2);
+    for (i, &(topology, uplink_mbps)) in topos.iter().enumerate() {
+        for depth in [1usize, 2] {
+            let wall_t = std::time::Instant::now();
+            let mut base = sweep.base.clone();
+            base.topology = topology;
+            base.uplink_mbps = uplink_mbps;
+            base.pipeline_depth = depth;
+            // Only the first point's first cell traces (same rule as
+            // the bandwidth axis: one `trace_out` file per run).
+            if i > 0 || depth > 1 {
+                base.trace_out = None;
+            }
+            let cells = run_sweep(&SweepConfig {
+                base,
+                spec: sweep.spec.clone(),
+                schemes: sweep.schemes.clone(),
+                ks: sweep.ks.clone(),
+                delay: sweep.delay,
+                artifacts_dir: sweep.artifacts_dir.clone(),
+            })
+            .with_context(|| {
+                format!("pipeline point depth={depth} topology={}", topology.label())
+            })?;
+            points.push(PipelineSweepPoint {
+                depth,
+                topology,
+                uplink_mbps,
+                cells,
+                wall: wall_t.elapsed(),
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Per-(topology, scheme) pipelining summary: mean non-warmup
+/// iteration time at depth 1 vs depth 2 and their ratio. A ratio
+/// above 1.0 means depth 2 genuinely overlapped the controller
+/// prelude; exactly 1.0 means the run was not prelude-bound (e.g.
+/// `--ctrl-compute-us 0`, where both depths are the same schedule by
+/// construction).
+pub struct OverlapRow {
+    pub topology: Topology,
+    pub scheme: Scheme,
+    pub depth1_mean_s: f64,
+    pub depth2_mean_s: f64,
+    /// depth1 / depth2 (0 when either side measured nothing).
+    pub overlap_ratio: f64,
+}
+
+/// Fold a pipeline sweep into its overlap rows, pairing each depth-1
+/// point with the depth-2 point of the same topology and aggregating
+/// the exact per-cell sums over the k axis (never mean-of-means).
+pub fn pipeline_overlap(points: &[PipelineSweepPoint]) -> Vec<OverlapRow> {
+    let mut rows = Vec::new();
+    for p1 in points.iter().filter(|p| p.depth == 1) {
+        let Some(p2) = points.iter().find(|p| p.depth == 2 && p.topology == p1.topology) else {
+            continue;
+        };
+        let mut schemes: Vec<Scheme> = Vec::new();
+        for c in &p1.cells {
+            if !schemes.contains(&c.scheme) {
+                schemes.push(c.scheme);
+            }
+        }
+        for scheme in schemes {
+            let mean = |cells: &[SweepCell]| {
+                let total: Duration =
+                    cells.iter().filter(|c| c.scheme == scheme).map(|c| c.total).sum();
+                let iters: usize =
+                    cells.iter().filter(|c| c.scheme == scheme).map(|c| c.measured_iters).sum();
+                if iters == 0 { 0.0 } else { total.as_secs_f64() / iters as f64 }
+            };
+            let (d1, d2) = (mean(&p1.cells), mean(&p2.cells));
+            rows.push(OverlapRow {
+                topology: p1.topology,
+                scheme,
+                depth1_mean_s: d1,
+                depth2_mean_s: d2,
+                overlap_ratio: if d2 > 0.0 { d1 / d2 } else { 0.0 },
+            });
+        }
+    }
+    rows
+}
+
+/// Pipeline-axis table: per (topology, scheme) depth-1 vs depth-2
+/// mean iteration time and the overlap ratio.
+pub fn pipeline_table(points: &[PipelineSweepPoint]) -> String {
+    let mut table = Table::new(&["topology", "scheme", "depth1", "depth2", "overlap"]);
+    for r in pipeline_overlap(points) {
+        table.row(&[
+            r.topology.label(),
+            r.scheme.name().to_string(),
+            format!("{:.1}ms", r.depth1_mean_s * 1e3),
+            format!("{:.1}ms", r.depth2_mean_s * 1e3),
+            format!("{:.2}x", r.overlap_ratio),
+        ]);
+    }
+    table.render()
+}
+
+/// Machine-readable pipeline record (`BENCH_pipeline.json`): the
+/// active pipeline knobs, per-point cell lists, and the
+/// per-(topology, scheme) overlap rows CI gates on.
+pub fn write_pipeline_json(
+    points: &[PipelineSweepPoint],
+    base: &TrainConfig,
+    wall: Duration,
+    path: impl AsRef<std::path::Path>,
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let simulated: Duration = points.iter().map(|p| simulated_total(&p.cells)).sum();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"pipeline_sweep\",")?;
+    writeln!(f, "  \"wall_s\": {:.6},", wall.as_secs_f64())?;
+    writeln!(f, "  \"simulated_s\": {:.6},", simulated.as_secs_f64())?;
+    writeln!(f, "  \"ctrl_compute_us\": {},", base.ctrl_compute.as_micros())?;
+    writeln!(f, "  \"decode_threads\": {},", base.decode_threads)?;
+    writeln!(f, "  \"topology\": {},", json_str(&base.topology.label()))?;
+    writeln!(f, "  \"uplink_mbps\": {},", base.uplink_mbps)?;
+    writeln!(f, "  \"points\": [")?;
+    for (i, p) in points.iter().enumerate() {
+        let comma = if i + 1 == points.len() { "" } else { "," };
+        writeln!(f, "    {{")?;
+        writeln!(f, "      \"depth\": {},", p.depth)?;
+        writeln!(f, "      \"topology\": {},", json_str(&p.topology.label()))?;
+        writeln!(f, "      \"uplink_mbps\": {},", p.uplink_mbps)?;
+        writeln!(f, "      \"wall_s\": {:.6},", p.wall.as_secs_f64())?;
+        writeln!(f, "      \"cells\": [")?;
+        for (j, c) in p.cells.iter().enumerate() {
+            let ccomma = if j + 1 == p.cells.len() { "" } else { "," };
+            writeln!(f, "        {}{ccomma}", cell_json(c))?;
+        }
+        writeln!(f, "      ]")?;
+        writeln!(f, "    }}{comma}")?;
+    }
+    writeln!(f, "  ],")?;
+    let overlap = pipeline_overlap(points);
+    writeln!(f, "  \"overlap\": [")?;
+    for (i, r) in overlap.iter().enumerate() {
+        let comma = if i + 1 == overlap.len() { "" } else { "," };
+        writeln!(
+            f,
+            "    {{\"topology\": {}, \"scheme\": \"{}\", \"depth1_mean_iter_s\": {:.9}, \
+             \"depth2_mean_iter_s\": {:.9}, \"overlap_ratio\": {:.6}}}{comma}",
+            json_str(&r.topology.label()),
+            r.scheme.name(),
+            finite_or_zero(r.depth1_mean_s),
+            finite_or_zero(r.depth2_mean_s),
+            finite_or_zero(r.overlap_ratio),
+        )?;
     }
     writeln!(f, "  ]")?;
     writeln!(f, "}}")?;
@@ -1659,6 +1951,161 @@ mod tests {
         let txt = render_table(&cells, &[2]);
         assert!(txt.contains("2.5x"), "first cell's info must win:\n{txt}");
         assert!(!txt.contains("99.0x"), "duplicate must not overwrite:\n{txt}");
+    }
+
+    // --- SweepAxis::resolve: the axis-priority + conflict table ---
+
+    #[test]
+    fn axis_resolution_priority_and_defaults() {
+        let cfg = base();
+        assert_eq!(SweepAxis::resolve(&cfg, false, false).unwrap(), SweepAxis::Grid);
+        assert_eq!(SweepAxis::resolve(&cfg, true, false).unwrap(), SweepAxis::Bandwidth);
+        let mut c = base();
+        c.adaptive = true;
+        assert_eq!(SweepAxis::resolve(&c, false, false).unwrap(), SweepAxis::Adaptive);
+        let mut c = base();
+        c.fault.crash_rate = 0.1;
+        assert_eq!(SweepAxis::resolve(&c, false, false).unwrap(), SweepAxis::Fault);
+        // Corruption outranks fault rather than conflicting with it:
+        // the byzantine cell records both counter sets.
+        c.corrupt.rate = 0.1;
+        assert_eq!(SweepAxis::resolve(&c, false, false).unwrap(), SweepAxis::Byzantine);
+        assert_eq!(SweepAxis::resolve(&cfg, false, true).unwrap(), SweepAxis::Pipeline);
+    }
+
+    #[test]
+    fn axis_resolution_rejects_every_conflicting_pair() {
+        let corrupt = || {
+            let mut c = base();
+            c.corrupt.rate = 0.5;
+            c
+        };
+        let fault = || {
+            let mut c = base();
+            c.fault.omission_rate = 0.5;
+            c
+        };
+        let adaptive = || {
+            let mut c = base();
+            c.adaptive = true;
+            c
+        };
+        let traced = || {
+            let mut c = base();
+            c.trace = Some("t.jsonl".into());
+            c
+        };
+        // byzantine × {bandwidth-list, adaptive}
+        assert!(SweepAxis::resolve(&corrupt(), true, false).is_err());
+        let mut c = corrupt();
+        c.adaptive = true;
+        assert!(SweepAxis::resolve(&c, false, false).is_err());
+        // fault × {bandwidth-list, adaptive}
+        assert!(SweepAxis::resolve(&fault(), true, false).is_err());
+        let mut c = fault();
+        c.adaptive = true;
+        assert!(SweepAxis::resolve(&c, false, false).is_err());
+        // adaptive × bandwidth-list
+        assert!(SweepAxis::resolve(&adaptive(), true, false).is_err());
+        // pipeline × every other axis
+        assert!(SweepAxis::resolve(&corrupt(), false, true).is_err());
+        assert!(SweepAxis::resolve(&fault(), false, true).is_err());
+        assert!(SweepAxis::resolve(&adaptive(), false, true).is_err());
+        assert!(SweepAxis::resolve(&base(), true, true).is_err());
+        assert!(SweepAxis::resolve(&traced(), false, true).is_err());
+    }
+
+    // --- Pipeline axis ---
+
+    /// The pipeline axis end to end at test scale: a flat base yields
+    /// exactly the depth-{1,2} pair, depth 2 is never slower once the
+    /// prelude has nonzero cost (and strictly faster here, because the
+    /// collect+decode window absorbs part of it), and
+    /// BENCH_pipeline.json is valid JSON carrying the overlap rows.
+    #[test]
+    fn pipeline_sweep_runs_and_writes_json() {
+        let mut b = base();
+        b.ctrl_compute = Duration::from_millis(5);
+        let cfg = SweepConfig {
+            base: b.clone(),
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Mds, Scheme::Uncoded],
+            ks: vec![0, 2],
+            delay: Duration::from_millis(2),
+            artifacts_dir: "artifacts".into(),
+        };
+        let points = run_pipeline_sweep(&cfg).unwrap();
+        assert_eq!(points.len(), 2, "flat base → depth {{1,2}} only");
+        assert!(points.iter().all(|p| p.topology == Topology::Flat));
+        let rows = pipeline_overlap(&points);
+        assert_eq!(rows.len(), 2, "one row per scheme");
+        for r in &rows {
+            assert!(r.depth1_mean_s > 0.0 && r.depth2_mean_s > 0.0);
+            assert!(
+                r.overlap_ratio > 1.0,
+                "depth 2 must overlap the 5 ms prelude: {} {:.6}",
+                r.scheme,
+                r.overlap_ratio
+            );
+        }
+        let txt = pipeline_table(&points);
+        assert!(txt.contains("overlap") && txt.contains("flat"), "{txt}");
+
+        let dir = std::env::temp_dir().join("coded_marl_pipeline_json_test");
+        let path = dir.join("BENCH_pipeline.json");
+        write_pipeline_json(&points, &b, Duration::from_millis(9), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "pipeline_sweep");
+        assert_eq!(json.get("ctrl_compute_us").unwrap().as_usize().unwrap(), 5000);
+        assert_eq!(json.get("points").unwrap().as_arr().unwrap().len(), 2);
+        let overlap = json.get("overlap").unwrap();
+        assert_eq!(overlap.as_arr().unwrap().len(), 2);
+        for r in overlap.as_arr().unwrap() {
+            assert!(r.get("overlap_ratio").unwrap().as_f64().unwrap() > 1.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A racked base adds the racked twin pair, and incast queueing
+    /// makes the racked cells strictly slower than their flat twins.
+    #[test]
+    fn pipeline_sweep_racked_base_adds_racked_points() {
+        let mut b = base();
+        b.ctrl_compute = Duration::from_millis(1);
+        b.topology = Topology::Racks { racks: 2, width: 4 };
+        b.uplink_mbps = 1.0;
+        let cfg = SweepConfig {
+            base: b,
+            spec: RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4),
+            schemes: vec![Scheme::Mds],
+            ks: vec![0],
+            delay: Duration::ZERO,
+            artifacts_dir: "artifacts".into(),
+        };
+        let points = run_pipeline_sweep(&cfg).unwrap();
+        assert_eq!(points.len(), 4, "flat pair + racked pair");
+        assert_eq!(points[0].topology, Topology::Flat);
+        assert_eq!(points[0].uplink_mbps, 0.0, "flat twins run the free network");
+        assert_eq!(points[2].topology, Topology::Racks { racks: 2, width: 4 });
+        let rows = pipeline_overlap(&points);
+        assert_eq!(rows.len(), 2, "one scheme × two topologies");
+        let flat = rows.iter().find(|r| r.topology == Topology::Flat).unwrap();
+        let racked = rows.iter().find(|r| r.topology != Topology::Flat).unwrap();
+        assert!(
+            racked.depth1_mean_s > flat.depth1_mean_s,
+            "1 MB/s uplinks must serialize the result incast: racked {:.6}s vs flat {:.6}s",
+            racked.depth1_mean_s,
+            flat.depth1_mean_s
+        );
+        for r in &rows {
+            assert!(
+                r.overlap_ratio >= 1.0 - 1e-9,
+                "depth 2 never slower: {} {:.6}",
+                r.topology.label(),
+                r.overlap_ratio
+            );
+        }
     }
 
     #[test]

@@ -36,8 +36,27 @@
 //!   cancelled result was never sent by the real learner). With the
 //!   default free network nothing is charged and no RNG is consumed. Payload sizes come from the exact wire-length
 //!   queries (`TaskBody::wire_len` & friends), never from forcing an
-//!   encode. Acks stay free: they are tiny and charging them would
-//!   only delay cancellations the real transport performs eagerly.
+//!   encode. On the flat default topology acks stay free: they are
+//!   tiny and charging them would only delay cancellations the real
+//!   transport performs eagerly.
+//!
+//! ## Per-link topology + incast (PR 10)
+//!
+//! Under `--topology racks:<r>x<w>` the Result **return leg** is no
+//! longer resolved at scheduling time. The event's heap timestamp is
+//! `t_base` — compute done plus the jitter draw, the instant the
+//! frame *starts* transmitting — and the pop path runs the FCFS queue
+//! walk of [`crate::model::NetworkModel::racked_walk`]: serialization
+//! over the learner's rack uplink (`--uplink-mbps`), then over the
+//! controller ingress link (the base `--bandwidth`), each behind
+//! whatever frame committed before it. Simultaneous returns therefore
+//! **queue** (incast) instead of teleporting past each other. A pop
+//! refused by the caller's deadline commits no busy state, so the
+//! walk replays identically on the next call; an omitted result still
+//! occupies both links (it was transmitted, then dropped at the
+//! controller). Racked acks are charged as broadcast-leg traffic
+//! (accounting only — cancellation stays synchronous, as the real
+//! transport sends acks eagerly).
 //!
 //! An [`CtrlMsg::Ack`] cancels the acknowledged iteration's still
 //! pending results (generation counters; lazy heap deletion), exactly
@@ -66,7 +85,7 @@ use crate::linalg::pool::BufPool;
 use crate::marl::ModelDims;
 use crate::model::{CorruptionDirective, FaultPlan, NetStats, SystemModel};
 use crate::obs::{Event as ObsEvent, Tracer, WasteStats};
-use crate::transport::msg::{result_wire_len, task_header_wire_len};
+use crate::transport::msg::{ack_wire_len, result_wire_len, task_header_wire_len};
 use crate::transport::{ControllerTransport, CtrlMsg, LearnerMsg, TaskBody};
 
 /// A scheduled learner reply. Orders as a **min**-heap entry on
@@ -85,6 +104,11 @@ struct Event {
     /// result (compute + return leg are charged) but it is dropped in
     /// flight instead of delivered.
     omitted: bool,
+    /// Racked topology only: the Result frame's wire length, resolved
+    /// through the FCFS per-link walk at **pop** time (`at` is then
+    /// `t_base`, the instant transmission starts). Zero on the flat
+    /// path, where the return leg is already inside `at`/`net_out`.
+    ret_bytes: usize,
     msg: LearnerMsg,
 }
 
@@ -358,11 +382,22 @@ impl SimTransport {
     /// Drawn (jitter) at scheduling time so RNG order is the
     /// deterministic send order, but **recorded** into the stats only
     /// on delivery (see [`Event::net_out`]).
-    fn return_leg(&mut self, p: usize) -> Duration {
-        if self.model.network.is_free() {
-            return Duration::ZERO;
+    ///
+    /// Flat topology: the full serialization + jitter, folded into the
+    /// event time (`ret_bytes` 0). Racked topology: only the jitter is
+    /// drawn here (same RNG order as flat — one draw per scheduled
+    /// result); serialization and queueing resolve at pop time through
+    /// the FCFS walk, so the second element carries the frame's wire
+    /// length.
+    fn return_leg(&mut self, p: usize) -> (Duration, usize) {
+        if self.model.network.is_racked() {
+            // transfer(0) serializes zero bytes: a pure jitter draw.
+            return (self.model.network.transfer(0), result_wire_len(p));
         }
-        self.model.network.transfer(result_wire_len(p))
+        if self.model.network.is_free() {
+            return (Duration::ZERO, 0);
+        }
+        (self.model.network.transfer(result_wire_len(p)), 0)
     }
 
     /// Run the learner's coded update now, schedule its result at the
@@ -372,10 +407,13 @@ impl SimTransport {
     /// t_ready = now + net_in + compute + injected_delay + net_out
     /// ```
     ///
-    /// (network legs zero under the default free model). The
-    /// accumulator comes from the shared [`BufPool`] (recycled from
-    /// previously decoded results), and the absorbed assignment row
-    /// goes straight back to it.
+    /// (network legs zero under the default free model; under a racked
+    /// topology `net_out` is the jitter draw only and the event time is
+    /// `t_base`, the instant the return frame starts transmitting —
+    /// serialization + queueing resolve at pop time). The accumulator
+    /// comes from the shared [`BufPool`] (recycled from previously
+    /// decoded results), and the absorbed assignment row goes straight
+    /// back to it.
     fn handle_task(
         &mut self,
         j: usize,
@@ -398,7 +436,7 @@ impl SimTransport {
             return Ok(());
         }
         let p = body.agent_params.first().map(|v| v.len()).unwrap_or(0);
-        let net_out = self.return_leg(p);
+        let (net_out, ret_bytes) = self.return_leg(p);
         let mut y = self.pool.take_zeroed(p);
         let learner = &mut self.learners[j];
         let backend = learner.backend.as_mut().expect("checked above");
@@ -446,6 +484,7 @@ impl SimTransport {
             generation,
             net_out,
             omitted,
+            ret_bytes,
             msg: LearnerMsg::Result {
                 iter,
                 epoch,
@@ -460,6 +499,14 @@ impl SimTransport {
     /// θ' for `iter` is recovered: the learner aborts, so its not yet
     /// delivered result never materializes.
     fn handle_ack(&mut self, j: usize, iter: u64) {
+        // Racked topology: the tiny Ack frame is charged as
+        // broadcast-leg traffic (accounting only). The cancellation
+        // below stays synchronous — the real transport sends acks
+        // eagerly, and delaying them would only waste learner work.
+        if self.model.network.is_racked() {
+            let t = self.model.network.transfer(ack_wire_len());
+            self.model.network.record_ack(t);
+        }
         let learner = &mut self.learners[j];
         if learner.pending_iter.is_some_and(|pending| pending <= iter) {
             learner.generation += 1;
@@ -510,7 +557,17 @@ impl ControllerTransport for SimTransport {
                 }
                 continue;
             }
-            if top.at > deadline {
+            // Effective arrival: the heap time on the flat path; on a
+            // racked path, a *peek* of the FCFS walk from
+            // t_base = top.at — no busy state is mutated, so a
+            // deadline refusal replays the identical walk next call.
+            let arrival = if top.ret_bytes > 0 {
+                let rack = self.model.network.rack_of(top.learner);
+                self.model.network.racked_walk(rack, top.ret_bytes, top.at).0
+            } else {
+                top.at
+            };
+            if arrival > deadline {
                 // The next reply lands beyond the caller's window: a
                 // real transport would time out first, so the sim must
                 // too (the event stays queued for a later call).
@@ -518,15 +575,31 @@ impl ControllerTransport for SimTransport {
                 return Ok(None);
             }
             let ev = self.events.pop().expect("peeked event");
-            self.clock.advance_to(ev.at);
+            let mut queued_ns = 0u64;
+            if ev.ret_bytes > 0 {
+                // Commit the walk: this frame now occupies its rack
+                // uplink and the controller ingress, pushing later
+                // frames behind it (incast). The recorded return time
+                // is the whole t_base → arrival span plus the jitter
+                // already inside `at`.
+                let rack = self.model.network.rack_of(ev.learner);
+                let (arrival, queued) =
+                    self.model.network.commit_racked_walk(rack, ev.ret_bytes, ev.at);
+                self.clock.advance_to(arrival);
+                self.model.network.record_return(ev.net_out + (arrival - ev.at));
+                queued_ns = u64::try_from(queued.as_nanos()).unwrap_or(u64::MAX);
+            } else {
+                self.clock.advance_to(ev.at);
+                if !ev.net_out.is_zero() {
+                    self.model.network.record_return(ev.net_out);
+                }
+            }
             self.learners[ev.learner].pending_iter = None;
             if ev.omitted {
                 // Dropped in flight: the learner really computed and
                 // transmitted (return leg + compute are charged as
-                // waste), but the controller never sees the frame.
-                if !ev.net_out.is_zero() {
-                    self.model.network.record_return(ev.net_out);
-                }
+                // waste, links occupied), but the controller never
+                // sees the frame.
                 if let LearnerMsg::Result { iter, learner_id, y, compute_ns, .. } = ev.msg {
                     let bytes = result_wire_len(y.len()) as u64;
                     self.waste.add(bytes, compute_ns);
@@ -540,12 +613,15 @@ impl ControllerTransport for SimTransport {
                 }
                 continue;
             }
-            // Delivered: NOW the return frame counts as traffic.
-            if !ev.net_out.is_zero() {
-                self.model.network.record_return(ev.net_out);
-            }
             if self.tracer.is_enabled() {
-                if let LearnerMsg::Result { learner_id, ref y, .. } = ev.msg {
+                if let LearnerMsg::Result { iter, learner_id, ref y, .. } = ev.msg {
+                    if queued_ns > 0 {
+                        self.tracer.record(|| ObsEvent::IngressQueued {
+                            iter,
+                            learner: learner_id,
+                            queued_ns,
+                        });
+                    }
                     let bytes = result_wire_len(y.len()) as u64;
                     self.tracer.record(|| ObsEvent::FrameRecv { learner: learner_id, bytes });
                 }
@@ -911,6 +987,139 @@ mod tests {
         assert_eq!(stats.tasks, 2);
         assert_eq!(stats.broadcast(), Duration::from_micros(body_us + 2 * header_us));
         assert_eq!(stats.ret(), Duration::from_micros(2 * result_us));
+    }
+
+    /// Racked topology, both learners in one rack, zero compute and
+    /// jitter: the two simultaneous returns FCFS-queue over the shared
+    /// uplink then the controller ingress. With both links at 1 MB/s
+    /// (1 byte = 1 µs) and result frames of R bytes, the first frame
+    /// arrives at t_base + 2R and the second at t_base + 3R, having
+    /// queued exactly R µs behind the first on the uplink.
+    #[test]
+    fn racked_returns_queue_fcfs_over_uplink_and_ingress() {
+        use crate::config::{NetConfig, Topology};
+        use crate::model::{ComputeModel, NetworkModel};
+        let d = dims();
+        let backends: Vec<Box<dyn LearnerBackend>> = (0..2)
+            .map(|_| Box::new(MockBackend::new(d, Duration::ZERO)) as Box<dyn LearnerBackend>)
+            .collect();
+        let net = NetConfig { bandwidth_mbps: 1.0, jitter: Duration::ZERO };
+        let model = SystemModel {
+            compute: ComputeModel::fixed(Duration::ZERO),
+            network: NetworkModel::with_topology(&net, Topology::Racks { racks: 1, width: 2 }, 1.0, 0),
+        };
+        let mut sim = SimTransport::with_backends_and_model(backends, model);
+        let tracer = Tracer::enabled(sim.clock(), 64);
+        sim.set_tracer(Arc::clone(&tracer));
+        let mut rng = Pcg32::seeded(41);
+        let (msg, params, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        let CtrlMsg::Task { body, .. } = &msg else { unreachable!() };
+        let body_us = body.wire_len() as u64;
+        let header_us = task_header_wire_len(3) as u64;
+        let r_us = result_wire_len(params[0].len()) as u64;
+        let msg2 = msg.clone();
+        sim.send_to(0, msg).unwrap();
+        sim.send_to(1, msg2).unwrap();
+        // Both t_base = body + header (shared body memoized, compute 0).
+        let t_base = Duration::from_micros(body_us + header_us);
+        let got = sim.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = got else { panic!() };
+        assert_eq!(learner_id, 0, "equal t_base pops in send order");
+        assert_eq!(
+            sim.virtual_clock().now(),
+            t_base + Duration::from_micros(2 * r_us),
+            "first frame: uplink then ingress, no queueing"
+        );
+        let got = sim.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let LearnerMsg::Result { learner_id, .. } = got else { panic!() };
+        assert_eq!(learner_id, 1);
+        assert_eq!(
+            sim.virtual_clock().now(),
+            t_base + Duration::from_micros(3 * r_us),
+            "second frame queues one uplink serialization behind the first"
+        );
+        let stats = sim.net_stats().unwrap();
+        assert_eq!(stats.ret(), Duration::from_micros(2 * r_us + 3 * r_us));
+        assert_eq!(stats.queued_ns, r_us * 1_000, "second frame waited R on the uplink");
+        let evs = tracer.snapshot();
+        assert!(
+            evs.iter().any(|e| matches!(
+                e.event,
+                ObsEvent::IngressQueued { iter: 1, learner: 1, queued_ns } if queued_ns == r_us * 1_000
+            )),
+            "{evs:?}"
+        );
+        assert!(
+            !evs.iter().any(
+                |e| matches!(e.event, ObsEvent::IngressQueued { learner: 0, .. })
+            ),
+            "the unqueued first frame records no ingress_queued event"
+        );
+    }
+
+    /// A racked pop refused by the caller's deadline must not commit
+    /// any busy state: the identical walk replays on the next call and
+    /// the frame still lands at its exact analytic arrival time.
+    #[test]
+    fn racked_deadline_refusal_commits_no_busy_state() {
+        use crate::config::{NetConfig, Topology};
+        use crate::model::{ComputeModel, NetworkModel};
+        let d = dims();
+        let backends: Vec<Box<dyn LearnerBackend>> =
+            vec![Box::new(MockBackend::new(d, Duration::ZERO))];
+        // Infinite ingress (bandwidth 0 = free link), 1 MB/s uplink.
+        let net = NetConfig { bandwidth_mbps: 0.0, jitter: Duration::ZERO };
+        let model = SystemModel {
+            compute: ComputeModel::fixed(Duration::ZERO),
+            network: NetworkModel::with_topology(&net, Topology::Racks { racks: 1, width: 1 }, 1.0, 0),
+        };
+        let mut sim = SimTransport::with_backends_and_model(backends, model);
+        let mut rng = Pcg32::seeded(42);
+        let (msg, params, _) = task(1, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        let r_us = result_wire_len(params[0].len()) as u64;
+        sim.send_to(0, msg).unwrap();
+        // t_base = 0 (the infinite base link serializes the broadcast
+        // in zero time); arrival = one uplink serialization = R µs,
+        // which a 1 µs window cannot contain.
+        assert!(sim.recv_timeout(Duration::from_micros(1)).unwrap().is_none());
+        assert_eq!(sim.virtual_clock().now(), Duration::from_micros(1));
+        let stats = sim.net_stats().unwrap();
+        assert_eq!(stats.return_ns, 0, "refused pop records no traffic");
+        assert_eq!(stats.queued_ns, 0, "refused pop commits no queueing");
+        // The replayed walk delivers at the same absolute arrival.
+        assert!(sim.recv_timeout(Duration::from_secs(10)).unwrap().is_some());
+        assert_eq!(sim.virtual_clock().now(), Duration::from_micros(r_us));
+        assert_eq!(sim.net_stats().unwrap().ret(), Duration::from_micros(r_us));
+    }
+
+    /// Racked topologies charge Ack frames as traffic (accounting
+    /// only): the cancellation is still synchronous, the cancelled
+    /// result still never counts as return traffic, and the flat
+    /// default (covered by the tests above) keeps acks free.
+    #[test]
+    fn racked_ack_is_charged_without_delaying_cancellation() {
+        use crate::config::{NetConfig, Topology};
+        use crate::model::{ComputeModel, NetworkModel};
+        use crate::transport::msg::ack_wire_len;
+        let d = dims();
+        let backends: Vec<Box<dyn LearnerBackend>> =
+            vec![Box::new(MockBackend::new(d, Duration::ZERO))];
+        let net = NetConfig { bandwidth_mbps: 1.0, jitter: Duration::ZERO };
+        let model = SystemModel {
+            compute: ComputeModel::fixed(Duration::from_millis(2)),
+            network: NetworkModel::with_topology(&net, Topology::Racks { racks: 1, width: 1 }, 1.0, 0),
+        };
+        let mut sim = SimTransport::with_backends_and_model(backends, model);
+        let mut rng = Pcg32::seeded(43);
+        let (msg, _, _) = task(7, vec![1.0, 0.0, 0.0], 0, &mut rng);
+        sim.send_to(0, msg).unwrap();
+        sim.send_to(0, CtrlMsg::Ack { iter: 7 }).unwrap();
+        assert!(sim.recv_timeout(Duration::from_secs(1)).unwrap().is_none());
+        let stats = sim.net_stats().unwrap();
+        assert_eq!(stats.acks, 1);
+        assert_eq!(stats.ack_ns, ack_wire_len() as u64 * 1_000, "9 bytes at 1 MB/s");
+        assert_eq!(stats.return_ns, 0, "cancelled result is still not return traffic");
+        assert_eq!(stats.queued_ns, 0, "cancelled result never touched the links");
     }
 
     /// A cancelled (acked) result was never sent by the real learner:

@@ -200,6 +200,13 @@ pub fn result_wire_len(p: usize) -> usize {
     1 + 8 + 4 + 8 + (4 + 4 * p) + 4
 }
 
+/// Exact wire length of a [`CtrlMsg::Ack`] frame: tag + iter. The
+/// network model charges it on the broadcast leg under a racked
+/// topology (the carried-forward "acks stay free" gap).
+pub fn ack_wire_len() -> usize {
+    1 + 8
+}
+
 /// CRC-32 over `bytes` (reflected IEEE 802.3 polynomial 0xEDB88320,
 /// init/xorout `!0` — the ubiquitous zlib/Ethernet variant). Bitwise,
 /// branch-free inner loop; Result frames are kilobytes at paper scale,
@@ -506,6 +513,7 @@ mod tests {
         let empty =
             LearnerMsg::Result { iter: 0, epoch: 0, learner_id: 0, y: vec![], compute_ns: 0 };
         assert_eq!(result_wire_len(0), empty.encode().buf.len());
+        assert_eq!(ack_wire_len(), CtrlMsg::Ack { iter: 42 }.encode().buf.len());
     }
 
     #[test]

@@ -199,6 +199,69 @@ fn finite_bandwidth_sweep_is_deterministic_across_thread_counts() {
     }
 }
 
+/// Analytic incast pin (PR 10): with fixed compute, no stragglers,
+/// zero jitter, an infinite ingress link, and a 1 MB/s rack uplink,
+/// the FCFS queue walk is computable by hand. All four uncoded
+/// results hit the wire at the same instant T (equal workloads, equal
+/// compute), so with racks of width w each uplink serializes w frames
+/// of R seconds (R = result frame bytes / 1 MB/s) and the iteration
+/// ends when the last frame lands:
+///
+///   flat       → total = compute           (free network, no walk)
+///   racks:2x2  → total = compute + 2R      (2 frames per uplink)
+///   racks:1x4  → total = compute + 4R      (4 frames per uplink)
+///
+/// Queued (pure waiting) time per iteration: the zero-width ingress
+/// busy interval still imposes FCFS commit order, so racks:2x2 queues
+/// R on the second frame of each rack plus R of ingress wait on the
+/// second rack's first frame (3R total), while racks:1x4 queues
+/// R+2R+3R = 6R. R is recovered from the 2×2 run, then the 1×4 run
+/// must land on these exact multiples.
+#[test]
+fn racked_incast_queueing_walk_matches_hand_computation() {
+    use coded_marl::config::Topology;
+    let run = |topology: Topology| {
+        let mut c = cfg(Scheme::Uncoded, 11);
+        c.n_learners = 4;
+        c.topology = topology;
+        c.uplink_mbps = if topology == Topology::Flat { 0.0 } else { 1.0 };
+        let (ctrl, log) = train(&c);
+        let totals: Vec<Duration> = log
+            .records
+            .iter()
+            .filter(|r| r.decode_method != "warmup")
+            .map(|r| r.timing.total)
+            .collect();
+        let net = ctrl.net_stats().expect("sim transport reports net stats");
+        (totals, net)
+    };
+    let (flat, net_flat) = run(Topology::Flat);
+    let (two, net_two) = run(Topology::Racks { racks: 2, width: 2 });
+    let (one, net_one) = run(Topology::Racks { racks: 1, width: 4 });
+    assert_eq!(flat.len(), 5);
+    assert_eq!(net_flat.queued_ns, 0, "the free flat network never queues");
+    // The model is fixed, so every measured iteration is identical.
+    for w in [&flat, &two, &one] {
+        assert!(w.windows(2).all(|p| p[0] == p[1]), "fixed model ⇒ identical iterations");
+    }
+    // Recover R from the 2×2 run and pin the 1×4 run against it.
+    assert!(two[0] > flat[0], "incast must cost virtual time");
+    let two_r = two[0] - flat[0];
+    let r = two_r / 2;
+    assert_eq!(
+        one[0] - flat[0],
+        two_r * 2,
+        "width 4 serializes twice the frames of width 2 per uplink"
+    );
+    // Queue accounting over the 5 measured iterations: 3R vs 6R each.
+    let r_ns = u64::try_from(r.as_nanos()).unwrap();
+    assert_eq!(net_two.queued_ns, 5 * 3 * r_ns, "2×2 queues 3R per iteration");
+    assert_eq!(net_one.queued_ns, 5 * 6 * r_ns, "1×4 queues R+2R+3R per iteration");
+    // Racked return legs are charged as traffic; acks are too.
+    assert!(net_two.return_ns > 0);
+    assert!(net_two.acks > 0, "racked acks are accounted");
+}
+
 /// Trace replay drives iteration timing analytically: with an uncoded
 /// code (every tasked learner required) the wait equals compute + the
 /// round's worst needed latency, rounds advance per broadcasting

@@ -1,0 +1,235 @@
+//! Integration tests for the PR 10 pipelined controller:
+//!
+//! 1. **Bit-exactness of depth 2** — `--pipeline-depth 2` overlaps the
+//!    controller prelude (`--ctrl-compute-us`) with the previous
+//!    iteration's collect+decode window but never reorders the
+//!    protocol, so trained parameters and rewards are bitwise
+//!    identical to the serial loop for every scheme, while the mean
+//!    iteration time drops strictly once the prelude has cost.
+//! 2. **Sharded collect end to end** — a racked topology engages the
+//!    hierarchical per-rack rank trackers; with free links that is a
+//!    pure re-bracketing of the same accept/reject decisions, so the
+//!    whole run (params *and* timing telemetry) is bitwise identical
+//!    to the flat monolithic collect.
+//! 3. **Determinism at any shard count** — a pipelined sweep replays
+//!    bit-for-bit across `--sweep-threads` 1/2/4.
+//! 4. **Tracing is free** — a traced pipelined+racked run equals its
+//!    untraced twin and records the new pipeline_stall / shard_merge /
+//!    ingress_queued events.
+
+use std::time::Duration;
+
+use coded_marl::coding::Scheme;
+use coded_marl::config::{Backend, StragglerConfig, TimeMode, Topology, TrainConfig};
+use coded_marl::coordinator::{backend_factory, spawn_pool, Controller, RunSpec};
+use coded_marl::env::EnvKind;
+use coded_marl::marl::AgentParams;
+use coded_marl::metrics::RunLog;
+use coded_marl::sim::sweep::run_sweep;
+use coded_marl::sim::{SweepCell, SweepConfig};
+
+fn spec() -> RunSpec {
+    RunSpec::synthetic(EnvKind::CoopNav, 4, 0, 8, 4)
+}
+
+fn cfg(scheme: Scheme, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("synthetic");
+    cfg.backend = Backend::Mock;
+    cfg.time_mode = TimeMode::Virtual;
+    cfg.scheme = scheme;
+    cfg.n_learners = 7;
+    cfg.iterations = 6;
+    cfg.episodes_per_iter = 1;
+    cfg.episode_len = 8;
+    cfg.warmup_iters = 1;
+    cfg.mock_compute = Duration::from_millis(2);
+    cfg.straggler = StragglerConfig::fixed(2, Duration::from_millis(40));
+    cfg.seed = seed;
+    cfg
+}
+
+fn train(cfg: &TrainConfig) -> (Vec<AgentParams>, RunLog) {
+    let run_spec = spec();
+    let factory = backend_factory(cfg, "unused", &run_spec);
+    let pool = spawn_pool(cfg, factory).unwrap();
+    let mut ctrl = Controller::new(cfg.clone(), run_spec, pool).unwrap();
+    ctrl.train().unwrap();
+    let agents = ctrl.agents().to_vec();
+    let log = std::mem::take(&mut ctrl.log);
+    ctrl.shutdown();
+    (agents, log)
+}
+
+fn max_param_diff(a: &[AgentParams], b: &[AgentParams]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x.max_abs_diff(y)).fold(0.0, f32::max)
+}
+
+fn mean_total(log: &RunLog) -> Duration {
+    let nw = coded_marl::sim::sweep::mean_non_warmup(log);
+    assert!(nw.iters > 0, "run produced no measured iterations");
+    nw.mean_total()
+}
+
+/// Everything the protocol computes must be depth-independent; only
+/// the clock may move.
+fn assert_same_protocol(a: &RunLog, b: &RunLog, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "{what} iter {}", x.iter);
+        assert_eq!(x.results_used, y.results_used, "{what} iter {}", x.iter);
+        assert_eq!(x.stragglers, y.stragglers, "{what} iter {}", x.iter);
+        assert_eq!(x.decode_method, y.decode_method, "{what} iter {}", x.iter);
+    }
+}
+
+/// The full-fidelity twin check: protocol AND timing telemetry.
+fn assert_bit_identical(a: &RunLog, b: &RunLog, what: &str) {
+    assert_same_protocol(a, b, what);
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.timing.total, y.timing.total, "{what} iter {}: total diverged", x.iter);
+        assert_eq!(x.timing.wait, y.timing.wait, "{what} iter {}: wait diverged", x.iter);
+    }
+}
+
+/// The tentpole acceptance pin: for every scheme, depth 2 trains
+/// bitwise-identical parameters to the serial loop while its mean
+/// iteration time is strictly lower once the prelude has cost (the
+/// 3 ms prelude is fully covered by the ≥ 2 ms compute + 40 ms
+/// straggler collect window from the second measured iteration on).
+#[test]
+fn depth2_params_are_bitwise_serial_and_strictly_faster() {
+    for scheme in Scheme::ALL {
+        let mut serial = cfg(scheme, 17);
+        serial.ctrl_compute = Duration::from_millis(3);
+        let mut piped = serial.clone();
+        piped.pipeline_depth = 2;
+        let (params_1, log_1) = train(&serial);
+        let (params_2, log_2) = train(&piped);
+        assert_eq!(
+            max_param_diff(&params_1, &params_2),
+            0.0,
+            "{scheme}: depth 2 must train the exact serial parameters"
+        );
+        assert_same_protocol(&log_1, &log_2, scheme.name());
+        assert!(
+            mean_total(&log_2) < mean_total(&log_1),
+            "{scheme}: depth 2 must overlap the prelude ({:?} vs {:?})",
+            mean_total(&log_2),
+            mean_total(&log_1)
+        );
+    }
+}
+
+/// With a free prelude (`--ctrl-compute-us 0`, the default) depth 2
+/// has nothing to overlap: the whole run — timing included — is
+/// bit-identical to depth 1. This is the zero-cost gate CI's
+/// byte-compare relies on.
+#[test]
+fn depth2_with_free_prelude_is_fully_inert() {
+    for scheme in [Scheme::Uncoded, Scheme::Mds, Scheme::Ldpc] {
+        let serial = cfg(scheme, 5);
+        let mut piped = serial.clone();
+        piped.pipeline_depth = 2;
+        let (params_1, log_1) = train(&serial);
+        let (params_2, log_2) = train(&piped);
+        assert_eq!(max_param_diff(&params_1, &params_2), 0.0, "{scheme}");
+        assert_bit_identical(&log_1, &log_2, scheme.name());
+    }
+}
+
+/// Sharded collect end to end: racks of width 4 over 7 learners run
+/// the hierarchical per-rack trackers (S = 2) while free links keep
+/// the return walk zero-width, so the racked run must reproduce the
+/// flat monolithic run bit for bit — parameters, protocol, and every
+/// iteration's timing. The parallel decode apply rides along at 4
+/// threads to pin its bit-identity on the same run.
+#[test]
+fn racked_sharded_collect_is_bit_identical_to_flat() {
+    for scheme in Scheme::ALL {
+        let flat = cfg(scheme, 23);
+        let mut racked = flat.clone();
+        racked.topology = Topology::Racks { racks: 2, width: 4 };
+        racked.decode_threads = 4;
+        let (params_f, log_f) = train(&flat);
+        let (params_r, log_r) = train(&racked);
+        assert_eq!(
+            max_param_diff(&params_f, &params_r),
+            0.0,
+            "{scheme}: sharded collect over free links must not change the run"
+        );
+        assert_bit_identical(&log_f, &log_r, scheme.name());
+    }
+}
+
+/// A pipelined sweep (depth 2, prelude active) replays bit-for-bit at
+/// any `--sweep-threads` count, for every scheme of the five-scheme
+/// grid: cell timing is a pure function of (config, seed).
+#[test]
+fn pipelined_sweep_is_deterministic_across_thread_counts() {
+    let sweep = |threads: usize| -> Vec<SweepCell> {
+        let mut base =
+            coded_marl::sim::sweep::sweep_base("synthetic", 7, 3, Duration::from_millis(2), 9);
+        base.episode_len = 5;
+        base.sweep_threads = threads;
+        base.pipeline_depth = 2;
+        base.ctrl_compute = Duration::from_millis(3);
+        run_sweep(&SweepConfig {
+            base,
+            spec: spec(),
+            schemes: Scheme::ALL.to_vec(),
+            ks: vec![0, 2],
+            delay: Duration::from_millis(40),
+            artifacts_dir: "artifacts".into(),
+        })
+        .unwrap()
+    };
+    let serial = sweep(1);
+    assert_eq!(serial.len(), Scheme::ALL.len() * 2);
+    for threads in [2usize, 4] {
+        let parallel = sweep(threads);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_eq!(a.scheme, b.scheme, "threads={threads}");
+            assert_eq!(a.k, b.k, "threads={threads}");
+            assert_eq!(a.total, b.total, "threads={threads} {}/{}", a.scheme, a.k);
+            assert_eq!(a.wait, b.wait, "threads={threads} {}/{}", a.scheme, a.k);
+            assert_eq!(a.net, b.net, "threads={threads} {}/{}", a.scheme, a.k);
+        }
+    }
+}
+
+/// Tracing a pipelined + racked + incast run is free of timing side
+/// effects — the traced run equals its untraced twin bit for bit —
+/// and the timeline records the three PR 10 event kinds: the first
+/// non-warmup iteration's pipeline stall (no credit banked yet), the
+/// per-rack shard merges, and ingress queueing under the 1 MB/s
+/// uplinks.
+#[test]
+fn traced_pipelined_run_is_bit_identical_to_untraced() {
+    let dir = std::env::temp_dir().join("coded_marl_pipeline_trace_twin");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("run.trace.json");
+    let run = |trace_out: Option<std::path::PathBuf>| {
+        let mut c = cfg(Scheme::Mds, 31);
+        c.pipeline_depth = 2;
+        c.ctrl_compute = Duration::from_millis(3);
+        c.topology = Topology::Racks { racks: 2, width: 4 };
+        c.uplink_mbps = 1.0;
+        c.trace_out = trace_out;
+        c
+    };
+    let (params_plain, log_plain) = train(&run(None));
+    let (params_traced, log_traced) = train(&run(Some(trace.clone())));
+    assert_eq!(
+        max_param_diff(&params_plain, &params_traced),
+        0.0,
+        "tracing must not perturb the pipelined run"
+    );
+    assert_bit_identical(&log_plain, &log_traced, "traced twin");
+    let jsonl = trace.with_extension("jsonl");
+    let text = std::fs::read_to_string(&jsonl).expect("jsonl twin written");
+    for kind in ["pipeline_stall", "shard_merge", "ingress_queued"] {
+        assert!(text.contains(kind), "timeline must record {kind}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
